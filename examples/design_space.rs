@@ -1,0 +1,63 @@
+//! Design-space exploration walkthrough (the paper's §3.10 methodology):
+//! sweep tile sizes and head counts on the analytical models, pick the
+//! optimum, compare against a per-model specialized synthesis, and show
+//! the deployment-cost ablation.
+//!
+//!     cargo run --release --example design_space
+
+use adaptor::accel::platform;
+use adaptor::accel::tiling::TileConfig;
+use adaptor::analysis::sweep;
+use adaptor::baselines::nonadaptive;
+use adaptor::model::quant::BitWidth;
+use adaptor::model::{presets, TnnConfig};
+
+fn main() {
+    let p = platform::u55c();
+    let bw = BitWidth::Fixed16;
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+
+    // --- Fig 5 style tile sweep --------------------------------------
+    println!("tile sweep on {} ({}):", p.name, cfg);
+    let pts = sweep::tile_sweep(&cfg, &p, bw);
+    println!("{:>10} {:>10} {:>10} {:>12} {:>10}", "tiles_mha", "tiles_ffn", "fmax MHz", "latency ms", "GOPS");
+    for pt in &pts {
+        println!("{:>10} {:>10} {:>10.1} {:>12.2} {:>10.1}{}",
+            pt.tiles_mha, pt.tiles_ffn, pt.freq_mhz, pt.latency_ms, pt.gops,
+            if pt.fits { "" } else { "   (no fit)" });
+    }
+    let best = sweep::best_by_latency(&pts).expect("at least one fitting point");
+    println!("\n-> optimum: {} MHA tiles x {} FFN tiles (TS {}x{}) at {:.0} MHz — paper picked 12 x 6\n",
+        best.tiles_mha, best.tiles_ffn, best.ts_mha, best.ts_ffn, best.freq_mhz);
+
+    // --- Fig 8 style heads sweep --------------------------------------
+    println!("head-count sweep (fixed fabric TS 64/128):");
+    for pt in sweep::heads_sweep(&cfg, &p, bw) {
+        println!("  h={:<3} fmax={:>6.1} MHz  dsp={:<5} latency(norm)={:.3}",
+            pt.heads, pt.freq_mhz, pt.dsp, pt.latency_ms);
+    }
+
+    // --- specialization vs adaptivity ----------------------------------
+    println!("\nper-model specialization (the non-adaptive baseline):");
+    for preset in ["shallow", "custom-encoder-4l", "small"] {
+        let m = presets::by_name(preset).unwrap();
+        if let Some(s) = nonadaptive::specialize(&m, &p, bw) {
+            println!("  {:<18} best tiles TS {}x{} -> {:.3} ms @ {:.0} MHz",
+                preset, s.tiles.ts_mha, s.tiles.ts_ffn, s.latency_ms, s.freq_mhz);
+        }
+    }
+    let models = vec![
+        presets::bert_base(64),
+        presets::shallow_transformer(),
+        presets::custom_encoder_4l(),
+        presets::small_encoder(64, 4),
+    ];
+    let c = nonadaptive::deployment_cost(&models, &p, &TileConfig::paper_optimum(), bw);
+    println!("\ndeployment over {} models:", c.models);
+    println!("  ADAPTOR:       {:>6.0} h synthesis, {:>9.1} ms total inference",
+        c.adaptor_synthesis_hours, c.adaptor_inference_ms);
+    println!("  per-model:     {:>6.0} h synthesis, {:>9.1} ms total inference",
+        c.nonadaptive_synthesis_hours, c.nonadaptive_inference_ms);
+    println!("  => adaptivity trades milliseconds of inference for {:.0} hours of synthesis",
+        c.nonadaptive_synthesis_hours - c.adaptor_synthesis_hours);
+}

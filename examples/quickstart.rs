@@ -1,0 +1,48 @@
+//! Quickstart: run one transformer encoder inference through the full
+//! three-layer stack — rust coordinator → PJRT runtime → AOT-lowered
+//! Pallas/JAX artifacts — and check it against the dense CPU oracle.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use adaptor::coordinator::TileEngine;
+use adaptor::model::{presets, reference, weights};
+use adaptor::runtime::default_artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Bring up the fabric: load the AOT artifact set ("bitstream").
+    let mut engine = TileEngine::new(default_artifact_dir())?;
+    println!("fabric up: {} tile primitives, SL_MAX={}, d_max={}",
+        engine.executor().manifest().artifacts.len(),
+        engine.synth_maxima().seq_len,
+        engine.synth_maxima().d_model);
+
+    // 2. Pick a topology and program the runtime registers (Algorithm 18).
+    let cfg = presets::small_encoder(64, 4); // SL=64, d=256, h=4, 4 layers
+    engine.program(&cfg)?;
+    println!("registers programmed: {cfg}");
+
+    // 3. Load weights (synthetic, deterministic) and pre-tile them into
+    //    the fabric's weight-buffer panels.
+    let stack = weights::init_stack(42, cfg.d_model, cfg.heads, cfg.enc_layers);
+    let prepared = engine.prepare(&cfg, &stack)?;
+
+    // 4. Run an inference.
+    let x = weights::init_input(7, cfg.seq_len, cfg.d_model);
+    let t0 = std::time::Instant::now();
+    let y = engine.run_encoder(&prepared, &x)?;
+    let dt = t0.elapsed();
+
+    // 5. Check against the dense f32 oracle.
+    let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+    let want = reference::encoder_stack(&x, &stack, &mask);
+    let diff = y.max_abs_diff(&want);
+
+    let stats = engine.executor().stats();
+    println!("inference : {:.1} ms wall ({} tile dispatches, {} compiles)",
+        dt.as_secs_f64() * 1e3, stats.dispatches, stats.compiles);
+    println!("numerics  : max |engine - oracle| = {diff:.2e}");
+    assert!(diff < 3e-3, "numerics drifted");
+    println!("OK — output row 0, first 6 dims: {:?}",
+        &y.data[..6].iter().map(|v| (v * 1e3).round() / 1e3).collect::<Vec<_>>());
+    Ok(())
+}

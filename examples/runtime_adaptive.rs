@@ -1,0 +1,64 @@
+//! Runtime adaptivity — the paper's headline feature, demonstrated.
+//!
+//! Four different transformer topologies (different sequence lengths,
+//! widths, head counts, depths) execute back-to-back on ONE fabric.  The
+//! only thing that changes between them is the configuration register
+//! file (paper §3.12); the artifact set is never re-lowered or recompiled
+//! — watch the `compiles` counter stay flat, which on the FPGA is "no
+//! re-synthesis" (a ~36 hour saving per topology, §3.10).
+//!
+//!     cargo run --release --example runtime_adaptive
+
+use adaptor::coordinator::TileEngine;
+use adaptor::model::{reference, weights, TnnConfig};
+use adaptor::runtime::default_artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = TileEngine::new(default_artifact_dir())?;
+
+    let zoo: Vec<(&str, TnnConfig)> = vec![
+        ("tiny     ", TnnConfig::encoder(16, 128, 2, 1)),
+        ("small    ", TnnConfig::encoder(64, 256, 4, 2)),
+        ("mid      ", TnnConfig::encoder(32, 512, 8, 1)),
+        ("wide-long", TnnConfig::encoder(128, 640, 10, 1)),
+    ];
+
+    println!("{:<10} {:>22} {:>10} {:>12} {:>10} {:>9}",
+        "model", "topology", "latency", "dispatches", "compiles", "max err");
+    let mut compiles_after_first = None;
+    for (i, (name, cfg)) in zoo.iter().enumerate() {
+        // the ONLY per-model hardware action: write 7 registers
+        engine.program(cfg)?;
+        let stack = weights::init_stack(i as u64, cfg.d_model, cfg.heads, cfg.enc_layers);
+        let prepared = engine.prepare(cfg, &stack)?;
+        let x = weights::init_input(i as u64 + 50, cfg.seq_len, cfg.d_model);
+
+        let d0 = engine.executor().stats().dispatches;
+        let t0 = std::time::Instant::now();
+        let y = engine.run_encoder(&prepared, &x)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+        let want = reference::encoder_stack(&x, &stack, &mask);
+        let stats = engine.executor().stats();
+        println!("{:<10} {:>22} {:>8.1}ms {:>12} {:>10} {:>9.1e}",
+            name,
+            format!("sl={} d={} h={} N={}", cfg.seq_len, cfg.d_model, cfg.heads, cfg.enc_layers),
+            ms,
+            stats.dispatches - d0,
+            stats.compiles,
+            y.max_abs_diff(&want));
+
+        match compiles_after_first {
+            None => compiles_after_first = Some(stats.compiles),
+            Some(n) => assert_eq!(stats.compiles, n, "a topology change re-synthesized!"),
+        }
+    }
+    println!("\nregister write log: {} writes across {} topologies, {} artifact compiles total",
+        engine.registers.write_log().len(),
+        zoo.len(),
+        engine.executor().stats().compiles);
+    println!("=> every topology after the first cost ZERO new compilation — the
+   FPGA equivalent saves ~36 h of synthesis per model (paper §3.10).");
+    Ok(())
+}

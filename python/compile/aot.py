@@ -1,0 +1,189 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts + manifest.json.
+
+This is the "synthesis" step of the reproduction (run once by
+`make artifacts`).  It emits:
+
+1. the tile-primitive fabric (configs.tile_primitive_specs) — fixed-shape
+   programs the rust coordinator composes at runtime under the control of
+   the configuration registers (runtime adaptivity, paper sec. 3.11/3.12);
+2. fused per-config encoder layers (configs.FUSED_CONFIGS) — the
+   non-adaptive "custom accelerator synthesized per model" baseline.
+
+Interchange is HLO TEXT, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the `xla` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import kernels, model
+from .configs import (
+    ArtifactSpec,
+    FUSED_CONFIGS,
+    FusedConfig,
+    DK,
+    DMODEL_MAX,
+    FFN_COL,
+    HIDDEN_MAX,
+    SL_MAX,
+    TS_FFN,
+    TS_MHA,
+    tile_primitive_specs,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    §Perf iteration 2: `return_tuple=False` — every artifact has exactly
+    one output, and a bare array output lets the rust engine feed the
+    result buffer straight back into the next dispatch (device-resident
+    accumulator chaining) without a tuple unpack + host round-trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape: Tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _primitive_fns() -> Dict[str, Callable]:
+    """name -> jax function with the manifest's positional input order."""
+    return {
+        "mm_qkv": lambda x, w, acc: kernels.matmul_acc(x, w, acc),
+        "mm_qkv_packed": lambda x, w, acc: kernels.matmul_acc(x, w, acc),
+        "bias_add_qkv": lambda x, b: kernels.bias_add(x, b),
+        "mm_ffn1": lambda x, w, acc: kernels.matmul_acc(x, w, acc),
+        "mm_ffn2": lambda x, w, acc: kernels.matmul_acc(x, w, acc),
+        "mm_ffn3": lambda x, w, acc: kernels.matmul_acc(x, w, acc),
+        "qk_scores": lambda q, k, m, s: kernels.qk_scores(q, k, m, s),
+        "softmax": kernels.softmax_rows,
+        "sv": kernels.sv,
+        "attn_fused": kernels.attention_head,
+        "attn_packed": kernels.attention_head_packed,
+        "bias_add_dk": lambda x, b: kernels.bias_add(x, b),
+        "bias_add_d": lambda x, b: kernels.bias_add(x, b),
+        "bias_relu_h": lambda x, b: kernels.bias_add(x, b, relu=True),
+        "residual_ln": kernels.residual_ln,
+        "quantize": kernels.quantize_dequantize,
+    }
+
+
+def lower_primitive(spec: ArtifactSpec) -> str:
+    fn = _primitive_fns()[spec.name]
+    lowered = jax.jit(fn).lower(*[_f32(s) for s in spec.inputs])
+    return to_hlo_text(lowered)
+
+
+def _fused_fn(cfg: FusedConfig):
+    def fn(x, mask, *flat):
+        p = model.LayerParams(*flat)
+        return model.encoder_layer(x, p, mask, quantized=cfg.quantized)
+
+    return fn
+
+
+def fused_input_shapes(cfg: FusedConfig) -> List[Tuple[int, ...]]:
+    """x, mask, then LayerParams fields in declaration order."""
+    d, h, dk, hid, sl = cfg.d_model, cfg.heads, cfg.dk, cfg.hidden, cfg.sl
+    return [
+        (sl, d), (sl, sl),
+        (h, d, dk), (h, d, dk), (h, d, dk),          # wq wk wv
+        (h, dk), (h, dk), (h, dk),                   # bq bk bv
+        (d, d), (d,),                                # wo bo
+        (d, hid), (hid,),                            # w1 b1
+        (hid, d), (d,),                              # w2 b2
+        (d,), (d,), (d,), (d,),                      # g1 b1n g2 b2n
+    ]
+
+
+def lower_fused(cfg: FusedConfig) -> str:
+    shapes = fused_input_shapes(cfg)
+    lowered = jax.jit(_fused_fn(cfg)).lower(*[_f32(s) for s in shapes])
+    return to_hlo_text(lowered)
+
+
+def source_digest() -> str:
+    """Digest of the compile package, recorded in the manifest so the rust
+    side can detect stale artifacts."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, *, skip_fused: bool = False) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: Dict = {
+        "version": 2,
+        "return_tuple": False,
+        "digest": source_digest(),
+        "sl_max": SL_MAX,
+        "dk": DK,
+        "ts_mha": TS_MHA,
+        "ts_ffn": TS_FFN,
+        "ffn_col": FFN_COL,
+        "dmodel_max": DMODEL_MAX,
+        "hidden_max": HIDDEN_MAX,
+        "artifacts": {},
+        "fused": {},
+    }
+    for spec in tile_primitive_specs():
+        text = lower_primitive(spec)
+        path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][spec.name] = spec.to_json()
+        print(f"  lowered {spec.name:<14} -> {path} ({len(text)} chars)")
+    if not skip_fused:
+        for cfg in FUSED_CONFIGS:
+            text = lower_fused(cfg)
+            path = os.path.join(out_dir, f"fused_{cfg.name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["fused"][cfg.name] = {
+                "file": f"fused_{cfg.name}.hlo.txt",
+                "inputs": [list(s) for s in fused_input_shapes(cfg)],
+                "outputs": [[cfg.sl, cfg.d_model]],
+                "config": {
+                    "sl": cfg.sl,
+                    "d_model": cfg.d_model,
+                    "heads": cfg.heads,
+                    "quantized": cfg.quantized,
+                },
+            }
+            print(f"  lowered fused_{cfg.name} -> {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--skip-fused", action="store_true",
+                    help="only lower tile primitives (faster CI)")
+    args = ap.parse_args()
+    build(args.out, skip_fused=args.skip_fused)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Shared compile-time ("synthesis-time") constants for the ADAPTOR artifact set.
+
+These mirror the paper's synthesis-time parameters (section 3.10 / 6): the
+tile sizes TS_MHA and TS_FFN are fixed when the fabric is synthesized; every
+*runtime* parameter (sequence length, heads, embedding dim, hidden dim,
+number of encoder/decoder layers) is adjusted afterwards purely in software
+(rust configuration registers), never by re-lowering these artifacts.
+
+The paper's defaults (section 6): d_model = 768, h = 12, N = 12, SL = 64,
+TS_MHA = 64, TS_FFN = 128.  We additionally cap SL at SL_MAX = 128 — the
+FPGA analog is BRAM buffers sized for the maximum sequence length, with the
+runtime using a prefix (padding + masks select the active sub-volume).
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# ---------------------------------------------------------------------------
+# Synthesis-time (fixed once, like HLS tile sizes)
+# ---------------------------------------------------------------------------
+
+SL_MAX: int = 128          # max sequence length the fabric buffers support
+TS_MHA: int = 64           # attention tile size (paper's optimum, sec. 3.10)
+TS_FFN: int = 128          # FFN tile size (paper's optimum, sec. 3.10)
+DK: int = 64               # per-head dim, fixed to 64 in base & big models
+DMODEL_MAX: int = 768      # max embedding dim (BERT-base)
+HIDDEN_MAX: int = 4 * DMODEL_MAX  # 3072
+FFN_COL: int = 4 * TS_FFN  # FFN2 weight panel columns (paper: TS_FFN x 4TS_FFN)
+
+SOFTMAX_NEG_INF: float = -1e9   # additive mask value for illegal connections
+LN_EPS: float = 1e-5
+
+# Pallas block shapes (VMEM tiles; see DESIGN.md §Hardware-Adaptation).
+# §Perf iteration 1: the tile primitives' panels are at most 128x512 f32
+# (256 KiB) — far below VMEM — so each artifact runs as a SINGLE block and
+# the paper's tiling (Fig 4) lives entirely in the L3 schedule.  Interpret-
+# mode grid loops (dynamic-update-slice chains) cost ~25x on the CPU PJRT
+# path; see EXPERIMENTS.md §Perf.  Multi-block schedules remain covered by
+# the explicit-block-shape property tests.
+BLOCK_M: int = 512
+BLOCK_N: int = 512
+BLOCK_K: int = 512
+BLOCK_ROWS_ATTN: int = 128  # row-block for the attention/LN/quant kernels
+INT8_QMAX: float = 127.0
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT-lowered program: name, input shapes, output shapes (f32)."""
+
+    name: str
+    inputs: List[Tuple[int, ...]]
+    outputs: List[Tuple[int, ...]]
+    doc: str = ""
+
+    def to_json(self) -> Dict:
+        return {
+            "file": f"{self.name}.hlo.txt",
+            "inputs": [list(s) for s in self.inputs],
+            "outputs": [list(s) for s in self.outputs],
+            "doc": self.doc,
+        }
+
+
+def tile_primitive_specs() -> List[ArtifactSpec]:
+    """The 'synthesized fabric': fixed-shape tile primitives.
+
+    Shapes are maxima; runtime adaptivity = masks + loop bounds on the rust
+    side, exactly as the paper's runtime registers re-bound HLS loops.
+    """
+    s = []
+    s.append(ArtifactSpec(
+        "mm_qkv",
+        [(SL_MAX, TS_MHA), (TS_MHA, DK), (SL_MAX, DK)],
+        [(SL_MAX, DK)],
+        "acc + X_tile @ W_tile for Q/K/V projections (Algorithm 9, one tile)"))
+    s.append(ArtifactSpec(
+        "mm_qkv_packed",
+        [(SL_MAX, TS_MHA), (TS_MHA, 3 * DK), (SL_MAX, 3 * DK)],
+        [(SL_MAX, 3 * DK)],
+        "one tile visit projecting a head's Q|K|V simultaneously "
+        "(Algorithm 9's three MACs per cycle; §Perf iteration 3; the "
+        "3*DK width is fabric-fixed, so no runtime topology wastes lanes)"))
+    s.append(ArtifactSpec(
+        "bias_add_qkv",
+        [(SL_MAX, 3 * DK), (3 * DK,)],
+        [(SL_MAX, 3 * DK)],
+        "bias add over a head's packed Q|K|V block (Algorithm 15)"))
+    s.append(ArtifactSpec(
+        "attn_packed",
+        [(SL_MAX, 3 * DK), (SL_MAX, SL_MAX), (1,)],
+        [(SL_MAX, DK)],
+        "attention straight from the packed Q|K|V block (on-device split; "
+        "§Perf iteration 3)"))
+    s.append(ArtifactSpec(
+        "mm_ffn1",
+        [(SL_MAX, TS_FFN), (TS_FFN, TS_FFN), (SL_MAX, TS_FFN)],
+        [(SL_MAX, TS_FFN)],
+        "FFN1 (attention output projection) tile matmul-accumulate (Algorithm 13)"))
+    s.append(ArtifactSpec(
+        "mm_ffn2",
+        [(SL_MAX, TS_FFN), (TS_FFN, FFN_COL), (SL_MAX, FFN_COL)],
+        [(SL_MAX, FFN_COL)],
+        "FFN2 (d->4d) tile matmul-accumulate (Algorithm 14)"))
+    s.append(ArtifactSpec(
+        "mm_ffn3",
+        [(SL_MAX, FFN_COL), (FFN_COL, TS_FFN), (SL_MAX, TS_FFN)],
+        [(SL_MAX, TS_FFN)],
+        "FFN3 (4d->d) tile matmul-accumulate (Algorithm 10)"))
+    s.append(ArtifactSpec(
+        "qk_scores",
+        [(SL_MAX, DK), (SL_MAX, DK), (SL_MAX, SL_MAX), (1,)],
+        [(SL_MAX, SL_MAX)],
+        "scaled, masked Q.K^T (Algorithm 11 / QK_PM)"))
+    s.append(ArtifactSpec(
+        "softmax",
+        [(SL_MAX, SL_MAX)],
+        [(SL_MAX, SL_MAX)],
+        "row softmax (Algorithm 7)"))
+    s.append(ArtifactSpec(
+        "sv",
+        [(SL_MAX, SL_MAX), (SL_MAX, DK)],
+        [(SL_MAX, DK)],
+        "S @ V (Algorithm 12 / SV_PM)"))
+    s.append(ArtifactSpec(
+        "attn_fused",
+        [(SL_MAX, DK), (SL_MAX, DK), (SL_MAX, DK), (SL_MAX, SL_MAX), (1,)],
+        [(SL_MAX, DK)],
+        "fused scores+softmax+SV (perf-path ablation of QK/softmax/SV split)"))
+    s.append(ArtifactSpec(
+        "bias_add_dk",
+        [(SL_MAX, DK), (DK,)],
+        [(SL_MAX, DK)],
+        "bias add for per-head Q/K/V (Algorithm 15)"))
+    s.append(ArtifactSpec(
+        "bias_add_d",
+        [(SL_MAX, DMODEL_MAX), (DMODEL_MAX,)],
+        [(SL_MAX, DMODEL_MAX)],
+        "bias add over full embedding dim (Algorithm 16)"))
+    s.append(ArtifactSpec(
+        "bias_relu_h",
+        [(SL_MAX, HIDDEN_MAX), (HIDDEN_MAX,)],
+        [(SL_MAX, HIDDEN_MAX)],
+        "bias add + ReLU over hidden dim (Algorithm 17)"))
+    s.append(ArtifactSpec(
+        "residual_ln",
+        [(SL_MAX, DMODEL_MAX), (SL_MAX, DMODEL_MAX), (DMODEL_MAX,),
+         (DMODEL_MAX,), (DMODEL_MAX,), (1,)],
+        [(SL_MAX, DMODEL_MAX)],
+        "masked LayerNorm(x + residual) with runtime-valid dim count (Algorithm 8)"))
+    s.append(ArtifactSpec(
+        "quantize",
+        [(SL_MAX, DMODEL_MAX), (1,)],
+        [(SL_MAX, DMODEL_MAX)],
+        "int8 symmetric fake-quantization of activations"))
+    return s
+
+
+@dataclass(frozen=True)
+class FusedConfig:
+    """A per-model fused encoder layer — the non-adaptive baseline artifact
+    (what a custom accelerator would synthesize for ONE model)."""
+
+    name: str
+    sl: int
+    d_model: int
+    heads: int
+    quantized: bool = False
+
+    @property
+    def dk(self) -> int:
+        return self.d_model // self.heads
+
+    @property
+    def hidden(self) -> int:
+        return 4 * self.d_model
+
+
+FUSED_CONFIGS: List[FusedConfig] = [
+    FusedConfig("bert_layer", sl=64, d_model=768, heads=12),
+    FusedConfig("small_layer", sl=64, d_model=256, heads=4),
+    FusedConfig("small_layer_q", sl=64, d_model=256, heads=4, quantized=True),
+]

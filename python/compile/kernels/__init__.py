@@ -1,0 +1,25 @@
+"""L1 Pallas kernels (build-time only; lowered AOT into HLO artifacts).
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis gate
+correctness before any artifact is emitted.
+"""
+
+from .attention import (attention_head, attention_head_packed, padding_mask,
+                        qk_scores, softmax_rows, sv)
+from .layernorm import residual_ln
+from .matmul import bias_add, matmul_acc
+from .quant import calibrate_scale, quantize_dequantize
+
+__all__ = [
+    "attention_head",
+    "attention_head_packed",
+    "padding_mask",
+    "qk_scores",
+    "softmax_rows",
+    "sv",
+    "residual_ln",
+    "bias_add",
+    "matmul_acc",
+    "quantize_dequantize",
+    "calibrate_scale",
+]

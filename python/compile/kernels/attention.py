@@ -1,0 +1,177 @@
+"""Attention Pallas kernels: the paper's QK_PM, softmax unit, and SV_PM.
+
+Two forms are provided, matching the two execution modes of the rust
+coordinator:
+
+* split kernels (`qk_scores`, `softmax_rows`, `sv`) — one per processing
+  module, mirroring the paper's module decomposition (Fig 2) so the L3
+  engine can schedule them exactly like the hardware does;
+* a fused row-block kernel (`attention_head`) — the perf-path ablation: one
+  VMEM-resident pass per row block (the TPU analog of chaining the three PE
+  arrays without spilling S to BRAM).
+
+Masking: `mask` is additive (0 on legal connections, SOFTMAX_NEG_INF on
+illegal ones).  It encodes BOTH the decoder's causal mask (paper's Mask op,
+Eq 1) and sequence-length padding — the runtime-adaptive `Sequence`
+register on the rust side only changes this mask, never the artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK_ROWS_ATTN
+
+
+def _qk_kernel(q_ref, k_ref, m_ref, s_ref, o_ref):
+    s = jnp.dot(q_ref[...], k_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = s * s_ref[0] + m_ref[...]
+
+
+@jax.jit
+def qk_scores(q, k, mask, scale):
+    """Mask(scale * Q K^T) — Algorithm 11 (QK_PM), row-block tiled.
+
+    q, k: (SL, DK); mask: (SL, SL); scale: (1,) runtime input (Eq 1 uses
+    1/sqrt(d_k); Algorithm 11 uses 1/d_model — the rust register file picks).
+    """
+    sl, dk = q.shape
+    br = min(BLOCK_ROWS_ATTN, sl)
+    return pl.pallas_call(
+        _qk_kernel,
+        grid=(sl // br,),
+        in_specs=[
+            pl.BlockSpec((br, dk), lambda i: (i, 0)),
+            pl.BlockSpec((sl, dk), lambda i: (0, 0)),
+            pl.BlockSpec((br, sl), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, sl), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, sl), jnp.float32),
+        interpret=True,
+    )(q, k, mask, scale)
+
+
+def _softmax_kernel(s_ref, o_ref):
+    s = s_ref[...]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def softmax_rows(s):
+    """Numerically-stable row softmax — Algorithm 7 (max, exp, normalize)."""
+    sl, n = s.shape
+    br = min(BLOCK_ROWS_ATTN, sl)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(sl // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, n), jnp.float32),
+        interpret=True,
+    )(s)
+
+
+def _sv_kernel(p_ref, v_ref, o_ref):
+    o_ref[...] = jnp.dot(p_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def sv(p, v):
+    """S @ V — Algorithm 12 (SV_PM), row-block tiled."""
+    sl, sl2 = p.shape
+    _, dk = v.shape
+    br = min(BLOCK_ROWS_ATTN, sl)
+    return pl.pallas_call(
+        _sv_kernel,
+        grid=(sl // br,),
+        in_specs=[
+            pl.BlockSpec((br, sl2), lambda i: (i, 0)),
+            pl.BlockSpec((sl2, dk), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, dk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, dk), jnp.float32),
+        interpret=True,
+    )(p, v)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, m_ref, s_ref, o_ref):
+    s = jnp.dot(q_ref[...], k_ref[...].T, preferred_element_type=jnp.float32)
+    s = s * s_ref[0] + m_ref[...]
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v_ref[...], preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def attention_head(q, k, v, mask, scale):
+    """Fused scores+softmax+SV for one head (Eq 1), one pass per row block.
+
+    K and V stay VMEM-resident across row blocks; S never leaves the block
+    (the FPGA analog: S forwarded PE-to-PE instead of spilling to BRAM).
+    """
+    sl, dk = q.shape
+    br = min(BLOCK_ROWS_ATTN, sl)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(sl // br,),
+        in_specs=[
+            pl.BlockSpec((br, dk), lambda i: (i, 0)),
+            pl.BlockSpec((sl, dk), lambda i: (0, 0)),
+            pl.BlockSpec((sl, dk), lambda i: (0, 0)),
+            pl.BlockSpec((br, sl), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, dk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, dk), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask, scale)
+
+
+def _attn_packed_kernel(qkv_ref, m_ref, s_ref, o_ref, *, dk: int):
+    q = qkv_ref[:, :dk]
+    k = qkv_ref[:, dk:2 * dk]
+    v = qkv_ref[:, 2 * dk:]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s * s_ref[0] + m_ref[...]
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def attention_head_packed(qkv, mask, scale):
+    """Fused attention over a packed `[SL, 3*DK]` Q|K|V block — avoids the
+    host-side split after the packed projection (§Perf iteration 3)."""
+    sl, w = qkv.shape
+    dk = w // 3
+    return pl.pallas_call(
+        functools.partial(_attn_packed_kernel, dk=dk),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((sl, w), lambda i: (0, 0)),
+            pl.BlockSpec((sl, sl), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((sl, dk), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, dk), jnp.float32),
+        interpret=True,
+    )(qkv, mask, scale)
+
+
+def padding_mask(sl_max: int, sl: int, causal: bool = False):
+    """Additive mask for a runtime sequence length `sl` on an `sl_max`
+    fabric; optionally causal (decoder masked self-attention)."""
+    i = jnp.arange(sl_max)[:, None]
+    j = jnp.arange(sl_max)[None, :]
+    legal = (i < sl) & (j < sl)
+    if causal:
+        legal = legal & (j <= i)
+    from ..configs import SOFTMAX_NEG_INF
+    return jnp.where(legal, 0.0, SOFTMAX_NEG_INF).astype(jnp.float32)

@@ -1,0 +1,48 @@
+"""Masked residual + LayerNorm Pallas kernel — the paper's LN unit (Eq 4,
+Algorithm 8) with the runtime-adaptive twist: the valid feature width is a
+runtime input (`count`, the `Embeddings` register), so one artifact serves
+every embedding dimension up to DMODEL_MAX.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK_ROWS_ATTN, LN_EPS
+
+
+def _ln_kernel(x_ref, r_ref, g_ref, b_ref, m_ref, c_ref, o_ref):
+    z = (x_ref[...] + r_ref[...]) * m_ref[...][None, :]
+    count = c_ref[0]
+    mu = jnp.sum(z, axis=-1, keepdims=True) / count
+    d = (z - mu) * m_ref[...][None, :]
+    var = jnp.sum(d * d, axis=-1, keepdims=True) / count
+    y = g_ref[...][None, :] * (z - mu) * jax.lax.rsqrt(var + LN_EPS) + b_ref[...][None, :]
+    o_ref[...] = y * m_ref[...][None, :]
+
+
+@jax.jit
+def residual_ln(x, res, gamma, beta, dmask, count):
+    """LayerNorm(x + res) over the first `count` of `d` columns.
+
+    x, res: (SL, D); gamma, beta, dmask: (D,); count: (1,) float32.
+    Rows are independent (position-wise, paper sec. 2.1), so the grid tiles
+    rows; the full feature width stays in VMEM (<= 768 f32 = 3 KiB/row).
+    """
+    sl, d = x.shape
+    br = min(BLOCK_ROWS_ATTN, sl)
+    return pl.pallas_call(
+        _ln_kernel,
+        grid=(sl // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, d), jnp.float32),
+        interpret=True,
+    )(x, res, gamma, beta, dmask, count)

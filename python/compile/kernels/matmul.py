@@ -1,0 +1,92 @@
+"""Tiled matmul-accumulate Pallas kernel — the paper's MAC tile visit.
+
+FPGA -> TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's PE array
+(DSP48 MACs over a BRAM-resident weight tile) becomes an MXU-shaped block
+matmul over VMEM-resident panels.  The grid's K axis is the paper's tile
+loop (Fig 4): partial products accumulate into the output block across K
+steps, exactly as ADAPTOR accumulates tile outputs "with those from
+previous iterations in the next cycle" (sec. 3.9).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK_K, BLOCK_M, BLOCK_N
+
+
+def _mm_acc_kernel(x_ref, w_ref, acc_ref, o_ref):
+    """One (BM, BN) output block; K-axis of the grid accumulates."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = acc_ref[...]
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest block <= `block` that divides `dim` (dims here are powers of
+    two times 64, so this terminates at a clean divisor)."""
+    b = min(block, dim)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_acc(x, w, acc, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """acc + x @ w with (bm, bn, bk) VMEM blocking.
+
+    x: (M, K), w: (K, N), acc: (M, N) -> (M, N), all float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and acc.shape == (m, n), (x.shape, w.shape, acc.shape)
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, acc)
+
+
+def _bias_kernel(x_ref, b_ref, o_ref, *, relu: bool):
+    y = x_ref[...] + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bn"))
+def bias_add(x, b, *, relu: bool = False, bn: int = 512):
+    """x + b (broadcast over rows), optional fused ReLU — Algorithms 15-17."""
+    m, n = x.shape
+    assert b.shape == (n,)
+    bn = _pick(bn, n)
+    return pl.pallas_call(
+        functools.partial(_bias_kernel, relu=relu),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, b)

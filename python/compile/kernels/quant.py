@@ -1,0 +1,45 @@
+"""Symmetric int8 fake-quantization Pallas kernel.
+
+The paper's fabric is "fully quantized for computational efficiency and
+portability" (fixed-point DSP48 datapaths).  On this substrate numerics run
+in f32 on the PJRT CPU client, so quantization is modeled as
+quantize-dequantize (QDQ): values are rounded to the int8 lattice scaled by
+a per-tensor scale, which reproduces fixed-point rounding error exactly
+while keeping artifacts executable on any PJRT backend.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK_ROWS_ATTN, INT8_QMAX
+
+
+def _qdq_kernel(x_ref, s_ref, o_ref):
+    scale = s_ref[0]
+    q = jnp.clip(jnp.round(x_ref[...] / scale), -INT8_QMAX, INT8_QMAX)
+    o_ref[...] = q * scale
+
+
+@jax.jit
+def quantize_dequantize(x, scale):
+    """Round x to the int8 lattice with per-tensor `scale` (1,) and return
+    the dequantized f32 values."""
+    sl, d = x.shape
+    br = min(BLOCK_ROWS_ATTN, sl)
+    return pl.pallas_call(
+        _qdq_kernel,
+        grid=(sl // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sl, d), jnp.float32),
+        interpret=True,
+    )(x, scale)
+
+
+def calibrate_scale(x) -> jnp.ndarray:
+    """Per-tensor symmetric scale: max |x| / 127 (never zero)."""
+    return jnp.maximum(jnp.max(jnp.abs(x)) / INT8_QMAX, 1e-8).reshape(1)

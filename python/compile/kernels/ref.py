@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness gate).
+
+These implement the paper's equations directly (Eq 1-7) with no tiling, no
+pallas, no tricks — pytest asserts each kernel matches its oracle to
+float32 tolerance, and hypothesis sweeps shapes/values (python/tests/).
+"""
+
+import jax.numpy as jnp
+
+from ..configs import INT8_QMAX, LN_EPS
+
+
+def matmul_acc(x, w, acc):
+    """acc + x @ w — one tile visit of the paper's MAC loops."""
+    return acc + jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def qk_scores(q, k, mask, scale):
+    """Mask(scale * Q K^T) — Eq 1 numerator (scale passed explicitly;
+    Algorithm 11 divides by d_model, Eq 1 by sqrt(d_k): callers choose)."""
+    return jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + mask
+
+
+def softmax_rows(s):
+    """Numerically-stable row softmax — Algorithm 7 (max, exp, normalize)."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def sv(p, v):
+    """Attention-weighted values S @ V."""
+    return jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention_head(q, k, v, mask, scale):
+    """Full scaled-dot-product attention for one head — Eq 1."""
+    return sv(softmax_rows(qk_scores(q, k, mask, scale)), v)
+
+
+def bias_add(x, b):
+    return x + b[None, :]
+
+
+def bias_relu(x, b):
+    """Eq 7 applied after bias — Algorithm 17."""
+    return jnp.maximum(x + b[None, :], 0.0)
+
+
+def gelu(x):
+    """Eq 6 (erf formulation)."""
+    from jax.scipy.special import erf
+    return x * 0.5 * (1.0 + erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def residual_ln(x, res, gamma, beta, dmask, count, eps=LN_EPS):
+    """Masked LayerNorm(x + res) over the first `count` feature dims — Eq 4.
+
+    dmask is 1.0 on valid feature columns, 0.0 on padding; count is the
+    number of valid columns (a runtime register on the rust side).
+    """
+    z = (x + res) * dmask[None, :]
+    mu = jnp.sum(z, axis=-1, keepdims=True) / count
+    var = jnp.sum(((z - mu) * dmask[None, :]) ** 2, axis=-1, keepdims=True) / count
+    y = gamma[None, :] * (z - mu) / jnp.sqrt(var + eps) + beta[None, :]
+    return y * dmask[None, :]
+
+
+def quantize_dequantize(x, scale):
+    """Symmetric int8 fake-quant: round-to-nearest, clip to [-127, 127]."""
+    q = jnp.clip(jnp.round(x / scale), -INT8_QMAX, INT8_QMAX)
+    return q * scale

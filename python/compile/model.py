@@ -1,0 +1,220 @@
+"""L2: the paper's transformer encoder/decoder forward pass in JAX, built on
+the L1 Pallas kernels and decomposed exactly like ADAPTOR's processing
+modules (Fig 1-3):
+
+    QKV_PM -> bias -> QK_PM -> softmax -> SV_PM -> concat
+    -> FFN1_PM (output projection) -> residual+LN
+    -> FFN2_PM (d->4d, ReLU) -> FFN3_PM (4d->d) -> residual+LN
+
+This module is build-time only: `aot.py` lowers the fused functions here to
+HLO text once; the rust coordinator then runs them (or the per-module tile
+primitives) via PJRT with Python absent from the request path.
+"""
+
+import math
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .configs import LN_EPS
+
+
+class LayerParams(NamedTuple):
+    """One encoder layer's weights, shaped like the paper's weight buffers.
+
+    wq/wk/wv: (h, d_model, dk)   per-head projection panels
+    bq/bk/bv: (h, dk)
+    wo: (d_model, d_model), bo: (d_model,)          FFN1_PM
+    w1: (d_model, hidden), b1: (hidden,)            FFN2_PM
+    w2: (hidden, d_model), b2: (d_model,)           FFN3_PM
+    g1/b1n, g2/b2n: (d_model,)                      the two LN units
+    """
+
+    wq: jnp.ndarray
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    bq: jnp.ndarray
+    bk: jnp.ndarray
+    bv: jnp.ndarray
+    wo: jnp.ndarray
+    bo: jnp.ndarray
+    w1: jnp.ndarray
+    b1: jnp.ndarray
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+    g1: jnp.ndarray
+    b1n: jnp.ndarray
+    g2: jnp.ndarray
+    b2n: jnp.ndarray
+
+
+def init_layer_params(key, d_model: int, heads: int) -> LayerParams:
+    """Deterministic synthetic weights (the accelerator is weight-agnostic;
+    see DESIGN.md §Substitutions — HuggingFace .pth extraction replaced by
+    a topology+synthetic-weight generator)."""
+    dk = d_model // heads
+    hidden = 4 * d_model
+    ks = jax.random.split(key, 8)
+    s_attn = 1.0 / math.sqrt(d_model)
+    s_ffn1 = 1.0 / math.sqrt(d_model)
+    s_ffn2 = 1.0 / math.sqrt(hidden)
+    return LayerParams(
+        wq=jax.random.normal(ks[0], (heads, d_model, dk), jnp.float32) * s_attn,
+        wk=jax.random.normal(ks[1], (heads, d_model, dk), jnp.float32) * s_attn,
+        wv=jax.random.normal(ks[2], (heads, d_model, dk), jnp.float32) * s_attn,
+        bq=jnp.zeros((heads, dk), jnp.float32),
+        bk=jnp.zeros((heads, dk), jnp.float32),
+        bv=jnp.zeros((heads, dk), jnp.float32),
+        wo=jax.random.normal(ks[3], (d_model, d_model), jnp.float32) * s_attn,
+        bo=jnp.zeros((d_model,), jnp.float32),
+        w1=jax.random.normal(ks[4], (d_model, hidden), jnp.float32) * s_ffn1,
+        b1=jnp.zeros((hidden,), jnp.float32),
+        w2=jax.random.normal(ks[5], (hidden, d_model), jnp.float32) * s_ffn2,
+        b2=jnp.zeros((d_model,), jnp.float32),
+        g1=jnp.ones((d_model,), jnp.float32),
+        b1n=jnp.zeros((d_model,), jnp.float32),
+        g2=jnp.ones((d_model,), jnp.float32),
+        b2n=jnp.zeros((d_model,), jnp.float32),
+    )
+
+
+def _attention_block(x, p: LayerParams, mask, scale, quantized: bool):
+    """MHA via the L1 kernels, head by head (the paper instantiates one
+    QKV/QK/SV module set per head)."""
+    sl, d_model = x.shape
+    heads = p.wq.shape[0]
+    outs = []
+    for h in range(heads):
+        q = kernels.bias_add(kernels.matmul_acc(x, p.wq[h], jnp.zeros((sl, p.wq.shape[2]), jnp.float32)), p.bq[h])
+        k = kernels.bias_add(kernels.matmul_acc(x, p.wk[h], jnp.zeros((sl, p.wk.shape[2]), jnp.float32)), p.bk[h])
+        v = kernels.bias_add(kernels.matmul_acc(x, p.wv[h], jnp.zeros((sl, p.wv.shape[2]), jnp.float32)), p.bv[h])
+        outs.append(kernels.attention_head(q, k, v, mask, scale))
+    attn = jnp.concatenate(outs, axis=-1)
+    if quantized:
+        attn = kernels.quantize_dequantize(attn, kernels.calibrate_scale(attn))
+    return attn
+
+
+def encoder_layer(x, p: LayerParams, mask, *, quantized: bool = False):
+    """One full encoder layer (Eq 1-4) on the L1 kernels.
+
+    x: (SL, d_model); mask: (SL, SL) additive.  Post-LN arrangement as the
+    paper describes ("Residual addition and LN layers are inserted after
+    each MHA and FFN").
+    """
+    sl, d_model = x.shape
+    dk = p.wq.shape[2]
+    scale = jnp.array([1.0 / math.sqrt(dk)], jnp.float32)
+    ones = jnp.ones((d_model,), jnp.float32)
+    count = jnp.array([float(d_model)], jnp.float32)
+
+    attn = _attention_block(x, p, mask, scale, quantized)
+    # FFN1_PM: attention output projection, then residual + LN.
+    proj = kernels.bias_add(
+        kernels.matmul_acc(attn, p.wo, jnp.zeros((sl, d_model), jnp.float32)), p.bo)
+    y = kernels.residual_ln(proj, x, p.g1, p.b1n, ones, count)
+    # FFN2_PM (ReLU) -> FFN3_PM, then residual + LN.
+    hidden = kernels.bias_add(
+        kernels.matmul_acc(y, p.w1, jnp.zeros((sl, p.w1.shape[1]), jnp.float32)),
+        p.b1, relu=True)
+    if quantized:
+        hidden = kernels.quantize_dequantize(hidden, kernels.calibrate_scale(hidden))
+    out = kernels.bias_add(
+        kernels.matmul_acc(hidden, p.w2, jnp.zeros((sl, d_model), jnp.float32)), p.b2)
+    return kernels.residual_ln(out, y, p.g2, p.b2n, ones, count)
+
+
+def encoder_stack(x, layers, mask, *, quantized: bool = False):
+    """N identical encoder layers; the input BRAM is 'reused to store the
+    outputs of each encoder/decoder layer' (sec. 3.1) — plain chaining."""
+    for p in layers:
+        x = encoder_layer(x, p, mask, quantized=quantized)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decoder (paper Fig 1a: masked self-attention + cross-attention + FFN)
+# ---------------------------------------------------------------------------
+
+class DecoderParams(NamedTuple):
+    self_attn: LayerParams          # masked self-attention + its FFN is unused
+    cross: LayerParams              # cross-attention block reuses the layout
+
+
+def decoder_layer(y, enc_out, p_self: LayerParams, p_cross: LayerParams,
+                  causal_mask, cross_mask):
+    """One decoder layer: masked self-attn, cross-attn over encoder output,
+    position-wise FFN (each sub-layer with residual + LN)."""
+    sl, d_model = y.shape
+    dk = p_self.wq.shape[2]
+    scale = jnp.array([1.0 / math.sqrt(dk)], jnp.float32)
+    ones = jnp.ones((d_model,), jnp.float32)
+    count = jnp.array([float(d_model)], jnp.float32)
+
+    # Masked self-attention.
+    sa = _attention_block(y, p_self, causal_mask, scale, False)
+    sa = kernels.bias_add(
+        kernels.matmul_acc(sa, p_self.wo, jnp.zeros((sl, d_model), jnp.float32)),
+        p_self.bo)
+    y1 = kernels.residual_ln(sa, y, p_self.g1, p_self.b1n, ones, count)
+
+    # Cross-attention: Q from decoder state, K/V from encoder output.
+    heads = p_cross.wq.shape[0]
+    outs = []
+    for h in range(heads):
+        q = kernels.bias_add(kernels.matmul_acc(y1, p_cross.wq[h], jnp.zeros((sl, dk), jnp.float32)), p_cross.bq[h])
+        k = kernels.bias_add(kernels.matmul_acc(enc_out, p_cross.wk[h], jnp.zeros((enc_out.shape[0], dk), jnp.float32)), p_cross.bk[h])
+        v = kernels.bias_add(kernels.matmul_acc(enc_out, p_cross.wv[h], jnp.zeros((enc_out.shape[0], dk), jnp.float32)), p_cross.bv[h])
+        s = kernels.qk_scores(q, k, cross_mask, scale)
+        outs.append(kernels.sv(kernels.softmax_rows(s), v))
+    ca = jnp.concatenate(outs, axis=-1)
+    ca = kernels.bias_add(
+        kernels.matmul_acc(ca, p_cross.wo, jnp.zeros((sl, d_model), jnp.float32)),
+        p_cross.bo)
+    y2 = kernels.residual_ln(ca, y1, p_cross.g1, p_cross.b1n, ones, count)
+
+    # Position-wise FFN from the cross params.
+    hidden = kernels.bias_add(
+        kernels.matmul_acc(y2, p_cross.w1, jnp.zeros((sl, p_cross.w1.shape[1]), jnp.float32)),
+        p_cross.b1, relu=True)
+    out = kernels.bias_add(
+        kernels.matmul_acc(hidden, p_cross.w2, jnp.zeros((sl, d_model), jnp.float32)),
+        p_cross.b2)
+    return kernels.residual_ln(out, y2, p_cross.g2, p_cross.b2n, ones, count)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference model (oracle for the kernel-built model and for the
+# rust engine's numerics — see python/tests/test_model.py)
+# ---------------------------------------------------------------------------
+
+def ref_encoder_layer(x, p: LayerParams, mask, *, quantized: bool = False):
+    sl, d_model = x.shape
+    heads, _, dk = p.wq.shape
+    scale = 1.0 / math.sqrt(dk)
+    outs = []
+    for h in range(heads):
+        q = x @ p.wq[h] + p.bq[h][None, :]
+        k = x @ p.wk[h] + p.bk[h][None, :]
+        v = x @ p.wv[h] + p.bv[h][None, :]
+        outs.append(ref.attention_head(q, k, v, mask, scale))
+    attn = jnp.concatenate(outs, axis=-1)
+    if quantized:
+        attn = ref.quantize_dequantize(attn, kernels.calibrate_scale(attn))
+    proj = attn @ p.wo + p.bo[None, :]
+    ones = jnp.ones((d_model,), jnp.float32)
+    y = ref.residual_ln(proj, x, p.g1, p.b1n, ones, float(d_model))
+    hidden = jnp.maximum(y @ p.w1 + p.b1[None, :], 0.0)
+    if quantized:
+        hidden = ref.quantize_dequantize(hidden, kernels.calibrate_scale(hidden))
+    out = hidden @ p.w2 + p.b2[None, :]
+    return ref.residual_ln(out, y, p.g2, p.b2n, ones, float(d_model))
+
+
+def ref_encoder_stack(x, layers, mask, *, quantized: bool = False):
+    for p in layers:
+        x = ref_encoder_layer(x, p, mask, quantized=quantized)
+    return x

@@ -1,0 +1,105 @@
+"""AOT gate: artifacts lower to parseable HLO text and the manifest is
+complete and consistent.
+
+Execution of the emitted HLO is validated on the consumer side — the rust
+runtime integration tests (rust/tests/integration_runtime.rs) load, compile
+and run every artifact against rust-side oracles, which is the path that
+actually matters (xla_extension 0.5.1 via the `xla` crate).  Here we verify
+the producer half: text-format interchange, manifest completeness, and that
+the text parses back into an HloModule.
+"""
+
+import json
+import os
+
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile.configs import FUSED_CONFIGS, tile_primitive_specs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def _read(name: str) -> str:
+    with open(os.path.join(ART, name)) as f:
+        return f.read()
+
+
+class TestManifest:
+    def test_manifest_is_complete(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            m = json.load(f)
+        for spec in tile_primitive_specs():
+            assert spec.name in m["artifacts"], spec.name
+            entry = m["artifacts"][spec.name]
+            assert os.path.exists(os.path.join(ART, entry["file"]))
+            assert entry["inputs"] == [list(s) for s in spec.inputs]
+            assert entry["outputs"] == [list(s) for s in spec.outputs]
+        assert m["sl_max"] == 128 and m["ts_mha"] == 64 and m["ts_ffn"] == 128
+        assert m["dk"] == 64 and m["dmodel_max"] == 768 and m["hidden_max"] == 3072
+
+    def test_fused_entries(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            m = json.load(f)
+        assert set(m["fused"]) >= {c.name for c in FUSED_CONFIGS}
+        for name, entry in m["fused"].items():
+            assert os.path.exists(os.path.join(ART, entry["file"])), name
+            assert len(entry["inputs"]) == 18  # x, mask, 16 LayerParams fields
+            cfg = entry["config"]
+            assert entry["inputs"][0] == [cfg["sl"], cfg["d_model"]]
+            assert entry["outputs"] == [[cfg["sl"], cfg["d_model"]]]
+
+    def test_digest_matches_sources(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["digest"] == aot.source_digest(), (
+            "artifacts are stale — run `make artifacts`")
+
+
+class TestHloText:
+    @pytest.mark.parametrize("spec", tile_primitive_specs(), ids=lambda s: s.name)
+    def test_artifact_is_hlo_text_with_declared_shapes(self, spec):
+        text = _read(f"{spec.name}.hlo.txt")
+        assert text.startswith("HloModule"), "must be HLO text, not a proto"
+        assert "ENTRY" in text
+        for shape in spec.inputs:
+            dims = ",".join(str(d) for d in shape)
+            assert f"f32[{dims}]" in text, (spec.name, shape)
+
+    @pytest.mark.parametrize("spec", tile_primitive_specs(), ids=lambda s: s.name)
+    def test_artifact_parses_back(self, spec):
+        """HLO text must round-trip through the XLA text parser — the same
+        parser class the rust side's HloModuleProto::from_text_file uses."""
+        mod = xc._xla.hlo_module_from_text(_read(f"{spec.name}.hlo.txt"))
+        assert mod.as_serialized_hlo_module_proto()  # parseable & serializable
+
+    @pytest.mark.parametrize("cfg", FUSED_CONFIGS, ids=lambda c: c.name)
+    def test_fused_parses_back(self, cfg):
+        mod = xc._xla.hlo_module_from_text(_read(f"fused_{cfg.name}.hlo.txt"))
+        assert mod.as_serialized_hlo_module_proto()
+
+    def test_lowering_is_deterministic(self):
+        spec = [s for s in tile_primitive_specs() if s.name == "softmax"][0]
+        assert aot.lower_primitive(spec) == aot.lower_primitive(spec)
+
+    def test_no_serialized_protos_emitted(self):
+        """Guard against regressing to .serialize() (xla_extension 0.5.1
+        rejects jax>=0.5 64-bit-id protos — DESIGN.md)."""
+        for f in os.listdir(ART):
+            if f.endswith(".hlo.txt"):
+                with open(os.path.join(ART, f), "rb") as fh:
+                    assert fh.read(9) == b"HloModule", f
+
+    def test_mask_and_scale_are_runtime_inputs(self):
+        """Runtime adaptivity contract: sequence length (mask) and scale
+        enter attention as INPUTS, so changing the `Sequence` register never
+        re-lowers anything."""
+        text = _read("attn_fused.hlo.txt")
+        assert "f32[128,128]" in text  # the mask parameter
+        assert "f32[1]" in text        # the scale parameter

@@ -1,0 +1,251 @@
+"""L1 correctness gate: every Pallas kernel vs its pure-jnp oracle.
+
+Fixed-seed deterministic cases here; hypothesis shape/value sweeps live in
+test_kernels_property.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.configs import DK, DMODEL_MAX, HIDDEN_MAX, SL_MAX, SOFTMAX_NEG_INF, TS_FFN, TS_MHA
+from compile.kernels import ref
+
+
+def rnd(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+class TestMatmulAcc:
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (SL_MAX, TS_MHA, DK),        # mm_qkv shape
+            (SL_MAX, TS_FFN, TS_FFN),    # mm_ffn1
+            (SL_MAX, TS_FFN, 4 * TS_FFN),  # mm_ffn2
+            (SL_MAX, 4 * TS_FFN, TS_FFN),  # mm_ffn3
+            (64, 64, 64),
+            (32, 128, 64),
+        ],
+    )
+    def test_matches_ref(self, m, k, n):
+        x, w, acc = rnd(0, (m, k)), rnd(1, (k, n)), rnd(2, (m, n))
+        got = kernels.matmul_acc(x, w, acc)
+        np.testing.assert_allclose(got, ref.matmul_acc(x, w, acc), rtol=1e-5, atol=1e-4)
+
+    def test_zero_acc_is_plain_matmul(self):
+        x, w = rnd(3, (64, 64)), rnd(4, (64, 64))
+        got = kernels.matmul_acc(x, w, jnp.zeros((64, 64), jnp.float32))
+        np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-4)
+
+    def test_tile_accumulation_equals_full_matmul(self):
+        """Fig 4a semantics: column-tiled partial products sum to the full
+        projection — the core tiling invariant of the paper."""
+        d_model, ts, dk = 256, 64, 64
+        x, w = rnd(5, (32, d_model)), rnd(6, (d_model, dk))
+        acc = jnp.zeros((32, dk), jnp.float32)
+        for t in range(d_model // ts):
+            acc = kernels.matmul_acc(x[:, t * ts:(t + 1) * ts], w[t * ts:(t + 1) * ts], acc)
+        np.testing.assert_allclose(acc, x @ w, rtol=1e-4, atol=1e-3)
+
+    def test_ffn_2d_tile_accumulation(self):
+        """Fig 4b semantics: 2-D tiling accumulates along rows of W, writes
+        disjoint column panels."""
+        d, ts = 256, 128
+        x, w = rnd(7, (32, d)), rnd(8, (d, 4 * d))
+        out = jnp.zeros((32, 4 * d), jnp.float32)
+        for c in range(4 * d // (4 * ts)):
+            acc = jnp.zeros((32, 4 * ts), jnp.float32)
+            for r in range(d // ts):
+                acc = kernels.matmul_acc(
+                    x[:, r * ts:(r + 1) * ts],
+                    w[r * ts:(r + 1) * ts, c * 4 * ts:(c + 1) * 4 * ts],
+                    acc,
+                )
+            out = out.at[:, c * 4 * ts:(c + 1) * 4 * ts].set(acc)
+        np.testing.assert_allclose(out, x @ w, rtol=1e-4, atol=1e-3)
+
+
+class TestBiasAdd:
+    @pytest.mark.parametrize("n", [DK, TS_FFN, DMODEL_MAX, HIDDEN_MAX])
+    def test_bias_add(self, n):
+        x, b = rnd(0, (SL_MAX, n)), rnd(1, (n,))
+        np.testing.assert_allclose(kernels.bias_add(x, b), ref.bias_add(x, b), rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("n", [TS_FFN, HIDDEN_MAX])
+    def test_bias_relu(self, n):
+        x, b = rnd(2, (SL_MAX, n)), rnd(3, (n,))
+        got = kernels.bias_add(x, b, relu=True)
+        np.testing.assert_allclose(got, ref.bias_relu(x, b), rtol=1e-6, atol=1e-6)
+        assert float(jnp.min(got)) >= 0.0
+
+    def test_relu_clamps_negatives_only(self):
+        x = jnp.array([[-1.0, 0.0, 2.0, -3.0]], jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        got = kernels.bias_add(x, b, relu=True, bn=4)
+        np.testing.assert_allclose(got, [[0.0, 0.0, 2.0, 0.0]])
+
+
+class TestAttention:
+    def test_qk_scores(self):
+        q, k = rnd(0, (SL_MAX, DK)), rnd(1, (SL_MAX, DK))
+        mask = kernels.padding_mask(SL_MAX, SL_MAX)
+        scale = 1.0 / np.sqrt(DK)
+        got = kernels.qk_scores(q, k, mask, jnp.array([scale], jnp.float32))
+        np.testing.assert_allclose(got, ref.qk_scores(q, k, mask, scale), rtol=1e-4, atol=1e-3)
+
+    def test_softmax_rows_sum_to_one(self):
+        s = rnd(2, (SL_MAX, SL_MAX), 3.0)
+        p = kernels.softmax_rows(s)
+        np.testing.assert_allclose(p, ref.softmax_rows(s), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(jnp.sum(p, axis=-1), np.ones(SL_MAX), rtol=1e-5)
+
+    def test_softmax_stability_large_values(self):
+        """Algorithm 7 subtracts the row max exactly to survive this."""
+        s = jnp.full((32, 32), 500.0, jnp.float32)
+        p = kernels.softmax_rows(s)
+        assert bool(jnp.all(jnp.isfinite(p)))
+        np.testing.assert_allclose(p, np.full((32, 32), 1 / 32), rtol=1e-5)
+
+    def test_sv(self):
+        p, v = ref.softmax_rows(rnd(3, (SL_MAX, SL_MAX))), rnd(4, (SL_MAX, DK))
+        np.testing.assert_allclose(kernels.sv(p, v), ref.sv(p, v), rtol=1e-4, atol=1e-4)
+
+    def test_fused_equals_split(self):
+        """The perf-path fused kernel must be numerically identical to the
+        QK_PM -> softmax -> SV_PM module chain."""
+        q, k, v = rnd(5, (SL_MAX, DK)), rnd(6, (SL_MAX, DK)), rnd(7, (SL_MAX, DK))
+        mask = kernels.padding_mask(SL_MAX, 100)
+        scale = jnp.array([1.0 / np.sqrt(DK)], jnp.float32)
+        fused = kernels.attention_head(q, k, v, mask, scale)
+        split = kernels.sv(kernels.softmax_rows(kernels.qk_scores(q, k, mask, scale)), v)
+        np.testing.assert_allclose(fused[:100], split[:100], rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("sl", [1, 7, 64, 100, SL_MAX])
+    def test_runtime_sequence_length_padding(self, sl):
+        """The `Sequence` register contract: results on the valid prefix are
+        independent of the padded region."""
+        q, k, v = rnd(8, (SL_MAX, DK)), rnd(9, (SL_MAX, DK)), rnd(10, (SL_MAX, DK))
+        mask = kernels.padding_mask(SL_MAX, sl)
+        scale = jnp.array([1.0 / np.sqrt(DK)], jnp.float32)
+        out = kernels.attention_head(q, k, v, mask, scale)[:sl]
+        exact = ref.attention_head(q[:sl], k[:sl], v[:sl],
+                                   jnp.zeros((sl, sl), jnp.float32), float(scale[0]))
+        np.testing.assert_allclose(out, exact, rtol=1e-4, atol=1e-4)
+
+    def test_causal_mask_is_lower_triangular(self):
+        m = kernels.padding_mask(8, 8, causal=True)
+        legal = np.asarray(m) == 0.0
+        assert np.array_equal(legal, np.tril(np.ones((8, 8), bool)))
+        m2 = kernels.padding_mask(8, 5, causal=True)
+        legal2 = np.asarray(m2) == 0.0
+        assert not legal2[0, 1] and legal2[4, 4] and not legal2[5, 5]
+
+    def test_causal_attention_ignores_future(self):
+        """Perturbing future tokens must not change earlier outputs."""
+        q, k, v = rnd(11, (32, DK)), rnd(12, (32, DK)), rnd(13, (32, DK))
+        mask = kernels.padding_mask(32, 32, causal=True)
+        scale = jnp.array([0.125], jnp.float32)
+        base = kernels.attention_head(q, k, v, mask, scale)
+        k2 = k.at[20:].add(5.0)
+        v2 = v.at[20:].add(-3.0)
+        pert = kernels.attention_head(q, k2, v2, mask, scale)
+        np.testing.assert_allclose(base[:20], pert[:20], rtol=1e-5, atol=1e-5)
+
+
+class TestLayerNorm:
+    def test_matches_ref_full_width(self):
+        x, r = rnd(0, (SL_MAX, DMODEL_MAX)), rnd(1, (SL_MAX, DMODEL_MAX))
+        g, b = rnd(2, (DMODEL_MAX,)) + 1.0, rnd(3, (DMODEL_MAX,))
+        ones = jnp.ones((DMODEL_MAX,), jnp.float32)
+        got = kernels.residual_ln(x, r, g, b, ones, jnp.array([float(DMODEL_MAX)], jnp.float32))
+        np.testing.assert_allclose(
+            got, ref.residual_ln(x, r, g, b, ones, float(DMODEL_MAX)), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("valid", [64, 200, 512, 768])
+    def test_runtime_embedding_width(self, valid):
+        """The `Embeddings` register contract: masked LN over a prefix equals
+        exact LN on the truncated tensor."""
+        x, r = rnd(4, (64, DMODEL_MAX)), rnd(5, (64, DMODEL_MAX))
+        g = jnp.ones((DMODEL_MAX,), jnp.float32)
+        b = jnp.zeros((DMODEL_MAX,), jnp.float32)
+        dm = (jnp.arange(DMODEL_MAX) < valid).astype(jnp.float32)
+        got = kernels.residual_ln(x * dm, r * dm, g, b, dm, jnp.array([float(valid)], jnp.float32))
+        z = (x + r)[:, :valid]
+        mu = z.mean(-1, keepdims=True)
+        var = z.var(-1, keepdims=True)
+        exact = (z - mu) / jnp.sqrt(var + 1e-5)
+        np.testing.assert_allclose(got[:, :valid], exact, rtol=1e-3, atol=1e-3)
+        if valid < DMODEL_MAX:
+            assert float(jnp.abs(got[:, valid:]).max()) == 0.0
+
+    def test_normalized_stats(self):
+        x = rnd(6, (32, 256), 5.0)
+        ones = jnp.ones((256,), jnp.float32)
+        got = kernels.residual_ln(x, jnp.zeros_like(x), ones,
+                                  jnp.zeros((256,), jnp.float32), ones,
+                                  jnp.array([256.0], jnp.float32))
+        np.testing.assert_allclose(got.mean(-1), np.zeros(32), atol=1e-4)
+        np.testing.assert_allclose(got.std(-1), np.ones(32), rtol=1e-2)
+
+
+class TestQuant:
+    def test_matches_ref(self):
+        x = rnd(0, (SL_MAX, DMODEL_MAX), 2.0)
+        s = jnp.array([0.05], jnp.float32)
+        np.testing.assert_allclose(
+            kernels.quantize_dequantize(x, s), ref.quantize_dequantize(x, 0.05), atol=1e-6)
+
+    def test_values_on_lattice(self):
+        x = rnd(1, (32, 64))
+        s = 0.1
+        q = kernels.quantize_dequantize(x, jnp.array([s], jnp.float32))
+        lattice = np.round(np.asarray(q) / s)
+        np.testing.assert_allclose(np.asarray(q) / s, lattice, atol=1e-5)
+        assert np.abs(lattice).max() <= 127
+
+    def test_error_bounded_by_half_step(self):
+        x = rnd(2, (32, 64))  # values within clip range for s=0.05
+        s = 0.05
+        q = kernels.quantize_dequantize(x, jnp.array([s], jnp.float32))
+        inside = np.abs(np.asarray(x)) <= 127 * s
+        err = np.abs(np.asarray(q) - np.asarray(x))[inside]
+        assert err.max() <= s / 2 + 1e-6
+
+    def test_calibrate_scale_covers_range(self):
+        x = rnd(3, (16, 16), 10.0)
+        s = kernels.calibrate_scale(x)
+        q = kernels.quantize_dequantize(x, s)
+        # calibrated scale => no clipping: max error is half a step
+        assert float(jnp.abs(q - x).max()) <= float(s[0]) / 2 + 1e-6
+
+    def test_idempotent(self):
+        x = rnd(4, (16, 16))
+        s = jnp.array([0.1], jnp.float32)
+        q1 = kernels.quantize_dequantize(x, s)
+        q2 = kernels.quantize_dequantize(q1, s)
+        np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+
+class TestAttentionPacked:
+    """§Perf iteration 3 kernel: attention over a packed Q|K|V block."""
+
+    def test_matches_unpacked(self):
+        q, k, v = rnd(50, (SL_MAX, DK)), rnd(51, (SL_MAX, DK)), rnd(52, (SL_MAX, DK))
+        qkv = jnp.concatenate([q, k, v], axis=1)
+        mask = kernels.padding_mask(SL_MAX, 96)
+        scale = jnp.array([1.0 / np.sqrt(DK)], jnp.float32)
+        packed = kernels.attention_head_packed(qkv, mask, scale)
+        unpacked = kernels.attention_head(q, k, v, mask, scale)
+        np.testing.assert_allclose(packed[:96], unpacked[:96], rtol=1e-5, atol=1e-5)
+
+    def test_matches_ref(self):
+        q, k, v = rnd(53, (64, DK)), rnd(54, (64, DK)), rnd(55, (64, DK))
+        qkv = jnp.concatenate([q, k, v], axis=1)
+        mask = kernels.padding_mask(64, 64)
+        scale = jnp.array([0.125], jnp.float32)
+        got = kernels.attention_head_packed(qkv, mask, scale)
+        want = ref.attention_head(q, k, v, mask, 0.125)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,123 @@
+"""Hypothesis sweeps over the Pallas kernels' shapes/values vs ref.py.
+
+These are the L1 property gate: any (shape, value) drawn from the fabric's
+legal envelope must match the oracle.  Shapes are constrained to the
+divisibility the fabric guarantees (multiples of the block sizes), exactly
+as the paper constrains dims to tile-size multiples.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def arr(seed: int, shape, lo=-4.0, hi=4.0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.uniform(k, shape, jnp.float32, lo, hi)
+
+
+dims = st.sampled_from([32, 64, 128])
+kdims = st.sampled_from([64, 128, 256, 512])
+seeds = st.integers(0, 2**31 - 1)
+
+
+@SET
+@given(m=dims, k=kdims, n=dims, seed=seeds)
+def test_matmul_acc_matches_ref(m, k, n, seed):
+    x, w, acc = arr(seed, (m, k)), arr(seed + 1, (k, n)), arr(seed + 2, (m, n))
+    np.testing.assert_allclose(
+        kernels.matmul_acc(x, w, acc), ref.matmul_acc(x, w, acc), rtol=1e-4, atol=1e-3)
+
+
+@SET
+@given(m=dims, k=kdims, n=dims, seed=seeds,
+       bm=st.sampled_from([16, 32, 64]), bn=st.sampled_from([16, 32, 64]),
+       bk=st.sampled_from([32, 64, 128]))
+def test_matmul_acc_block_shape_invariance(m, k, n, seed, bm, bn, bk):
+    """Result must not depend on the VMEM blocking (pure schedule change)."""
+    x, w, acc = arr(seed, (m, k)), arr(seed + 1, (k, n)), arr(seed + 2, (m, n))
+    a = kernels.matmul_acc(x, w, acc)
+    b = kernels.matmul_acc(x, w, acc, bm=bm, bn=bn, bk=bk)
+    # different K-blockings sum in different orders; tolerance covers the
+    # worst f32 reassociation error at k=512
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3)
+
+
+@SET
+@given(sl=st.sampled_from([32, 64, 128]), dk=st.sampled_from([32, 64]),
+       valid=st.integers(1, 128), seed=seeds, causal=st.booleans())
+def test_attention_padding_independence(sl, dk, valid, seed, causal):
+    """Outputs on the valid prefix never depend on padded tail values."""
+    valid = min(valid, sl)
+    q, k, v = arr(seed, (sl, dk)), arr(seed + 1, (sl, dk)), arr(seed + 2, (sl, dk))
+    mask = kernels.padding_mask(sl, valid, causal=causal)
+    scale = jnp.array([1.0 / np.sqrt(dk)], jnp.float32)
+    base = kernels.attention_head(q, k, v, mask, scale)
+    # Scribble on the padded tail; the valid prefix must be unchanged.
+    if valid < sl:
+        q2 = q.at[valid:].set(99.0)
+        k2 = k.at[valid:].set(-99.0)
+        v2 = v.at[valid:].set(7.0)
+        pert = kernels.attention_head(q2, k2, v2, mask, scale)
+        np.testing.assert_allclose(base[:valid], pert[:valid], rtol=1e-4, atol=1e-4)
+    oracle = ref.attention_head(q[:valid], k[:valid], v[:valid],
+                                kernels.padding_mask(valid, valid, causal=causal),
+                                1.0 / np.sqrt(dk))
+    np.testing.assert_allclose(base[:valid], oracle, rtol=1e-3, atol=1e-3)
+
+
+@SET
+@given(sl=dims, seed=seeds, scale=st.floats(0.01, 2.0))
+def test_softmax_rows_properties(sl, seed, scale):
+    s = arr(seed, (sl, sl), -6.0, 6.0) * scale
+    p = kernels.softmax_rows(s)
+    np.testing.assert_allclose(p, ref.softmax_rows(s), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p).sum(-1), np.ones(sl), rtol=1e-4)
+    assert np.asarray(p).min() >= 0.0
+
+
+@SET
+@given(d=st.sampled_from([128, 256, 512, 768]), valid_frac=st.floats(0.25, 1.0),
+       seed=seeds)
+def test_residual_ln_matches_truncated_exact(d, valid_frac, seed):
+    valid = max(8, int(d * valid_frac))
+    x, r = arr(seed, (32, d)), arr(seed + 1, (32, d))
+    g, b = arr(seed + 2, (d,), 0.5, 1.5), arr(seed + 3, (d,), -0.5, 0.5)
+    dm = (jnp.arange(d) < valid).astype(jnp.float32)
+    got = kernels.residual_ln(x * dm, r * dm, g, b, dm,
+                              jnp.array([float(valid)], jnp.float32))
+    np.testing.assert_allclose(
+        got, ref.residual_ln(x * dm, r * dm, g, b, dm, float(valid)),
+        rtol=1e-3, atol=1e-3)
+    z = (x + r)[:, :valid]
+    mu, sd = z.mean(-1, keepdims=True), z.std(-1, keepdims=True)
+    exact = g[None, :valid] * (z - mu) / jnp.sqrt(sd**2 + 1e-5) + b[None, :valid]
+    np.testing.assert_allclose(got[:, :valid], exact, rtol=1e-2, atol=1e-2)
+
+
+@SET
+@given(seed=seeds, scale=st.floats(1e-3, 0.5))
+def test_quantize_lattice_and_bound(seed, scale):
+    x = arr(seed, (32, 64), -10.0, 10.0)
+    q = np.asarray(kernels.quantize_dequantize(x, jnp.array([scale], jnp.float32)))
+    ints = q / scale
+    np.testing.assert_allclose(ints, np.round(ints), atol=1e-4)
+    assert np.abs(ints).max() <= 127 + 1e-4
+    inside = np.abs(np.asarray(x)) <= 127 * scale
+    if inside.any():
+        assert np.abs(q - np.asarray(x))[inside].max() <= scale / 2 + 1e-5
+
+
+@SET
+@given(n=st.sampled_from([64, 128, 512, 768, 3072]), seed=seeds, relu=st.booleans())
+def test_bias_add_matches_ref(n, seed, relu):
+    x, b = arr(seed, (64, n)), arr(seed + 1, (n,))
+    got = kernels.bias_add(x, b, relu=relu)
+    want = ref.bias_relu(x, b) if relu else ref.bias_add(x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)

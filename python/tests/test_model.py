@@ -1,0 +1,106 @@
+"""L2 gate: kernel-built encoder/decoder vs the pure-jnp reference model,
+plus shape & topology checks for every fused AOT config.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels, model
+from compile.configs import FUSED_CONFIGS
+
+
+def make(d_model, heads, seed=0):
+    return model.init_layer_params(jax.random.PRNGKey(seed), d_model, heads)
+
+
+class TestEncoderLayer:
+    @pytest.mark.parametrize("d,h,sl", [(256, 4, 64), (128, 2, 32), (768, 12, 64)])
+    def test_matches_ref(self, d, h, sl):
+        p = make(d, h)
+        x = jax.random.normal(jax.random.PRNGKey(1), (sl, d), jnp.float32)
+        mask = kernels.padding_mask(sl, sl)
+        got = model.encoder_layer(x, p, mask)
+        want = model.ref_encoder_layer(x, p, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_quantized_matches_ref(self):
+        p = make(256, 4)
+        x = jax.random.normal(jax.random.PRNGKey(2), (64, 256), jnp.float32)
+        mask = kernels.padding_mask(64, 64)
+        got = model.encoder_layer(x, p, mask, quantized=True)
+        want = model.ref_encoder_layer(x, p, mask, quantized=True)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_quantization_error_is_small_but_nonzero(self):
+        p = make(256, 4)
+        x = jax.random.normal(jax.random.PRNGKey(3), (64, 256), jnp.float32)
+        mask = kernels.padding_mask(64, 64)
+        f = model.encoder_layer(x, p, mask, quantized=False)
+        q = model.encoder_layer(x, p, mask, quantized=True)
+        err = float(jnp.abs(f - q).max())
+        assert 0.0 < err < 0.35, err  # int8 QDQ: visible but bounded
+
+    def test_output_is_layernormed(self):
+        p = make(128, 2)
+        x = jax.random.normal(jax.random.PRNGKey(4), (32, 128), jnp.float32)
+        y = model.encoder_layer(x, p, kernels.padding_mask(32, 32))
+        np.testing.assert_allclose(np.asarray(y).mean(-1), np.zeros(32), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y).std(-1), np.ones(32), rtol=2e-2)
+
+    def test_stack_matches_ref(self):
+        layers = [make(128, 2, s) for s in range(3)]
+        x = jax.random.normal(jax.random.PRNGKey(5), (32, 128), jnp.float32)
+        mask = kernels.padding_mask(32, 32)
+        got = model.encoder_stack(x, layers, mask)
+        want = model.ref_encoder_stack(x, layers, mask)
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+class TestDecoderLayer:
+    def test_shapes_and_finiteness(self):
+        d, h, sl = 128, 2, 32
+        ps, pc = make(d, h, 0), make(d, h, 1)
+        y = jax.random.normal(jax.random.PRNGKey(6), (sl, d), jnp.float32)
+        enc = jax.random.normal(jax.random.PRNGKey(7), (sl, d), jnp.float32)
+        causal = kernels.padding_mask(sl, sl, causal=True)
+        cross = kernels.padding_mask(sl, sl)
+        out = model.decoder_layer(y, enc, ps, pc, causal, cross)
+        assert out.shape == (sl, d)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_causality(self):
+        """Changing future decoder inputs must not change earlier outputs
+        through the masked self-attention path."""
+        d, h, sl = 128, 2, 16
+        ps, pc = make(d, h, 0), make(d, h, 1)
+        enc = jax.random.normal(jax.random.PRNGKey(8), (sl, d), jnp.float32)
+        y = jax.random.normal(jax.random.PRNGKey(9), (sl, d), jnp.float32)
+        causal = kernels.padding_mask(sl, sl, causal=True)
+        cross = kernels.padding_mask(sl, sl)
+        base = model.decoder_layer(y, enc, ps, pc, causal, cross)
+        y2 = y.at[10:].add(3.0)
+        pert = model.decoder_layer(y2, enc, ps, pc, causal, cross)
+        # LN/FFN are position-wise and cross-attn keys come from the encoder,
+        # so rows < 10 see no difference.
+        np.testing.assert_allclose(base[:10], pert[:10], rtol=1e-4, atol=1e-4)
+
+
+class TestFusedConfigs:
+    @pytest.mark.parametrize("cfg", FUSED_CONFIGS, ids=lambda c: c.name)
+    def test_config_divisibility(self, cfg):
+        assert cfg.d_model % cfg.heads == 0
+        assert cfg.dk * cfg.heads == cfg.d_model
+        assert cfg.hidden == 4 * cfg.d_model
+
+    @pytest.mark.parametrize("cfg", FUSED_CONFIGS, ids=lambda c: c.name)
+    def test_fused_fn_shape(self, cfg):
+        from compile.aot import _fused_fn, fused_input_shapes
+        shapes = fused_input_shapes(cfg)
+        args = [jnp.zeros(s, jnp.float32) for s in shapes]
+        # zero weights/inputs: LN of zeros is zeros (gamma=0 here) — just
+        # verify the traced output shape (bare array since §Perf iter 2's
+        # return_tuple=False switch).
+        out = jax.eval_shape(_fused_fn(cfg), *args)
+        assert out.shape == (cfg.sl, cfg.d_model)

@@ -1,0 +1,25 @@
+//! Bench + regenerator for Fig 5: frequency & normalized latency across
+//! the (Tiles_MHA x Tiles_FFN) grid.  Prints the paper's series and times
+//! the DSE itself (per-point analytical cost).
+use adaptor::accel::platform;
+use adaptor::analysis::{report, sweep};
+use adaptor::model::quant::BitWidth;
+use adaptor::model::TnnConfig;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig05();
+    println!("{text}");
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let p = platform::u55c();
+    let cases = vec![
+        bench("fig5/full_tile_sweep", 2, 20, || {
+            std::hint::black_box(sweep::tile_sweep(&cfg, &p, BitWidth::Fixed16));
+        }),
+        bench("fig5/single_design_point", 2, 200, || {
+            let pts = sweep::tile_sweep(&cfg, &p, BitWidth::Fixed16);
+            std::hint::black_box(sweep::best_by_latency(&pts).cloned());
+        }),
+    ];
+    run_suite("Fig 5 — tile-size DSE", cases);
+}

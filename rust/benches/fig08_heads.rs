@@ -1,0 +1,17 @@
+//! Bench + regenerator for Fig 8: performance & resources vs head count.
+use adaptor::accel::platform;
+use adaptor::analysis::{report, sweep};
+use adaptor::model::quant::BitWidth;
+use adaptor::model::TnnConfig;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig08();
+    println!("{text}");
+    let base = TnnConfig::encoder(64, 768, 8, 12);
+    let p = platform::u55c();
+    let cases = vec![bench("fig8/heads_sweep", 2, 50, || {
+        std::hint::black_box(sweep::heads_sweep(&base, &p, BitWidth::Fixed16));
+    })];
+    run_suite("Fig 8 — head-count sweep", cases);
+}

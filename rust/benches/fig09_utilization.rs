@@ -1,0 +1,27 @@
+//! Bench + regenerator for Fig 9: resource utilization vs tile sizes,
+//! timing the analytical resource models (Eq 8 / Eq 25 / structural).
+use adaptor::accel::{platform, resources, tiling::TileConfig};
+use adaptor::analysis::report;
+use adaptor::model::quant::BitWidth;
+use adaptor::model::TnnConfig;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig09();
+    println!("{text}");
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let p = platform::u55c();
+    let t = TileConfig::paper_optimum();
+    let cases = vec![
+        bench("fig9/eq8_dsps", 10, 1000, || {
+            std::hint::black_box(resources::dsps_eq8(&cfg, &t));
+        }),
+        bench("fig9/eq25_brams", 10, 1000, || {
+            std::hint::black_box(resources::brams_eq25(&cfg, &t, 32.0));
+        }),
+        bench("fig9/full_estimate", 10, 1000, || {
+            std::hint::black_box(resources::estimate(&cfg, &t, BitWidth::Fixed16, &p));
+        }),
+    ];
+    run_suite("Fig 9 — resource models", cases);
+}

@@ -1,0 +1,18 @@
+//! Bench + regenerator for Fig 10: cross-platform power comparison.
+use adaptor::accel::{platform, power, resources, tiling::TileConfig};
+use adaptor::analysis::report;
+use adaptor::model::quant::BitWidth;
+use adaptor::model::TnnConfig;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig10();
+    println!("{text}");
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let p = platform::u55c();
+    let r = resources::estimate(&cfg, &TileConfig::paper_optimum(), BitWidth::Fixed16, &p);
+    let cases = vec![bench("fig10/power_model", 10, 1000, || {
+        std::hint::black_box(power::total_power_w(&p, &r, 200.0));
+    })];
+    run_suite("Fig 10 — power model", cases);
+}

@@ -1,0 +1,12 @@
+//! Bench + regenerator for Fig 11: portability across three platforms.
+use adaptor::analysis::report;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig11();
+    println!("{text}");
+    let cases = vec![bench("fig11/three_platform_eval", 2, 100, || {
+        std::hint::black_box(report::fig11());
+    })];
+    run_suite("Fig 11 — portability evaluation", cases);
+}

@@ -1,0 +1,17 @@
+//! Bench + regenerator for Fig 12: the roofline model.
+use adaptor::accel::{platform, roofline, tiling::TileConfig};
+use adaptor::analysis::report;
+use adaptor::model::presets;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig12();
+    println!("{text}");
+    let p = platform::u55c();
+    let t = TileConfig::paper_optimum();
+    let workloads = [("bert", presets::bert_base(64), 30.0)];
+    let cases = vec![bench("fig12/roofline_build", 10, 1000, || {
+        std::hint::black_box(roofline::roofline(&p, &t, 200.0, 4, &workloads));
+    })];
+    run_suite("Fig 12 — roofline", cases);
+}

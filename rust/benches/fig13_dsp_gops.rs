@@ -1,0 +1,12 @@
+//! Bench + regenerator for Fig 13: GOPS vs DSP utilization across tiles.
+use adaptor::analysis::report;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::fig13();
+    println!("{text}");
+    let cases = vec![bench("fig13/regenerate", 2, 50, || {
+        std::hint::black_box(report::fig13());
+    })];
+    run_suite("Fig 13 — DSP vs GOPS", cases);
+}

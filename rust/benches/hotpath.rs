@@ -1,0 +1,105 @@
+//! Hot-path bench: the L3 request path over PJRT — tile dispatch cost,
+//! per-layer cost, attention-mode ablation (split vs fused), tiled vs
+//! fused-layer artifacts, and end-to-end inference.  This is the bench the
+//! §Perf optimization loop iterates against (EXPERIMENTS.md §Perf).
+
+use adaptor::coordinator::{AttentionMode, TileEngine};
+use adaptor::model::{presets, weights, TnnConfig};
+use adaptor::runtime::{default_artifact_dir, Tensor};
+use adaptor::util::benchkit::{bench, header};
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = TileEngine::new(default_artifact_dir())?;
+    let exec_names =
+        ["mm_qkv", "mm_ffn1", "mm_ffn2", "mm_ffn3", "qk_scores", "softmax", "sv", "attn_fused",
+         "bias_add_dk", "bias_add_d", "bias_relu_h", "residual_ln"];
+    engine.executor().warmup(&exec_names)?;
+
+    println!("== hot path ==");
+    println!("{}", header());
+
+    // --- single tile dispatch (the innermost hot operation)
+    {
+        let x = Tensor::zeros(vec![128, 64]);
+        let w = Tensor::zeros(vec![64, 64]);
+        let acc = Tensor::zeros(vec![128, 64]);
+        let e = engine.executor();
+        let r = bench("dispatch/mm_qkv_tile", 20, 500, || {
+            std::hint::black_box(e.run1("mm_qkv", &[&x, &w, &acc]).unwrap());
+        });
+        println!("{}", r.line());
+    }
+    {
+        let x = Tensor::zeros(vec![128, 128]);
+        let w = Tensor::zeros(vec![128, 512]);
+        let acc = Tensor::zeros(vec![128, 512]);
+        let e = engine.executor();
+        let r = bench("dispatch/mm_ffn2_tile", 20, 500, || {
+            std::hint::black_box(e.run1("mm_ffn2", &[&x, &w, &acc]).unwrap());
+        });
+        println!("{}", r.line());
+    }
+    {
+        let q = Tensor::zeros(vec![128, 64]);
+        let m = Tensor::zeros(vec![128, 128]);
+        let s = Tensor::scalar1(0.125);
+        let e = engine.executor();
+        let r = bench("dispatch/attn_fused_head", 20, 500, || {
+            std::hint::black_box(e.run1("attn_fused", &[&q, &q, &q, &m, &s]).unwrap());
+        });
+        println!("{}", r.line());
+    }
+
+    // --- full encoder layer, split vs fused attention (ablation)
+    let cfg = presets::small_encoder(64, 1);
+    let ws = weights::init_stack(1, cfg.d_model, cfg.heads, 1);
+    engine.program(&cfg)?;
+    let prepared = engine.prepare(&cfg, &ws)?;
+    let x = weights::init_input(2, cfg.seq_len, cfg.d_model);
+    for mode in [AttentionMode::Split, AttentionMode::Fused] {
+        engine.mode = mode;
+        let name = format!("layer/small_encoder_{mode:?}");
+        let r = bench(&name, 2, 30, || {
+            std::hint::black_box(engine.run_encoder(&prepared, &x).unwrap());
+        });
+        println!("{}", r.line());
+    }
+
+    // --- tiled engine vs fused per-config artifact (adaptivity tax)
+    {
+        let r = bench("layer/fused_artifact_small", 2, 30, || {
+            std::hint::black_box(engine.run_fused_stack("small_layer", &x, &ws).unwrap());
+        });
+        println!("{}", r.line());
+    }
+
+    // --- end-to-end 4-layer model
+    let cfg4 = presets::small_encoder(64, 4);
+    let ws4 = weights::init_stack(3, cfg4.d_model, cfg4.heads, 4);
+    engine.program(&cfg4)?;
+    let prep4 = engine.prepare(&cfg4, &ws4)?;
+    let x4 = weights::init_input(4, cfg4.seq_len, cfg4.d_model);
+    engine.mode = AttentionMode::Fused;
+    let r = bench("e2e/small_encoder_4layer", 1, 10, || {
+        std::hint::black_box(engine.run_encoder(&prep4, &x4).unwrap());
+    });
+    println!("{}", r.line());
+
+    // --- bigger topology (BERT-ish single layer at runtime maxima)
+    let cfg_b = TnnConfig::encoder(128, 768, 12, 1);
+    let ws_b = weights::init_stack(5, cfg_b.d_model, cfg_b.heads, 1);
+    engine.program(&cfg_b)?;
+    let prep_b = engine.prepare(&cfg_b, &ws_b)?;
+    let x_b = weights::init_input(6, cfg_b.seq_len, cfg_b.d_model);
+    let r = bench("e2e/bert_like_1layer_sl128", 1, 5, || {
+        std::hint::black_box(engine.run_encoder(&prep_b, &x_b).unwrap());
+    });
+    println!("{}", r.line());
+
+    let st = engine.executor().stats();
+    println!(
+        "\ntotals: {} dispatches, {} compiles, {:.2}s inside PJRT execute",
+        st.dispatches, st.compiles, st.execute_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench + regenerator for Table 1: FPGA-accelerator comparison (paper
+//! rows + substrate-measured ADAPTOR rows), plus the end-to-end latency
+//! model evaluation each substrate row depends on.
+use adaptor::accel::{latency, tiling::TileConfig};
+use adaptor::analysis::report;
+use adaptor::model::presets;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::table1();
+    println!("{text}");
+    let t = TileConfig::paper_optimum();
+    let bert = presets::bert_base(64);
+    let shallow = presets::shallow_transformer();
+    let cases = vec![
+        bench("table1/bert_latency_model", 10, 2000, || {
+            std::hint::black_box(latency::model_latency(&bert, &t));
+        }),
+        bench("table1/shallow_latency_model", 10, 2000, || {
+            std::hint::black_box(latency::model_latency(&shallow, &t));
+        }),
+    ];
+    run_suite("Table 1 — comparison inputs", cases);
+}

@@ -1,0 +1,22 @@
+//! Bench + regenerator for Table 2: analytical vs cycle-level simulation,
+//! timing both implementations (the sim is the expensive one).
+use adaptor::accel::{latency, sim, tiling::TileConfig};
+use adaptor::analysis::report;
+use adaptor::model::TnnConfig;
+use adaptor::util::benchkit::{bench, run_suite};
+
+fn main() {
+    let (text, _) = report::table2();
+    println!("{text}");
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let t = TileConfig::paper_optimum();
+    let cases = vec![
+        bench("table2/analytical_model", 10, 2000, || {
+            std::hint::black_box(latency::model_latency(&cfg, &t));
+        }),
+        bench("table2/cycle_simulation", 5, 200, || {
+            std::hint::black_box(sim::simulate(&cfg, &t));
+        }),
+    ];
+    run_suite("Table 2 — model vs simulation cost", cases);
+}

@@ -1,0 +1,86 @@
+//! Post-route clock-frequency model (the mechanism behind Fig 5, Fig 8 and
+//! Table 2's 200 → 135 MHz drop).
+//!
+//! Routed fmax on a near-empty device meets the 200 MHz HLS target; as
+//! utilization climbs, routing congestion stretches nets.  We model fmax as
+//! a piecewise-linear function of the *critical* utilization (the max of
+//! DSP/LUT/BRAM fractions, LUTs slightly discounted because LUT-dense
+//! regions place better than DSP columns), calibrated on the paper's two
+//! anchors:
+//!
+//! * default build: 40 % DSP → 200 MHz (Table 2 rows 1–3)
+//! * large tiles:   70 % DSP → 135 MHz (Table 2 row 4)
+
+use super::platform::Platform;
+use super::resources::ResourceEstimate;
+
+/// Utilization knee below which the target clock closes.
+pub const UTIL_KNEE: f64 = 0.45;
+/// MHz lost per unit utilization beyond the knee (calibrated on Table 2's
+/// large-tile row: post-synthesis 5532 DSPs = 61.3% on the U55C at 135 MHz
+/// → (200−135)/(0.613−0.45) ≈ 398).
+pub const SLOPE_MHZ_PER_UTIL: f64 = 398.0;
+/// Routing collapses near full; clamp.
+pub const FMAX_FLOOR_MHZ: f64 = 60.0;
+
+/// Critical congestion driver.
+pub fn critical_utilization(r: &ResourceEstimate) -> f64 {
+    r.dsp_util.max(0.9 * r.lut_util).max(0.75 * r.bram_util)
+}
+
+/// Routed fmax for the estimate on `platform`.
+pub fn fmax_mhz(platform: &Platform, r: &ResourceEstimate) -> f64 {
+    let u = critical_utilization(r);
+    let target = platform.target_freq_mhz;
+    if u <= UTIL_KNEE {
+        target
+    } else {
+        (target - SLOPE_MHZ_PER_UTIL * (u - UTIL_KNEE)).max(FMAX_FLOOR_MHZ)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{platform, resources, tiling::TileConfig};
+    use crate::model::quant::BitWidth;
+    use crate::model::TnnConfig;
+
+    fn est(ts_mha: usize, ts_ffn: usize) -> ResourceEstimate {
+        let cfg = TnnConfig::encoder(64, 768, 8, 12);
+        resources::estimate(&cfg, &TileConfig::new(ts_mha, ts_ffn), BitWidth::Fixed16, &platform::u55c())
+    }
+
+    #[test]
+    fn default_build_hits_target_clock() {
+        let f = fmax_mhz(&platform::u55c(), &est(64, 128));
+        assert_eq!(f, 200.0);
+    }
+
+    #[test]
+    fn large_tiles_drop_to_135mhz_anchor() {
+        // Table 2 row 4: TS=(128,192) → 135 MHz.
+        let f = fmax_mhz(&platform::u55c(), &est(128, 192));
+        assert!((f - 135.0).abs() < 12.0, "f = {f}");
+    }
+
+    #[test]
+    fn monotone_nonincreasing_in_utilization() {
+        let mut last = f64::INFINITY;
+        for ts in [32, 64, 96, 128, 192, 256] {
+            let f = fmax_mhz(&platform::u55c(), &est(ts, 2 * ts));
+            assert!(f <= last + 1e-9, "fmax must not rise with tile size");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn floor_is_respected() {
+        // absurd synthesis: giant tiles on a small device
+        let cfg = TnnConfig::encoder(64, 768, 16, 12);
+        let z = platform::zcu102();
+        let r = resources::estimate(&cfg, &TileConfig::new(384, 768), BitWidth::Fixed16, &z);
+        let f = fmax_mhz(&z, &r);
+        assert!(f >= FMAX_FLOOR_MHZ);
+    }
+}

@@ -1,0 +1,176 @@
+//! Attention-module latency (paper §5.2, Eqs 11–19).
+//!
+//! Heads run in parallel (one QKV/QK/SV module set per head, Fig 2), so all
+//! per-head quantities below are wall-clock for the whole MHA block.
+
+use super::depths::*;
+use super::{pll, total, ModuleCycles};
+use crate::accel::tiling::TileConfig;
+use crate::model::TnnConfig;
+
+/// Eq 11 — one-time load of all inputs into the input BRAM:
+/// `LI = [(d_model − 1)·1 + PD_L] · SL`.
+pub fn load_inputs(cfg: &TnnConfig) -> u64 {
+    total(pll(PD_L, 1, cfg.d_model as u64), cfg.seq_len as u64)
+}
+
+/// Eq 14 — per-tile load of the head's input panel:
+/// `LIA = [(d/T_mha − 1)·1 + PD_L] · SL`.
+pub fn load_inputs_head_tile(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let width = (cfg.d_model / tiles.tiles_mha(cfg.d_model)).max(1) as u64;
+    total(pll(PD_L, 1, width), cfg.seq_len as u64)
+}
+
+/// Eq 13 — per-tile load of the head's weight panels:
+/// `LWA = [(d/h − 1)·1 + PD_L] · TS_mha` (trailing factor read as the tile
+/// width; see module docs — this is the only reading consistent with LWA
+/// being SL-independent across Table 2 rows 1–2).
+pub fn load_weights_head_tile(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    total(pll(PD_L, 1, cfg.dk() as u64), tiles.ts_mha as u64)
+}
+
+/// Eq 12 — bias load for one head: `LBA = (d/h − 1)·1 + PD_L`.
+pub fn load_biases_head(cfg: &TnnConfig) -> u64 {
+    pll(PD_L, 1, cfg.dk() as u64)
+}
+
+/// Eq 15 — QKV compute for ONE tile visit:
+/// `SA = [(d/h − 1)·1 + PD_MHA] · SL` with `PD_MHA = TS_mha + 3`
+/// (the unrolled accumulation chain across the tile width).
+pub fn qkv_tile(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let pd_mha = tiles.ts_mha as u64 + PD_MHA_EXTRA;
+    total(pll(pd_mha, 1, cfg.dk() as u64), cfg.seq_len as u64)
+}
+
+/// Eq 16 — bias add on Q/K/V: `BA = [(d/h − 1)·1 + PD_BA] · SL`.
+pub fn bias_add(cfg: &TnnConfig) -> u64 {
+    total(pll(PD_BA, 1, cfg.dk() as u64), cfg.seq_len as u64)
+}
+
+/// Eq 17 — score: `S = [(SL − 1)·1 + PD_S] · SL`, `PD_S = d/h`.
+pub fn score(cfg: &TnnConfig) -> u64 {
+    total(pll(cfg.dk() as u64, 1, cfg.seq_len as u64), cfg.seq_len as u64)
+}
+
+/// Eq 19 — softmax: three SL×SL passes (max, exp+sum, normalize) with the
+/// §5.2 exponentiation (4 cc) and division (14 cc) depths.
+pub fn softmax(cfg: &TnnConfig) -> u64 {
+    let sl = cfg.seq_len as u64;
+    let max_pass = total(pll(LOAD + STORE, 1, sl), sl);
+    let exp_pass = total(pll(EXP + LOAD + STORE, 1, sl), sl);
+    let div_pass = total(pll(DIV + LOAD + STORE, 1, sl), sl);
+    max_pass + exp_pass + div_pass
+}
+
+/// Eq 18 — SV: `SV = [(d/h − 1)·1 + PD_SV] · SL`, `PD_SV = SL`.
+pub fn sv(cfg: &TnnConfig) -> u64 {
+    total(pll(cfg.seq_len as u64, 1, cfg.dk() as u64), cfg.seq_len as u64)
+}
+
+/// Aggregated attention block cycles.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AttentionCycles {
+    pub qkv: ModuleCycles,
+    pub bias: u64,
+    pub score: u64,
+    pub softmax: u64,
+    pub sv: u64,
+}
+
+impl AttentionCycles {
+    pub fn occupied(&self) -> u64 {
+        self.qkv.occupied() + self.bias + self.score + self.softmax + self.sv
+    }
+}
+
+/// Whole MHA block for one layer: QKV iterates over the tile schedule with
+/// per-tile load/compute overlap (double-buffered, §3.6.1: biases stream
+/// while the PEs compute); score→softmax→SV chain follows.
+pub fn cycles(cfg: &TnnConfig, tiles: &TileConfig) -> AttentionCycles {
+    let visits = tiles.mha_tile_visits(cfg) as u64;
+    let per_tile_load = load_inputs_head_tile(cfg, tiles) + load_weights_head_tile(cfg, tiles);
+    let per_tile_compute = qkv_tile(cfg, tiles);
+    // Double-buffered pipeline: first load exposed, last compute exposed,
+    // steady state runs at max(load, compute) per visit.
+    let qkv = ModuleCycles {
+        load: per_tile_load * visits,
+        compute: per_tile_load
+            + per_tile_compute
+            + per_tile_compute.max(per_tile_load) * visits.saturating_sub(1),
+    };
+    AttentionCycles {
+        qkv,
+        bias: bias_add(cfg),
+        score: score(cfg),
+        softmax: softmax(cfg),
+        sv: sv(cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2 rows (SL, d_model, h, TS_MHA, TS_FFN, freq, SA_ms, LWA_ms).
+    const TABLE2: &[(usize, usize, usize, usize, usize, f64, f64, f64)] = &[
+        (64, 768, 8, 64, 128, 200.0, 0.052, 0.037),
+        (128, 768, 8, 64, 128, 200.0, 0.103, 0.037),
+        (64, 512, 8, 64, 128, 200.0, 0.042, 0.025),
+        (64, 768, 8, 128, 192, 135.0, 0.11, 0.10),
+    ];
+
+    fn ms(cc: u64, f: f64) -> f64 {
+        cc as f64 / (f * 1e3)
+    }
+
+    #[test]
+    fn sa_matches_table2_within_5pct() {
+        for &(sl, d, h, tm, tf, f, sa_ms, _) in TABLE2 {
+            let cfg = TnnConfig::encoder(sl, d, h, 12);
+            let t = TileConfig::new(tm, tf);
+            let got = ms(qkv_tile(&cfg, &t), f);
+            let err = (got - sa_ms).abs() / sa_ms;
+            assert!(err < 0.05, "SA {got:.4} vs {sa_ms} (sl={sl} d={d} ts={tm}) err={err:.3}");
+        }
+    }
+
+    #[test]
+    fn lwa_matches_table2_within_6pct() {
+        for &(sl, d, h, tm, tf, f, _, lwa_ms) in TABLE2 {
+            let cfg = TnnConfig::encoder(sl, d, h, 12);
+            let t = TileConfig::new(tm, tf);
+            let got = ms(load_weights_head_tile(&cfg, &t), f);
+            let err = (got - lwa_ms).abs() / lwa_ms;
+            assert!(err < 0.06, "LWA {got:.4} vs {lwa_ms} (sl={sl} d={d}) err={err:.3}");
+        }
+    }
+
+    #[test]
+    fn softmax_includes_exp_and_div_depths() {
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        let sm = softmax(&cfg);
+        // three passes, each ≥ SL² cycles
+        assert!(sm >= 3 * 64 * 64);
+        assert!(sm < 4 * 64 * 64 + 3 * 64 * 20);
+    }
+
+    #[test]
+    fn score_and_sv_scale_quadratically_with_sl() {
+        let t = TileConfig::paper_optimum();
+        let _ = t;
+        let c64 = TnnConfig::encoder(64, 768, 8, 1);
+        let c128 = TnnConfig::encoder(128, 768, 8, 1);
+        assert!(score(&c128) as f64 > 2.5 * score(&c64) as f64);
+        assert!(sv(&c128) > 2 * sv(&c64)); // (dk-major outer) superlinear
+    }
+
+    #[test]
+    fn qkv_load_hidden_behind_compute_when_compute_bound() {
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        let t = TileConfig::paper_optimum();
+        let a = cycles(&cfg, &t);
+        // compute per tile (10.4k cc) exceeds load per tile (~8.1k cc), so
+        // occupied ≈ first-load + visits·compute.
+        assert!(a.qkv.occupied() < a.qkv.load + a.qkv.compute);
+    }
+}

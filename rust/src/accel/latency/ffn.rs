@@ -1,0 +1,170 @@
+//! Feed-forward-network latency (paper §5.3, §5.6, §5.7; Eqs 20–24, 30–39).
+//!
+//! FFN weight panels are 2-D tiled (Fig 4b): FFN1 runs `(d/TS)²` visits,
+//! FFN2/FFN3 `(hidden/d)·(d/TS)²` visits (§3.9).  Within a visit the
+//! pipelined middle loop runs at `II_FFN = 2` (weight-panel port conflict —
+//! the calibration that reproduces Table 2's FFN1 column, see latency/mod).
+
+use super::depths::*;
+use super::{pll, total, ModuleCycles};
+use crate::accel::tiling::TileConfig;
+use crate::model::TnnConfig;
+
+/// Eq 20 — FFN1 input-panel load per visit.
+pub fn load_inputs_ffn1(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let w = (cfg.d_model / tiles.tiles_ffn(cfg.d_model)).max(1) as u64;
+    total(pll(PD_L, 1, w), cfg.seq_len as u64)
+}
+
+/// Eq 21 — FFN1 weight-panel load per visit:
+/// `[(d/T_ffn − 1) + PD_L] · d/T_ffn`.
+pub fn load_weights_ffn1(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let w = (cfg.d_model / tiles.tiles_ffn(cfg.d_model)).max(1) as u64;
+    total(pll(PD_L, 1, w), w)
+}
+
+/// Eq 22/32/37 — bias loads: `(d − 1) + PD_L` (hidden-width for FFN2).
+pub fn load_biases(width: usize) -> u64 {
+    pll(PD_L, 1, width as u64)
+}
+
+/// Eq 24 — FFN1 compute per visit:
+/// `[(d/T_ffn − 1)·II_FFN + PD_FFN] · SL`.
+pub fn ffn1_visit(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let w = (cfg.d_model / tiles.tiles_ffn(cfg.d_model)).max(1) as u64;
+    total(pll(PD_FFN, II_FFN, w), cfg.seq_len as u64)
+}
+
+/// Eq 33 — FFN2 compute per visit: output width `hidden/T_ffn`.
+pub fn ffn2_visit(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let w = (cfg.hidden / tiles.tiles_ffn(cfg.d_model)).max(1) as u64;
+    total(pll(PD_FFN, II_FFN, w), cfg.seq_len as u64)
+}
+
+/// Eq 38/Alg 10 — FFN3 compute per visit: output width `d/T_ffn`, reduction
+/// across `hidden/T_ffn` handled by the unrolled inner loop.
+pub fn ffn3_visit(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let w = (cfg.d_model / tiles.tiles_ffn(cfg.d_model)).max(1) as u64;
+    total(pll(PD_FFN, II_FFN, w), cfg.seq_len as u64)
+}
+
+/// Eq 30/35 — FFN2/FFN3 input loads per visit.
+pub fn load_inputs_ffn23(cfg: &TnnConfig, tiles: &TileConfig, hidden_side: bool) -> u64 {
+    let dim = if hidden_side { cfg.hidden } else { cfg.d_model };
+    let w = (dim / tiles.tiles_ffn(cfg.d_model)).max(1) as u64;
+    total(pll(PD_L, 1, w), cfg.seq_len as u64)
+}
+
+/// Eq 31/36 — FFN2/FFN3 weight-panel loads per visit (panel is
+/// `d/T × hidden/T` elements, streamed at 1/cc).
+pub fn load_weights_ffn23(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    let t = tiles.tiles_ffn(cfg.d_model) as u64;
+    let rows = (cfg.d_model as u64 / t).max(1);
+    let cols = (cfg.hidden as u64 / t).max(1);
+    total(pll(PD_L, 1, cols), rows)
+}
+
+/// Eq 23/34/39 — bias add over the output row: `[(w − 1) + PD_BA]·SL`.
+pub fn bias_add(cfg: &TnnConfig, width: usize) -> u64 {
+    total(pll(PD_BA, 1, width as u64), cfg.seq_len as u64)
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FfnCycles {
+    pub ffn1: ModuleCycles,
+    pub bias_ffn1: u64,
+    pub ffn2: ModuleCycles,
+    pub bias_ffn2: u64,
+    pub ffn3: ModuleCycles,
+    pub bias_ffn3: u64,
+}
+
+/// Whole FFN chain for one layer, visits iterated with double-buffered
+/// load/compute overlap per module (first load exposed, rest hidden under
+/// `max(load, compute)`).
+pub fn cycles(cfg: &TnnConfig, tiles: &TileConfig) -> FfnCycles {
+    let v1 = tiles.ffn1_visits(cfg) as u64;
+    let v23 = tiles.ffn23_visits(cfg) as u64;
+
+    // Same double-buffered composition as the attention block: first load
+    // and last compute exposed, steady state at max(load, compute)/visit.
+    let pipe = |l: u64, c: u64, v: u64| ModuleCycles {
+        load: l * v,
+        compute: l + c + c.max(l) * v.saturating_sub(1),
+    };
+    let l1 = load_inputs_ffn1(cfg, tiles) + load_weights_ffn1(cfg, tiles);
+    let ffn1 = pipe(l1, ffn1_visit(cfg, tiles), v1);
+
+    let l2 = load_inputs_ffn23(cfg, tiles, false) + load_weights_ffn23(cfg, tiles);
+    let ffn2 = pipe(l2, ffn2_visit(cfg, tiles), v23);
+
+    let l3 = load_inputs_ffn23(cfg, tiles, true) + load_weights_ffn23(cfg, tiles);
+    let ffn3 = pipe(l3, ffn3_visit(cfg, tiles), v23);
+
+    FfnCycles {
+        ffn1,
+        bias_ffn1: bias_add(cfg, cfg.d_model),
+        ffn2,
+        bias_ffn2: bias_add(cfg, cfg.hidden),
+        ffn3,
+        bias_ffn3: bias_add(cfg, cfg.d_model),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2 FFN1 column: (SL, d, TS_FFN via (TS_MHA,TS_FFN), freq, ms).
+    const TABLE2_FFN1: &[(usize, usize, usize, usize, f64, f64)] = &[
+        (64, 768, 64, 128, 200.0, 0.082),
+        (128, 768, 64, 128, 200.0, 0.165),
+        (64, 512, 64, 128, 200.0, 0.055),
+        (64, 768, 128, 192, 135.0, 0.18),
+    ];
+
+    #[test]
+    fn ffn1_visit_matches_table2_within_6pct() {
+        for &(sl, d, tm, tf, f, want) in TABLE2_FFN1 {
+            let cfg = TnnConfig::encoder(sl, d, 8, 12);
+            // the fabric is synthesized for d=768 maxima in every Table 2 row
+            let t = TileConfig::for_fabric(tm, tf, 768);
+            let got = ffn1_visit(&cfg, &t) as f64 / (f * 1e3);
+            let err = (got - want).abs() / want;
+            assert!(err < 0.06, "FFN {got:.4} vs {want} (sl={sl} d={d}) err={err:.2}");
+        }
+    }
+
+    #[test]
+    fn visit_counts_multiply_total() {
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        let t = TileConfig::paper_optimum();
+        let f = cycles(&cfg, &t);
+        // FFN2 moves 4·d² weights at ~1/cc minimum
+        let w2 = 4 * 768 * 768;
+        assert!(f.ffn2.load as f64 > 0.9 * w2 as f64, "{} vs {}", f.ffn2.load, w2);
+    }
+
+    #[test]
+    fn ffn_is_load_bound_for_bert() {
+        // the paper's BERT GOPS (≈40) implies weight streaming dominates.
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        let t = TileConfig::paper_optimum();
+        let f = cycles(&cfg, &t);
+        assert!(f.ffn2.load >= f.ffn2.compute / 2);
+    }
+
+    #[test]
+    fn bigger_ffn_tiles_reduce_fill_overhead() {
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        let small = cycles(&cfg, &TileConfig::new(64, 96));
+        let big = cycles(&cfg, &TileConfig::new(64, 384));
+        assert!(big.ffn2.occupied() < small.ffn2.occupied());
+    }
+
+    #[test]
+    fn bias_widths() {
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        assert!(bias_add(&cfg, cfg.hidden) > bias_add(&cfg, cfg.d_model));
+    }
+}

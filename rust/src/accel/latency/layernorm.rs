@@ -1,0 +1,67 @@
+//! LayerNorm-unit latency (paper §5.5, Eqs 26–29).
+//!
+//! Four row passes (mean, variance, normalize, affine) plus the residual
+//! connection (Eq 28), each a pipelined loop over `d_model` per row.
+
+use super::depths::*;
+use super::{pll, total};
+use crate::model::TnnConfig;
+
+/// Eq 26/27 — LN weight/bias loads (not tiled, loaded once).
+pub fn load_weights(cfg: &TnnConfig) -> u64 {
+    pll(PD_L, 1, cfg.d_model as u64)
+}
+
+/// Eq 28 — residual connection: `RC = [(d − 1) + PD_BA] · SL`.
+pub fn residual(cfg: &TnnConfig) -> u64 {
+    total(pll(PD_BA, 1, cfg.d_model as u64), cfg.seq_len as u64)
+}
+
+/// Eq 29 — the four LN passes.  Mean and variance passes carry II = 2
+/// (accumulation dependency), normalize includes the divide and
+/// float→fixed conversion (§5.5: 3 cc), affine is load+mul+add+store.
+pub fn layer_norm(cfg: &TnnConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    let sl = cfg.seq_len as u64;
+    let mean = total(pll(LOAD + 1 + STORE, 2, d), sl);
+    let variance = total(pll(LOAD + 2 + STORE, 2, d), sl);
+    let normalize = total(pll(LOAD + 1 + 1 + STORE + DIV + 3, 1, d), sl);
+    let affine = total(pll(LOAD + 2 + 1 + STORE, 1, d), sl);
+    mean + variance + normalize + affine
+}
+
+/// Full LN-unit occupancy for one use (residual + 4 passes; weight loads
+/// hidden behind the preceding module's compute, §5.5).
+pub fn cycles(cfg: &TnnConfig) -> u64 {
+    residual(cfg) + layer_norm(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_scales_linearly_with_rows_and_width() {
+        let base = cycles(&TnnConfig::encoder(64, 768, 8, 1));
+        let wide = cycles(&TnnConfig::encoder(64, 1536, 8, 1));
+        let tall = cycles(&TnnConfig::encoder(128, 768, 8, 1));
+        assert!((wide as f64 / base as f64 - 2.0).abs() < 0.05);
+        assert!((tall as f64 / base as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn mean_var_passes_dominate() {
+        // II=2 on the two accumulation passes makes them ≥ half the unit.
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        let d = 768u64;
+        let sl = 64u64;
+        let mean_var = ((2 * (d - 1) + 3) + (2 * (d - 1) + 4)) * sl;
+        assert!(mean_var > layer_norm(&cfg) / 2);
+    }
+
+    #[test]
+    fn weight_load_is_one_shot() {
+        let cfg = TnnConfig::encoder(64, 768, 8, 1);
+        assert!(load_weights(&cfg) < residual(&cfg));
+    }
+}

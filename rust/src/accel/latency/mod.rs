@@ -1,0 +1,256 @@
+//! The paper's analytical latency model (§5, Eqs 9–39).
+//!
+//! Everything is built from the two generalized HLS timing laws:
+//!
+//! * Eq 9:  `PLL = PD + II·(TC − 1)`  (pipelined-loop latency)
+//! * Eq 10: `TL  = PLL · outer_trip_count`
+//!
+//! Pipeline-depth constants are taken from §5.2 where stated (AXI setup
+//! 7 cc, addr 1, load 1, store 1, float→fixed 3, exp 4, div 14) and
+//! calibrated against Table 2 where the paper leaves them implicit; the
+//! calibration (documented per constant below) reproduces every latency
+//! cell of Table 2 within ~4 %:
+//!
+//! * `PD_MHA = TS_MHA + 3` — the unrolled tile-width accumulation chain
+//!   (nails SA = 0.052/0.103/0.042/0.11 ms across all four rows);
+//! * `II_FFN = 2` — dual-port BRAM conflict on the FFN weight panel
+//!   (nails FFN1 = 0.082/0.165/0.055/0.18 ms);
+//! * `PD_L = 16` — §5.2's 13 cc plus 3 AXI beats
+//!   (nails LWA = 0.037/0.037/0.025/0.1 ms, with the trailing `×SL` of
+//!   Eq 13 read as `×TS_MHA`, the only reading consistent with LWA being
+//!   independent of SL in Table 2 rows 1–2).
+
+pub mod attention;
+pub mod ffn;
+pub mod layernorm;
+
+use super::tiling::TileConfig;
+use crate::model::TnnConfig;
+
+/// §5.2 and calibrated pipeline-depth constants.
+pub mod depths {
+    /// Load-unit pipeline depth (AXI setup 7 + addr 1 + load 1 + store 1 +
+    /// float→fixed 3 = 13 per §5.2, +3 AXI beats calibrated on Table 2).
+    pub const PD_L: u64 = 16;
+    /// Bias-add pipeline: load + add + store.
+    pub const PD_BA: u64 = 3;
+    /// MHA MAC chain beyond the tile width (load + 2·mul + add + store−2).
+    pub const PD_MHA_EXTRA: u64 = 3;
+    /// FFN initiation interval (weight-panel port conflict).
+    pub const II_FFN: u64 = 2;
+    /// FFN pipeline depth.
+    pub const PD_FFN: u64 = 2;
+    /// Softmax exponential (§5.2: 4 cc).
+    pub const EXP: u64 = 4;
+    /// Softmax divide (§5.2: 14 cc).
+    pub const DIV: u64 = 14;
+    /// Generic load/store within a module.
+    pub const LOAD: u64 = 1;
+    pub const STORE: u64 = 1;
+}
+
+/// Eq 9: pipelined-loop latency.
+#[inline]
+pub fn pll(pipeline_depth: u64, ii: u64, trip_count: u64) -> u64 {
+    pipeline_depth + ii * trip_count.saturating_sub(1)
+}
+
+/// Eq 10: nested total.
+#[inline]
+pub fn total(pll_cycles: u64, outer_trip_count: u64) -> u64 {
+    pll_cycles * outer_trip_count
+}
+
+/// A module's load and compute cycle counts; ADAPTOR overlaps loading with
+/// computation (§6: "data loading time is overlapped with computation"),
+/// so the occupied time is the max.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModuleCycles {
+    pub load: u64,
+    pub compute: u64,
+}
+
+impl ModuleCycles {
+    pub fn occupied(&self) -> u64 {
+        self.load.max(self.compute)
+    }
+}
+
+/// Cycle breakdown for one encoder layer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCycles {
+    /// QKV_PM across all tiles (per head, heads in parallel), load+compute.
+    pub qkv: ModuleCycles,
+    /// Bias add on Q, K, V (Eq 16).
+    pub bias_qkv: u64,
+    /// QK_PM score (Eq 17).
+    pub score: u64,
+    /// Softmax (Eq 19).
+    pub softmax: u64,
+    /// SV_PM (Eq 18).
+    pub sv: u64,
+    /// FFN1 across its (d/TS)² visits.
+    pub ffn1: ModuleCycles,
+    pub bias_ffn1: u64,
+    /// First LayerNorm (incl. residual, Eq 29 + 28).
+    pub ln1: u64,
+    /// FFN2 across its visits.
+    pub ffn2: ModuleCycles,
+    pub bias_ffn2: u64,
+    /// FFN3 across its visits.
+    pub ffn3: ModuleCycles,
+    pub bias_ffn3: u64,
+    pub ln2: u64,
+}
+
+impl LayerCycles {
+    /// Total occupied cycles for the layer, module chain serialized,
+    /// loads overlapped within each module.
+    pub fn total(&self) -> u64 {
+        self.qkv.occupied()
+            + self.bias_qkv
+            + self.score
+            + self.softmax
+            + self.sv
+            + self.ffn1.occupied()
+            + self.bias_ffn1
+            + self.ln1
+            + self.ffn2.occupied()
+            + self.bias_ffn2
+            + self.ffn3.occupied()
+            + self.bias_ffn3
+            + self.ln2
+    }
+
+    /// Attention sub-total (MHA fraction of §1: 38–64 %).
+    pub fn attention(&self) -> u64 {
+        self.qkv.occupied() + self.bias_qkv + self.score + self.softmax + self.sv
+    }
+}
+
+/// Full-model latency summary.
+#[derive(Debug, Clone)]
+pub struct ModelLatency {
+    /// One-time input load (Eq 11; the input BRAM is reused between layers).
+    pub load_inputs: u64,
+    pub per_layer: LayerCycles,
+    pub layers: usize,
+    pub total_cycles: u64,
+}
+
+impl ModelLatency {
+    pub fn ms_at(&self, freq_mhz: f64) -> f64 {
+        self.total_cycles as f64 / (freq_mhz * 1e3)
+    }
+
+    pub fn gops_at(&self, cfg: &TnnConfig, freq_mhz: f64) -> f64 {
+        let ops = crate::model::ops::total_ops(cfg) as f64;
+        ops / (self.total_cycles as f64 / (freq_mhz * 1e6)) / 1e9
+    }
+}
+
+/// Analytical latency for a full forward pass of `cfg` on the fabric
+/// `tiles` (decoder layers charged as 1.6× an encoder layer: the extra
+/// cross-attention block).
+pub fn model_latency(cfg: &TnnConfig, tiles: &TileConfig) -> ModelLatency {
+    let per_layer = layer_cycles(cfg, tiles);
+    let li = attention::load_inputs(cfg);
+    let enc = per_layer.total() * cfg.enc_layers as u64;
+    let dec = (per_layer.total() as f64 * 1.6) as u64 * cfg.dec_layers as u64;
+    ModelLatency {
+        load_inputs: li,
+        per_layer,
+        layers: cfg.layers(),
+        total_cycles: li + enc + dec,
+    }
+}
+
+/// Cycle breakdown for one encoder layer.
+pub fn layer_cycles(cfg: &TnnConfig, tiles: &TileConfig) -> LayerCycles {
+    let a = attention::cycles(cfg, tiles);
+    let f = ffn::cycles(cfg, tiles);
+    let ln = layernorm::cycles(cfg);
+    LayerCycles {
+        qkv: a.qkv,
+        bias_qkv: a.bias,
+        score: a.score,
+        softmax: a.softmax,
+        sv: a.sv,
+        ffn1: f.ffn1,
+        bias_ffn1: f.bias_ffn1,
+        ln1: ln,
+        ffn2: f.ffn2,
+        bias_ffn2: f.bias_ffn2,
+        ffn3: f.ffn3,
+        bias_ffn3: f.bias_ffn3,
+        ln2: ln,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    #[test]
+    fn pll_matches_eq9() {
+        assert_eq!(pll(5, 1, 10), 14);
+        assert_eq!(pll(3, 2, 1), 3);
+        assert_eq!(pll(7, 1, 0), 7); // degenerate trip count saturates
+    }
+
+    #[test]
+    fn layer_total_is_sum_of_parts() {
+        let cfg = presets::paper_default();
+        let t = TileConfig::paper_optimum();
+        let l = layer_cycles(&cfg, &t);
+        assert!(l.total() >= l.attention());
+        assert!(l.total() > 0);
+    }
+
+    #[test]
+    fn model_scales_with_layers() {
+        let t = TileConfig::paper_optimum();
+        let c1 = TnnConfig::encoder(64, 768, 8, 1);
+        let c12 = TnnConfig::encoder(64, 768, 8, 12);
+        let m1 = model_latency(&c1, &t);
+        let m12 = model_latency(&c12, &t);
+        let per1 = m1.total_cycles - m1.load_inputs;
+        let per12 = m12.total_cycles - m12.load_inputs;
+        assert_eq!(per12, 12 * per1);
+    }
+
+    #[test]
+    fn decoder_layers_cost_more() {
+        let t = TileConfig::paper_optimum();
+        let enc = model_latency(&TnnConfig::encoder(64, 512, 8, 2), &t);
+        let mut cfg = TnnConfig::encoder(64, 512, 8, 0);
+        cfg.dec_layers = 2;
+        let dec = model_latency(&cfg, &t);
+        assert!(dec.total_cycles > enc.total_cycles);
+    }
+
+    #[test]
+    fn bert_gops_in_paper_ballpark() {
+        // Table 1 Network #3: ADAPTOR reaches 40 GOPS on BERT @ 200 MHz.
+        let cfg = presets::bert_base(64);
+        let t = TileConfig::paper_optimum();
+        let m = model_latency(&cfg, &t);
+        let gops = m.gops_at(&cfg, 200.0);
+        assert!(gops > 15.0 && gops < 60.0, "gops = {gops}");
+    }
+
+    #[test]
+    fn attention_fraction_grows_with_sequence_length() {
+        // §1: the MHA share grows with token count (38–64% on the paper's
+        // compute-bound testbed; lower here because this fabric is
+        // weight-stream-bound — see EXPERIMENTS.md §Deviations).
+        let t = TileConfig::paper_optimum();
+        let frac = |sl: usize| {
+            let l = layer_cycles(&presets::bert_base(sl), &t);
+            l.attention() as f64 / l.total() as f64
+        };
+        assert!(frac(512) > 2.0 * frac(64), "{} vs {}", frac(512), frac(64));
+        assert!(frac(512) < 0.75);
+    }
+}

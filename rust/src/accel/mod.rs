@@ -1,0 +1,83 @@
+//! The FPGA fabric substitute — every hardware element the paper's
+//! evaluation ran on, rebuilt as a faithful software substrate
+//! (DESIGN.md §Substitutions).
+//!
+//! * [`platform`] — Alveo U55C / VC707 / ZCU102 resource databases.
+//! * [`tiling`] — the paper's tiling geometry (Fig 4a/4b, §3.9–3.10).
+//! * [`resources`] — analytical DSP (Eq 8), BRAM (Eq 25) and LUT models.
+//! * [`frequency`] — post-route clock vs utilization (Fig 5/8 mechanism).
+//! * [`power`] — Vivado-style static+dynamic power estimation (Fig 10).
+//! * [`latency`] — the paper's closed-form latency model (Eqs 9–39).
+//! * [`sim`] — independent cycle-level simulator (Table 2 "experimental").
+//! * [`registers`] — the AXI-Lite runtime configuration register file.
+//! * [`roofline`] — compute/memory bounds and attained performance (Fig 12).
+
+pub mod frequency;
+pub mod latency;
+pub mod platform;
+pub mod power;
+pub mod registers;
+pub mod resources;
+pub mod roofline;
+pub mod sim;
+pub mod tiling;
+
+use crate::model::TnnConfig;
+use platform::Platform;
+use tiling::TileConfig;
+
+/// A "synthesis" of ADAPTOR: one platform + one tile configuration +
+/// datapath width, fixed for the lifetime of the fabric (§3.10: "the tile
+/// size must be set before synthesis").  Everything else is runtime.
+#[derive(Debug, Clone)]
+pub struct Synthesis {
+    pub platform: Platform,
+    pub tiles: TileConfig,
+    pub bit_width: crate::model::quant::BitWidth,
+    /// Maximum topology the BRAM buffers were sized for.
+    pub max_config: TnnConfig,
+}
+
+impl Synthesis {
+    /// The paper's default build (§6): U55C, TS_MHA=64, TS_FFN=128,
+    /// fixed-point 16, BERT-base maxima.
+    pub fn paper_default() -> Self {
+        Synthesis {
+            platform: platform::u55c(),
+            tiles: TileConfig::paper_optimum(),
+            bit_width: crate::model::quant::PAPER_DEFAULT,
+            max_config: crate::model::presets::bert_base(64),
+        }
+    }
+
+    /// Resource estimate for running `cfg` on this synthesis.
+    pub fn resources(&self, cfg: &TnnConfig) -> resources::ResourceEstimate {
+        resources::estimate(cfg, &self.tiles, self.bit_width, &self.platform)
+    }
+
+    /// Post-route frequency for `cfg` on this synthesis.
+    pub fn frequency_mhz(&self, cfg: &TnnConfig) -> f64 {
+        let r = self.resources(cfg);
+        frequency::fmax_mhz(&self.platform, &r)
+    }
+
+    /// Feasibility: does the synthesized fabric fit the device?
+    pub fn check_fit(&self, cfg: &TnnConfig) -> std::result::Result<(), String> {
+        let r = self.resources(cfg);
+        r.check_fit(&self.platform)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_fits_u55c() {
+        let s = Synthesis::paper_default();
+        let cfg = crate::model::presets::paper_default();
+        assert!(s.check_fit(&cfg).is_ok());
+        let f = s.frequency_mhz(&cfg);
+        assert!(f > 100.0 && f <= 300.0, "{f}");
+    }
+}

@@ -1,0 +1,173 @@
+//! FPGA platform resource databases — the three boards the paper deploys
+//! on (§4) plus a generic constructor for portability studies (Fig 11).
+//!
+//! Numbers are the vendor datasheet totals the paper's utilization
+//! percentages are computed against (e.g. Table 1: ADAPTOR 3612 DSPs = 40%
+//! of the U55C's 9024).
+
+/// Off-chip memory system attached to the accelerator's AXI masters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemorySystem {
+    /// HBM2 stacks (Alveo U55C: 16 GB, 32 pseudo-channels).
+    Hbm2 { bandwidth_gbps: f64, channels: usize },
+    /// DDR3/DDR4 DIMMs (VC707, ZCU102).
+    Ddr { bandwidth_gbps: f64, channels: usize },
+}
+
+impl MemorySystem {
+    /// Aggregate peak bandwidth in bytes/second.
+    pub fn peak_bytes_per_sec(&self) -> f64 {
+        match self {
+            MemorySystem::Hbm2 { bandwidth_gbps, .. }
+            | MemorySystem::Ddr { bandwidth_gbps, .. } => bandwidth_gbps * 1e9,
+        }
+    }
+
+    /// Bandwidth a single AXI master port can sustain (the accelerator's
+    /// loaders each own one port; §4).
+    pub fn per_port_bytes_per_sec(&self) -> f64 {
+        match self {
+            MemorySystem::Hbm2 { bandwidth_gbps, channels } => bandwidth_gbps * 1e9 / *channels as f64,
+            MemorySystem::Ddr { bandwidth_gbps, .. } => bandwidth_gbps * 1e9,
+        }
+    }
+}
+
+/// One FPGA device + board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    pub name: String,
+    pub part: String,
+    /// DSP48/DSP58 slice count.
+    pub dsp_total: u64,
+    /// Logic LUTs.
+    pub lut_total: u64,
+    /// Flip-flops.
+    pub ff_total: u64,
+    /// BRAM in 18 Kb units (the paper's Table 2 counts BRAM18k).
+    pub bram18k_total: u64,
+    /// UltraRAM blocks (0 on 7-series).
+    pub uram_total: u64,
+    /// Fraction of LUTs usable as distributed LUTRAM (SLICEM share).
+    pub lutram_fraction: f64,
+    pub memory: MemorySystem,
+    /// Target clock the HLS design is synthesized against (paper: 200 MHz).
+    pub target_freq_mhz: f64,
+    /// Static (device idle) power in watts, for the power model.
+    pub static_power_w: f64,
+}
+
+impl Platform {
+    /// BRAM capacity in bytes (18 Kb blocks).
+    pub fn bram_bytes(&self) -> u64 {
+        self.bram18k_total * 18 * 1024 / 8
+    }
+}
+
+/// Xilinx Alveo U55C (UltraScale+ xcu55c-fsvh2892-2L-e) — the paper's
+/// data-center card: 9024 DSPs, ~1.3 M LUTs, HBM2.
+pub fn u55c() -> Platform {
+    Platform {
+        name: "Alveo U55C".into(),
+        part: "xcu55c-fsvh2892-2L-e".into(),
+        dsp_total: 9024,
+        lut_total: 1_303_680,
+        ff_total: 2_607_360,
+        bram18k_total: 4032,
+        uram_total: 960,
+        lutram_fraction: 0.45,
+        memory: MemorySystem::Hbm2 { bandwidth_gbps: 460.0, channels: 32 },
+        target_freq_mhz: 200.0,
+        static_power_w: 2.8,
+    }
+}
+
+/// VC707 (Virtex-7 xc7vx485tffg1761-2): 2800 DSPs, DDR3.
+pub fn vc707() -> Platform {
+    Platform {
+        name: "VC707".into(),
+        part: "xc7vx485tffg1761-2".into(),
+        dsp_total: 2800,
+        lut_total: 303_600,
+        ff_total: 607_200,
+        bram18k_total: 2060,
+        uram_total: 0,
+        lutram_fraction: 0.35,
+        memory: MemorySystem::Ddr { bandwidth_gbps: 12.8, channels: 1 },
+        target_freq_mhz: 200.0,
+        static_power_w: 1.8,
+    }
+}
+
+/// ZCU102 (Zynq UltraScale+ xczu9eg-ffvb1156-2-e MPSoC): 2520 DSPs, DDR4.
+pub fn zcu102() -> Platform {
+    Platform {
+        name: "ZCU102".into(),
+        part: "xczu9eg-ffvb1156-2-e".into(),
+        dsp_total: 2520,
+        lut_total: 274_080,
+        ff_total: 548_160,
+        bram18k_total: 1824,
+        uram_total: 0,
+        lutram_fraction: 0.40,
+        memory: MemorySystem::Ddr { bandwidth_gbps: 19.2, channels: 1 },
+        target_freq_mhz: 200.0,
+        static_power_w: 2.2,
+    }
+}
+
+/// All boards the paper evaluates (Fig 11).
+pub fn all() -> Vec<Platform> {
+    vec![u55c(), zcu102(), vc707()]
+}
+
+/// Look a platform up by (case-insensitive) name prefix.
+pub fn by_name(name: &str) -> Option<Platform> {
+    let n = name.to_ascii_lowercase();
+    all().into_iter().find(|p| p.name.to_ascii_lowercase().contains(&n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55c_matches_paper_percentages() {
+        // Table 1: ADAPTOR uses 3612 DSPs = 40% and 391k LUTs = 30%.
+        let p = u55c();
+        let dsp_pct = 3612.0 / p.dsp_total as f64;
+        let lut_pct = 391_000.0 / p.lut_total as f64;
+        assert!((dsp_pct - 0.40).abs() < 0.01, "{dsp_pct}");
+        assert!((lut_pct - 0.30).abs() < 0.01, "{lut_pct}");
+    }
+
+    #[test]
+    fn embedded_boards_are_smaller() {
+        let (u, z, v) = (u55c(), zcu102(), vc707());
+        assert!(z.dsp_total < v.dsp_total && v.dsp_total < u.dsp_total);
+        assert!(z.lut_total < u.lut_total);
+        // paper: "VC707 ... has slightly more resources than the ZCU102"
+        assert!(v.dsp_total as f64 / z.dsp_total as f64 > 1.0);
+    }
+
+    #[test]
+    fn hbm_outruns_ddr() {
+        assert!(
+            u55c().memory.peak_bytes_per_sec() > 10.0 * vc707().memory.peak_bytes_per_sec()
+        );
+    }
+
+    #[test]
+    fn by_name_matching() {
+        assert_eq!(by_name("u55c").unwrap().name, "Alveo U55C");
+        assert_eq!(by_name("ZCU102").unwrap().part, "xczu9eg-ffvb1156-2-e");
+        assert!(by_name("stratix").is_none());
+    }
+
+    #[test]
+    fn bram_capacity_sane() {
+        // U55C: 4032 x 18Kb ≈ 9.3 MB of BRAM (plus URAM not counted here).
+        let mb = u55c().bram_bytes() as f64 / 1e6;
+        assert!(mb > 8.0 && mb < 10.0, "{mb}");
+    }
+}

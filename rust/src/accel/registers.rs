@@ -1,0 +1,271 @@
+//! The AXI-Lite configuration register file (paper §3.12) — the mechanism
+//! of runtime adaptivity.
+//!
+//! The Microblaze host writes model topology into these registers
+//! (Algorithm 18 step 3); the fabric re-bounds its loops accordingly.  The
+//! contract reproduced here: **writing registers never re-synthesizes**
+//! (in this substrate: never re-lowers or re-compiles an artifact) — it
+//! only changes loop bounds and masks fed to the fixed-shape tile
+//! primitives.
+
+use crate::model::TnnConfig;
+
+/// Register addresses on the AXI-Lite map (§3.12's seven registers plus
+/// control/status, word-addressed like a Vitis HLS s_axilite block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum Reg {
+    /// Control: bit0 = ap_start (Algorithm 18 step 13).
+    Control = 0x00,
+    /// Status: bit1 = ap_done (step 17 polls this).
+    Status = 0x04,
+    Sequence = 0x10,
+    Heads = 0x14,
+    LayersEnc = 0x18,
+    LayersDec = 0x1C,
+    Embeddings = 0x20,
+    Hidden = 0x24,
+    Out = 0x28,
+}
+
+/// Synthesis-time maxima the registers are validated against (the BRAM
+/// buffers were sized for these; exceeding them needs a re-synthesis).
+#[derive(Debug, Clone, Copy)]
+pub struct SynthMaxima {
+    pub seq_len: usize,
+    pub heads: usize,
+    pub d_model: usize,
+    pub hidden: usize,
+}
+
+impl SynthMaxima {
+    /// The artifact set's maxima (python/compile/configs.py).
+    pub fn artifact_default() -> Self {
+        SynthMaxima { seq_len: 128, heads: 12, d_model: 768, hidden: 3072 }
+    }
+}
+
+/// Write-transaction record, for audit/tests of the no-resynthesis contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WriteEvent {
+    pub reg: u32,
+    pub value: u32,
+}
+
+/// The register file itself.
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    maxima: SynthMaxima,
+    sequence: u32,
+    heads: u32,
+    layers_enc: u32,
+    layers_dec: u32,
+    embeddings: u32,
+    hidden: u32,
+    out: u32,
+    control: u32,
+    status: u32,
+    /// Monotone counter of configuration generations (each successful
+    /// topology write bumps it; artifact identity must NOT depend on it).
+    generation: u64,
+    log: Vec<WriteEvent>,
+}
+
+impl RegisterFile {
+    pub fn new(maxima: SynthMaxima) -> Self {
+        RegisterFile {
+            maxima,
+            sequence: 0,
+            heads: 0,
+            layers_enc: 0,
+            layers_dec: 0,
+            embeddings: 0,
+            hidden: 0,
+            out: 0,
+            control: 0,
+            status: 0,
+            generation: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// AXI-Lite write; topology registers are range-checked against the
+    /// synthesis maxima (hardware would silently truncate — we refuse).
+    pub fn write(&mut self, reg: Reg, value: u32) -> std::result::Result<(), String> {
+        let check = |v: u32, max: usize, name: &str| {
+            if v as usize > max {
+                Err(format!("{name}={v} exceeds synthesis maximum {max} (re-synthesis required)"))
+            } else {
+                Ok(())
+            }
+        };
+        match reg {
+            Reg::Sequence => {
+                check(value, self.maxima.seq_len, "Sequence")?;
+                self.sequence = value;
+            }
+            Reg::Heads => {
+                check(value, self.maxima.heads, "Heads")?;
+                self.heads = value;
+            }
+            Reg::LayersEnc => self.layers_enc = value,
+            Reg::LayersDec => self.layers_dec = value,
+            Reg::Embeddings => {
+                check(value, self.maxima.d_model, "Embeddings")?;
+                self.embeddings = value;
+            }
+            Reg::Hidden => {
+                check(value, self.maxima.hidden, "Hidden")?;
+                self.hidden = value;
+            }
+            Reg::Out => self.out = value,
+            Reg::Control => self.control = value,
+            Reg::Status => return Err("Status is read-only".into()),
+        }
+        self.log.push(WriteEvent { reg: reg as u32, value });
+        if !matches!(reg, Reg::Control) {
+            self.generation += 1;
+        }
+        Ok(())
+    }
+
+    pub fn read(&self, reg: Reg) -> u32 {
+        match reg {
+            Reg::Sequence => self.sequence,
+            Reg::Heads => self.heads,
+            Reg::LayersEnc => self.layers_enc,
+            Reg::LayersDec => self.layers_dec,
+            Reg::Embeddings => self.embeddings,
+            Reg::Hidden => self.hidden,
+            Reg::Out => self.out,
+            Reg::Control => self.control,
+            Reg::Status => self.status,
+        }
+    }
+
+    /// Program a whole topology (Algorithm 18 step 3).
+    pub fn program(&mut self, cfg: &TnnConfig) -> std::result::Result<(), String> {
+        cfg.validate()?;
+        self.write(Reg::Sequence, cfg.seq_len as u32)?;
+        self.write(Reg::Heads, cfg.heads as u32)?;
+        self.write(Reg::LayersEnc, cfg.enc_layers as u32)?;
+        self.write(Reg::LayersDec, cfg.dec_layers as u32)?;
+        self.write(Reg::Embeddings, cfg.d_model as u32)?;
+        self.write(Reg::Hidden, cfg.hidden as u32)?;
+        self.write(Reg::Out, cfg.d_model as u32)?;
+        Ok(())
+    }
+
+    /// Reconstruct the programmed topology.
+    pub fn current_config(&self) -> TnnConfig {
+        TnnConfig {
+            seq_len: self.sequence as usize,
+            heads: self.heads as usize,
+            d_model: self.embeddings as usize,
+            hidden: self.hidden as usize,
+            enc_layers: self.layers_enc as usize,
+            dec_layers: self.layers_dec as usize,
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn write_log(&self) -> &[WriteEvent] {
+        &self.log
+    }
+
+    pub fn maxima(&self) -> SynthMaxima {
+        self.maxima
+    }
+
+    /// ap_start / ap_done handshake (Algorithm 18 steps 13–18).
+    pub fn start(&mut self) {
+        self.control |= 1;
+        self.status &= !0b10;
+    }
+
+    pub fn set_done(&mut self) {
+        self.status |= 0b10;
+        self.control &= !1;
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.status & 0b10 != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    #[test]
+    fn program_and_readback_roundtrip() {
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        let cfg = presets::small_encoder(64, 4);
+        rf.program(&cfg).unwrap();
+        assert_eq!(rf.current_config(), cfg);
+        assert_eq!(rf.read(Reg::Embeddings), 256);
+    }
+
+    #[test]
+    fn exceeding_synthesis_maxima_is_refused() {
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        assert!(rf.write(Reg::Sequence, 129).is_err());
+        assert!(rf.write(Reg::Embeddings, 1024).is_err());
+        assert!(rf.write(Reg::Heads, 16).is_err());
+        // nothing was committed
+        assert_eq!(rf.read(Reg::Sequence), 0);
+    }
+
+    #[test]
+    fn reprogramming_needs_no_resynthesis() {
+        // generation changes, synthesis maxima (artifact identity) do not.
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        rf.program(&presets::small_encoder(64, 4)).unwrap();
+        let g1 = rf.generation();
+        let m1 = rf.maxima();
+        rf.program(&presets::bert_base(64)).unwrap();
+        assert!(rf.generation() > g1);
+        let m2 = rf.maxima();
+        assert_eq!(
+            (m1.seq_len, m1.d_model, m1.heads, m1.hidden),
+            (m2.seq_len, m2.d_model, m2.heads, m2.hidden),
+            "maxima (= synthesized fabric) must be untouched by reprogramming"
+        );
+    }
+
+    #[test]
+    fn status_is_read_only() {
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        assert!(rf.write(Reg::Status, 1).is_err());
+    }
+
+    #[test]
+    fn start_done_handshake() {
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        rf.start();
+        assert!(!rf.is_done());
+        assert_eq!(rf.read(Reg::Control) & 1, 1);
+        rf.set_done();
+        assert!(rf.is_done());
+        assert_eq!(rf.read(Reg::Control) & 1, 0);
+    }
+
+    #[test]
+    fn write_log_records_programming_sequence() {
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        rf.program(&presets::small_encoder(32, 2)).unwrap();
+        assert_eq!(rf.write_log().len(), 7);
+        assert_eq!(rf.write_log()[0].reg, Reg::Sequence as u32);
+    }
+
+    #[test]
+    fn bert_fits_artifact_maxima() {
+        let mut rf = RegisterFile::new(SynthMaxima::artifact_default());
+        assert!(rf.program(&presets::bert_base(128)).is_ok());
+        assert!(rf.program(&presets::bert_base(64)).is_ok());
+    }
+}

@@ -1,0 +1,338 @@
+//! Resource-utilization models (paper §5.1, §5.4).
+//!
+//! Two models per resource, mirroring Table 2's two columns:
+//!
+//! * **analytical** — Eq 8 (DSPs) and Eq 25 (BRAMs) implemented verbatim.
+//!   With the paper's larger-tile configuration (TS_MHA=128, TS_FFN=192,
+//!   h=8) Eq 8 reproduces the paper's 6272 DSPs exactly; with the default
+//!   configuration it yields 4352 where Table 2 prints 3784 — a
+//!   self-inconsistency of the paper we document rather than hide
+//!   (DESIGN.md §5).
+//! * **structural** — what synthesis actually emits: bias/LN datapaths and
+//!   the QK division retarget to LUTs (§3.6.2 "the division ... is executed
+//!   ... using LUTs"), small array partitions become LUTRAM instead of
+//!   BRAM ("LUTRAMs were used more than BRAMs to maintain high frequency",
+//!   §6), and HLS packs imperfectly.  Calibrated to Table 2's experimental
+//!   column (3612 DSPs / 2246 BRAM18k) and Table 1's 391 k LUTs.
+
+use super::platform::Platform;
+use super::tiling::TileConfig;
+use crate::model::quant::BitWidth;
+use crate::model::TnnConfig;
+
+/// BRAM18k geometry used by Eq 25 ("BRAM_w = 36 and BRAM_d = 1024 for most
+/// FPGAs").
+pub const BRAM_W: f64 = 36.0;
+pub const BRAM_D: f64 = 1024.0;
+
+/// Eq 8, verbatim:
+/// `3·h·d/T_mha + h·(d/h + SL) + 6·d/T_ffn + d`.
+pub fn dsps_eq8(cfg: &TnnConfig, tiles: &TileConfig) -> f64 {
+    let d = cfg.d_model as f64;
+    let h = cfg.heads as f64;
+    let sl = cfg.seq_len as f64;
+    let t_mha = tiles.tiles_mha(cfg.d_model) as f64;
+    let t_ffn = tiles.tiles_ffn(cfg.d_model) as f64;
+    3.0 * h * d / t_mha + h * (d / h + sl) + 6.0 * d / t_ffn + d
+}
+
+/// Structural (post-synthesis) DSP count: Eq 8 minus the `d_model` term —
+/// the element-wise bias/LN lane that synthesis maps onto LUT fabric —
+/// plus a small constant for AXI/DMA address arithmetic.  Reproduces
+/// Table 2's experimental 3612 for the default build.
+pub fn dsps_structural(cfg: &TnnConfig, tiles: &TileConfig) -> u64 {
+    const AXI_DSP: f64 = 28.0;
+    (dsps_eq8(cfg, tiles) - cfg.d_model as f64 + AXI_DSP).round().max(0.0) as u64
+}
+
+/// Eq 25, verbatim (including the doubled FFN weight term the paper
+/// prints).  `Bit_w` follows the float-side buffer width (the AXI loaders
+/// convert float->fixed on the way in, §5.2), i.e. 32 by default —
+/// reproduces Table 2's 2375 within 4 %.
+pub fn brams_eq25(cfg: &TnnConfig, tiles: &TileConfig, bit_w: f64) -> f64 {
+    let d = cfg.d_model as f64;
+    let h = cfg.heads as f64;
+    let sl = cfg.seq_len as f64;
+    let t_mha = tiles.tiles_mha(cfg.d_model) as f64;
+    let t_ffn = tiles.tiles_ffn(cfg.d_model) as f64;
+    let u = bit_w / (BRAM_W * BRAM_D); // BRAM18k units per element-bit
+    let t1 = 10.0 * sl * d * u;
+    let t2 = sl * (0.5f64).max(sl * u);
+    let t3 = (0.5f64).max(sl * d * u);
+    let t4 = h * sl * d * u;
+    let t5 = (0.5f64).max(d * u);
+    let t6 = sl * t_mha * u;
+    let t7a = 8.0 * d * d * u / t_ffn;
+    let t7b = 8.0 * d * d * u / t_ffn;
+    let t8 = 3.0 * d * d * u / t_ffn;
+    t1 + t2 + t3 + t4 + t5 + t6 + t7a + t7b + t8
+}
+
+/// LUTRAM-eligibility threshold: HLS maps array partitions smaller than
+/// this (in bits) to distributed RAM instead of BRAM.
+const LUTRAM_THRESHOLD_BITS: f64 = 4096.0;
+/// HLS BRAM packing efficiency (two logical arrays often share a true
+/// dual-port BRAM18 pair).
+const BRAM_PACKING: f64 = 0.80;
+
+/// Structural BRAM model: the Eq 25 array inventory with (a) per-group
+/// LUTRAM substitution for small partitions and (b) packing efficiency.
+/// Returns `(bram18k, lutram_bits)`.
+pub fn brams_structural(cfg: &TnnConfig, tiles: &TileConfig, bit_w: f64) -> (u64, u64) {
+    let d = cfg.d_model as f64;
+    let h = cfg.heads as f64;
+    let sl = cfg.seq_len as f64;
+    let t_mha = tiles.tiles_mha(cfg.d_model) as f64;
+    let t_ffn = tiles.tiles_ffn(cfg.d_model) as f64;
+    let ts_ffn = tiles.ts_ffn as f64;
+
+    // (total_bits, partitions) per array group, from §3.1–3.8.
+    let groups: Vec<(f64, f64)> = vec![
+        // 10 SL×d intermediate/output buffers, partitioned per head-ish lane
+        (10.0 * sl * d * bit_w, 10.0 * 8.0),
+        // per-head score matrices S (SL×SL), partitioned by SL (SV_PM unroll)
+        (h * sl * sl * bit_w, h * sl),
+        // input BRAM SL×d partitioned across heads
+        (sl * d * bit_w, h),
+        // per-head Q,K,V buffers (h · SL · d/h each ×3 ≈ h·SL·d total)
+        (h * sl * d * bit_w, h * 24.0),
+        // LN weight/bias buffers
+        (2.0 * d * bit_w, 2.0),
+        // per-head x tile buffers SL×TS_MHA, double-buffered
+        (2.0 * sl * t_mha * tiles.ts_mha as f64 * bit_w, h * t_mha),
+        // FFN weight panels (double-buffered ping-pong): 2·(8+8+3)/19 → the
+        // eq25 coefficients 8,8,3 over t_ffn, partitioned by TS_FFN columns
+        (8.0 * d * d * bit_w / t_ffn, ts_ffn),
+        (8.0 * d * d * bit_w / t_ffn, ts_ffn),
+        (3.0 * d * d * bit_w / t_ffn, ts_ffn),
+    ];
+
+    let mut bram = 0.0;
+    let mut lutram_bits = 0.0;
+    for (bits, parts) in groups {
+        let parts = parts.max(1.0);
+        let per_part = bits / parts;
+        if per_part < LUTRAM_THRESHOLD_BITS {
+            lutram_bits += bits;
+        } else {
+            bram += parts * (per_part / (BRAM_W * BRAM_D)).ceil();
+        }
+    }
+    ((bram * BRAM_PACKING).round() as u64, lutram_bits as u64)
+}
+
+/// Structural LUT model, calibrated against Table 1 (391 k at the default
+/// build).  Components follow §3: PE glue per DSP, the QK division (LUTs),
+/// softmax exp/div units, LN datapath, bias/ReLU lanes (the Eq 8 `d` term
+/// retargeted to fabric), AXI/control, and LUTRAM storage (64 bits/LUT).
+pub fn luts_structural(cfg: &TnnConfig, tiles: &TileConfig, bit_w: f64) -> u64 {
+    const LUT_PER_DSP_PE: f64 = 52.0;
+    const LUT_PER_DIV: f64 = 900.0; // 32-bit pipelined divider
+    const LUT_PER_EXP: f64 = 2200.0;
+    const LUT_LN_UNIT: f64 = 11_000.0;
+    const LUT_BIAS_LANE: f64 = 36.0; // per element-lane of the d_model bias/LN path
+    const LUT_AXI_CTRL: f64 = 58_000.0;
+    const LUTRAM_BITS_PER_LUT: f64 = 64.0;
+
+    let dsps = dsps_structural(cfg, tiles) as f64;
+    let (_, lutram_bits) = brams_structural(cfg, tiles, bit_w);
+    let h = cfg.heads as f64;
+    let sl = cfg.seq_len as f64;
+    let d = cfg.d_model as f64;
+
+    let pe_glue = LUT_PER_DSP_PE * dsps;
+    let dividers = h * sl.min(64.0) * LUT_PER_DIV / 8.0; // QK_PM divisions, shared 8:1
+    let softmax = h * LUT_PER_EXP;
+    let ln = 2.0 * LUT_LN_UNIT;
+    let bias = d * LUT_BIAS_LANE;
+    let lutram = lutram_bits as f64 / LUTRAM_BITS_PER_LUT;
+    (pe_glue + dividers + softmax + ln + bias + LUT_AXI_CTRL + lutram).round() as u64
+}
+
+/// Combined estimate for one synthesis.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceEstimate {
+    /// Eq 8, verbatim.
+    pub dsp_analytical: f64,
+    /// Post-synthesis DSP count (Table 2 "experimental").
+    pub dsp: u64,
+    /// Eq 25, verbatim.
+    pub bram18k_analytical: f64,
+    /// Post-synthesis BRAM18k count.
+    pub bram18k: u64,
+    /// Bits of distributed LUTRAM storage.
+    pub lutram_bits: u64,
+    /// Post-synthesis logic LUTs (incl. LUTRAM).
+    pub lut: u64,
+    /// Flip-flops (≈ 1.35 per LUT in this design family).
+    pub ff: u64,
+    /// Utilization fractions against the target platform.
+    pub dsp_util: f64,
+    pub lut_util: f64,
+    pub bram_util: f64,
+}
+
+impl ResourceEstimate {
+    pub fn check_fit(&self, p: &Platform) -> std::result::Result<(), String> {
+        if self.dsp > p.dsp_total {
+            return Err(format!("DSPs {} exceed {} on {}", self.dsp, p.dsp_total, p.name));
+        }
+        if self.lut > p.lut_total {
+            return Err(format!("LUTs {} exceed {} on {}", self.lut, p.lut_total, p.name));
+        }
+        if self.bram18k > p.bram18k_total {
+            return Err(format!(
+                "BRAM18k {} exceed {} on {}",
+                self.bram18k, p.bram18k_total, p.name
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Full resource estimate for `cfg` under `tiles` on `platform`.
+pub fn estimate(
+    cfg: &TnnConfig,
+    tiles: &TileConfig,
+    bit_width: BitWidth,
+    platform: &Platform,
+) -> ResourceEstimate {
+    // Eq 25's Bit_w tracks the float-side buffer width (see brams_eq25).
+    let bit_w = (bit_width.bits() as f64).max(32.0);
+    let dsp_analytical = dsps_eq8(cfg, tiles);
+    let dsp = dsps_structural(cfg, tiles);
+    let bram18k_analytical = brams_eq25(cfg, tiles, bit_w);
+    let (bram18k, lutram_bits) = brams_structural(cfg, tiles, bit_w);
+    let lut = luts_structural(cfg, tiles, bit_w);
+    ResourceEstimate {
+        dsp_analytical,
+        dsp,
+        bram18k_analytical,
+        bram18k,
+        lutram_bits,
+        lut,
+        ff: (lut as f64 * 1.35) as u64,
+        dsp_util: dsp as f64 / platform.dsp_total as f64,
+        lut_util: lut as f64 / platform.lut_total as f64,
+        bram_util: bram18k as f64 / platform.bram18k_total as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::platform;
+    use crate::model::presets;
+
+    fn default_cfg() -> TnnConfig {
+        // Table 2 rows use h = 8 (not the register default 12).
+        TnnConfig::encoder(64, 768, 8, 12)
+    }
+
+    #[test]
+    fn eq8_reproduces_large_tile_row_exactly() {
+        // Table 2 last row: SL=64 d=768 h=8 TS=(128,192) -> 6272 DSPs.
+        let cfg = default_cfg();
+        let t = TileConfig::new(128, 192);
+        assert_eq!(dsps_eq8(&cfg, &t).round() as u64, 6272);
+    }
+
+    #[test]
+    fn eq8_default_documented_discrepancy() {
+        // Eq 8 verbatim gives 4352 where the paper prints 3784 (DESIGN.md §5).
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        assert_eq!(dsps_eq8(&cfg, &t).round() as u64, 4352);
+    }
+
+    #[test]
+    fn structural_dsps_match_table2_experimental() {
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        assert_eq!(dsps_structural(&cfg, &t), 3612);
+    }
+
+    #[test]
+    fn eq25_within_5pct_of_table2() {
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        let b = brams_eq25(&cfg, &t, 32.0);
+        let err = (b - 2375.0).abs() / 2375.0;
+        assert!(err < 0.05, "eq25 = {b}, err = {err}");
+    }
+
+    #[test]
+    fn structural_brams_near_table2_experimental() {
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        let (b, _) = brams_structural(&cfg, &t, 32.0);
+        let err = (b as f64 - 2246.0).abs() / 2246.0;
+        assert!(err < 0.10, "structural = {b}, err = {err}");
+    }
+
+    #[test]
+    fn luts_near_table1() {
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        let l = luts_structural(&cfg, &t, 32.0);
+        let err = (l as f64 - 391_000.0).abs() / 391_000.0;
+        assert!(err < 0.10, "luts = {l}, err = {err}");
+    }
+
+    #[test]
+    fn bigger_tiles_use_more_dsps_fewer_loads() {
+        let cfg = default_cfg();
+        let small = dsps_structural(&cfg, &TileConfig::new(32, 64));
+        let big = dsps_structural(&cfg, &TileConfig::new(128, 256));
+        assert!(big > small);
+    }
+
+    #[test]
+    fn bram_deviation_grows_with_tile_size() {
+        // Table 2 note: "higher deviation ... for larger tile sizes occurred
+        // because LUTRAMs were used more than BRAMs".
+        let cfg = default_cfg();
+        let small_t = TileConfig::paper_optimum();
+        let big_t = TileConfig::new(128, 192);
+        let dev = |t: &TileConfig| {
+            let a = brams_eq25(&cfg, t, 32.0);
+            let (s, _) = brams_structural(&cfg, t, 32.0);
+            (a - s as f64).abs() / a
+        };
+        assert!(dev(&big_t) >= dev(&small_t) * 0.9, "{} vs {}", dev(&big_t), dev(&small_t));
+    }
+
+    #[test]
+    fn estimate_fits_u55c_and_not_zcu102() {
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        let u = platform::u55c();
+        let e = estimate(&cfg, &t, BitWidth::Fixed16, &u);
+        assert!(e.check_fit(&u).is_ok());
+        // the same synthesis drowns a ZCU102 (Fig 11 forces tiny tiles there)
+        let z = platform::zcu102();
+        let ez = estimate(&cfg, &t, BitWidth::Fixed16, &z);
+        assert!(ez.check_fit(&z).is_err());
+    }
+
+    #[test]
+    fn utilization_fractions_match_table1() {
+        let cfg = default_cfg();
+        let t = TileConfig::paper_optimum();
+        let e = estimate(&cfg, &t, BitWidth::Fixed16, &platform::u55c());
+        assert!((e.dsp_util - 0.40).abs() < 0.02, "{}", e.dsp_util);
+        assert!((e.lut_util - 0.30).abs() < 0.03, "{}", e.lut_util);
+    }
+
+    #[test]
+    fn shallow_transformer_uses_same_fabric() {
+        // runtime adaptivity: resources are a function of the synthesis,
+        // dominated by tile sizes — a smaller model on the same fabric must
+        // not *increase* resources.
+        let t = TileConfig::paper_optimum();
+        let big = estimate(&default_cfg(), &t, BitWidth::Fixed16, &platform::u55c());
+        let small =
+            estimate(&presets::shallow_transformer(), &t, BitWidth::Fixed16, &platform::u55c());
+        assert!(small.dsp <= big.dsp);
+    }
+}

@@ -1,0 +1,153 @@
+//! Roofline model (Fig 12): peak compute bound from the PE arrays, memory
+//! bound from the AXI/HBM streaming model, and attained-performance points
+//! per workload.
+//!
+//! The paper's compute bound is 0.053 TOPS — the *effective* peak of the
+//! module pipeline (modules run sequentially, so the fabric's peak is the
+//! busiest module's PE count, not the sum of all DSPs), and its memory
+//! bound is the per-port weight-streaming rate (the "200 kB/s" axis label
+//! is a typo for the per-element-per-cycle AXI stream; DESIGN.md §5).
+
+use super::platform::Platform;
+use super::tiling::TileConfig;
+use crate::model::{ops, TnnConfig};
+
+/// Effective peak compute (GOPS) of the synthesized fabric at `freq_mhz`:
+/// the busiest processing module's MAC lanes × 2 ops × f.  With the paper's
+/// default build the FFN2 module owns `hidden/T_ffn` lanes at II=2 and the
+/// QKV modules `h·TS_mha·3/II` — the max of the module peaks.
+pub fn peak_gops(cfg: &TnnConfig, tiles: &TileConfig, freq_mhz: f64) -> f64 {
+    let t_ffn = tiles.tiles_ffn(cfg.d_model).max(1);
+    let ffn_lanes = (cfg.hidden / t_ffn) as f64 / 2.0; // II=2
+    let qkv_lanes = (cfg.heads * 3) as f64 * (cfg.dk() as f64).min(tiles.ts_mha as f64);
+    let lanes = ffn_lanes.max(qkv_lanes / (tiles.tiles_mha(cfg.d_model) as f64));
+    2.0 * lanes * freq_mhz / 1e3
+}
+
+/// Streaming (weight-load) bandwidth in bytes/s: one element per cycle per
+/// loader port (Algorithms 1–6 are II=1 scalar streams), capped by the
+/// platform's physical memory bandwidth.
+pub fn stream_bytes_per_sec(platform: &Platform, freq_mhz: f64, bytes_per_elem: usize, ports: usize) -> f64 {
+    let axi = freq_mhz * 1e6 * bytes_per_elem as f64 * ports as f64;
+    axi.min(platform.memory.peak_bytes_per_sec())
+}
+
+/// One point on the roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub name: String,
+    /// Operational intensity, ops/byte.
+    pub oi: f64,
+    /// Attained GOPS (from the latency model at the build's frequency).
+    pub attained_gops: f64,
+    /// min(compute bound, oi × memory bound) — the ceiling at this OI.
+    pub bound_gops: f64,
+}
+
+impl RooflinePoint {
+    pub fn memory_bound(&self) -> bool {
+        self.bound_gops < self.attained_gops.max(self.bound_gops) && {
+            // bound_gops equals oi·BW when left of the ridge
+            true
+        }
+    }
+}
+
+/// The full roofline: bounds plus one point per (name, cfg, attained GOPS).
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    pub peak_gops: f64,
+    pub stream_gbps: f64,
+    pub ridge_oi: f64,
+    pub points: Vec<RooflinePoint>,
+}
+
+/// Build the roofline for a set of workloads on one synthesis.
+pub fn roofline(
+    platform: &Platform,
+    tiles: &TileConfig,
+    freq_mhz: f64,
+    bytes_per_elem: usize,
+    workloads: &[(&str, TnnConfig, f64)],
+) -> Roofline {
+    // Fabric peak: take the max over the workloads' effective peaks (the
+    // fabric is sized by the synthesis maxima, not the runtime registers).
+    let peak = workloads
+        .iter()
+        .map(|(_, c, _)| peak_gops(c, tiles, freq_mhz))
+        .fold(0.0f64, f64::max);
+    let bw = stream_bytes_per_sec(platform, freq_mhz, bytes_per_elem, 3);
+    let mut points = Vec::new();
+    for (name, cfg, attained) in workloads {
+        let oi = ops::operational_intensity(cfg, bytes_per_elem);
+        let bound = (oi * bw / 1e9).min(peak);
+        points.push(RooflinePoint {
+            name: name.to_string(),
+            oi,
+            attained_gops: *attained,
+            bound_gops: bound,
+        });
+    }
+    Roofline { peak_gops: peak, stream_gbps: bw / 1e9, ridge_oi: peak / (bw / 1e9), points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::platform;
+    use crate::model::presets;
+
+    #[test]
+    fn peak_is_same_order_as_paper_0_053_tops() {
+        let cfg = presets::paper_default();
+        let t = TileConfig::paper_optimum();
+        let p = peak_gops(&cfg, &t, 200.0);
+        // paper: 0.053 TOPS = 53 GOPS effective peak
+        assert!(p > 25.0 && p < 210.0, "peak = {p}");
+    }
+
+    #[test]
+    fn attained_never_exceeds_bound_for_model_latency() {
+        let cfg = presets::bert_base(64);
+        let t = TileConfig::paper_optimum();
+        let lat = crate::accel::latency::model_latency(&cfg, &t);
+        let attained = lat.gops_at(&cfg, 200.0);
+        let r = roofline(&platform::u55c(), &t, 200.0, 4, &[("bert", cfg, attained)]);
+        let pt = &r.points[0];
+        assert!(
+            pt.attained_gops <= pt.bound_gops * 1.15,
+            "attained {} vs bound {}",
+            pt.attained_gops,
+            pt.bound_gops
+        );
+    }
+
+    #[test]
+    fn ridge_point_separates_regimes() {
+        let cfg = presets::paper_default();
+        let t = TileConfig::paper_optimum();
+        let r = roofline(&platform::u55c(), &t, 200.0, 4, &[("bert", cfg, 30.0)]);
+        assert!(r.ridge_oi > 0.0);
+        // left of the ridge the bound is oi·bw
+        let low_oi = r.ridge_oi / 10.0;
+        assert!(low_oi * r.stream_gbps < r.peak_gops);
+    }
+
+    #[test]
+    fn ddr_platform_has_lower_stream_bound_than_axi_when_capped() {
+        // VC707 DDR3 (12.8 GB/s) cannot cap a 3-port 200 MHz f32 stream
+        // (2.4 GB/s) — the AXI stream is the binding constraint, as the
+        // paper's tiny memory bound implies.
+        let v = stream_bytes_per_sec(&platform::vc707(), 200.0, 4, 3);
+        assert!(v <= 12.8e9);
+        assert!((v - 2.4e9).abs() < 1e6, "{v}");
+    }
+
+    #[test]
+    fn quantization_moves_points_right() {
+        let cfg = presets::bert_base(64);
+        let oi32 = ops::operational_intensity(&cfg, 4);
+        let oi8 = ops::operational_intensity(&cfg, 1);
+        assert!(oi8 > oi32 * 3.9);
+    }
+}

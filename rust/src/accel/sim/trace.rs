@@ -1,0 +1,89 @@
+//! Simulation event trace — the substrate's answer to the paper's
+//! AXI-TIMER instrumentation (§4): start/stop spans per module, renderable
+//! as a text Gantt chart.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub name: String,
+    pub start: u64,
+    pub cycles: u64,
+}
+
+impl Event {
+    pub fn span(name: &str, start: u64, cycles: u64) -> Self {
+        Event { name: name.to_string(), start, cycles }
+    }
+
+    pub fn end(&self) -> u64 {
+        self.start + self.cycles
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn total_span(&self) -> u64 {
+        self.events.iter().map(Event::end).max().unwrap_or(0)
+    }
+
+    /// Render a proportional text Gantt chart, `width` characters wide.
+    pub fn gantt(&self, width: usize) -> String {
+        let span = self.total_span().max(1) as f64;
+        let mut out = String::new();
+        for e in &self.events {
+            let off = (e.start as f64 / span * width as f64) as usize;
+            let len = ((e.cycles as f64 / span * width as f64) as usize).max(1);
+            out.push_str(&format!(
+                "{:<16} {}{} {} cc\n",
+                e.name,
+                " ".repeat(off.min(width)),
+                "#".repeat(len.min(width.saturating_sub(off))),
+                e.cycles
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_accounting() {
+        let mut t = Trace::new();
+        t.push(Event::span("a", 0, 10));
+        t.push(Event::span("b", 10, 5));
+        assert_eq!(t.total_span(), 15);
+        assert_eq!(t.events[1].end(), 15);
+    }
+
+    #[test]
+    fn gantt_renders_every_event() {
+        let mut t = Trace::new();
+        t.push(Event::span("load", 0, 100));
+        t.push(Event::span("compute", 100, 300));
+        let g = t.gantt(40);
+        assert!(g.contains("load"));
+        assert!(g.contains("compute"));
+        assert!(g.lines().count() == 2);
+    }
+
+    #[test]
+    fn empty_trace_is_harmless() {
+        let t = Trace::new();
+        assert_eq!(t.total_span(), 0);
+        assert_eq!(t.gantt(10), "");
+    }
+}

@@ -1,0 +1,191 @@
+//! The paper's tiling strategy (§3.9, Fig 4).
+//!
+//! MHA weights are tiled along the **column** axis only — the row axis is
+//! already divided by the head count — giving `d_model / TS_MHA` tiles per
+//! head, each visited once with partial-sum accumulation (Fig 4a).
+//!
+//! FFN weights are tiled along **both** axes (Fig 4b): FFN1 is visited
+//! `(d_model/TS_FFN)²` times; FFN2 and FFN3 `4·(d_model/TS_FFN)²` times
+//! (§3.9), with column-then-row accumulation.
+
+use crate::model::TnnConfig;
+
+/// Synthesis-time tile sizes (fixed; changing them = re-synthesis).
+///
+/// `synth_d` is the d_model the fabric was SIZED for: the FFN tile *count*
+/// is a synthesis constant (`synth_d / TS_FFN`), so a smaller runtime
+/// d_model narrows the per-tile width rather than dropping tiles — the
+/// reading consistent with Table 2's d=512 row (see latency/mod.rs docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    pub ts_mha: usize,
+    pub ts_ffn: usize,
+    /// Synthesis d_model; `None` = sized exactly for the runtime model.
+    pub synth_d: Option<usize>,
+}
+
+impl TileConfig {
+    pub fn new(ts_mha: usize, ts_ffn: usize) -> Self {
+        assert!(ts_mha > 0 && ts_ffn > 0, "tile sizes must be positive");
+        Self { ts_mha, ts_ffn, synth_d: None }
+    }
+
+    /// A fabric synthesized for maxima `synth_d` (the artifact set's 768).
+    pub fn for_fabric(ts_mha: usize, ts_ffn: usize, synth_d: usize) -> Self {
+        let mut t = Self::new(ts_mha, ts_ffn);
+        t.synth_d = Some(synth_d);
+        t
+    }
+
+    /// The paper's optimum (§3.10): TS_MHA = 64, TS_FFN = 128, sized for
+    /// BERT-base (d_model = 768).
+    pub fn paper_optimum() -> Self {
+        Self::for_fabric(64, 128, 768)
+    }
+
+    /// Number of MHA tiles: `d_model / TS_MHA` (ceil for non-divisible).
+    pub fn tiles_mha(&self, d_model: usize) -> usize {
+        d_model.div_ceil(self.ts_mha)
+    }
+
+    /// Number of FFN tiles per axis — a synthesis constant
+    /// (`synth_d / TS_FFN`) independent of the runtime d_model.
+    pub fn tiles_ffn(&self, d_model: usize) -> usize {
+        self.synth_d.unwrap_or(d_model).div_ceil(self.ts_ffn)
+    }
+
+    /// Weight-buffer reload count for the MHA weight panels (§3.9: loaded
+    /// `d_model/TS_MHA` times).
+    pub fn mha_tile_visits(&self, cfg: &TnnConfig) -> usize {
+        self.tiles_mha(cfg.d_model)
+    }
+
+    /// FFN1 module visits: both loops iterate `d_model/TS_FFN` (§3.9).
+    pub fn ffn1_visits(&self, cfg: &TnnConfig) -> usize {
+        let t = self.tiles_ffn(cfg.d_model);
+        t * t
+    }
+
+    /// FFN2/FFN3 weight-coverage visits: `(d/TS)²` tiles of the full
+    /// `TS_FFN × 4·TS_FFN` panel cover the `d × hidden` matrix exactly once
+    /// (each visit's panel spans the whole hidden/t column slab).
+    pub fn ffn23_visits(&self, cfg: &TnnConfig) -> usize {
+        let t = self.tiles_ffn(cfg.d_model);
+        t * t
+    }
+
+    /// §3.9's stated module-reuse count for FFN2/FFN3:
+    /// `4·(d_model/TS_FFN)²` — the hidden/d ratio times the weight-coverage
+    /// visits (the module is re-entered once per TS-wide column strip).
+    pub fn ffn23_module_reuse_paper(&self, cfg: &TnnConfig) -> usize {
+        let ratio = cfg.hidden.div_ceil(cfg.d_model);
+        ratio * self.ffn23_visits(cfg)
+    }
+
+    /// Legality for the *execution* engine: exact divisibility (the
+    /// analytical models tolerate ceil).
+    pub fn check_exec(&self, cfg: &TnnConfig) -> std::result::Result<(), String> {
+        if cfg.d_model % self.ts_mha != 0 {
+            return Err(format!("d_model {} % TS_MHA {} != 0", cfg.d_model, self.ts_mha));
+        }
+        if cfg.d_model % self.ts_ffn != 0 {
+            return Err(format!("d_model {} % TS_FFN {} != 0", cfg.d_model, self.ts_ffn));
+        }
+        if cfg.hidden % self.ts_ffn != 0 {
+            return Err(format!("hidden {} % TS_FFN {} != 0", cfg.hidden, self.ts_ffn));
+        }
+        Ok(())
+    }
+}
+
+/// One tile visit in an iteration schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileVisit {
+    /// Row-panel index into the weight matrix.
+    pub row: usize,
+    /// Column-panel index.
+    pub col: usize,
+}
+
+/// The MHA schedule (Fig 4a): column tiles only, in order.
+pub fn mha_schedule(tiles: &TileConfig, d_model: usize) -> Vec<TileVisit> {
+    (0..tiles.tiles_mha(d_model)).map(|t| TileVisit { row: t, col: 0 }).collect()
+}
+
+/// The FFN schedule (Fig 4b): "results are first accumulated along the
+/// columns, followed by accumulation along the rows" — row-major over
+/// (col_panel, row_panel) with the row (reduction) axis inner.
+pub fn ffn_schedule(row_panels: usize, col_panels: usize) -> Vec<TileVisit> {
+    let mut v = Vec::with_capacity(row_panels * col_panels);
+    for col in 0..col_panels {
+        for row in 0..row_panels {
+            v.push(TileVisit { row, col });
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    #[test]
+    fn paper_optimum_tile_counts() {
+        // §3.10: 12 tiles in MHA and 6 in FFN for d_model = 768.
+        let t = TileConfig::paper_optimum();
+        assert_eq!(t.tiles_mha(768), 12);
+        assert_eq!(t.tiles_ffn(768), 6);
+    }
+
+    #[test]
+    fn visit_counts_match_section_3_9() {
+        let t = TileConfig::paper_optimum();
+        let cfg = presets::paper_default();
+        assert_eq!(t.ffn1_visits(&cfg), 36); // (768/128)^2
+        assert_eq!(t.ffn23_visits(&cfg), 36); // weight coverage
+        assert_eq!(t.ffn23_module_reuse_paper(&cfg), 144); // §3.9's 4·(768/128)^2
+        assert_eq!(t.mha_tile_visits(&cfg), 12);
+    }
+
+    #[test]
+    fn ceil_for_non_divisible_custom_encoder() {
+        let t = TileConfig::new(64, 128);
+        let cfg = presets::custom_encoder(); // d=200
+        assert_eq!(t.tiles_mha(200), 4);
+        assert!(t.check_exec(&cfg).is_err());
+    }
+
+    #[test]
+    fn exec_check_passes_paper_default() {
+        let t = TileConfig::paper_optimum();
+        assert!(t.check_exec(&presets::paper_default()).is_ok());
+        assert!(t.check_exec(&presets::shallow_transformer()).is_ok());
+    }
+
+    #[test]
+    fn ffn_schedule_is_column_then_row() {
+        let s = ffn_schedule(2, 3);
+        assert_eq!(s.len(), 6);
+        // first column panel's two row (reduction) steps come first
+        assert_eq!(s[0], TileVisit { row: 0, col: 0 });
+        assert_eq!(s[1], TileVisit { row: 1, col: 0 });
+        assert_eq!(s[2], TileVisit { row: 0, col: 1 });
+    }
+
+    #[test]
+    fn mha_schedule_covers_all_tiles_once() {
+        let t = TileConfig::paper_optimum();
+        let s = mha_schedule(&t, 768);
+        assert_eq!(s.len(), 12);
+        for (i, v) in s.iter().enumerate() {
+            assert_eq!(v.row, i);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_tile_size_panics() {
+        TileConfig::new(0, 128);
+    }
+}

@@ -1,0 +1,456 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (§6): each function returns the rendered text block; [`write_all`]
+//! drops them under `reports/` (one `.txt` + one `.csv` per artifact).
+//!
+//! Paper-vs-reproduced commentary lives in EXPERIMENTS.md; these renderers
+//! print the *measured* (substrate) numbers next to the paper's where the
+//! paper's are data (Table 1, Fig 10).
+
+use std::fmt::Write as _;
+
+use super::sweep::{self, DesignPoint};
+use super::TextTable;
+use crate::accel::platform::{self, Platform};
+use crate::accel::{frequency, latency, power, resources, roofline, tiling::TileConfig};
+use crate::baselines::{literature, nonadaptive};
+use crate::model::quant::BitWidth;
+use crate::model::{presets, TnnConfig};
+
+const BW: BitWidth = BitWidth::Fixed16;
+
+fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Fig 5 — frequency and normalized latency vs tile counts.
+pub fn fig05() -> (String, TextTable) {
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let pts = sweep::tile_sweep(&cfg, &platform::u55c(), BW);
+    let min_lat = pts.iter().map(|p| p.latency_ms).fold(f64::INFINITY, f64::min);
+    let mut t = TextTable::new(&[
+        "tiles_mha", "tiles_ffn", "ts_mha", "ts_ffn", "freq_mhz", "latency_ms", "latency_norm",
+    ]);
+    for p in &pts {
+        t.row(vec![
+            p.tiles_mha.to_string(),
+            p.tiles_ffn.to_string(),
+            p.ts_mha.to_string(),
+            p.ts_ffn.to_string(),
+            fmt_f(p.freq_mhz, 1),
+            fmt_f(p.latency_ms, 3),
+            fmt_f(p.latency_ms / min_lat, 3),
+        ]);
+    }
+    let best = sweep::best_by_latency(&pts).unwrap();
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 5 — choosing the optimum tile size (BERT-ish d=768, SL=64, U55C)");
+    let _ = writeln!(
+        s,
+        "paper: optimum at 12 MHA tiles / 6 FFN tiles, 200 MHz.  reproduced optimum: {} / {} at {:.0} MHz\n",
+        best.tiles_mha, best.tiles_ffn, best.freq_mhz
+    );
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Fig 8 — performance and resources vs attention heads.
+pub fn fig08() -> (String, TextTable) {
+    let base = TnnConfig::encoder(64, 768, 8, 12);
+    let pts = sweep::heads_sweep(&base, &platform::u55c(), BW);
+    let min_lat = pts.iter().map(|p| p.latency_ms).fold(f64::INFINITY, f64::min);
+    let mut t = TextTable::new(&["heads", "freq_mhz", "latency_norm", "dsp", "lut_k"]);
+    for p in &pts {
+        t.row(vec![
+            p.heads.to_string(),
+            fmt_f(p.freq_mhz, 1),
+            fmt_f(p.latency_ms / min_lat, 3),
+            p.dsp.to_string(),
+            fmt_f(p.lut as f64 / 1e3, 0),
+        ]);
+    }
+    let best = pts
+        .iter()
+        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .map(|p| p.heads)
+        .unwrap_or(0);
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 8 — performance & resource utilization vs attention heads (U55C)");
+    let _ = writeln!(s, "paper: optimal 6–10 heads; frequency decays beyond.  reproduced optimum: {best} heads\n");
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Fig 9 — DSP/LUT/BRAM utilization vs tile sizes.
+pub fn fig09() -> (String, TextTable) {
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let p = platform::u55c();
+    let mut t = TextTable::new(&["ts_mha", "ts_ffn", "dsp_pct", "lut_pct", "bram_pct", "fits"]);
+    for (tm, tf) in [(32, 64), (64, 96), (64, 128), (64, 192), (96, 192), (128, 192), (128, 256), (192, 384)] {
+        let tiles = TileConfig::for_fabric(tm, tf, 768);
+        let r = resources::estimate(&cfg, &tiles, BW, &p);
+        t.row(vec![
+            tm.to_string(),
+            tf.to_string(),
+            fmt_f(100.0 * r.dsp_util, 1),
+            fmt_f(100.0 * r.lut_util, 1),
+            fmt_f(100.0 * r.bram_util, 1),
+            r.check_fit(&p).is_ok().to_string(),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 9 — utilization vs tile size (U55C; DSPs saturate first: compute-bound)");
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// The substrate-measured ADAPTOR row for a workload (GOPS from the
+/// latency model at the build's frequency, power from the power model).
+pub fn adaptor_row(cfg: &TnnConfig) -> (f64, f64, resources::ResourceEstimate, f64) {
+    let synth_cfg = TnnConfig::encoder(64, 768, 8, 12); // fixed synthesis
+    let p = platform::u55c();
+    let tiles = TileConfig::paper_optimum();
+    let r = resources::estimate(&synth_cfg, &tiles, BW, &p);
+    let f = frequency::fmax_mhz(&p, &r);
+    let lat = latency::model_latency(cfg, &tiles);
+    let gops = lat.gops_at(cfg, f);
+    let watts = power::total_power_w(&p, &r, f);
+    (gops, watts, r, f)
+}
+
+/// Fig 10 — cross-platform power comparison.
+pub fn fig10() -> (String, TextTable) {
+    let mut t = TextTable::new(&["model", "device", "kind", "power_w", "gops_per_w", "source"]);
+    for pt in literature::fig10() {
+        t.row(vec![
+            pt.model.to_string(),
+            pt.device.to_string(),
+            format!("{:?}", pt.kind),
+            fmt_f(pt.power_w, 1),
+            fmt_f(pt.gops_per_w, 2),
+            if pt.verbatim { pt.citation.to_string() } else { format!("{} (ratio-derived)", pt.citation) },
+        ]);
+    }
+    // substrate-measured ADAPTOR rows next to the paper's anchors
+    for (name, cfg) in [
+        ("BERT", presets::bert_base(64)),
+        ("Custom Encoder", presets::custom_encoder_4l()),
+        ("Shallow Transformer", presets::shallow_transformer()),
+    ] {
+        let (gops, watts, _, _) = adaptor_row(&cfg);
+        t.row(vec![
+            name.to_string(),
+            "ADAPTOR-RS (substrate)".to_string(),
+            "Fpga".to_string(),
+            fmt_f(watts, 1),
+            fmt_f(gops / watts, 2),
+            "(this repo)".to_string(),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 10 — power consumption & power efficiency across platforms");
+    let _ = writeln!(s, "paper claims reproduced in data: ADAPTOR 1.2x vs K80, 2.87x vs i7-8700K (BERT)\n");
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Fig 11 — portability across U55C / ZCU102 / VC707.
+pub fn fig11() -> (String, TextTable) {
+    let cfg = presets::custom_encoder(); // d=200, h=3, N=2, SL=64
+    let mut t = TextTable::new(&[
+        "platform", "ts_mha", "ts_ffn", "dsp_pct", "lut_pct", "freq_mhz", "latency_ms",
+    ]);
+    // the paper's chosen per-platform tile sizes
+    let choices: [(&Platform, usize, usize); 3] = [
+        (&platform::u55c(), 200, 200),
+        (&platform::zcu102(), 25, 50),
+        (&platform::vc707(), 50, 50),
+    ];
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for (p, tm, tf) in choices {
+        let tiles = TileConfig::for_fabric(tm, tf, cfg.d_model);
+        let r = resources::estimate(&cfg, &tiles, BW, p);
+        let f = frequency::fmax_mhz(p, &r);
+        let lat = latency::model_latency(&cfg, &tiles).ms_at(f);
+        rows.push((p.name.clone(), lat));
+        t.row(vec![
+            p.name.clone(),
+            tm.to_string(),
+            tf.to_string(),
+            fmt_f(100.0 * r.dsp_util, 1),
+            fmt_f(100.0 * r.lut_util, 1),
+            fmt_f(f, 1),
+            fmt_f(lat, 3),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 11 — portability: custom encoder (d=200, h=3, N=2, SL=64) per platform");
+    let _ = writeln!(
+        s,
+        "paper: U55C fastest (max tiles), ZCU102/VC707 fit with reduced tiles at ~100% util.\nreproduced order: {}\n",
+        rows.iter().map(|(n, l)| format!("{n}={l:.3}ms")).collect::<Vec<_>>().join("  ")
+    );
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Fig 12 — roofline.
+pub fn fig12() -> (String, TextTable) {
+    let p = platform::u55c();
+    let tiles = TileConfig::paper_optimum();
+    let workloads = [
+        ("BERT (TS 64/192)", presets::bert_base(64)),
+        ("custom encoder", presets::custom_encoder_4l()),
+        ("shallow transformer", presets::shallow_transformer()),
+    ];
+    let pts: Vec<(&str, TnnConfig, f64)> = workloads
+        .iter()
+        .map(|(n, c)| {
+            let lat = latency::model_latency(c, &tiles);
+            (*n, *c, lat.gops_at(c, 200.0))
+        })
+        .collect();
+    let r = roofline::roofline(&p, &tiles, 200.0, BW.bytes(), &pts);
+    let mut t = TextTable::new(&["point", "oi_ops_per_byte", "attained_gops", "bound_gops", "regime"]);
+    for pt in &r.points {
+        t.row(vec![
+            pt.name.clone(),
+            fmt_f(pt.oi, 1),
+            fmt_f(pt.attained_gops, 1),
+            fmt_f(pt.bound_gops, 1),
+            if pt.oi < r.ridge_oi { "memory-bound" } else { "compute-bound" }.to_string(),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 12 — roofline (U55C synthesis)");
+    let _ = writeln!(
+        s,
+        "compute bound: {:.1} GOPS (paper: 53 GOPS = 0.053 TOPS); stream bound: {:.2} GB/s (paper's axis typo'd as 200 kB/s); ridge OI: {:.1}\n",
+        r.peak_gops, r.stream_gbps, r.ridge_oi
+    );
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Fig 13 — GOPS vs DSP utilization across tile combinations.
+pub fn fig13() -> (String, TextTable) {
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let pts = sweep::tile_sweep(&cfg, &platform::u55c(), BW);
+    let mut sorted: Vec<&DesignPoint> = pts.iter().collect();
+    sorted.sort_by(|a, b| a.dsp_util.partial_cmp(&b.dsp_util).unwrap());
+    let mut t = TextTable::new(&["dsp_util_pct", "ts_mha", "ts_ffn", "freq_mhz", "gops"]);
+    for p in sorted {
+        t.row(vec![
+            fmt_f(100.0 * p.dsp_util, 1),
+            p.ts_mha.to_string(),
+            p.ts_ffn.to_string(),
+            fmt_f(p.freq_mhz, 1),
+            fmt_f(p.gops, 1),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Fig 13 — effect of DSP utilization on GOPS across tile combinations");
+    let _ = writeln!(s, "paper: GOPS rises with DSP use, then frequency decay bends it back down\n");
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Table 1 — FPGA-accelerator comparison (paper rows + substrate rows).
+pub fn table1() -> (String, TextTable) {
+    let mut t = TextTable::new(&[
+        "network", "accelerator", "dsp", "lut_k", "gops", "power_w", "gops/kdsp", "gops/klut", "gops/w", "sparsity",
+    ]);
+    for r in literature::table1() {
+        t.row(vec![
+            r.network.to_string(),
+            format!("{} {}", r.accelerator, r.citation),
+            r.dsp.to_string(),
+            fmt_f(r.lut as f64 / 1e3, 0),
+            fmt_f(r.gops, 1),
+            r.power_w.map(|p| fmt_f(p, 1)).unwrap_or_else(|| "-".into()),
+            fmt_f(r.gops_per_kdsp(), 2),
+            fmt_f(r.gops_per_klut(), 3),
+            r.gops_per_watt().map(|p| fmt_f(p, 2)).unwrap_or_else(|| "-".into()),
+            r.sparsity.map(|s| format!("{:.0}%", 100.0 * s)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    for (net, cfg) in [
+        ("Shallow Transformer", presets::shallow_transformer()),
+        ("Custom Transformer Encoder", presets::custom_encoder_4l()),
+        ("BERT", presets::bert_base(64)),
+    ] {
+        let (gops, watts, r, _) = adaptor_row(&cfg);
+        t.row(vec![
+            net.to_string(),
+            "ADAPTOR-RS (substrate)".to_string(),
+            r.dsp.to_string(),
+            fmt_f(r.lut as f64 / 1e3, 0),
+            fmt_f(gops, 1),
+            fmt_f(watts, 1),
+            fmt_f(gops / r.dsp as f64 * 1e3, 2),
+            fmt_f(gops / r.lut as f64 * 1e3, 3),
+            fmt_f(gops / watts, 2),
+            "0%".to_string(),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 1 — comparison with FPGA accelerators (paper rows verbatim + substrate rows)");
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Table 2 — analytical vs (simulated-)experimental validation.
+pub fn table2() -> (String, TextTable) {
+    let p = platform::u55c();
+    let rows = [
+        (64usize, 768usize, 8usize, 64usize, 128usize),
+        (128, 768, 8, 64, 128),
+        (64, 512, 8, 64, 128),
+        (64, 768, 8, 128, 192),
+    ];
+    let mut t = TextTable::new(&[
+        "sl", "d", "h", "ts", "method", "dsp", "bram18k", "freq_mhz", "SA_ms", "LWA_ms", "FFN1_ms", "total_ms", "max_err_pct",
+    ]);
+    for (sl, d, h, tm, tf) in rows {
+        let cfg = TnnConfig::encoder(sl, d, h, 12);
+        let tiles = TileConfig::for_fabric(tm, tf, 768);
+        let v = sweep::validate(&cfg, &tiles, &p, BW);
+        t.row(vec![
+            sl.to_string(),
+            d.to_string(),
+            h.to_string(),
+            format!("{tm}/{tf}"),
+            "analytical".into(),
+            fmt_f(v.dsp_analytical, 0),
+            fmt_f(v.bram_analytical, 0),
+            fmt_f(v.freq_mhz, 0),
+            fmt_f(v.sa_ms_analytical, 4),
+            fmt_f(v.lwa_ms_analytical, 4),
+            fmt_f(v.ffn_ms_analytical, 4),
+            fmt_f(v.total_ms_analytical, 2),
+            String::new(),
+        ]);
+        t.row(vec![
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            "simulated".into(),
+            v.dsp_structural.to_string(),
+            v.bram_structural.to_string(),
+            fmt_f(v.freq_mhz, 0),
+            fmt_f(v.sa_ms_simulated, 4),
+            fmt_f(v.lwa_ms_simulated, 4),
+            fmt_f(v.ffn_ms_simulated, 4),
+            fmt_f(v.total_ms_simulated, 2),
+            fmt_f(100.0 * v.max_latency_error(), 2),
+        ]);
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 2 — analytical model vs cycle-level simulation (paper: <=1.8% latency error)");
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// Extra: the adaptivity ablation (deployment cost vs a per-model
+/// re-synthesized accelerator) — quantifies §1's motivation.
+pub fn ablation_adaptivity() -> (String, TextTable) {
+    let p = platform::u55c();
+    let models = vec![
+        presets::bert_base(64),
+        presets::shallow_transformer(),
+        presets::custom_encoder_4l(),
+        presets::small_encoder(64, 4),
+    ];
+    let c = nonadaptive::deployment_cost(&models, &p, &TileConfig::paper_optimum(), BW);
+    let mut t = TextTable::new(&["flow", "synthesis_hours", "sum_inference_ms"]);
+    t.row(vec!["ADAPTOR (runtime registers)".into(), fmt_f(c.adaptor_synthesis_hours, 0), fmt_f(c.adaptor_inference_ms, 1)]);
+    t.row(vec!["per-model custom synthesis".into(), fmt_f(c.nonadaptive_synthesis_hours, 0), fmt_f(c.nonadaptive_inference_ms, 1)]);
+    let mut s = String::new();
+    let _ = writeln!(s, "Ablation — runtime adaptivity vs per-model re-synthesis over {} models", c.models);
+    s.push_str(&t.render());
+    (s, t)
+}
+
+/// All report generators by name.
+pub fn all() -> Vec<(&'static str, fn() -> (String, TextTable))> {
+    vec![
+        ("fig5", fig05 as fn() -> (String, TextTable)),
+        ("fig8", fig08),
+        ("fig9", fig09),
+        ("fig10", fig10),
+        ("fig11", fig11),
+        ("fig12", fig12),
+        ("fig13", fig13),
+        ("table1", table1),
+        ("table2", table2),
+        ("ablation", ablation_adaptivity),
+    ]
+}
+
+/// Render one report by name.
+pub fn render(name: &str) -> Option<String> {
+    all().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f().0)
+}
+
+/// Write every report (txt + csv) into `out_dir`.
+pub fn write_all(out_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Vec<String>> {
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    for (name, f) in all() {
+        let (text, table) = f();
+        let txt = dir.join(format!("{name}.txt"));
+        std::fs::write(&txt, &text)?;
+        let csv = dir.join(format!("{name}.csv"));
+        std::fs::write(&csv, table.to_csv())?;
+        written.push(name.to_string());
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_report_renders_nonempty() {
+        for (name, f) in all() {
+            let (text, table) = f();
+            assert!(text.len() > 100, "{name} too short");
+            assert!(!table.rows.is_empty(), "{name} has no rows");
+        }
+    }
+
+    #[test]
+    fn table1_contains_substrate_and_paper_rows() {
+        let (text, _) = table1();
+        assert!(text.contains("ADAPTOR-RS (substrate)"));
+        assert!(text.contains("FTRANS"));
+        assert!(text.contains("FQ-BERT"));
+    }
+
+    #[test]
+    fn table2_reports_small_errors() {
+        let (_, t) = table2();
+        // every "simulated" row carries a max_err_pct < 6
+        for r in t.rows.iter().filter(|r| r[4] == "simulated") {
+            let err: f64 = r[12].parse().unwrap();
+            assert!(err < 6.0, "validation error {err}%");
+        }
+    }
+
+    #[test]
+    fn fig11_reports_all_three_platforms() {
+        let (text, t) = fig11();
+        assert_eq!(t.rows.len(), 3);
+        for name in ["Alveo U55C", "ZCU102", "VC707"] {
+            assert!(text.contains(name), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn render_by_name() {
+        assert!(render("fig5").is_some());
+        assert!(render("nope").is_none());
+    }
+}

@@ -1,0 +1,46 @@
+//! Dense CPU baseline executor: times the reference implementation on the
+//! host — the "general-purpose platform" side of the paper's §1 argument
+//! and the speedup-shape comparator for the serving benches.
+
+use std::time::Instant;
+
+use crate::model::reference;
+use crate::model::weights::{LayerWeights, Mat};
+
+/// Result of one timed CPU inference.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuRun {
+    pub ms: f64,
+    pub gops: f64,
+}
+
+/// Run `cfg`-shaped encoder inference on the CPU reference and time it.
+pub fn run_encoder(
+    x: &Mat,
+    layers: &[LayerWeights],
+    mask: &Mat,
+    total_ops: u64,
+) -> (Mat, CpuRun) {
+    let t0 = Instant::now();
+    let out = reference::encoder_stack(x, layers, mask);
+    let dt = t0.elapsed().as_secs_f64();
+    (out, CpuRun { ms: dt * 1e3, gops: total_ops as f64 / dt / 1e9 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ops, presets, weights};
+
+    #[test]
+    fn cpu_run_produces_finite_output_and_positive_gops() {
+        let cfg = presets::small_encoder(16, 2);
+        let ws = weights::init_stack(0, cfg.d_model, cfg.heads, cfg.enc_layers);
+        let x = weights::init_input(0, cfg.seq_len, cfg.d_model);
+        let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+        let (out, run) = run_encoder(&x, &ws, &mask, ops::total_ops(&cfg));
+        assert_eq!((out.rows, out.cols), (16, 256));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        assert!(run.gops > 0.0 && run.ms > 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! The comparison universe of the paper's evaluation.
+//!
+//! * [`literature`] — the exact datapoints the paper cites for Table 1 and
+//!   Fig 10 (the paper itself compares against published numbers, not
+//!   re-measured systems; we encode them with their citation keys).
+//! * [`nonadaptive`] — an executable baseline: the "custom accelerator
+//!   synthesized per model" that ADAPTOR's runtime adaptivity replaces
+//!   (per-model optimal tiles, but a synthesis cost per topology change).
+//! * [`cpu`] — a dense CPU executor (the reference implementation timed),
+//!   used for speedup shapes and as the serving engine's oracle.
+
+pub mod cpu;
+pub mod literature;
+pub mod nonadaptive;

@@ -1,0 +1,143 @@
+//! The non-adaptive baseline: a custom accelerator re-synthesized per
+//! model — the workflow ADAPTOR's runtime adaptivity eliminates (§1: "Most
+//! of these works ... their logic circuits go through the time-consuming
+//! synthesis steps for different models").
+//!
+//! Per-model synthesis picks the best tile configuration for that single
+//! topology (it can specialize!), but every topology change costs a full
+//! HLS+implementation run — the paper quotes ≈36 hours for a SOTA
+//! transformer (§3.10).  The ablation bench quantifies the tradeoff.
+
+use crate::accel::{frequency, latency, resources, tiling::TileConfig};
+use crate::accel::platform::Platform;
+use crate::model::quant::BitWidth;
+use crate::model::TnnConfig;
+
+/// Paper §3.10: compilation time for a state-of-the-art transformer.
+pub const SYNTHESIS_HOURS: f64 = 36.0;
+
+/// Outcome of specializing a synthesis to one model.
+#[derive(Debug, Clone)]
+pub struct Specialized {
+    pub tiles: TileConfig,
+    pub freq_mhz: f64,
+    pub latency_ms: f64,
+    pub gops: f64,
+}
+
+/// Exhaustively pick the best legal tile configuration for `cfg` on
+/// `platform` (what a per-model custom design would do).
+pub fn specialize(cfg: &TnnConfig, platform: &Platform, bw: BitWidth) -> Option<Specialized> {
+    let mut best: Option<Specialized> = None;
+    for tiles_mha in 1..=48usize {
+        for tiles_ffn in 1..=12usize {
+            if cfg.d_model % tiles_mha != 0 || cfg.d_model % tiles_ffn != 0 {
+                continue;
+            }
+            let ts = TileConfig::new(cfg.d_model / tiles_mha, cfg.d_model / tiles_ffn);
+            let r = resources::estimate(cfg, &ts, bw, platform);
+            if r.check_fit(platform).is_err() {
+                continue;
+            }
+            let f = frequency::fmax_mhz(platform, &r);
+            let lat = latency::model_latency(cfg, &ts);
+            let ms = lat.ms_at(f);
+            let cand = Specialized { tiles: ts, freq_mhz: f, latency_ms: ms, gops: lat.gops_at(cfg, f) };
+            if best.as_ref().map(|b| cand.latency_ms < b.latency_ms).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+/// Time to deploy a *sequence* of models (the adaptivity ablation):
+/// ADAPTOR synthesizes once and reprograms registers (microseconds);
+/// the non-adaptive flow re-synthesizes per distinct topology.
+#[derive(Debug, Clone)]
+pub struct DeploymentCost {
+    pub models: usize,
+    pub adaptor_synthesis_hours: f64,
+    pub nonadaptive_synthesis_hours: f64,
+    /// Sum of per-inference latencies (ms) for each flow.
+    pub adaptor_inference_ms: f64,
+    pub nonadaptive_inference_ms: f64,
+}
+
+/// Compare both flows over a model sequence on `platform` with ADAPTOR's
+/// fixed `adaptor_tiles`.
+pub fn deployment_cost(
+    models: &[TnnConfig],
+    platform: &Platform,
+    adaptor_tiles: &TileConfig,
+    bw: BitWidth,
+) -> DeploymentCost {
+    let mut adaptor_ms = 0.0;
+    let mut nonadaptive_ms = 0.0;
+    let mut distinct = std::collections::HashSet::new();
+    for cfg in models {
+        let r = resources::estimate(cfg, adaptor_tiles, bw, platform);
+        let f = frequency::fmax_mhz(platform, &r);
+        adaptor_ms += latency::model_latency(cfg, adaptor_tiles).ms_at(f);
+        if let Some(s) = specialize(cfg, platform, bw) {
+            nonadaptive_ms += s.latency_ms;
+        } else {
+            nonadaptive_ms += f64::INFINITY;
+        }
+        distinct.insert((cfg.seq_len, cfg.d_model, cfg.heads, cfg.hidden, cfg.enc_layers, cfg.dec_layers));
+    }
+    DeploymentCost {
+        models: models.len(),
+        adaptor_synthesis_hours: SYNTHESIS_HOURS, // once, ever
+        nonadaptive_synthesis_hours: SYNTHESIS_HOURS * distinct.len() as f64,
+        adaptor_inference_ms: adaptor_ms,
+        nonadaptive_inference_ms: nonadaptive_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::platform;
+    use crate::model::presets;
+
+    #[test]
+    fn specialization_beats_or_ties_fixed_tiles_on_latency() {
+        let p = platform::u55c();
+        let cfg = presets::shallow_transformer();
+        let spec = specialize(&cfg, &p, BitWidth::Fixed16).unwrap();
+        let fixed = TileConfig::paper_optimum();
+        let r = resources::estimate(&cfg, &fixed, BitWidth::Fixed16, &p);
+        let f = frequency::fmax_mhz(&p, &r);
+        let fixed_ms = latency::model_latency(&cfg, &fixed).ms_at(f);
+        assert!(spec.latency_ms <= fixed_ms * 1.001, "{} vs {}", spec.latency_ms, fixed_ms);
+    }
+
+    #[test]
+    fn adaptor_wins_deployment_time_for_many_models() {
+        let p = platform::u55c();
+        let models = vec![
+            presets::bert_base(64),
+            presets::shallow_transformer(),
+            presets::custom_encoder_4l(),
+            presets::small_encoder(64, 4),
+        ];
+        let c = deployment_cost(&models, &p, &TileConfig::paper_optimum(), BitWidth::Fixed16);
+        assert_eq!(c.nonadaptive_synthesis_hours, 4.0 * SYNTHESIS_HOURS);
+        assert_eq!(c.adaptor_synthesis_hours, SYNTHESIS_HOURS);
+        // inference gap is milliseconds; synthesis gap is days.
+        let gap_hours = c.nonadaptive_synthesis_hours - c.adaptor_synthesis_hours;
+        let inf_gap_hours = (c.nonadaptive_inference_ms - c.adaptor_inference_ms).abs() / 3.6e6;
+        assert!(gap_hours > 1e4 * inf_gap_hours);
+    }
+
+    #[test]
+    fn specialize_respects_device_fit() {
+        // a big model on a small device must pick tiles that fit (or none).
+        let z = platform::zcu102();
+        if let Some(s) = specialize(&presets::bert_base(64), &z, BitWidth::Fixed16) {
+            let r = resources::estimate(&presets::bert_base(64), &s.tiles, BitWidth::Fixed16, &z);
+            assert!(r.check_fit(&z).is_ok());
+        }
+    }
+}

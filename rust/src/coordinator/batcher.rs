@@ -1,0 +1,168 @@
+//! Dynamic request batching.
+//!
+//! The fabric processes one sequence at a time (like the FPGA), so a batch
+//! is a *drain schedule*: the batcher groups compatible requests (same
+//! registered model → same register programming) to amortize register
+//! writes and weight residency, and closes a batch on size or deadline —
+//! the standard serving tradeoff between throughput and tail latency.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Close a batch at this many requests.
+    pub max_batch: usize,
+    /// ... or when the oldest member has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// One queued item.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub model: String,
+    pub arrived: Instant,
+    pub payload: T,
+}
+
+/// Accumulates pending requests per model and emits ready batches.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: Vec<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, model: &str, payload: T) {
+        self.queue.push(Pending { model: model.to_string(), arrived: Instant::now(), payload });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Earliest deadline among queued items (for the drain loop's sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.iter().map(|p| p.arrived + self.policy.max_wait).min()
+    }
+
+    /// Pop a ready batch: all queued items for the model of the *oldest*
+    /// request, if that model's group hit `max_batch` or its oldest member
+    /// timed out (or `force` is set).  Model grouping amortizes register
+    /// reprogramming, FIFO-by-oldest preserves fairness across models.
+    pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<(String, Vec<Pending<T>>)> {
+        let oldest = self.queue.iter().min_by_key(|p| p.arrived)?;
+        let model = oldest.model.clone();
+        let group: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.model == model)
+            .map(|(i, _)| i)
+            .take(self.policy.max_batch)
+            .collect();
+        let timed_out = now.duration_since(oldest.arrived) >= self.policy.max_wait;
+        if !force && group.len() < self.policy.max_batch && !timed_out {
+            return None;
+        }
+        let mut batch = Vec::with_capacity(group.len());
+        for i in group.into_iter().rev() {
+            batch.push(self.queue.remove(i));
+        }
+        batch.reverse();
+        Some((model, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Batcher<u32> {
+        Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(50) })
+    }
+
+    #[test]
+    fn batch_closes_on_size() {
+        let mut b = mk();
+        b.push("m", 1);
+        b.push("m", 2);
+        assert!(b.pop_ready(Instant::now(), false).is_none());
+        b.push("m", 3);
+        let (model, batch) = b.pop_ready(Instant::now(), false).unwrap();
+        assert_eq!(model, "m");
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batch_closes_on_deadline() {
+        let mut b = mk();
+        b.push("m", 1);
+        assert!(b.pop_ready(Instant::now(), false).is_none());
+        let later = Instant::now() + Duration::from_millis(60);
+        let (_, batch) = b.pop_ready(later, false).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn force_drains_immediately() {
+        let mut b = mk();
+        b.push("m", 9);
+        let (_, batch) = b.pop_ready(Instant::now(), true).unwrap();
+        assert_eq!(batch[0].payload, 9);
+    }
+
+    #[test]
+    fn groups_by_model_fifo_fairness() {
+        let mut b = mk();
+        b.push("a", 1);
+        b.push("b", 2);
+        b.push("a", 3);
+        b.push("a", 4); // "a" reaches max_batch = 3
+        let (model, batch) = b.pop_ready(Instant::now(), false).unwrap();
+        assert_eq!(model, "a");
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(b.len(), 1); // "b" still queued
+        // b's batch opens on timeout, not size
+        let later = Instant::now() + Duration::from_millis(60);
+        let (model, batch) = b.pop_ready(later, false).unwrap();
+        assert_eq!(model, "b");
+        assert_eq!(batch[0].payload, 2);
+    }
+
+    #[test]
+    fn oversize_group_splits_at_max_batch() {
+        let mut b = mk();
+        for i in 0..7 {
+            b.push("m", i);
+        }
+        let (_, first) = b.pop_ready(Instant::now(), false).unwrap();
+        assert_eq!(first.len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = mk();
+        assert!(b.next_deadline().is_none());
+        b.push("m", 1);
+        let d1 = b.next_deadline().unwrap();
+        b.push("m", 2);
+        assert_eq!(b.next_deadline().unwrap(), d1);
+    }
+}

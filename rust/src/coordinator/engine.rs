@@ -1,0 +1,661 @@
+//! The tile-schedule engine — ADAPTOR's fabric, numerically.
+//!
+//! Executes a transformer encoder exactly the way the hardware does
+//! (Fig 2/3, Algorithms 1–17): fixed-shape processing modules (the AOT
+//! tile primitives) are invoked over the tile schedules of §3.9, partial
+//! sums accumulate across column tiles (Fig 4a) and 2-D tiles (Fig 4b),
+//! and every *runtime* parameter (sequence length, heads, embedding and
+//! hidden dims, layer count) arrives through the configuration register
+//! file — changing them re-bounds these rust loops and rewrites masks,
+//! and NEVER recompiles an artifact (the `compiled_count` probe in tests).
+//!
+//! Padding contract: all fabric buffers are sized for the synthesis maxima
+//! (SL_MAX × DMODEL_MAX etc.); a smaller runtime topology occupies a
+//! prefix, the attention mask and the LayerNorm dmask/count inputs fence
+//! off the rest — the exact analog of the paper's BRAM buffers + loop
+//! bounds from the `Sequence`/`Embeddings` registers.
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::accel::registers::{RegisterFile, SynthMaxima};
+use crate::model::weights::{LayerWeights, Mat};
+use crate::model::TnnConfig;
+use crate::runtime::{DeviceTensor, Executor, Tensor};
+
+/// Attention execution mode: `Split` mirrors the paper's module chain
+/// (QK_PM → softmax → SV_PM); `Fused` is the single-pass perf path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionMode {
+    Split,
+    Fused,
+}
+
+/// One layer's weights, pre-tiled into fabric-shaped panels and parked
+/// **device-resident** (§Perf iteration 2) — the substrate analog of the
+/// paper's weights living in BRAM: uploaded once at prepare time, never
+/// re-transferred on the request path.
+struct PreparedLayer {
+    /// Per head, per MHA tile: `TS_MHA × DK` panels of W_q/W_k/W_v.
+    wq: Vec<Vec<DeviceTensor>>,
+    wk: Vec<Vec<DeviceTensor>>,
+    wv: Vec<Vec<DeviceTensor>>,
+    bq: Vec<DeviceTensor>,
+    bk: Vec<DeviceTensor>,
+    bv: Vec<DeviceTensor>,
+    /// FFN1 (output projection) `TS_FFN × TS_FFN` panels, [row][col].
+    wo: Vec<Vec<DeviceTensor>>,
+    bo: DeviceTensor,
+    /// FFN2 `TS_FFN × FFN_COL` panels, [row][col].
+    w1: Vec<Vec<DeviceTensor>>,
+    b1: DeviceTensor,
+    /// FFN3 `FFN_COL × TS_FFN` panels, [row][col].
+    w2: Vec<Vec<DeviceTensor>>,
+    b2: DeviceTensor,
+    g1: DeviceTensor,
+    b1n: DeviceTensor,
+    g2: DeviceTensor,
+    b2n: DeviceTensor,
+    /// Per head, per MHA tile: packed `TS_MHA x 3*DK` panels holding the
+    /// head's Q|K|V columns side by side (Algorithm 9's simultaneous
+    /// MACs; §Perf iteration 3 — the 3*DK width is fabric-fixed, so every
+    /// runtime topology uses all lanes).
+    w_qkv_packed: Vec<Vec<DeviceTensor>>,
+    b_qkv_packed: Vec<DeviceTensor>,
+    /// Raw weights kept for the fused path.
+    raw: LayerWeights,
+}
+
+/// Reusable zero accumulator buffers (one per accumulator shape).
+struct ZeroAccs {
+    dk: DeviceTensor,
+    ffn: DeviceTensor,
+    col: DeviceTensor,
+    qkv3: DeviceTensor,
+}
+
+/// A registered model: topology + prepared weight stack.
+pub struct PreparedStack {
+    pub cfg: TnnConfig,
+    layers: Vec<PreparedLayer>,
+}
+
+/// The engine: one PJRT executor ("the fabric") + the register file.
+pub struct TileEngine {
+    exec: Executor,
+    pub registers: RegisterFile,
+    pub mode: AttentionMode,
+    /// Project a head's Q/K/V in one packed dispatch per tile
+    /// (Algorithm 9's three-MACs-per-cycle structure; §Perf iteration 3).
+    /// Perf-neutral on this substrate (kept as an ablation: 2.6x fewer
+    /// dispatches, same wall time — see EXPERIMENTS.md §Perf), so the
+    /// per-head schedule stays the default.
+    pub qkv_packed: bool,
+    /// Fully-quantized mode (§1: the paper's fabric is fixed-point): runs
+    /// the int8 QDQ artifact on the attention output, mirroring
+    /// `model.encoder_layer(quantized=True)`'s activation quantization.
+    pub quantized: bool,
+    // fabric constants (from the manifest = the synthesized shapes)
+    sl_max: usize,
+    dk: usize,
+    ts_mha: usize,
+    ts_ffn: usize,
+    ffn_col: usize,
+    dmodel_max: usize,
+    hidden_max: usize,
+}
+
+impl TileEngine {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let exec = Executor::new(artifact_dir)?;
+        let m = exec.manifest();
+        let maxima = m.synth_maxima();
+        Ok(TileEngine {
+            sl_max: m.sl_max,
+            dk: m.dk,
+            ts_mha: m.ts_mha,
+            ts_ffn: m.ts_ffn,
+            ffn_col: m.ffn_col,
+            dmodel_max: m.dmodel_max,
+            hidden_max: m.hidden_max,
+            exec,
+            registers: RegisterFile::new(maxima),
+            mode: AttentionMode::Split,
+            qkv_packed: false,
+            quantized: false,
+        })
+    }
+
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    pub fn synth_maxima(&self) -> SynthMaxima {
+        self.exec.manifest().synth_maxima()
+    }
+
+    /// Fabric divisibility constraints for the tile engine (the FPGA's
+    /// equivalents are the tile sizes baked at synthesis).
+    pub fn check_runtime_config(&self, cfg: &TnnConfig) -> anyhow::Result<()> {
+        cfg.validate_for_execution().map_err(|e| anyhow!(e))?;
+        if cfg.seq_len > self.sl_max {
+            bail!("seq_len {} > fabric SL_MAX {}", cfg.seq_len, self.sl_max);
+        }
+        if cfg.dk() != self.dk {
+            bail!("d_model/heads = {} but the fabric's head width is {}", cfg.dk(), self.dk);
+        }
+        if cfg.d_model % self.ts_ffn != 0 {
+            bail!("d_model {} not a multiple of TS_FFN {}", cfg.d_model, self.ts_ffn);
+        }
+        if cfg.hidden != 4 * cfg.d_model {
+            bail!("fabric FFN panels assume hidden = 4·d_model (got {})", cfg.hidden);
+        }
+        if cfg.d_model > self.dmodel_max || cfg.hidden > self.hidden_max {
+            bail!("topology exceeds synthesis maxima");
+        }
+        Ok(())
+    }
+
+    /// Program the register file for `cfg` (Algorithm 18 step 3).
+    pub fn program(&mut self, cfg: &TnnConfig) -> anyhow::Result<()> {
+        self.check_runtime_config(cfg)?;
+        self.registers.program(cfg).map_err(|e| anyhow!(e))
+    }
+
+    /// Pre-tile a weight stack for the fabric (Algorithm 18 steps 7–9:
+    /// "load weight axi master interface buffers").
+    pub fn prepare(&self, cfg: &TnnConfig, stack: &[LayerWeights]) -> anyhow::Result<PreparedStack> {
+        self.check_runtime_config(cfg)?;
+        if stack.len() != cfg.enc_layers {
+            bail!("{} weight layers for {} encoder layers", stack.len(), cfg.enc_layers);
+        }
+        let layers = stack.iter().map(|w| self.prepare_layer(cfg, w)).collect::<Result<_, _>>()?;
+        Ok(PreparedStack { cfg: *cfg, layers })
+    }
+
+    fn prepare_layer(&self, cfg: &TnnConfig, w: &LayerWeights) -> anyhow::Result<PreparedLayer> {
+        let d = cfg.d_model;
+        let h = cfg.heads;
+        let t_m = d / self.ts_mha;
+        let t_f = d / self.ts_ffn;
+        let t_h = cfg.hidden / self.ffn_col;
+        let panel = |m: &Mat, r0: usize, c0: usize, rows: usize, cols: usize| {
+            self.exec.to_device(&Tensor::from_mat(&m.block(r0, c0, rows, cols)))
+        };
+        let vec_pad = |v: &[f32], n: usize| {
+            let mut data = v.to_vec();
+            data.resize(n, 0.0);
+            self.exec.to_device(&Tensor::new(vec![n], data))
+        };
+        let head_tiles = |ws: &[Mat]| -> anyhow::Result<Vec<Vec<DeviceTensor>>> {
+            (0..h)
+                .map(|hh| {
+                    (0..t_m)
+                        .map(|t| panel(&ws[hh], t * self.ts_mha, 0, self.ts_mha, self.dk))
+                        .collect()
+                })
+                .collect()
+        };
+        let grid = |m: &Mat, rows: usize, cols: usize, rstep: usize, cstep: usize| -> anyhow::Result<Vec<Vec<DeviceTensor>>> {
+            (0..rows)
+                .map(|r| (0..cols).map(|c| panel(m, r * rstep, c * cstep, rstep, cstep)).collect())
+                .collect()
+        };
+        // Per-head packed Q|K|V weight panels: columns [0,3*DK) hold the
+        // head's [Q | K | V] tile side by side.
+        let dk3 = 3 * self.dk;
+        let w_qkv_packed = (0..h)
+            .map(|hh| {
+                (0..t_m)
+                    .map(|t| {
+                        let mut panel = Mat::zeros(self.ts_mha, dk3);
+                        for (blk, ws) in [(0, &w.wq), (1, &w.wk), (2, &w.wv)] {
+                            let src = ws[hh].block(t * self.ts_mha, 0, self.ts_mha, self.dk);
+                            panel.set_block(0, blk * self.dk, &src);
+                        }
+                        self.exec.to_device(&Tensor::from_mat(&panel))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let b_qkv_packed = (0..h)
+            .map(|hh| {
+                let mut b = vec![0.0f32; dk3];
+                for (blk, bs) in [(0usize, &w.bq), (1, &w.bk), (2, &w.bv)] {
+                    b[blk * self.dk..(blk + 1) * self.dk].copy_from_slice(&bs[hh]);
+                }
+                self.exec.to_device(&Tensor::new(vec![dk3], b))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(PreparedLayer {
+            w_qkv_packed,
+            b_qkv_packed,
+            wq: head_tiles(&w.wq)?,
+            wk: head_tiles(&w.wk)?,
+            wv: head_tiles(&w.wv)?,
+            bq: w.bq.iter().map(|b| self.exec.to_device(&Tensor::new(vec![self.dk], b.clone()))).collect::<anyhow::Result<_>>()?,
+            bk: w.bk.iter().map(|b| self.exec.to_device(&Tensor::new(vec![self.dk], b.clone()))).collect::<anyhow::Result<_>>()?,
+            bv: w.bv.iter().map(|b| self.exec.to_device(&Tensor::new(vec![self.dk], b.clone()))).collect::<anyhow::Result<_>>()?,
+            wo: grid(&w.wo, t_f, t_f, self.ts_ffn, self.ts_ffn)?,
+            bo: vec_pad(&w.bo, self.dmodel_max)?,
+            w1: grid(&w.w1, t_f, t_h, self.ts_ffn, self.ffn_col)?,
+            b1: vec_pad(&w.b1, self.hidden_max)?,
+            w2: grid(&w.w2, t_h, t_f, self.ffn_col, self.ts_ffn)?,
+            b2: vec_pad(&w.b2, self.dmodel_max)?,
+            g1: vec_pad(&w.g1, self.dmodel_max)?,
+            b1n: vec_pad(&w.b1n, self.dmodel_max)?,
+            g2: vec_pad(&w.g2, self.dmodel_max)?,
+            b2n: vec_pad(&w.b2n, self.dmodel_max)?,
+            raw: w.clone(),
+        })
+    }
+
+    /// Additive attention mask for the programmed sequence length.
+    fn mask_tensor(&self, sl: usize, causal: bool) -> Tensor {
+        let m = crate::model::reference::attention_mask(self.sl_max, sl, causal);
+        Tensor::from_mat(&m)
+    }
+
+    /// Column panel `[SL_MAX, width]` of a padded `[SL_MAX, cols]` tensor.
+    fn col_panel(&self, x: &Tensor, c0: usize, width: usize) -> Tensor {
+        let cols = x.shape[1];
+        let mut data = Vec::with_capacity(self.sl_max * width);
+        for r in 0..self.sl_max {
+            data.extend_from_slice(&x.data[r * cols + c0..r * cols + c0 + width]);
+        }
+        Tensor::new(vec![self.sl_max, width], data)
+    }
+
+    /// Write `src` `[SL_MAX, width]` into columns `c0..` of `dst`.
+    fn set_col_panel(&self, dst: &mut Tensor, src: &Tensor, c0: usize) {
+        let cols = dst.shape[1];
+        let width = src.shape[1];
+        for r in 0..self.sl_max {
+            dst.data[r * cols + c0..r * cols + c0 + width]
+                .copy_from_slice(&src.data[r * width..(r + 1) * width]);
+        }
+    }
+
+    /// Run the full encoder stack on `input` (`seq_len × d_model`),
+    /// returning `seq_len × d_model`.  This is the request-path entry.
+    pub fn run_encoder(&self, stack: &PreparedStack, input: &Mat) -> anyhow::Result<Mat> {
+        let cfg = &stack.cfg;
+        if self.registers.current_config() != *cfg {
+            bail!("register file is programmed for a different topology (Algorithm 18 step 3 first)");
+        }
+        if (input.rows, input.cols) != (cfg.seq_len, cfg.d_model) {
+            bail!("input is {}x{}, registers say {}x{}", input.rows, input.cols, cfg.seq_len, cfg.d_model);
+        }
+        let d = cfg.d_model;
+        // Load inputs into the (padded) input BRAM — Algorithm 1.
+        let mut x = Tensor::from_mat(&input.padded(self.sl_max, self.dmodel_max));
+        // Shared runtime-register-derived inputs, uploaded once per request
+        // (these are what the `Sequence`/`Embeddings` registers change).
+        let mask = self.exec.to_device(&self.mask_tensor(cfg.seq_len, false))?;
+        let scale = self.exec.to_device(&Tensor::scalar1(1.0 / (self.dk as f32).sqrt()))?;
+        let dmask = {
+            let mut v = vec![0.0f32; self.dmodel_max];
+            v[..d].fill(1.0);
+            self.exec.to_device(&Tensor::new(vec![self.dmodel_max], v))?
+        };
+        let count = self.exec.to_device(&Tensor::scalar1(d as f32))?;
+        // Reusable zero accumulators (inputs are never donated, so one
+        // buffer per shape serves every chain start).
+        let zeros = ZeroAccs {
+            dk: self.exec.to_device(&Tensor::zeros(vec![self.sl_max, self.dk]))?,
+            ffn: self.exec.to_device(&Tensor::zeros(vec![self.sl_max, self.ts_ffn]))?,
+            col: self.exec.to_device(&Tensor::zeros(vec![self.sl_max, self.ffn_col]))?,
+            qkv3: self.exec.to_device(&Tensor::zeros(vec![self.sl_max, 3 * self.dk]))?,
+        };
+
+        for layer in &stack.layers {
+            x = self.run_layer(cfg, layer, &x, &mask, &scale, &dmask, &count, &zeros)?;
+        }
+        let full = x.to_mat();
+        Ok(full.block(0, 0, cfg.seq_len, d))
+    }
+
+    /// One encoder layer over the tile schedules, device-resident
+    /// throughout (§Perf iteration 2): weights never leave the device,
+    /// accumulators chain buffer-to-buffer, and activations only cross the
+    /// PJRT boundary at panel (re)assembly points.
+    #[allow(clippy::too_many_arguments)]
+    fn run_layer(
+        &self,
+        cfg: &TnnConfig,
+        lw: &PreparedLayer,
+        x: &Tensor,
+        mask: &DeviceTensor,
+        scale: &DeviceTensor,
+        dmask: &DeviceTensor,
+        count: &DeviceTensor,
+        zeros: &ZeroAccs,
+    ) -> anyhow::Result<Tensor> {
+        let d = cfg.d_model;
+        let t_m = d / self.ts_mha;
+        let t_f = d / self.ts_ffn;
+        let t_h = cfg.hidden / self.ffn_col;
+        let x_dev = self.exec.to_device(x)?;
+
+        // ---- MHA (Fig 2): per-head QKV over column tiles (Fig 4a).
+        // Input panels are shared across heads — extract + upload once.
+        let x_panels: Vec<DeviceTensor> = (0..t_m)
+            .map(|t| self.exec.to_device(&self.col_panel(x, t * self.ts_mha, self.ts_mha)))
+            .collect::<anyhow::Result<_>>()?;
+        let mut attn = Tensor::zeros(vec![self.sl_max, self.dmodel_max]);
+        if self.qkv_packed {
+            // §Perf iter 3: one dispatch per tile projects the head's
+            // Q|K|V simultaneously (Algorithm 9's three MACs per cycle),
+            // then attention reads the packed block on-device.
+            for h in 0..cfg.heads {
+                let tiles = &lw.w_qkv_packed[h];
+                let mut acc =
+                    self.exec.run_dev("mm_qkv_packed", &[&x_panels[0], &tiles[0], &zeros.qkv3])?;
+                for t in 1..t_m {
+                    acc = self.exec.run_dev("mm_qkv_packed", &[&x_panels[t], &tiles[t], &acc])?;
+                }
+                let qkv = self.exec.run_dev("bias_add_qkv", &[&acc, &lw.b_qkv_packed[h]])?;
+                let o = self.exec.run_dev("attn_packed", &[&qkv, mask, scale])?;
+                self.set_col_panel(&mut attn, &self.exec.fetch(&o)?, h * self.dk);
+            }
+        } else {
+            for h in 0..cfg.heads {
+                let project = |tiles: &Vec<DeviceTensor>, bias: &DeviceTensor| -> anyhow::Result<DeviceTensor> {
+                    let mut acc = self.exec.run_dev("mm_qkv", &[&x_panels[0], &tiles[0], &zeros.dk])?;
+                    for t in 1..t_m {
+                        acc = self.exec.run_dev("mm_qkv", &[&x_panels[t], &tiles[t], &acc])?;
+                    }
+                    self.exec.run_dev("bias_add_dk", &[&acc, bias])
+                };
+                let q = project(&lw.wq[h], &lw.bq[h]).context("Q projection")?;
+                let k = project(&lw.wk[h], &lw.bk[h]).context("K projection")?;
+                let v = project(&lw.wv[h], &lw.bv[h]).context("V projection")?;
+                let o = match self.mode {
+                    AttentionMode::Fused => {
+                        self.exec.run_dev("attn_fused", &[&q, &k, &v, mask, scale])?
+                    }
+                    AttentionMode::Split => {
+                        let s = self.exec.run_dev("qk_scores", &[&q, &k, mask, scale])?;
+                        let p = self.exec.run_dev("softmax", &[&s])?;
+                        self.exec.run_dev("sv", &[&p, &v])?
+                    }
+                };
+                self.set_col_panel(&mut attn, &self.exec.fetch(&o)?, h * self.dk);
+            }
+        }
+
+        if self.quantized {
+            // per-tensor symmetric int8 QDQ on the attention output
+            let sc = crate::model::quant::calibrate_scale(&attn.data);
+            let attn_dev = self.exec.to_device(&attn)?;
+            let q = self
+                .exec
+                .run_dev("quantize", &[&attn_dev, &self.exec.to_device(&Tensor::scalar1(sc))?])?;
+            attn = self.exec.fetch(&q)?;
+        }
+
+        // ---- FFN1_PM: output projection, 2-D tiles (Fig 4b).
+        let a_panels: Vec<DeviceTensor> = (0..t_f)
+            .map(|r| self.exec.to_device(&self.col_panel(&attn, r * self.ts_ffn, self.ts_ffn)))
+            .collect::<anyhow::Result<_>>()?;
+        let mut proj = Tensor::zeros(vec![self.sl_max, self.dmodel_max]);
+        for c in 0..t_f {
+            let mut acc = self.exec.run_dev("mm_ffn1", &[&a_panels[0], &lw.wo[0][c], &zeros.ffn])?;
+            for r in 1..t_f {
+                acc = self.exec.run_dev("mm_ffn1", &[&a_panels[r], &lw.wo[r][c], &acc])?;
+            }
+            self.set_col_panel(&mut proj, &self.exec.fetch(&acc)?, c * self.ts_ffn);
+        }
+        let proj_dev = self.exec.to_device(&proj)?;
+        let proj_b = self.exec.run_dev("bias_add_d", &[&proj_dev, &lw.bo])?;
+        let y_dev =
+            self.exec.run_dev("residual_ln", &[&proj_b, &x_dev, &lw.g1, &lw.b1n, dmask, count])?;
+        let y = self.exec.fetch(&y_dev)?;
+
+        // ---- FFN2_PM: d -> hidden with ReLU.
+        let y_panels: Vec<DeviceTensor> = (0..t_f)
+            .map(|r| self.exec.to_device(&self.col_panel(&y, r * self.ts_ffn, self.ts_ffn)))
+            .collect::<anyhow::Result<_>>()?;
+        let mut hid = Tensor::zeros(vec![self.sl_max, self.hidden_max]);
+        for c in 0..t_h {
+            let mut acc = self.exec.run_dev("mm_ffn2", &[&y_panels[0], &lw.w1[0][c], &zeros.col])?;
+            for r in 1..t_f {
+                acc = self.exec.run_dev("mm_ffn2", &[&y_panels[r], &lw.w1[r][c], &acc])?;
+            }
+            self.set_col_panel(&mut hid, &self.exec.fetch(&acc)?, c * self.ffn_col);
+        }
+        let hid_dev = self.exec.to_device(&hid)?;
+        let hid_r = self.exec.fetch(&self.exec.run_dev("bias_relu_h", &[&hid_dev, &lw.b1])?)?;
+
+        // ---- FFN3_PM: hidden -> d.
+        let h_panels: Vec<DeviceTensor> = (0..t_h)
+            .map(|r| self.exec.to_device(&self.col_panel(&hid_r, r * self.ffn_col, self.ffn_col)))
+            .collect::<anyhow::Result<_>>()?;
+        let mut out = Tensor::zeros(vec![self.sl_max, self.dmodel_max]);
+        for c in 0..t_f {
+            let mut acc = self.exec.run_dev("mm_ffn3", &[&h_panels[0], &lw.w2[0][c], &zeros.ffn])?;
+            for r in 1..t_h {
+                acc = self.exec.run_dev("mm_ffn3", &[&h_panels[r], &lw.w2[r][c], &acc])?;
+            }
+            self.set_col_panel(&mut out, &self.exec.fetch(&acc)?, c * self.ts_ffn);
+        }
+        let out_dev = self.exec.to_device(&out)?;
+        let out_b = self.exec.run_dev("bias_add_d", &[&out_dev, &lw.b2])?;
+        let fin =
+            self.exec.run_dev("residual_ln", &[&out_b, &y_dev, &lw.g2, &lw.b2n, dmask, count])?;
+        self.exec.fetch(&fin)
+    }
+
+    /// Run one layer through a *fused* per-config artifact (the
+    /// non-adaptive baseline path) — topology must match exactly.
+    pub fn run_fused_layer(&self, name: &str, input: &Mat, w: &LayerWeights) -> anyhow::Result<Mat> {
+        let fm = self
+            .exec
+            .manifest()
+            .fused
+            .get(name)
+            .ok_or_else(|| anyhow!("no fused artifact '{name}'"))?
+            .clone();
+        if (input.rows, input.cols) != (fm.sl, fm.d_model) {
+            bail!("fused '{name}' wants {}x{}", fm.sl, fm.d_model);
+        }
+        let h = fm.heads;
+        let d = fm.d_model;
+        let dk = d / h;
+        let hid = 4 * d;
+        let cat_heads = |ms: &[Mat]| {
+            let mut data = Vec::with_capacity(h * d * dk);
+            for m in ms {
+                data.extend_from_slice(&m.data);
+            }
+            Tensor::new(vec![h, d, dk], data)
+        };
+        let cat_bias = |bs: &[Vec<f32>]| {
+            Tensor::new(vec![h, dk], bs.iter().flat_map(|b| b.iter().copied()).collect())
+        };
+        let x = Tensor::from_mat(input);
+        let mask = Tensor::from_mat(&crate::model::reference::attention_mask(fm.sl, fm.sl, false));
+        let inputs: Vec<Tensor> = vec![
+            x,
+            mask,
+            cat_heads(&w.wq),
+            cat_heads(&w.wk),
+            cat_heads(&w.wv),
+            cat_bias(&w.bq),
+            cat_bias(&w.bk),
+            cat_bias(&w.bv),
+            Tensor::new(vec![d, d], w.wo.data.clone()),
+            Tensor::new(vec![d], w.bo.clone()),
+            Tensor::new(vec![d, hid], w.w1.data.clone()),
+            Tensor::new(vec![hid], w.b1.clone()),
+            Tensor::new(vec![hid, d], w.w2.data.clone()),
+            Tensor::new(vec![d], w.b2.clone()),
+            Tensor::new(vec![d], w.g1.clone()),
+            Tensor::new(vec![d], w.b1n.clone()),
+            Tensor::new(vec![d], w.g2.clone()),
+            Tensor::new(vec![d], w.b2n.clone()),
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        Ok(self.exec.run1(name, &refs)?.to_mat())
+    }
+
+    /// Fused full-stack convenience (for the ablation bench): chains the
+    /// fused layer artifact across the stack.
+    pub fn run_fused_stack(&self, name: &str, input: &Mat, stack: &[LayerWeights]) -> anyhow::Result<Mat> {
+        let mut x = input.clone();
+        for w in stack {
+            x = self.run_fused_layer(name, &x, w)?;
+        }
+        Ok(x)
+    }
+
+    /// Access raw weights of a prepared layer (tests/fused comparisons).
+    pub fn raw_weights<'a>(&self, stack: &'a PreparedStack) -> Vec<&'a LayerWeights> {
+        stack.layers.iter().map(|l| &l.raw).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{presets, reference, weights};
+    use crate::runtime::default_artifact_dir;
+
+    fn engine() -> TileEngine {
+        TileEngine::new(default_artifact_dir()).expect("run `make artifacts` first")
+    }
+
+    fn oracle(cfg: &TnnConfig, stack: &[weights::LayerWeights], x: &Mat) -> Mat {
+        let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+        reference::encoder_stack(x, stack, &mask)
+    }
+
+    #[test]
+    fn single_layer_matches_oracle() {
+        let mut e = engine();
+        let cfg = presets::small_encoder(32, 1);
+        let ws = weights::init_stack(1, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let prepared = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(3, cfg.seq_len, cfg.d_model);
+        let got = e.run_encoder(&prepared, &x).unwrap();
+        let want = oracle(&cfg, &ws, &x);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-3, "engine vs oracle diff = {diff}");
+    }
+
+    #[test]
+    fn split_and_fused_attention_agree() {
+        let mut e = engine();
+        let cfg = presets::small_encoder(32, 1);
+        let ws = weights::init_stack(2, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let prepared = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(4, cfg.seq_len, cfg.d_model);
+        e.mode = AttentionMode::Split;
+        let a = e.run_encoder(&prepared, &x).unwrap();
+        e.mode = AttentionMode::Fused;
+        let b = e.run_encoder(&prepared, &x).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-3, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn runtime_reconfiguration_without_recompilation() {
+        // THE paper's contribution: switch topologies via registers only.
+        let mut e = engine();
+
+        let cfg1 = presets::small_encoder(32, 1);
+        let ws1 = weights::init_stack(5, cfg1.d_model, cfg1.heads, 1);
+        e.program(&cfg1).unwrap();
+        let p1 = e.prepare(&cfg1, &ws1).unwrap();
+        let x1 = weights::init_input(6, cfg1.seq_len, cfg1.d_model);
+        let o1 = e.run_encoder(&p1, &x1).unwrap();
+        assert!(o1.max_abs_diff(&oracle(&cfg1, &ws1, &x1)) < 2e-3);
+        let compiled_after_first = e.executor().compiled_count();
+
+        // different seq len, width, head count, depth — registers only
+        let cfg2 = TnnConfig::encoder(48, 128, 2, 2);
+        let ws2 = weights::init_stack(7, cfg2.d_model, cfg2.heads, 2);
+        e.program(&cfg2).unwrap();
+        let p2 = e.prepare(&cfg2, &ws2).unwrap();
+        let x2 = weights::init_input(8, cfg2.seq_len, cfg2.d_model);
+        let o2 = e.run_encoder(&p2, &x2).unwrap();
+        assert!(o2.max_abs_diff(&oracle(&cfg2, &ws2, &x2)) < 2e-3);
+
+        assert_eq!(
+            e.executor().compiled_count(),
+            compiled_after_first,
+            "reprogramming registers must not compile anything new"
+        );
+    }
+
+    #[test]
+    fn packed_and_per_head_qkv_agree() {
+        let mut e = engine();
+        let cfg = presets::small_encoder(48, 1);
+        let ws = weights::init_stack(31, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(32, cfg.seq_len, cfg.d_model);
+        e.qkv_packed = true;
+        let a = e.run_encoder(&p, &x).unwrap();
+        e.qkv_packed = false;
+        let b = e.run_encoder(&p, &x).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn fabric_constraints_are_enforced() {
+        let mut e = engine();
+        // dk != 64
+        assert!(e.program(&TnnConfig::encoder(32, 256, 8, 1)).is_err());
+        // too long
+        assert!(e.program(&TnnConfig::encoder(256, 256, 4, 1)).is_err());
+        // too wide
+        assert!(e.program(&TnnConfig::encoder(32, 1024, 16, 1)).is_err());
+        // fine
+        assert!(e.program(&presets::small_encoder(64, 2)).is_ok());
+    }
+
+    #[test]
+    fn wrong_register_state_is_rejected() {
+        let mut e = engine();
+        let cfg = presets::small_encoder(32, 1);
+        let ws = weights::init_stack(9, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        // reprogram to a different topology, then run with stale prepared stack
+        e.program(&TnnConfig::encoder(48, 128, 2, 1)).unwrap();
+        let x = weights::init_input(10, cfg.seq_len, cfg.d_model);
+        assert!(e.run_encoder(&p, &x).is_err());
+    }
+
+    #[test]
+    fn quantized_mode_is_close_but_not_identical() {
+        let mut e = engine();
+        let cfg = presets::small_encoder(32, 1);
+        let ws = weights::init_stack(41, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(42, cfg.seq_len, cfg.d_model);
+        let full = e.run_encoder(&p, &x).unwrap();
+        e.quantized = true;
+        let quant = e.run_encoder(&p, &x).unwrap();
+        let diff = full.max_abs_diff(&quant);
+        assert!(diff > 1e-6, "quantization must actually do something");
+        assert!(diff < 0.35, "int8 QDQ error out of band: {diff}");
+    }
+
+    #[test]
+    fn fused_layer_matches_tiled_layer() {
+        let mut e = engine();
+        let cfg = presets::small_encoder(64, 1); // matches fused_small_layer
+        let ws = weights::init_stack(11, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(12, cfg.seq_len, cfg.d_model);
+        let tiled = e.run_encoder(&p, &x).unwrap();
+        let fused = e.run_fused_stack("small_layer", &x, &ws).unwrap();
+        let diff = tiled.max_abs_diff(&fused);
+        assert!(diff < 2e-3, "tiled vs fused artifact diff = {diff}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving metrics — the substrate's AXI-timer (§4): per-request latency,
+//! queue wait, batch sizes, throughput.
+
+use std::time::Duration;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Accumulated serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// End-to-end request latencies, seconds.
+    pub latencies: Vec<f64>,
+    /// Queue-wait component, seconds.
+    pub queue_waits: Vec<f64>,
+    /// Batch sizes drained.
+    pub batch_sizes: Vec<usize>,
+    /// Register reprogramming events (model switches on the fabric).
+    pub reprograms: u64,
+    /// Total wall time observed, seconds.
+    pub elapsed: f64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency: Duration, queue_wait: Duration) {
+        self.latencies.push(latency.as_secs_f64());
+        self.queue_waits.push(queue_wait.as_secs_f64());
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batch_sizes.push(size);
+    }
+
+    pub fn requests(&self) -> usize {
+        self.latencies.len()
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        (!self.latencies.is_empty()).then(|| summarize(&self.latencies))
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed > 0.0 {
+            self.requests() as f64 / self.elapsed
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Human-readable report block (EXPERIMENTS.md format).
+    pub fn report(&self) -> String {
+        match self.latency_summary() {
+            None => "no requests served\n".to_string(),
+            Some(s) => format!(
+                "requests: {}\nthroughput: {:.2} req/s\nlatency ms: p50={:.2} p95={:.2} mean={:.2} max={:.2}\nmean batch: {:.2}\nreprograms: {}\n",
+                self.requests(),
+                self.throughput_rps(),
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.mean * 1e3,
+                s.max * 1e3,
+                self.mean_batch(),
+                self.reprograms,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut m = Metrics::default();
+        for i in 1..=10 {
+            m.record(Duration::from_millis(i * 10), Duration::from_millis(i));
+        }
+        m.record_batch(4);
+        m.record_batch(2);
+        m.elapsed = 1.0;
+        assert_eq!(m.requests(), 10);
+        assert_eq!(m.throughput_rps(), 10.0);
+        assert_eq!(m.mean_batch(), 3.0);
+        let s = m.latency_summary().unwrap();
+        assert!(s.p50 >= 0.05 && s.p50 <= 0.06);
+        assert!(m.report().contains("requests: 10"));
+    }
+
+    #[test]
+    fn empty_metrics_report() {
+        let m = Metrics::default();
+        assert_eq!(m.report(), "no requests served\n");
+        assert!(m.latency_summary().is_none());
+    }
+}

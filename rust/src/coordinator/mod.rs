@@ -1,0 +1,22 @@
+//! The host-software half of ADAPTOR (paper §3.11, §4, Algorithm 18) and
+//! the serving layer around it.
+//!
+//! * [`engine`] — the tile-schedule engine: executes the paper's
+//!   Algorithms 1–17 as a dataflow of fixed-shape AOT tile primitives on
+//!   the PJRT runtime, under the control of the configuration registers.
+//!   This is the numeric twin of the FPGA fabric.
+//! * [`batcher`] — dynamic request batching (size/deadline policy).
+//! * [`router`] — model registry + request routing to the fabric.
+//! * [`server`] — the threaded serving loop: clients submit token
+//!   sequences, a dedicated engine thread (exactly one fabric, like the
+//!   hardware) drains batches.
+//! * [`metrics`] — latency/throughput accounting (AXI-timer analog).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use engine::{AttentionMode, PreparedStack, TileEngine};
+pub use server::{Request, Response, Server, ServerConfig};

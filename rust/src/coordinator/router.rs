@@ -1,0 +1,138 @@
+//! Model registry + routing.
+//!
+//! Several *registered models* (topology + weights) share one fabric —
+//! ADAPTOR's whole point.  The router validates requests against the
+//! registry and the synthesis maxima before they reach the engine thread,
+//! so misconfigured requests fail fast outside the serving loop.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::accel::registers::SynthMaxima;
+use crate::model::weights::{init_stack, LayerWeights};
+use crate::model::TnnConfig;
+
+/// A deployable model: name, topology, deterministic weight seed.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub cfg: TnnConfig,
+    pub seed: u64,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, cfg: TnnConfig, seed: u64) -> Self {
+        ModelSpec { name: name.to_string(), cfg, seed }
+    }
+
+    /// Materialize the synthetic weight stack (DESIGN.md §Substitutions).
+    pub fn weights(&self) -> Vec<LayerWeights> {
+        init_stack(self.seed, self.cfg.d_model, self.cfg.heads, self.cfg.enc_layers)
+    }
+}
+
+/// The registry the router consults.
+#[derive(Debug, Default)]
+pub struct Router {
+    models: BTreeMap<String, ModelSpec>,
+    maxima: Option<SynthMaxima>,
+}
+
+impl Router {
+    pub fn new(maxima: SynthMaxima) -> Self {
+        Router { models: BTreeMap::new(), maxima: Some(maxima) }
+    }
+
+    /// Register a model; refuses topologies the fabric cannot hold.
+    pub fn register(&mut self, spec: ModelSpec) -> anyhow::Result<()> {
+        spec.cfg.validate_for_execution().map_err(|e| anyhow!(e))?;
+        if let Some(m) = &self.maxima {
+            if spec.cfg.seq_len > m.seq_len
+                || spec.cfg.d_model > m.d_model
+                || spec.cfg.hidden > m.hidden
+            {
+                bail!(
+                    "model '{}' exceeds synthesis maxima (sl {} d {} hid {})",
+                    spec.name,
+                    m.seq_len,
+                    m.d_model,
+                    m.hidden
+                );
+            }
+        }
+        if self.models.contains_key(&spec.name) {
+            bail!("model '{}' already registered", spec.name);
+        }
+        self.models.insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    pub fn lookup(&self, name: &str) -> anyhow::Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    /// Validate a request's input shape against its model.
+    pub fn route(&self, model: &str, rows: usize, cols: usize) -> anyhow::Result<&ModelSpec> {
+        let spec = self.lookup(model)?;
+        if rows != spec.cfg.seq_len || cols != spec.cfg.d_model {
+            bail!(
+                "request for '{model}' is {rows}x{cols}, expected {}x{}",
+                spec.cfg.seq_len,
+                spec.cfg.d_model
+            );
+        }
+        Ok(spec)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    pub fn specs(&self) -> impl Iterator<Item = &ModelSpec> {
+        self.models.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::registers::SynthMaxima;
+    use crate::model::presets;
+
+    fn router() -> Router {
+        Router::new(SynthMaxima::artifact_default())
+    }
+
+    #[test]
+    fn register_and_route() {
+        let mut r = router();
+        r.register(ModelSpec::new("small", presets::small_encoder(64, 2), 1)).unwrap();
+        assert!(r.route("small", 64, 256).is_ok());
+        assert!(r.route("small", 32, 256).is_err());
+        assert!(r.route("missing", 64, 256).is_err());
+    }
+
+    #[test]
+    fn oversize_model_is_refused() {
+        let mut r = router();
+        let big = TnnConfig::encoder(64, 1024, 16, 2);
+        assert!(r.register(ModelSpec::new("big", big, 1)).is_err());
+        let long = presets::small_encoder(256, 2);
+        assert!(r.register(ModelSpec::new("long", long, 1)).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_are_refused() {
+        let mut r = router();
+        r.register(ModelSpec::new("m", presets::small_encoder(64, 1), 1)).unwrap();
+        assert!(r.register(ModelSpec::new("m", presets::small_encoder(64, 1), 2)).is_err());
+    }
+
+    #[test]
+    fn weights_are_deterministic_per_seed() {
+        let a = ModelSpec::new("m", presets::small_encoder(64, 1), 42).weights();
+        let b = ModelSpec::new("m", presets::small_encoder(64, 1), 42).weights();
+        assert_eq!(a[0].wo, b[0].wo);
+    }
+}

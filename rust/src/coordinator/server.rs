@@ -1,0 +1,272 @@
+//! The serving loop.
+//!
+//! `PjRtLoadedExecutable` is not `Send`, and the paper's system has exactly
+//! one fabric — so the server owns a dedicated **engine thread** that
+//! constructs the `TileEngine` locally and drains batches from an mpsc
+//! queue.  Clients submit from any thread and receive their response over
+//! a per-request channel.  Model switches reprogram the register file
+//! (counted in metrics: that is the runtime-adaptivity event).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::{AttentionMode, PreparedStack, TileEngine};
+use super::metrics::Metrics;
+use super::router::{ModelSpec, Router};
+use crate::model::weights::Mat;
+
+/// One inference request: model name + input activations.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub model: String,
+    pub input: Mat,
+}
+
+/// The response: output activations + timing.
+#[derive(Debug)]
+pub struct Response {
+    pub output: Mat,
+    pub latency: Duration,
+    pub queue_wait: Duration,
+}
+
+/// Server construction parameters.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub models: Vec<ModelSpec>,
+    pub policy: BatchPolicy,
+    pub attention: AttentionMode,
+}
+
+impl ServerConfig {
+    pub fn new(models: Vec<ModelSpec>) -> Self {
+        ServerConfig {
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            models,
+            policy: BatchPolicy::default(),
+            attention: AttentionMode::Fused,
+        }
+    }
+}
+
+enum Msg {
+    Work { req: Request, enqueued: Instant, reply: Sender<anyhow::Result<Response>> },
+    Shutdown { reply: Sender<Metrics> },
+}
+
+/// Handle to the running server.
+pub struct Server {
+    tx: Sender<Msg>,
+    router: Router,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the engine thread; blocks until the fabric is warmed up (all
+    /// models prepared and artifacts compiled) or fails.
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+
+        // Router lives on the submit side for fail-fast validation.
+        let mut router = Router::new(crate::accel::registers::SynthMaxima::artifact_default());
+        for spec in &cfg.models {
+            router.register(spec.clone())?;
+        }
+
+        let worker = std::thread::Builder::new()
+            .name("adaptor-fabric".into())
+            .spawn(move || engine_thread(cfg, rx, ready_tx))
+            .expect("spawning engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during warmup"))??;
+        Ok(Server { tx, router, worker: Some(worker) })
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.router.names()
+    }
+
+    /// Submit a request; returns the channel the response will arrive on.
+    pub fn submit(&self, req: Request) -> anyhow::Result<Receiver<anyhow::Result<Response>>> {
+        self.router.route(&req.model, req.input.rows, req.input.cols)?;
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Work { req, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&self, req: Request) -> anyhow::Result<Response> {
+        self.submit(req)?.recv().map_err(|_| anyhow!("engine dropped the request"))?
+    }
+
+    /// Stop the engine thread and collect final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Shutdown { reply });
+        let m = rx.recv().unwrap_or_default();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        m
+    }
+}
+
+fn engine_thread(cfg: ServerConfig, rx: Receiver<Msg>, ready: Sender<anyhow::Result<()>>) {
+    // Build the fabric locally (not Send).
+    let mut engine = match TileEngine::new(&cfg.artifact_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    engine.mode = cfg.attention;
+
+    // Prepare every registered model's weights once (Algorithm 18, 4–12).
+    let mut prepared: Vec<(String, PreparedStack)> = Vec::new();
+    for spec in &cfg.models {
+        match engine.prepare(&spec.cfg, &spec.weights()) {
+            Ok(p) => prepared.push((spec.name.clone(), p)),
+            Err(e) => {
+                let _ = ready.send(Err(e.context(format!("preparing model '{}'", spec.name))));
+                return;
+            }
+        }
+    }
+    // Warm the executable cache so first requests are not compile-bound.
+    let names: Vec<&str> = [
+        "mm_qkv", "mm_ffn1", "mm_ffn2", "mm_ffn3", "bias_add_dk", "bias_add_d", "bias_relu_h",
+        "residual_ln", "qk_scores", "softmax", "sv", "attn_fused",
+    ]
+    .into();
+    if let Err(e) = engine.executor().warmup(&names) {
+        let _ = ready.send(Err(e));
+        return;
+    }
+    let _ = ready.send(Ok(()));
+
+    let mut batcher: Batcher<(Request, Instant, Sender<anyhow::Result<Response>>)> =
+        Batcher::new(cfg.policy);
+    let mut metrics = Metrics::default();
+    let started = Instant::now();
+    let mut current_model = String::new();
+    let mut shutdown_reply: Option<Sender<Metrics>> = None;
+
+    'outer: loop {
+        // Wait for work, bounded by the oldest batch deadline.
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Work { req, enqueued, reply }) => {
+                let model = req.model.clone();
+                batcher.push(&model, (req, enqueued, reply));
+            }
+            Ok(Msg::Shutdown { reply }) => {
+                shutdown_reply = Some(reply);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break 'outer,
+        }
+        let draining = shutdown_reply.is_some();
+        while let Some((model, batch)) = batcher.pop_ready(Instant::now(), draining) {
+            metrics.record_batch(batch.len());
+            let stack = prepared.iter().find(|(n, _)| *n == model);
+            // Reprogram the registers only on model switch.
+            if current_model != model {
+                if let Some((_, p)) = stack {
+                    if engine.program(&p.cfg).is_ok() {
+                        metrics.reprograms += 1;
+                        current_model = model.clone();
+                    }
+                }
+            }
+            for (req, enqueued, reply) in batch.into_iter().map(|p| p.payload) {
+                let queue_wait = enqueued.elapsed();
+                let result = match stack {
+                    None => Err(anyhow!("model '{model}' not prepared")),
+                    Some((_, p)) => {
+                        let t0 = Instant::now();
+                        engine.run_encoder(p, &req.input).map(|output| Response {
+                            output,
+                            latency: t0.elapsed() + queue_wait,
+                            queue_wait,
+                        })
+                    }
+                };
+                if let Ok(r) = &result {
+                    metrics.record(r.latency, r.queue_wait);
+                }
+                let _ = reply.send(result);
+            }
+        }
+        if draining && batcher.is_empty() {
+            break 'outer;
+        }
+    }
+    metrics.elapsed = started.elapsed().as_secs_f64();
+    if let Some(reply) = shutdown_reply {
+        let _ = reply.send(metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{presets, reference, weights};
+
+    fn server(models: Vec<ModelSpec>) -> Server {
+        let mut cfg = ServerConfig::new(models);
+        cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+        Server::start(cfg).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn serves_correct_outputs() {
+        let spec = ModelSpec::new("small", presets::small_encoder(32, 1), 21);
+        let s = server(vec![spec.clone()]);
+        let x = weights::init_input(1, 32, 256);
+        let resp = s.infer(Request { model: "small".into(), input: x.clone() }).unwrap();
+        let mask = reference::attention_mask(32, 32, false);
+        let want = reference::encoder_stack(&x, &spec.weights(), &mask);
+        assert!(resp.output.max_abs_diff(&want) < 2e-3);
+        let m = s.shutdown();
+        assert_eq!(m.requests(), 1);
+    }
+
+    #[test]
+    fn multi_model_serving_reprograms_between_models() {
+        let a = ModelSpec::new("a", presets::small_encoder(32, 1), 1);
+        let b = ModelSpec::new("b", crate::model::TnnConfig::encoder(48, 128, 2, 1), 2);
+        let s = server(vec![a, b]);
+        for i in 0..3 {
+            let xa = weights::init_input(i, 32, 256);
+            let xb = weights::init_input(i + 10, 48, 128);
+            assert!(s.infer(Request { model: "a".into(), input: xa }).is_ok());
+            assert!(s.infer(Request { model: "b".into(), input: xb }).is_ok());
+        }
+        let m = s.shutdown();
+        assert_eq!(m.requests(), 6);
+        assert!(m.reprograms >= 2, "model switches must reprogram registers");
+    }
+
+    #[test]
+    fn rejects_bad_requests_fast() {
+        let s = server(vec![ModelSpec::new("small", presets::small_encoder(32, 1), 3)]);
+        let wrong_shape = weights::init_input(0, 16, 256);
+        assert!(s.submit(Request { model: "small".into(), input: wrong_shape }).is_err());
+        let unknown = weights::init_input(0, 32, 256);
+        assert!(s.submit(Request { model: "nope".into(), input: unknown }).is_err());
+        s.shutdown();
+    }
+}

@@ -1,0 +1,39 @@
+//! # ADAPTOR-RS
+//!
+//! Reproduction of *"A Runtime-Adaptive Transformer Neural Network
+//! Accelerator on FPGAs"* (Kabir et al., 2024) as a three-layer
+//! rust + JAX + Pallas stack with AOT interchange via XLA/PJRT.
+//!
+//! The crate is organized the way the paper's system is:
+//!
+//! * [`model`] — transformer topology descriptions, presets and exact
+//!   operation/byte accounting (the paper's workloads).
+//! * [`accel`] — the FPGA fabric substitute: platform resource databases,
+//!   the paper's analytical models (Eqs 8–39), a cycle-level simulator,
+//!   post-route frequency and power models, tiling geometry, the
+//!   runtime-adaptive configuration register file, and the roofline model.
+//! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`
+//!   lowered once by `python/compile/aot.py`; Python is never on the
+//!   request path).
+//! * [`coordinator`] — the host-software half (paper §3.11, §4,
+//!   Algorithm 18): register programming, the tile-schedule engine that
+//!   executes the paper's Algorithms 1–17 over AOT tile primitives, a
+//!   request router + dynamic batcher + async server, and metrics.
+//! * [`baselines`] — literature datapoints (Table 1 / Fig 10 comparators)
+//!   and executable baselines (dense CPU oracle, non-adaptive accelerator).
+//! * [`analysis`] — design-space sweeps and the table/figure renderers that
+//!   regenerate every evaluation artifact of the paper.
+//!
+//! See DESIGN.md for the paper → substrate substitution table and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod accel;
+pub mod analysis;
+pub mod baselines;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,171 @@
+//! `adaptor` — the launcher (the paper's "host software", Algorithm 18).
+//!
+//! Subcommands:
+//!   report <name|all> [--out DIR]      regenerate paper tables/figures
+//!   simulate --model NAME [...]        analytical + cycle-sim latency
+//!   serve --model NAME [--requests N]  threaded serving demo on PJRT
+//!   sweep tiles|heads                  design-space sweeps (Fig 5/8)
+//!   presets                            list model presets
+//!   validate                           Table-2 style validation rows
+//!
+//! Arg parsing is in-tree (offline build — no clap; see util/).
+
+use adaptor::accel::{frequency, latency, power, resources, sim, tiling::TileConfig};
+use adaptor::accel::platform;
+use adaptor::analysis::report;
+use adaptor::coordinator::{Request, Server, ServerConfig};
+use adaptor::coordinator::router::ModelSpec;
+use adaptor::model::{presets, quant::BitWidth, weights};
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: adaptor <command>\n\
+         \n  gantt --model <preset>\
+         \n  report <fig5|fig8|fig9|fig10|fig11|fig12|fig13|table1|table2|ablation|all> [--out DIR]\
+         \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
+         \n  serve --model <preset> [--requests N] [--batch N]\
+         \n  sweep <tiles|heads>\
+         \n  presets\
+         \n  validate"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("report") => cmd_report(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("presets") => cmd_presets(),
+        Some("validate") => cmd_validate(),
+        Some("gantt") => cmd_gantt(&args[1..]),
+        _ => usage(),
+    }
+}
+
+fn cmd_report(args: &[String]) -> anyhow::Result<()> {
+    let name = args.first().map(String::as_str).unwrap_or("all");
+    let out = flag_value(args, "--out");
+    if name == "all" {
+        let dir = out.unwrap_or_else(|| "reports".into());
+        let written = report::write_all(&dir)?;
+        println!("wrote {} reports to {dir}/: {}", written.len(), written.join(", "));
+        return Ok(());
+    }
+    match report::render(name) {
+        Some(text) => {
+            println!("{text}");
+            Ok(())
+        }
+        None => {
+            eprintln!("unknown report '{name}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let model = flag_value(args, "--model").unwrap_or_else(|| "bert-base".into());
+    let cfg = presets::by_name(&model).unwrap_or_else(|| {
+        eprintln!("unknown preset '{model}' (see `adaptor presets`)");
+        std::process::exit(2);
+    });
+    let plat = flag_value(args, "--platform")
+        .and_then(|n| platform::by_name(&n))
+        .unwrap_or_else(platform::u55c);
+    let ts_mha: usize = flag_value(args, "--ts-mha").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let ts_ffn: usize = flag_value(args, "--ts-ffn").and_then(|v| v.parse().ok()).unwrap_or(128);
+    let tiles = TileConfig::for_fabric(ts_mha, ts_ffn, cfg.d_model.max(768));
+
+    let r = resources::estimate(&cfg, &tiles, BitWidth::Fixed16, &plat);
+    let f = frequency::fmax_mhz(&plat, &r);
+    let ana = latency::model_latency(&cfg, &tiles);
+    let s = sim::simulate(&cfg, &tiles);
+    println!("model     : {cfg}");
+    println!("platform  : {} ({})", plat.name, plat.part);
+    println!("tiles     : TS_MHA={ts_mha} TS_FFN={ts_ffn}");
+    println!("resources : {} DSP ({:.1}%), {} LUT ({:.1}%), {} BRAM18k ({:.1}%)",
+        r.dsp, 100.0 * r.dsp_util, r.lut, 100.0 * r.lut_util, r.bram18k, 100.0 * r.bram_util);
+    println!("fit       : {}", if r.check_fit(&plat).is_ok() { "ok" } else { "DOES NOT FIT" });
+    println!("frequency : {f:.1} MHz");
+    println!("analytical: {:.3} ms  ({:.1} GOPS)", ana.ms_at(f), ana.gops_at(&cfg, f));
+    println!("simulated : {:.3} ms  (err {:.2}%)", s.ms_at(f),
+        100.0 * (s.total_cycles as f64 - ana.total_cycles as f64).abs() / ana.total_cycles as f64);
+    println!("power     : {:.1} W total", power::total_power_w(&plat, &r, f));
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let model = flag_value(args, "--model").unwrap_or_else(|| "small".into());
+    let cfg = presets::by_name(&model).unwrap_or_else(|| {
+        eprintln!("unknown preset '{model}'");
+        std::process::exit(2);
+    });
+    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let batch: usize = flag_value(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
+    scfg.policy.max_batch = batch;
+    println!("starting fabric for {cfg} ...");
+    let server = Server::start(scfg)?;
+    let mut receivers = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let x = weights::init_input(i as u64, cfg.seq_len, cfg.d_model);
+        receivers.push(server.submit(Request { model: model.clone(), input: x })?);
+    }
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv()??;
+        println!("req {i:>3}: latency {:>7.2} ms (queue {:>6.2} ms)",
+            resp.latency.as_secs_f64() * 1e3, resp.queue_wait.as_secs_f64() * 1e3);
+    }
+    println!("wall time: {:.2} ms for {n} requests", t0.elapsed().as_secs_f64() * 1e3);
+    let metrics = server.shutdown();
+    println!("\n{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("tiles") => println!("{}", report::render("fig5").unwrap()),
+        Some("heads") => println!("{}", report::render("fig8").unwrap()),
+        _ => usage(),
+    }
+    Ok(())
+}
+
+fn cmd_presets() -> anyhow::Result<()> {
+    println!("{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12}", "name", "sl", "d", "h", "hidden", "enc", "dec", "params");
+    for (name, c) in presets::all() {
+        println!(
+            "{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12}",
+            name, c.seq_len, c.d_model, c.heads, c.hidden, c.enc_layers, c.dec_layers, c.total_params()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> anyhow::Result<()> {
+    println!("{}", report::render("table2").unwrap());
+    Ok(())
+}
+
+/// Render the cycle-level simulator's module schedule as a text Gantt
+/// chart (the substrate's view of the paper's module pipeline).
+fn cmd_gantt(args: &[String]) -> anyhow::Result<()> {
+    let model = flag_value(args, "--model").unwrap_or_else(|| "small".into());
+    let cfg = presets::by_name(&model).unwrap_or_else(|| {
+        eprintln!("unknown preset '{model}'");
+        std::process::exit(2);
+    });
+    let rep = sim::simulate(&cfg, &TileConfig::paper_optimum());
+    println!("{cfg} — {} cycles total\n", rep.total_cycles);
+    println!("{}", rep.trace.gantt(64));
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Transformer topology descriptions and workload accounting.
+//!
+//! A [`TnnConfig`] is the unit the paper's runtime registers describe: the
+//! *shape* of the network the fixed fabric must execute.  [`presets`] holds
+//! the models the paper evaluates; [`ops`] counts operations and bytes the
+//! way the paper's GOPS numbers do; [`quant`] describes the fixed-point
+//! datapath; [`reference`] is a dense f32 CPU implementation used both as
+//! the numerics oracle for the PJRT engine and as the CPU baseline.
+
+pub mod ops;
+pub mod presets;
+pub mod quant;
+pub mod reference;
+pub mod weights;
+
+/// A transformer topology — exactly the paper's runtime-programmable
+/// parameter set (§3.12 configuration registers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TnnConfig {
+    /// Sequence length (`Sequence` register).
+    pub seq_len: usize,
+    /// Number of attention heads (`Heads` register).
+    pub heads: usize,
+    /// Embedding dimension (`Embeddings` register), `d_model`.
+    pub d_model: usize,
+    /// Intermediate (hidden) dimension (`Hidden` register); `4*d_model`
+    /// in the standard transformer.
+    pub hidden: usize,
+    /// Number of encoder layers (`Layers_enc` register).
+    pub enc_layers: usize,
+    /// Number of decoder layers (`Layers_dec` register).
+    pub dec_layers: usize,
+}
+
+impl TnnConfig {
+    /// Encoder-only topology with the conventional `hidden = 4*d_model`.
+    pub fn encoder(seq_len: usize, d_model: usize, heads: usize, enc_layers: usize) -> Self {
+        Self { seq_len, heads, d_model, hidden: 4 * d_model, enc_layers, dec_layers: 0 }
+    }
+
+    /// Per-head dimension `d_k = d_model / h` (Eq 2 context). Rounds up for
+    /// non-divisible topologies (the paper's custom encoder has
+    /// `d_model = 200, h = 3`); the execution engine additionally requires
+    /// exact divisibility, the analytical model does not.
+    pub fn dk(&self) -> usize {
+        self.d_model.div_ceil(self.heads)
+    }
+
+    /// Total attention + FFN sub-layers, encoder and decoder stacks
+    /// combined (a decoder layer holds two attention blocks).
+    pub fn layers(&self) -> usize {
+        self.enc_layers + self.dec_layers
+    }
+
+    /// Structural sanity; returns a human-readable reason on failure.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.seq_len == 0 || self.heads == 0 || self.d_model == 0 || self.hidden == 0 {
+            return Err("all dimensions must be nonzero".into());
+        }
+        if self.enc_layers == 0 && self.dec_layers == 0 {
+            return Err("need at least one encoder or decoder layer".into());
+        }
+        Ok(())
+    }
+
+    /// Strict divisibility requirements of the *numeric* engine (the
+    /// analytical/simulated models accept anything `validate` accepts).
+    pub fn validate_for_execution(&self) -> std::result::Result<(), String> {
+        self.validate()?;
+        if self.d_model % self.heads != 0 {
+            return Err(format!(
+                "d_model {} not divisible by heads {}",
+                self.d_model, self.heads
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parameter count (weights + biases + LN affine) for one encoder layer.
+    pub fn params_per_encoder_layer(&self) -> usize {
+        let d = self.d_model;
+        let h = self.hidden;
+        // QKV + output projection + biases
+        let attn = 3 * d * d + 3 * d + d * d + d;
+        // FFN
+        let ffn = d * h + h + h * d + d;
+        // two LayerNorms
+        let ln = 4 * d;
+        attn + ffn + ln
+    }
+
+    /// Total parameter count across the stack (decoder layers counted with
+    /// the extra cross-attention block).
+    pub fn total_params(&self) -> usize {
+        let d = self.d_model;
+        let cross = 4 * d * d + 4 * d; // extra attention block per decoder layer
+        self.enc_layers * self.params_per_encoder_layer()
+            + self.dec_layers * (self.params_per_encoder_layer() + cross)
+    }
+}
+
+impl std::fmt::Display for TnnConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TNN(sl={}, d={}, h={}, ffn={}, enc={}, dec={})",
+            self.seq_len, self.d_model, self.heads, self.hidden, self.enc_layers, self.dec_layers
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_constructor_uses_4x_hidden() {
+        let c = TnnConfig::encoder(64, 768, 12, 12);
+        assert_eq!(c.hidden, 3072);
+        assert_eq!(c.dk(), 64);
+        assert!(c.validate().is_ok());
+        assert!(c.validate_for_execution().is_ok());
+    }
+
+    #[test]
+    fn dk_rounds_up_for_custom_encoder() {
+        // the paper's Fig-11 custom encoder: d=200, h=3
+        let c = TnnConfig::encoder(64, 200, 3, 2);
+        assert_eq!(c.dk(), 67);
+        assert!(c.validate().is_ok());
+        assert!(c.validate_for_execution().is_err());
+    }
+
+    #[test]
+    fn zero_dims_rejected() {
+        let mut c = TnnConfig::encoder(64, 768, 12, 1);
+        c.seq_len = 0;
+        assert!(c.validate().is_err());
+        let c2 = TnnConfig { enc_layers: 0, dec_layers: 0, ..TnnConfig::encoder(64, 768, 12, 1) };
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn bert_base_param_count_is_right_ballpark() {
+        // BERT-base encoder stack: ~85M layer params (embeddings excluded).
+        let c = TnnConfig::encoder(64, 768, 12, 12);
+        let p = c.total_params();
+        assert!(p > 80_000_000 && p < 90_000_000, "{p}");
+    }
+
+    #[test]
+    fn decoder_layers_cost_more_params() {
+        let enc = TnnConfig { dec_layers: 0, ..TnnConfig::encoder(64, 512, 8, 2) };
+        let dec = TnnConfig { enc_layers: 0, dec_layers: 2, ..enc };
+        assert!(dec.total_params() > enc.total_params());
+    }
+}

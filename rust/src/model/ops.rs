@@ -1,0 +1,173 @@
+//! Exact operation / byte accounting for transformer inference — the
+//! paper's GOPS and operational-intensity numbers (Table 1, Fig 12).
+//!
+//! Convention: one multiply-accumulate = 2 operations (the standard GOPS
+//! accounting used by the accelerators the paper compares against).
+//! Softmax/LayerNorm transcendental work is counted per element with the
+//! paper's module decomposition, but matmuls dominate everything.
+
+use super::TnnConfig;
+
+/// Per-module operation counts for one encoder layer (matching the paper's
+/// PM decomposition in Fig 2/3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerOps {
+    /// QKV_PM: 3 projections, SL x d_model x d_model MACs total across heads.
+    pub qkv: u64,
+    /// QK_PM: h · SL² · d_k MACs plus the scale division per score.
+    pub qk: u64,
+    /// Softmax: exp + div per score element (counted as 2 ops each).
+    pub softmax: u64,
+    /// SV_PM: h · SL² · d_k MACs.
+    pub sv: u64,
+    /// FFN1_PM: attention output projection, SL · d² MACs.
+    pub ffn1: u64,
+    /// FFN2_PM: SL · d · hidden MACs (+ ReLU per element).
+    pub ffn2: u64,
+    /// FFN3_PM: SL · hidden · d MACs.
+    pub ffn3: u64,
+    /// Two LayerNorm passes: ~8 ops per element (mean, var, norm, affine).
+    pub layernorm: u64,
+    /// Bias additions for QKV + FFN outputs.
+    pub bias: u64,
+}
+
+impl LayerOps {
+    pub fn total(&self) -> u64 {
+        self.qkv
+            + self.qk
+            + self.softmax
+            + self.sv
+            + self.ffn1
+            + self.ffn2
+            + self.ffn3
+            + self.layernorm
+            + self.bias
+    }
+
+    /// Attention share (MHA fraction — the paper cites 38–64 % [14, 15]).
+    pub fn attention_fraction(&self) -> f64 {
+        let attn = self.qkv + self.qk + self.softmax + self.sv;
+        attn as f64 / self.total() as f64
+    }
+}
+
+/// Operation counts for one encoder layer of `cfg`.
+pub fn encoder_layer_ops(cfg: &TnnConfig) -> LayerOps {
+    let sl = cfg.seq_len as u64;
+    let d = cfg.d_model as u64;
+    let h = cfg.heads as u64;
+    let dk = cfg.dk() as u64;
+    let hid = cfg.hidden as u64;
+    LayerOps {
+        qkv: 2 * 3 * sl * d * (h * dk), // 3 projections (h·dk ≈ d columns)
+        qk: 2 * h * sl * sl * dk + h * sl * sl, // MACs + scale division
+        softmax: 2 * h * sl * sl,       // exp + normalize per score
+        sv: 2 * h * sl * sl * dk,
+        ffn1: 2 * sl * d * d,
+        ffn2: 2 * sl * d * hid + sl * hid, // + ReLU
+        ffn3: 2 * sl * hid * d,
+        layernorm: 2 * 8 * sl * d,
+        bias: sl * (3 * h * dk + d + hid + d),
+    }
+}
+
+/// Extra ops for one *decoder* layer: a second (cross) attention block.
+pub fn decoder_layer_ops(cfg: &TnnConfig) -> u64 {
+    let l = encoder_layer_ops(cfg);
+    l.total() + l.qkv / 3 * 2 + l.qk + l.softmax + l.sv // Q from dec, K/V from enc
+}
+
+/// Total inference operations for the full stack.
+pub fn total_ops(cfg: &TnnConfig) -> u64 {
+    encoder_layer_ops(cfg).total() * cfg.enc_layers as u64
+        + decoder_layer_ops(cfg) * cfg.dec_layers as u64
+}
+
+/// Giga-operations for the full stack (the paper's "GOP" unit).
+pub fn total_gop(cfg: &TnnConfig) -> f64 {
+    total_ops(cfg) as f64 / 1e9
+}
+
+/// Bytes that must cross the off-chip interface at least once per
+/// inference: all weights + input/output activations (weights dominate;
+/// activations stay on-chip in ADAPTOR's BRAMs).
+pub fn offchip_bytes(cfg: &TnnConfig, bytes_per_elem: usize) -> u64 {
+    let weights = cfg.total_params() as u64;
+    let io = 2 * (cfg.seq_len * cfg.d_model) as u64;
+    (weights + io) * bytes_per_elem as u64
+}
+
+/// Operational intensity (ops per off-chip byte) — the roofline x-axis.
+pub fn operational_intensity(cfg: &TnnConfig, bytes_per_elem: usize) -> f64 {
+    total_ops(cfg) as f64 / offchip_bytes(cfg, bytes_per_elem) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    #[test]
+    fn matmuls_dominate() {
+        let c = presets::bert_base(64);
+        let l = encoder_layer_ops(&c);
+        let mm = l.qkv + l.qk + l.sv + l.ffn1 + l.ffn2 + l.ffn3;
+        assert!(mm as f64 / l.total() as f64 > 0.97);
+    }
+
+    #[test]
+    fn attention_fraction_matches_paper_range() {
+        // "38% to 64% of this time is spent in MHA depending on the number
+        // of tokens" — op share grows with SL.
+        let short = encoder_layer_ops(&presets::bert_base(64)).attention_fraction();
+        let long = encoder_layer_ops(&presets::bert_base(512)).attention_fraction();
+        assert!(short > 0.2 && short < 0.45, "{short}");
+        assert!(long > short, "attention share must grow with SL");
+        assert!(long < 0.75, "{long}");
+    }
+
+    #[test]
+    fn bert_base_gop_ballpark() {
+        // BERT-base @ SL=64: ~11 GFLOPs-equivalent (2·params·SL plus attn).
+        let g = total_gop(&presets::bert_base(64));
+        assert!(g > 8.0 && g < 16.0, "{g}");
+    }
+
+    #[test]
+    fn ops_scale_linearly_with_layers() {
+        let c1 = presets::small_encoder(64, 1);
+        let c4 = presets::small_encoder(64, 4);
+        assert_eq!(4 * total_ops(&c1), total_ops(&c4));
+    }
+
+    #[test]
+    fn attention_ops_scale_quadratically_with_sl() {
+        let a = encoder_layer_ops(&presets::bert_base(64));
+        let b = encoder_layer_ops(&presets::bert_base(128));
+        assert_eq!(b.qk, 4 * a.qk);
+        assert_eq!(b.sv, 4 * a.sv);
+        assert_eq!(b.ffn2, 2 * a.ffn2); // linear parts double
+    }
+
+    #[test]
+    fn decoder_layer_costs_more_than_encoder() {
+        let c = presets::transformer_base(64);
+        assert!(decoder_layer_ops(&c) > encoder_layer_ops(&c).total());
+    }
+
+    #[test]
+    fn operational_intensity_increases_with_sl() {
+        // weights are reused across SL positions: OI grows with SL.
+        let lo = operational_intensity(&presets::bert_base(32), 4);
+        let hi = operational_intensity(&presets::bert_base(128), 4);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn quantization_raises_oi() {
+        let f32_oi = operational_intensity(&presets::bert_base(64), 4);
+        let i8_oi = operational_intensity(&presets::bert_base(64), 1);
+        assert!((i8_oi / f32_oi - 4.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fixed-point datapath description ("fully quantized for computational
+//! efficiency and portability", §1) and host-side symmetric int8
+//! quantization utilities mirroring `python/compile/kernels/quant.py`.
+
+/// Datapath bit width — the paper's `Bit_w` in Eq 25.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitWidth {
+    Int8,
+    Fixed16,
+    Float32,
+}
+
+impl BitWidth {
+    pub fn bits(self) -> usize {
+        match self {
+            BitWidth::Int8 => 8,
+            BitWidth::Fixed16 => 16,
+            BitWidth::Float32 => 32,
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        self.bits() / 8
+    }
+}
+
+/// The paper synthesizes a fixed-point fabric; 16-bit is the evaluation
+/// default (AXI loads convert float→fixed in 3 cc, §5.2).
+pub const PAPER_DEFAULT: BitWidth = BitWidth::Fixed16;
+
+pub const QMAX: f32 = 127.0;
+
+/// Per-tensor symmetric scale: max|x| / 127, never zero.
+pub fn calibrate_scale(xs: &[f32]) -> f32 {
+    let m = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    (m / QMAX).max(1e-8)
+}
+
+/// Quantize-dequantize to the int8 lattice (matches the Pallas kernel's
+/// round-half-away semantics of `jnp.round` for ties — banker's rounding).
+pub fn quantize_dequantize(xs: &mut [f32], scale: f32) {
+    for x in xs.iter_mut() {
+        let q = (*x / scale).round_ties_even().clamp(-QMAX, QMAX);
+        *x = q * scale;
+    }
+}
+
+/// Max absolute quantization error for values inside the clip range.
+pub fn max_inrange_error(scale: f32) -> f32 {
+    scale / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_bytes() {
+        assert_eq!(BitWidth::Int8.bytes(), 1);
+        assert_eq!(BitWidth::Fixed16.bytes(), 2);
+        assert_eq!(BitWidth::Float32.bytes(), 4);
+    }
+
+    #[test]
+    fn qdq_is_idempotent_and_bounded() {
+        let mut xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) / 100.0).collect();
+        let s = calibrate_scale(&xs);
+        let orig = xs.clone();
+        quantize_dequantize(&mut xs, s);
+        for (q, x) in xs.iter().zip(&orig) {
+            assert!((q - x).abs() <= max_inrange_error(s) + 1e-6);
+        }
+        let once = xs.clone();
+        quantize_dequantize(&mut xs, s);
+        assert_eq!(once, xs);
+    }
+
+    #[test]
+    fn calibrated_scale_prevents_clipping() {
+        let xs = vec![-12.7f32, 3.3, 12.7];
+        let s = calibrate_scale(&xs);
+        assert!((s - 0.1).abs() < 1e-6);
+        let mut q = xs.clone();
+        quantize_dequantize(&mut q, s);
+        assert!((q[2] - 12.7).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zero_input_has_nonzero_scale() {
+        assert!(calibrate_scale(&[0.0; 4]) > 0.0);
+    }
+}

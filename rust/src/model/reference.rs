@@ -1,0 +1,263 @@
+//! Dense f32 CPU reference implementation of the transformer encoder —
+//! the rust-side oracle for the PJRT tile engine (and the "CPU baseline"
+//! executor for speedup shapes).
+//!
+//! Mirrors `python/compile/kernels/ref.py` / `model.ref_encoder_layer`
+//! operation-for-operation (post-LN residuals, 1/sqrt(d_k) scaling,
+//! eps = 1e-5) so all three implementations — jnp oracle, Pallas kernels,
+//! and the rust tile engine over AOT artifacts — agree to f32 tolerance.
+
+use super::weights::{LayerWeights, Mat};
+
+pub const LN_EPS: f32 = 1e-5;
+pub const NEG_INF: f32 = -1e9;
+
+/// `a @ b` (naive triple loop — this is the oracle, clarity over speed).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(i, k);
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..b.cols {
+                *out.at_mut(i, j) += av * b.at(k, j);
+            }
+        }
+    }
+    out
+}
+
+/// `a @ b^T`.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let mut out = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let mut s = 0.0;
+            for k in 0..a.cols {
+                s += a.at(i, k) * b.at(j, k);
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+pub fn add_bias(x: &mut Mat, b: &[f32]) {
+    assert_eq!(x.cols, b.len());
+    for r in 0..x.rows {
+        for c in 0..x.cols {
+            *x.at_mut(r, c) += b[c];
+        }
+    }
+}
+
+pub fn relu(x: &mut Mat) {
+    for v in &mut x.data {
+        *v = v.max(0.0);
+    }
+}
+
+/// Numerically-stable row softmax (Algorithm 7: max, exp, normalize).
+pub fn softmax_rows(x: &mut Mat) {
+    for r in 0..x.rows {
+        let row = &mut x.data[r * x.cols..(r + 1) * x.cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Additive attention mask: 0 on legal (i,j), NEG_INF otherwise.
+/// `valid` limits both query and key positions; `causal` restricts j <= i.
+pub fn attention_mask(sl: usize, valid: usize, causal: bool) -> Mat {
+    Mat::from_fn(sl, sl, |i, j| {
+        let legal = i < valid && j < valid && (!causal || j <= i);
+        if legal {
+            0.0
+        } else {
+            NEG_INF
+        }
+    })
+}
+
+/// LayerNorm(x + res) row-wise with affine (Eq 4), full width.
+pub fn residual_ln(x: &Mat, res: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
+    assert_eq!((x.rows, x.cols), (res.rows, res.cols));
+    let d = x.cols as f32;
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let mut mu = 0.0;
+        for c in 0..x.cols {
+            mu += x.at(r, c) + res.at(r, c);
+        }
+        mu /= d;
+        let mut var = 0.0;
+        for c in 0..x.cols {
+            let z = x.at(r, c) + res.at(r, c) - mu;
+            var += z * z;
+        }
+        var /= d;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for c in 0..x.cols {
+            let z = x.at(r, c) + res.at(r, c) - mu;
+            *out.at_mut(r, c) = gamma[c] * z * inv + beta[c];
+        }
+    }
+    out
+}
+
+/// One attention head: softmax(mask(scale·Q·Kᵀ))·V — Eq 1.
+pub fn attention_head(q: &Mat, k: &Mat, v: &Mat, mask: &Mat, scale: f32) -> Mat {
+    let mut s = matmul_nt(q, k);
+    for (sv, mv) in s.data.iter_mut().zip(&mask.data) {
+        *sv = *sv * scale + mv;
+    }
+    softmax_rows(&mut s);
+    matmul(&s, v)
+}
+
+/// One full encoder layer (Eq 1-4) — the oracle for the tile engine.
+pub fn encoder_layer(x: &Mat, w: &LayerWeights, mask: &Mat) -> Mat {
+    let heads = w.wq.len();
+    let dk = w.wq[0].cols;
+    let scale = 1.0 / (dk as f32).sqrt();
+    let d_model = x.cols;
+
+    // MHA, head by head, concatenated.
+    let mut attn = Mat::zeros(x.rows, d_model);
+    for h in 0..heads {
+        let mut q = matmul(x, &w.wq[h]);
+        add_bias(&mut q, &w.bq[h]);
+        let mut k = matmul(x, &w.wk[h]);
+        add_bias(&mut k, &w.bk[h]);
+        let mut v = matmul(x, &w.wv[h]);
+        add_bias(&mut v, &w.bv[h]);
+        let o = attention_head(&q, &k, &v, mask, scale);
+        attn.set_block(0, h * dk, &o);
+    }
+
+    // FFN1_PM: output projection + residual + LN.
+    let mut proj = matmul(&attn, &w.wo);
+    add_bias(&mut proj, &w.bo);
+    let y = residual_ln(&proj, x, &w.g1, &w.b1n);
+
+    // FFN2_PM (ReLU) -> FFN3_PM + residual + LN.
+    let mut hidden = matmul(&y, &w.w1);
+    add_bias(&mut hidden, &w.b1);
+    relu(&mut hidden);
+    let mut out = matmul(&hidden, &w.w2);
+    add_bias(&mut out, &w.b2);
+    residual_ln(&out, &y, &w.g2, &w.b2n)
+}
+
+/// N-layer encoder stack.
+pub fn encoder_stack(x: &Mat, layers: &[LayerWeights], mask: &Mat) -> Mat {
+    let mut cur = x.clone();
+    for w in layers {
+        cur = encoder_layer(&cur, w, mask);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |r, c| (r * 3 + c) as f32);
+        let id = Mat::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(matmul(&a, &id), a);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = Mat::from_fn(2, 4, |r, c| (r + c) as f32);
+        let b = Mat::from_fn(3, 4, |r, c| (r * c) as f32 + 1.0);
+        let bt = Mat::from_fn(4, 3, |r, c| b.at(c, r));
+        assert_eq!(matmul_nt(&a, &b), matmul(&a, &bt));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_stable() {
+        let mut m = Mat::from_fn(4, 8, |r, c| (r * c) as f32 * 100.0);
+        softmax_rows(&mut m);
+        for r in 0..4 {
+            let s: f32 = (0..8).map(|c| m.at(r, c)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn residual_ln_zero_mean_unit_var() {
+        let x = weights::init_input(1, 16, 64);
+        let r = weights::init_input(2, 16, 64);
+        let out = residual_ln(&x, &r, &vec![1.0; 64], &vec![0.0; 64]);
+        for row in 0..16 {
+            let vals: Vec<f32> = (0..64).map(|c| out.at(row, c)).collect();
+            let mu: f32 = vals.iter().sum::<f32>() / 64.0;
+            let var: f32 = vals.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 64.0;
+            assert!(mu.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        let m = attention_mask(4, 4, true);
+        assert_eq!(m.at(0, 1), NEG_INF);
+        assert_eq!(m.at(3, 3), 0.0);
+        assert_eq!(m.at(2, 1), 0.0);
+        let p = attention_mask(4, 2, false);
+        assert_eq!(p.at(0, 3), NEG_INF);
+        assert_eq!(p.at(3, 0), NEG_INF);
+    }
+
+    #[test]
+    fn attention_uniform_when_keys_equal() {
+        // identical keys => uniform attention => output = mean of V rows
+        let q = weights::init_input(3, 4, 8);
+        let k = Mat::from_fn(4, 8, |_, c| c as f32 / 8.0);
+        let v = Mat::from_fn(4, 8, |r, _| r as f32);
+        let mask = attention_mask(4, 4, false);
+        let o = attention_head(&q, &k, &v, &mask, 0.125);
+        for r in 0..4 {
+            assert!((o.at(r, 0) - 1.5).abs() < 1e-5, "{}", o.at(r, 0));
+        }
+    }
+
+    #[test]
+    fn encoder_layer_output_is_normalized() {
+        let w = weights::init_layer(0, 128, 2);
+        let x = weights::init_input(0, 16, 128);
+        let mask = attention_mask(16, 16, false);
+        let y = encoder_layer(&x, &w, &mask);
+        for r in 0..16 {
+            let row: Vec<f32> = (0..128).map(|c| y.at(r, c)).collect();
+            let mu: f32 = row.iter().sum::<f32>() / 128.0;
+            assert!(mu.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn stack_differs_from_single_layer() {
+        let ws = weights::init_stack(0, 128, 2, 2);
+        let x = weights::init_input(0, 8, 128);
+        let mask = attention_mask(8, 8, false);
+        let one = encoder_layer(&x, &ws[0], &mask);
+        let two = encoder_stack(&x, &ws, &mask);
+        assert!(one.max_abs_diff(&two) > 1e-3);
+    }
+}

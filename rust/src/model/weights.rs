@@ -1,0 +1,201 @@
+//! Row-major f32 matrices and deterministic synthetic weight generation.
+//!
+//! The paper extracts topologies from HuggingFace `.pth` checkpoints; the
+//! accelerator itself is weight-agnostic (only shapes steer the fabric), so
+//! this substrate generates reproducible pseudo-random weights (splitmix64,
+//! fixed seed) with the same init scaling as `python/compile/model.py`.
+
+use crate::util::rng::SplitMix64;
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Copy of the `rows x cols` sub-block at (r0, c0).
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols);
+        Mat::from_fn(rows, cols, |r, c| self.at(r0 + r, c0 + c))
+    }
+
+    /// Write `src` into the sub-block at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Mat) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for r in 0..src.rows {
+            for c in 0..src.cols {
+                *self.at_mut(r0 + r, c0 + c) = src.at(r, c);
+            }
+        }
+    }
+
+    /// Zero-pad (or truncate is forbidden) to a larger shape.
+    pub fn padded(&self, rows: usize, cols: usize) -> Mat {
+        assert!(rows >= self.rows && cols >= self.cols, "padded() cannot shrink");
+        let mut out = Mat::zeros(rows, cols);
+        out.set_block(0, 0, self);
+        out
+    }
+
+    /// Max |a - b| over all elements (shape-checked).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// One encoder layer's parameters — field-for-field the Python
+/// `LayerParams` (and therefore the fused artifacts' input order).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// Per-head projection panels, each `d_model x dk`.
+    pub wq: Vec<Mat>,
+    pub wk: Vec<Mat>,
+    pub wv: Vec<Mat>,
+    /// Per-head biases, each length `dk`.
+    pub bq: Vec<Vec<f32>>,
+    pub bk: Vec<Vec<f32>>,
+    pub bv: Vec<Vec<f32>>,
+    /// Attention output projection (FFN1_PM): `d_model x d_model`.
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+    /// FFN2_PM: `d_model x hidden`.
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    /// FFN3_PM: `hidden x d_model`.
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+    /// LayerNorm affine parameters.
+    pub g1: Vec<f32>,
+    pub b1n: Vec<f32>,
+    pub g2: Vec<f32>,
+    pub b2n: Vec<f32>,
+}
+
+fn randn_mat(rng: &mut SplitMix64, rows: usize, cols: usize, scale: f32) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * scale)
+}
+
+/// Deterministic weights for one encoder layer.
+pub fn init_layer(seed: u64, d_model: usize, heads: usize) -> LayerWeights {
+    assert_eq!(d_model % heads, 0, "execution weights need divisibility");
+    let dk = d_model / heads;
+    let hidden = 4 * d_model;
+    let mut rng = SplitMix64::new(seed);
+    let s_attn = 1.0 / (d_model as f32).sqrt();
+    let s_ffn2 = 1.0 / (hidden as f32).sqrt();
+    let heads_mat =
+        |rng: &mut SplitMix64| (0..heads).map(|_| randn_mat(rng, d_model, dk, s_attn)).collect();
+    LayerWeights {
+        wq: heads_mat(&mut rng),
+        wk: heads_mat(&mut rng),
+        wv: heads_mat(&mut rng),
+        bq: vec![vec![0.0; dk]; heads],
+        bk: vec![vec![0.0; dk]; heads],
+        bv: vec![vec![0.0; dk]; heads],
+        wo: randn_mat(&mut rng, d_model, d_model, s_attn),
+        bo: vec![0.0; d_model],
+        w1: randn_mat(&mut rng, d_model, hidden, s_attn),
+        b1: vec![0.0; hidden],
+        w2: randn_mat(&mut rng, hidden, d_model, s_ffn2),
+        b2: vec![0.0; d_model],
+        g1: vec![1.0; d_model],
+        b1n: vec![0.0; d_model],
+        g2: vec![1.0; d_model],
+        b2n: vec![0.0; d_model],
+    }
+}
+
+/// Weights for a whole encoder stack (layer i seeded `seed + i`).
+pub fn init_stack(seed: u64, d_model: usize, heads: usize, layers: usize) -> Vec<LayerWeights> {
+    (0..layers).map(|i| init_layer(seed + i as u64, d_model, heads)).collect()
+}
+
+/// Deterministic input activations `seq_len x d_model`.
+pub fn init_input(seed: u64, seq_len: usize, d_model: usize) -> Mat {
+    let mut rng = SplitMix64::new(seed ^ 0x5eed_1a7e);
+    randn_mat(&mut rng, seq_len, d_model, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = init_layer(7, 128, 2);
+        let b = init_layer(7, 128, 2);
+        assert_eq!(a.wo, b.wo);
+        assert_eq!(a.wq[1], b.wq[1]);
+        let c = init_layer(8, 128, 2);
+        assert_ne!(a.wo, c.wo);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let w = init_layer(0, 256, 4);
+        assert_eq!(w.wq.len(), 4);
+        assert_eq!((w.wq[0].rows, w.wq[0].cols), (256, 64));
+        assert_eq!((w.w1.rows, w.w1.cols), (256, 1024));
+        assert_eq!((w.w2.rows, w.w2.cols), (1024, 256));
+        assert_eq!(w.g1.len(), 256);
+    }
+
+    #[test]
+    fn init_scale_is_sane() {
+        let w = init_layer(0, 256, 4);
+        let rms = (w.wo.data.iter().map(|x| x * x).sum::<f32>() / w.wo.data.len() as f32).sqrt();
+        let expect = 1.0 / (256f32).sqrt();
+        assert!((rms / expect - 1.0).abs() < 0.1, "rms={rms} expect={expect}");
+    }
+
+    #[test]
+    fn block_and_pad_roundtrip() {
+        let m = Mat::from_fn(4, 6, |r, c| (r * 10 + c) as f32);
+        let b = m.block(1, 2, 2, 3);
+        assert_eq!(b.at(0, 0), 12.0);
+        assert_eq!(b.at(1, 2), 24.0);
+        let p = b.padded(4, 4);
+        assert_eq!(p.at(0, 0), 12.0);
+        assert_eq!(p.at(3, 3), 0.0);
+        let mut z = Mat::zeros(4, 6);
+        z.set_block(1, 2, &b);
+        assert_eq!(z.at(2, 4), 24.0);
+        assert_eq!(z.at(0, 0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn block_out_of_bounds_panics() {
+        Mat::zeros(2, 2).block(1, 1, 2, 2);
+    }
+}

@@ -1,0 +1,211 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (the
+//! one-time "synthesis" step) and the rust request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::{self, Json};
+
+/// One lowered program's interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// A fused per-config layer artifact (the non-adaptive baseline path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedMeta {
+    pub meta: ArtifactMeta,
+    pub sl: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub quantized: bool,
+}
+
+/// The parsed manifest plus the synthesis-time fabric constants.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub digest: String,
+    pub sl_max: usize,
+    pub dk: usize,
+    pub ts_mha: usize,
+    pub ts_ffn: usize,
+    pub ffn_col: usize,
+    pub dmodel_max: usize,
+    pub hidden_max: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub fused: BTreeMap<String, FusedMeta>,
+}
+
+fn shapes(j: &Json, key: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+    j.get(key)
+        .and_then(Json::as_shape_list)
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}' shape list"))
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let num = |key: &str| -> anyhow::Result<usize> {
+            j.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing '{key}'"))
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in
+            j.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("no artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?
+                        .to_string(),
+                    inputs: shapes(entry, "inputs")?,
+                    outputs: shapes(entry, "outputs")?,
+                },
+            );
+        }
+
+        let mut fused = BTreeMap::new();
+        if let Some(fobj) = j.get("fused").and_then(Json::as_obj) {
+            for (name, entry) in fobj {
+                let cfg = entry.get("config").ok_or_else(|| anyhow!("fused '{name}': no config"))?;
+                let get = |k: &str| {
+                    cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("fused {name}.{k}"))
+                };
+                fused.insert(
+                    name.clone(),
+                    FusedMeta {
+                        meta: ArtifactMeta {
+                            name: name.clone(),
+                            file: entry
+                                .get("file")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("fused '{name}' missing file"))?
+                                .to_string(),
+                            inputs: shapes(entry, "inputs")?,
+                            outputs: shapes(entry, "outputs")?,
+                        },
+                        sl: get("sl")?,
+                        d_model: get("d_model")?,
+                        heads: get("heads")?,
+                        quantized: cfg
+                            .get("quantized")
+                            .map(|v| *v == Json::Bool(true))
+                            .unwrap_or(false),
+                    },
+                );
+            }
+        }
+
+        let m = Manifest {
+            dir,
+            digest: j
+                .get("digest")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            sl_max: num("sl_max")?,
+            dk: num("dk")?,
+            ts_mha: num("ts_mha")?,
+            ts_ffn: num("ts_ffn")?,
+            ffn_col: num("ffn_col")?,
+            dmodel_max: num("dmodel_max")?,
+            hidden_max: num("hidden_max")?,
+            artifacts,
+            fused,
+        };
+        m.check_files()?;
+        Ok(m)
+    }
+
+    /// Every referenced artifact file must exist.
+    fn check_files(&self) -> anyhow::Result<()> {
+        for a in self.artifacts.values().map(|a| &a.file).chain(self.fused.values().map(|f| &f.meta.file))
+        {
+            let p = self.dir.join(a);
+            if !p.exists() {
+                bail!("artifact file missing: {p:?} (stale manifest? run `make artifacts`)");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// The synthesis maxima these artifacts were "synthesized" for — the
+    /// register file validates against exactly this.
+    pub fn synth_maxima(&self) -> crate::accel::registers::SynthMaxima {
+        crate::accel::registers::SynthMaxima {
+            seq_len: self.sl_max,
+            heads: self.dmodel_max / self.dk,
+            d_model: self.dmodel_max,
+            hidden: self.hidden_max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        crate::runtime::default_artifact_dir()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(dir()).expect("run `make artifacts` first");
+        assert_eq!(m.sl_max, 128);
+        assert_eq!((m.ts_mha, m.ts_ffn, m.dk), (64, 128, 64));
+        assert!(m.artifacts.len() >= 13, "{}", m.artifacts.len());
+        assert!(m.fused.contains_key("bert_layer"));
+    }
+
+    #[test]
+    fn mm_qkv_interface_matches_fabric_constants() {
+        let m = Manifest::load(dir()).unwrap();
+        let a = m.artifact("mm_qkv").unwrap();
+        assert_eq!(a.inputs, vec![vec![128, 64], vec![64, 64], vec![128, 64]]);
+        assert_eq!(a.outputs, vec![vec![128, 64]]);
+    }
+
+    #[test]
+    fn synth_maxima_match_artifact_set() {
+        let m = Manifest::load(dir()).unwrap();
+        let s = m.synth_maxima();
+        assert_eq!((s.seq_len, s.d_model, s.hidden, s.heads), (128, 768, 3072, 12));
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let m = Manifest::load(dir()).unwrap();
+        assert!(m.artifact("nonexistent").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

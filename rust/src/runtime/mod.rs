@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! once by `python/compile/aot.py`) and executes them on the CPU PJRT
+//! client via the `xla` crate.  Python is never on this path.
+//!
+//! Interchange is HLO **text**: `HloModuleProto::from_text_file` re-parses
+//! and re-numbers instruction ids, which is what makes jax ≥ 0.5 output
+//! loadable by xla_extension 0.5.1 (see /opt/xla-example/README.md and
+//! DESIGN.md).
+//!
+//! * [`artifact`] — manifest parsing, artifact inventory, staleness check.
+//! * [`executor`] — compile-once executable cache + typed execution.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use executor::{DeviceTensor, Executor, Tensor};
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

@@ -1,0 +1,93 @@
+//! Mini bench harness (offline build: no criterion).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses this:
+//! warmup + timed samples + robust summary, printed in a stable format the
+//! perf log in EXPERIMENTS.md §Perf quotes directly.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}",
+            self.name,
+            fmt_time(s.p50),
+            fmt_time(s.mean),
+            fmt_time(s.p95),
+            fmt_time(s.max),
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!("{:<44} {:>10} {:>10} {:>10} {:>10}", "benchmark", "p50", "mean", "p95", "max")
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.2}us", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+/// Run `f` `samples` times (after `warmup` runs) and summarize.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: summarize(&times) }
+}
+
+/// Standard bench-main wrapper: prints the header, runs the closures,
+/// prints one line each.
+pub fn run_suite(title: &str, cases: Vec<BenchResult>) {
+    println!("\n== {title} ==");
+    println!("{}", header());
+    for c in cases {
+        println!("{}", c.line());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_times() {
+        let r = bench("noop-ish", 1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.summary.min >= 0.0);
+        assert!(r.summary.n == 10);
+        assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate's vendored
+//! closure is available), so the pieces a served system would usually pull
+//! from crates.io are implemented here: a deterministic RNG ([`rng`]), a
+//! minimal JSON parser for the artifact manifest ([`json`]), and a tiny
+//! statistics kit for the bench harness ([`stats`]).
+
+pub mod benchkit;
+pub mod json;
+pub mod rng;
+pub mod stats;

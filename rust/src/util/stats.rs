@@ -1,0 +1,73 @@
+//! Small statistics kit for the in-tree bench harness (offline build: no
+//! criterion): robust summary of timing samples.
+
+/// Summary of a sample set (times in seconds or any unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+/// Compute a summary; panics on empty input.
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize() on empty sample set");
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| sorted[(((n - 1) as f64) * p).floor() as usize];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        p50: q(0.5),
+        p95: q(0.95),
+        max: sorted[n - 1],
+    }
+}
+
+/// Relative difference |a-b| / max(|a|,|b|, eps).
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = summarize(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!((s.min, s.p50, s.p95, s.max), (2.0, 2.0, 2.0, 2.0));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+    }
+
+    #[test]
+    fn rel_diff_symmetric() {
+        assert!((rel_diff(10.0, 11.0) - rel_diff(11.0, 10.0)).abs() < 1e-15);
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        summarize(&[]);
+    }
+}

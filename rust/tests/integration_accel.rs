@@ -1,0 +1,173 @@
+//! Cross-module integration over the accelerator substrate: synthesis →
+//! resources → frequency → latency → simulation → power, plus the
+//! design-space machinery the figures are built from.
+
+use adaptor::accel::{frequency, latency, power, resources, roofline, sim, Synthesis};
+use adaptor::accel::platform;
+use adaptor::accel::tiling::TileConfig;
+use adaptor::analysis::sweep;
+use adaptor::baselines::nonadaptive;
+use adaptor::model::quant::BitWidth;
+use adaptor::model::{ops, presets, TnnConfig};
+
+#[test]
+fn paper_default_synthesis_end_to_end() {
+    let s = Synthesis::paper_default();
+    let cfg = TnnConfig::encoder(64, 768, 8, 12); // Table 2 row 1
+    let r = s.resources(&cfg);
+    assert!(r.check_fit(&s.platform).is_ok());
+    assert_eq!(r.dsp, 3612); // Table 2 experimental
+    let f = s.frequency_mhz(&cfg);
+    assert_eq!(f, 200.0);
+    let lat = latency::model_latency(&cfg, &s.tiles);
+    let watts = power::total_power_w(&s.platform, &r, f);
+    assert!((watts - 11.8).abs() < 0.7, "{watts}");
+    let gops = lat.gops_at(&cfg, f);
+    assert!(gops > 15.0 && gops < 60.0, "{gops}");
+}
+
+#[test]
+fn table2_all_rows_validate_under_3pct() {
+    let p = platform::u55c();
+    for (sl, d, tm, tf) in [(64, 768, 64, 128), (128, 768, 64, 128), (64, 512, 64, 128), (64, 768, 128, 192)]
+    {
+        let cfg = TnnConfig::encoder(sl, d, 8, 12);
+        let tiles = TileConfig::for_fabric(tm, tf, 768);
+        let row = sweep::validate(&cfg, &tiles, &p, BitWidth::Fixed16);
+        assert!(
+            row.max_latency_error() < 0.03,
+            "(sl={sl}, d={d}, ts={tm}/{tf}): err {:.4}",
+            row.max_latency_error()
+        );
+    }
+}
+
+#[test]
+fn fig5_sweep_has_interior_latency_optimum() {
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let pts = sweep::tile_sweep(&cfg, &platform::u55c(), BitWidth::Fixed16);
+    assert!(pts.len() >= 10);
+    let best = sweep::best_by_latency(&pts).unwrap();
+    let most_dsp = pts.iter().max_by_key(|p| p.dsp).unwrap();
+    let least_dsp = pts.iter().min_by_key(|p| p.dsp).unwrap();
+    assert_ne!((best.ts_mha, best.ts_ffn), (most_dsp.ts_mha, most_dsp.ts_ffn));
+    assert_ne!((best.ts_mha, best.ts_ffn), (least_dsp.ts_mha, least_dsp.ts_ffn));
+}
+
+#[test]
+fn fig8_frequency_decays_with_heads_and_latency_has_interior_optimum() {
+    let base = TnnConfig::encoder(64, 768, 8, 12);
+    let pts = sweep::heads_sweep(&base, &platform::u55c(), BitWidth::Fixed16);
+    let f_first = pts.first().unwrap().freq_mhz;
+    let f_last = pts.last().unwrap().freq_mhz;
+    assert!(f_last < f_first, "frequency must decay with head count");
+}
+
+#[test]
+fn fig11_portability_order_u55c_fastest() {
+    // the same custom encoder on three platforms with the paper's tiles
+    let cfg = presets::custom_encoder();
+    let eval = |p: &platform::Platform, tm: usize, tf: usize| {
+        let tiles = TileConfig::for_fabric(tm, tf, cfg.d_model);
+        let r = resources::estimate(&cfg, &tiles, BitWidth::Fixed16, p);
+        assert!(r.check_fit(p).is_ok(), "{} doesn't fit", p.name);
+        let f = frequency::fmax_mhz(p, &r);
+        latency::model_latency(&cfg, &tiles).ms_at(f)
+    };
+    let u = eval(&platform::u55c(), 200, 200);
+    let z = eval(&platform::zcu102(), 25, 50);
+    let v = eval(&platform::vc707(), 50, 50);
+    assert!(u < z && u < v, "U55C must be fastest: u={u} z={z} v={v}");
+}
+
+#[test]
+fn fig12_roofline_brackets_attained() {
+    let tiles = TileConfig::paper_optimum();
+    let cfgs = [
+        ("bert", presets::bert_base(64)),
+        ("shallow", presets::shallow_transformer()),
+        ("custom4l", presets::custom_encoder_4l()),
+    ];
+    let pts: Vec<(&str, TnnConfig, f64)> = cfgs
+        .iter()
+        .map(|(n, c)| (*n, *c, latency::model_latency(c, &tiles).gops_at(c, 200.0)))
+        .collect();
+    let r = roofline::roofline(&platform::u55c(), &tiles, 200.0, 4, &pts);
+    assert!(r.peak_gops > 0.0 && r.stream_gbps > 0.0);
+    for p in &r.points {
+        // "All data points fall within the compute and memory bound
+        // regions, meaning none of them fully utilize the available
+        // resources" (paper, Fig 12 discussion)
+        assert!(p.attained_gops <= p.bound_gops * 1.15, "{}: {} > {}", p.name, p.attained_gops, p.bound_gops);
+    }
+}
+
+#[test]
+fn fig13_gops_rises_then_falls_with_dsp_utilization() {
+    let cfg = TnnConfig::encoder(64, 768, 8, 12);
+    let mut pts = sweep::tile_sweep(&cfg, &platform::u55c(), BitWidth::Fixed16);
+    pts.sort_by(|a, b| a.dsp_util.partial_cmp(&b.dsp_util).unwrap());
+    let peak_idx = pts
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.gops.partial_cmp(&b.1.gops).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    // the GOPS peak is interior: utilization beyond it loses frequency
+    assert!(peak_idx > 0, "GOPS must first rise with DSP utilization");
+    let last = pts.last().unwrap();
+    let peak = &pts[peak_idx];
+    assert!(last.gops <= peak.gops, "GOPS must fall at extreme utilization");
+}
+
+#[test]
+fn adaptivity_ablation_favors_adaptor_on_deployment() {
+    let models =
+        vec![presets::bert_base(64), presets::shallow_transformer(), presets::small_encoder(64, 4)];
+    let c = nonadaptive::deployment_cost(
+        &models,
+        &platform::u55c(),
+        &TileConfig::paper_optimum(),
+        BitWidth::Fixed16,
+    );
+    assert_eq!(c.adaptor_synthesis_hours, nonadaptive::SYNTHESIS_HOURS);
+    assert!(c.nonadaptive_synthesis_hours >= 3.0 * nonadaptive::SYNTHESIS_HOURS);
+}
+
+#[test]
+fn gops_accounting_consistent_between_ops_and_latency() {
+    // gops_at must equal total_ops / time; sanity over several models
+    for cfg in [presets::bert_base(64), presets::shallow_transformer(), presets::small_encoder(64, 4)] {
+        let tiles = TileConfig::paper_optimum();
+        let lat = latency::model_latency(&cfg, &tiles);
+        let secs = lat.total_cycles as f64 / 200e6;
+        let expect = ops::total_ops(&cfg) as f64 / secs / 1e9;
+        let got = lat.gops_at(&cfg, 200.0);
+        assert!((got - expect).abs() / expect < 1e-9);
+    }
+}
+
+#[test]
+fn simulation_trace_is_contiguous_and_ordered() {
+    let cfg = presets::small_encoder(64, 4);
+    let rep = sim::simulate(&cfg, &TileConfig::paper_optimum());
+    let mut last_end = 0;
+    for e in &rep.trace.events {
+        assert!(e.start >= last_end || e.name == "load_inputs");
+        last_end = last_end.max(e.end());
+    }
+    assert_eq!(last_end, rep.total_cycles);
+}
+
+#[test]
+fn specialization_never_violates_fit() {
+    for p in platform::all() {
+        if let Some(s) =
+            nonadaptive::specialize(&presets::shallow_transformer(), &p, BitWidth::Fixed16)
+        {
+            let r = resources::estimate(&presets::shallow_transformer(), &s.tiles, BitWidth::Fixed16, &p);
+            assert!(r.check_fit(&p).is_ok(), "{}", p.name);
+            assert!(s.freq_mhz >= frequency::FMAX_FLOOR_MHZ);
+        }
+    }
+}

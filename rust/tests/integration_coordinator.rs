@@ -1,0 +1,142 @@
+//! Coordinator integration: the serving stack end to end — router,
+//! batcher, engine thread, register reprogramming — against the reference
+//! oracle, including concurrent clients.
+
+use std::time::Duration;
+
+use adaptor::coordinator::batcher::BatchPolicy;
+use adaptor::coordinator::router::ModelSpec;
+use adaptor::coordinator::{AttentionMode, Request, Server, ServerConfig, TileEngine};
+use adaptor::model::weights::init_input;
+use adaptor::model::{presets, reference, weights, TnnConfig};
+use adaptor::runtime::default_artifact_dir;
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
+}
+
+#[test]
+fn engine_matches_oracle_across_topologies() {
+    let mut e = TileEngine::new(default_artifact_dir()).expect("make artifacts");
+    for (cfg, seed) in [
+        (TnnConfig::encoder(16, 128, 2, 1), 1u64),
+        (TnnConfig::encoder(32, 256, 4, 2), 2),
+        (TnnConfig::encoder(64, 384, 6, 1), 3),
+        (TnnConfig::encoder(128, 128, 2, 1), 4),
+    ] {
+        let ws = weights::init_stack(seed, cfg.d_model, cfg.heads, cfg.enc_layers);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = init_input(seed + 100, cfg.seq_len, cfg.d_model);
+        let got = e.run_encoder(&p, &x).unwrap();
+        let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+        let want = reference::encoder_stack(&x, &ws, &mask);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 3e-3, "{cfg}: diff {diff}");
+    }
+}
+
+#[test]
+fn no_recompilation_across_full_model_zoo() {
+    // run FOUR different topologies through one fabric; artifact compiles
+    // must happen only on first use — the runtime-adaptivity headline.
+    let mut e = TileEngine::new(default_artifact_dir()).unwrap();
+    let zoo = [
+        TnnConfig::encoder(16, 128, 2, 1),
+        TnnConfig::encoder(32, 256, 4, 1),
+        TnnConfig::encoder(48, 512, 8, 1),
+        TnnConfig::encoder(96, 640, 10, 1),
+    ];
+    let mut compiled_after_first = None;
+    for (i, cfg) in zoo.iter().enumerate() {
+        let ws = weights::init_stack(i as u64, cfg.d_model, cfg.heads, 1);
+        e.program(cfg).unwrap();
+        let p = e.prepare(cfg, &ws).unwrap();
+        let x = init_input(i as u64, cfg.seq_len, cfg.d_model);
+        e.run_encoder(&p, &x).unwrap();
+        match compiled_after_first {
+            None => compiled_after_first = Some(e.executor().compiled_count()),
+            Some(n) => assert_eq!(
+                e.executor().compiled_count(),
+                n,
+                "model #{i} ({cfg}) triggered a re-synthesis"
+            ),
+        }
+    }
+}
+
+#[test]
+fn server_concurrent_clients_all_answered_correctly() {
+    let spec_a = ModelSpec::new("a", presets::small_encoder(32, 1), 7);
+    let spec_b = ModelSpec::new("b", TnnConfig::encoder(16, 128, 2, 1), 8);
+    let mut cfg = ServerConfig::new(vec![spec_a.clone(), spec_b.clone()]);
+    cfg.policy = policy();
+    let server = std::sync::Arc::new(Server::start(cfg).expect("make artifacts"));
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..3u64 {
+                let (model, mcfg, seed) = if (t + i) % 2 == 0 {
+                    ("a", presets::small_encoder(32, 1), 7u64)
+                } else {
+                    ("b", TnnConfig::encoder(16, 128, 2, 1), 8u64)
+                };
+                let x = init_input(t * 10 + i, mcfg.seq_len, mcfg.d_model);
+                let resp = s.infer(Request { model: model.into(), input: x.clone() }).unwrap();
+                let ws = weights::init_stack(seed, mcfg.d_model, mcfg.heads, mcfg.enc_layers);
+                let mask = reference::attention_mask(mcfg.seq_len, mcfg.seq_len, false);
+                let want = reference::encoder_stack(&x, &ws, &mask);
+                assert!(resp.output.max_abs_diff(&want) < 3e-3);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let server = std::sync::Arc::try_unwrap(server).ok().expect("sole owner");
+    let m = server.shutdown();
+    assert_eq!(m.requests(), 12);
+    assert!(m.reprograms >= 2);
+    assert!(m.mean_batch() >= 1.0);
+}
+
+#[test]
+fn attention_modes_agree_through_the_server() {
+    let run = |mode: AttentionMode| {
+        let spec = ModelSpec::new("m", presets::small_encoder(32, 1), 5);
+        let mut cfg = ServerConfig::new(vec![spec]);
+        cfg.policy = policy();
+        cfg.attention = mode;
+        let s = Server::start(cfg).unwrap();
+        let x = init_input(1, 32, 256);
+        let out = s.infer(Request { model: "m".into(), input: x }).unwrap().output;
+        s.shutdown();
+        out
+    };
+    let split = run(AttentionMode::Split);
+    let fused = run(AttentionMode::Fused);
+    assert!(split.max_abs_diff(&fused) < 1e-3);
+}
+
+#[test]
+fn metrics_accumulate_latency_and_batches() {
+    let spec = ModelSpec::new("m", presets::small_encoder(32, 1), 6);
+    let mut cfg = ServerConfig::new(vec![spec]);
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let s = Server::start(cfg).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let x = init_input(i, 32, 256);
+        rxs.push(s.submit(Request { model: "m".into(), input: x }).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = s.shutdown();
+    assert_eq!(m.requests(), 6);
+    let sum = m.latency_summary().unwrap();
+    assert!(sum.p50 > 0.0 && sum.max >= sum.p50);
+    assert!(m.throughput_rps() > 0.0);
+}

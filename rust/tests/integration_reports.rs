@@ -1,0 +1,71 @@
+//! Report-generation integration: `adaptor report all` must regenerate
+//! every table/figure of the paper, write valid files, and the contents
+//! must carry the paper's qualitative claims.
+
+use adaptor::analysis::report;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("adaptor-reports-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn write_all_emits_txt_and_csv_per_report() {
+    let dir = tmpdir("all");
+    let written = report::write_all(&dir).unwrap();
+    assert_eq!(written.len(), 10);
+    for name in &written {
+        let txt = dir.join(format!("{name}.txt"));
+        let csv = dir.join(format!("{name}.csv"));
+        assert!(txt.exists(), "{name}.txt");
+        assert!(csv.exists(), "{name}.csv");
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        let mut lines = csv_text.lines();
+        let header_cols = lines.next().unwrap().split(',').count();
+        for l in lines {
+            assert_eq!(l.split(',').count(), header_cols, "{name}.csv ragged row");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig5_claims_interior_optimum() {
+    let text = report::render("fig5").unwrap();
+    assert!(text.contains("reproduced optimum"));
+    assert!(text.contains("latency_norm"));
+}
+
+#[test]
+fn fig10_includes_paper_ratio_claims() {
+    let text = report::render("fig10").unwrap();
+    assert!(text.contains("NVIDIA K80"));
+    assert!(text.contains("i7-8700K"));
+    assert!(text.contains("ratio-derived"), "derived points must be labeled");
+    assert!(text.contains("ADAPTOR-RS (substrate)"));
+}
+
+#[test]
+fn table2_reports_both_methods_per_config() {
+    let text = report::render("table2").unwrap();
+    let analytical = text.matches("analytical").count();
+    let simulated = text.matches("simulated").count();
+    assert!(analytical >= 4 && simulated >= 4);
+}
+
+#[test]
+fn fig12_names_the_papers_bounds() {
+    let text = report::render("fig12").unwrap();
+    assert!(text.contains("compute bound"));
+    assert!(text.contains("GOPS"));
+    assert!(text.contains("ridge"));
+}
+
+#[test]
+fn ablation_quantifies_resynthesis_cost() {
+    let text = report::render("ablation").unwrap();
+    assert!(text.contains("synthesis_hours"));
+    assert!(text.contains("ADAPTOR (runtime registers)"));
+    assert!(text.contains("per-model custom synthesis"));
+}

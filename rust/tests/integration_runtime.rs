@@ -1,0 +1,194 @@
+//! Runtime integration: every AOT artifact loads, compiles and executes on
+//! the PJRT CPU client with numerics matching the rust reference oracle —
+//! the consumer half of the HLO-text interchange contract (the producer
+//! half is python/tests/test_aot.py).
+
+use adaptor::model::reference;
+use adaptor::model::weights::{init_input, Mat};
+use adaptor::runtime::{default_artifact_dir, Executor, Tensor};
+use adaptor::util::rng::SplitMix64;
+
+fn exec() -> Executor {
+    Executor::new(default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+fn rnd_tensor(seed: u64, shape: &[usize], scale: f32) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    let n: usize = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut data, scale);
+    Tensor::new(shape.to_vec(), data)
+}
+
+fn assert_close(got: &Tensor, want: &Mat, tol: f32, what: &str) {
+    let g = got.to_mat();
+    let d = g.max_abs_diff(want);
+    assert!(d < tol, "{what}: diff {d}");
+}
+
+#[test]
+fn every_tile_primitive_compiles_and_runs() {
+    let e = exec();
+    let names: Vec<String> = e.manifest().artifacts.keys().cloned().collect();
+    assert!(names.len() >= 13);
+    for name in &names {
+        let meta = e.manifest().artifact(name).unwrap().clone();
+        let inputs: Vec<Tensor> = meta
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| rnd_tensor(1000 + i as u64, s, 0.3))
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = e.run(name, &refs).unwrap_or_else(|err| panic!("{name}: {err}"));
+        assert_eq!(out.len(), meta.outputs.len(), "{name}");
+        for (o, s) in out.iter().zip(&meta.outputs) {
+            assert_eq!(&o.shape, s, "{name} output shape");
+            assert!(o.data.iter().all(|v| v.is_finite()), "{name} produced non-finite values");
+        }
+    }
+}
+
+#[test]
+fn mm_artifacts_match_reference_matmul() {
+    let e = exec();
+    for (name, m, k, n) in [
+        ("mm_qkv", 128usize, 64usize, 64usize),
+        ("mm_ffn1", 128, 128, 128),
+        ("mm_ffn2", 128, 128, 512),
+        ("mm_ffn3", 128, 512, 128),
+    ] {
+        let x = rnd_tensor(1, &[m, k], 0.5);
+        let w = rnd_tensor(2, &[k, n], 0.5);
+        let acc = rnd_tensor(3, &[m, n], 0.5);
+        let got = e.run1(name, &[&x, &w, &acc]).unwrap();
+        let mut want = reference::matmul(&x.to_mat(), &w.to_mat());
+        for (wv, av) in want.data.iter_mut().zip(&acc.data) {
+            *wv += av;
+        }
+        assert_close(&got, &want, 1e-3, name);
+    }
+}
+
+#[test]
+fn attention_chain_matches_reference() {
+    let e = exec();
+    let q = rnd_tensor(10, &[128, 64], 0.7);
+    let k = rnd_tensor(11, &[128, 64], 0.7);
+    let v = rnd_tensor(12, &[128, 64], 0.7);
+    let sl_valid = 100;
+    let mask_m = reference::attention_mask(128, sl_valid, false);
+    let mask = Tensor::from_mat(&mask_m);
+    let scale = Tensor::scalar1(0.125);
+
+    // split chain
+    let s = e.run1("qk_scores", &[&q, &k, &mask, &scale]).unwrap();
+    let p = e.run1("softmax", &[&s]).unwrap();
+    let o_split = e.run1("sv", &[&p, &v]).unwrap();
+    // fused
+    let o_fused = e.run1("attn_fused", &[&q, &k, &v, &mask, &scale]).unwrap();
+    // oracle
+    let want = reference::attention_head(&q.to_mat(), &k.to_mat(), &v.to_mat(), &mask_m, 0.125);
+
+    let valid = |t: &Tensor| t.to_mat().block(0, 0, sl_valid, 64);
+    let want_valid = want.block(0, 0, sl_valid, 64);
+    assert!(valid(&o_split).max_abs_diff(&want_valid) < 1e-3);
+    assert!(valid(&o_fused).max_abs_diff(&want_valid) < 1e-3);
+    assert!(valid(&o_split).max_abs_diff(&valid(&o_fused)) < 1e-3);
+}
+
+#[test]
+fn residual_ln_artifact_matches_reference_on_valid_prefix() {
+    let e = exec();
+    let d_valid = 512usize;
+    let x = {
+        let m = init_input(20, 128, d_valid).padded(128, 768);
+        Tensor::from_mat(&m)
+    };
+    let r = {
+        let m = init_input(21, 128, d_valid).padded(128, 768);
+        Tensor::from_mat(&m)
+    };
+    let mut dm = vec![0.0f32; 768];
+    dm[..d_valid].fill(1.0);
+    let gamma = Tensor::new(vec![768], vec![1.0; 768]);
+    let beta = Tensor::new(vec![768], vec![0.0; 768]);
+    let dmask = Tensor::new(vec![768], dm);
+    let count = Tensor::scalar1(d_valid as f32);
+    let got = e.run1("residual_ln", &[&x, &r, &gamma, &beta, &dmask, &count]).unwrap();
+
+    let want = reference::residual_ln(
+        &x.to_mat().block(0, 0, 128, d_valid),
+        &r.to_mat().block(0, 0, 128, d_valid),
+        &vec![1.0; d_valid],
+        &vec![0.0; d_valid],
+    );
+    let got_valid = got.to_mat().block(0, 0, 128, d_valid);
+    assert!(got_valid.max_abs_diff(&want) < 2e-3, "{}", got_valid.max_abs_diff(&want));
+    // padding stays exactly zero
+    let g = got.to_mat();
+    for rr in 0..128 {
+        for cc in d_valid..768 {
+            assert_eq!(g.at(rr, cc), 0.0);
+        }
+    }
+}
+
+#[test]
+fn bias_and_relu_artifacts() {
+    let e = exec();
+    let x = rnd_tensor(30, &[128, 3072], 1.0);
+    let b = rnd_tensor(31, &[3072], 1.0);
+    let got = e.run1("bias_relu_h", &[&x, &b]).unwrap();
+    for (i, v) in got.data.iter().enumerate() {
+        let expect = (x.data[i] + b.data[i % 3072]).max(0.0);
+        assert!((v - expect).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn fused_layer_artifacts_execute() {
+    let e = exec();
+    for name in ["small_layer", "bert_layer"] {
+        let fm = e.manifest().fused.get(name).unwrap().clone();
+        let inputs: Vec<Tensor> = fm
+            .meta
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| rnd_tensor(500 + i as u64, s, 0.1))
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = e.run1(name, &refs).unwrap_or_else(|err| panic!("{name}: {err}"));
+        assert_eq!(out.shape, vec![fm.sl, fm.d_model]);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn compile_cache_is_shared_across_runs() {
+    let e = exec();
+    let x = Tensor::zeros(vec![128, 128]);
+    for _ in 0..5 {
+        e.run1("softmax", &[&x]).unwrap();
+    }
+    let st = e.stats();
+    assert_eq!(st.compiles, 1);
+    assert_eq!(st.dispatches, 5);
+    assert!(st.execute_secs > 0.0);
+}
+
+#[test]
+fn quantize_artifact_error_bounded() {
+    let e = exec();
+    let x = rnd_tensor(40, &[128, 768], 0.3);
+    let scale = 0.01f32;
+    let q = e.run1("quantize", &[&x, &Tensor::scalar1(scale)]).unwrap();
+    for (qv, xv) in q.data.iter().zip(&x.data) {
+        if xv.abs() <= 127.0 * scale {
+            assert!((qv - xv).abs() <= scale / 2.0 + 1e-6);
+        } else {
+            assert!(qv.abs() <= 127.0 * scale + 1e-6);
+        }
+    }
+}
