@@ -2,56 +2,71 @@
 //!
 //! Proves all layers compose: Pallas kernels (L1) lowered by JAX (L2) into
 //! HLO artifacts, loaded and executed by the PJRT runtime under the rust
-//! coordinator (L3) — router → dynamic batcher → single-fabric engine
-//! thread — serving concurrent clients across TWO different transformer
-//! topologies with runtime register reprogramming and no recompilation.
+//! coordinator (L3) — router → dynamic batcher → fabric **pool** — serving
+//! concurrent clients across TWO different transformer topologies with
+//! runtime register reprogramming and no recompilation.
+//!
+//! The run is a saturation demo: the same mixed-model workload is driven
+//! through a single fabric (`--pool 1`, the paper's host software) and
+//! then through the pool (`--pool N`, default 4), reporting the
+//! throughput gain and the affinity scheduler's reprograms-per-request.
 //! Alongside the served numerics, the FPGA-substrate models estimate what
 //! the same workload costs on the paper's U55C build.
 //!
-//! Results are printed and appended to reports/e2e_serving.txt; the run is
-//! recorded in EXPERIMENTS.md.
+//! Results are printed and appended to reports/e2e_serving.txt.
 //!
-//!     make artifacts && cargo run --release --example e2e_serving
+//!     make artifacts && cargo run --release --example e2e_serving -- [--pool N] [--clients N]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use adaptor::accel::{frequency, latency, resources, tiling::TileConfig};
 use adaptor::accel::platform;
+use adaptor::accel::{frequency, latency, resources, tiling::TileConfig};
 use adaptor::coordinator::batcher::BatchPolicy;
+use adaptor::coordinator::metrics::Metrics;
 use adaptor::coordinator::router::ModelSpec;
 use adaptor::coordinator::{AttentionMode, Request, Server, ServerConfig};
 use adaptor::model::quant::BitWidth;
 use adaptor::model::{presets, reference, weights, TnnConfig};
 
-const CLIENTS: usize = 4;
 const REQS_PER_CLIENT: usize = 8;
 
-fn main() -> anyhow::Result<()> {
-    // --- the deployment: two models share one fabric -----------------
-    let small = ModelSpec::new("small-encoder", presets::small_encoder(64, 4), 42);
-    let tiny = ModelSpec::new("tiny-encoder", TnnConfig::encoder(32, 128, 2, 2), 43);
-    println!("deploying {} ({} params) and {} ({} params) on one fabric",
-        small.name, small.cfg.total_params(), tiny.name, tiny.cfg.total_params());
+fn flag_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
 
+/// Drive `clients` concurrent clients over the two-model deployment with
+/// `pool_size` fabrics; every output is verified against the dense oracle.
+fn run_workload(
+    small: &ModelSpec,
+    tiny: &ModelSpec,
+    pool_size: usize,
+    clients: usize,
+) -> anyhow::Result<(usize, f64, Metrics)> {
     let mut scfg = ServerConfig::new(vec![small.clone(), tiny.clone()]);
     scfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(3) };
     scfg.attention = AttentionMode::Fused;
+    scfg.pool_size = pool_size;
     let t_up = Instant::now();
     let server = Arc::new(Server::start(scfg)?);
-    println!("fabric warm in {:.1} ms (artifacts compiled once)\n", t_up.elapsed().as_secs_f64() * 1e3);
+    println!(
+        "  {} fabric(s) warm in {:.1} ms (artifacts compiled once per fabric)",
+        pool_size,
+        t_up.elapsed().as_secs_f64() * 1e3
+    );
 
-    // --- concurrent clients ------------------------------------------
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for c in 0..CLIENTS {
+    for c in 0..clients {
         let s = server.clone();
         let (small, tiny) = (small.clone(), tiny.clone());
         handles.push(std::thread::spawn(move || {
             let mut checked = 0usize;
             for i in 0..REQS_PER_CLIENT {
                 let spec = if (c + i) % 3 == 0 { &tiny } else { &small };
-                let x = weights::init_input((c * 100 + i) as u64, spec.cfg.seq_len, spec.cfg.d_model);
+                let x =
+                    weights::init_input((c * 100 + i) as u64, spec.cfg.seq_len, spec.cfg.d_model);
                 let resp = s
                     .infer(Request { model: spec.name.clone(), input: x.clone() })
                     .expect("inference failed");
@@ -69,16 +84,55 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     let server = Arc::try_unwrap(server).ok().expect("clients done");
-    let metrics = server.shutdown();
+    let metrics = server.shutdown()?;
+    Ok((verified, wall, metrics))
+}
 
-    // --- serving report ------------------------------------------------
+fn main() -> anyhow::Result<()> {
+    let pool: usize = flag_value("--pool").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let clients: usize = flag_value("--clients").and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    // --- the deployment: two models share the pool --------------------
+    let small = ModelSpec::new("small-encoder", presets::small_encoder(64, 4), 42);
+    let tiny = ModelSpec::new("tiny-encoder", TnnConfig::encoder(32, 128, 2, 2), 43);
+    println!(
+        "deploying {} ({} params) and {} ({} params)",
+        small.name,
+        small.cfg.total_params(),
+        tiny.name,
+        tiny.cfg.total_params()
+    );
+
+    // --- saturation demo: single fabric vs the pool --------------------
+    println!("\n[1/2] single fabric (the paper's host software):");
+    let (v1, wall1, m1) = run_workload(&small, &tiny, 1, clients)?;
+    println!("[2/2] fabric pool (pool_size = {pool}):");
+    let (vn, walln, mn) = run_workload(&small, &tiny, pool, clients)?;
+
+    let rps1 = v1 as f64 / wall1;
+    let rpsn = vn as f64 / walln;
     let mut out = String::new();
     out.push_str("=== e2e serving run (rust coordinator + PJRT artifacts) ===\n");
     out.push_str(&format!(
-        "clients: {CLIENTS} x {REQS_PER_CLIENT} requests over 2 models; all {verified} outputs oracle-verified\n"
+        "clients: {clients} x {REQS_PER_CLIENT} requests over 2 models; all {v1}+{vn} outputs oracle-verified\n"
     ));
-    out.push_str(&format!("wall time: {:.2} s  ({:.2} req/s sustained)\n", wall, verified as f64 / wall));
-    out.push_str(&metrics.report());
+    out.push_str(&format!("single fabric : {wall1:.2} s  ({rps1:.2} req/s sustained)\n"));
+    out.push_str(&format!(
+        "pool of {pool:<6}: {walln:.2} s  ({rpsn:.2} req/s sustained, {:.2}x)\n",
+        rpsn / rps1
+    ));
+    out.push_str(&format!(
+        "reprograms/request: {:.3} (single) vs {:.3} (pool, affinity)\n",
+        m1.reprograms_per_request(),
+        mn.reprograms_per_request()
+    ));
+    if rpsn <= rps1 {
+        out.push_str("WARNING: pool did not outperform the single fabric on this host\n");
+    }
+    out.push_str("\n--- single-fabric metrics ---\n");
+    out.push_str(&m1.report());
+    out.push_str("\n--- pool metrics (per-fabric breakdown) ---\n");
+    out.push_str(&mn.report());
 
     // --- what the paper's U55C build would do for the same traffic ----
     let tiles = TileConfig::paper_optimum();

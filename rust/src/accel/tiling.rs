@@ -83,8 +83,32 @@ impl TileConfig {
     }
 
     /// Legality for the *execution* engine: exact divisibility (the
-    /// analytical models tolerate ceil).
+    /// analytical models tolerate ceil) and, for a synthesized fabric,
+    /// the synthesis maxima.  The maxima check matters because
+    /// [`TileConfig::tiles_ffn`] is a synthesis *constant*: with runtime
+    /// `d_model > synth_d` the fixed tile count would silently under-cover
+    /// the weight matrix (tiles × TS_FFN < d_model) and the engine would
+    /// compute on a truncated operand.
     pub fn check_exec(&self, cfg: &TnnConfig) -> std::result::Result<(), String> {
+        if let Some(synth_d) = self.synth_d {
+            if cfg.d_model > synth_d {
+                return Err(format!(
+                    "d_model {} exceeds the synthesized maximum {} — the fabric's {} FFN tiles \
+                     would cover only {} columns (re-synthesis required)",
+                    cfg.d_model,
+                    synth_d,
+                    self.tiles_ffn(cfg.d_model),
+                    self.tiles_ffn(cfg.d_model) * self.ts_ffn
+                ));
+            }
+            if cfg.hidden > 4 * synth_d {
+                return Err(format!(
+                    "hidden {} exceeds the synthesized maximum {} (re-synthesis required)",
+                    cfg.hidden,
+                    4 * synth_d
+                ));
+            }
+        }
         if cfg.d_model % self.ts_mha != 0 {
             return Err(format!("d_model {} % TS_MHA {} != 0", cfg.d_model, self.ts_mha));
         }
@@ -161,6 +185,25 @@ mod tests {
         let t = TileConfig::paper_optimum();
         assert!(t.check_exec(&presets::paper_default()).is_ok());
         assert!(t.check_exec(&presets::shallow_transformer()).is_ok());
+    }
+
+    #[test]
+    fn exec_check_rejects_runtime_wider_than_synthesis() {
+        // Regression: tiles_ffn is a synthesis constant, so a runtime
+        // d_model beyond synth_d used to silently under-cover the weight
+        // matrix (6 tiles x 128 = 768 columns for a 1024-wide model).
+        let t = TileConfig::paper_optimum(); // synth_d = 768
+        let wide = TnnConfig::encoder(64, 1024, 16, 2);
+        let err = t.check_exec(&wide).unwrap_err();
+        assert!(err.contains("exceeds the synthesized maximum 768"), "{err}");
+        assert!(err.contains("cover only 768 columns"), "{err}");
+        // hidden alone can also overflow the synthesized panels
+        let deep_ffn = TnnConfig { hidden: 4096, ..presets::shallow_transformer() };
+        let err = t.check_exec(&deep_ffn).unwrap_err();
+        assert!(err.contains("hidden 4096 exceeds"), "{err}");
+        // an unsized TileConfig (synth_d = None) keeps the old behavior
+        let unsized_t = TileConfig::new(64, 128);
+        assert!(unsized_t.check_exec(&TnnConfig::encoder(64, 1024, 16, 2)).is_ok());
     }
 
     #[test]

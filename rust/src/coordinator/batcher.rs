@@ -1,11 +1,21 @@
 //! Dynamic request batching.
 //!
-//! The fabric processes one sequence at a time (like the FPGA), so a batch
-//! is a *drain schedule*: the batcher groups compatible requests (same
-//! registered model → same register programming) to amortize register
-//! writes and weight residency, and closes a batch on size or deadline —
-//! the standard serving tradeoff between throughput and tail latency.
+//! Each fabric processes one sequence at a time (like the FPGA), so a
+//! batch is a *drain schedule*: the batcher groups compatible requests
+//! (same registered model → same register programming) to amortize
+//! register writes and weight residency, and closes a batch on size or
+//! deadline — the standard serving tradeoff between throughput and tail
+//! latency.
+//!
+//! Requests are held in **per-model ready queues** (one FIFO per model)
+//! rather than one flat scan: `pop_ready` is O(models) instead of
+//! O(requests), and a ready batch of any model can be drained even while
+//! another model's oldest request is still inside its deadline.  Fairness
+//! is preserved by always draining the ready group whose *oldest* member
+//! arrived first, so a lone request for model B cannot starve behind a
+//! steady stream of full model-A batches.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -35,55 +45,88 @@ pub struct Pending<T> {
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    queue: Vec<Pending<T>>,
+    queues: BTreeMap<String, VecDeque<Pending<T>>>,
+    len: usize,
 }
 
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queue: Vec::new() }
+        Batcher { policy, queues: BTreeMap::new(), len: 0 }
     }
 
     pub fn push(&mut self, model: &str, payload: T) {
-        self.queue.push(Pending { model: model.to_string(), arrived: Instant::now(), payload });
+        self.push_at(model, payload, Instant::now());
+    }
+
+    /// Queue a request with an explicit arrival time (the server passes the
+    /// submit-side enqueue instant so deadlines cover the channel hop too).
+    pub fn push_at(&mut self, model: &str, payload: T, arrived: Instant) {
+        let q = self.queues.entry(model.to_string()).or_default();
+        // The front-is-oldest invariant must survive concurrent submitters:
+        // the arrival stamp is taken before the channel send, so messages
+        // can reach us out of stamp order.  Walk back from the tail —
+        // O(1) amortized for the common in-order case.
+        let mut idx = q.len();
+        while idx > 0 && q[idx - 1].arrived > arrived {
+            idx -= 1;
+        }
+        q.insert(idx, Pending { model: model.to_string(), arrived, payload });
+        self.len += 1;
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
+    }
+
+    /// Models with queued work, in name order.
+    pub fn queued_models(&self) -> impl Iterator<Item = &str> {
+        self.queues.keys().map(String::as_str)
     }
 
     /// Earliest deadline among queued items (for the drain loop's sleep).
+    /// Each per-model queue is FIFO, so its front is its oldest member.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.iter().map(|p| p.arrived + self.policy.max_wait).min()
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|p| p.arrived + self.policy.max_wait)
+            .min()
     }
 
-    /// Pop a ready batch: all queued items for the model of the *oldest*
-    /// request, if that model's group hit `max_batch` or its oldest member
-    /// timed out (or `force` is set).  Model grouping amortizes register
-    /// reprogramming, FIFO-by-oldest preserves fairness across models.
+    /// Pop a ready batch.  A model's group is *ready* when it reached
+    /// `max_batch`, its oldest member timed out, or `force` is set; among
+    /// ready groups the one whose oldest member arrived first is drained
+    /// (FIFO-by-oldest preserves fairness across models), up to
+    /// `max_batch` requests in arrival order.
     pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<(String, Vec<Pending<T>>)> {
-        let oldest = self.queue.iter().min_by_key(|p| p.arrived)?;
-        let model = oldest.model.clone();
-        let group: Vec<usize> = self
-            .queue
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| p.model == model)
-            .map(|(i, _)| i)
-            .take(self.policy.max_batch)
-            .collect();
-        let timed_out = now.duration_since(oldest.arrived) >= self.policy.max_wait;
-        if !force && group.len() < self.policy.max_batch && !timed_out {
-            return None;
+        let mut best: Option<(&str, Instant)> = None;
+        for (model, q) in &self.queues {
+            let front = match q.front() {
+                Some(p) => p,
+                None => continue,
+            };
+            let ready = force
+                || q.len() >= self.policy.max_batch
+                || now.duration_since(front.arrived) >= self.policy.max_wait;
+            if !ready {
+                continue;
+            }
+            if best.map_or(true, |(_, t)| front.arrived < t) {
+                best = Some((model, front.arrived));
+            }
         }
-        let mut batch = Vec::with_capacity(group.len());
-        for i in group.into_iter().rev() {
-            batch.push(self.queue.remove(i));
+        let model = best?.0.to_string();
+        let q = self.queues.get_mut(&model).expect("ready model is queued");
+        let n = q.len().min(self.policy.max_batch);
+        let batch: Vec<Pending<T>> = q.drain(..n).collect();
+        if q.is_empty() {
+            self.queues.remove(&model);
         }
-        batch.reverse();
+        self.len -= batch.len();
         Some((model, batch))
     }
 }
@@ -164,5 +207,94 @@ mod tests {
         let d1 = b.next_deadline().unwrap();
         b.push("m", 2);
         assert_eq!(b.next_deadline().unwrap(), d1);
+    }
+
+    #[test]
+    fn full_batch_drains_even_when_another_models_oldest_is_younger_still() {
+        // A full group of "a" must not be held hostage by a not-yet-ready
+        // lone "b" that happens to be globally oldest (the old flat-scan
+        // batcher returned None here).
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_at("b", 0, t0);
+        b.push_at("a", 1, t0 + Duration::from_millis(1));
+        b.push_at("a", 2, t0 + Duration::from_millis(1));
+        b.push_at("a", 3, t0 + Duration::from_millis(1));
+        // 10ms in: "b" has not timed out, but "a" is full and must drain.
+        let (model, batch) = b.pop_ready(t0 + Duration::from_millis(10), false).unwrap();
+        assert_eq!(model, "a");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn queued_model_b_is_not_starved_by_sustained_model_a_load() {
+        // Satellite regression: a lone request for model B queued behind a
+        // steady stream of full model-A batches must be served as soon as
+        // its deadline passes — ahead of further A batches.
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(50) });
+        let t0 = Instant::now();
+        b.push_at("b", 999, t0);
+        let mut popped_b_at_round = None;
+        for round in 0..10u32 {
+            // sustained model-A pressure: a full batch arrives every 10ms
+            let now = t0 + Duration::from_millis(10 * (round as u64 + 1));
+            b.push_at("a", round * 2, now - Duration::from_millis(1));
+            b.push_at("a", round * 2 + 1, now - Duration::from_millis(1));
+            while let Some((model, batch)) = b.pop_ready(now, false) {
+                if model == "b" {
+                    assert_eq!(batch[0].payload, 999);
+                    popped_b_at_round = Some(round);
+                }
+            }
+            if popped_b_at_round.is_some() {
+                break;
+            }
+        }
+        // b's 50ms deadline passes during round 4 (t0+50ms); it must have
+        // been drained then despite "a" staying saturated.
+        let round = popped_b_at_round.expect("model b starved behind model a");
+        assert!(round <= 4, "b served only at round {round}");
+    }
+
+    #[test]
+    fn deadline_ready_oldest_wins_over_full_younger_group() {
+        // Once B *has* timed out it outranks a younger full A group.
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_at("b", 7, t0);
+        b.push_at("a", 1, t0 + Duration::from_millis(5));
+        b.push_at("a", 2, t0 + Duration::from_millis(5));
+        b.push_at("a", 3, t0 + Duration::from_millis(5));
+        let (model, _) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(model, "b");
+        let (model, _) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(model, "a");
+    }
+
+    #[test]
+    fn out_of_order_arrivals_keep_front_oldest() {
+        // Concurrent submitters can deliver a younger stamp first; the
+        // queue must re-establish arrival order so deadlines and fairness
+        // key off the true oldest member.
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_at("m", 2, t0 + Duration::from_millis(2));
+        b.push_at("m", 1, t0); // older, arrives second
+        b.push_at("m", 3, t0 + Duration::from_millis(3));
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(50));
+        let (_, batch) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn queued_models_lists_pending_groups() {
+        let mut b = mk();
+        b.push("x", 1);
+        b.push("y", 2);
+        assert_eq!(b.queued_models().collect::<Vec<_>>(), vec!["x", "y"]);
+        let _ = b.pop_ready(Instant::now(), true);
+        assert_eq!(b.queued_models().count(), 1);
     }
 }

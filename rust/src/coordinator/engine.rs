@@ -161,6 +161,23 @@ impl TileEngine {
         self.registers.program(cfg).map_err(|e| anyhow!(e))
     }
 
+    /// The topology currently held in the register file, or `None` before
+    /// the first successful `program()` (the registers reset to all-zero,
+    /// which is not a valid topology).
+    pub fn programmed_config(&self) -> Option<TnnConfig> {
+        let cfg = self.registers.current_config();
+        cfg.validate().ok().map(|_| cfg)
+    }
+
+    /// Whether the register file already holds exactly `cfg` — i.e. a
+    /// dispatch for this topology needs no reprogram.  The pool scheduler
+    /// uses this to count (and the affinity policy to avoid) register
+    /// writes; two registered models with identical topologies share one
+    /// programming, exactly as on the hardware.
+    pub fn is_programmed_for(&self, cfg: &TnnConfig) -> bool {
+        self.registers.current_config() == *cfg
+    }
+
     /// Pre-tile a weight stack for the fabric (Algorithm 18 steps 7–9:
     /// "load weight axi master interface buffers").
     pub fn prepare(&self, cfg: &TnnConfig, stack: &[LayerWeights]) -> anyhow::Result<PreparedStack> {
@@ -520,6 +537,8 @@ mod tests {
     use crate::model::{presets, reference, weights};
     use crate::runtime::default_artifact_dir;
 
+    use crate::require_artifacts;
+
     fn engine() -> TileEngine {
         TileEngine::new(default_artifact_dir()).expect("run `make artifacts` first")
     }
@@ -531,6 +550,7 @@ mod tests {
 
     #[test]
     fn single_layer_matches_oracle() {
+        require_artifacts!();
         let mut e = engine();
         let cfg = presets::small_encoder(32, 1);
         let ws = weights::init_stack(1, cfg.d_model, cfg.heads, 1);
@@ -545,6 +565,7 @@ mod tests {
 
     #[test]
     fn split_and_fused_attention_agree() {
+        require_artifacts!();
         let mut e = engine();
         let cfg = presets::small_encoder(32, 1);
         let ws = weights::init_stack(2, cfg.d_model, cfg.heads, 1);
@@ -560,6 +581,7 @@ mod tests {
 
     #[test]
     fn runtime_reconfiguration_without_recompilation() {
+        require_artifacts!();
         // THE paper's contribution: switch topologies via registers only.
         let mut e = engine();
 
@@ -590,6 +612,7 @@ mod tests {
 
     #[test]
     fn packed_and_per_head_qkv_agree() {
+        require_artifacts!();
         let mut e = engine();
         let cfg = presets::small_encoder(48, 1);
         let ws = weights::init_stack(31, cfg.d_model, cfg.heads, 1);
@@ -604,7 +627,25 @@ mod tests {
     }
 
     #[test]
+    fn programming_state_is_exposed() {
+        require_artifacts!();
+        let mut e = engine();
+        assert!(e.programmed_config().is_none(), "fresh registers hold no topology");
+        let cfg = presets::small_encoder(32, 1);
+        assert!(!e.is_programmed_for(&cfg));
+        e.program(&cfg).unwrap();
+        assert_eq!(e.programmed_config(), Some(cfg));
+        assert!(e.is_programmed_for(&cfg));
+        let other = TnnConfig::encoder(48, 128, 2, 1);
+        assert!(!e.is_programmed_for(&other));
+        e.program(&other).unwrap();
+        assert!(e.is_programmed_for(&other));
+        assert!(!e.is_programmed_for(&cfg));
+    }
+
+    #[test]
     fn fabric_constraints_are_enforced() {
+        require_artifacts!();
         let mut e = engine();
         // dk != 64
         assert!(e.program(&TnnConfig::encoder(32, 256, 8, 1)).is_err());
@@ -618,6 +659,7 @@ mod tests {
 
     #[test]
     fn wrong_register_state_is_rejected() {
+        require_artifacts!();
         let mut e = engine();
         let cfg = presets::small_encoder(32, 1);
         let ws = weights::init_stack(9, cfg.d_model, cfg.heads, 1);
@@ -631,6 +673,7 @@ mod tests {
 
     #[test]
     fn quantized_mode_is_close_but_not_identical() {
+        require_artifacts!();
         let mut e = engine();
         let cfg = presets::small_encoder(32, 1);
         let ws = weights::init_stack(41, cfg.d_model, cfg.heads, 1);
@@ -647,6 +690,7 @@ mod tests {
 
     #[test]
     fn fused_layer_matches_tiled_layer() {
+        require_artifacts!();
         let mut e = engine();
         let cfg = presets::small_encoder(64, 1); // matches fused_small_layer
         let ws = weights::init_stack(11, cfg.d_model, cfg.heads, 1);

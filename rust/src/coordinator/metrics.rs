@@ -1,41 +1,75 @@
-//! Serving metrics — the substrate's AXI-timer (§4): per-request latency,
-//! queue wait, batch sizes, throughput.
+//! Serving metrics — the substrate's AXI-timer (§4): per-request compute,
+//! queue-wait and end-to-end latency, batch sizes, failures, throughput.
+//!
+//! One `Metrics` instance accumulates per fabric; the pool dispatcher
+//! merges them into an aggregate whose `per_fabric` field keeps the
+//! per-fabric breakdown for the report.
 
 use std::time::Duration;
 
 use crate::util::stats::{summarize, Summary};
 
-/// Accumulated serving metrics.
+/// Accumulated serving metrics (one fabric, or the pool aggregate).
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
-    /// End-to-end request latencies, seconds.
+    /// Which fabric these numbers belong to; `None` for the aggregate.
+    pub fabric: Option<usize>,
+    /// End-to-end request latencies (queue wait + compute), seconds.
     pub latencies: Vec<f64>,
-    /// Queue-wait component, seconds.
+    /// Compute component (time on the fabric proper), seconds.
+    pub computes: Vec<f64>,
+    /// Queue-wait component (submit → start of execution, including
+    /// in-batch wait behind earlier members), seconds.
     pub queue_waits: Vec<f64>,
-    /// Batch sizes drained.
+    /// Batch sizes drained — recorded only for batches that were actually
+    /// served (prepared model, registers programmed).
     pub batch_sizes: Vec<usize>,
     /// Register reprogramming events (model switches on the fabric).
     pub reprograms: u64,
+    /// Requests that failed (programming errors, execution errors).
+    pub failed: u64,
     /// Total wall time observed, seconds.
     pub elapsed: f64,
+    /// Per-fabric breakdown (aggregate only; empty on a fabric's own
+    /// metrics).
+    pub per_fabric: Vec<Metrics>,
 }
 
 impl Metrics {
-    pub fn record(&mut self, latency: Duration, queue_wait: Duration) {
-        self.latencies.push(latency.as_secs_f64());
+    /// Fresh metrics tagged with a fabric id.
+    pub fn for_fabric(id: usize) -> Self {
+        Metrics { fabric: Some(id), ..Metrics::default() }
+    }
+
+    /// Record one successfully served request.
+    pub fn record(&mut self, compute: Duration, queue_wait: Duration, end_to_end: Duration) {
+        self.computes.push(compute.as_secs_f64());
         self.queue_waits.push(queue_wait.as_secs_f64());
+        self.latencies.push(end_to_end.as_secs_f64());
     }
 
     pub fn record_batch(&mut self, size: usize) {
         self.batch_sizes.push(size);
     }
 
+    /// Successfully served requests.
     pub fn requests(&self) -> usize {
         self.latencies.len()
     }
 
+    /// End-to-end latency summary.
     pub fn latency_summary(&self) -> Option<Summary> {
         (!self.latencies.is_empty()).then(|| summarize(&self.latencies))
+    }
+
+    /// Compute-only latency summary.
+    pub fn compute_summary(&self) -> Option<Summary> {
+        (!self.computes.is_empty()).then(|| summarize(&self.computes))
+    }
+
+    /// Queue-wait summary.
+    pub fn queue_summary(&self) -> Option<Summary> {
+        (!self.queue_waits.is_empty()).then(|| summarize(&self.queue_waits))
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -54,22 +88,93 @@ impl Metrics {
         }
     }
 
-    /// Human-readable report block (EXPERIMENTS.md format).
+    /// Reprograms amortized over served requests (the affinity scheduler's
+    /// figure of merit: lower = fewer register writes per inference).
+    pub fn reprograms_per_request(&self) -> f64 {
+        if self.requests() == 0 {
+            0.0
+        } else {
+            self.reprograms as f64 / self.requests() as f64
+        }
+    }
+
+    /// Fold another fabric's numbers into this one (samples are appended,
+    /// counters added, elapsed takes the max — fabrics run concurrently).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies.extend_from_slice(&other.latencies);
+        self.computes.extend_from_slice(&other.computes);
+        self.queue_waits.extend_from_slice(&other.queue_waits);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.reprograms += other.reprograms;
+        self.failed += other.failed;
+        self.elapsed = self.elapsed.max(other.elapsed);
+    }
+
+    /// Build the pool aggregate from per-fabric metrics, keeping the
+    /// breakdown.
+    pub fn aggregate(per_fabric: Vec<Metrics>) -> Metrics {
+        let mut agg = Metrics::default();
+        for m in &per_fabric {
+            agg.merge(m);
+        }
+        agg.per_fabric = per_fabric;
+        agg
+    }
+
+    /// Human-readable report block.
     pub fn report(&self) -> String {
-        match self.latency_summary() {
-            None => "no requests served\n".to_string(),
+        let mut out = match self.latency_summary() {
+            None => {
+                let mut s = "no requests served\n".to_string();
+                if self.failed > 0 {
+                    s.push_str(&format!("failed: {}\n", self.failed));
+                }
+                return s;
+            }
             Some(s) => format!(
-                "requests: {}\nthroughput: {:.2} req/s\nlatency ms: p50={:.2} p95={:.2} mean={:.2} max={:.2}\nmean batch: {:.2}\nreprograms: {}\n",
+                "requests: {} (failed: {})\nthroughput: {:.2} req/s\ne2e ms: p50={:.2} p95={:.2} mean={:.2} max={:.2}\n",
                 self.requests(),
+                self.failed,
                 self.throughput_rps(),
                 s.p50 * 1e3,
                 s.p95 * 1e3,
                 s.mean * 1e3,
                 s.max * 1e3,
-                self.mean_batch(),
-                self.reprograms,
             ),
+        };
+        if let Some(c) = self.compute_summary() {
+            out.push_str(&format!(
+                "compute ms: p50={:.2} p95={:.2} mean={:.2}\n",
+                c.p50 * 1e3,
+                c.p95 * 1e3,
+                c.mean * 1e3
+            ));
         }
+        if let Some(q) = self.queue_summary() {
+            out.push_str(&format!(
+                "queue ms: p50={:.2} p95={:.2} mean={:.2}\n",
+                q.p50 * 1e3,
+                q.p95 * 1e3,
+                q.mean * 1e3
+            ));
+        }
+        out.push_str(&format!(
+            "mean batch: {:.2}\nreprograms: {} ({:.3} per request)\n",
+            self.mean_batch(),
+            self.reprograms,
+            self.reprograms_per_request(),
+        ));
+        for f in &self.per_fabric {
+            out.push_str(&format!(
+                "  fabric {}: {} served, {} failed, {} reprograms, {:.2} req/s\n",
+                f.fabric.map(|i| i.to_string()).unwrap_or_else(|| "?".into()),
+                f.requests(),
+                f.failed,
+                f.reprograms,
+                f.throughput_rps(),
+            ));
+        }
+        out
     }
 }
 
@@ -81,7 +186,11 @@ mod tests {
     fn record_and_summarize() {
         let mut m = Metrics::default();
         for i in 1..=10 {
-            m.record(Duration::from_millis(i * 10), Duration::from_millis(i));
+            m.record(
+                Duration::from_millis(i * 9),
+                Duration::from_millis(i),
+                Duration::from_millis(i * 10),
+            );
         }
         m.record_batch(4);
         m.record_batch(2);
@@ -91,6 +200,10 @@ mod tests {
         assert_eq!(m.mean_batch(), 3.0);
         let s = m.latency_summary().unwrap();
         assert!(s.p50 >= 0.05 && s.p50 <= 0.06);
+        let c = m.compute_summary().unwrap();
+        let q = m.queue_summary().unwrap();
+        // compute + queue == e2e by construction of the samples
+        assert!((c.mean + q.mean - s.mean).abs() < 1e-9);
         assert!(m.report().contains("requests: 10"));
     }
 
@@ -99,5 +212,39 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.report(), "no requests served\n");
         assert!(m.latency_summary().is_none());
+        assert!(m.compute_summary().is_none());
+    }
+
+    #[test]
+    fn merge_appends_samples_and_adds_counters() {
+        let mut a = Metrics::for_fabric(0);
+        a.record(Duration::from_millis(5), Duration::from_millis(1), Duration::from_millis(6));
+        a.reprograms = 2;
+        a.failed = 1;
+        a.elapsed = 1.0;
+        let mut b = Metrics::for_fabric(1);
+        b.record(Duration::from_millis(7), Duration::from_millis(2), Duration::from_millis(9));
+        b.record(Duration::from_millis(7), Duration::from_millis(2), Duration::from_millis(9));
+        b.reprograms = 1;
+        b.elapsed = 2.0;
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.requests(), 3);
+        assert_eq!(agg.reprograms, 3);
+        assert_eq!(agg.failed, 1);
+        assert_eq!(agg.elapsed, 2.0);
+        assert_eq!(agg.per_fabric.len(), 2);
+        assert_eq!(agg.per_fabric[0].fabric, Some(0));
+        assert!(agg.report().contains("fabric 1"));
+    }
+
+    #[test]
+    fn reprograms_per_request_is_amortized() {
+        let mut m = Metrics::default();
+        assert_eq!(m.reprograms_per_request(), 0.0);
+        for _ in 0..4 {
+            m.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        }
+        m.reprograms = 2;
+        assert!((m.reprograms_per_request() - 0.5).abs() < 1e-12);
     }
 }

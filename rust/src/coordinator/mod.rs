@@ -5,12 +5,17 @@
 //!   Algorithms 1–17 as a dataflow of fixed-shape AOT tile primitives on
 //!   the PJRT runtime, under the control of the configuration registers.
 //!   This is the numeric twin of the FPGA fabric.
-//! * [`batcher`] — dynamic request batching (size/deadline policy).
-//! * [`router`] — model registry + request routing to the fabric.
+//! * [`batcher`] — dynamic request batching (per-model ready queues,
+//!   size/deadline policy).
+//! * [`router`] — model registry + request routing, with pool-affinity
+//!   hints.
 //! * [`server`] — the threaded serving loop: clients submit token
-//!   sequences, a dedicated engine thread (exactly one fabric, like the
-//!   hardware) drains batches.
-//! * [`metrics`] — latency/throughput accounting (AXI-timer analog).
+//!   sequences; a dispatcher assigns model-homogeneous batches to a
+//!   **pool** of fabric worker threads (each owning one engine, like one
+//!   piece of hardware) under an affinity or round-robin schedule.
+//!   `pool_size = 1` is the paper's single-fabric host software.
+//! * [`metrics`] — compute/queue/end-to-end latency and throughput
+//!   accounting (AXI-timer analog), per fabric and aggregated.
 
 pub mod batcher;
 pub mod engine;
@@ -19,4 +24,6 @@ pub mod router;
 pub mod server;
 
 pub use engine::{AttentionMode, PreparedStack, TileEngine};
-pub use server::{Request, Response, Server, ServerConfig};
+pub use server::{
+    FaultInjection, PoolScheduler, Request, Response, SchedulePolicy, Server, ServerConfig,
+};

@@ -19,11 +19,22 @@ pub struct ModelSpec {
     pub name: String,
     pub cfg: TnnConfig,
     pub seed: u64,
+    /// Scheduling hint for the fabric pool: pin this model's batches to a
+    /// specific fabric index when one is configured (overrides the
+    /// programmed-model affinity heuristic).  Ignored when the index is
+    /// out of range for the running pool.
+    pub preferred_fabric: Option<usize>,
 }
 
 impl ModelSpec {
     pub fn new(name: &str, cfg: TnnConfig, seed: u64) -> Self {
-        ModelSpec { name: name.to_string(), cfg, seed }
+        ModelSpec { name: name.to_string(), cfg, seed, preferred_fabric: None }
+    }
+
+    /// Pin this model to a pool fabric (affinity hint).
+    pub fn with_affinity(mut self, fabric: usize) -> Self {
+        self.preferred_fabric = Some(fabric);
+        self
     }
 
     /// Materialize the synthetic weight stack (DESIGN.md §Substitutions).
@@ -44,20 +55,29 @@ impl Router {
         Router { models: BTreeMap::new(), maxima: Some(maxima) }
     }
 
-    /// Register a model; refuses topologies the fabric cannot hold.
+    /// Register a model; refuses topologies the fabric cannot hold, naming
+    /// every register that exceeds its synthesis maximum.
     pub fn register(&mut self, spec: ModelSpec) -> anyhow::Result<()> {
         spec.cfg.validate_for_execution().map_err(|e| anyhow!(e))?;
         if let Some(m) = &self.maxima {
-            if spec.cfg.seq_len > m.seq_len
-                || spec.cfg.d_model > m.d_model
-                || spec.cfg.hidden > m.hidden
-            {
+            let mut over = Vec::new();
+            if spec.cfg.seq_len > m.seq_len {
+                over.push(format!("seq_len {} > {}", spec.cfg.seq_len, m.seq_len));
+            }
+            if spec.cfg.heads > m.heads {
+                over.push(format!("heads {} > {}", spec.cfg.heads, m.heads));
+            }
+            if spec.cfg.d_model > m.d_model {
+                over.push(format!("d_model {} > {}", spec.cfg.d_model, m.d_model));
+            }
+            if spec.cfg.hidden > m.hidden {
+                over.push(format!("hidden {} > {}", spec.cfg.hidden, m.hidden));
+            }
+            if !over.is_empty() {
                 bail!(
-                    "model '{}' exceeds synthesis maxima (sl {} d {} hid {})",
+                    "model '{}' exceeds the synthesis maxima: {} (re-synthesis required)",
                     spec.name,
-                    m.seq_len,
-                    m.d_model,
-                    m.hidden
+                    over.join(", ")
                 );
             }
         }
@@ -83,6 +103,11 @@ impl Router {
             );
         }
         Ok(spec)
+    }
+
+    /// The pool-affinity hint registered for `model`, if any.
+    pub fn affinity_hint(&self, model: &str) -> Option<usize> {
+        self.models.get(model).and_then(|s| s.preferred_fabric)
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -117,9 +142,33 @@ mod tests {
     fn oversize_model_is_refused() {
         let mut r = router();
         let big = TnnConfig::encoder(64, 1024, 16, 2);
-        assert!(r.register(ModelSpec::new("big", big, 1)).is_err());
+        let err = r.register(ModelSpec::new("big", big, 1)).unwrap_err().to_string();
+        assert!(err.contains("d_model 1024 > 768"), "{err}");
+        assert!(err.contains("heads 16 > 12"), "{err}");
         let long = presets::small_encoder(256, 2);
-        assert!(r.register(ModelSpec::new("long", long, 1)).is_err());
+        let err = r.register(ModelSpec::new("long", long, 1)).unwrap_err().to_string();
+        assert!(err.contains("seq_len 256 > 128"), "{err}");
+    }
+
+    #[test]
+    fn too_many_heads_is_refused_even_when_dims_fit() {
+        // 16 heads at d_model 512 divides evenly and fits every dimension
+        // register except Heads — registration must still refuse it.
+        let mut r = router();
+        let cfg = TnnConfig::encoder(64, 512, 16, 1);
+        let err = r.register(ModelSpec::new("heady", cfg, 1)).unwrap_err().to_string();
+        assert!(err.contains("heads 16 > 12"), "{err}");
+    }
+
+    #[test]
+    fn affinity_hint_round_trips_through_the_registry() {
+        let mut r = router();
+        r.register(ModelSpec::new("pinned", presets::small_encoder(64, 1), 1).with_affinity(2))
+            .unwrap();
+        r.register(ModelSpec::new("free", presets::small_encoder(64, 1), 2)).unwrap();
+        assert_eq!(r.affinity_hint("pinned"), Some(2));
+        assert_eq!(r.affinity_hint("free"), None);
+        assert_eq!(r.affinity_hint("missing"), None);
     }
 
     #[test]

@@ -1,17 +1,37 @@
-//! The serving loop.
+//! The serving loop — a pool of ADAPTOR fabrics behind one dispatcher.
 //!
-//! `PjRtLoadedExecutable` is not `Send`, and the paper's system has exactly
-//! one fabric — so the server owns a dedicated **engine thread** that
-//! constructs the `TileEngine` locally and drains batches from an mpsc
-//! queue.  Clients submit from any thread and receive their response over
-//! a per-request channel.  Model switches reprogram the register file
-//! (counted in metrics: that is the runtime-adaptivity event).
+//! `PjRtLoadedExecutable` is not `Send`, so every fabric is a dedicated
+//! **worker thread** that constructs its own `TileEngine` locally and
+//! drains batches from a per-fabric mpsc queue.  A single **dispatcher**
+//! thread owns the batcher (per-model ready queues) and assigns ready
+//! batches to fabrics under a [`SchedulePolicy`]: with `Affinity` a batch
+//! is routed to a fabric already programmed for its model (avoiding a
+//! register reprogram), falling back to the least-loaded fabric; with
+//! `RoundRobin` fabrics are cycled regardless of programming state (the
+//! baseline the affinity tests compare against).
+//!
+//! `pool_size = 1` reproduces the paper's host software exactly: one
+//! fabric, one register file, reprograms on every model switch — the
+//! paper-reproduction path is unchanged.  Clients submit from any thread
+//! and receive their response over a per-request channel.
+//!
+//! Failure semantics (each was a silent failure in the single-fabric
+//! predecessor):
+//! * a failed `engine.program()` fails the **whole batch** with the
+//!   programming error — requests are never run against the previous
+//!   model's register state;
+//! * batches are counted in metrics only once actually served;
+//! * `Response` reports `compute`, `queue_wait` and end-to-end `latency`
+//!   separately;
+//! * `shutdown()` returns `anyhow::Result<Metrics>` and surfaces worker
+//!   panics instead of returning empty metrics as if the run were clean.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::anyhow;
+use anyhow::{anyhow, bail};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{AttentionMode, PreparedStack, TileEngine};
@@ -26,12 +46,40 @@ pub struct Request {
     pub input: Mat,
 }
 
-/// The response: output activations + timing.
+/// The response: output activations + timing breakdown.
 #[derive(Debug)]
 pub struct Response {
     pub output: Mat,
+    /// End-to-end latency: submit → response ready (queue + compute).
     pub latency: Duration,
+    /// Time spent executing on the fabric.
+    pub compute: Duration,
+    /// Time between submit and this request *starting to execute* —
+    /// includes batching delay, dispatch, any register reprogram, and
+    /// (for the 2nd..Nth members of a batch) the compute time of
+    /// earlier members, so `latency == queue_wait + compute` holds.
     pub queue_wait: Duration,
+}
+
+/// How the dispatcher assigns ready batches to pool fabrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Route to a fabric already programmed for the batch's model; fall
+    /// back to an unprogrammed or least-loaded fabric.  Router affinity
+    /// hints ([`ModelSpec::with_affinity`]) take precedence.
+    Affinity,
+    /// Cycle through fabrics regardless of programming state (baseline
+    /// scheduler; maximizes reprograms under mixed-model load).
+    RoundRobin,
+}
+
+/// Fault injection for failure-path regression tests.  Inert by default;
+/// production configs never set it.
+#[derive(Debug, Clone, Default)]
+pub struct FaultInjection {
+    /// Treat `engine.program()` as failing for this model name, exercising
+    /// the batch-fails-on-programming-error path.
+    pub fail_program_for: Option<String>,
 }
 
 /// Server construction parameters.
@@ -41,6 +89,11 @@ pub struct ServerConfig {
     pub models: Vec<ModelSpec>,
     pub policy: BatchPolicy,
     pub attention: AttentionMode,
+    /// Number of fabric workers.  `1` (the default) is the paper's
+    /// single-fabric host software.
+    pub pool_size: usize,
+    pub schedule: SchedulePolicy,
+    pub fault: FaultInjection,
 }
 
 impl ServerConfig {
@@ -50,43 +103,176 @@ impl ServerConfig {
             models,
             policy: BatchPolicy::default(),
             attention: AttentionMode::Fused,
+            pool_size: 1,
+            schedule: SchedulePolicy::Affinity,
+            fault: FaultInjection::default(),
         }
     }
 }
 
+type ReplyTx = Sender<anyhow::Result<Response>>;
+/// A request in flight: payload + submit instant + reply channel.
+type WorkItem = (Request, Instant, ReplyTx);
+
+/// Client → dispatcher messages.
 enum Msg {
-    Work { req: Request, enqueued: Instant, reply: Sender<anyhow::Result<Response>> },
+    Work { req: Request, enqueued: Instant, reply: ReplyTx },
+    Shutdown { reply: Sender<anyhow::Result<Metrics>> },
+}
+
+/// Dispatcher → fabric messages (ordered per fabric: a `Shutdown` sent
+/// after a `Batch` is processed after it).
+enum FabricMsg {
+    Batch { model: String, items: Vec<WorkItem> },
     Shutdown { reply: Sender<Metrics> },
+}
+
+/// Fabric → dispatcher completion events (separate channel so the
+/// dispatcher can still detect all *clients* disconnecting).
+struct FabricEvent {
+    fabric: usize,
+    served: usize,
+}
+
+/// Per-fabric programming/load state tracked by the dispatcher.  This is
+/// the dispatcher's *belief* (programming happens on the worker), which is
+/// exact under normal operation and conservative under failures.
+#[derive(Debug, Default, Clone)]
+struct FabricState {
+    current_model: Option<String>,
+    inflight: usize,
+}
+
+/// Pure batch→fabric assignment logic (unit-testable without artifacts).
+#[derive(Debug)]
+pub struct PoolScheduler {
+    policy: SchedulePolicy,
+    states: Vec<FabricState>,
+    rr_next: usize,
+}
+
+impl PoolScheduler {
+    pub fn new(policy: SchedulePolicy, fabrics: usize) -> Self {
+        assert!(fabrics > 0, "a pool needs at least one fabric");
+        PoolScheduler { policy, states: vec![FabricState::default(); fabrics], rr_next: 0 }
+    }
+
+    /// Choose the fabric for a ready batch of `model` and account for it
+    /// (`batch_len` requests become in-flight on the chosen fabric).
+    pub fn pick(&mut self, model: &str, hint: Option<usize>, batch_len: usize) -> usize {
+        let n = self.states.len();
+        let chosen = match self.policy {
+            SchedulePolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % n;
+                i
+            }
+            SchedulePolicy::Affinity => {
+                if let Some(h) = hint.filter(|h| *h < n) {
+                    h
+                } else if let Some(i) = self
+                    .states
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.current_model.as_deref() == Some(model))
+                    .min_by_key(|(_, s)| s.inflight)
+                    .map(|(i, _)| i)
+                {
+                    i
+                } else {
+                    // Least-loaded fallback; among equals prefer a fabric
+                    // with nothing programmed yet over evicting a resident
+                    // model, then the lowest index.
+                    self.states
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(i, s)| (s.inflight, s.current_model.is_some(), *i))
+                        .map(|(i, _)| i)
+                        .expect("pool is non-empty")
+                }
+            }
+        };
+        let s = &mut self.states[chosen];
+        s.current_model = Some(model.to_string());
+        s.inflight += batch_len;
+        chosen
+    }
+
+    /// A fabric reported `served` requests finished.
+    pub fn complete(&mut self, fabric: usize, served: usize) {
+        if let Some(s) = self.states.get_mut(fabric) {
+            s.inflight = s.inflight.saturating_sub(served);
+        }
+    }
+
+    /// The model the scheduler believes `fabric` is programmed for.
+    pub fn current_model(&self, fabric: usize) -> Option<&str> {
+        self.states.get(fabric).and_then(|s| s.current_model.as_deref())
+    }
+
+    pub fn inflight(&self, fabric: usize) -> usize {
+        self.states.get(fabric).map(|s| s.inflight).unwrap_or(0)
+    }
 }
 
 /// Handle to the running server.
 pub struct Server {
     tx: Sender<Msg>,
     router: Router,
-    worker: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start the engine thread; blocks until the fabric is warmed up (all
+    /// Start the fabric pool; blocks until every fabric is warmed up (all
     /// models prepared and artifacts compiled) or fails.
     pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-
+        if cfg.pool_size == 0 {
+            bail!("pool_size must be >= 1");
+        }
         // Router lives on the submit side for fail-fast validation.
         let mut router = Router::new(crate::accel::registers::SynthMaxima::artifact_default());
         for spec in &cfg.models {
             router.register(spec.clone())?;
         }
 
-        let worker = std::thread::Builder::new()
-            .name("adaptor-fabric".into())
-            .spawn(move || engine_thread(cfg, rx, ready_tx))
-            .expect("spawning engine thread");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during warmup"))??;
-        Ok(Server { tx, router, worker: Some(worker) })
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (etx, erx) = mpsc::channel::<FabricEvent>();
+
+        let mut fabric_txs = Vec::with_capacity(cfg.pool_size);
+        let mut workers = Vec::with_capacity(cfg.pool_size);
+        let mut readys = Vec::with_capacity(cfg.pool_size);
+        for id in 0..cfg.pool_size {
+            let (ftx, frx) = mpsc::channel::<FabricMsg>();
+            let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+            let events = etx.clone();
+            let fcfg = cfg.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("adaptor-fabric-{id}"))
+                .spawn(move || fabric_thread(id, fcfg, frx, ready_tx, events))
+                .expect("spawning fabric thread");
+            fabric_txs.push(ftx);
+            workers.push(worker);
+            readys.push((id, ready_rx));
+        }
+        drop(etx); // dispatcher holds the receiver; fabrics hold the clones
+        for (id, ready_rx) in readys {
+            ready_rx.recv().map_err(|_| anyhow!("fabric {id} died during warmup"))??;
+        }
+
+        let hints: BTreeMap<String, usize> = cfg
+            .models
+            .iter()
+            .filter_map(|s| s.preferred_fabric.map(|f| (s.name.clone(), f)))
+            .collect();
+        let scheduler = PoolScheduler::new(cfg.schedule, cfg.pool_size);
+        let policy = cfg.policy;
+        let dispatcher = std::thread::Builder::new()
+            .name("adaptor-dispatch".into())
+            .spawn(move || dispatcher_thread(policy, rx, erx, fabric_txs, scheduler, hints))
+            .expect("spawning dispatcher thread");
+
+        Ok(Server { tx, router, dispatcher: Some(dispatcher), workers })
     }
 
     pub fn models(&self) -> Vec<&str> {
@@ -99,28 +285,139 @@ impl Server {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Work { req, enqueued: Instant::now(), reply })
-            .map_err(|_| anyhow!("engine thread is gone"))?;
+            .map_err(|_| anyhow!("dispatcher is gone"))?;
         Ok(rx)
     }
 
     /// Convenience: submit and wait.
     pub fn infer(&self, req: Request) -> anyhow::Result<Response> {
-        self.submit(req)?.recv().map_err(|_| anyhow!("engine dropped the request"))?
+        self.submit(req)?.recv().map_err(|_| anyhow!("pool dropped the request"))?
     }
 
-    /// Stop the engine thread and collect final metrics.
-    pub fn shutdown(mut self) -> Metrics {
+    /// Stop the pool and collect final metrics (aggregate with per-fabric
+    /// breakdown).  A worker or dispatcher panic is propagated as an error
+    /// rather than masked with empty metrics.
+    pub fn shutdown(mut self) -> anyhow::Result<Metrics> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Shutdown { reply });
-        let m = rx.recv().unwrap_or_default();
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        self.tx
+            .send(Msg::Shutdown { reply })
+            .map_err(|_| anyhow!("dispatcher is gone (did it panic?)"))?;
+        let result = rx
+            .recv()
+            .map_err(|_| anyhow!("dispatcher exited without reporting metrics (panic?)"));
+        let mut panicked = Vec::new();
+        if let Some(h) = self.dispatcher.take() {
+            if h.join().is_err() {
+                panicked.push("dispatcher".to_string());
+            }
         }
-        m
+        for (i, h) in self.workers.drain(..).enumerate() {
+            if h.join().is_err() {
+                panicked.push(format!("fabric {i}"));
+            }
+        }
+        if !panicked.is_empty() {
+            bail!("serving threads panicked: {}", panicked.join(", "));
+        }
+        result?
     }
 }
 
-fn engine_thread(cfg: ServerConfig, rx: Receiver<Msg>, ready: Sender<anyhow::Result<()>>) {
+fn dispatcher_thread(
+    policy: BatchPolicy,
+    rx: Receiver<Msg>,
+    erx: Receiver<FabricEvent>,
+    fabrics: Vec<Sender<FabricMsg>>,
+    mut sched: PoolScheduler,
+    hints: BTreeMap<String, usize>,
+) {
+    let mut batcher: Batcher<WorkItem> = Batcher::new(policy);
+    let started = Instant::now();
+    let mut shutdown_reply: Option<Sender<anyhow::Result<Metrics>>> = None;
+
+    'outer: loop {
+        // Wait for work, bounded by the oldest batch deadline.
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Work { req, enqueued, reply }) => {
+                let model = req.model.clone();
+                batcher.push_at(&model, (req, enqueued, reply), enqueued);
+            }
+            Ok(Msg::Shutdown { reply }) => {
+                shutdown_reply = Some(reply);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break 'outer,
+        }
+        // Fold in completion events so load tracking stays fresh.
+        while let Ok(ev) = erx.try_recv() {
+            sched.complete(ev.fabric, ev.served);
+        }
+        let draining = shutdown_reply.is_some();
+        while let Some((model, batch)) = batcher.pop_ready(Instant::now(), draining) {
+            let fabric = sched.pick(&model, hints.get(&model).copied(), batch.len());
+            let items: Vec<WorkItem> = batch.into_iter().map(|p| p.payload).collect();
+            let n = items.len();
+            if let Err(mpsc::SendError(lost)) =
+                fabrics[fabric].send(FabricMsg::Batch { model, items })
+            {
+                // The worker thread is gone: fail the batch loudly instead
+                // of dropping the reply channels.
+                if let FabricMsg::Batch { items, .. } = lost {
+                    for (_, _, reply) in items {
+                        let _ =
+                            reply.send(Err(anyhow!("fabric {fabric} is gone (worker died)")));
+                    }
+                }
+                sched.complete(fabric, n);
+            }
+        }
+        if draining && batcher.is_empty() {
+            break 'outer;
+        }
+    }
+
+    // Collect per-fabric metrics; per-fabric channel order guarantees all
+    // dispatched batches are served before the Shutdown is processed.
+    let mut per_fabric = Vec::with_capacity(fabrics.len());
+    let mut failure: Option<anyhow::Error> = None;
+    for (id, ftx) in fabrics.iter().enumerate() {
+        let (mtx, mrx) = mpsc::channel();
+        if ftx.send(FabricMsg::Shutdown { reply: mtx }).is_err() {
+            failure.get_or_insert_with(|| anyhow!("fabric {id} terminated abnormally"));
+            continue;
+        }
+        match mrx.recv() {
+            Ok(m) => per_fabric.push(m),
+            Err(_) => {
+                failure
+                    .get_or_insert_with(|| anyhow!("fabric {id} died during shutdown (metrics lost)"));
+            }
+        }
+    }
+    let result = match failure {
+        Some(e) => Err(e),
+        None => {
+            let mut agg = Metrics::aggregate(per_fabric);
+            agg.elapsed = started.elapsed().as_secs_f64();
+            Ok(agg)
+        }
+    };
+    if let Some(reply) = shutdown_reply {
+        let _ = reply.send(result);
+    }
+}
+
+fn fabric_thread(
+    id: usize,
+    cfg: ServerConfig,
+    rx: Receiver<FabricMsg>,
+    ready: Sender<anyhow::Result<()>>,
+    events: Sender<FabricEvent>,
+) {
     // Build the fabric locally (not Send).
     let mut engine = match TileEngine::new(&cfg.artifact_dir) {
         Ok(e) => e,
@@ -137,7 +434,8 @@ fn engine_thread(cfg: ServerConfig, rx: Receiver<Msg>, ready: Sender<anyhow::Res
         match engine.prepare(&spec.cfg, &spec.weights()) {
             Ok(p) => prepared.push((spec.name.clone(), p)),
             Err(e) => {
-                let _ = ready.send(Err(e.context(format!("preparing model '{}'", spec.name))));
+                let _ = ready
+                    .send(Err(e.context(format!("fabric {id}: preparing model '{}'", spec.name))));
                 return;
             }
         }
@@ -154,69 +452,81 @@ fn engine_thread(cfg: ServerConfig, rx: Receiver<Msg>, ready: Sender<anyhow::Res
     }
     let _ = ready.send(Ok(()));
 
-    let mut batcher: Batcher<(Request, Instant, Sender<anyhow::Result<Response>>)> =
-        Batcher::new(cfg.policy);
-    let mut metrics = Metrics::default();
+    let mut metrics = Metrics::for_fabric(id);
     let started = Instant::now();
-    let mut current_model = String::new();
-    let mut shutdown_reply: Option<Sender<Metrics>> = None;
-
-    'outer: loop {
-        // Wait for work, bounded by the oldest batch deadline.
-        let timeout = batcher
-            .next_deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Work { req, enqueued, reply }) => {
-                let model = req.model.clone();
-                batcher.push(&model, (req, enqueued, reply));
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            FabricMsg::Batch { model, items } => {
+                let served = items.len();
+                serve_batch(&mut engine, &cfg.fault, &prepared, &mut metrics, &model, items);
+                let _ = events.send(FabricEvent { fabric: id, served });
             }
-            Ok(Msg::Shutdown { reply }) => {
-                shutdown_reply = Some(reply);
+            FabricMsg::Shutdown { reply } => {
+                metrics.elapsed = started.elapsed().as_secs_f64();
+                let _ = reply.send(metrics);
+                return;
             }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break 'outer,
-        }
-        let draining = shutdown_reply.is_some();
-        while let Some((model, batch)) = batcher.pop_ready(Instant::now(), draining) {
-            metrics.record_batch(batch.len());
-            let stack = prepared.iter().find(|(n, _)| *n == model);
-            // Reprogram the registers only on model switch.
-            if current_model != model {
-                if let Some((_, p)) = stack {
-                    if engine.program(&p.cfg).is_ok() {
-                        metrics.reprograms += 1;
-                        current_model = model.clone();
-                    }
-                }
-            }
-            for (req, enqueued, reply) in batch.into_iter().map(|p| p.payload) {
-                let queue_wait = enqueued.elapsed();
-                let result = match stack {
-                    None => Err(anyhow!("model '{model}' not prepared")),
-                    Some((_, p)) => {
-                        let t0 = Instant::now();
-                        engine.run_encoder(p, &req.input).map(|output| Response {
-                            output,
-                            latency: t0.elapsed() + queue_wait,
-                            queue_wait,
-                        })
-                    }
-                };
-                if let Ok(r) = &result {
-                    metrics.record(r.latency, r.queue_wait);
-                }
-                let _ = reply.send(result);
-            }
-        }
-        if draining && batcher.is_empty() {
-            break 'outer;
         }
     }
-    metrics.elapsed = started.elapsed().as_secs_f64();
-    if let Some(reply) = shutdown_reply {
-        let _ = reply.send(metrics);
+    // Dispatcher hung up without a shutdown (server dropped): just exit.
+}
+
+/// Serve one model-homogeneous batch on a fabric.
+fn serve_batch(
+    engine: &mut TileEngine,
+    fault: &FaultInjection,
+    prepared: &[(String, PreparedStack)],
+    metrics: &mut Metrics,
+    model: &str,
+    items: Vec<WorkItem>,
+) {
+    let Some((_, stack)) = prepared.iter().find(|(n, _)| n == model) else {
+        metrics.failed += items.len() as u64;
+        for (_, _, reply) in items {
+            let _ = reply.send(Err(anyhow!("model '{model}' not prepared on this fabric")));
+        }
+        return;
+    };
+    // Reprogram only when the register file holds a different topology.
+    if !engine.is_programmed_for(&stack.cfg) {
+        let programmed = if fault.fail_program_for.as_deref() == Some(model) {
+            Err(anyhow!("injected register-programming fault"))
+        } else {
+            engine.program(&stack.cfg)
+        };
+        match programmed {
+            Ok(()) => metrics.reprograms += 1,
+            Err(e) => {
+                // A failed program() fails the whole batch: running against
+                // the previous model's register state would silently return
+                // wrong numerics.
+                let msg = format!("{e:#}");
+                metrics.failed += items.len() as u64;
+                for (_, _, reply) in items {
+                    let _ = reply.send(Err(anyhow!(
+                        "programming registers for model '{model}': {msg}"
+                    )));
+                }
+                return;
+            }
+        }
+    }
+    // Count the batch only once the model is prepared AND programmed.
+    metrics.record_batch(items.len());
+    for (req, enqueued, reply) in items {
+        let queue_wait = enqueued.elapsed();
+        let t0 = Instant::now();
+        let result = engine.run_encoder(stack, &req.input).map(|output| Response {
+            output,
+            compute: t0.elapsed(),
+            queue_wait,
+            latency: enqueued.elapsed(),
+        });
+        match &result {
+            Ok(r) => metrics.record(r.compute, r.queue_wait, r.latency),
+            Err(_) => metrics.failed += 1,
+        }
+        let _ = reply.send(result);
     }
 }
 
@@ -224,6 +534,8 @@ fn engine_thread(cfg: ServerConfig, rx: Receiver<Msg>, ready: Sender<anyhow::Res
 mod tests {
     use super::*;
     use crate::model::{presets, reference, weights};
+
+    use crate::require_artifacts;
 
     fn server(models: Vec<ModelSpec>) -> Server {
         let mut cfg = ServerConfig::new(models);
@@ -233,6 +545,7 @@ mod tests {
 
     #[test]
     fn serves_correct_outputs() {
+        require_artifacts!();
         let spec = ModelSpec::new("small", presets::small_encoder(32, 1), 21);
         let s = server(vec![spec.clone()]);
         let x = weights::init_input(1, 32, 256);
@@ -240,12 +553,17 @@ mod tests {
         let mask = reference::attention_mask(32, 32, false);
         let want = reference::encoder_stack(&x, &spec.weights(), &mask);
         assert!(resp.output.max_abs_diff(&want) < 2e-3);
-        let m = s.shutdown();
+        // timing decomposition: e2e covers queue + compute
+        assert!(resp.latency >= resp.compute);
+        assert!(resp.latency >= resp.queue_wait);
+        let m = s.shutdown().unwrap();
         assert_eq!(m.requests(), 1);
+        assert_eq!(m.failed, 0);
     }
 
     #[test]
     fn multi_model_serving_reprograms_between_models() {
+        require_artifacts!();
         let a = ModelSpec::new("a", presets::small_encoder(32, 1), 1);
         let b = ModelSpec::new("b", crate::model::TnnConfig::encoder(48, 128, 2, 1), 2);
         let s = server(vec![a, b]);
@@ -255,18 +573,138 @@ mod tests {
             assert!(s.infer(Request { model: "a".into(), input: xa }).is_ok());
             assert!(s.infer(Request { model: "b".into(), input: xb }).is_ok());
         }
-        let m = s.shutdown();
+        let m = s.shutdown().unwrap();
         assert_eq!(m.requests(), 6);
         assert!(m.reprograms >= 2, "model switches must reprogram registers");
     }
 
     #[test]
     fn rejects_bad_requests_fast() {
+        require_artifacts!();
         let s = server(vec![ModelSpec::new("small", presets::small_encoder(32, 1), 3)]);
         let wrong_shape = weights::init_input(0, 16, 256);
         assert!(s.submit(Request { model: "small".into(), input: wrong_shape }).is_err());
         let unknown = weights::init_input(0, 32, 256);
         assert!(s.submit(Request { model: "nope".into(), input: unknown }).is_err());
-        s.shutdown();
+        s.shutdown().unwrap();
+    }
+
+    #[test]
+    fn zero_pool_size_is_refused() {
+        let mut cfg = ServerConfig::new(vec![]);
+        cfg.pool_size = 0;
+        assert!(Server::start(cfg).is_err());
+    }
+
+    // ---- PoolScheduler unit tests (no artifacts needed) ----
+
+    #[test]
+    fn affinity_keeps_a_model_on_its_fabric() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        assert_eq!(s.pick("a", None, 1), 0);
+        s.complete(0, 1);
+        // fabric 0 is idle but programmed for "a"; "b" must prefer the
+        // unprogrammed fabric 1 over evicting "a".
+        assert_eq!(s.pick("b", None, 1), 1);
+        s.complete(1, 1);
+        // both idle: each model sticks to its programmed fabric.
+        assert_eq!(s.pick("a", None, 1), 0);
+        assert_eq!(s.pick("b", None, 1), 1);
+        assert_eq!(s.current_model(0), Some("a"));
+        assert_eq!(s.current_model(1), Some("b"));
+    }
+
+    #[test]
+    fn affinity_falls_back_to_least_loaded() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 3);
+        assert_eq!(s.pick("a", None, 4), 0);
+        assert_eq!(s.pick("b", None, 2), 1);
+        assert_eq!(s.pick("c", None, 1), 2);
+        // new model "d": all fabrics programmed, least-loaded is fabric 2.
+        assert_eq!(s.pick("d", None, 1), 2);
+        // "a" again: its fabric is the busiest, but affinity still wins
+        // (a reprogram costs more than queueing behind the same model).
+        assert_eq!(s.pick("a", None, 1), 0);
+        assert_eq!(s.inflight(0), 5);
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_programming() {
+        let mut s = PoolScheduler::new(SchedulePolicy::RoundRobin, 2);
+        assert_eq!(s.pick("a", None, 1), 0);
+        assert_eq!(s.pick("a", None, 1), 1);
+        assert_eq!(s.pick("a", None, 1), 0);
+        assert_eq!(s.pick("b", None, 1), 1);
+    }
+
+    #[test]
+    fn router_hint_pins_a_model() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 3);
+        assert_eq!(s.pick("pinned", Some(2), 1), 2);
+        assert_eq!(s.pick("pinned", Some(2), 1), 2);
+        // out-of-range hints are ignored, falling back to the heuristic
+        assert_eq!(s.pick("other", Some(9), 1), 0);
+    }
+
+    #[test]
+    fn complete_decrements_and_saturates() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 1);
+        s.pick("a", None, 3);
+        assert_eq!(s.inflight(0), 3);
+        s.complete(0, 2);
+        assert_eq!(s.inflight(0), 1);
+        s.complete(0, 5); // over-completion saturates at zero
+        assert_eq!(s.inflight(0), 0);
+        s.complete(7, 1); // unknown fabric is ignored
+    }
+
+    #[test]
+    fn scheduler_reprogram_proxy_affinity_vs_round_robin() {
+        // Count model switches per fabric under the [a, a, b] request
+        // pattern — the pure-logic version of the pool integration test.
+        let switches = |policy: SchedulePolicy| {
+            let mut s = PoolScheduler::new(policy, 2);
+            let mut programmed: Vec<Option<String>> = vec![None; 2];
+            let mut switches = 0;
+            for _round in 0..4 {
+                for model in ["a", "a", "b"] {
+                    let f = s.pick(model, None, 1);
+                    if programmed[f].as_deref() != Some(model) {
+                        switches += 1;
+                        programmed[f] = Some(model.to_string());
+                    }
+                    s.complete(f, 1);
+                }
+            }
+            switches
+        };
+        let affinity = switches(SchedulePolicy::Affinity);
+        let rr = switches(SchedulePolicy::RoundRobin);
+        assert_eq!(affinity, 2, "affinity programs each fabric exactly once");
+        assert!(rr > affinity, "round-robin ({rr}) must reprogram more than affinity ({affinity})");
+    }
+
+    #[test]
+    fn program_failure_fails_the_batch_not_silently() {
+        require_artifacts!();
+        let a = ModelSpec::new("a", presets::small_encoder(32, 1), 1);
+        let b = ModelSpec::new("b", crate::model::TnnConfig::encoder(48, 128, 2, 1), 2);
+        let mut cfg = ServerConfig::new(vec![a, b]);
+        cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+        cfg.fault.fail_program_for = Some("b".into());
+        let s = Server::start(cfg).unwrap();
+        // "a" serves fine
+        let xa = weights::init_input(1, 32, 256);
+        assert!(s.infer(Request { model: "a".into(), input: xa.clone() }).is_ok());
+        // "b" must fail with the programming error — not run on stale registers
+        let xb = weights::init_input(2, 48, 128);
+        let err = s.infer(Request { model: "b".into(), input: xb }).unwrap_err();
+        assert!(err.to_string().contains("programming registers"), "{err}");
+        // the fabric recovers: "a" still serves afterwards
+        assert!(s.infer(Request { model: "a".into(), input: xa }).is_ok());
+        let m = s.shutdown().unwrap();
+        assert_eq!(m.requests(), 2, "failed request must not count as served");
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.batch_sizes.len(), 2, "unserved batch must not be recorded");
     }
 }

@@ -18,14 +18,15 @@
 //! * [`coordinator`] — the host-software half (paper §3.11, §4,
 //!   Algorithm 18): register programming, the tile-schedule engine that
 //!   executes the paper's Algorithms 1–17 over AOT tile primitives, a
-//!   request router + dynamic batcher + async server, and metrics.
+//!   request router + dynamic batcher, a multi-fabric serving pool, and
+//!   metrics.
 //! * [`baselines`] — literature datapoints (Table 1 / Fig 10 comparators)
 //!   and executable baselines (dense CPU oracle, non-adaptive accelerator).
 //! * [`analysis`] — design-space sweeps and the table/figure renderers that
 //!   regenerate every evaluation artifact of the paper.
 //!
-//! See DESIGN.md for the paper → substrate substitution table and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md for the paper → substrate substitution table and the
+//! serving-pool architecture.
 
 pub mod accel;
 pub mod analysis;

@@ -27,7 +27,7 @@ fn usage() -> ! {
          \n  gantt --model <preset>\
          \n  report <fig5|fig8|fig9|fig10|fig11|fig12|fig13|table1|table2|ablation|all> [--out DIR]\
          \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
-         \n  serve --model <preset> [--requests N] [--batch N]\
+         \n  serve --model <preset> [--requests N] [--batch N] [--pool N]\
          \n  sweep <tiles|heads>\
          \n  presets\
          \n  validate"
@@ -109,10 +109,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     });
     let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(16);
     let batch: usize = flag_value(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let pool: usize = flag_value(args, "--pool").and_then(|v| v.parse().ok()).unwrap_or(1);
 
     let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
     scfg.policy.max_batch = batch;
-    println!("starting fabric for {cfg} ...");
+    scfg.pool_size = pool;
+    println!("starting {pool} fabric(s) for {cfg} ...");
     let server = Server::start(scfg)?;
     let mut receivers = Vec::new();
     let t0 = std::time::Instant::now();
@@ -122,11 +124,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     }
     for (i, rx) in receivers.into_iter().enumerate() {
         let resp = rx.recv()??;
-        println!("req {i:>3}: latency {:>7.2} ms (queue {:>6.2} ms)",
-            resp.latency.as_secs_f64() * 1e3, resp.queue_wait.as_secs_f64() * 1e3);
+        println!("req {i:>3}: e2e {:>7.2} ms (compute {:>6.2} ms, queue {:>6.2} ms)",
+            resp.latency.as_secs_f64() * 1e3,
+            resp.compute.as_secs_f64() * 1e3,
+            resp.queue_wait.as_secs_f64() * 1e3);
     }
     println!("wall time: {:.2} ms for {n} requests", t0.elapsed().as_secs_f64() * 1e3);
-    let metrics = server.shutdown();
+    let metrics = server.shutdown()?;
     println!("\n{}", metrics.report());
     Ok(())
 }

@@ -173,8 +173,12 @@ mod tests {
         crate::runtime::default_artifact_dir()
     }
 
+    use crate::require_artifacts;
+
+
     #[test]
     fn loads_real_manifest() {
+        require_artifacts!();
         let m = Manifest::load(dir()).expect("run `make artifacts` first");
         assert_eq!(m.sl_max, 128);
         assert_eq!((m.ts_mha, m.ts_ffn, m.dk), (64, 128, 64));
@@ -184,6 +188,7 @@ mod tests {
 
     #[test]
     fn mm_qkv_interface_matches_fabric_constants() {
+        require_artifacts!();
         let m = Manifest::load(dir()).unwrap();
         let a = m.artifact("mm_qkv").unwrap();
         assert_eq!(a.inputs, vec![vec![128, 64], vec![64, 64], vec![128, 64]]);
@@ -192,6 +197,7 @@ mod tests {
 
     #[test]
     fn synth_maxima_match_artifact_set() {
+        require_artifacts!();
         let m = Manifest::load(dir()).unwrap();
         let s = m.synth_maxima();
         assert_eq!((s.seq_len, s.d_model, s.hidden, s.heads), (128, 768, 3072, 12));
@@ -199,6 +205,7 @@ mod tests {
 
     #[test]
     fn unknown_artifact_is_an_error() {
+        require_artifacts!();
         let m = Manifest::load(dir()).unwrap();
         assert!(m.artifact("nonexistent").is_err());
     }

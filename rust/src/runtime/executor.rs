@@ -252,12 +252,15 @@ mod tests {
     use super::*;
     use crate::runtime::default_artifact_dir;
 
+    use crate::require_artifacts;
+
     fn exec() -> Executor {
         Executor::new(default_artifact_dir()).expect("run `make artifacts` first")
     }
 
     #[test]
     fn mm_qkv_computes_acc_plus_xw() {
+        require_artifacts!();
         let e = exec();
         let x = Tensor::new(vec![128, 64], (0..128 * 64).map(|i| (i % 7) as f32 * 0.1).collect());
         let w = Tensor::new(vec![64, 64], (0..64 * 64).map(|i| (i % 5) as f32 * 0.01).collect());
@@ -276,6 +279,7 @@ mod tests {
 
     #[test]
     fn compile_cache_hits() {
+        require_artifacts!();
         let e = exec();
         let x = Tensor::zeros(vec![128, 64]);
         let w = Tensor::zeros(vec![64, 64]);
@@ -289,6 +293,7 @@ mod tests {
 
     #[test]
     fn shape_mismatch_is_rejected() {
+        require_artifacts!();
         let e = exec();
         let bad = Tensor::zeros(vec![64, 64]);
         let w = Tensor::zeros(vec![64, 64]);
@@ -299,6 +304,7 @@ mod tests {
 
     #[test]
     fn softmax_rows_sum_to_one() {
+        require_artifacts!();
         let e = exec();
         let s = Tensor::new(vec![128, 128], (0..128 * 128).map(|i| ((i % 13) as f32) * 0.3).collect());
         let p = e.run1("softmax", &[&s]).unwrap();
@@ -310,6 +316,7 @@ mod tests {
 
     #[test]
     fn quantize_lattice() {
+        require_artifacts!();
         let e = exec();
         let x = Tensor::new(vec![128, 768], (0..128 * 768).map(|i| ((i % 101) as f32 - 50.0) * 0.01).collect());
         let s = Tensor::scalar1(0.05);

@@ -20,3 +20,24 @@ pub use executor::{DeviceTensor, Executor, Tensor};
 pub fn default_artifact_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
 }
+
+/// Whether the AOT artifact set has been generated (`make artifacts`).
+/// Artifact-dependent tests skip themselves when it is absent so the
+/// rust suite stays green without the Python lowering step (the CI job
+/// relies on this).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").is_file()
+}
+
+/// Skip the current test when the AOT artifact set is absent.  Used by
+/// every artifact-dependent test (unit and integration) so the skip
+/// condition and message live in exactly one place.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !$crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts/ not present (run `make artifacts`)");
+            return;
+        }
+    };
+}

@@ -1,5 +1,5 @@
 //! Coordinator integration: the serving stack end to end — router,
-//! batcher, engine thread, register reprogramming — against the reference
+//! batcher, fabric pool, register reprogramming — against the reference
 //! oracle, including concurrent clients.
 
 use std::time::Duration;
@@ -11,12 +11,15 @@ use adaptor::model::weights::init_input;
 use adaptor::model::{presets, reference, weights, TnnConfig};
 use adaptor::runtime::default_artifact_dir;
 
+use adaptor::require_artifacts;
+
 fn policy() -> BatchPolicy {
     BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
 }
 
 #[test]
 fn engine_matches_oracle_across_topologies() {
+    require_artifacts!();
     let mut e = TileEngine::new(default_artifact_dir()).expect("make artifacts");
     for (cfg, seed) in [
         (TnnConfig::encoder(16, 128, 2, 1), 1u64),
@@ -38,6 +41,7 @@ fn engine_matches_oracle_across_topologies() {
 
 #[test]
 fn no_recompilation_across_full_model_zoo() {
+    require_artifacts!();
     // run FOUR different topologies through one fabric; artifact compiles
     // must happen only on first use — the runtime-adaptivity headline.
     let mut e = TileEngine::new(default_artifact_dir()).unwrap();
@@ -67,6 +71,7 @@ fn no_recompilation_across_full_model_zoo() {
 
 #[test]
 fn server_concurrent_clients_all_answered_correctly() {
+    require_artifacts!();
     let spec_a = ModelSpec::new("a", presets::small_encoder(32, 1), 7);
     let spec_b = ModelSpec::new("b", TnnConfig::encoder(16, 128, 2, 1), 8);
     let mut cfg = ServerConfig::new(vec![spec_a.clone(), spec_b.clone()]);
@@ -96,7 +101,7 @@ fn server_concurrent_clients_all_answered_correctly() {
         h.join().unwrap();
     }
     let server = std::sync::Arc::try_unwrap(server).ok().expect("sole owner");
-    let m = server.shutdown();
+    let m = server.shutdown().unwrap();
     assert_eq!(m.requests(), 12);
     assert!(m.reprograms >= 2);
     assert!(m.mean_batch() >= 1.0);
@@ -104,6 +109,7 @@ fn server_concurrent_clients_all_answered_correctly() {
 
 #[test]
 fn attention_modes_agree_through_the_server() {
+    require_artifacts!();
     let run = |mode: AttentionMode| {
         let spec = ModelSpec::new("m", presets::small_encoder(32, 1), 5);
         let mut cfg = ServerConfig::new(vec![spec]);
@@ -112,7 +118,7 @@ fn attention_modes_agree_through_the_server() {
         let s = Server::start(cfg).unwrap();
         let x = init_input(1, 32, 256);
         let out = s.infer(Request { model: "m".into(), input: x }).unwrap().output;
-        s.shutdown();
+        s.shutdown().unwrap();
         out
     };
     let split = run(AttentionMode::Split);
@@ -122,6 +128,7 @@ fn attention_modes_agree_through_the_server() {
 
 #[test]
 fn metrics_accumulate_latency_and_batches() {
+    require_artifacts!();
     let spec = ModelSpec::new("m", presets::small_encoder(32, 1), 6);
     let mut cfg = ServerConfig::new(vec![spec]);
     cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
@@ -134,9 +141,19 @@ fn metrics_accumulate_latency_and_batches() {
     for rx in rxs {
         rx.recv().unwrap().unwrap();
     }
-    let m = s.shutdown();
+    let m = s.shutdown().unwrap();
     assert_eq!(m.requests(), 6);
+    assert_eq!(m.failed, 0);
     let sum = m.latency_summary().unwrap();
     assert!(sum.p50 > 0.0 && sum.max >= sum.p50);
+    // compute and queue are tracked separately and bounded by e2e
+    let comp = m.compute_summary().unwrap();
+    let q = m.queue_summary().unwrap();
+    assert!(comp.max <= sum.max + 1e-9);
+    assert!(q.max <= sum.max + 1e-9);
     assert!(m.throughput_rps() > 0.0);
+    // single fabric: the aggregate carries exactly one per-fabric entry
+    assert_eq!(m.per_fabric.len(), 1);
+    assert_eq!(m.per_fabric[0].fabric, Some(0));
+    assert_eq!(m.per_fabric[0].requests(), 6);
 }

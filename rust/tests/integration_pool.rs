@@ -1,0 +1,170 @@
+//! Fabric-pool integration: a pool of ≥2 fabrics drains a mixed-model
+//! workload correctly, the affinity scheduler beats round-robin on
+//! register reprograms per request, and host-side failure paths fail
+//! loudly (programming errors fail the batch; panics surface at
+//! shutdown).
+
+use std::time::Duration;
+
+use adaptor::coordinator::batcher::BatchPolicy;
+use adaptor::coordinator::router::ModelSpec;
+use adaptor::coordinator::{Request, SchedulePolicy, Server, ServerConfig};
+use adaptor::model::weights::init_input;
+use adaptor::model::{presets, reference, weights, TnnConfig};
+
+use adaptor::require_artifacts;
+
+fn two_models() -> (ModelSpec, ModelSpec) {
+    (
+        ModelSpec::new("a", presets::small_encoder(32, 1), 7),
+        ModelSpec::new("b", TnnConfig::encoder(16, 128, 2, 1), 8),
+    )
+}
+
+fn pool_config(pool_size: usize, schedule: SchedulePolicy) -> ServerConfig {
+    let (a, b) = two_models();
+    let mut cfg = ServerConfig::new(vec![a, b]);
+    cfg.policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) };
+    cfg.pool_size = pool_size;
+    cfg.schedule = schedule;
+    cfg
+}
+
+#[test]
+fn pool_drains_mixed_model_workload_across_fabrics() {
+    require_artifacts!();
+    let server = Server::start(pool_config(2, SchedulePolicy::Affinity)).expect("make artifacts");
+    // submit everything up front so both fabrics get saturated
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        let (model, cfg) = if i % 3 == 0 {
+            ("b", TnnConfig::encoder(16, 128, 2, 1))
+        } else {
+            ("a", presets::small_encoder(32, 1))
+        };
+        let x = init_input(i, cfg.seq_len, cfg.d_model);
+        rxs.push((i, model, cfg, x.clone(), server.submit(Request { model: model.into(), input: x }).unwrap()));
+    }
+    for (i, model, cfg, x, rx) in rxs {
+        let resp = rx.recv().unwrap().unwrap_or_else(|e| panic!("req {i} ({model}): {e}"));
+        let seed = if model == "a" { 7 } else { 8 };
+        let ws = weights::init_stack(seed, cfg.d_model, cfg.heads, cfg.enc_layers);
+        let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+        let want = reference::encoder_stack(&x, &ws, &mask);
+        assert!(resp.output.max_abs_diff(&want) < 3e-3, "req {i} wrong numerics");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests(), 12);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.per_fabric.len(), 2, "aggregate must carry the per-fabric breakdown");
+    let served: Vec<usize> = m.per_fabric.iter().map(|f| f.requests()).collect();
+    assert_eq!(served.iter().sum::<usize>(), 12);
+    assert!(
+        served.iter().filter(|&&n| n > 0).count() >= 2,
+        "work must spread across >=2 fabrics, got {served:?}"
+    );
+}
+
+#[test]
+fn affinity_scheduling_reprograms_less_than_round_robin() {
+    require_artifacts!();
+    // Serial [a, a, b] pattern with max_batch = 1: every request is its
+    // own batch, dispatch order equals submit order, so the reprogram
+    // counts are deterministic for both policies.
+    let run = |schedule: SchedulePolicy| {
+        let mut cfg = pool_config(2, schedule);
+        cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        let server = Server::start(cfg).unwrap();
+        for round in 0..4u64 {
+            for (j, model) in ["a", "a", "b"].into_iter().enumerate() {
+                let c = if model == "a" {
+                    presets::small_encoder(32, 1)
+                } else {
+                    TnnConfig::encoder(16, 128, 2, 1)
+                };
+                let x = init_input(round * 10 + j as u64, c.seq_len, c.d_model);
+                server.infer(Request { model: model.into(), input: x }).unwrap();
+            }
+        }
+        server.shutdown().unwrap()
+    };
+    let affinity = run(SchedulePolicy::Affinity);
+    let round_robin = run(SchedulePolicy::RoundRobin);
+    assert_eq!(affinity.requests(), 12);
+    assert_eq!(round_robin.requests(), 12);
+    // Affinity parks each model on one fabric: one programming per fabric.
+    assert_eq!(affinity.reprograms, 2, "affinity must program each fabric once");
+    assert!(
+        round_robin.reprograms > affinity.reprograms,
+        "round-robin ({}) must reprogram more than affinity ({})",
+        round_robin.reprograms,
+        affinity.reprograms
+    );
+    assert!(
+        affinity.reprograms_per_request() < round_robin.reprograms_per_request(),
+        "affinity must cost fewer reprograms per request"
+    );
+}
+
+#[test]
+fn router_affinity_hint_pins_model_to_fabric() {
+    require_artifacts!();
+    let (a, b) = two_models();
+    let mut cfg = ServerConfig::new(vec![a.with_affinity(1), b]);
+    cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    cfg.pool_size = 2;
+    let server = Server::start(cfg).unwrap();
+    for i in 0..4u64 {
+        let x = init_input(i, 32, 256);
+        server.infer(Request { model: "a".into(), input: x }).unwrap();
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests(), 4);
+    // every "a" request landed on the pinned fabric 1
+    assert_eq!(m.per_fabric[1].requests(), 4, "{:?}", m.per_fabric.iter().map(|f| f.requests()).collect::<Vec<_>>());
+    assert_eq!(m.per_fabric[0].requests(), 0);
+}
+
+#[test]
+fn program_failure_fails_batch_and_pool_recovers() {
+    require_artifacts!();
+    let mut cfg = pool_config(2, SchedulePolicy::Affinity);
+    cfg.fault.fail_program_for = Some("b".into());
+    let server = Server::start(cfg).unwrap();
+    // "a" requests serve normally on the pool
+    for i in 0..3u64 {
+        let x = init_input(i, 32, 256);
+        assert!(server.infer(Request { model: "a".into(), input: x }).is_ok());
+    }
+    // every "b" request fails with the programming error — no silent
+    // stale-register execution, no hung reply channel
+    for i in 0..2u64 {
+        let x = init_input(100 + i, 16, 128);
+        let err = server.infer(Request { model: "b".into(), input: x }).unwrap_err();
+        assert!(err.to_string().contains("programming registers"), "{err}");
+    }
+    // and "a" keeps serving afterwards
+    let x = init_input(50, 32, 256);
+    assert!(server.infer(Request { model: "a".into(), input: x }).is_ok());
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests(), 4);
+    assert_eq!(m.failed, 2);
+}
+
+#[test]
+fn single_fabric_pool_matches_paper_host_semantics() {
+    require_artifacts!();
+    // pool_size = 1 must behave exactly like the paper's single-engine
+    // host: same request count, reprogram-on-switch, one fabric entry.
+    let server = Server::start(pool_config(1, SchedulePolicy::Affinity)).unwrap();
+    for i in 0..3u64 {
+        let xa = init_input(i, 32, 256);
+        let xb = init_input(i + 10, 16, 128);
+        assert!(server.infer(Request { model: "a".into(), input: xa }).is_ok());
+        assert!(server.infer(Request { model: "b".into(), input: xb }).is_ok());
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests(), 6);
+    assert_eq!(m.per_fabric.len(), 1);
+    assert!(m.reprograms >= 5, "alternating models on one fabric reprogram every switch");
+}

@@ -8,6 +8,8 @@ use adaptor::model::weights::{init_input, Mat};
 use adaptor::runtime::{default_artifact_dir, Executor, Tensor};
 use adaptor::util::rng::SplitMix64;
 
+use adaptor::require_artifacts;
+
 fn exec() -> Executor {
     Executor::new(default_artifact_dir()).expect("run `make artifacts` first")
 }
@@ -28,6 +30,7 @@ fn assert_close(got: &Tensor, want: &Mat, tol: f32, what: &str) {
 
 #[test]
 fn every_tile_primitive_compiles_and_runs() {
+    require_artifacts!();
     let e = exec();
     let names: Vec<String> = e.manifest().artifacts.keys().cloned().collect();
     assert!(names.len() >= 13);
@@ -51,6 +54,7 @@ fn every_tile_primitive_compiles_and_runs() {
 
 #[test]
 fn mm_artifacts_match_reference_matmul() {
+    require_artifacts!();
     let e = exec();
     for (name, m, k, n) in [
         ("mm_qkv", 128usize, 64usize, 64usize),
@@ -72,6 +76,7 @@ fn mm_artifacts_match_reference_matmul() {
 
 #[test]
 fn attention_chain_matches_reference() {
+    require_artifacts!();
     let e = exec();
     let q = rnd_tensor(10, &[128, 64], 0.7);
     let k = rnd_tensor(11, &[128, 64], 0.7);
@@ -99,6 +104,7 @@ fn attention_chain_matches_reference() {
 
 #[test]
 fn residual_ln_artifact_matches_reference_on_valid_prefix() {
+    require_artifacts!();
     let e = exec();
     let d_valid = 512usize;
     let x = {
@@ -136,6 +142,7 @@ fn residual_ln_artifact_matches_reference_on_valid_prefix() {
 
 #[test]
 fn bias_and_relu_artifacts() {
+    require_artifacts!();
     let e = exec();
     let x = rnd_tensor(30, &[128, 3072], 1.0);
     let b = rnd_tensor(31, &[3072], 1.0);
@@ -148,6 +155,7 @@ fn bias_and_relu_artifacts() {
 
 #[test]
 fn fused_layer_artifacts_execute() {
+    require_artifacts!();
     let e = exec();
     for name in ["small_layer", "bert_layer"] {
         let fm = e.manifest().fused.get(name).unwrap().clone();
@@ -167,6 +175,7 @@ fn fused_layer_artifacts_execute() {
 
 #[test]
 fn compile_cache_is_shared_across_runs() {
+    require_artifacts!();
     let e = exec();
     let x = Tensor::zeros(vec![128, 128]);
     for _ in 0..5 {
@@ -180,6 +189,7 @@ fn compile_cache_is_shared_across_runs() {
 
 #[test]
 fn quantize_artifact_error_bounded() {
+    require_artifacts!();
     let e = exec();
     let x = rnd_tensor(40, &[128, 768], 0.3);
     let scale = 0.01f32;
