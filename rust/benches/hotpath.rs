@@ -96,10 +96,23 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", r.line());
 
+    // --- schedule cache: the request path is "look up program, replay"
+    {
+        let (hits, misses) = engine.program_cache_stats();
+        println!(
+            "\nprogram cache: {hits} hits / {misses} misses (every post-warmup request replays a cached TileProgram)"
+        );
+        let rep = engine.cycle_estimate(&cfg4)?;
+        println!(
+            "schedule replay (cycle backend, identical program): {} predicted cycles over {} dispatches for small_encoder_4layer",
+            rep.total_cycles, rep.dispatches
+        );
+    }
+
     let st = engine.executor().stats();
     println!(
-        "\ntotals: {} dispatches, {} compiles, {:.2}s inside PJRT execute",
-        st.dispatches, st.compiles, st.execute_secs
+        "\ntotals: {} dispatches, {} uploads, {} fetches, {} compiles, {:.2}s inside PJRT execute",
+        st.dispatches, st.uploads, st.fetches, st.compiles, st.execute_secs
     );
     Ok(())
 }

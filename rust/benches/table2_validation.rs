@@ -1,5 +1,8 @@
-//! Bench + regenerator for Table 2: analytical vs cycle-level simulation,
-//! timing both implementations (the sim is the expensive one).
+//! Bench + regenerator for Table 2: analytical vs cycle-level simulation
+//! vs schedule replay, timing all three (build+replay of the TileProgram
+//! is the expensive one — which is why the engine caches it per topology).
+use adaptor::accel::schedule::{AttentionMode, FabricConstants};
+use adaptor::accel::sim::cycle;
 use adaptor::accel::{latency, sim, tiling::TileConfig};
 use adaptor::analysis::report;
 use adaptor::model::TnnConfig;
@@ -10,6 +13,8 @@ fn main() {
     println!("{text}");
     let cfg = TnnConfig::encoder(64, 768, 8, 12);
     let t = TileConfig::paper_optimum();
+    // default fabric geometry, but the Table 2 rows run 8 heads (dk = 96)
+    let fc = FabricConstants { dk: 96, ..FabricConstants::artifact_default() };
     let cases = vec![
         bench("table2/analytical_model", 10, 2000, || {
             std::hint::black_box(latency::model_latency(&cfg, &t));
@@ -17,6 +22,11 @@ fn main() {
         bench("table2/cycle_simulation", 5, 200, || {
             std::hint::black_box(sim::simulate(&cfg, &t));
         }),
+        bench("table2/schedule_build_and_replay", 3, 50, || {
+            std::hint::black_box(
+                cycle::estimate(&cfg, &fc, AttentionMode::Split, false, false).unwrap(),
+            );
+        }),
     ];
-    run_suite("Table 2 — model vs simulation cost", cases);
+    run_suite("Table 2 — model vs simulation vs schedule replay cost", cases);
 }

@@ -9,6 +9,8 @@
 //! * [`power`] — Vivado-style static+dynamic power estimation (Fig 10).
 //! * [`latency`] — the paper's closed-form latency model (Eqs 9–39).
 //! * [`sim`] — independent cycle-level simulator (Table 2 "experimental").
+//! * [`schedule`] — the TileProgram IR: the §3.9 tile schedules lowered to
+//!   a flat instruction stream, replayed by pluggable fabric backends.
 //! * [`registers`] — the AXI-Lite runtime configuration register file.
 //! * [`roofline`] — compute/memory bounds and attained performance (Fig 12).
 
@@ -19,6 +21,7 @@ pub mod power;
 pub mod registers;
 pub mod resources;
 pub mod roofline;
+pub mod schedule;
 pub mod sim;
 pub mod tiling;
 

@@ -1,0 +1,425 @@
+//! Lowering: `(TnnConfig, FabricConstants, mode flags)` → [`TileProgram`].
+//!
+//! This is the code that used to live as imperative loop nests inside
+//! `TileEngine::run_layer` (Algorithms 1–17 over the §3.9 tile schedules,
+//! partial sums accumulating across column tiles per Fig 4a and 2-D tiles
+//! per Fig 4b).  The builder emits exactly the artifact/operand sequence
+//! the old engine dispatched — numerics are bit-identical — with one
+//! scheduled improvement: each layer's residual operand references the
+//! *device slot* of the previous layer's output instead of re-uploading
+//! the full padded activation that was already resident (the fabric analog:
+//! activations stay in BRAM between layers).
+
+use super::{
+    AttentionMode, FabricConstants, HostId, Operand, RuntimeId, SlotId, Step, TileProgram,
+    WeightKind, WeightRef,
+};
+use crate::model::TnnConfig;
+
+/// Shorthand for a weight operand.
+fn w(layer: usize, kind: WeightKind, row: usize, col: usize) -> Operand {
+    Operand::Weight(WeightRef { layer, kind, row, col })
+}
+
+/// Builds a [`TileProgram`] for one topology on one fabric.
+#[derive(Debug)]
+pub struct ScheduleBuilder {
+    fc: FabricConstants,
+    cfg: TnnConfig,
+    mode: AttentionMode,
+    qkv_packed: bool,
+    quantized: bool,
+    steps: Vec<Step>,
+    host_shapes: Vec<Vec<usize>>,
+    n_slots: usize,
+}
+
+impl ScheduleBuilder {
+    /// Validates `cfg` against the fabric constraints (the same checks the
+    /// engine's `check_runtime_config` applies).
+    pub fn new(fc: FabricConstants, cfg: TnnConfig) -> anyhow::Result<Self> {
+        fc.check(&cfg).map_err(|e| anyhow::anyhow!(e))?;
+        Ok(ScheduleBuilder {
+            fc,
+            cfg,
+            mode: AttentionMode::Split,
+            qkv_packed: false,
+            quantized: false,
+            steps: Vec::new(),
+            host_shapes: Vec::new(),
+            n_slots: 0,
+        })
+    }
+
+    pub fn mode(mut self, mode: AttentionMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn qkv_packed(mut self, on: bool) -> Self {
+        self.qkv_packed = on;
+        self
+    }
+
+    pub fn quantized(mut self, on: bool) -> Self {
+        self.quantized = on;
+        self
+    }
+
+    // ---- emission helpers ------------------------------------------------
+
+    fn host(&mut self, shape: Vec<usize>) -> HostId {
+        self.host_shapes.push(shape);
+        self.host_shapes.len() - 1
+    }
+
+    fn slot(&mut self) -> SlotId {
+        self.n_slots += 1;
+        self.n_slots - 1
+    }
+
+    fn upload(&mut self, host: HostId) -> SlotId {
+        let dst = self.slot();
+        self.steps.push(Step::Upload { host, dst });
+        dst
+    }
+
+    fn dispatch(
+        &mut self,
+        artifact: &'static str,
+        args: Vec<Operand>,
+        out_shape: Vec<usize>,
+    ) -> SlotId {
+        let dst = self.slot();
+        self.steps.push(Step::Dispatch { artifact, args, dst, out_shape });
+        dst
+    }
+
+    fn fetch(&mut self, src: SlotId, shape: Vec<usize>) -> HostId {
+        let host = self.host(shape);
+        self.steps.push(Step::Fetch { src, host });
+        host
+    }
+
+    fn extract_upload(&mut self, src: HostId, c0: usize, width: usize) -> SlotId {
+        let dst = self.host(vec![self.fc.sl_max, width]);
+        self.steps.push(Step::ExtractPanel { src, c0, width, dst });
+        self.upload(dst)
+    }
+
+    fn assemble(&mut self, src: HostId, dst: HostId, c0: usize) {
+        self.steps.push(Step::AssemblePanel { src, dst, c0 });
+    }
+
+    /// One projection chain (Algorithm 9's per-head accumulation over the
+    /// Fig 4a column tiles) followed by the bias add.
+    fn project(
+        &mut self,
+        layer: usize,
+        head: usize,
+        x_panels: &[SlotId],
+        wk: WeightKind,
+        bk: WeightKind,
+    ) -> SlotId {
+        let out = vec![self.fc.sl_max, self.fc.dk];
+        let mut acc = self.dispatch(
+            "mm_qkv",
+            vec![
+                Operand::Slot(x_panels[0]),
+                w(layer, wk, head, 0),
+                Operand::Runtime(RuntimeId::ZeroDk),
+            ],
+            out.clone(),
+        );
+        for t in 1..x_panels.len() {
+            acc = self.dispatch(
+                "mm_qkv",
+                vec![Operand::Slot(x_panels[t]), w(layer, wk, head, t), Operand::Slot(acc)],
+                out.clone(),
+            );
+        }
+        self.dispatch("bias_add_dk", vec![Operand::Slot(acc), w(layer, bk, head, 0)], out)
+    }
+
+    // ---- lowering --------------------------------------------------------
+
+    /// Lower the whole encoder stack.
+    pub fn build(mut self) -> TileProgram {
+        let fc = self.fc;
+        let cfg = self.cfg;
+        let t_m = cfg.d_model / fc.ts_mha;
+        let t_f = cfg.d_model / fc.ts_ffn;
+        let t_h = cfg.hidden / fc.ffn_col;
+        let full = vec![fc.sl_max, fc.dmodel_max];
+        let hid_full = vec![fc.sl_max, fc.hidden_max];
+
+        // Algorithm 1: the padded input lands in host slot 0; the caller
+        // writes it before replay.
+        let input = self.host(full.clone());
+        let mut x_host = input;
+        let mut x_slot = self.upload(input);
+
+        for layer in 0..cfg.enc_layers {
+            // ---- MHA (Fig 2): input panels are shared across heads —
+            // extract + upload once per tile.
+            let x_panels: Vec<SlotId> =
+                (0..t_m).map(|t| self.extract_upload(x_host, t * fc.ts_mha, fc.ts_mha)).collect();
+            let attn = self.host(full.clone());
+            if self.qkv_packed {
+                // One dispatch per tile projects the head's Q|K|V
+                // simultaneously (Algorithm 9's three MACs per cycle).
+                let out3 = vec![fc.sl_max, 3 * fc.dk];
+                for head in 0..cfg.heads {
+                    let mut acc = self.dispatch(
+                        "mm_qkv_packed",
+                        vec![
+                            Operand::Slot(x_panels[0]),
+                            w(layer, WeightKind::QkvPacked, head, 0),
+                            Operand::Runtime(RuntimeId::ZeroQkv3),
+                        ],
+                        out3.clone(),
+                    );
+                    for t in 1..t_m {
+                        acc = self.dispatch(
+                            "mm_qkv_packed",
+                            vec![
+                                Operand::Slot(x_panels[t]),
+                                w(layer, WeightKind::QkvPacked, head, t),
+                                Operand::Slot(acc),
+                            ],
+                            out3.clone(),
+                        );
+                    }
+                    let qkv = self.dispatch(
+                        "bias_add_qkv",
+                        vec![Operand::Slot(acc), w(layer, WeightKind::BQkvPacked, head, 0)],
+                        out3.clone(),
+                    );
+                    let o = self.dispatch(
+                        "attn_packed",
+                        vec![
+                            Operand::Slot(qkv),
+                            Operand::Runtime(RuntimeId::Mask),
+                            Operand::Runtime(RuntimeId::Scale),
+                        ],
+                        vec![fc.sl_max, fc.dk],
+                    );
+                    let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
+                    self.assemble(oh, attn, head * fc.dk);
+                }
+            } else {
+                for head in 0..cfg.heads {
+                    let q = self.project(layer, head, &x_panels, WeightKind::Wq, WeightKind::Bq);
+                    let k = self.project(layer, head, &x_panels, WeightKind::Wk, WeightKind::Bk);
+                    let v = self.project(layer, head, &x_panels, WeightKind::Wv, WeightKind::Bv);
+                    let o = match self.mode {
+                        AttentionMode::Fused => self.dispatch(
+                            "attn_fused",
+                            vec![
+                                Operand::Slot(q),
+                                Operand::Slot(k),
+                                Operand::Slot(v),
+                                Operand::Runtime(RuntimeId::Mask),
+                                Operand::Runtime(RuntimeId::Scale),
+                            ],
+                            vec![fc.sl_max, fc.dk],
+                        ),
+                        AttentionMode::Split => {
+                            let s = self.dispatch(
+                                "qk_scores",
+                                vec![
+                                    Operand::Slot(q),
+                                    Operand::Slot(k),
+                                    Operand::Runtime(RuntimeId::Mask),
+                                    Operand::Runtime(RuntimeId::Scale),
+                                ],
+                                vec![fc.sl_max, fc.sl_max],
+                            );
+                            let p = self.dispatch(
+                                "softmax",
+                                vec![Operand::Slot(s)],
+                                vec![fc.sl_max, fc.sl_max],
+                            );
+                            self.dispatch(
+                                "sv",
+                                vec![Operand::Slot(p), Operand::Slot(v)],
+                                vec![fc.sl_max, fc.dk],
+                            )
+                        }
+                    };
+                    let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
+                    self.assemble(oh, attn, head * fc.dk);
+                }
+            }
+
+            if self.quantized {
+                // Per-tensor symmetric int8 QDQ on the attention output —
+                // the scale is the program's only data-dependent value.
+                let attn_slot = self.upload(attn);
+                let scale = self.slot();
+                self.steps.push(Step::CalibrateScale { src: attn, dst: scale });
+                let q = self.dispatch(
+                    "quantize",
+                    vec![Operand::Slot(attn_slot), Operand::Slot(scale)],
+                    full.clone(),
+                );
+                self.steps.push(Step::Fetch { src: q, host: attn });
+            }
+
+            // ---- FFN1_PM: output projection, 2-D tiles (Fig 4b),
+            // column-then-row accumulation.
+            let a_panels: Vec<SlotId> =
+                (0..t_f).map(|r| self.extract_upload(attn, r * fc.ts_ffn, fc.ts_ffn)).collect();
+            let proj = self.host(full.clone());
+            for c in 0..t_f {
+                let out = vec![fc.sl_max, fc.ts_ffn];
+                let mut acc = self.dispatch(
+                    "mm_ffn1",
+                    vec![
+                        Operand::Slot(a_panels[0]),
+                        w(layer, WeightKind::Wo, 0, c),
+                        Operand::Runtime(RuntimeId::ZeroFfn),
+                    ],
+                    out.clone(),
+                );
+                for r in 1..t_f {
+                    acc = self.dispatch(
+                        "mm_ffn1",
+                        vec![
+                            Operand::Slot(a_panels[r]),
+                            w(layer, WeightKind::Wo, r, c),
+                            Operand::Slot(acc),
+                        ],
+                        out.clone(),
+                    );
+                }
+                let h = self.fetch(acc, out);
+                self.assemble(h, proj, c * fc.ts_ffn);
+            }
+            let proj_slot = self.upload(proj);
+            let proj_b = self.dispatch(
+                "bias_add_d",
+                vec![Operand::Slot(proj_slot), w(layer, WeightKind::Bo, 0, 0)],
+                full.clone(),
+            );
+            // Residual reads the previous layer's device-resident output
+            // (x_slot) — no re-upload of the full padded activation.
+            let y_slot = self.dispatch(
+                "residual_ln",
+                vec![
+                    Operand::Slot(proj_b),
+                    Operand::Slot(x_slot),
+                    w(layer, WeightKind::G1, 0, 0),
+                    w(layer, WeightKind::B1n, 0, 0),
+                    Operand::Runtime(RuntimeId::Dmask),
+                    Operand::Runtime(RuntimeId::Count),
+                ],
+                full.clone(),
+            );
+            let y_host = self.fetch(y_slot, full.clone());
+
+            // ---- FFN2_PM: d -> hidden with ReLU.
+            let y_panels: Vec<SlotId> =
+                (0..t_f).map(|r| self.extract_upload(y_host, r * fc.ts_ffn, fc.ts_ffn)).collect();
+            let hid = self.host(hid_full.clone());
+            for c in 0..t_h {
+                let out = vec![fc.sl_max, fc.ffn_col];
+                let mut acc = self.dispatch(
+                    "mm_ffn2",
+                    vec![
+                        Operand::Slot(y_panels[0]),
+                        w(layer, WeightKind::W1, 0, c),
+                        Operand::Runtime(RuntimeId::ZeroCol),
+                    ],
+                    out.clone(),
+                );
+                for r in 1..t_f {
+                    acc = self.dispatch(
+                        "mm_ffn2",
+                        vec![
+                            Operand::Slot(y_panels[r]),
+                            w(layer, WeightKind::W1, r, c),
+                            Operand::Slot(acc),
+                        ],
+                        out.clone(),
+                    );
+                }
+                let h = self.fetch(acc, out);
+                self.assemble(h, hid, c * fc.ffn_col);
+            }
+            let hid_slot = self.upload(hid);
+            let hid_r = self.dispatch(
+                "bias_relu_h",
+                vec![Operand::Slot(hid_slot), w(layer, WeightKind::B1, 0, 0)],
+                hid_full.clone(),
+            );
+            let hid_r_host = self.fetch(hid_r, hid_full.clone());
+
+            // ---- FFN3_PM: hidden -> d.
+            let h_panels: Vec<SlotId> = (0..t_h)
+                .map(|r| self.extract_upload(hid_r_host, r * fc.ffn_col, fc.ffn_col))
+                .collect();
+            let out_h = self.host(full.clone());
+            for c in 0..t_f {
+                let out = vec![fc.sl_max, fc.ts_ffn];
+                let mut acc = self.dispatch(
+                    "mm_ffn3",
+                    vec![
+                        Operand::Slot(h_panels[0]),
+                        w(layer, WeightKind::W2, 0, c),
+                        Operand::Runtime(RuntimeId::ZeroFfn),
+                    ],
+                    out.clone(),
+                );
+                for r in 1..t_h {
+                    acc = self.dispatch(
+                        "mm_ffn3",
+                        vec![
+                            Operand::Slot(h_panels[r]),
+                            w(layer, WeightKind::W2, r, c),
+                            Operand::Slot(acc),
+                        ],
+                        out.clone(),
+                    );
+                }
+                let hh = self.fetch(acc, out);
+                self.assemble(hh, out_h, c * fc.ts_ffn);
+            }
+            let out_slot = self.upload(out_h);
+            let out_b = self.dispatch(
+                "bias_add_d",
+                vec![Operand::Slot(out_slot), w(layer, WeightKind::B2, 0, 0)],
+                full.clone(),
+            );
+            let fin = self.dispatch(
+                "residual_ln",
+                vec![
+                    Operand::Slot(out_b),
+                    Operand::Slot(y_slot),
+                    w(layer, WeightKind::G2, 0, 0),
+                    w(layer, WeightKind::B2n, 0, 0),
+                    Operand::Runtime(RuntimeId::Dmask),
+                    Operand::Runtime(RuntimeId::Count),
+                ],
+                full.clone(),
+            );
+            x_host = self.fetch(fin, full.clone());
+            x_slot = fin;
+        }
+
+        let mut prog = TileProgram {
+            cfg,
+            fabric: fc,
+            steps: self.steps,
+            host_shapes: self.host_shapes,
+            n_slots: self.n_slots,
+            input_host: input,
+            output_host: x_host,
+            drops: Vec::new(),
+            host_drops: Vec::new(),
+            host_init: Vec::new(),
+        };
+        prog.finalize();
+        prog
+    }
+}

@@ -1,0 +1,749 @@
+//! The **TileProgram IR** — the tile schedule of Algorithms 1–17 as data.
+//!
+//! The paper's host software walks the §3.9 tile schedules as imperative
+//! loops welded to one executor.  This module extracts that schedule into a
+//! flat instruction stream built **once per topology** by the
+//! [`builder::ScheduleBuilder`] and replayed per request:
+//!
+//! ```text
+//! (TnnConfig, FabricConstants, AttentionMode, qkv_packed, quantized)
+//!         │ ScheduleBuilder::build            (once per topology)
+//!         ▼
+//!     TileProgram  ── replay ──▶ FabricBackend (PJRT Executor: numerics)
+//!                  ── replay ──▶ CycleBackend  (accel::sim: predicted cycles)
+//! ```
+//!
+//! Both backends walk the *same* program, so the Table 2
+//! analytical-vs-experimental comparison and the serving request path
+//! consume one source of truth — the overlay-processor structure of NPE
+//! (software-built instruction stream, fixed hardware) and AccelTran's
+//! simulate-what-you-execute discipline.
+//!
+//! The instruction set mirrors what the fabric substrate can do:
+//!
+//! * [`Step::Upload`] / [`Step::Fetch`] — host ↔ device (AXI DMA analog);
+//! * [`Step::Dispatch`] — run one fixed-shape AOT artifact over operand
+//!   slots (a processing-module invocation);
+//! * [`Step::ExtractPanel`] / [`Step::AssemblePanel`] — host-side column
+//!   panel (re)assembly between module chains (the BRAM bank-to-bank moves
+//!   the paper gets for free inside the fabric);
+//! * [`Step::CalibrateScale`] — data-dependent int8 scale calibration for
+//!   the quantized path (the one step whose *value* cannot be baked into
+//!   the program).
+//!
+//! Operands are virtual: transient device [`Operand::Slot`]s, per-topology
+//! [`Operand::Runtime`] tensors (mask, dmask, count, zero accumulators —
+//! uploaded once and reused across requests), and [`Operand::Weight`]
+//! references resolved against whichever weight stack is bound at replay
+//! time, so one program serves every model with the same topology.
+
+pub mod builder;
+
+pub use builder::ScheduleBuilder;
+
+use anyhow::{anyhow, bail};
+
+use crate::model::TnnConfig;
+use crate::runtime::backend::FabricBackend;
+use crate::runtime::{Manifest, Tensor};
+
+/// Attention execution mode: `Split` mirrors the paper's module chain
+/// (QK_PM → softmax → SV_PM); `Fused` is the single-pass perf path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttentionMode {
+    Split,
+    Fused,
+}
+
+/// The synthesis-time shape constants of the fabric — everything the
+/// builder needs to lower a topology, decoupled from the artifact manifest
+/// so programs (and cycle estimates) can be built without an artifact set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricConstants {
+    /// Maximum sequence length (input BRAM rows).
+    pub sl_max: usize,
+    /// Fixed per-head width.
+    pub dk: usize,
+    /// MHA tile width (§3.9, Fig 4a).
+    pub ts_mha: usize,
+    /// FFN tile width (§3.9, Fig 4b).
+    pub ts_ffn: usize,
+    /// FFN2/FFN3 hidden-side panel width.
+    pub ffn_col: usize,
+    /// Maximum embedding width the buffers were sized for.
+    pub dmodel_max: usize,
+    /// Maximum hidden width.
+    pub hidden_max: usize,
+}
+
+impl FabricConstants {
+    /// The constants of a loaded artifact set.
+    pub fn from_manifest(m: &Manifest) -> Self {
+        FabricConstants {
+            sl_max: m.sl_max,
+            dk: m.dk,
+            ts_mha: m.ts_mha,
+            ts_ffn: m.ts_ffn,
+            ffn_col: m.ffn_col,
+            dmodel_max: m.dmodel_max,
+            hidden_max: m.hidden_max,
+        }
+    }
+
+    /// The default artifact set's constants (python/compile/configs.py) —
+    /// lets schedule/cycle tests run without the AOT lowering step.
+    pub fn artifact_default() -> Self {
+        FabricConstants {
+            sl_max: 128,
+            dk: 64,
+            ts_mha: 64,
+            ts_ffn: 128,
+            ffn_col: 512,
+            dmodel_max: 768,
+            hidden_max: 3072,
+        }
+    }
+
+    /// The tile geometry these constants describe.
+    pub fn tile_config(&self) -> crate::accel::tiling::TileConfig {
+        crate::accel::tiling::TileConfig::new(self.ts_mha, self.ts_ffn)
+    }
+
+    /// Fabric divisibility/maxima constraints for executing `cfg` (the
+    /// FPGA's equivalents are the tile sizes baked at synthesis).
+    pub fn check(&self, cfg: &TnnConfig) -> std::result::Result<(), String> {
+        cfg.validate_for_execution()?;
+        if cfg.seq_len > self.sl_max {
+            return Err(format!("seq_len {} > fabric SL_MAX {}", cfg.seq_len, self.sl_max));
+        }
+        if cfg.dk() != self.dk {
+            return Err(format!(
+                "d_model/heads = {} but the fabric's head width is {}",
+                cfg.dk(),
+                self.dk
+            ));
+        }
+        if cfg.d_model % self.ts_mha != 0 {
+            return Err(format!("d_model {} not a multiple of TS_MHA {}", cfg.d_model, self.ts_mha));
+        }
+        if cfg.d_model % self.ts_ffn != 0 {
+            return Err(format!("d_model {} not a multiple of TS_FFN {}", cfg.d_model, self.ts_ffn));
+        }
+        if cfg.hidden != 4 * cfg.d_model {
+            return Err(format!("fabric FFN panels assume hidden = 4·d_model (got {})", cfg.hidden));
+        }
+        if cfg.hidden % self.ffn_col != 0 {
+            return Err(format!("hidden {} not a multiple of FFN_COL {}", cfg.hidden, self.ffn_col));
+        }
+        if cfg.d_model > self.dmodel_max || cfg.hidden > self.hidden_max {
+            return Err("topology exceeds synthesis maxima".into());
+        }
+        Ok(())
+    }
+}
+
+/// Index of a transient device-resident value.
+pub type SlotId = usize;
+/// Index of a host-side scratch tensor.
+pub type HostId = usize;
+
+/// Per-topology runtime tensors: derived from the register file once per
+/// programmed topology, reused across every request (they used to be
+/// re-uploaded on each `run_encoder` call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuntimeId {
+    /// Additive attention mask fencing the padded tail.
+    Mask,
+    /// 1/sqrt(dk) attention scale scalar.
+    Scale,
+    /// LayerNorm column mask (1.0 on the valid prefix).
+    Dmask,
+    /// LayerNorm valid-column count scalar.
+    Count,
+    /// Zero accumulator, `[SL_MAX, DK]`.
+    ZeroDk,
+    /// Zero accumulator, `[SL_MAX, TS_FFN]`.
+    ZeroFfn,
+    /// Zero accumulator, `[SL_MAX, FFN_COL]`.
+    ZeroCol,
+    /// Zero accumulator, `[SL_MAX, 3*DK]` (packed QKV).
+    ZeroQkv3,
+}
+
+/// Which prepared-weight tensor a [`WeightRef`] names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightKind {
+    /// Per-head MHA panels: `row` = head, `col` = tile.
+    Wq,
+    Wk,
+    Wv,
+    /// Per-head biases: `row` = head.
+    Bq,
+    Bk,
+    Bv,
+    /// Output-projection grid panels: `row`/`col` = panel indices.
+    Wo,
+    Bo,
+    /// FFN2 grid panels.
+    W1,
+    B1,
+    /// FFN3 grid panels.
+    W2,
+    B2,
+    /// LayerNorm affine vectors.
+    G1,
+    B1n,
+    G2,
+    B2n,
+    /// Packed per-head `Q|K|V` panels: `row` = head, `col` = tile.
+    QkvPacked,
+    BQkvPacked,
+}
+
+/// Symbolic reference into whatever weight stack is bound at replay time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightRef {
+    pub layer: usize,
+    pub kind: WeightKind,
+    /// Head index or row-panel index (kind-dependent; 0 when unused).
+    pub row: usize,
+    /// Tile/column-panel index (0 when unused).
+    pub col: usize,
+}
+
+/// One dispatch operand.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operand {
+    Slot(SlotId),
+    Weight(WeightRef),
+    Runtime(RuntimeId),
+}
+
+/// One instruction of a [`TileProgram`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Host scratch `host` → device slot `dst`.
+    Upload { host: HostId, dst: SlotId },
+    /// Run artifact `artifact` over `args`, writing device slot `dst`.
+    /// `out_shape` is the artifact's (fabric-fixed) output shape, recorded
+    /// so shape-only backends can replay without a manifest.
+    Dispatch { artifact: &'static str, args: Vec<Operand>, dst: SlotId, out_shape: Vec<usize> },
+    /// Device slot `src` → host scratch `host`.
+    Fetch { src: SlotId, host: HostId },
+    /// Column panel `[rows, width]` of host `src` (columns `c0..c0+width`)
+    /// into host `dst`.
+    ExtractPanel { src: HostId, c0: usize, width: usize, dst: HostId },
+    /// Write host panel `src` into columns `c0..` of host `dst`.
+    AssemblePanel { src: HostId, dst: HostId, c0: usize },
+    /// Calibrate a per-tensor int8 scale from host `src` and upload it as
+    /// scalar device slot `dst` (the only data-dependent step).
+    CalibrateScale { src: HostId, dst: SlotId },
+}
+
+/// A lowered tile schedule: flat instruction stream + slot tables.
+#[derive(Debug, Clone)]
+pub struct TileProgram {
+    /// The topology this program was lowered for.
+    pub cfg: TnnConfig,
+    /// The fabric it was lowered against.
+    pub fabric: FabricConstants,
+    pub steps: Vec<Step>,
+    /// Shape of each host scratch slot.  Replay materializes a slot as
+    /// zeros only when `host_init` demands it; slots whose first touch is
+    /// a full overwrite start as empty placeholders.
+    pub host_shapes: Vec<Vec<usize>>,
+    /// Number of device slots.
+    pub n_slots: usize,
+    /// Host slot the caller writes the padded input into before replay.
+    pub input_host: HostId,
+    /// Host slot holding the padded output after replay.
+    pub output_host: HostId,
+    /// Device slots whose last use is step `i` (freed after executing it),
+    /// computed at build time so replay memory matches the imperative
+    /// engine's.
+    drops: Vec<Vec<SlotId>>,
+    /// Host scratch slots whose last reference is step `i` (emptied after
+    /// executing it; the output slot is never dropped).
+    host_drops: Vec<Vec<HostId>>,
+    /// Whether a host slot must be pre-materialized as zeros: true when
+    /// its first touch is a read or a partial write (`AssemblePanel` dst,
+    /// whose padded tail must stay zero).  Slots first touched by a full
+    /// overwrite (`Fetch`/`ExtractPanel` dst) skip the allocation+memset.
+    host_init: Vec<bool>,
+}
+
+impl TileProgram {
+    /// Compute per-step slot/host drop lists from last-use analysis.
+    /// Called by the builder once the stream is final.
+    pub(crate) fn finalize(&mut self) {
+        let mut slot_last = vec![0usize; self.n_slots];
+        let mut host_last = vec![usize::MAX; self.host_shapes.len()];
+        // First-touch classification for lazy host materialization: reads
+        // and partial writes need a materialized tensor; full overwrites
+        // (`Fetch`/`ExtractPanel` dst) do not.
+        let mut host_init = vec![false; self.host_shapes.len()];
+        let mut touched = vec![false; self.host_shapes.len()];
+        let touch = |touched: &mut [bool], init: &mut [bool], host: HostId, needs: bool| {
+            if !touched[host] {
+                touched[host] = true;
+                init[host] = needs;
+            }
+        };
+        for step in &self.steps {
+            match step {
+                Step::Upload { host, .. } => touch(&mut touched, &mut host_init, *host, true),
+                Step::CalibrateScale { src, .. } => {
+                    touch(&mut touched, &mut host_init, *src, true)
+                }
+                Step::Fetch { host, .. } => touch(&mut touched, &mut host_init, *host, false),
+                Step::ExtractPanel { src, dst, .. } => {
+                    touch(&mut touched, &mut host_init, *src, true);
+                    touch(&mut touched, &mut host_init, *dst, false);
+                }
+                Step::AssemblePanel { src, dst, .. } => {
+                    touch(&mut touched, &mut host_init, *src, true);
+                    touch(&mut touched, &mut host_init, *dst, true);
+                }
+                Step::Dispatch { .. } => {}
+            }
+        }
+        // The caller writes the input slot before the walk starts.
+        if let Some(init) = host_init.get_mut(self.input_host) {
+            *init = false;
+        }
+        for (i, step) in self.steps.iter().enumerate() {
+            match step {
+                Step::Upload { host, dst } => {
+                    host_last[*host] = i;
+                    slot_last[*dst] = i;
+                }
+                Step::Dispatch { args, dst, .. } => {
+                    slot_last[*dst] = i;
+                    for a in args {
+                        if let Operand::Slot(s) = a {
+                            slot_last[*s] = i;
+                        }
+                    }
+                }
+                Step::Fetch { src, host } => {
+                    slot_last[*src] = i;
+                    host_last[*host] = i;
+                }
+                Step::ExtractPanel { src, dst, .. } => {
+                    host_last[*src] = i;
+                    host_last[*dst] = i;
+                }
+                Step::AssemblePanel { src, dst, .. } => {
+                    host_last[*src] = i;
+                    host_last[*dst] = i;
+                }
+                Step::CalibrateScale { src, dst } => {
+                    host_last[*src] = i;
+                    slot_last[*dst] = i;
+                }
+            }
+        }
+        let mut drops = vec![Vec::new(); self.steps.len()];
+        for (slot, last) in slot_last.iter().enumerate() {
+            drops[*last].push(slot);
+        }
+        let mut host_drops = vec![Vec::new(); self.steps.len()];
+        for (host, last) in host_last.iter().enumerate() {
+            if host != self.output_host && *last != usize::MAX {
+                host_drops[*last].push(host);
+            }
+        }
+        self.drops = drops;
+        self.host_drops = host_drops;
+        self.host_init = host_init;
+    }
+
+    /// Number of artifact dispatches in one replay.
+    pub fn dispatch_count(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::Dispatch { .. })).count()
+    }
+
+    /// Number of host→device transfers in one replay (uploads plus the
+    /// scale upload of each calibrate step).
+    pub fn upload_count(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, Step::Upload { .. } | Step::CalibrateScale { .. }))
+            .count()
+    }
+
+    /// Number of device→host transfers in one replay.
+    pub fn fetch_count(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::Fetch { .. })).count()
+    }
+
+    /// The artifact names dispatched, in program order.
+    pub fn dispatch_sequence(&self) -> Vec<&'static str> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Dispatch { artifact, .. } => Some(*artifact),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Resolves symbolic weight references for one backend's buffer type.
+/// `PreparedStack` implements this for the PJRT executor; the cycle
+/// backend binds shape-only stand-ins.
+pub trait WeightSource<Buf> {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Buf>;
+}
+
+/// The per-topology runtime tensors in one backend's buffer type.
+#[derive(Debug)]
+pub struct RuntimeBufs<T> {
+    pub mask: T,
+    pub scale: T,
+    pub dmask: T,
+    pub count: T,
+    pub zero_dk: T,
+    pub zero_ffn: T,
+    pub zero_col: T,
+    pub zero_qkv3: T,
+}
+
+impl<T> RuntimeBufs<T> {
+    pub fn get(&self, id: RuntimeId) -> &T {
+        match id {
+            RuntimeId::Mask => &self.mask,
+            RuntimeId::Scale => &self.scale,
+            RuntimeId::Dmask => &self.dmask,
+            RuntimeId::Count => &self.count,
+            RuntimeId::ZeroDk => &self.zero_dk,
+            RuntimeId::ZeroFfn => &self.zero_ffn,
+            RuntimeId::ZeroCol => &self.zero_col,
+            RuntimeId::ZeroQkv3 => &self.zero_qkv3,
+        }
+    }
+}
+
+/// The host-side values of the runtime tensors for `cfg` — what the
+/// `Sequence`/`Embeddings` registers derive on the hardware.
+pub fn runtime_tensor(id: RuntimeId, cfg: &TnnConfig, fc: &FabricConstants) -> Tensor {
+    match id {
+        RuntimeId::Mask => {
+            let m = crate::model::reference::attention_mask(fc.sl_max, cfg.seq_len, false);
+            Tensor::from_mat(&m)
+        }
+        RuntimeId::Scale => Tensor::scalar1(1.0 / (fc.dk as f32).sqrt()),
+        RuntimeId::Dmask => {
+            let mut v = vec![0.0f32; fc.dmodel_max];
+            v[..cfg.d_model].fill(1.0);
+            Tensor::new(vec![fc.dmodel_max], v)
+        }
+        RuntimeId::Count => Tensor::scalar1(cfg.d_model as f32),
+        RuntimeId::ZeroDk => Tensor::zeros(vec![fc.sl_max, fc.dk]),
+        RuntimeId::ZeroFfn => Tensor::zeros(vec![fc.sl_max, fc.ts_ffn]),
+        RuntimeId::ZeroCol => Tensor::zeros(vec![fc.sl_max, fc.ffn_col]),
+        RuntimeId::ZeroQkv3 => Tensor::zeros(vec![fc.sl_max, 3 * fc.dk]),
+    }
+}
+
+/// Build (upload) the runtime tensor set on `backend`.  The engine calls
+/// this once per topology and caches the result next to the program.
+pub fn build_runtime<B: FabricBackend>(
+    backend: &B,
+    cfg: &TnnConfig,
+    fc: &FabricConstants,
+) -> anyhow::Result<RuntimeBufs<B::Buf>> {
+    let up = |id: RuntimeId| backend.upload(&runtime_tensor(id, cfg, fc));
+    Ok(RuntimeBufs {
+        mask: up(RuntimeId::Mask)?,
+        scale: up(RuntimeId::Scale)?,
+        dmask: up(RuntimeId::Dmask)?,
+        count: up(RuntimeId::Count)?,
+        zero_dk: up(RuntimeId::ZeroDk)?,
+        zero_ffn: up(RuntimeId::ZeroFfn)?,
+        zero_col: up(RuntimeId::ZeroCol)?,
+        zero_qkv3: up(RuntimeId::ZeroQkv3)?,
+    })
+}
+
+/// Column panel `[rows, width]` of a row-major 2-D tensor.
+pub fn col_panel(x: &Tensor, c0: usize, width: usize) -> Tensor {
+    let rows = x.shape[0];
+    let cols = x.shape[1];
+    let mut data = Vec::with_capacity(rows * width);
+    for r in 0..rows {
+        data.extend_from_slice(&x.data[r * cols + c0..r * cols + c0 + width]);
+    }
+    Tensor::new(vec![rows, width], data)
+}
+
+/// Write `src` `[rows, width]` into columns `c0..` of `dst`.
+pub fn set_col_panel(dst: &mut Tensor, src: &Tensor, c0: usize) {
+    let rows = src.shape[0];
+    let width = src.shape[1];
+    let cols = dst.shape[1];
+    for r in 0..rows {
+        dst.data[r * cols + c0..r * cols + c0 + width]
+            .copy_from_slice(&src.data[r * width..(r + 1) * width]);
+    }
+}
+
+/// Replay `prog` on `backend`, binding `weights` and the per-topology
+/// `runtime` tensors.  `input` must already be padded to
+/// `[SL_MAX, DMODEL_MAX]`; the returned tensor has the same padded shape
+/// (callers crop to the programmed topology).
+pub fn replay<B: FabricBackend>(
+    prog: &TileProgram,
+    backend: &B,
+    weights: &dyn WeightSource<B::Buf>,
+    runtime: &RuntimeBufs<B::Buf>,
+    input: Tensor,
+) -> anyhow::Result<Tensor> {
+    let want = vec![prog.fabric.sl_max, prog.fabric.dmodel_max];
+    if input.shape != want {
+        bail!("replay input shape {:?} != padded fabric shape {:?}", input.shape, want);
+    }
+    // Materialize only the host slots whose first touch needs real zeros;
+    // the rest start as empty placeholders and are assigned whole.
+    let mut hosts: Vec<Tensor> = prog
+        .host_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            if prog.host_init[i] {
+                Tensor::zeros(s.clone())
+            } else {
+                Tensor::zeros(vec![0])
+            }
+        })
+        .collect();
+    hosts[prog.input_host] = input;
+    let mut slots: Vec<Option<B::Buf>> = Vec::with_capacity(prog.n_slots);
+    slots.resize_with(prog.n_slots, || None);
+
+    for (i, step) in prog.steps.iter().enumerate() {
+        match step {
+            Step::Upload { host, dst } => {
+                slots[*dst] = Some(backend.upload(&hosts[*host])?);
+            }
+            Step::Dispatch { artifact, args, dst, out_shape } => {
+                let mut ins: Vec<&B::Buf> = Vec::with_capacity(args.len());
+                for a in args {
+                    match a {
+                        Operand::Slot(s) => ins.push(
+                            slots[*s]
+                                .as_ref()
+                                .ok_or_else(|| anyhow!("step {i}: slot {s} already freed"))?,
+                        ),
+                        Operand::Weight(w) => ins.push(weights.weight(w)?),
+                        Operand::Runtime(r) => ins.push(runtime.get(*r)),
+                    }
+                }
+                let out = backend.dispatch(artifact, &ins, out_shape)?;
+                slots[*dst] = Some(out);
+            }
+            Step::Fetch { src, host } => {
+                let buf = slots[*src]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("step {i}: fetch of freed slot {src}"))?;
+                hosts[*host] = backend.fetch(buf)?;
+            }
+            Step::ExtractPanel { src, c0, width, dst } => {
+                hosts[*dst] = col_panel(&hosts[*src], *c0, *width);
+            }
+            Step::AssemblePanel { src, dst, c0 } => {
+                let (s, d) = (*src, *dst);
+                if s == d {
+                    bail!("step {i}: assemble with src == dst host {s}");
+                }
+                // Disjoint split borrow: panel source read-only, wide
+                // destination mutable — no per-panel clone on the hot path.
+                let (src_t, dst_t): (&Tensor, &mut Tensor) = if s < d {
+                    let (left, right) = hosts.split_at_mut(d);
+                    (&left[s], &mut right[0])
+                } else {
+                    let (left, right) = hosts.split_at_mut(s);
+                    (&right[0], &mut left[d])
+                };
+                set_col_panel(dst_t, src_t, *c0);
+            }
+            Step::CalibrateScale { src, dst } => {
+                let sc = crate::model::quant::calibrate_scale(&hosts[*src].data);
+                slots[*dst] = Some(backend.upload(&Tensor::scalar1(sc))?);
+            }
+        }
+        for s in &prog.drops[i] {
+            slots[*s] = None;
+        }
+        for h in &prog.host_drops[i] {
+            hosts[*h] = Tensor::zeros(vec![0]);
+        }
+    }
+    // The output host is excluded from host_drops, so it can be moved out.
+    Ok(std::mem::replace(&mut hosts[prog.output_host], Tensor::zeros(vec![0])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+    use std::cell::RefCell;
+
+    /// A host-side mock backend: buffers are plain tensors, dispatch
+    /// returns zeros of the recorded output shape.  Exercises replay
+    /// mechanics (slot lifetimes, operand resolution) without PJRT.
+    struct MockBackend {
+        log: RefCell<Vec<String>>,
+    }
+
+    impl FabricBackend for MockBackend {
+        type Buf = Tensor;
+        fn upload(&self, t: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(t.clone())
+        }
+        fn dispatch(
+            &self,
+            artifact: &str,
+            _inputs: &[&Tensor],
+            out_shape: &[usize],
+        ) -> anyhow::Result<Tensor> {
+            self.log.borrow_mut().push(artifact.to_string());
+            Ok(Tensor::zeros(out_shape.to_vec()))
+        }
+        fn fetch(&self, b: &Tensor) -> anyhow::Result<Tensor> {
+            Ok(b.clone())
+        }
+    }
+
+    struct MockWeights {
+        buf: Tensor,
+    }
+
+    impl WeightSource<Tensor> for MockWeights {
+        fn weight(&self, _r: &WeightRef) -> anyhow::Result<&Tensor> {
+            Ok(&self.buf)
+        }
+    }
+
+    fn fc() -> FabricConstants {
+        FabricConstants::artifact_default()
+    }
+
+    #[test]
+    fn fabric_check_mirrors_engine_constraints() {
+        let f = fc();
+        assert!(f.check(&presets::small_encoder(32, 1)).is_ok());
+        // dk != 64
+        assert!(f.check(&TnnConfig::encoder(32, 256, 8, 1)).is_err());
+        // too long
+        assert!(f.check(&TnnConfig::encoder(256, 256, 4, 1)).is_err());
+        // too wide
+        assert!(f.check(&TnnConfig::encoder(32, 1024, 16, 1)).is_err());
+        // fine
+        assert!(f.check(&presets::small_encoder(64, 2)).is_ok());
+    }
+
+    #[test]
+    fn program_counts_follow_the_tile_schedule() {
+        let f = fc();
+        let cfg = presets::small_encoder(32, 2); // d=256, h=4, 2 layers
+        let prog = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let t_m = cfg.d_model / f.ts_mha; // 4
+        let t_f = cfg.d_model / f.ts_ffn; // 2
+        let t_h = cfg.hidden / f.ffn_col; // 2
+        let l = cfg.enc_layers;
+        // uploads: initial padded input + per-layer panel/assembly uploads
+        assert_eq!(prog.upload_count(), 1 + l * (t_m + 2 * t_f + t_h + 3));
+        // dispatches: per-head QKV chains + attention + FFN grids + the
+        // five FFN-chain singletons (bias_add_d, residual_ln, bias_relu_h,
+        // bias_add_d, residual_ln)
+        let per_layer = cfg.heads * (3 * t_m + 3 + 3)
+            + t_f * t_f
+            + t_f * t_h
+            + t_h * t_f
+            + 5;
+        assert_eq!(prog.dispatch_count(), l * per_layer);
+        assert_eq!(prog.dispatch_sequence().len(), prog.dispatch_count());
+        // the residual of layer 2 reuses layer 1's device output: no
+        // full-width x upload after the first (the perf fix this IR bakes in)
+        let full_uploads = prog
+            .steps
+            .iter()
+            .filter(|s| match s {
+                Step::Upload { host, .. } => {
+                    prog.host_shapes[*host] == vec![f.sl_max, f.dmodel_max]
+                }
+                _ => false,
+            })
+            .count();
+        assert_eq!(
+            full_uploads,
+            1 + 2 * l,
+            "input once + assembled proj/out per layer; never the layer input x"
+        );
+    }
+
+    #[test]
+    fn quantized_program_adds_calibrate_and_quantize_steps() {
+        let f = fc();
+        let cfg = presets::small_encoder(32, 1);
+        let base = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let quant = ScheduleBuilder::new(f, cfg).unwrap().quantized(true).build();
+        assert_eq!(quant.dispatch_count(), base.dispatch_count() + cfg.enc_layers);
+        assert!(quant.dispatch_sequence().contains(&"quantize"));
+        assert!(!base.dispatch_sequence().contains(&"quantize"));
+    }
+
+    #[test]
+    fn split_fused_and_packed_lower_to_different_streams() {
+        let f = fc();
+        let cfg = presets::small_encoder(32, 1);
+        let split = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let fused =
+            ScheduleBuilder::new(f, cfg).unwrap().mode(AttentionMode::Fused).build();
+        let packed = ScheduleBuilder::new(f, cfg).unwrap().qkv_packed(true).build();
+        assert!(split.dispatch_sequence().contains(&"qk_scores"));
+        assert!(fused.dispatch_sequence().contains(&"attn_fused"));
+        assert!(packed.dispatch_sequence().contains(&"mm_qkv_packed"));
+        assert!(fused.dispatch_count() < split.dispatch_count());
+        assert!(packed.dispatch_count() < split.dispatch_count());
+    }
+
+    #[test]
+    fn replay_walks_the_whole_stream_on_a_mock_backend() {
+        let f = fc();
+        let cfg = presets::small_encoder(16, 1);
+        let prog = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let backend = MockBackend { log: RefCell::new(Vec::new()) };
+        let weights = MockWeights { buf: Tensor::scalar1(0.0) };
+        let runtime = build_runtime(&backend, &cfg, &f).unwrap();
+        let input = Tensor::zeros(vec![f.sl_max, f.dmodel_max]);
+        let out = replay(&prog, &backend, &weights, &runtime, input).unwrap();
+        assert_eq!(out.shape, vec![f.sl_max, f.dmodel_max]);
+        let logged: Vec<&str> = backend.log.borrow().iter().map(|s| s.as_str()).collect();
+        assert_eq!(logged, prog.dispatch_sequence());
+    }
+
+    #[test]
+    fn replay_rejects_unpadded_input() {
+        let f = fc();
+        let cfg = presets::small_encoder(16, 1);
+        let prog = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let backend = MockBackend { log: RefCell::new(Vec::new()) };
+        let weights = MockWeights { buf: Tensor::scalar1(0.0) };
+        let runtime = build_runtime(&backend, &cfg, &f).unwrap();
+        let input = Tensor::zeros(vec![cfg.seq_len, cfg.d_model]);
+        assert!(replay(&prog, &backend, &weights, &runtime, input).is_err());
+    }
+
+    #[test]
+    fn col_panel_roundtrip() {
+        let x = Tensor::new(vec![2, 4], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let p = col_panel(&x, 1, 2);
+        assert_eq!(p.shape, vec![2, 2]);
+        assert_eq!(p.data, vec![1.0, 2.0, 5.0, 6.0]);
+        let mut y = Tensor::zeros(vec![2, 4]);
+        set_col_panel(&mut y, &p, 1);
+        assert_eq!(y.data, vec![0.0, 1.0, 2.0, 0.0, 0.0, 5.0, 6.0, 0.0]);
+    }
+}

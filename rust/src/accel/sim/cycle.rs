@@ -1,0 +1,360 @@
+//! The cycle backend: replays a [`TileProgram`] to predict fabric cycles.
+//!
+//! This is the AccelTran discipline — drive the cycle model from the
+//! *same* instruction stream the real datapath executes — applied to
+//! Table 2: instead of a second hand-maintained schedule inside
+//! [`super::simulate`], the backend walks the program the PJRT executor
+//! replays and prices every dispatch with the iteration-level loop-nest
+//! models of [`super::pipeline`].
+//!
+//! Pricing maps substrate dispatches back onto hardware module timelines:
+//! heads run in parallel on the fabric (one head's timeline is the
+//! block's), so the `h` per-head dispatches of one module share that
+//! module's cycles; weight-panel loads double-buffer against compute
+//! ([`super::pipeline::double_buffered`]); and the host↔device shuffles of
+//! the software substrate (panel re-assembly) cost nothing — on the
+//! hardware those moves happen inside BRAM.  The one-time input load
+//! (Algorithm 1) is charged per replay, not per upload.
+//!
+//! Buffers are bare shapes; numerics never happen here, which is what lets
+//! cycle estimation run without an artifact set.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::bail;
+
+use crate::accel::latency::depths::{LOAD, STORE};
+use crate::accel::schedule::{
+    self, AttentionMode, FabricConstants, ScheduleBuilder, TileProgram, WeightKind, WeightRef,
+    WeightSource,
+};
+use crate::model::TnnConfig;
+use crate::runtime::{backend::FabricBackend, Tensor};
+
+use super::pipeline::{nest, PipelinedLoop};
+
+/// Per-artifact accounting for one replay.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArtifactCycles {
+    pub count: u64,
+    pub cycles: f64,
+}
+
+/// The outcome of replaying a program through the cycle backend.
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    /// Predicted fabric cycles for one request (input load + layer stack,
+    /// decoder layers charged at the simulator's 1.6× encoder rate).
+    pub total_cycles: u64,
+    pub dispatches: u64,
+    pub uploads: u64,
+    pub fetches: u64,
+    /// Artifact names in dispatch order — compared against the PJRT
+    /// executor's trace of the identical program in the equivalence tests.
+    pub trace: Vec<String>,
+    pub per_artifact: BTreeMap<String, ArtifactCycles>,
+}
+
+impl CycleReport {
+    pub fn ms_at(&self, freq_mhz: f64) -> f64 {
+        self.total_cycles as f64 / (freq_mhz * 1e3)
+    }
+}
+
+#[derive(Debug, Default)]
+struct CycleState {
+    cycles: f64,
+    dispatches: u64,
+    uploads: u64,
+    fetches: u64,
+    trace: Vec<String>,
+    per_artifact: BTreeMap<String, ArtifactCycles>,
+}
+
+/// A [`FabricBackend`] whose buffers are bare shapes and whose dispatches
+/// accrue predicted cycles from a per-artifact cost table derived from the
+/// iteration-level simulator for one `(topology, fabric)` pair.
+pub struct CycleBackend {
+    costs: HashMap<&'static str, f64>,
+    load_inputs: u64,
+    /// Decoder-stack surcharge (1.6× an encoder layer, as in
+    /// [`super::simulate`]), fixed at construction.
+    dec_cycles: f64,
+    state: RefCell<CycleState>,
+}
+
+impl CycleBackend {
+    pub fn new(cfg: &TnnConfig, fc: &FabricConstants) -> Self {
+        let tiles = fc.tile_config();
+        let sim = super::simulate(cfg, &tiles);
+        let l = &sim.layer;
+        let h = cfg.heads as f64;
+        let t_m = (cfg.d_model / fc.ts_mha) as f64;
+        let t_f = (cfg.d_model / fc.ts_ffn) as f64;
+        let t_h = (cfg.hidden / fc.ffn_col) as f64;
+        let attn_tail = (l.score + l.softmax + l.sv) as f64;
+        // int8 QDQ pass over the valid embedding prefix (not part of the
+        // paper's fp16 timeline; only the quantized mode dispatches it).
+        let qdq = nest(
+            cfg.seq_len as u64,
+            PipelinedLoop { depth: LOAD + 3 + STORE, ii: 1, trip: cfg.d_model as u64 },
+        ) as f64;
+        let costs = HashMap::from([
+            ("mm_qkv", l.qkv_total as f64 / (3.0 * h * t_m)),
+            ("mm_qkv_packed", l.qkv_total as f64 / (h * t_m)),
+            ("bias_add_dk", l.bias_qkv as f64 / (3.0 * h)),
+            ("bias_add_qkv", l.bias_qkv as f64 / h),
+            ("qk_scores", l.score as f64 / h),
+            ("softmax", l.softmax as f64 / h),
+            ("sv", l.sv as f64 / h),
+            ("attn_fused", attn_tail / h),
+            ("attn_packed", attn_tail / h),
+            ("mm_ffn1", l.ffn1_total as f64 / (t_f * t_f)),
+            ("mm_ffn2", l.ffn2_total as f64 / (t_f * t_h)),
+            ("mm_ffn3", l.ffn3_total as f64 / (t_f * t_h)),
+            ("bias_add_d", l.bias_ffn1 as f64),
+            ("bias_relu_h", l.bias_ffn2 as f64),
+            ("residual_ln", l.ln1 as f64),
+            ("quantize", qdq),
+        ]);
+        CycleBackend {
+            costs,
+            load_inputs: sim.load_inputs,
+            dec_cycles: l.total() as f64 * 1.6 * cfg.dec_layers as f64,
+            state: RefCell::new(CycleState::default()),
+        }
+    }
+
+    /// The prediction for everything replayed so far (plus the one-time
+    /// input load and any decoder surcharge).
+    pub fn report(&self) -> CycleReport {
+        let st = self.state.borrow();
+        let total = self.load_inputs as f64 + st.cycles + self.dec_cycles;
+        CycleReport {
+            total_cycles: total.round() as u64,
+            dispatches: st.dispatches,
+            uploads: st.uploads,
+            fetches: st.fetches,
+            trace: st.trace.clone(),
+            per_artifact: st.per_artifact.clone(),
+        }
+    }
+}
+
+impl FabricBackend for CycleBackend {
+    type Buf = Vec<usize>;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Vec<usize>> {
+        self.state.borrow_mut().uploads += 1;
+        Ok(t.shape.clone())
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        _inputs: &[&Vec<usize>],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Vec<usize>> {
+        let Some(cost) = self.costs.get(artifact).copied() else {
+            bail!("cycle backend has no cost model for artifact '{artifact}'");
+        };
+        let mut st = self.state.borrow_mut();
+        st.cycles += cost;
+        st.dispatches += 1;
+        st.trace.push(artifact.to_string());
+        let e = st.per_artifact.entry(artifact.to_string()).or_default();
+        e.count += 1;
+        e.cycles += cost;
+        Ok(out_shape.to_vec())
+    }
+
+    fn fetch(&self, buf: &Vec<usize>) -> anyhow::Result<Tensor> {
+        self.state.borrow_mut().fetches += 1;
+        Ok(Tensor::zeros(buf.clone()))
+    }
+}
+
+/// Shape-only stand-ins for a prepared weight stack: every reference
+/// resolves to the fabric-fixed panel shape of its kind.
+pub struct ShapeWeights {
+    mha_panel: Vec<usize>,
+    qkv_panel: Vec<usize>,
+    bias_dk: Vec<usize>,
+    bias_qkv3: Vec<usize>,
+    wo: Vec<usize>,
+    vec_d: Vec<usize>,
+    w1: Vec<usize>,
+    vec_h: Vec<usize>,
+    w2: Vec<usize>,
+}
+
+impl ShapeWeights {
+    pub fn new(fc: &FabricConstants) -> Self {
+        ShapeWeights {
+            mha_panel: vec![fc.ts_mha, fc.dk],
+            qkv_panel: vec![fc.ts_mha, 3 * fc.dk],
+            bias_dk: vec![fc.dk],
+            bias_qkv3: vec![3 * fc.dk],
+            wo: vec![fc.ts_ffn, fc.ts_ffn],
+            vec_d: vec![fc.dmodel_max],
+            w1: vec![fc.ts_ffn, fc.ffn_col],
+            vec_h: vec![fc.hidden_max],
+            w2: vec![fc.ffn_col, fc.ts_ffn],
+        }
+    }
+}
+
+impl WeightSource<Vec<usize>> for ShapeWeights {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Vec<usize>> {
+        Ok(match r.kind {
+            WeightKind::Wq | WeightKind::Wk | WeightKind::Wv => &self.mha_panel,
+            WeightKind::QkvPacked => &self.qkv_panel,
+            WeightKind::Bq | WeightKind::Bk | WeightKind::Bv => &self.bias_dk,
+            WeightKind::BQkvPacked => &self.bias_qkv3,
+            WeightKind::Wo => &self.wo,
+            WeightKind::Bo
+            | WeightKind::B2
+            | WeightKind::G1
+            | WeightKind::B1n
+            | WeightKind::G2
+            | WeightKind::B2n => &self.vec_d,
+            WeightKind::W1 => &self.w1,
+            WeightKind::B1 => &self.vec_h,
+            WeightKind::W2 => &self.w2,
+        })
+    }
+}
+
+/// Replay an already-built program through the cycle backend.  Needs no
+/// artifact set: buffers are shapes, weights are shape stand-ins.
+pub fn replay_program(prog: &TileProgram) -> anyhow::Result<CycleReport> {
+    let backend = CycleBackend::new(&prog.cfg, &prog.fabric);
+    let weights = ShapeWeights::new(&prog.fabric);
+    let runtime = schedule::build_runtime(&backend, &prog.cfg, &prog.fabric)?;
+    let input = Tensor::zeros(vec![prog.fabric.sl_max, prog.fabric.dmodel_max]);
+    schedule::replay(prog, &backend, &weights, &runtime, input)?;
+    Ok(backend.report())
+}
+
+/// Build the program for `(cfg, fc, flags)` and replay it for cycles —
+/// the one-call schedule-grounded latency estimate.
+pub fn estimate(
+    cfg: &TnnConfig,
+    fc: &FabricConstants,
+    mode: AttentionMode,
+    qkv_packed: bool,
+    quantized: bool,
+) -> anyhow::Result<CycleReport> {
+    let prog = ScheduleBuilder::new(*fc, *cfg)?
+        .mode(mode)
+        .qkv_packed(qkv_packed)
+        .quantized(quantized)
+        .build();
+    replay_program(&prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::latency;
+
+    fn fc() -> FabricConstants {
+        FabricConstants::artifact_default()
+    }
+
+    fn rel_err(a: u64, b: u64) -> f64 {
+        (a as f64 - b as f64).abs() / b as f64
+    }
+
+    #[test]
+    fn schedule_replay_matches_analytical_within_table2_band() {
+        // the acceptance band: the program-driven estimate must sit within
+        // the Table 2 error band of the closed form (report gate: < 6%).
+        let f = fc();
+        let tiles = f.tile_config();
+        for cfg in [
+            TnnConfig::encoder(64, 768, 12, 12),
+            TnnConfig::encoder(128, 768, 12, 12),
+            TnnConfig::encoder(64, 512, 8, 12),
+            TnnConfig::encoder(32, 256, 4, 2),
+        ] {
+            let est = estimate(&cfg, &f, AttentionMode::Split, false, false).unwrap();
+            let ana = latency::model_latency(&cfg, &tiles);
+            let err = rel_err(est.total_cycles, ana.total_cycles);
+            assert!(
+                err < 0.06,
+                "{cfg}: replay={} analytical={} err={err:.4}",
+                est.total_cycles,
+                ana.total_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_replay_agrees_with_the_iteration_simulator() {
+        // same schedule, same pricing primitives: the replayed total must
+        // land on the simulator's (the costs are derived from it).
+        let f = fc();
+        let tiles = f.tile_config();
+        for cfg in [TnnConfig::encoder(64, 768, 12, 12), TnnConfig::encoder(48, 128, 2, 3)] {
+            let est = estimate(&cfg, &f, AttentionMode::Split, false, false).unwrap();
+            let sim = super::super::simulate(&cfg, &tiles);
+            let err = rel_err(est.total_cycles, sim.total_cycles);
+            assert!(err < 0.005, "{cfg}: replay={} sim={}", est.total_cycles, sim.total_cycles);
+        }
+    }
+
+    #[test]
+    fn packed_and_fused_schedules_stay_in_band() {
+        let f = fc();
+        let tiles = f.tile_config();
+        let cfg = TnnConfig::encoder(64, 512, 8, 4);
+        let ana = latency::model_latency(&cfg, &tiles).total_cycles;
+        for (mode, packed) in [
+            (AttentionMode::Fused, false),
+            (AttentionMode::Split, true),
+            (AttentionMode::Fused, true),
+        ] {
+            let est = estimate(&cfg, &f, mode, packed, false).unwrap();
+            let err = rel_err(est.total_cycles, ana);
+            assert!(err < 0.06, "mode={mode:?} packed={packed}: err={err:.4}");
+        }
+    }
+
+    #[test]
+    fn trace_covers_every_dispatch_of_the_program() {
+        let f = fc();
+        let cfg = TnnConfig::encoder(32, 256, 4, 2);
+        let prog = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let rep = replay_program(&prog).unwrap();
+        assert_eq!(rep.dispatches as usize, prog.dispatch_count());
+        assert_eq!(rep.trace.len(), prog.dispatch_count());
+        let want: Vec<String> =
+            prog.dispatch_sequence().iter().map(|s| s.to_string()).collect();
+        assert_eq!(rep.trace, want);
+        assert_eq!(rep.uploads as usize, prog.upload_count() + 8, "+8 runtime tensors");
+        assert_eq!(rep.fetches as usize, prog.fetch_count());
+    }
+
+    #[test]
+    fn quantized_schedule_costs_more() {
+        let f = fc();
+        let cfg = TnnConfig::encoder(64, 256, 4, 2);
+        let plain = estimate(&cfg, &f, AttentionMode::Split, false, false).unwrap();
+        let quant = estimate(&cfg, &f, AttentionMode::Split, false, true).unwrap();
+        assert!(quant.total_cycles > plain.total_cycles);
+        assert!(quant.per_artifact.contains_key("quantize"));
+    }
+
+    #[test]
+    fn decoder_layers_carry_the_simulator_surcharge() {
+        let f = fc();
+        let tiles = f.tile_config();
+        let mut cfg = TnnConfig::encoder(64, 512, 8, 2);
+        cfg.dec_layers = 2;
+        let est = estimate(&cfg, &f, AttentionMode::Split, false, false).unwrap();
+        let sim = super::super::simulate(&cfg, &tiles);
+        assert!(rel_err(est.total_cycles, sim.total_cycles) < 0.005);
+    }
+}

@@ -8,7 +8,12 @@
 //! pay the HLS control cycles the closed form ignores.  Agreement between
 //! the two within a couple of percent reproduces the paper's validation
 //! claim (≤1.8 % latency error, Table 2).
+//!
+//! [`cycle`] closes the loop with execution: it replays the *same*
+//! `TileProgram` the PJRT engine runs, pricing each dispatch with this
+//! module's loop-nest models, so schedule and simulation cannot drift.
 
+pub mod cycle;
 pub mod pipeline;
 pub mod trace;
 

@@ -17,8 +17,22 @@ pub struct PipelinedLoop {
 }
 
 impl PipelinedLoop {
-    /// Simulate: issue each iteration, return cycles until the last drains.
+    /// Cycles until the last iteration drains.  Closed form of the
+    /// per-iteration issue walk (`(trip−1)·II + depth`, i.e. Eq 9 — the
+    /// iterative and closed forms are equivalence-tested below): these
+    /// loops sit inside every design-space sweep, so the O(trip) walk was
+    /// pure overhead.
     pub fn run(&self) -> u64 {
+        if self.trip == 0 {
+            return 0;
+        }
+        self.ii * (self.trip - 1) + self.depth
+    }
+
+    /// The original iteration-by-iteration walk, kept as the oracle for
+    /// the closed-form equivalence tests.
+    #[cfg(test)]
+    fn run_iterative(&self) -> u64 {
         if self.trip == 0 {
             return 0;
         }
@@ -38,7 +52,15 @@ impl PipelinedLoop {
 pub const ENTRY_EXIT: u64 = 2;
 
 /// Run `outer` iterations of `body_cycles`, paying loop control each time.
+/// Closed form of the accumulation loop (equivalence-tested below).
 pub fn outer_loop(outer: u64, body_cycles: u64) -> u64 {
+    outer * (ENTRY_EXIT + body_cycles)
+}
+
+/// The original iterative accumulation, kept as the oracle for the
+/// closed-form equivalence tests.
+#[cfg(test)]
+fn outer_loop_iterative(outer: u64, body_cycles: u64) -> u64 {
     let mut t = 0u64;
     for _ in 0..outer {
         t += ENTRY_EXIT + body_cycles;
@@ -95,6 +117,35 @@ mod tests {
     fn outer_loop_pays_control_overhead() {
         // this overhead is the analytical-vs-experimental gap's source
         assert_eq!(outer_loop(10, 100), 10 * 102);
+    }
+
+    #[test]
+    fn closed_form_pipelined_loop_matches_iterative_oracle() {
+        for depth in [0u64, 1, 2, 5, 16, 129] {
+            for ii in [1u64, 2, 3, 7] {
+                for trip in [0u64, 1, 2, 3, 64, 767, 4096] {
+                    let l = PipelinedLoop { depth, ii, trip };
+                    assert_eq!(
+                        l.run(),
+                        l.run_iterative(),
+                        "depth={depth} ii={ii} trip={trip}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_outer_loop_matches_iterative_oracle() {
+        for outer in [0u64, 1, 2, 13, 144, 10_000] {
+            for body in [0u64, 1, 99, 1023] {
+                assert_eq!(
+                    outer_loop(outer, body),
+                    outer_loop_iterative(outer, body),
+                    "outer={outer} body={body}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! HLS+implementation run — the paper quotes ≈36 hours for a SOTA
 //! transformer (§3.10).  The ablation bench quantifies the tradeoff.
 
-use crate::accel::{frequency, latency, resources, tiling::TileConfig};
 use crate::accel::platform::Platform;
+use crate::accel::schedule::{AttentionMode, FabricConstants};
+use crate::accel::sim::cycle;
+use crate::accel::{frequency, latency, resources, tiling::TileConfig};
 use crate::model::quant::BitWidth;
 use crate::model::TnnConfig;
 
@@ -23,6 +25,30 @@ pub struct Specialized {
     pub freq_mhz: f64,
     pub latency_ms: f64,
     pub gops: f64,
+    /// Schedule-grounded cycle count for the chosen design: the lowered
+    /// `TileProgram` replayed through the cycle backend — the same source
+    /// of truth the adaptive engine executes.  `None` when the topology
+    /// cannot be lowered (non-divisible heads, non-4·d hidden, …); those
+    /// models keep only the closed-form number.
+    pub sched_cycles: Option<u64>,
+}
+
+/// Replay the tile schedule a specialized fabric would execute and return
+/// its predicted cycles (schedule-grounded counterpart of
+/// `latency::model_latency`).
+pub fn schedule_cycles(cfg: &TnnConfig, tiles: &TileConfig) -> Option<u64> {
+    let fc = FabricConstants {
+        sl_max: cfg.seq_len,
+        dk: cfg.dk(),
+        ts_mha: tiles.ts_mha,
+        ts_ffn: tiles.ts_ffn,
+        ffn_col: 4 * tiles.ts_ffn,
+        dmodel_max: cfg.d_model,
+        hidden_max: cfg.hidden,
+    };
+    cycle::estimate(cfg, &fc, AttentionMode::Split, false, false)
+        .ok()
+        .map(|r| r.total_cycles)
 }
 
 /// Exhaustively pick the best legal tile configuration for `cfg` on
@@ -42,11 +68,21 @@ pub fn specialize(cfg: &TnnConfig, platform: &Platform, bw: BitWidth) -> Option<
             let f = frequency::fmax_mhz(platform, &r);
             let lat = latency::model_latency(cfg, &ts);
             let ms = lat.ms_at(f);
-            let cand = Specialized { tiles: ts, freq_mhz: f, latency_ms: ms, gops: lat.gops_at(cfg, f) };
+            let cand = Specialized {
+                tiles: ts,
+                freq_mhz: f,
+                latency_ms: ms,
+                gops: lat.gops_at(cfg, f),
+                sched_cycles: None,
+            };
             if best.as_ref().map(|b| cand.latency_ms < b.latency_ms).unwrap_or(true) {
                 best = Some(cand);
             }
         }
+    }
+    // Ground the winner in the executed schedule (once — not per candidate).
+    if let Some(b) = best.as_mut() {
+        b.sched_cycles = schedule_cycles(cfg, &b.tiles);
     }
     best
 }
@@ -129,6 +165,24 @@ mod tests {
         let gap_hours = c.nonadaptive_synthesis_hours - c.adaptor_synthesis_hours;
         let inf_gap_hours = (c.nonadaptive_inference_ms - c.adaptor_inference_ms).abs() / 3.6e6;
         assert!(gap_hours > 1e4 * inf_gap_hours);
+    }
+
+    #[test]
+    fn specialized_winner_is_schedule_grounded() {
+        // the winning design's cycles come from replaying its TileProgram;
+        // they must agree with the iteration-level simulator (same pricing)
+        // for a divisible topology...
+        let p = platform::u55c();
+        let cfg = presets::bert_base(64);
+        let spec = specialize(&cfg, &p, BitWidth::Fixed16).unwrap();
+        let sched = spec.sched_cycles.expect("BERT lowers cleanly");
+        let sim = crate::accel::sim::simulate(&cfg, &spec.tiles);
+        let err = (sched as f64 - sim.total_cycles as f64).abs() / sim.total_cycles as f64;
+        assert!(err < 0.01, "sched={sched} sim={} err={err:.4}", sim.total_cycles);
+        // ...and a non-divisible one (d=200, h=3) falls back to None.
+        if let Some(s) = specialize(&presets::custom_encoder(), &p, BitWidth::Fixed16) {
+            assert!(s.sched_cycles.is_none());
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The host-software half of ADAPTOR (paper §3.11, §4, Algorithm 18) and
 //! the serving layer around it.
 //!
-//! * [`engine`] — the tile-schedule engine: executes the paper's
-//!   Algorithms 1–17 as a dataflow of fixed-shape AOT tile primitives on
-//!   the PJRT runtime, under the control of the configuration registers.
-//!   This is the numeric twin of the FPGA fabric.
+//! * [`engine`] — the tile-schedule engine: lowers the paper's
+//!   Algorithms 1–17 into a cached `TileProgram` (`accel::schedule`) per
+//!   programmed topology and replays it per request over fixed-shape AOT
+//!   tile primitives on the PJRT runtime, under the control of the
+//!   configuration registers.  This is the numeric twin of the FPGA
+//!   fabric.
 //! * [`batcher`] — dynamic request batching (per-model ready queues,
 //!   size/deadline policy).
 //! * [`router`] — model registry + request routing, with pool-affinity

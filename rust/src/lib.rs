@@ -11,15 +11,20 @@
 //! * [`accel`] — the FPGA fabric substitute: platform resource databases,
 //!   the paper's analytical models (Eqs 8–39), a cycle-level simulator,
 //!   post-route frequency and power models, tiling geometry, the
-//!   runtime-adaptive configuration register file, and the roofline model.
+//!   runtime-adaptive configuration register file, the roofline model,
+//!   and `accel::schedule` — the **TileProgram IR** that lowers the §3.9
+//!   tile schedules (Algorithms 1–17) into a flat instruction stream once
+//!   per topology.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`
 //!   lowered once by `python/compile/aot.py`; Python is never on the
-//!   request path).
+//!   request path), plus the `FabricBackend` trait a `TileProgram` replays
+//!   against (PJRT for numerics; `accel::sim::cycle` for predicted
+//!   cycles — one schedule, two substrates).
 //! * [`coordinator`] — the host-software half (paper §3.11, §4,
 //!   Algorithm 18): register programming, the tile-schedule engine that
-//!   executes the paper's Algorithms 1–17 over AOT tile primitives, a
-//!   request router + dynamic batcher, a multi-fabric serving pool, and
-//!   metrics.
+//!   builds/caches a `TileProgram` per programmed topology and replays it
+//!   per request, a request router + dynamic batcher, a multi-fabric
+//!   serving pool, and metrics.
 //! * [`baselines`] — literature datapoints (Table 1 / Fig 10 comparators)
 //!   and executable baselines (dense CPU oracle, non-adaptive accelerator).
 //! * [`analysis`] — design-space sweeps and the table/figure renderers that

@@ -1,0 +1,73 @@
+//! The execution-substrate abstraction a [`TileProgram`] replays against.
+//!
+//! A backend supplies the three primitive operations the tile schedule
+//! needs — host→device transfer, fixed-shape artifact dispatch, and
+//! device→host transfer — behind an associated buffer type.  Two
+//! implementations exist:
+//!
+//! * [`Executor`] (here): the PJRT fabric — real numerics, `Buf` is a
+//!   device-resident [`DeviceTensor`];
+//! * `accel::sim::cycle::CycleBackend`: the cycle model — `Buf` is a bare
+//!   shape, each dispatch accrues predicted cycles, and the dispatch trace
+//!   is recorded for Table 2's analytical-vs-experimental comparison.
+//!
+//! [`TileProgram`]: crate::accel::schedule::TileProgram
+
+use super::executor::{DeviceTensor, Executor, Tensor};
+
+/// One fabric substrate: uploads, fixed-shape dispatches, downloads.
+///
+/// Methods take `&self` (backends use interior mutability for statistics,
+/// mirroring [`Executor`]'s compile cache) so a replay can hold the
+/// backend alongside slot borrows.
+pub trait FabricBackend {
+    /// The backend's device-resident value representation.
+    type Buf;
+
+    /// Host tensor → device buffer (AXI DMA write analog).
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Self::Buf>;
+
+    /// Execute artifact `artifact` over `inputs`.  `out_shape` is the
+    /// output shape recorded in the program at build time; backends with a
+    /// manifest must reject a mismatch (program/artifact-set drift),
+    /// shape-only backends construct their result from it.
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&Self::Buf],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Self::Buf>;
+
+    /// Device buffer → host tensor (AXI DMA read analog).
+    fn fetch(&self, buf: &Self::Buf) -> anyhow::Result<Tensor>;
+}
+
+impl FabricBackend for Executor {
+    type Buf = DeviceTensor;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<DeviceTensor> {
+        self.to_device(t)
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&DeviceTensor],
+        out_shape: &[usize],
+    ) -> anyhow::Result<DeviceTensor> {
+        let out = self.run_dev(artifact, inputs)?;
+        if out.shape != out_shape {
+            anyhow::bail!(
+                "artifact '{artifact}' produced shape {:?} but the program recorded {:?} \
+                 (program built against a different artifact set?)",
+                out.shape,
+                out_shape
+            );
+        }
+        Ok(out)
+    }
+
+    fn fetch(&self, buf: &DeviceTensor) -> anyhow::Result<Tensor> {
+        Executor::fetch(self, buf)
+    }
+}

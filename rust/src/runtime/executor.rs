@@ -64,6 +64,12 @@ pub struct ExecStats {
     pub compiles: u64,
     /// Artifact executions dispatched.
     pub dispatches: u64,
+    /// Host→device transfers (uploads; the AXI write-DMA analog).  The
+    /// schedule-cache tests assert this drops once per-topology runtime
+    /// tensors and layer activations stop being re-uploaded.
+    pub uploads: u64,
+    /// Device→host transfers (fetches; the AXI read-DMA analog).
+    pub fetches: u64,
     /// Wall time spent inside PJRT execute, seconds.
     pub execute_secs: f64,
 }
@@ -78,6 +84,10 @@ pub struct Executor {
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     stats: RefCell<ExecStats>,
+    /// When `Some`, every dispatched artifact name is appended — the
+    /// backend-equivalence tests compare this against the cycle backend's
+    /// trace of the same program.
+    trace: RefCell<Option<Vec<String>>>,
 }
 
 impl Executor {
@@ -90,7 +100,26 @@ impl Executor {
             manifest,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(ExecStats::default()),
+            trace: RefCell::new(None),
         })
+    }
+
+    /// Start (`true`) or stop (`false`) recording the dispatch trace.
+    /// Starting clears any previous recording.
+    pub fn trace_dispatches(&self, on: bool) {
+        *self.trace.borrow_mut() = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Take the recorded dispatch trace (artifact names in dispatch
+    /// order), stopping the recording.
+    pub fn take_trace(&self) -> Vec<String> {
+        self.trace.borrow_mut().take().unwrap_or_default()
+    }
+
+    fn record_dispatch(&self, name: &str) {
+        if let Some(t) = self.trace.borrow_mut().as_mut() {
+            t.push(name.to_string());
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -165,8 +194,11 @@ impl Executor {
         {
             let mut s = self.stats.borrow_mut();
             s.dispatches += 1;
+            s.uploads += inputs.len() as u64;
+            s.fetches += 1;
             s.execute_secs += t0.elapsed().as_secs_f64();
         }
+        self.record_dispatch(name);
         // aot.py lowers with return_tuple=False (§Perf iteration 2): the
         // output is a bare array buffer; tuple outputs (older artifact
         // sets) are still handled for compatibility.
@@ -193,12 +225,14 @@ impl Executor {
             .client
             .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
             .context("host->device transfer")?;
+        self.stats.borrow_mut().uploads += 1;
         Ok(DeviceTensor { shape: t.shape.clone(), buf })
     }
 
     /// Download a device tensor.
     pub fn fetch(&self, d: &DeviceTensor) -> anyhow::Result<Tensor> {
         let lit = d.buf.to_literal_sync()?;
+        self.stats.borrow_mut().fetches += 1;
         Ok(Tensor::new(d.shape.clone(), lit.to_vec::<f32>()?))
     }
 
@@ -229,6 +263,7 @@ impl Executor {
             s.dispatches += 1;
             s.execute_secs += t0.elapsed().as_secs_f64();
         }
+        self.record_dispatch(name);
         Ok(DeviceTensor { shape: meta.outputs[0].clone(), buf: out[0].remove(0) })
     }
 
@@ -312,6 +347,26 @@ mod tests {
             let sum: f32 = p.data[r * 128..(r + 1) * 128].iter().sum();
             assert!((sum - 1.0).abs() < 1e-5, "row {r}: {sum}");
         }
+    }
+
+    #[test]
+    fn trace_and_transfer_counters() {
+        require_artifacts!();
+        let e = exec();
+        e.trace_dispatches(true);
+        let x = Tensor::zeros(vec![128, 64]);
+        let w = Tensor::zeros(vec![64, 64]);
+        let acc = Tensor::zeros(vec![128, 64]);
+        let xd = e.to_device(&x).unwrap();
+        let wd = e.to_device(&w).unwrap();
+        let ad = e.to_device(&acc).unwrap();
+        let out = e.run_dev("mm_qkv", &[&xd, &wd, &ad]).unwrap();
+        let _ = e.fetch(&out).unwrap();
+        assert_eq!(e.take_trace(), vec!["mm_qkv".to_string()]);
+        let st = e.stats();
+        assert_eq!(st.uploads, 3);
+        assert_eq!(st.fetches, 1);
+        assert!(e.take_trace().is_empty(), "take_trace stops the recording");
     }
 
     #[test]

@@ -9,11 +9,16 @@
 //!
 //! * [`artifact`] — manifest parsing, artifact inventory, staleness check.
 //! * [`executor`] — compile-once executable cache + typed execution.
+//! * [`backend`] — the [`FabricBackend`] substrate trait a lowered
+//!   `TileProgram` replays against (PJRT here; the cycle model in
+//!   `accel::sim::cycle`).
 
 pub mod artifact;
+pub mod backend;
 pub mod executor;
 
 pub use artifact::{ArtifactMeta, Manifest};
+pub use backend::FabricBackend;
 pub use executor::{DeviceTensor, Executor, Tensor};
 
 /// Default artifact directory relative to the repo root.

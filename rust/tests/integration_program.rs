@@ -1,0 +1,182 @@
+//! Program/backend equivalence: the PJRT executor and the cycle backend
+//! must replay the *same* `TileProgram` with identical dispatch counts and
+//! artifact sequences (one schedule, two substrates — the tentpole
+//! contract), and the schedule cache must turn the request path into
+//! "look up program, replay".
+
+use adaptor::accel::schedule::{AttentionMode, ScheduleBuilder};
+use adaptor::accel::sim::cycle;
+use adaptor::coordinator::TileEngine;
+use adaptor::model::{presets, reference, weights, TnnConfig};
+use adaptor::runtime::default_artifact_dir;
+
+use adaptor::require_artifacts;
+
+fn engine() -> TileEngine {
+    TileEngine::new(default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+/// Sweep of topologies legal on the default fabric (seq_len, heads and
+/// layer count all vary — the property the IR must hold across the space).
+fn topology_sweep() -> Vec<TnnConfig> {
+    vec![
+        TnnConfig::encoder(16, 128, 2, 1),
+        TnnConfig::encoder(32, 256, 4, 2),
+        TnnConfig::encoder(48, 128, 2, 3),
+        TnnConfig::encoder(64, 384, 6, 1),
+        TnnConfig::encoder(128, 128, 2, 1),
+    ]
+}
+
+#[test]
+fn pjrt_and_cycle_backend_replay_identical_streams() {
+    require_artifacts!();
+    let mut e = engine();
+    for cfg in topology_sweep() {
+        let ws = weights::init_stack(77, cfg.d_model, cfg.heads, cfg.enc_layers);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(78, cfg.seq_len, cfg.d_model);
+
+        e.executor().trace_dispatches(true);
+        e.run_encoder(&p, &x).unwrap();
+        let pjrt_trace = e.executor().take_trace();
+
+        let rep = e.cycle_estimate(&cfg).unwrap();
+        assert_eq!(
+            pjrt_trace.len(),
+            rep.dispatches as usize,
+            "{cfg}: dispatch counts diverge between backends"
+        );
+        assert_eq!(pjrt_trace, rep.trace, "{cfg}: artifact sequences diverge");
+
+        // both must also agree with the program's own stream
+        let prog = e.cached_program(&cfg).unwrap();
+        let want: Vec<String> =
+            prog.program.dispatch_sequence().iter().map(|s| s.to_string()).collect();
+        assert_eq!(pjrt_trace, want, "{cfg}: PJRT strayed from the program");
+    }
+}
+
+#[test]
+fn equivalence_holds_across_modes_and_packing() {
+    require_artifacts!();
+    let mut e = engine();
+    let cfg = presets::small_encoder(32, 1);
+    let ws = weights::init_stack(79, cfg.d_model, cfg.heads, 1);
+    e.program(&cfg).unwrap();
+    let p = e.prepare(&cfg, &ws).unwrap();
+    let x = weights::init_input(80, cfg.seq_len, cfg.d_model);
+    for (mode, packed, quantized) in [
+        (AttentionMode::Fused, false, false),
+        (AttentionMode::Split, true, false),
+        (AttentionMode::Split, false, true),
+    ] {
+        e.mode = mode;
+        e.qkv_packed = packed;
+        e.quantized = quantized;
+        e.executor().trace_dispatches(true);
+        e.run_encoder(&p, &x).unwrap();
+        let pjrt_trace = e.executor().take_trace();
+        let rep = e.cycle_estimate(&cfg).unwrap();
+        assert_eq!(
+            pjrt_trace, rep.trace,
+            "mode={mode:?} packed={packed} quantized={quantized}"
+        );
+    }
+}
+
+#[test]
+fn cached_replay_drops_per_request_transfers() {
+    require_artifacts!();
+    // The old engine re-uploaded the full padded x per layer plus the
+    // mask/dmask/count/zero tensors per request.  The program does
+    // neither: uploads per replay == the program's Upload/Calibrate steps,
+    // and the formula below contains no full-x term beyond the input.
+    let mut e = engine();
+    let cfg = presets::small_encoder(32, 3);
+    let ws = weights::init_stack(81, cfg.d_model, cfg.heads, cfg.enc_layers);
+    e.program(&cfg).unwrap();
+    let p = e.prepare(&cfg, &ws).unwrap();
+    let x = weights::init_input(82, cfg.seq_len, cfg.d_model);
+
+    let s0 = e.executor().stats();
+    e.run_encoder(&p, &x).unwrap(); // builds + uploads runtime tensors
+    let s1 = e.executor().stats();
+    e.run_encoder(&p, &x).unwrap(); // pure replay
+    let s2 = e.executor().stats();
+
+    let fc = e.fabric_constants();
+    let t_m = cfg.d_model / fc.ts_mha;
+    let t_f = cfg.d_model / fc.ts_ffn;
+    let t_h = cfg.hidden / fc.ffn_col;
+    let l = cfg.enc_layers;
+    // 1 padded input + per-layer activation panels and assemblies — and
+    // NOT the old l-1 extra full-x uploads nor the 8 runtime tensors.
+    let expected = (1 + l * (t_m + 2 * t_f + t_h + 3)) as u64;
+    assert_eq!(s2.uploads - s1.uploads, expected, "replay upload count");
+    assert_eq!(
+        s1.uploads - s0.uploads,
+        expected + 8,
+        "first request additionally uploads the 8 per-topology runtime tensors"
+    );
+    let naive = expected + 8 + (l as u64 - 1); // what the loop-nest engine paid
+    assert!(s2.uploads - s1.uploads < naive, "the transfer drop must be real");
+
+    let prog = e.cached_program(&cfg).unwrap();
+    assert_eq!(prog.program.upload_count() as u64, expected);
+    assert_eq!(s2.fetches - s1.fetches, prog.program.fetch_count() as u64);
+    assert_eq!(s2.dispatches - s1.dispatches, prog.program.dispatch_count() as u64);
+}
+
+#[test]
+fn cache_hit_on_repeated_requests_same_numerics() {
+    require_artifacts!();
+    let mut e = engine();
+    let cfg = TnnConfig::encoder(48, 256, 4, 2);
+    let ws = weights::init_stack(83, cfg.d_model, cfg.heads, 2);
+    e.program(&cfg).unwrap();
+    let p = e.prepare(&cfg, &ws).unwrap();
+    let x = weights::init_input(84, cfg.seq_len, cfg.d_model);
+    let a = e.run_encoder(&p, &x).unwrap();
+    let b = e.run_encoder(&p, &x).unwrap();
+    let c = e.run_encoder(&p, &x).unwrap();
+    assert_eq!(e.program_cache_stats(), (2, 1), "(hits, misses)");
+    assert!(a.max_abs_diff(&b) < 1e-6);
+    assert!(b.max_abs_diff(&c) < 1e-6);
+    // and the cached replay still matches the dense oracle
+    let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
+    let want = reference::encoder_stack(&x, &ws, &mask);
+    assert!(a.max_abs_diff(&want) < 3e-3);
+}
+
+#[test]
+fn programs_for_shared_topology_are_shared_across_models() {
+    require_artifacts!();
+    // two different weight stacks, one topology: one cached program
+    let mut e = engine();
+    let cfg = presets::small_encoder(32, 1);
+    let ws1 = weights::init_stack(85, cfg.d_model, cfg.heads, 1);
+    let ws2 = weights::init_stack(86, cfg.d_model, cfg.heads, 1);
+    e.program(&cfg).unwrap();
+    let p1 = e.prepare(&cfg, &ws1).unwrap();
+    let p2 = e.prepare(&cfg, &ws2).unwrap();
+    let x = weights::init_input(87, cfg.seq_len, cfg.d_model);
+    let o1 = e.run_encoder(&p1, &x).unwrap();
+    let o2 = e.run_encoder(&p2, &x).unwrap();
+    assert_eq!(e.program_cache_stats(), (1, 1), "second stack hits the same program");
+    assert!(o1.max_abs_diff(&o2) > 1e-6, "different weights, different outputs");
+}
+
+#[test]
+fn cycle_estimate_needs_no_artifacts() {
+    // the schedule-grounded estimate must work without the AOT set — the
+    // design-space tools rely on it (this test intentionally does NOT
+    // require_artifacts).
+    let fc = adaptor::accel::schedule::FabricConstants::artifact_default();
+    let cfg = TnnConfig::encoder(64, 512, 8, 6);
+    let prog = ScheduleBuilder::new(fc, cfg).unwrap().build();
+    let rep = cycle::replay_program(&prog).unwrap();
+    assert_eq!(rep.dispatches as usize, prog.dispatch_count());
+    assert!(rep.total_cycles > 0);
+}
