@@ -78,6 +78,9 @@ def _primitive_fns() -> Dict[str, Callable]:
         "bias_add_d": lambda x, b: kernels.bias_add(x, b),
         "bias_relu_h": lambda x, b: kernels.bias_add(x, b, relu=True),
         "residual_ln": kernels.residual_ln,
+        "bias_residual_ln": lambda x, b, res, g, bn, m, c: kernels.residual_ln(
+            kernels.bias_add(x, b), res, g, bn, m, c
+        ),
         "quantize": kernels.quantize_dequantize,
     }
 

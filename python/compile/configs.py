@@ -149,6 +149,15 @@ def tile_primitive_specs() -> List[ArtifactSpec]:
         [(SL_MAX, DMODEL_MAX)],
         "masked LayerNorm(x + residual) with runtime-valid dim count (Algorithm 8)"))
     s.append(ArtifactSpec(
+        "bias_residual_ln",
+        [(SL_MAX, DMODEL_MAX), (DMODEL_MAX,), (SL_MAX, DMODEL_MAX),
+         (DMODEL_MAX,), (DMODEL_MAX,), (DMODEL_MAX,), (1,)],
+        [(SL_MAX, DMODEL_MAX)],
+        "fused Algorithm 16 + 8: bias add then masked residual LayerNorm in "
+        "one dispatch (x, bias, residual, gamma, beta, dmask, count) — the "
+        "dispatch-fusion target of the rust pass pipeline "
+        "(accel::schedule::opt::FuseBiasLn)"))
+    s.append(ArtifactSpec(
         "quantize",
         [(SL_MAX, DMODEL_MAX), (1,)],
         [(SL_MAX, DMODEL_MAX)],

@@ -1,21 +1,95 @@
 //! Hot-path bench: the L3 request path over PJRT — tile dispatch cost,
-//! per-layer cost, attention-mode ablation (split vs fused), tiled vs
-//! fused-layer artifacts, and end-to-end inference.  This is the bench the
-//! §Perf optimization loop iterates against (EXPERIMENTS.md §Perf).
+//! per-layer cost, attention-mode ablation (split vs fused), optimized
+//! (wave-scheduled/fused) vs raw TileProgram replay, tiled vs fused-layer
+//! artifacts, and end-to-end inference.  This is the bench the §Perf
+//! optimization loop iterates against (EXPERIMENTS.md §Perf).
+//!
+//! Every run — with or without the AOT artifact set — writes
+//! `BENCH_hotpath.json` (machine-readable p50/p95/p99 per bench via
+//! `util::benchkit::write_json`) so the perf trajectory is tracked across
+//! PRs.  Without artifacts only the compiler/cycle-backend sections run.
 
+use adaptor::accel::schedule::{
+    optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder,
+};
+use adaptor::accel::sim::cycle;
 use adaptor::coordinator::{AttentionMode, TileEngine};
 use adaptor::model::{presets, weights, TnnConfig};
-use adaptor::runtime::{default_artifact_dir, Tensor};
-use adaptor::util::benchkit::{bench, header};
+use adaptor::runtime::{artifacts_available, default_artifact_dir, Tensor};
+use adaptor::util::benchkit::{bench, header, write_json, BenchResult};
 
-fn main() -> anyhow::Result<()> {
+const JSON_PATH: &str = "BENCH_hotpath.json";
+
+/// Compiler + cycle-backend section: runs without any artifact set.
+fn bench_schedule_compiler(results: &mut Vec<BenchResult>) {
+    let fc = FabricConstants::artifact_default();
+    let cfg = presets::small_encoder(64, 4);
+    let build = || ScheduleBuilder::new(fc, cfg).unwrap().build();
+
+    println!("== schedule compiler (artifact-free) ==");
+    println!("{}", header());
+    let r = bench("compile/build_program_4layer", 3, 50, || {
+        std::hint::black_box(build());
+    });
+    println!("{}", r.line());
+    results.push(r);
+    let r = bench("compile/optimize_o2_4layer", 3, 50, || {
+        let mut p = build();
+        optimize(&mut p, OptLevel::O2, &ArtifactInventory::assume_all()).unwrap();
+        std::hint::black_box(p);
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    let raw = build();
+    let mut opt = build();
+    let report = optimize(&mut opt, OptLevel::O2, &ArtifactInventory::assume_all()).unwrap();
+    let r = bench("cycle/replay_raw_4layer", 3, 30, || {
+        std::hint::black_box(cycle::replay_program(&raw).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+    let r = bench("cycle/replay_waves_4layer", 3, 30, || {
+        std::hint::black_box(cycle::replay_program_waves(&opt).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    let seq = cycle::replay_program(&raw).unwrap();
+    let waved = cycle::replay_program_waves(&opt).unwrap();
+    println!(
+        "\nprogram opt ({}): dispatches+uploads {}+{} -> {}+{}, slots {} -> {}, {} waves (max {} concurrent dispatches)",
+        report
+            .applied
+            .iter()
+            .map(|(n, c)| format!("{n}:{c}"))
+            .collect::<Vec<_>>()
+            .join(" "),
+        raw.dispatch_count(),
+        raw.upload_count(),
+        opt.dispatch_count(),
+        opt.upload_count(),
+        raw.n_slots,
+        opt.n_slots,
+        opt.wave_count(),
+        opt.max_wave_dispatches(),
+    );
+    println!(
+        "cycle estimate: sequential {} -> wave-priced {} predicted cycles ({:.1}% cut)\n",
+        seq.total_cycles,
+        waved.total_cycles,
+        100.0 * (1.0 - waved.total_cycles as f64 / seq.total_cycles as f64),
+    );
+}
+
+fn bench_pjrt(results: &mut Vec<BenchResult>) -> anyhow::Result<()> {
     let mut engine = TileEngine::new(default_artifact_dir())?;
     let exec_names =
         ["mm_qkv", "mm_ffn1", "mm_ffn2", "mm_ffn3", "qk_scores", "softmax", "sv", "attn_fused",
          "bias_add_dk", "bias_add_d", "bias_relu_h", "residual_ln"];
     engine.executor().warmup(&exec_names)?;
 
-    println!("== hot path ==");
+    println!("== hot path (PJRT) ==");
     println!("{}", header());
 
     // --- single tile dispatch (the innermost hot operation)
@@ -28,6 +102,7 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(e.run1("mm_qkv", &[&x, &w, &acc]).unwrap());
         });
         println!("{}", r.line());
+        results.push(r);
     }
     {
         let x = Tensor::zeros(vec![128, 128]);
@@ -38,6 +113,7 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(e.run1("mm_ffn2", &[&x, &w, &acc]).unwrap());
         });
         println!("{}", r.line());
+        results.push(r);
     }
     {
         let q = Tensor::zeros(vec![128, 64]);
@@ -48,22 +124,44 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(e.run1("attn_fused", &[&q, &q, &q, &m, &s]).unwrap());
         });
         println!("{}", r.line());
+        results.push(r);
     }
 
-    // --- full encoder layer, split vs fused attention (ablation)
+    // --- full encoder layer: attention mode × opt level (the tentpole
+    // comparison: raw replay vs the optimized program the pool serves)
     let cfg = presets::small_encoder(64, 1);
     let ws = weights::init_stack(1, cfg.d_model, cfg.heads, 1);
     engine.program(&cfg)?;
     let prepared = engine.prepare(&cfg, &ws)?;
     let x = weights::init_input(2, cfg.seq_len, cfg.d_model);
-    for mode in [AttentionMode::Split, AttentionMode::Fused] {
+    for (mode, level) in [
+        (AttentionMode::Split, OptLevel::O0),
+        (AttentionMode::Split, OptLevel::O2),
+        (AttentionMode::Fused, OptLevel::O0),
+        (AttentionMode::Fused, OptLevel::O2),
+    ] {
         engine.mode = mode;
-        let name = format!("layer/small_encoder_{mode:?}");
-        let r = bench(&name, 2, 30, || {
+        engine.opt_level = level;
+        engine.run_encoder(&prepared, &x)?; // warm the program cache
+        let s0 = engine.executor().stats();
+        let name = format!("layer/small_encoder_{mode:?}_{level:?}");
+        // no bench-warmup runs: the stats delta below must cover exactly
+        // the 30 timed replays
+        let r = bench(&name, 0, 30, || {
             std::hint::black_box(engine.run_encoder(&prepared, &x).unwrap());
         });
+        let s1 = engine.executor().stats();
         println!("{}", r.line());
+        results.push(r);
+        let per = |a: u64, b: u64| (b - a) / 30;
+        println!(
+            "    ({} dispatches + {} uploads per replay)",
+            per(s0.dispatches, s1.dispatches),
+            per(s0.uploads, s1.uploads),
+        );
     }
+    engine.mode = AttentionMode::Split;
+    engine.opt_level = OptLevel::O2;
 
     // --- tiled engine vs fused per-config artifact (adaptivity tax)
     {
@@ -71,6 +169,7 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(engine.run_fused_stack("small_layer", &x, &ws).unwrap());
         });
         println!("{}", r.line());
+        results.push(r);
     }
 
     // --- end-to-end 4-layer model
@@ -84,6 +183,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(engine.run_encoder(&prep4, &x4).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 
     // --- bigger topology (BERT-ish single layer at runtime maxima)
     let cfg_b = TnnConfig::encoder(128, 768, 12, 1);
@@ -95,6 +195,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(engine.run_encoder(&prep_b, &x_b).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 
     // --- schedule cache: the request path is "look up program, replay"
     {
@@ -102,17 +203,36 @@ fn main() -> anyhow::Result<()> {
         println!(
             "\nprogram cache: {hits} hits / {misses} misses (every post-warmup request replays a cached TileProgram)"
         );
+        let (phits, pmisses) = engine.tensor_pool_stats();
+        println!("host-scratch pool: {phits} hits / {pmisses} misses");
         let rep = engine.cycle_estimate(&cfg4)?;
+        let waved = engine.cycle_estimate_waves(&cfg4)?;
         println!(
-            "schedule replay (cycle backend, identical program): {} predicted cycles over {} dispatches for small_encoder_4layer",
-            rep.total_cycles, rep.dispatches
+            "schedule replay (cycle backend, identical program): {} predicted cycles over {} dispatches; wave-priced: {}",
+            rep.total_cycles, rep.dispatches, waved.total_cycles
         );
     }
 
     let st = engine.executor().stats();
     println!(
-        "\ntotals: {} dispatches, {} uploads, {} fetches, {} compiles, {:.2}s inside PJRT execute",
-        st.dispatches, st.uploads, st.fetches, st.compiles, st.execute_secs
+        "\ntotals: {} dispatches, {} uploads ({} zero-pool hits), {} fetches, {} compiles, {:.2}s inside PJRT execute",
+        st.dispatches, st.uploads, st.pool_hits, st.fetches, st.compiles, st.execute_secs
     );
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut results: Vec<BenchResult> = Vec::new();
+    bench_schedule_compiler(&mut results);
+    let pjrt = if artifacts_available() {
+        bench_pjrt(&mut results)
+    } else {
+        println!("artifacts/ not present — skipping the PJRT sections (run `make artifacts`)");
+        Ok(())
+    };
+    // Written even when the PJRT section errored: the artifact-free
+    // results collected so far are still a tracked data point.
+    write_json(JSON_PATH, &results)?;
+    println!("\nwrote {JSON_PATH} ({} benches)", results.len());
+    pjrt
 }

@@ -418,6 +418,7 @@ impl ScheduleBuilder {
             drops: Vec::new(),
             host_drops: Vec::new(),
             host_init: Vec::new(),
+            waves: Vec::new(),
         };
         prog.finalize();
         prog

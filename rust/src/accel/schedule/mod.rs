@@ -19,6 +19,12 @@
 //! (software-built instruction stream, fixed hardware) and AccelTran's
 //! simulate-what-you-execute discipline.
 //!
+//! Before a program is cached, the [`opt`] pass pipeline rewrites it
+//! (transfer dedup, dispatch fusion into the manifest's fused artifacts,
+//! **wave scheduling** — contiguous groups of mutually independent
+//! instructions, the PE-array parallelism analog — and slot compaction);
+//! see DESIGN.md §Program optimization.
+//!
 //! The instruction set mirrors what the fabric substrate can do:
 //!
 //! * [`Step::Upload`] / [`Step::Fetch`] — host ↔ device (AXI DMA analog);
@@ -38,8 +44,10 @@
 //! time, so one program serves every model with the same topology.
 
 pub mod builder;
+pub mod opt;
 
 pub use builder::ScheduleBuilder;
+pub use opt::{optimize, ArtifactInventory, OptLevel, OptReport};
 
 use anyhow::{anyhow, bail};
 
@@ -270,6 +278,11 @@ pub struct TileProgram {
     /// whose padded tail must stay zero).  Slots first touched by a full
     /// overwrite (`Fetch`/`ExtractPanel` dst) skip the allocation+memset.
     host_init: Vec<bool>,
+    /// Wave partition from `opt::ScheduleWaves`: `waves[k]` is the
+    /// exclusive end index of wave `k` in `steps` (cumulative).  Members
+    /// of one wave are mutually independent (see `opt::validate_waves`).
+    /// Empty for an unscheduled program — strictly sequential semantics.
+    waves: Vec<usize>,
 }
 
 impl TileProgram {
@@ -387,6 +400,40 @@ impl TileProgram {
             })
             .collect()
     }
+
+    /// Number of waves the optimizer partitioned the stream into
+    /// (0 for an unscheduled program).
+    pub fn wave_count(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// The step range of each wave, in execution order.  Empty when the
+    /// program has not been wave-scheduled.
+    pub fn wave_ranges(&self) -> Vec<std::ops::Range<usize>> {
+        let mut out = Vec::with_capacity(self.waves.len());
+        let mut start = 0usize;
+        for &end in &self.waves {
+            out.push(start..end);
+            start = end;
+        }
+        out
+    }
+
+    /// Maximum number of dispatches sharing one wave — the peak module
+    /// parallelism the schedule exposes (1 for an unscheduled program
+    /// with any dispatch at all).
+    pub fn max_wave_dispatches(&self) -> usize {
+        if self.waves.is_empty() {
+            return usize::from(self.dispatch_count() > 0);
+        }
+        self.wave_ranges()
+            .into_iter()
+            .map(|r| {
+                self.steps[r].iter().filter(|s| matches!(s, Step::Dispatch { .. })).count()
+            })
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 /// Resolves symbolic weight references for one backend's buffer type.
@@ -448,21 +495,26 @@ pub fn runtime_tensor(id: RuntimeId, cfg: &TnnConfig, fc: &FabricConstants) -> T
 
 /// Build (upload) the runtime tensor set on `backend`.  The engine calls
 /// this once per topology and caches the result next to the program.
+/// The four zero accumulators are topology-independent (fabric-shape
+/// constants) and go through [`FabricBackend::upload_zeros`], so a
+/// backend with a device zero pool shares one buffer per shape across
+/// every programmed topology.
 pub fn build_runtime<B: FabricBackend>(
     backend: &B,
     cfg: &TnnConfig,
     fc: &FabricConstants,
 ) -> anyhow::Result<RuntimeBufs<B::Buf>> {
     let up = |id: RuntimeId| backend.upload(&runtime_tensor(id, cfg, fc));
+    let zeros = |id: RuntimeId| backend.upload_zeros(&runtime_tensor(id, cfg, fc).shape);
     Ok(RuntimeBufs {
         mask: up(RuntimeId::Mask)?,
         scale: up(RuntimeId::Scale)?,
         dmask: up(RuntimeId::Dmask)?,
         count: up(RuntimeId::Count)?,
-        zero_dk: up(RuntimeId::ZeroDk)?,
-        zero_ffn: up(RuntimeId::ZeroFfn)?,
-        zero_col: up(RuntimeId::ZeroCol)?,
-        zero_qkv3: up(RuntimeId::ZeroQkv3)?,
+        zero_dk: zeros(RuntimeId::ZeroDk)?,
+        zero_ffn: zeros(RuntimeId::ZeroFfn)?,
+        zero_col: zeros(RuntimeId::ZeroCol)?,
+        zero_qkv3: zeros(RuntimeId::ZeroQkv3)?,
     })
 }
 
@@ -475,6 +527,41 @@ pub fn col_panel(x: &Tensor, c0: usize, width: usize) -> Tensor {
         data.extend_from_slice(&x.data[r * cols + c0..r * cols + c0 + width]);
     }
     Tensor::new(vec![rows, width], data)
+}
+
+/// [`col_panel`] into a preallocated `[rows, width]` destination (pooled
+/// host scratch on the request path — no allocation per panel).
+pub fn col_panel_into(x: &Tensor, c0: usize, width: usize, dst: &mut Tensor) {
+    let rows = x.shape[0];
+    let cols = x.shape[1];
+    debug_assert_eq!(dst.shape, vec![rows, width]);
+    for r in 0..rows {
+        dst.data[r * width..(r + 1) * width]
+            .copy_from_slice(&x.data[r * cols + c0..r * cols + c0 + width]);
+    }
+}
+
+/// Write `m` into the top-left corner of an (already zeroed) padded
+/// tensor — `Mat::padded` into pooled scratch, no allocation.
+pub fn pad_into(m: &crate::model::weights::Mat, dst: &mut Tensor) {
+    let cols = dst.shape[1];
+    debug_assert!(m.rows <= dst.shape[0] && m.cols <= cols, "pad_into cannot shrink");
+    for r in 0..m.rows {
+        dst.data[r * cols..r * cols + m.cols]
+            .copy_from_slice(&m.data[r * m.cols..(r + 1) * m.cols]);
+    }
+}
+
+/// Crop the top-left `rows × cols` block of a padded 2-D tensor into a
+/// `Mat` — `to_mat().block(0, 0, ..)` without the intermediate clone.
+pub fn crop_to_mat(t: &Tensor, rows: usize, cols: usize) -> crate::model::weights::Mat {
+    let stride = t.shape[1];
+    debug_assert!(rows <= t.shape[0] && cols <= stride, "crop_to_mat cannot grow");
+    let mut m = crate::model::weights::Mat::zeros(rows, cols);
+    for r in 0..rows {
+        m.data[r * cols..(r + 1) * cols].copy_from_slice(&t.data[r * stride..r * stride + cols]);
+    }
+    m
 }
 
 /// Write `src` `[rows, width]` into columns `c0..` of `dst`.
@@ -499,10 +586,37 @@ pub fn replay<B: FabricBackend>(
     runtime: &RuntimeBufs<B::Buf>,
     input: Tensor,
 ) -> anyhow::Result<Tensor> {
+    replay_with(prog, backend, weights, runtime, input, None)
+}
+
+/// [`replay`] with an optional host-scratch pool: every transient host
+/// tensor (panel extracts, zero-initialized assemblies, dropped scratch)
+/// is drawn from / returned to `pool`, so a steady-state request path
+/// allocates nothing host-side.  Wave-scheduled programs additionally
+/// fire [`FabricBackend::wave_begin`]/[`FabricBackend::wave_end`] at wave
+/// boundaries; execution inside a wave stays sequential (the hooks let
+/// pricing backends model the parallelism without changing numerics).
+pub fn replay_with<B: FabricBackend>(
+    prog: &TileProgram,
+    backend: &B,
+    weights: &dyn WeightSource<B::Buf>,
+    runtime: &RuntimeBufs<B::Buf>,
+    input: Tensor,
+    pool: Option<&crate::runtime::pool::TensorPool>,
+) -> anyhow::Result<Tensor> {
     let want = vec![prog.fabric.sl_max, prog.fabric.dmodel_max];
     if input.shape != want {
         bail!("replay input shape {:?} != padded fabric shape {:?}", input.shape, want);
     }
+    let take_zeroed = |shape: &[usize]| match pool {
+        Some(p) => p.take_zeroed(shape),
+        None => Tensor::zeros(shape.to_vec()),
+    };
+    let recycle = |t: Tensor| {
+        if let Some(p) = pool {
+            p.put(t);
+        }
+    };
     // Materialize only the host slots whose first touch needs real zeros;
     // the rest start as empty placeholders and are assigned whole.
     let mut hosts: Vec<Tensor> = prog
@@ -511,7 +625,7 @@ pub fn replay<B: FabricBackend>(
         .enumerate()
         .map(|(i, s)| {
             if prog.host_init[i] {
-                Tensor::zeros(s.clone())
+                take_zeroed(s)
             } else {
                 Tensor::zeros(vec![0])
             }
@@ -520,8 +634,16 @@ pub fn replay<B: FabricBackend>(
     hosts[prog.input_host] = input;
     let mut slots: Vec<Option<B::Buf>> = Vec::with_capacity(prog.n_slots);
     slots.resize_with(prog.n_slots, || None);
+    // Wave boundaries (cumulative end indices); empty → no hooks.
+    let mut wave = 0usize;
+    let mut wave_start = 0usize;
 
     for (i, step) in prog.steps.iter().enumerate() {
+        if let Some(&end) = prog.waves.get(wave) {
+            if i == wave_start {
+                backend.wave_begin(wave, end - wave_start);
+            }
+        }
         match step {
             Step::Upload { host, dst } => {
                 slots[*dst] = Some(backend.upload(&hosts[*host])?);
@@ -546,10 +668,19 @@ pub fn replay<B: FabricBackend>(
                 let buf = slots[*src]
                     .as_ref()
                     .ok_or_else(|| anyhow!("step {i}: fetch of freed slot {src}"))?;
-                hosts[*host] = backend.fetch(buf)?;
+                let fetched = backend.fetch(buf)?;
+                recycle(std::mem::replace(&mut hosts[*host], fetched));
             }
             Step::ExtractPanel { src, c0, width, dst } => {
-                hosts[*dst] = col_panel(&hosts[*src], *c0, *width);
+                let panel = match pool {
+                    Some(p) => {
+                        let mut t = p.take_uninit(&prog.host_shapes[*dst]);
+                        col_panel_into(&hosts[*src], *c0, *width, &mut t);
+                        t
+                    }
+                    None => col_panel(&hosts[*src], *c0, *width),
+                };
+                recycle(std::mem::replace(&mut hosts[*dst], panel));
             }
             Step::AssemblePanel { src, dst, c0 } => {
                 let (s, d) = (*src, *dst);
@@ -576,7 +707,14 @@ pub fn replay<B: FabricBackend>(
             slots[*s] = None;
         }
         for h in &prog.host_drops[i] {
-            hosts[*h] = Tensor::zeros(vec![0]);
+            recycle(std::mem::replace(&mut hosts[*h], Tensor::zeros(vec![0])));
+        }
+        if let Some(&end) = prog.waves.get(wave) {
+            if i + 1 == end {
+                backend.wave_end();
+                wave_start = end;
+                wave += 1;
+            }
         }
     }
     // The output host is excluded from host_drops, so it can be moved out.
@@ -745,5 +883,20 @@ mod tests {
         let mut y = Tensor::zeros(vec![2, 4]);
         set_col_panel(&mut y, &p, 1);
         assert_eq!(y.data, vec![0.0, 1.0, 2.0, 0.0, 0.0, 5.0, 6.0, 0.0]);
+        let mut q = Tensor::zeros(vec![2, 2]);
+        col_panel_into(&x, 1, 2, &mut q);
+        assert_eq!(q.data, p.data, "col_panel_into must match col_panel");
+    }
+
+    #[test]
+    fn pad_and_crop_match_the_mat_round_trip() {
+        use crate::model::weights::Mat;
+        let m = Mat { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        let mut padded = Tensor::zeros(vec![4, 5]);
+        pad_into(&m, &mut padded);
+        assert_eq!(Tensor::from_mat(&m.padded(4, 5)), padded);
+        let back = crop_to_mat(&padded, 2, 3);
+        assert_eq!(back.data, m.data);
+        assert_eq!((back.rows, back.cols), (2, 3));
     }
 }

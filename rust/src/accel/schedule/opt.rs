@@ -1,0 +1,925 @@
+//! The **TileProgram optimizer**: a pass manager over the flat instruction
+//! stream of [`TileProgram`].
+//!
+//! The builder emits whatever the §3.9 loop nests produce — correct, but
+//! strictly sequential and transfer-naive.  The paper's latency story is
+//! *utilization*: independent processing modules run concurrently and data
+//! stays in BRAM between modules.  This module recovers the software
+//! analog of both as a pure compiler problem over the IR from PR 2:
+//!
+//! * [`DedupTransfers`] — redundant-transfer elimination.  An upload of a
+//!   host scratch whose current contents already live in a device slot
+//!   (an identical earlier upload, or a fetch of that very slot) is
+//!   deleted and its slot aliased; duplicate panel extractions collapse.
+//!   Bit-exact: the replaced slot holds bit-identical data.
+//! * [`FuseAttention`] / [`FuseBiasLn`] — dispatch fusion.  A
+//!   `qk_scores → softmax → sv` chain whose intermediates have no other
+//!   reader collapses into one `attn_fused` dispatch; `bias_add_d →
+//!   residual_ln` collapses into `bias_residual_ln`.  Applied only when
+//!   the bound artifact set actually contains the fused artifact
+//!   ([`ArtifactInventory`]), because fusion changes *which* programs run
+//!   (numerics equivalent within the fused artifacts' tolerance, not
+//!   bit-for-bit — hence [`OptLevel::O2`], not O1).
+//! * [`ScheduleWaves`] — the wave scheduler: partitions the stream into
+//!   **waves** of mutually independent instructions (ASAP list
+//!   scheduling over the slot/host dependence graph) and reorders the
+//!   stream so each wave is contiguous.  A wave is the PE-array
+//!   parallelism analog: every member could execute concurrently on the
+//!   fabric.  Replay remains sequential on the PJRT backend (bit-exact —
+//!   it is a legal topological reorder), while the cycle backend may
+//!   price a wave as `max` instead of `sum` over its members
+//!   (`accel::sim::cycle::replay_program_waves`).
+//! * [`CompactSlots`] — slot renaming from the same last-use analysis
+//!   replay drops are computed from: device slot ids are renumbered with
+//!   a linear-scan free list so `n_slots` shrinks from "one id per value"
+//!   to the peak number of simultaneously live values.
+//!
+//! Legality rules (enforced by [`validate_waves`] after every pipeline
+//! run): instruction B may share a wave with an earlier instruction A only
+//! if B reads no slot/host A writes (RAW), writes none A reads (WAR) and
+//! writes none A writes (WAW).  Panel assemblies into one host are
+//! WAW-chained even though their column ranges are disjoint, keeping the
+//! reorder bit-exact without reasoning about overlap.
+//!
+//! `TileEngine` runs the pipeline once per `(topology, flags, opt-level)`
+//! and caches the optimized program; the request path replays it
+//! unchanged.
+
+use std::collections::{BTreeSet, HashMap};
+
+use anyhow::bail;
+
+use super::{Operand, SlotId, Step, TileProgram};
+
+/// Optimization level — part of the engine's program-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum OptLevel {
+    /// The builder's raw stream, untouched.
+    O0,
+    /// Bit-exact passes only: transfer dedup, wave scheduling, slot
+    /// compaction.  Replay output is bit-identical to O0.
+    O1,
+    /// O1 plus dispatch fusion into the fused artifacts the bound
+    /// artifact set provides (numerics within the fused kernels'
+    /// tolerance; the serving default).
+    #[default]
+    O2,
+}
+
+/// The artifact names a fabric actually provides — fusion rewrites only
+/// into artifacts that exist, so one optimized program never outruns the
+/// artifact set it will replay against.
+#[derive(Debug, Clone)]
+pub struct ArtifactInventory {
+    names: BTreeSet<String>,
+}
+
+impl ArtifactInventory {
+    pub fn from_names<I, S>(names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        ArtifactInventory { names: names.into_iter().map(Into::into).collect() }
+    }
+
+    /// The inventory of a loaded artifact set.
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
+        Self::from_names(m.artifacts.keys().cloned())
+    }
+
+    /// Every artifact the builder or the fusion passes can emit — for
+    /// manifest-free consumers (the cycle backend prices all of them).
+    pub fn assume_all() -> Self {
+        Self::from_names([
+            "mm_qkv",
+            "mm_qkv_packed",
+            "bias_add_qkv",
+            "attn_packed",
+            "mm_ffn1",
+            "mm_ffn2",
+            "mm_ffn3",
+            "qk_scores",
+            "softmax",
+            "sv",
+            "attn_fused",
+            "bias_add_dk",
+            "bias_add_d",
+            "bias_relu_h",
+            "residual_ln",
+            "quantize",
+            "bias_residual_ln",
+        ])
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.names.contains(name)
+    }
+}
+
+/// Context handed to every pass.
+pub struct PassCx<'a> {
+    pub inventory: &'a ArtifactInventory,
+}
+
+/// One rewrite over the program.  Passes mutate in place and report how
+/// many rewrites they applied; `TileProgram::finalize` is re-run by the
+/// pipeline once at the end, so passes need not maintain the drop lists.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, prog: &mut TileProgram, cx: &PassCx<'_>) -> usize;
+}
+
+/// What a pipeline run did, pass by pass.
+#[derive(Debug, Clone, Default)]
+pub struct OptReport {
+    /// `(pass name, rewrites applied)` in execution order.
+    pub applied: Vec<(&'static str, usize)>,
+}
+
+impl OptReport {
+    pub fn total_rewrites(&self) -> usize {
+        self.applied.iter().map(|(_, n)| n).sum()
+    }
+}
+
+/// An ordered pass list.
+pub struct Pipeline {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl Pipeline {
+    /// The canonical pipeline for `level`:
+    /// O0 → (empty); O1 → dedup, waves, compact;
+    /// O2 → dedup, fuse-attention, fuse-bias-ln, waves, compact.
+    /// Fusion runs before wave scheduling so fused dispatches (fewer,
+    /// fatter) are what the waves partition.
+    pub fn for_level(level: OptLevel) -> Self {
+        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if level == OptLevel::O0 {
+            return Pipeline { passes };
+        }
+        passes.push(Box::new(DedupTransfers));
+        if level == OptLevel::O2 {
+            passes.push(Box::new(FuseAttention));
+            passes.push(Box::new(FuseBiasLn));
+        }
+        passes.push(Box::new(ScheduleWaves));
+        passes.push(Box::new(CompactSlots));
+        Pipeline { passes }
+    }
+
+    /// Run every pass, re-finalize the program, and check wave legality.
+    /// A validation failure means an optimizer bug; it surfaces as an
+    /// error (failing the one cache-miss request) rather than a panic on
+    /// the serving path.
+    pub fn run(
+        &self,
+        prog: &mut TileProgram,
+        inventory: &ArtifactInventory,
+    ) -> anyhow::Result<OptReport> {
+        let cx = PassCx { inventory };
+        let mut report = OptReport::default();
+        for pass in &self.passes {
+            let n = pass.run(prog, &cx);
+            report.applied.push((pass.name(), n));
+        }
+        prog.finalize();
+        validate_waves(prog)
+            .map_err(|e| e.context("optimizer produced an illegal wave partition"))?;
+        Ok(report)
+    }
+}
+
+/// Optimize `prog` at `level` against `inventory` — the one-call entry
+/// the engine and the cycle tools use.
+pub fn optimize(
+    prog: &mut TileProgram,
+    level: OptLevel,
+    inventory: &ArtifactInventory,
+) -> anyhow::Result<OptReport> {
+    Pipeline::for_level(level).run(prog, inventory)
+}
+
+// ---- dependence bookkeeping ---------------------------------------------
+
+/// Read/write sets of one step over the two operand namespaces.  Panel
+/// assembly is modeled as a plain write of its destination host; the WAW
+/// edge to the previous writer keeps read-modify-write ordering intact.
+struct Access {
+    slot_reads: Vec<SlotId>,
+    slot_writes: Vec<SlotId>,
+    host_reads: Vec<super::HostId>,
+    host_writes: Vec<super::HostId>,
+}
+
+fn access(step: &Step) -> Access {
+    let mut a = Access {
+        slot_reads: Vec::new(),
+        slot_writes: Vec::new(),
+        host_reads: Vec::new(),
+        host_writes: Vec::new(),
+    };
+    match step {
+        Step::Upload { host, dst } => {
+            a.host_reads.push(*host);
+            a.slot_writes.push(*dst);
+        }
+        Step::Dispatch { args, dst, .. } => {
+            for arg in args {
+                if let Operand::Slot(s) = arg {
+                    a.slot_reads.push(*s);
+                }
+            }
+            a.slot_writes.push(*dst);
+        }
+        Step::Fetch { src, host } => {
+            a.slot_reads.push(*src);
+            a.host_writes.push(*host);
+        }
+        Step::ExtractPanel { src, dst, .. } => {
+            a.host_reads.push(*src);
+            a.host_writes.push(*dst);
+        }
+        Step::AssemblePanel { src, dst, .. } => {
+            a.host_reads.push(*src);
+            a.host_writes.push(*dst);
+        }
+        Step::CalibrateScale { src, dst } => {
+            a.host_reads.push(*src);
+            a.slot_writes.push(*dst);
+        }
+    }
+    a
+}
+
+/// The step indices `i` depends on in the current stream order —
+/// RAW/WAR/WAW over *both* operand namespaces.  On the SSA stream the
+/// wave scheduler sees (every slot written exactly once, before all its
+/// reads), the slot WAR/WAW edges are vacuous; they exist so that
+/// [`validate_waves`], which re-runs after `CompactSlots` has recycled
+/// slot ids, catches any reuse that would make wave members race.
+fn dependence_lists(prog: &TileProgram) -> Vec<Vec<usize>> {
+    let n_hosts = prog.host_shapes.len();
+    let mut slot_writer: HashMap<SlotId, usize> = HashMap::new();
+    let mut slot_readers: HashMap<SlotId, Vec<usize>> = HashMap::new();
+    let mut host_last_write: Vec<Option<usize>> = vec![None; n_hosts];
+    let mut host_readers: Vec<Vec<usize>> = vec![Vec::new(); n_hosts];
+    let mut deps = Vec::with_capacity(prog.steps.len());
+    for (i, step) in prog.steps.iter().enumerate() {
+        let a = access(step);
+        let mut d: Vec<usize> = Vec::new();
+        for s in &a.slot_reads {
+            if let Some(&w) = slot_writer.get(s) {
+                d.push(w);
+            }
+        }
+        for s in &a.slot_writes {
+            // WAR/WAW on a recycled slot id: wait for every reference to
+            // the id's previous value.
+            if let Some(rs) = slot_readers.get(s) {
+                d.extend(rs.iter().copied());
+            }
+            if let Some(&w) = slot_writer.get(s) {
+                d.push(w);
+            }
+        }
+        for h in &a.host_reads {
+            if let Some(w) = host_last_write[*h] {
+                d.push(w);
+            }
+        }
+        for h in &a.host_writes {
+            // WAR: wait for every read of the previous version; WAW: and
+            // for the previous writer.
+            d.extend(host_readers[*h].iter().copied());
+            if let Some(w) = host_last_write[*h] {
+                d.push(w);
+            }
+        }
+        // State updates after dependence collection (a step never depends
+        // on itself; reads see the pre-step state).
+        for h in &a.host_reads {
+            host_readers[*h].push(i);
+        }
+        for s in &a.slot_reads {
+            slot_readers.entry(*s).or_default().push(i);
+        }
+        for s in &a.slot_writes {
+            slot_writer.insert(*s, i);
+            slot_readers.entry(*s).or_default().clear();
+        }
+        for h in &a.host_writes {
+            host_last_write[*h] = Some(i);
+            host_readers[*h].clear();
+        }
+        d.sort_unstable();
+        d.dedup();
+        deps.push(d);
+    }
+    deps
+}
+
+/// Check the program's wave partition: every dependence must cross a wave
+/// boundary backwards (members of one wave are mutually independent).  A
+/// program without waves is trivially valid (sequential semantics).
+pub fn validate_waves(prog: &TileProgram) -> anyhow::Result<()> {
+    if prog.waves.is_empty() {
+        return Ok(());
+    }
+    if *prog.waves.last().unwrap() != prog.steps.len() {
+        bail!(
+            "wave partition covers {} of {} steps",
+            prog.waves.last().unwrap(),
+            prog.steps.len()
+        );
+    }
+    // wave index per step position
+    let mut wave_of = vec![0usize; prog.steps.len()];
+    let mut start = 0usize;
+    for (w, end) in prog.waves.iter().enumerate() {
+        if *end <= start {
+            bail!("empty wave {w}");
+        }
+        for i in start..*end {
+            wave_of[i] = w;
+        }
+        start = *end;
+    }
+    let deps = dependence_lists(prog);
+    for (i, d) in deps.iter().enumerate() {
+        for &j in d {
+            if wave_of[j] >= wave_of[i] {
+                bail!(
+                    "step {i} (wave {}) depends on step {j} (wave {}) — not strictly earlier",
+                    wave_of[i],
+                    wave_of[j]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---- pass: redundant-transfer elimination -------------------------------
+
+/// Deletes uploads whose payload is already device-resident and duplicate
+/// panel extractions.  Host contents are tracked by a per-host version
+/// counter (bumped on every write); an `Upload` of `(host, version)` that
+/// matches an earlier upload — or a `Fetch` that produced exactly that
+/// version — aliases its destination slot to the resident one.
+pub struct DedupTransfers;
+
+impl DedupTransfers {
+    fn rewrite(
+        step: &mut Step,
+        slot_alias: &HashMap<SlotId, SlotId>,
+        host_alias: &HashMap<super::HostId, super::HostId>,
+    ) {
+        let slot = |s: &mut SlotId| {
+            if let Some(a) = slot_alias.get(s) {
+                *s = *a;
+            }
+        };
+        let host = |h: &mut super::HostId| {
+            if let Some(a) = host_alias.get(h) {
+                *h = *a;
+            }
+        };
+        match step {
+            Step::Upload { host: h, .. } => host(h),
+            Step::Dispatch { args, .. } => {
+                for arg in args {
+                    if let Operand::Slot(s) = arg {
+                        slot(s);
+                    }
+                }
+            }
+            Step::Fetch { src, .. } => slot(src),
+            Step::ExtractPanel { src, .. } => host(src),
+            Step::AssemblePanel { src, .. } => host(src),
+            Step::CalibrateScale { src, .. } => host(src),
+        }
+    }
+}
+
+impl Pass for DedupTransfers {
+    fn name(&self) -> &'static str {
+        "dedup-transfers"
+    }
+
+    fn run(&self, prog: &mut TileProgram, _cx: &PassCx<'_>) -> usize {
+        let n_hosts = prog.host_shapes.len();
+        // Hosts written exactly once can be aliased away wholesale (their
+        // defining step is the deleted duplicate); anything rewritten
+        // later must keep its own identity.
+        let mut host_writes = vec![0usize; n_hosts];
+        host_writes[prog.input_host] += 1; // the caller's pre-replay write
+        for step in &prog.steps {
+            for h in access(step).host_writes {
+                host_writes[h] += 1;
+            }
+        }
+
+        let mut host_ver = vec![0u32; n_hosts];
+        // (host, version) → device slot holding exactly that content.
+        let mut resident: HashMap<(super::HostId, u32), SlotId> = HashMap::new();
+        // (src host, version, c0, width) → host holding that panel.
+        let mut extracted: HashMap<(super::HostId, u32, usize, usize), super::HostId> =
+            HashMap::new();
+        let mut slot_alias: HashMap<SlotId, SlotId> = HashMap::new();
+        let mut host_alias: HashMap<super::HostId, super::HostId> = HashMap::new();
+        let mut removed = 0usize;
+
+        let steps = std::mem::take(&mut prog.steps);
+        let mut out = Vec::with_capacity(steps.len());
+        for mut step in steps {
+            Self::rewrite(&mut step, &slot_alias, &host_alias);
+            match &step {
+                Step::Upload { host, dst } => {
+                    if let Some(&s) = resident.get(&(*host, host_ver[*host])) {
+                        slot_alias.insert(*dst, s);
+                        removed += 1;
+                        continue;
+                    }
+                    resident.insert((*host, host_ver[*host]), *dst);
+                }
+                Step::Fetch { src, host } => {
+                    host_ver[*host] += 1;
+                    // The fetched host now mirrors the device slot: a later
+                    // upload of this exact version is a round trip.
+                    resident.insert((*host, host_ver[*host]), *src);
+                }
+                Step::ExtractPanel { src, c0, width, dst } => {
+                    let key = (*src, host_ver[*src], *c0, *width);
+                    match extracted.get(&key) {
+                        Some(&h) if host_writes[*dst] == 1 && host_writes[h] == 1 => {
+                            host_alias.insert(*dst, h);
+                            removed += 1;
+                            continue;
+                        }
+                        _ => {
+                            extracted.insert(key, *dst);
+                            host_ver[*dst] += 1;
+                        }
+                    }
+                }
+                Step::AssemblePanel { dst, .. } => {
+                    host_ver[*dst] += 1;
+                }
+                Step::Dispatch { .. } | Step::CalibrateScale { .. } => {}
+            }
+            out.push(step);
+        }
+        prog.steps = out;
+        removed
+    }
+}
+
+// ---- pass: dispatch fusion ----------------------------------------------
+
+/// `(writer step, read count)` per slot of the current stream — the
+/// single-use analysis both fusion passes gate on.
+fn slot_dataflow(steps: &[Step]) -> (HashMap<SlotId, usize>, HashMap<SlotId, usize>) {
+    let mut writer = HashMap::new();
+    let mut uses: HashMap<SlotId, usize> = HashMap::new();
+    for (i, step) in steps.iter().enumerate() {
+        let a = access(step);
+        for s in a.slot_reads {
+            *uses.entry(s).or_default() += 1;
+        }
+        for s in a.slot_writes {
+            writer.insert(s, i);
+        }
+    }
+    (writer, uses)
+}
+
+/// Shared fusion scaffolding: `matcher` inspects anchor step `i` against
+/// the stream's single-use dataflow and returns the earlier steps to
+/// delete plus the fused replacement for `i`.  Applies every match, then
+/// rebuilds the stream without the deleted steps.
+fn rewrite_fused<F>(prog: &mut TileProgram, matcher: F) -> usize
+where
+    F: Fn(
+        &[Step],
+        usize,
+        &HashMap<SlotId, usize>,
+        &HashMap<SlotId, usize>,
+    ) -> Option<(Vec<usize>, Step)>,
+{
+    let (writer, uses) = slot_dataflow(&prog.steps);
+    let mut remove = vec![false; prog.steps.len()];
+    let mut replace: Vec<(usize, Step)> = Vec::new();
+    for i in 0..prog.steps.len() {
+        if let Some((kill, step)) = matcher(prog.steps.as_slice(), i, &writer, &uses) {
+            for j in kill {
+                remove[j] = true;
+            }
+            replace.push((i, step));
+        }
+    }
+    let fused = replace.len();
+    for (i, step) in replace {
+        prog.steps[i] = step;
+    }
+    let steps = std::mem::take(&mut prog.steps);
+    prog.steps =
+        steps.into_iter().enumerate().filter(|(i, _)| !remove[*i]).map(|(_, s)| s).collect();
+    fused
+}
+
+/// Collapses `qk_scores → softmax → sv` chains whose score/probability
+/// slots have exactly one reader into a single `attn_fused` dispatch —
+/// the per-head split-attention chain becomes the fused artifact.
+pub struct FuseAttention;
+
+impl Pass for FuseAttention {
+    fn name(&self) -> &'static str {
+        "fuse-attention"
+    }
+
+    fn run(&self, prog: &mut TileProgram, cx: &PassCx<'_>) -> usize {
+        if !cx.inventory.has("attn_fused") {
+            return 0;
+        }
+        rewrite_fused(prog, |steps, i, writer, uses| {
+            let Step::Dispatch { artifact: "sv", args: sv_args, dst, out_shape } = &steps[i]
+            else {
+                return None;
+            };
+            let [Operand::Slot(p), v_arg] = sv_args.as_slice() else { return None };
+            if uses.get(p) != Some(&1) {
+                return None;
+            }
+            let j = *writer.get(p)?;
+            let Step::Dispatch { artifact: "softmax", args: sm_args, .. } = &steps[j] else {
+                return None;
+            };
+            let [Operand::Slot(s)] = sm_args.as_slice() else { return None };
+            if uses.get(s) != Some(&1) {
+                return None;
+            }
+            let k = *writer.get(s)?;
+            let Step::Dispatch { artifact: "qk_scores", args: qk_args, .. } = &steps[k] else {
+                return None;
+            };
+            let [q_arg, k_arg, mask_arg, scale_arg] = qk_args.as_slice() else { return None };
+            Some((
+                vec![j, k],
+                Step::Dispatch {
+                    artifact: "attn_fused",
+                    args: vec![
+                        q_arg.clone(),
+                        k_arg.clone(),
+                        v_arg.clone(),
+                        mask_arg.clone(),
+                        scale_arg.clone(),
+                    ],
+                    dst: *dst,
+                    out_shape: out_shape.clone(),
+                },
+            ))
+        })
+    }
+}
+
+/// Collapses `bias_add_d → residual_ln` (the FFN-chain bias + LayerNorm
+/// pair, twice per layer) into one `bias_residual_ln` dispatch when the
+/// artifact set provides it (`python/compile/aot.py` emits it).
+pub struct FuseBiasLn;
+
+impl Pass for FuseBiasLn {
+    fn name(&self) -> &'static str {
+        "fuse-bias-ln"
+    }
+
+    fn run(&self, prog: &mut TileProgram, cx: &PassCx<'_>) -> usize {
+        if !cx.inventory.has("bias_residual_ln") {
+            return 0;
+        }
+        rewrite_fused(prog, |steps, i, writer, uses| {
+            let Step::Dispatch { artifact: "residual_ln", args: ln_args, dst, out_shape } =
+                &steps[i]
+            else {
+                return None;
+            };
+            let Some(Operand::Slot(b)) = ln_args.first() else { return None };
+            if uses.get(b) != Some(&1) {
+                return None;
+            }
+            let j = *writer.get(b)?;
+            let Step::Dispatch { artifact: "bias_add_d", args: bias_args, .. } = &steps[j] else {
+                return None;
+            };
+            let [x_arg, bias_arg] = bias_args.as_slice() else { return None };
+            // bias_residual_ln(x, bias, res, gamma, beta, dmask, count)
+            let mut args = vec![x_arg.clone(), bias_arg.clone()];
+            args.extend(ln_args[1..].iter().cloned());
+            Some((
+                vec![j],
+                Step::Dispatch {
+                    artifact: "bias_residual_ln",
+                    args,
+                    dst: *dst,
+                    out_shape: out_shape.clone(),
+                },
+            ))
+        })
+    }
+}
+
+// ---- pass: wave scheduling ----------------------------------------------
+
+/// ASAP list scheduling: each step's wave is one past the latest wave any
+/// of its dependences landed in; the stream is stably reordered so every
+/// wave is contiguous.  Members of one wave are mutually independent by
+/// construction — the PE-array parallelism the sequential stream hid.
+pub struct ScheduleWaves;
+
+impl Pass for ScheduleWaves {
+    fn name(&self) -> &'static str {
+        "schedule-waves"
+    }
+
+    fn run(&self, prog: &mut TileProgram, _cx: &PassCx<'_>) -> usize {
+        let deps = dependence_lists(prog);
+        let n = prog.steps.len();
+        let mut level = vec![0usize; n];
+        for i in 0..n {
+            level[i] = deps[i].iter().map(|&j| level[j] + 1).max().unwrap_or(0);
+        }
+        let n_waves = level.iter().map(|l| l + 1).max().unwrap_or(0);
+        // Stable bucket order: original index order within each level.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (level[i], i));
+        let steps = std::mem::take(&mut prog.steps);
+        let mut indexed: Vec<Option<Step>> = steps.into_iter().map(Some).collect();
+        prog.steps = order.iter().map(|&i| indexed[i].take().unwrap()).collect();
+        let mut waves = Vec::with_capacity(n_waves);
+        let mut count = 0usize;
+        let mut cur = 0usize;
+        for &i in &order {
+            if level[i] != cur {
+                waves.push(count);
+                cur = level[i];
+            }
+            count += 1;
+        }
+        if n > 0 {
+            waves.push(count);
+        }
+        prog.waves = waves;
+        // Report steps actually displaced, not the wave count.
+        order.iter().enumerate().filter(|(new, &old)| *new != old).count()
+    }
+}
+
+// ---- pass: slot compaction ----------------------------------------------
+
+/// Linear-scan slot renaming: device slot ids are reassigned from a free
+/// list as their last use passes, shrinking `n_slots` (and replay's slot
+/// table) from "one id per value" to the peak live count — the on-chip
+/// buffer footprint the last-use analysis already implied.
+///
+/// **Wave discipline:** on a wave-scheduled program an id freed inside
+/// wave W becomes reusable only from wave W+1 — reusing it within W
+/// would put a reader of the old value and the writer of the new one in
+/// the same (conceptually concurrent) wave, breaking the independence
+/// contract [`validate_waves`] enforces.  Unscheduled programs recycle
+/// immediately (sequential semantics).
+pub struct CompactSlots;
+
+impl Pass for CompactSlots {
+    fn name(&self) -> &'static str {
+        "compact-slots"
+    }
+
+    fn run(&self, prog: &mut TileProgram, _cx: &PassCx<'_>) -> usize {
+        let n = prog.steps.len();
+        // Last reference (read or write) per slot, in current order.
+        let mut last: HashMap<SlotId, usize> = HashMap::new();
+        for (i, step) in prog.steps.iter().enumerate() {
+            let a = access(step);
+            for s in a.slot_reads.iter().chain(a.slot_writes.iter()) {
+                last.insert(*s, i);
+            }
+        }
+        let mut map: HashMap<SlotId, SlotId> = HashMap::new();
+        let mut free: Vec<SlotId> = Vec::new();
+        // Ids retired during the current wave, released at its boundary.
+        let mut pending: Vec<SlotId> = Vec::new();
+        let mut wave = 0usize;
+        let mut next = 0usize;
+        for i in 0..n {
+            let a = access(&prog.steps[i]);
+            // Rewrite reads, then retire slots whose last use is this
+            // step (into `pending` until the wave ends), then name the
+            // writes.
+            let rewrite_read = |s: &mut SlotId, map: &HashMap<SlotId, SlotId>| {
+                *s = *map.get(s).expect("read of a slot that was never written");
+            };
+            match &mut prog.steps[i] {
+                Step::Dispatch { args, .. } => {
+                    for arg in args {
+                        if let Operand::Slot(s) = arg {
+                            rewrite_read(s, &map);
+                        }
+                    }
+                }
+                Step::Fetch { src, .. } => rewrite_read(src, &map),
+                _ => {}
+            }
+            let mut retired = a.slot_reads.clone();
+            retired.sort_unstable();
+            retired.dedup();
+            for s in &retired {
+                if last.get(s) == Some(&i) {
+                    pending.push(map[s]);
+                }
+            }
+            for s in &a.slot_writes {
+                let new = free.pop().unwrap_or_else(|| {
+                    next += 1;
+                    next - 1
+                });
+                map.insert(*s, new);
+                match &mut prog.steps[i] {
+                    Step::Upload { dst, .. }
+                    | Step::Dispatch { dst, .. }
+                    | Step::CalibrateScale { dst, .. } => *dst = new,
+                    _ => unreachable!("slot writes only come from upload/dispatch/calibrate"),
+                }
+                // A value written and never read dies immediately.
+                if last.get(s) == Some(&i) {
+                    pending.push(new);
+                }
+            }
+            // Release retired ids: at the wave boundary for scheduled
+            // programs, immediately for sequential ones.
+            let at_boundary = match prog.waves.get(wave) {
+                Some(&end) => {
+                    if i + 1 == end {
+                        wave += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                None => true,
+            };
+            if at_boundary {
+                free.append(&mut pending);
+            }
+        }
+        let saved = prog.n_slots.saturating_sub(next);
+        prog.n_slots = next;
+        saved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FabricConstants, ScheduleBuilder};
+    use super::*;
+    use crate::model::presets;
+
+    fn fc() -> FabricConstants {
+        FabricConstants::artifact_default()
+    }
+
+    fn raw(seq: usize, layers: usize) -> TileProgram {
+        ScheduleBuilder::new(fc(), presets::small_encoder(seq, layers)).unwrap().build()
+    }
+
+    #[test]
+    fn o0_pipeline_is_identity() {
+        let mut p = raw(32, 1);
+        let before = p.steps.clone();
+        let rep = optimize(&mut p, OptLevel::O0, &ArtifactInventory::assume_all()).unwrap();
+        assert_eq!(rep.total_rewrites(), 0);
+        assert_eq!(p.steps, before);
+        assert_eq!(p.wave_count(), 0, "O0 leaves the program unscheduled");
+    }
+
+    #[test]
+    fn o1_preserves_the_dispatch_multiset_and_partitions_waves() {
+        let mut p = raw(32, 2);
+        let mut names_before: Vec<&str> = p.dispatch_sequence();
+        names_before.sort_unstable();
+        let (d, u, f) = (p.dispatch_count(), p.upload_count(), p.fetch_count());
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        let mut names_after = p.dispatch_sequence();
+        names_after.sort_unstable();
+        assert_eq!(names_before, names_after, "O1 may only reorder/dedup, never change ops");
+        assert_eq!(p.dispatch_count(), d);
+        assert!(p.upload_count() <= u);
+        assert_eq!(p.fetch_count(), f);
+        assert!(p.wave_count() > 1, "the stream must split into waves");
+        assert!(p.wave_count() < p.steps.len(), "waves must actually group steps");
+        validate_waves(&p).unwrap();
+    }
+
+    #[test]
+    fn waves_expose_cross_head_parallelism() {
+        // 4 heads: the four per-head mm_qkv chains are independent, so at
+        // least one wave must hold 4 concurrent dispatches.
+        let mut p = raw(32, 1);
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        let widest = p
+            .wave_ranges()
+            .into_iter()
+            .map(|r| {
+                p.steps[r]
+                    .iter()
+                    .filter(|s| matches!(s, Step::Dispatch { .. }))
+                    .count()
+            })
+            .max()
+            .unwrap();
+        assert!(widest >= 4, "widest wave has {widest} dispatches, want >= heads");
+    }
+
+    #[test]
+    fn o2_fuses_attention_and_bias_ln() {
+        let mut p = raw(32, 2);
+        let d0 = p.dispatch_count();
+        let u0 = p.upload_count();
+        let heads = p.cfg.heads * p.cfg.enc_layers;
+        optimize(&mut p, OptLevel::O2, &ArtifactInventory::assume_all()).unwrap();
+        let seq = p.dispatch_sequence();
+        assert!(!seq.contains(&"qk_scores"));
+        assert!(!seq.contains(&"softmax"));
+        assert!(!seq.contains(&"sv"));
+        assert!(!seq.contains(&"bias_add_d"));
+        assert!(seq.contains(&"attn_fused"));
+        assert!(seq.contains(&"bias_residual_ln"));
+        // 3→1 per head per layer, 2→1 twice per layer
+        assert_eq!(p.dispatch_count(), d0 - 2 * heads - 2 * p.cfg.enc_layers);
+        assert!(p.upload_count() <= u0);
+        assert!(
+            p.dispatch_count() + p.upload_count() < d0 + u0,
+            "the optimized replay must be strictly cheaper"
+        );
+        validate_waves(&p).unwrap();
+    }
+
+    #[test]
+    fn fusion_respects_the_artifact_inventory() {
+        let mut p = raw(32, 1);
+        let d0 = p.dispatch_count();
+        // An inventory without the fused artifacts: fusion must not fire.
+        let inv = ArtifactInventory::from_names(["qk_scores", "softmax", "sv"]);
+        optimize(&mut p, OptLevel::O2, &inv).unwrap();
+        assert_eq!(p.dispatch_count(), d0);
+        assert!(p.dispatch_sequence().contains(&"qk_scores"));
+        assert!(!p.dispatch_sequence().contains(&"attn_fused"));
+    }
+
+    #[test]
+    fn compaction_shrinks_the_slot_table() {
+        let mut p = raw(32, 2);
+        let n0 = p.n_slots;
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        assert!(p.n_slots < n0, "slot renaming must reuse freed ids ({} vs {n0})", p.n_slots);
+        // The compacted table must still be big enough for every reference.
+        let max_ref = p
+            .steps
+            .iter()
+            .flat_map(|s| {
+                let a = super::access(s);
+                a.slot_reads.into_iter().chain(a.slot_writes)
+            })
+            .max()
+            .unwrap();
+        assert!(max_ref < p.n_slots);
+    }
+
+    #[test]
+    fn quantized_and_packed_streams_optimize_cleanly() {
+        for (packed, quantized) in [(true, false), (false, true), (true, true)] {
+            let mut p = ScheduleBuilder::new(fc(), presets::small_encoder(32, 1))
+                .unwrap()
+                .qkv_packed(packed)
+                .quantized(quantized)
+                .build();
+            let mut before: Vec<&str> = p.dispatch_sequence();
+            before.sort_unstable();
+            optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+            let mut after = p.dispatch_sequence();
+            after.sort_unstable();
+            assert_eq!(before, after, "packed={packed} quantized={quantized}");
+            validate_waves(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn validator_rejects_a_forged_partition() {
+        let mut p = raw(16, 1);
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        // Forge: collapse everything into one wave — dependences now share
+        // a wave, which the validator must reject.
+        p.waves = vec![p.steps.len()];
+        assert!(validate_waves(&p).is_err());
+    }
+}

@@ -43,15 +43,15 @@ use anyhow::{anyhow, bail};
 
 use crate::accel::registers::{RegisterFile, SynthMaxima};
 use crate::accel::schedule::{
-    self, FabricConstants, RuntimeBufs, ScheduleBuilder, TileProgram, WeightKind, WeightRef,
-    WeightSource,
+    self, ArtifactInventory, FabricConstants, RuntimeBufs, ScheduleBuilder, TileProgram,
+    WeightKind, WeightRef, WeightSource,
 };
 use crate::accel::sim::cycle::{self, CycleReport};
 use crate::model::weights::{LayerWeights, Mat};
 use crate::model::TnnConfig;
-use crate::runtime::{DeviceTensor, Executor, Tensor};
+use crate::runtime::{DeviceTensor, Executor, Tensor, TensorPool};
 
-pub use crate::accel::schedule::AttentionMode;
+pub use crate::accel::schedule::{AttentionMode, OptLevel};
 
 /// One layer's weights, pre-tiled into fabric-shaped panels and parked
 /// **device-resident** (§Perf iteration 2) — the substrate analog of the
@@ -161,7 +161,8 @@ impl TopologyKey {
 }
 
 /// Program cache key: the programmed topology plus the engine's execution
-/// flags (each flag selects a genuinely different instruction stream).
+/// flags (each flag selects a genuinely different instruction stream) and
+/// the optimization level (each level a different *optimized* stream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct ProgramKey {
     seq_len: usize,
@@ -173,10 +174,17 @@ struct ProgramKey {
     mode: AttentionMode,
     qkv_packed: bool,
     quantized: bool,
+    opt_level: OptLevel,
 }
 
 impl ProgramKey {
-    fn new(cfg: &TnnConfig, mode: AttentionMode, qkv_packed: bool, quantized: bool) -> Self {
+    fn new(
+        cfg: &TnnConfig,
+        mode: AttentionMode,
+        qkv_packed: bool,
+        quantized: bool,
+        opt_level: OptLevel,
+    ) -> Self {
         ProgramKey {
             seq_len: cfg.seq_len,
             heads: cfg.heads,
@@ -187,6 +195,7 @@ impl ProgramKey {
             mode,
             qkv_packed,
             quantized,
+            opt_level,
         }
     }
 }
@@ -213,8 +222,21 @@ pub struct TileEngine {
     /// the int8 QDQ artifact on the attention output, mirroring
     /// `model.encoder_layer(quantized=True)`'s activation quantization.
     pub quantized: bool,
+    /// Optimization level the pass pipeline (`accel::schedule::opt`) runs
+    /// at before a program is cached.  Part of the cache key; the serving
+    /// default is `O2` (dedup + fusion into whatever fused artifacts the
+    /// manifest provides + wave scheduling + slot compaction).  `O0`
+    /// replays the builder's raw stream — the oracle the equivalence
+    /// tests compare optimized replays against.
+    pub opt_level: OptLevel,
     /// Fabric constants (from the manifest = the synthesized shapes).
     fc: FabricConstants,
+    /// Artifact names this fabric provides — fusion never rewrites into
+    /// an artifact the manifest lacks.
+    inventory: ArtifactInventory,
+    /// Host-scratch pool shared by every replay on this engine (panel
+    /// extracts, zero-initialized assembly hosts, the padded input).
+    pool: TensorPool,
     /// Built programs by `(topology, flags)` — the serving pool's request
     /// path is "look up program, replay".
     programs: RefCell<HashMap<ProgramKey, Rc<CachedProgram>>>,
@@ -231,13 +253,17 @@ impl TileEngine {
         let m = exec.manifest();
         let maxima = m.synth_maxima();
         let fc = FabricConstants::from_manifest(m);
+        let inventory = ArtifactInventory::from_manifest(m);
         Ok(TileEngine {
             fc,
+            inventory,
             exec,
             registers: RegisterFile::new(maxima),
             mode: AttentionMode::Split,
             qkv_packed: false,
             quantized: false,
+            opt_level: OptLevel::O2,
+            pool: TensorPool::new(),
             programs: RefCell::new(HashMap::new()),
             runtimes: RefCell::new(HashMap::new()),
             cache_hits: Cell::new(0),
@@ -288,19 +314,24 @@ impl TileEngine {
     }
 
     /// The cached program for `cfg` under the engine's current execution
-    /// flags, building (and uploading the runtime tensor set) on first use.
+    /// flags and opt level, building + optimizing (and uploading the
+    /// runtime tensor set) on first use.
     pub fn cached_program(&self, cfg: &TnnConfig) -> anyhow::Result<Rc<CachedProgram>> {
-        let key = ProgramKey::new(cfg, self.mode, self.qkv_packed, self.quantized);
+        let key = ProgramKey::new(cfg, self.mode, self.qkv_packed, self.quantized, self.opt_level);
         if let Some(p) = self.programs.borrow().get(&key) {
             self.cache_hits.set(self.cache_hits.get() + 1);
             return Ok(p.clone());
         }
         self.cache_misses.set(self.cache_misses.get() + 1);
-        let program = ScheduleBuilder::new(self.fc, *cfg)?
+        let mut program = ScheduleBuilder::new(self.fc, *cfg)?
             .mode(self.mode)
             .qkv_packed(self.qkv_packed)
             .quantized(self.quantized)
             .build();
+        // Run the pass pipeline once; every replay gets the optimized
+        // stream (fusion is gated on the manifest's actual inventory).
+        // A validation failure fails this one request, not the fabric.
+        schedule::optimize(&mut program, self.opt_level, &self.inventory)?;
         let runtime = self.runtime_for(cfg)?;
         let cached = Rc::new(CachedProgram { program, runtime });
         let mut programs = self.programs.borrow_mut();
@@ -344,10 +375,26 @@ impl TileEngine {
     /// Schedule-grounded cycle prediction: replays the *identical* cached
     /// program through the cycle backend (`accel::sim::cycle`), so the
     /// Table 2 "experimental" number and the executed schedule cannot
-    /// drift apart.
+    /// drift apart.  Sequential (`sum`) pricing — invariant across opt
+    /// levels by construction (fused artifacts cost the sum of their
+    /// parts, reorders commute under addition).
     pub fn cycle_estimate(&self, cfg: &TnnConfig) -> anyhow::Result<CycleReport> {
         let cached = self.cached_program(cfg)?;
         cycle::replay_program(&cached.program)
+    }
+
+    /// [`Self::cycle_estimate`] with wave pricing: each wave of the
+    /// cached (wave-scheduled) program costs `max` over its members —
+    /// the utilization-adjusted latency the optimizer's parallelism is
+    /// worth on a fabric that runs independent modules concurrently.
+    pub fn cycle_estimate_waves(&self, cfg: &TnnConfig) -> anyhow::Result<CycleReport> {
+        let cached = self.cached_program(cfg)?;
+        cycle::replay_program_waves(&cached.program)
+    }
+
+    /// `(hits, misses)` of the host-scratch tensor pool.
+    pub fn tensor_pool_stats(&self) -> (u64, u64) {
+        self.pool.stats()
     }
 
     /// Pre-tile a weight stack for the fabric (Algorithm 18 steps 7–9:
@@ -451,10 +498,25 @@ impl TileEngine {
             bail!("input is {}x{}, registers say {}x{}", input.rows, input.cols, cfg.seq_len, cfg.d_model);
         }
         let cached = self.cached_program(cfg)?;
-        // Load inputs into the (padded) input BRAM — Algorithm 1.
-        let padded = Tensor::from_mat(&input.padded(self.fc.sl_max, self.fc.dmodel_max));
-        let out = schedule::replay(&cached.program, &self.exec, stack, &cached.runtime, padded)?;
-        Ok(out.to_mat().block(0, 0, cfg.seq_len, cfg.d_model))
+        // Load inputs into the (padded) input BRAM — Algorithm 1.  The
+        // padded staging tensor comes from the engine's scratch pool, so
+        // steady-state requests allocate no host memory for it; the
+        // replay returns it to the pool when the input host is dropped.
+        let mut padded = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
+        schedule::pad_into(input, &mut padded);
+        let out = schedule::replay_with(
+            &cached.program,
+            &self.exec,
+            stack,
+            &cached.runtime,
+            padded,
+            Some(&self.pool),
+        )?;
+        // Crop to the programmed topology without the to_mat round trip,
+        // then recycle the padded output buffer.
+        let result = schedule::crop_to_mat(&out, cfg.seq_len, cfg.d_model);
+        self.pool.put(out);
+        Ok(result)
     }
 
     /// Run one layer through a *fused* per-config artifact (the
@@ -555,7 +617,14 @@ mod tests {
         let got = e.run_encoder(&prepared, &x).unwrap();
         let want = oracle(&cfg, &ws, &x);
         let diff = got.max_abs_diff(&want);
-        assert!(diff < 2e-3, "engine vs oracle diff = {diff}");
+        // O2 (the default) may dispatch the fused attention artifact, so
+        // the band is the fused path's, not the split chain's.
+        assert!(diff < 3e-3, "engine vs oracle diff = {diff}");
+        // The raw O0 stream must stay in the original band too.
+        e.opt_level = OptLevel::O0;
+        let raw = e.run_encoder(&prepared, &x).unwrap();
+        let diff0 = raw.max_abs_diff(&want);
+        assert!(diff0 < 2e-3, "raw engine vs oracle diff = {diff0}");
     }
 
     #[test]
@@ -620,7 +689,9 @@ mod tests {
         let a = e.run_encoder(&p, &x).unwrap();
         e.qkv_packed = false;
         let b = e.run_encoder(&p, &x).unwrap();
-        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+        // At O2 the per-head path may run attn_fused while packed runs
+        // attn_packed — fused-kernel band, not bit-level agreement.
+        assert!(a.max_abs_diff(&b) < 1e-3, "{}", a.max_abs_diff(&b));
     }
 
     #[test]
@@ -730,6 +801,78 @@ mod tests {
         );
         // identical dispatch count per replay
         assert_eq!(s2.dispatches - s1.dispatches, s1.dispatches - s0.dispatches);
+    }
+
+    #[test]
+    fn opt_levels_cache_separately_and_o2_cuts_dispatches() {
+        require_artifacts!();
+        let mut e = engine();
+        let cfg = presets::small_encoder(32, 2);
+        let ws = weights::init_stack(61, cfg.d_model, cfg.heads, 2);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(62, cfg.seq_len, cfg.d_model);
+
+        e.opt_level = OptLevel::O0;
+        e.run_encoder(&p, &x).unwrap(); // warm the O0 program
+        let s0 = e.executor().stats();
+        e.run_encoder(&p, &x).unwrap();
+        let s1 = e.executor().stats();
+
+        e.opt_level = OptLevel::O2;
+        e.run_encoder(&p, &x).unwrap(); // warm the O2 program
+        let s2 = e.executor().stats();
+        e.run_encoder(&p, &x).unwrap();
+        let s3 = e.executor().stats();
+
+        assert_eq!(e.program_cache_stats().1, 2, "one miss per opt level");
+        let (d0, u0) = (s1.dispatches - s0.dispatches, s1.uploads - s0.uploads);
+        let (d2, u2) = (s3.dispatches - s2.dispatches, s3.uploads - s2.uploads);
+        assert!(d2 < d0, "O2 must dispatch less ({d2} vs {d0})");
+        assert!(u2 <= u0, "O2 must not upload more ({u2} vs {u0})");
+        assert!(d2 + u2 < d0 + u0, "the optimized replay must be strictly cheaper");
+        // The wave-scheduled program must expose real parallelism.
+        let prog = e.cached_program(&cfg).unwrap();
+        assert!(prog.program.wave_count() > 1);
+        assert!(prog.program.max_wave_dispatches() >= cfg.heads);
+    }
+
+    #[test]
+    fn zero_pool_shares_device_buffers_across_topologies() {
+        require_artifacts!();
+        let mut e = engine();
+        let cfg1 = presets::small_encoder(32, 1);
+        e.program(&cfg1).unwrap();
+        e.cached_program(&cfg1).unwrap();
+        assert_eq!(e.executor().stats().pool_hits, 0, "first topology misses the pool");
+        let cfg2 = TnnConfig::encoder(48, 128, 2, 1);
+        e.program(&cfg2).unwrap();
+        e.cached_program(&cfg2).unwrap();
+        assert_eq!(
+            e.executor().stats().pool_hits,
+            4,
+            "the 4 zero accumulators are fabric constants shared by every topology"
+        );
+    }
+
+    #[test]
+    fn host_scratch_pool_recycles_across_requests() {
+        require_artifacts!();
+        let mut e = engine();
+        let cfg = presets::small_encoder(32, 1);
+        let ws = weights::init_stack(63, cfg.d_model, cfg.heads, 1);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(64, cfg.seq_len, cfg.d_model);
+        e.run_encoder(&p, &x).unwrap();
+        let (_, misses_after_first) = e.tensor_pool_stats();
+        e.run_encoder(&p, &x).unwrap();
+        let (hits, misses) = e.tensor_pool_stats();
+        assert_eq!(
+            misses, misses_after_first,
+            "steady state must allocate no new host scratch"
+        );
+        assert!(hits > 0, "the second request must recycle the first's buffers");
     }
 
     #[test]

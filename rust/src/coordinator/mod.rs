@@ -25,7 +25,7 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use engine::{AttentionMode, PreparedStack, TileEngine};
+pub use engine::{AttentionMode, OptLevel, PreparedStack, TileEngine};
 pub use server::{
     FaultInjection, PoolScheduler, Request, Response, SchedulePolicy, Server, ServerConfig,
 };

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::engine::{AttentionMode, PreparedStack, TileEngine};
+use super::engine::{AttentionMode, OptLevel, PreparedStack, TileEngine};
 use super::metrics::Metrics;
 use super::router::{ModelSpec, Router};
 use crate::model::weights::Mat;
@@ -89,6 +89,10 @@ pub struct ServerConfig {
     pub models: Vec<ModelSpec>,
     pub policy: BatchPolicy,
     pub attention: AttentionMode,
+    /// TileProgram optimization level every fabric serves at (the pass
+    /// pipeline of `accel::schedule::opt`; `O2` — dedup, dispatch fusion,
+    /// wave scheduling, slot compaction — is the serving default).
+    pub opt_level: OptLevel,
     /// Number of fabric workers.  `1` (the default) is the paper's
     /// single-fabric host software.
     pub pool_size: usize,
@@ -103,6 +107,7 @@ impl ServerConfig {
             models,
             policy: BatchPolicy::default(),
             attention: AttentionMode::Fused,
+            opt_level: OptLevel::O2,
             pool_size: 1,
             schedule: SchedulePolicy::Affinity,
             fault: FaultInjection::default(),
@@ -427,6 +432,7 @@ fn fabric_thread(
         }
     };
     engine.mode = cfg.attention;
+    engine.opt_level = cfg.opt_level;
 
     // Prepare every registered model's weights once (Algorithm 18, 4–12).
     let mut prepared: Vec<(String, PreparedStack)> = Vec::new();

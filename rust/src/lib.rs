@@ -14,7 +14,9 @@
 //!   runtime-adaptive configuration register file, the roofline model,
 //!   and `accel::schedule` — the **TileProgram IR** that lowers the §3.9
 //!   tile schedules (Algorithms 1–17) into a flat instruction stream once
-//!   per topology.
+//!   per topology, plus `accel::schedule::opt` — the pass pipeline
+//!   (transfer dedup, dispatch fusion, wave scheduling, slot compaction)
+//!   the engine runs before caching a program.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`
 //!   lowered once by `python/compile/aot.py`; Python is never on the
 //!   request path), plus the `FabricBackend` trait a `TileProgram` replays

@@ -13,7 +13,7 @@
 use adaptor::accel::{frequency, latency, power, resources, sim, tiling::TileConfig};
 use adaptor::accel::platform;
 use adaptor::analysis::report;
-use adaptor::coordinator::{Request, Server, ServerConfig};
+use adaptor::coordinator::{OptLevel, Request, Server, ServerConfig};
 use adaptor::coordinator::router::ModelSpec;
 use adaptor::model::{presets, quant::BitWidth, weights};
 
@@ -27,7 +27,7 @@ fn usage() -> ! {
          \n  gantt --model <preset>\
          \n  report <fig5|fig8|fig9|fig10|fig11|fig12|fig13|table1|table2|ablation|all> [--out DIR]\
          \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
-         \n  serve --model <preset> [--requests N] [--batch N] [--pool N]\
+         \n  serve --model <preset> [--requests N] [--batch N] [--pool N] [--opt-level 0|1|2]\
          \n  sweep <tiles|heads>\
          \n  presets\
          \n  validate"
@@ -114,7 +114,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
     scfg.policy.max_batch = batch;
     scfg.pool_size = pool;
-    println!("starting {pool} fabric(s) for {cfg} ...");
+    scfg.opt_level = match flag_value(args, "--opt-level").as_deref() {
+        Some("0") => OptLevel::O0,
+        Some("1") => OptLevel::O1,
+        Some("2") | None => OptLevel::O2,
+        Some(other) => {
+            eprintln!("unknown opt level '{other}' (want 0, 1 or 2)");
+            std::process::exit(2);
+        }
+    };
+    println!("starting {pool} fabric(s) for {cfg} (opt level {:?}) ...", scfg.opt_level);
     let server = Server::start(scfg)?;
     let mut receivers = Vec::new();
     let t0 = std::time::Instant::now();

@@ -40,6 +40,24 @@ pub trait FabricBackend {
 
     /// Device buffer → host tensor (AXI DMA read analog).
     fn fetch(&self, buf: &Self::Buf) -> anyhow::Result<Tensor>;
+
+    /// Upload an all-zeros tensor of `shape`.  Backends with a device
+    /// buffer pool (the PJRT [`Executor`]) override this to hand out one
+    /// shared immutable buffer per shape — the zero accumulators of
+    /// `RuntimeId::Zero*` are synthesis constants, so every programmed
+    /// topology can share them.
+    fn upload_zeros(&self, shape: &[usize]) -> anyhow::Result<Self::Buf> {
+        self.upload(&Tensor::zeros(shape.to_vec()))
+    }
+
+    /// Wave-replay entry points: a wave-scheduled `TileProgram` brackets
+    /// each wave of mutually independent instructions with
+    /// `wave_begin(index, len)` / `wave_end()`.  Execution inside a wave
+    /// stays sequential — the hooks exist so pricing backends
+    /// (`accel::sim::cycle::CycleBackend`) can cost a wave as `max` over
+    /// its members, the PE-array parallelism analog.  Default: no-ops.
+    fn wave_begin(&self, _wave: usize, _steps: usize) {}
+    fn wave_end(&self) {}
 }
 
 impl FabricBackend for Executor {
@@ -69,5 +87,12 @@ impl FabricBackend for Executor {
 
     fn fetch(&self, buf: &DeviceTensor) -> anyhow::Result<Tensor> {
         Executor::fetch(self, buf)
+    }
+
+    /// Zero buffers come from the executor's device pool: one immutable
+    /// upload per shape for the process lifetime, shared by every
+    /// topology's runtime tensor set.
+    fn upload_zeros(&self, shape: &[usize]) -> anyhow::Result<DeviceTensor> {
+        self.shared_zeros(shape)
     }
 }

@@ -51,10 +51,13 @@ impl Tensor {
 }
 
 /// A device-resident tensor (PJRT buffer + logical shape) — the substrate
-/// analog of data parked in the fabric's BRAMs.
+/// analog of data parked in the fabric's BRAMs.  The buffer is `Rc`'d so
+/// pooled constants (the shared zero accumulators) can hand the same
+/// device memory to many holders; PJRT buffers are immutable once
+/// written, so sharing is safe.
 pub struct DeviceTensor {
     pub shape: Vec<usize>,
-    pub(crate) buf: xla::PjRtBuffer,
+    pub(crate) buf: Rc<xla::PjRtBuffer>,
 }
 
 /// Execution statistics (the host-side AXI-timer analog).
@@ -70,6 +73,9 @@ pub struct ExecStats {
     pub uploads: u64,
     /// Device→host transfers (fetches; the AXI read-DMA analog).
     pub fetches: u64,
+    /// Uploads *avoided* by the device zero-buffer pool (a request for a
+    /// zero buffer whose shape was already device-resident).
+    pub pool_hits: u64,
     /// Wall time spent inside PJRT execute, seconds.
     pub execute_secs: f64,
 }
@@ -86,8 +92,18 @@ pub struct Executor {
     stats: RefCell<ExecStats>,
     /// When `Some`, every dispatched artifact name is appended — the
     /// backend-equivalence tests compare this against the cycle backend's
-    /// trace of the same program.
-    trace: RefCell<Option<Vec<String>>>,
+    /// trace of the same program.  Names are interned (`interned`), so
+    /// recording costs no allocation per dispatch.
+    trace: RefCell<Option<Vec<&'static str>>>,
+    /// Artifact-name intern table.  Bounded by the number of distinct
+    /// artifacts in the manifest (the leaked allocation is one short
+    /// string per artifact for the life of the process — the same
+    /// lifetime as the compiled-executable cache).
+    interned: RefCell<HashMap<String, &'static str>>,
+    /// Device-resident all-zero buffers by shape: the zero accumulators
+    /// every topology's runtime tensor set needs are shape constants of
+    /// the fabric, so one immutable buffer per shape serves all of them.
+    zeros: RefCell<HashMap<Vec<usize>, Rc<xla::PjRtBuffer>>>,
 }
 
 impl Executor {
@@ -101,6 +117,8 @@ impl Executor {
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(ExecStats::default()),
             trace: RefCell::new(None),
+            interned: RefCell::new(HashMap::new()),
+            zeros: RefCell::new(HashMap::new()),
         })
     }
 
@@ -112,13 +130,30 @@ impl Executor {
 
     /// Take the recorded dispatch trace (artifact names in dispatch
     /// order), stopping the recording.
-    pub fn take_trace(&self) -> Vec<String> {
+    pub fn take_trace(&self) -> Vec<&'static str> {
         self.trace.borrow_mut().take().unwrap_or_default()
     }
 
+    /// Intern an artifact name: one `String` allocation the *first* time
+    /// a name is seen, `&'static str` forever after — the dispatch hot
+    /// path never allocates for tracing.
+    fn intern(&self, name: &str) -> &'static str {
+        if let Some(s) = self.interned.borrow().get(name) {
+            return s;
+        }
+        let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+        self.interned.borrow_mut().insert(name.to_string(), leaked);
+        leaked
+    }
+
     fn record_dispatch(&self, name: &str) {
-        if let Some(t) = self.trace.borrow_mut().as_mut() {
-            t.push(name.to_string());
+        // The borrow is taken twice on purpose: intern() needs the
+        // interned map, not the trace, and only runs when tracing is on.
+        if self.trace.borrow().is_some() {
+            let s = self.intern(name);
+            if let Some(t) = self.trace.borrow_mut().as_mut() {
+                t.push(s);
+            }
         }
     }
 
@@ -168,9 +203,11 @@ impl Executor {
         Ok(())
     }
 
-    /// Execute artifact `name` with shape-checked inputs.
+    /// Execute artifact `name` with shape-checked inputs.  The manifest
+    /// metadata is *borrowed* on this path — no per-dispatch clone of the
+    /// nested shape vectors.
     pub fn run(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
-        let meta = self.lookup(name)?.clone();
+        let meta = self.lookup(name)?;
         if inputs.len() != meta.inputs.len() {
             bail!("artifact '{name}': {} inputs given, {} expected", inputs.len(), meta.inputs.len());
         }
@@ -226,7 +263,21 @@ impl Executor {
             .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
             .context("host->device transfer")?;
         self.stats.borrow_mut().uploads += 1;
-        Ok(DeviceTensor { shape: t.shape.clone(), buf })
+        Ok(DeviceTensor { shape: t.shape.clone(), buf: Rc::new(buf) })
+    }
+
+    /// A device-resident all-zero buffer of `shape` from the zero pool:
+    /// uploaded once per distinct shape for the life of the executor,
+    /// shared (immutably) by every holder afterwards.  Pool hits count in
+    /// `ExecStats::pool_hits` instead of `uploads`.
+    pub fn shared_zeros(&self, shape: &[usize]) -> anyhow::Result<DeviceTensor> {
+        if let Some(buf) = self.zeros.borrow().get(shape) {
+            self.stats.borrow_mut().pool_hits += 1;
+            return Ok(DeviceTensor { shape: shape.to_vec(), buf: buf.clone() });
+        }
+        let t = self.to_device(&Tensor::zeros(shape.to_vec()))?;
+        self.zeros.borrow_mut().insert(shape.to_vec(), t.buf.clone());
+        Ok(t)
     }
 
     /// Download a device tensor.
@@ -242,7 +293,7 @@ impl Executor {
     /// the returned buffer can feed the next dispatch directly
     /// (accumulator chaining across the tile schedule).
     pub fn run_dev(&self, name: &str, inputs: &[&DeviceTensor]) -> anyhow::Result<DeviceTensor> {
-        let meta = self.lookup(name)?.clone();
+        let meta = self.lookup(name)?;
         if inputs.len() != meta.inputs.len() {
             bail!("artifact '{name}': {} inputs given, {} expected", inputs.len(), meta.inputs.len());
         }
@@ -255,7 +306,7 @@ impl Executor {
             bail!("run_dev needs a single-output artifact ('{name}' has {})", meta.outputs.len());
         }
         let exe = self.executable(name)?;
-        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|d| &d.buf).collect();
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|d| d.buf.as_ref()).collect();
         let t0 = std::time::Instant::now();
         let mut out = exe.execute_b(&bufs).with_context(|| format!("executing '{name}'"))?;
         {
@@ -264,7 +315,7 @@ impl Executor {
             s.execute_secs += t0.elapsed().as_secs_f64();
         }
         self.record_dispatch(name);
-        Ok(DeviceTensor { shape: meta.outputs[0].clone(), buf: out[0].remove(0) })
+        Ok(DeviceTensor { shape: meta.outputs[0].clone(), buf: Rc::new(out[0].remove(0)) })
     }
 
     /// Single-output convenience.
@@ -362,7 +413,7 @@ mod tests {
         let ad = e.to_device(&acc).unwrap();
         let out = e.run_dev("mm_qkv", &[&xd, &wd, &ad]).unwrap();
         let _ = e.fetch(&out).unwrap();
-        assert_eq!(e.take_trace(), vec!["mm_qkv".to_string()]);
+        assert_eq!(e.take_trace(), vec!["mm_qkv"]);
         let st = e.stats();
         assert_eq!(st.uploads, 3);
         assert_eq!(st.fetches, 1);

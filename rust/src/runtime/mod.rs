@@ -16,10 +16,12 @@
 pub mod artifact;
 pub mod backend;
 pub mod executor;
+pub mod pool;
 
 pub use artifact::{ArtifactMeta, Manifest};
 pub use backend::FabricBackend;
 pub use executor::{DeviceTensor, Executor, Tensor};
+pub use pool::TensorPool;
 
 /// Default artifact directory relative to the repo root.
 pub fn default_artifact_dir() -> std::path::PathBuf {

@@ -1,0 +1,132 @@
+//! Buffer pooling for the request hot path.
+//!
+//! Two pools exist, mirroring the two memory spaces of the substrate:
+//!
+//! * [`TensorPool`] (here) — **host scratch** reuse.  A `TileProgram`
+//!   replay materializes dozens of transient host tensors (panel
+//!   extracts, zero-initialized assembly targets, fetch staging).  The
+//!   pool recycles their backing `Vec<f32>` allocations by shape across
+//!   steps *and across requests*, so a steady-state serving loop
+//!   allocates no host scratch at all — the analog of the paper's
+//!   statically-sized BRAM buffers, which exist once and are reused by
+//!   every inference.
+//! * the device **zero-buffer pool** inside `runtime::Executor` — the
+//!   per-topology zero accumulators (`RuntimeId::Zero*`) are
+//!   topology-independent (their shapes are synthesis constants), so one
+//!   device-resident buffer per shape serves every programmed topology;
+//!   see `Executor::shared_zeros` and `FabricBackend::upload_zeros`.
+//!
+//! The pool is deliberately `!Sync` (interior mutability via `RefCell`)
+//! — it lives next to the engine on its fabric thread, like everything
+//! else that touches PJRT.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use super::executor::Tensor;
+
+/// Free buffers kept per shape; beyond this they are simply dropped.
+/// A replay's peak simultaneous scratch per shape is small (panel count
+/// of one module chain), so the cap only guards pathological churn.
+const PER_SHAPE_CAP: usize = 16;
+
+/// A shape-keyed free list of host tensor allocations.
+#[derive(Debug, Default)]
+pub struct TensorPool {
+    free: RefCell<HashMap<Vec<usize>, Vec<Vec<f32>>>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl TensorPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A tensor of `shape` filled with zeros (recycled allocation when
+    /// one of this shape is free).
+    pub fn take_zeroed(&self, shape: &[usize]) -> Tensor {
+        let mut t = self.take_uninit(shape);
+        t.data.fill(0.0);
+        t
+    }
+
+    /// A tensor of `shape` with **unspecified contents** (stale data from
+    /// a previous user when recycled).  Callers must overwrite every
+    /// element before reading.
+    pub fn take_uninit(&self, shape: &[usize]) -> Tensor {
+        if let Some(data) = self.free.borrow_mut().get_mut(shape).and_then(Vec::pop) {
+            self.hits.set(self.hits.get() + 1);
+            return Tensor::new(shape.to_vec(), data);
+        }
+        self.misses.set(self.misses.get() + 1);
+        Tensor::zeros(shape.to_vec())
+    }
+
+    /// Return a tensor's allocation to the pool (empty tensors — the
+    /// replay's placeholder slots — are ignored).
+    pub fn put(&self, t: Tensor) {
+        if t.data.is_empty() {
+            return;
+        }
+        let mut free = self.free.borrow_mut();
+        let list = free.entry(t.shape).or_default();
+        if list.len() < PER_SHAPE_CAP {
+            list.push(t.data);
+        }
+    }
+
+    /// `(hits, misses)` of `take_*` calls — steady state is all hits.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_by_shape() {
+        let p = TensorPool::new();
+        let a = p.take_zeroed(&[4, 8]);
+        assert_eq!(p.stats(), (0, 1));
+        p.put(a);
+        let b = p.take_zeroed(&[4, 8]);
+        assert_eq!(p.stats(), (1, 1), "same shape must recycle");
+        assert!(b.data.iter().all(|v| *v == 0.0));
+        let _c = p.take_zeroed(&[8, 4]);
+        assert_eq!(p.stats(), (1, 2), "different shape is a fresh allocation");
+    }
+
+    #[test]
+    fn uninit_take_reuses_without_zeroing() {
+        let p = TensorPool::new();
+        let mut a = p.take_uninit(&[2, 2]);
+        a.data.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.put(a);
+        let b = p.take_uninit(&[2, 2]);
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0, 4.0], "uninit take keeps stale contents");
+        let c = p.take_zeroed(&[2, 2]);
+        // b still holds the only recycled buffer, so c is fresh zeros
+        assert!(c.data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn empty_tensors_are_not_pooled() {
+        let p = TensorPool::new();
+        p.put(Tensor::zeros(vec![0]));
+        let _ = p.take_zeroed(&[0]);
+        assert_eq!(p.stats(), (0, 1));
+    }
+
+    #[test]
+    fn per_shape_cap_bounds_memory() {
+        let p = TensorPool::new();
+        for _ in 0..40 {
+            p.put(Tensor::zeros(vec![3]));
+        }
+        let held = p.free.borrow().get(&vec![3usize][..]).map(|v| v.len()).unwrap_or(0);
+        assert!(held <= PER_SHAPE_CAP);
+    }
+}

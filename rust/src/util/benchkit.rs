@@ -2,7 +2,9 @@
 //!
 //! Each `cargo bench` target is a `harness = false` binary that uses this:
 //! warmup + timed samples + robust summary, printed in a stable format the
-//! perf log in EXPERIMENTS.md §Perf quotes directly.
+//! perf log in EXPERIMENTS.md §Perf quotes directly — and, via
+//! [`write_json`], dumped machine-readable (p50/p95/p99 per bench) so the
+//! perf trajectory can be tracked across PRs (`BENCH_hotpath.json`).
 
 use std::time::Instant;
 
@@ -69,6 +71,48 @@ pub fn run_suite(title: &str, cases: Vec<BenchResult>) {
     }
 }
 
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Serialize results as machine-readable JSON (times in seconds; plain
+/// `{}` float formatting round-trips f64 exactly).  Input order is kept.
+pub fn to_json(results: &[BenchResult]) -> String {
+    let mut s = String::from("{\n  \"version\": 1,\n  \"benches\": {\n");
+    for (i, r) in results.iter().enumerate() {
+        let m = &r.summary;
+        s.push_str(&format!(
+            "    \"{}\": {{\"n\": {}, \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \
+             \"mean_s\": {}, \"std_s\": {}, \"min_s\": {}, \"max_s\": {}}}{}\n",
+            json_escape(&r.name),
+            m.n,
+            m.p50,
+            m.p95,
+            m.p99,
+            m.mean,
+            m.std,
+            m.min,
+            m.max,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  }\n}\n");
+    s
+}
+
+/// Write [`to_json`] to `path` — benches call this at the end of a normal
+/// run (e.g. `BENCH_hotpath.json` from `benches/hotpath.rs`).
+pub fn write_json(path: impl AsRef<std::path::Path>, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(results))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +125,25 @@ mod tests {
         assert!(r.summary.min >= 0.0);
         assert!(r.summary.n == 10);
         assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn json_emission_is_parseable_and_complete() {
+        let a = bench("fast/one", 0, 5, || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        let b = bench("slow \"two\"", 0, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let text = to_json(&[a, b]);
+        let j = crate::util::json::parse(&text).expect("bench JSON must parse");
+        let benches = j.get("benches").and_then(|b| b.as_obj()).unwrap();
+        assert_eq!(benches.len(), 2);
+        let one = benches.get("fast/one").unwrap();
+        assert_eq!(one.get("n").unwrap().as_usize(), Some(5));
+        for key in ["p50_s", "p95_s", "p99_s", "mean_s", "min_s", "max_s", "std_s"] {
+            assert!(one.get(key).unwrap().as_f64().is_some(), "missing {key}");
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -29,6 +30,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         min: sorted[0],
         p50: q(0.5),
         p95: q(0.95),
+        p99: q(0.99),
         max: sorted[n - 1],
     }
 }
@@ -47,16 +49,17 @@ mod tests {
         let s = summarize(&[2.0; 10]);
         assert_eq!(s.mean, 2.0);
         assert_eq!(s.std, 0.0);
-        assert_eq!((s.min, s.p50, s.p95, s.max), (2.0, 2.0, 2.0, 2.0));
+        assert_eq!((s.min, s.p50, s.p95, s.p99, s.max), (2.0, 2.0, 2.0, 2.0, 2.0));
     }
 
     #[test]
     fn percentiles_ordered() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let s = summarize(&xs);
-        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert_eq!(s.p50, 50.0);
         assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Optimizer equivalence: every `accel::schedule::opt` pass must preserve
+//! replay semantics.  These tests run **without** the AOT artifact set by
+//! replaying programs on a *pseudo-numeric* backend whose dispatch output
+//! is a deterministic pure function of `(artifact, input values)` — if
+//! the optimized program feeds every dispatch bit-identical operands in a
+//! legal order, its replay output is bit-identical to the raw program's.
+//! (The PJRT counterparts, gated on artifacts, live in
+//! `integration_program.rs`.)
+
+use std::collections::HashMap;
+
+use adaptor::accel::schedule::{
+    self, opt, optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder,
+    TileProgram, WeightKind, WeightRef, WeightSource,
+};
+use adaptor::model::TnnConfig;
+use adaptor::runtime::{FabricBackend, Tensor, TensorPool};
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+/// Topologies legal on the default fabric (seq_len, heads, width and
+/// depth all vary — the property must hold across the space).
+fn topology_sweep() -> Vec<TnnConfig> {
+    vec![
+        TnnConfig::encoder(16, 128, 2, 1),
+        TnnConfig::encoder(32, 256, 4, 2),
+        TnnConfig::encoder(48, 128, 2, 3),
+        TnnConfig::encoder(64, 384, 6, 1),
+        TnnConfig::encoder(128, 128, 2, 1),
+    ]
+}
+
+fn fnv(s: &str) -> u32 {
+    s.bytes().fold(2166136261u32, |h, b| (h ^ b as u32).wrapping_mul(16777619))
+}
+
+/// A backend whose buffers are host tensors and whose dispatch output is
+/// a bounded, deterministic mix of its inputs.  Reordering independent
+/// dispatches cannot change any output; feeding a different value (or the
+/// same values in a different argument order) must.
+struct HashBackend;
+
+impl FabricBackend for HashBackend {
+    type Buf = Tensor;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(t.clone())
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&Tensor],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        let n: usize = out_shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        let mut h = fnv(artifact);
+        for (k, t) in inputs.iter().enumerate() {
+            let len = t.data.len().max(1);
+            let w = ((h % 13) + k as u32 + 1) as f32 * 0.0625;
+            for (j, v) in data.iter_mut().enumerate() {
+                *v += t.data[(j + 7 * k) % len] * w;
+            }
+            h = h.wrapping_mul(16777619) ^ (k as u32 + 1);
+        }
+        // keep magnitudes bounded so deep programs never overflow
+        for v in data.iter_mut() {
+            *v = (*v * 0.25).sin();
+        }
+        Ok(Tensor::new(out_shape.to_vec(), data))
+    }
+
+    fn fetch(&self, b: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(b.clone())
+    }
+}
+
+/// The fabric-fixed panel shape of a weight kind (mirrors the cycle
+/// backend's `ShapeWeights`).
+fn weight_shape(f: &FabricConstants, kind: WeightKind) -> Vec<usize> {
+    match kind {
+        WeightKind::Wq | WeightKind::Wk | WeightKind::Wv => vec![f.ts_mha, f.dk],
+        WeightKind::QkvPacked => vec![f.ts_mha, 3 * f.dk],
+        WeightKind::Bq | WeightKind::Bk | WeightKind::Bv => vec![f.dk],
+        WeightKind::BQkvPacked => vec![3 * f.dk],
+        WeightKind::Wo => vec![f.ts_ffn, f.ts_ffn],
+        WeightKind::Bo
+        | WeightKind::B2
+        | WeightKind::G1
+        | WeightKind::B1n
+        | WeightKind::G2
+        | WeightKind::B2n => vec![f.dmodel_max],
+        WeightKind::W1 => vec![f.ts_ffn, f.ffn_col],
+        WeightKind::B1 => vec![f.hidden_max],
+        WeightKind::W2 => vec![f.ffn_col, f.ts_ffn],
+    }
+}
+
+/// Deterministic, per-reference-distinct weight stand-ins for every
+/// `WeightRef` a program mentions.
+struct HashWeights {
+    map: HashMap<WeightRef, Tensor>,
+}
+
+impl HashWeights {
+    fn for_program(prog: &TileProgram, f: &FabricConstants) -> Self {
+        let mut map = HashMap::new();
+        for step in &prog.steps {
+            let schedule::Step::Dispatch { args, .. } = step else { continue };
+            for arg in args {
+                let schedule::Operand::Weight(r) = arg else { continue };
+                map.entry(*r).or_insert_with(|| {
+                    let shape = weight_shape(f, r.kind);
+                    let seed =
+                        fnv(&format!("{:?}/{}/{}/{}", r.kind, r.layer, r.row, r.col)) % 1000;
+                    let n: usize = shape.iter().product();
+                    let data =
+                        (0..n).map(|i| ((seed as usize + i) as f32 * 0.137).sin()).collect();
+                    Tensor::new(shape, data)
+                });
+            }
+        }
+        HashWeights { map }
+    }
+}
+
+impl WeightSource<Tensor> for HashWeights {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Tensor> {
+        self.map.get(r).ok_or_else(|| anyhow::anyhow!("unseeded weight ref {r:?}"))
+    }
+}
+
+/// Padded input with deterministic nonzero content in the valid prefix.
+fn test_input(cfg: &TnnConfig, f: &FabricConstants) -> Tensor {
+    let mut t = Tensor::zeros(vec![f.sl_max, f.dmodel_max]);
+    for r in 0..cfg.seq_len {
+        for c in 0..cfg.d_model {
+            t.data[r * f.dmodel_max + c] = ((r * 31 + c) as f32 * 0.0917).sin();
+        }
+    }
+    t
+}
+
+fn replay_on_hash(
+    prog: &TileProgram,
+    weights: &HashWeights,
+    pool: Option<&TensorPool>,
+) -> Tensor {
+    let backend = HashBackend;
+    let runtime = schedule::build_runtime(&backend, &prog.cfg, &prog.fabric).unwrap();
+    let input = test_input(&prog.cfg, &prog.fabric);
+    schedule::replay_with(prog, &backend, weights, &runtime, input, pool).unwrap()
+}
+
+#[test]
+fn o1_replay_is_bit_identical_across_the_topology_sweep() {
+    let f = fc();
+    for cfg in topology_sweep() {
+        let raw = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let mut optd = raw.clone();
+        optimize(&mut optd, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        opt::validate_waves(&optd).unwrap();
+
+        // O1 may only reorder and drop redundant transfers
+        let mut before: Vec<&str> = raw.dispatch_sequence();
+        let mut after: Vec<&str> = optd.dispatch_sequence();
+        before.sort_unstable();
+        after.sort_unstable();
+        assert_eq!(before, after, "{cfg}: O1 changed the dispatch multiset");
+        assert!(optd.upload_count() <= raw.upload_count(), "{cfg}");
+        assert!(optd.wave_count() > 1, "{cfg}: no wave partition");
+
+        let weights = HashWeights::for_program(&raw, &f);
+        let a = replay_on_hash(&raw, &weights, None);
+        let b = replay_on_hash(&optd, &weights, None);
+        assert_eq!(a.shape, b.shape, "{cfg}");
+        assert!(a.data == b.data, "{cfg}: optimized replay diverged bit-for-bit");
+    }
+}
+
+#[test]
+fn pooled_replay_is_bit_identical_and_recycles() {
+    let f = fc();
+    let cfg = TnnConfig::encoder(32, 256, 4, 2);
+    let mut prog = ScheduleBuilder::new(f, cfg).unwrap().build();
+    optimize(&mut prog, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+    let weights = HashWeights::for_program(&prog, &f);
+    let plain = replay_on_hash(&prog, &weights, None);
+    let pool = TensorPool::new();
+    let pooled1 = replay_on_hash(&prog, &weights, Some(&pool));
+    assert!(plain.data == pooled1.data, "pooled replay must not change numerics");
+    let (_, misses1) = pool.stats();
+    let pooled2 = replay_on_hash(&prog, &weights, Some(&pool));
+    assert!(plain.data == pooled2.data, "recycled buffers must not leak stale data");
+    let (hits2, misses2) = pool.stats();
+    assert!(hits2 > 0, "second replay must recycle");
+    assert_eq!(misses1, misses2, "steady state allocates no new host scratch");
+}
+
+#[test]
+fn quantized_o1_replay_is_bit_identical() {
+    // CalibrateScale is the one data-dependent step: a reorder that
+    // changed what the calibration sees would change the scale.
+    let f = fc();
+    let cfg = TnnConfig::encoder(32, 256, 4, 2);
+    let raw = ScheduleBuilder::new(f, cfg).unwrap().quantized(true).build();
+    let mut optd = raw.clone();
+    optimize(&mut optd, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+    let weights = HashWeights::for_program(&raw, &f);
+    let a = replay_on_hash(&raw, &weights, None);
+    let b = replay_on_hash(&optd, &weights, None);
+    assert!(a.data == b.data, "quantized optimized replay diverged");
+}
+
+#[test]
+fn o2_fused_program_replays_with_fewer_dispatches() {
+    let f = fc();
+    let cfg = TnnConfig::encoder(32, 256, 4, 2);
+    let raw = ScheduleBuilder::new(f, cfg).unwrap().build();
+    let mut optd = raw.clone();
+    optimize(&mut optd, OptLevel::O2, &ArtifactInventory::assume_all()).unwrap();
+    assert!(optd.dispatch_count() < raw.dispatch_count());
+    assert!(
+        optd.dispatch_count() + optd.upload_count()
+            < raw.dispatch_count() + raw.upload_count(),
+        "O2 must make the replay strictly cheaper in dispatches+uploads"
+    );
+    // The fused program must still replay end to end (operand wiring of
+    // the fused dispatches is exercised by the hash backend).
+    let weights = HashWeights::for_program(&raw, &f);
+    let out = replay_on_hash(&optd, &weights, None);
+    assert_eq!(out.shape, vec![f.sl_max, f.dmodel_max]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn wave_partition_widths_track_head_parallelism() {
+    let f = fc();
+    let narrow = {
+        let mut p = ScheduleBuilder::new(f, TnnConfig::encoder(32, 128, 2, 1)).unwrap().build();
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        p.max_wave_dispatches()
+    };
+    let wide = {
+        let mut p = ScheduleBuilder::new(f, TnnConfig::encoder(32, 384, 6, 1)).unwrap().build();
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        p.max_wave_dispatches()
+    };
+    assert!(wide > narrow, "more heads must expose wider waves ({wide} vs {narrow})");
+}
+
+#[test]
+fn every_opt_level_keeps_the_program_interface() {
+    let f = fc();
+    let cfg = TnnConfig::encoder(32, 256, 4, 1);
+    for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        let mut p = ScheduleBuilder::new(f, cfg).unwrap().build();
+        let (inp, outp) = (p.input_host, p.output_host);
+        optimize(&mut p, level, &ArtifactInventory::assume_all()).unwrap();
+        assert_eq!((p.input_host, p.output_host), (inp, outp), "{level:?}");
+        let weights = HashWeights::for_program(&p, &f);
+        let out = replay_on_hash(&p, &weights, None);
+        assert_eq!(out.shape, vec![f.sl_max, f.dmodel_max], "{level:?}");
+    }
+}

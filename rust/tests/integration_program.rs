@@ -4,7 +4,7 @@
 //! contract), and the schedule cache must turn the request path into
 //! "look up program, replay".
 
-use adaptor::accel::schedule::{AttentionMode, ScheduleBuilder};
+use adaptor::accel::schedule::{AttentionMode, OptLevel, ScheduleBuilder};
 use adaptor::accel::sim::cycle;
 use adaptor::coordinator::TileEngine;
 use adaptor::model::{presets, reference, weights, TnnConfig};
@@ -52,9 +52,11 @@ fn pjrt_and_cycle_backend_replay_identical_streams() {
 
         // both must also agree with the program's own stream
         let prog = e.cached_program(&cfg).unwrap();
-        let want: Vec<String> =
-            prog.program.dispatch_sequence().iter().map(|s| s.to_string()).collect();
-        assert_eq!(pjrt_trace, want, "{cfg}: PJRT strayed from the program");
+        assert_eq!(
+            pjrt_trace,
+            prog.program.dispatch_sequence(),
+            "{cfg}: PJRT strayed from the program"
+        );
     }
 }
 
@@ -93,7 +95,10 @@ fn cached_replay_drops_per_request_transfers() {
     // mask/dmask/count/zero tensors per request.  The program does
     // neither: uploads per replay == the program's Upload/Calibrate steps,
     // and the formula below contains no full-x term beyond the input.
+    // Pinned to O0: the closed-form counts describe the builder's raw
+    // stream (the optimized stream is covered by the tests below).
     let mut e = engine();
+    e.opt_level = OptLevel::O0;
     let cfg = presets::small_encoder(32, 3);
     let ws = weights::init_stack(81, cfg.d_model, cfg.heads, cfg.enc_layers);
     e.program(&cfg).unwrap();
@@ -166,6 +171,71 @@ fn programs_for_shared_topology_are_shared_across_models() {
     let o2 = e.run_encoder(&p2, &x).unwrap();
     assert_eq!(e.program_cache_stats(), (1, 1), "second stack hits the same program");
     assert!(o1.max_abs_diff(&o2) > 1e-6, "different weights, different outputs");
+}
+
+#[test]
+fn o1_optimized_replay_matches_raw_bit_for_bit_on_pjrt() {
+    require_artifacts!();
+    // O1 is pure reorder + transfer dedup: every dispatch still receives
+    // bit-identical operands, so PJRT outputs are bit-identical too.
+    let mut e = engine();
+    for cfg in topology_sweep() {
+        let ws = weights::init_stack(91, cfg.d_model, cfg.heads, cfg.enc_layers);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        let x = weights::init_input(92, cfg.seq_len, cfg.d_model);
+        e.opt_level = OptLevel::O0;
+        let raw = e.run_encoder(&p, &x).unwrap();
+        e.opt_level = OptLevel::O1;
+        let optd = e.run_encoder(&p, &x).unwrap();
+        assert_eq!(
+            raw.max_abs_diff(&optd),
+            0.0,
+            "{cfg}: O1 replay must be bit-identical to the raw stream"
+        );
+    }
+}
+
+#[test]
+fn o2_serving_path_is_strictly_cheaper_and_in_band() {
+    require_artifacts!();
+    // The acceptance gate: the optimized encoder-layer replay must
+    // strictly reduce dispatches+uploads vs the unoptimized program,
+    // measured from ExecStats on the real PJRT path.
+    let mut e = engine();
+    let cfg = presets::small_encoder(64, 2);
+    let ws = weights::init_stack(93, cfg.d_model, cfg.heads, cfg.enc_layers);
+    e.program(&cfg).unwrap();
+    let p = e.prepare(&cfg, &ws).unwrap();
+    let x = weights::init_input(94, cfg.seq_len, cfg.d_model);
+
+    e.opt_level = OptLevel::O0;
+    let raw_out = e.run_encoder(&p, &x).unwrap(); // warm O0 program
+    let s0 = e.executor().stats();
+    e.run_encoder(&p, &x).unwrap();
+    let s1 = e.executor().stats();
+
+    e.opt_level = OptLevel::O2;
+    let opt_out = e.run_encoder(&p, &x).unwrap(); // warm O2 program
+    let s2 = e.executor().stats();
+    e.run_encoder(&p, &x).unwrap();
+    let s3 = e.executor().stats();
+
+    let (d0, u0) = (s1.dispatches - s0.dispatches, s1.uploads - s0.uploads);
+    let (d2, u2) = (s3.dispatches - s2.dispatches, s3.uploads - s2.uploads);
+    assert!(d2 < d0, "optimized replay must dispatch less ({d2} vs {d0})");
+    assert!(u2 <= u0, "optimized replay must not upload more ({u2} vs {u0})");
+    assert!(d2 + u2 < d0 + u0, "dispatches+uploads must strictly drop");
+    // counts must agree with the cached programs themselves
+    let prog = e.cached_program(&cfg).unwrap();
+    assert_eq!(d2, prog.program.dispatch_count() as u64);
+    assert_eq!(u2, prog.program.upload_count() as u64);
+    // and numerics stay within the fused artifacts' band
+    assert!(raw_out.max_abs_diff(&opt_out) < 1e-3);
+    // the dispatch trace of the optimized replay is the optimized stream
+    e.executor().trace_dispatches(true);
+    e.run_encoder(&p, &x).unwrap();
+    assert_eq!(e.executor().take_trace(), prog.program.dispatch_sequence());
 }
 
 #[test]
