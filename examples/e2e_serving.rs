@@ -134,6 +134,44 @@ fn main() -> anyhow::Result<()> {
     out.push_str("\n--- pool metrics (per-fabric breakdown) ---\n");
     out.push_str(&mn.report());
 
+    // --- generation workload: a GPT-style decoder through the pool ----
+    // (skipped gracefully on artifact sets predating the decode-step
+    // artifacts — re-run `make artifacts`.)
+    out.push_str("\n=== generation (decoder-only gpt-small through the pool) ===\n");
+    let gpt = ModelSpec::new("gpt-small", presets::gpt_small(32, 2), 44);
+    let mut gcfg = ServerConfig::new(vec![gpt.clone()]);
+    gcfg.pool_size = pool.min(2);
+    match Server::start(gcfg) {
+        Err(e) => out.push_str(&format!("generation section skipped: {e:#}\n")),
+        Ok(gserver) => {
+            let prompt = weights::init_input(71, 6, gpt.cfg.d_model);
+            let steps = 8;
+            let resp = gserver.generate(adaptor::coordinator::GenerateRequest {
+                model: gpt.name.clone(),
+                prompt: prompt.clone(),
+                source: None,
+                steps,
+            })?;
+            // verify against the dense greedy-decode oracle
+            let want = reference::greedy_decode(&prompt, None, &gpt.decoder_weights(), steps);
+            assert_eq!(resp.tokens, want.tokens, "served tokens must match the oracle");
+            let diff = resp.rows.max_abs_diff(&want.rows);
+            assert!(diff < 5e-3, "generated rows vs oracle diff {diff}");
+            let mean_step = resp.step_times.iter().map(|d| d.as_secs_f64()).sum::<f64>()
+                / resp.step_times.len().max(1) as f64;
+            out.push_str(&format!(
+                "{} tokens {:?} (oracle-verified)\nprefill {:.2} ms, {:.2} ms/token over {} cached steps\n",
+                resp.tokens.len(),
+                resp.tokens,
+                resp.prefill.as_secs_f64() * 1e3,
+                mean_step * 1e3,
+                resp.step_times.len()
+            ));
+            let gm = gserver.shutdown()?;
+            out.push_str(&gm.report());
+        }
+    }
+
     // --- what the paper's U55C build would do for the same traffic ----
     let tiles = TileConfig::paper_optimum();
     let p = platform::u55c();

@@ -82,6 +82,16 @@ def _primitive_fns() -> Dict[str, Callable]:
             kernels.bias_add(x, b), res, g, bn, m, c
         ),
         "quantize": kernels.quantize_dequantize,
+        # decode-step (single-token) primitives
+        "dec_qkv_row": kernels.row_proj,
+        "qk_row": kernels.qk_row,
+        "softmax_row": kernels.softmax_row,
+        "sv_row": kernels.sv_row,
+        "kv_append": kernels.kv_append,
+        "dec_proj_row": kernels.row_proj,
+        "dec_ffn1_row": kernels.row_proj_relu,
+        "dec_ffn2_row": kernels.row_proj,
+        "residual_ln_row": kernels.residual_ln_row,
     }
 
 

@@ -162,6 +162,59 @@ def tile_primitive_specs() -> List[ArtifactSpec]:
         [(SL_MAX, DMODEL_MAX), (1,)],
         [(SL_MAX, DMODEL_MAX)],
         "int8 symmetric fake-quantization of activations"))
+    # ---- decode-step (single-token) primitives: the KV-cached
+    # autoregressive path.  One activation row fits a single BRAM line, so
+    # the row datapath streams each full weight matrix in one visit
+    # instead of walking SL_MAX-row panel tiles — which is what makes a
+    # decode step strictly cheaper than re-running prefill.
+    s.append(ArtifactSpec(
+        "dec_qkv_row",
+        [(1, DMODEL_MAX), (DMODEL_MAX, DK), (DK,)],
+        [(1, DK)],
+        "one token row's full Q/K/V projection + bias in one visit"))
+    s.append(ArtifactSpec(
+        "qk_row",
+        [(1, DK), (SL_MAX, DK), (1, SL_MAX), (1,)],
+        [(1, SL_MAX)],
+        "one query row vs the cached K panel, scaled + masked "
+        "(Algorithm 11's row slice; the mask row fences keys > pos)"))
+    s.append(ArtifactSpec(
+        "softmax_row",
+        [(1, SL_MAX)],
+        [(1, SL_MAX)],
+        "row softmax of one score row (Algorithm 7)"))
+    s.append(ArtifactSpec(
+        "sv_row",
+        [(1, SL_MAX), (SL_MAX, DK)],
+        [(1, DK)],
+        "one probability row @ cached V panel (Algorithm 12's row slice)"))
+    s.append(ArtifactSpec(
+        "kv_append",
+        [(SL_MAX, DK), (1, DK), (1,)],
+        [(SL_MAX, DK)],
+        "append the new K/V row into the cache panel at the runtime "
+        "position (the KV-cache BRAM line write)"))
+    s.append(ArtifactSpec(
+        "dec_proj_row",
+        [(1, DMODEL_MAX), (DMODEL_MAX, DMODEL_MAX), (DMODEL_MAX,)],
+        [(1, DMODEL_MAX)],
+        "one row's full output projection + bias"))
+    s.append(ArtifactSpec(
+        "dec_ffn1_row",
+        [(1, DMODEL_MAX), (DMODEL_MAX, HIDDEN_MAX), (HIDDEN_MAX,)],
+        [(1, HIDDEN_MAX)],
+        "one row's full FFN2 (d -> 4d) with bias + ReLU fused"))
+    s.append(ArtifactSpec(
+        "dec_ffn2_row",
+        [(1, HIDDEN_MAX), (HIDDEN_MAX, DMODEL_MAX), (DMODEL_MAX,)],
+        [(1, DMODEL_MAX)],
+        "one row's full FFN3 (4d -> d) + bias"))
+    s.append(ArtifactSpec(
+        "residual_ln_row",
+        [(1, DMODEL_MAX), (1, DMODEL_MAX), (DMODEL_MAX,),
+         (DMODEL_MAX,), (DMODEL_MAX,), (1,)],
+        [(1, DMODEL_MAX)],
+        "masked residual LayerNorm of one row (Algorithm 8's row slice)"))
     return s
 
 

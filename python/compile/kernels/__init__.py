@@ -6,6 +6,8 @@ correctness before any artifact is emitted.
 
 from .attention import (attention_head, attention_head_packed, padding_mask,
                         qk_scores, softmax_rows, sv)
+from .decode import (kv_append, qk_row, residual_ln_row, row_proj,
+                     row_proj_relu, softmax_row, sv_row)
 from .layernorm import residual_ln
 from .matmul import bias_add, matmul_acc
 from .quant import calibrate_scale, quantize_dequantize
@@ -22,4 +24,11 @@ __all__ = [
     "matmul_acc",
     "quantize_dequantize",
     "calibrate_scale",
+    "row_proj",
+    "row_proj_relu",
+    "qk_row",
+    "softmax_row",
+    "sv_row",
+    "kv_append",
+    "residual_ln_row",
 ]

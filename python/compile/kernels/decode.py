@@ -1,0 +1,88 @@
+"""Decode-step (single-token) kernels: the KV-cached autoregressive path.
+
+A decode step processes ONE activation row, so the SL_MAX-row Pallas
+blocking of the prefill kernels degenerates to a single trivial block;
+these kernels are therefore written as plain jnp programs (they lower to
+the same single-block HLO the Pallas grid would emit, without the
+interpret-mode dispatch overhead).  Shapes are fabric maxima like every
+other tile primitive: the rust engine's masks/position inputs select the
+active sub-volume at runtime.
+
+Math contracts mirror the full-height kernels exactly:
+
+* ``row_proj`` / ``row_proj_relu`` — ``x @ W + b`` (Algorithms 9/13/14/10
+  collapsed to one visit: a 1xd row streams the whole weight matrix);
+* ``qk_row`` — one query row against the full cached K panel, scaled then
+  additively masked (Algorithm 11's row slice);
+* ``softmax_row`` / ``sv_row`` — Algorithms 7/12 over one row;
+* ``kv_append`` — write the new K/V row into the cache panel at the
+  position given by the runtime scalar (the BRAM line write);
+* ``residual_ln_row`` — the masked residual LayerNorm of
+  ``layernorm.residual_ln`` on one row.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import LN_EPS
+
+
+@jax.jit
+def row_proj(x, w, b):
+    """x @ w + b for one activation row (x: (1, D), w: (D, N), b: (N,))."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+
+
+@jax.jit
+def row_proj_relu(x, w, b):
+    """row_proj with the FFN2 ReLU fused (Algorithm 17's row slice)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    return jnp.maximum(y, 0.0)
+
+
+@jax.jit
+def qk_row(q, k, mask, scale):
+    """Mask(scale * q K^T) for one query row.
+
+    q: (1, DK); k: (SL_MAX, DK); mask: (1, SL_MAX) additive; scale: (1,).
+    """
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    return s * scale[0] + mask
+
+
+@jax.jit
+def softmax_row(s):
+    """Numerically-stable softmax over one score row."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def sv_row(p, v):
+    """p @ V for one probability row (p: (1, SL_MAX), v: (SL_MAX, DK))."""
+    return jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def kv_append(cache, row, pos):
+    """Write ``row`` into ``cache`` at row index ``pos`` (runtime scalar).
+
+    cache: (SL_MAX, DK); row: (1, DK); pos: (1,) float32 position —
+    dynamic_update_slice clamps out-of-range indices, matching the
+    fabric's saturating address counter.
+    """
+    i = pos[0].astype(jnp.int32)
+    return jax.lax.dynamic_update_slice(cache, row, (i, jnp.int32(0)))
+
+
+@jax.jit
+def residual_ln_row(x, res, gamma, beta, dmask, count):
+    """Masked LayerNorm(x + res) over one row — the row slice of
+    ``layernorm.residual_ln`` (identical arithmetic order)."""
+    z = (x + res) * dmask[None, :]
+    mu = jnp.sum(z, axis=-1, keepdims=True) / count[0]
+    d = (z - mu) * dmask[None, :]
+    var = jnp.sum(d * d, axis=-1, keepdims=True) / count[0]
+    y = gamma[None, :] * (z - mu) * jax.lax.rsqrt(var + LN_EPS) + beta[None, :]
+    return y * dmask[None, :]

@@ -1,0 +1,123 @@
+//! Generation-path bench: decoder program compilation, cycle-backend
+//! prefill vs per-token pricing, and (with the AOT artifact set present)
+//! real PJRT generation — prefill p50/p95/p99 plus per-token decode-step
+//! latency through `TileEngine::generate`.
+//!
+//! Every run writes `BENCH_decode.json` (machine-readable summaries via
+//! `util::benchkit::write_json`); without artifacts only the
+//! compiler/cycle sections run, so the CI `cargo bench --no-run` job and
+//! artifact-free environments still track the schedule-side numbers.
+
+use adaptor::accel::schedule::{optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder};
+use adaptor::accel::sim::cycle;
+use adaptor::coordinator::router::ModelSpec;
+use adaptor::coordinator::TileEngine;
+use adaptor::model::{presets, weights};
+use adaptor::runtime::{artifacts_available, default_artifact_dir, Manifest};
+use adaptor::util::benchkit::{bench, header, write_json, BenchResult};
+use adaptor::util::stats::summarize;
+
+const JSON_PATH: &str = "BENCH_decode.json";
+
+/// Compiler + cycle-backend section: runs without any artifact set.
+fn bench_decoder_compiler(results: &mut Vec<BenchResult>) {
+    let fc = FabricConstants::artifact_default();
+    let cfg = presets::gpt_small(64, 4);
+
+    println!("== decoder schedule compiler (artifact-free) ==");
+    println!("{}", header());
+    let r = bench("compile/build_prefill_4layer", 3, 50, || {
+        std::hint::black_box(ScheduleBuilder::new(fc, cfg).unwrap().build_prefill());
+    });
+    println!("{}", r.line());
+    results.push(r);
+    let r = bench("compile/build_step_4layer", 3, 50, || {
+        std::hint::black_box(ScheduleBuilder::new(fc, cfg).unwrap().build_step());
+    });
+    println!("{}", r.line());
+    results.push(r);
+    let r = bench("compile/optimize_step_o1", 3, 50, || {
+        let mut p = ScheduleBuilder::new(fc, cfg).unwrap().build_step();
+        optimize(&mut p, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        std::hint::black_box(p);
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    let pre = cycle::estimate_prefill(&cfg, &fc).unwrap();
+    let step = cycle::estimate_step(&cfg, &fc).unwrap();
+    println!(
+        "\ncycle estimate ({cfg}): prefill {} cycles / {} dispatches, decode-step {} cycles / {} \
+         dispatches ({:.2}% of prefill per token)\n",
+        pre.total_cycles,
+        pre.dispatches,
+        step.total_cycles,
+        step.dispatches,
+        100.0 * step.total_cycles as f64 / pre.total_cycles as f64,
+    );
+}
+
+/// PJRT generation section — needs the artifact set incl. decode
+/// artifacts.
+fn bench_pjrt_generation(results: &mut Vec<BenchResult>) -> anyhow::Result<()> {
+    let cfg = presets::gpt_small(48, 2);
+    let spec = ModelSpec::new("gpt", cfg, 42);
+    let mut engine = TileEngine::new(default_artifact_dir())?;
+    engine.program(&cfg)?;
+    let stack = engine.prepare_model(&cfg, &spec.weights(), &spec.decoder_weights())?;
+    let prompt = weights::init_input(7, 8, cfg.d_model);
+
+    println!("== generation (PJRT) ==");
+    println!("{}", header());
+
+    // prefill-only: prompt through the decoder stack + cache population
+    let r = bench("generate/prefill_8tok_2layer", 2, 20, || {
+        std::hint::black_box(engine.decoder_prefill(&stack, &prompt, None).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    // per-token decode-step latency, sampled from real generations
+    let mut step_samples = Vec::new();
+    for i in 0..10 {
+        let p = weights::init_input(100 + i, 8, cfg.d_model);
+        let g = engine.generate(&stack, &p, None, 9)?;
+        step_samples.extend(g.step_times.iter().map(|d| d.as_secs_f64()));
+    }
+    let summary = summarize(&step_samples);
+    let r = BenchResult { name: "generate/decode_step_per_token".into(), summary };
+    println!("{}", r.line());
+    results.push(r);
+
+    // whole-generation end to end (prefill + 9 steps)
+    let r = bench("generate/e2e_10tok_2layer", 1, 10, || {
+        std::hint::black_box(engine.generate(&stack, &prompt, None, 10).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+    Ok(())
+}
+
+fn decode_artifacts_present() -> bool {
+    artifacts_available()
+        && Manifest::load(default_artifact_dir())
+            .map(|m| m.artifacts.contains_key("kv_append"))
+            .unwrap_or(false)
+}
+
+fn main() {
+    let mut results = Vec::new();
+    bench_decoder_compiler(&mut results);
+    if decode_artifacts_present() {
+        if let Err(e) = bench_pjrt_generation(&mut results) {
+            eprintln!("PJRT generation section failed: {e:#}");
+        }
+    } else {
+        println!("(artifacts/ without decode artifacts — skipping the PJRT generation section)");
+    }
+    if let Err(e) = write_json(JSON_PATH, &results) {
+        eprintln!("could not write {JSON_PATH}: {e}");
+    } else {
+        println!("\nwrote {JSON_PATH} ({} benches)", results.len());
+    }
+}

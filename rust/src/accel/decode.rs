@@ -1,0 +1,233 @@
+//! Autoregressive decoder execution: the **KV cache** and the layout
+//! contract between the decoder programs and the serving engine.
+//!
+//! A generation runs as two program flavors per topology (both lowered by
+//! `accel::schedule::builder` and cached/optimized like any other
+//! `TileProgram`):
+//!
+//! * **prefill** — the whole prompt through every decoder layer.  Each
+//!   layer's self-attention K/V panels (and, for seq2seq topologies, the
+//!   cross-attention K/V projected once from the encoder memory) are
+//!   *exported* from the replay as device-resident buffers and become the
+//!   initial [`KvCache`];
+//! * **decode-step** — one token row.  The cache panels enter the program
+//!   as `Operand::Extern` device buffers (no re-upload), the new token's
+//!   K/V row is appended on-device (`kv_append`), and the appended panels
+//!   are exported back to advance the cache.
+//!
+//! The cache is generic over the backend buffer type so the same machinery
+//! serves the PJRT executor (`DeviceTensor`), the cycle backend (shapes)
+//! and the artifact-free property-test backends (host tensors).
+//!
+//! [`ExternLayout`] is the single source of truth for the order in which
+//! cache panels cross the program boundary; the builder and the cache both
+//! derive their indices from it.
+
+use anyhow::bail;
+
+use crate::model::TnnConfig;
+use crate::runtime::Tensor;
+
+/// Canonical ordering of cache panels across the program boundary.
+///
+/// Extern (and prefill-export) order: for each decoder layer, per head
+/// `[self_k, self_v]`, then — iff the topology has an encoder stack
+/// (cross-attention) — per head `[cross_k, cross_v]`.  Decode-step
+/// exports cover only the self entries (cross K/V are step-invariant),
+/// in the same per-layer, per-head `[k, v]` order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExternLayout {
+    pub layers: usize,
+    pub heads: usize,
+    /// Whether the topology carries cross-attention (seq2seq).
+    pub cross: bool,
+}
+
+impl ExternLayout {
+    pub fn of(cfg: &TnnConfig) -> Self {
+        ExternLayout { layers: cfg.dec_layers, heads: cfg.heads, cross: cfg.enc_layers > 0 }
+    }
+
+    /// Cache panels per decoder layer.
+    pub fn per_layer(&self) -> usize {
+        self.heads * 2 * if self.cross { 2 } else { 1 }
+    }
+
+    /// Total cache panels (= extern count of the decode-step program and
+    /// export count of the prefill program).
+    pub fn total(&self) -> usize {
+        self.layers * self.per_layer()
+    }
+
+    /// Panels a decode-step exports (self K/V only).
+    pub fn step_exports(&self) -> usize {
+        self.layers * self.heads * 2
+    }
+
+    pub fn self_k(&self, layer: usize, head: usize) -> usize {
+        layer * self.per_layer() + head * 2
+    }
+
+    pub fn self_v(&self, layer: usize, head: usize) -> usize {
+        self.self_k(layer, head) + 1
+    }
+
+    pub fn cross_k(&self, layer: usize, head: usize) -> usize {
+        debug_assert!(self.cross);
+        layer * self.per_layer() + self.heads * 2 + head * 2
+    }
+
+    pub fn cross_v(&self, layer: usize, head: usize) -> usize {
+        self.cross_k(layer, head) + 1
+    }
+}
+
+/// Device-resident K/V panels for one in-flight generation.
+///
+/// Every panel is fabric-shaped (`[SL_MAX, DK]`); `len` is the number of
+/// valid rows (prompt + tokens generated so far) — rows beyond it hold
+/// projections of padding and are fenced by the step mask.
+pub struct KvCache<B> {
+    layout: ExternLayout,
+    /// Valid rows: the next decode-step appends at position `len`.
+    pub len: usize,
+    bufs: Vec<B>,
+}
+
+impl<B> KvCache<B> {
+    /// Build the cache from a prefill replay's exports (which arrive in
+    /// [`ExternLayout`] order by construction).
+    pub fn from_prefill(cfg: &TnnConfig, exports: Vec<B>, prompt_len: usize) -> anyhow::Result<Self> {
+        let layout = ExternLayout::of(cfg);
+        if exports.len() != layout.total() {
+            bail!(
+                "prefill exported {} K/V panels, topology wants {}",
+                exports.len(),
+                layout.total()
+            );
+        }
+        Ok(KvCache { layout, len: prompt_len, bufs: exports })
+    }
+
+    pub fn layout(&self) -> ExternLayout {
+        self.layout
+    }
+
+    /// The extern slice for a decode-step replay, in layout order.
+    pub fn externs(&self) -> Vec<&B> {
+        self.bufs.iter().collect()
+    }
+
+    /// Fold a decode-step's exports (the appended self K/V panels) back
+    /// in and advance the valid length by one token.
+    pub fn apply_step(&mut self, exports: Vec<B>) -> anyhow::Result<()> {
+        if exports.len() != self.layout.step_exports() {
+            bail!(
+                "decode step exported {} panels, cache wants {}",
+                exports.len(),
+                self.layout.step_exports()
+            );
+        }
+        let mut it = exports.into_iter();
+        for layer in 0..self.layout.layers {
+            for head in 0..self.layout.heads {
+                self.bufs[self.layout.self_k(layer, head)] = it.next().expect("sized above");
+                self.bufs[self.layout.self_v(layer, head)] = it.next().expect("sized above");
+            }
+        }
+        self.len += 1;
+        Ok(())
+    }
+}
+
+/// The step-mask row for a query at position `pos`: additive zero on keys
+/// `j <= pos`, `NEG_INF` beyond — the per-token slice of the causal mask,
+/// rebuilt each step because it depends on the generation position.
+pub fn step_mask_row(sl_max: usize, pos: usize) -> Tensor {
+    let mut v = vec![crate::model::reference::NEG_INF; sl_max];
+    v[..=pos.min(sl_max - 1)].fill(0.0);
+    Tensor::new(vec![1, sl_max], v)
+}
+
+/// The position scalar the `kv_append` artifact consumes.
+pub fn position_tensor(pos: usize) -> Tensor {
+    Tensor::scalar1(pos as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq2seq(layers: usize, heads: usize) -> TnnConfig {
+        TnnConfig {
+            seq_len: 32,
+            heads,
+            d_model: heads * 64,
+            hidden: 4 * heads * 64,
+            enc_layers: 1,
+            dec_layers: layers,
+        }
+    }
+
+    #[test]
+    fn layout_indices_are_dense_and_disjoint() {
+        let l = ExternLayout::of(&seq2seq(3, 4));
+        assert!(l.cross);
+        assert_eq!(l.per_layer(), 16);
+        assert_eq!(l.total(), 48);
+        let mut seen = std::collections::HashSet::new();
+        for layer in 0..3 {
+            for head in 0..4 {
+                for idx in
+                    [l.self_k(layer, head), l.self_v(layer, head), l.cross_k(layer, head), l.cross_v(layer, head)]
+                {
+                    assert!(idx < l.total());
+                    assert!(seen.insert(idx), "index {idx} reused");
+                }
+            }
+        }
+        assert_eq!(seen.len(), l.total());
+    }
+
+    #[test]
+    fn decoder_only_layout_has_no_cross_entries() {
+        let mut cfg = seq2seq(2, 2);
+        cfg.enc_layers = 0;
+        let l = ExternLayout::of(&cfg);
+        assert!(!l.cross);
+        assert_eq!(l.total(), 8);
+        assert_eq!(l.step_exports(), l.total());
+    }
+
+    #[test]
+    fn cache_round_trips_prefill_and_steps() {
+        let cfg = seq2seq(2, 2);
+        let l = ExternLayout::of(&cfg);
+        let bufs: Vec<u32> = (0..l.total() as u32).collect();
+        let mut cache = KvCache::from_prefill(&cfg, bufs, 5).unwrap();
+        assert_eq!(cache.len, 5);
+        assert_eq!(cache.externs().len(), l.total());
+        // a step replaces exactly the self entries
+        let step: Vec<u32> = (100..100 + l.step_exports() as u32).collect();
+        cache.apply_step(step).unwrap();
+        assert_eq!(cache.len, 6);
+        let ext = cache.externs();
+        assert_eq!(*ext[l.self_k(0, 0)], 100);
+        assert_eq!(*ext[l.self_v(0, 0)], 101);
+        // cross entries untouched
+        assert_eq!(*ext[l.cross_k(0, 0)], l.cross_k(0, 0) as u32);
+        // wrong sizes are refused
+        assert!(cache.apply_step(vec![1, 2]).is_err());
+        assert!(KvCache::from_prefill(&cfg, vec![0u32; 3], 1).is_err());
+    }
+
+    #[test]
+    fn step_mask_row_fences_the_future() {
+        let m = step_mask_row(8, 3);
+        assert_eq!(m.shape, vec![1, 8]);
+        assert_eq!(m.data[0], 0.0);
+        assert_eq!(m.data[3], 0.0);
+        assert!(m.data[4] < -1e8);
+        assert_eq!(position_tensor(3).data, vec![3.0]);
+    }
+}

@@ -11,9 +11,12 @@
 //! * [`sim`] — independent cycle-level simulator (Table 2 "experimental").
 //! * [`schedule`] — the TileProgram IR: the §3.9 tile schedules lowered to
 //!   a flat instruction stream, replayed by pluggable fabric backends.
+//! * [`decode`] — autoregressive decoder execution: the device-resident
+//!   KV cache and the prefill/decode-step program boundary contract.
 //! * [`registers`] — the AXI-Lite runtime configuration register file.
 //! * [`roofline`] — compute/memory bounds and attained performance (Fig 12).
 
+pub mod decode;
 pub mod frequency;
 pub mod latency;
 pub mod platform;

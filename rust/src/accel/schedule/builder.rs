@@ -14,6 +14,7 @@ use super::{
     AttentionMode, FabricConstants, HostId, Operand, RuntimeId, SlotId, Step, TileProgram,
     WeightKind, WeightRef,
 };
+use crate::accel::decode::ExternLayout;
 use crate::model::TnnConfig;
 
 /// Shorthand for a weight operand.
@@ -148,10 +149,7 @@ impl ScheduleBuilder {
         let fc = self.fc;
         let cfg = self.cfg;
         let t_m = cfg.d_model / fc.ts_mha;
-        let t_f = cfg.d_model / fc.ts_ffn;
-        let t_h = cfg.hidden / fc.ffn_col;
         let full = vec![fc.sl_max, fc.dmodel_max];
-        let hid_full = vec![fc.sl_max, fc.hidden_max];
 
         // Algorithm 1: the padded input lands in host slot 0; the caller
         // writes it before replay.
@@ -266,155 +264,48 @@ impl ScheduleBuilder {
                 self.steps.push(Step::Fetch { src: q, host: attn });
             }
 
-            // ---- FFN1_PM: output projection, 2-D tiles (Fig 4b),
-            // column-then-row accumulation.
-            let a_panels: Vec<SlotId> =
-                (0..t_f).map(|r| self.extract_upload(attn, r * fc.ts_ffn, fc.ts_ffn)).collect();
-            let proj = self.host(full.clone());
-            for c in 0..t_f {
-                let out = vec![fc.sl_max, fc.ts_ffn];
-                let mut acc = self.dispatch(
-                    "mm_ffn1",
-                    vec![
-                        Operand::Slot(a_panels[0]),
-                        w(layer, WeightKind::Wo, 0, c),
-                        Operand::Runtime(RuntimeId::ZeroFfn),
-                    ],
-                    out.clone(),
-                );
-                for r in 1..t_f {
-                    acc = self.dispatch(
-                        "mm_ffn1",
-                        vec![
-                            Operand::Slot(a_panels[r]),
-                            w(layer, WeightKind::Wo, r, c),
-                            Operand::Slot(acc),
-                        ],
-                        out.clone(),
-                    );
-                }
-                let h = self.fetch(acc, out);
-                self.assemble(h, proj, c * fc.ts_ffn);
-            }
-            let proj_slot = self.upload(proj);
-            let proj_b = self.dispatch(
-                "bias_add_d",
-                vec![Operand::Slot(proj_slot), w(layer, WeightKind::Bo, 0, 0)],
-                full.clone(),
+            // ---- FFN1_PM (output projection + first residual/LN; the
+            // residual reads the previous layer's device-resident output —
+            // no re-upload of the full padded activation), then the
+            // FFN2/FFN3 chain + second residual/LN.  Shared with the
+            // decoder prefill lowering.
+            let (y_slot, y_host) = self.out_projection(
+                layer,
+                attn,
+                x_slot,
+                WeightKind::Wo,
+                WeightKind::Bo,
+                WeightKind::G1,
+                WeightKind::B1n,
             );
-            // Residual reads the previous layer's device-resident output
-            // (x_slot) — no re-upload of the full padded activation.
-            let y_slot = self.dispatch(
-                "residual_ln",
-                vec![
-                    Operand::Slot(proj_b),
-                    Operand::Slot(x_slot),
-                    w(layer, WeightKind::G1, 0, 0),
-                    w(layer, WeightKind::B1n, 0, 0),
-                    Operand::Runtime(RuntimeId::Dmask),
-                    Operand::Runtime(RuntimeId::Count),
-                ],
-                full.clone(),
-            );
-            let y_host = self.fetch(y_slot, full.clone());
-
-            // ---- FFN2_PM: d -> hidden with ReLU.
-            let y_panels: Vec<SlotId> =
-                (0..t_f).map(|r| self.extract_upload(y_host, r * fc.ts_ffn, fc.ts_ffn)).collect();
-            let hid = self.host(hid_full.clone());
-            for c in 0..t_h {
-                let out = vec![fc.sl_max, fc.ffn_col];
-                let mut acc = self.dispatch(
-                    "mm_ffn2",
-                    vec![
-                        Operand::Slot(y_panels[0]),
-                        w(layer, WeightKind::W1, 0, c),
-                        Operand::Runtime(RuntimeId::ZeroCol),
-                    ],
-                    out.clone(),
-                );
-                for r in 1..t_f {
-                    acc = self.dispatch(
-                        "mm_ffn2",
-                        vec![
-                            Operand::Slot(y_panels[r]),
-                            w(layer, WeightKind::W1, r, c),
-                            Operand::Slot(acc),
-                        ],
-                        out.clone(),
-                    );
-                }
-                let h = self.fetch(acc, out);
-                self.assemble(h, hid, c * fc.ffn_col);
-            }
-            let hid_slot = self.upload(hid);
-            let hid_r = self.dispatch(
-                "bias_relu_h",
-                vec![Operand::Slot(hid_slot), w(layer, WeightKind::B1, 0, 0)],
-                hid_full.clone(),
-            );
-            let hid_r_host = self.fetch(hid_r, hid_full.clone());
-
-            // ---- FFN3_PM: hidden -> d.
-            let h_panels: Vec<SlotId> = (0..t_h)
-                .map(|r| self.extract_upload(hid_r_host, r * fc.ffn_col, fc.ffn_col))
-                .collect();
-            let out_h = self.host(full.clone());
-            for c in 0..t_f {
-                let out = vec![fc.sl_max, fc.ts_ffn];
-                let mut acc = self.dispatch(
-                    "mm_ffn3",
-                    vec![
-                        Operand::Slot(h_panels[0]),
-                        w(layer, WeightKind::W2, 0, c),
-                        Operand::Runtime(RuntimeId::ZeroFfn),
-                    ],
-                    out.clone(),
-                );
-                for r in 1..t_h {
-                    acc = self.dispatch(
-                        "mm_ffn3",
-                        vec![
-                            Operand::Slot(h_panels[r]),
-                            w(layer, WeightKind::W2, r, c),
-                            Operand::Slot(acc),
-                        ],
-                        out.clone(),
-                    );
-                }
-                let hh = self.fetch(acc, out);
-                self.assemble(hh, out_h, c * fc.ts_ffn);
-            }
-            let out_slot = self.upload(out_h);
-            let out_b = self.dispatch(
-                "bias_add_d",
-                vec![Operand::Slot(out_slot), w(layer, WeightKind::B2, 0, 0)],
-                full.clone(),
-            );
-            let fin = self.dispatch(
-                "residual_ln",
-                vec![
-                    Operand::Slot(out_b),
-                    Operand::Slot(y_slot),
-                    w(layer, WeightKind::G2, 0, 0),
-                    w(layer, WeightKind::B2n, 0, 0),
-                    Operand::Runtime(RuntimeId::Dmask),
-                    Operand::Runtime(RuntimeId::Count),
-                ],
-                full.clone(),
-            );
-            x_host = self.fetch(fin, full.clone());
+            let (fin, fin_host) = self.ffn_block(layer, y_host, y_slot);
+            x_host = fin_host;
             x_slot = fin;
         }
 
+        self.finish(input, x_host, Vec::new(), Vec::new(), Vec::new())
+    }
+
+    /// Package the emitted stream into a finalized [`TileProgram`].
+    fn finish(
+        self,
+        input: HostId,
+        output: HostId,
+        aux_hosts: Vec<HostId>,
+        extern_shapes: Vec<Vec<usize>>,
+        export_slots: Vec<SlotId>,
+    ) -> TileProgram {
         let mut prog = TileProgram {
-            cfg,
-            fabric: fc,
+            cfg: self.cfg,
+            fabric: self.fc,
             steps: self.steps,
             host_shapes: self.host_shapes,
             n_slots: self.n_slots,
             input_host: input,
-            output_host: x_host,
+            aux_hosts,
+            output_host: output,
+            extern_shapes,
+            export_slots,
             drops: Vec::new(),
             host_drops: Vec::new(),
             host_init: Vec::new(),
@@ -422,5 +313,508 @@ impl ScheduleBuilder {
         };
         prog.finalize();
         prog
+    }
+
+    /// One split-attention chain over already-projected q/k/v slots.
+    fn attn_chain(&mut self, q: SlotId, k: SlotId, v: SlotId, mask: RuntimeId) -> SlotId {
+        let fc = self.fc;
+        let s = self.dispatch(
+            "qk_scores",
+            vec![
+                Operand::Slot(q),
+                Operand::Slot(k),
+                Operand::Runtime(mask),
+                Operand::Runtime(RuntimeId::Scale),
+            ],
+            vec![fc.sl_max, fc.sl_max],
+        );
+        let p = self.dispatch("softmax", vec![Operand::Slot(s)], vec![fc.sl_max, fc.sl_max]);
+        self.dispatch("sv", vec![Operand::Slot(p), Operand::Slot(v)], vec![fc.sl_max, fc.dk])
+    }
+
+    /// Output-projection block (the encoder's FFN1_PM shape): 2-D grid
+    /// matmul of `src_host`'s panels against the `wo`/`bo` weights, then
+    /// bias + residual LayerNorm against `res_slot` with the `g`/`b`
+    /// affine pair.  Returns the normalized slot and its fetched host.
+    #[allow(clippy::too_many_arguments)]
+    fn out_projection(
+        &mut self,
+        layer: usize,
+        src_host: HostId,
+        res_slot: SlotId,
+        wo: WeightKind,
+        bo: WeightKind,
+        g: WeightKind,
+        b: WeightKind,
+    ) -> (SlotId, HostId) {
+        let fc = self.fc;
+        let t_f = self.cfg.d_model / fc.ts_ffn;
+        let full = vec![fc.sl_max, fc.dmodel_max];
+        let panels: Vec<SlotId> =
+            (0..t_f).map(|r| self.extract_upload(src_host, r * fc.ts_ffn, fc.ts_ffn)).collect();
+        let proj = self.host(full.clone());
+        for c in 0..t_f {
+            let out = vec![fc.sl_max, fc.ts_ffn];
+            let mut acc = self.dispatch(
+                "mm_ffn1",
+                vec![
+                    Operand::Slot(panels[0]),
+                    w(layer, wo, 0, c),
+                    Operand::Runtime(RuntimeId::ZeroFfn),
+                ],
+                out.clone(),
+            );
+            for r in 1..t_f {
+                acc = self.dispatch(
+                    "mm_ffn1",
+                    vec![Operand::Slot(panels[r]), w(layer, wo, r, c), Operand::Slot(acc)],
+                    out.clone(),
+                );
+            }
+            let h = self.fetch(acc, out);
+            self.assemble(h, proj, c * fc.ts_ffn);
+        }
+        let proj_slot = self.upload(proj);
+        let proj_b =
+            self.dispatch("bias_add_d", vec![Operand::Slot(proj_slot), w(layer, bo, 0, 0)], full.clone());
+        let y = self.dispatch(
+            "residual_ln",
+            vec![
+                Operand::Slot(proj_b),
+                Operand::Slot(res_slot),
+                w(layer, g, 0, 0),
+                w(layer, b, 0, 0),
+                Operand::Runtime(RuntimeId::Dmask),
+                Operand::Runtime(RuntimeId::Count),
+            ],
+            full.clone(),
+        );
+        let y_host = self.fetch(y, full);
+        (y, y_host)
+    }
+
+    /// FFN2 → FFN3 chain + residual LayerNorm (the encoder's tail),
+    /// reading `src_host` and residual-adding `res_slot`.
+    fn ffn_block(&mut self, layer: usize, src_host: HostId, res_slot: SlotId) -> (SlotId, HostId) {
+        let fc = self.fc;
+        let cfg = self.cfg;
+        let t_f = cfg.d_model / fc.ts_ffn;
+        let t_h = cfg.hidden / fc.ffn_col;
+        let full = vec![fc.sl_max, fc.dmodel_max];
+        let hid_full = vec![fc.sl_max, fc.hidden_max];
+        let y_panels: Vec<SlotId> =
+            (0..t_f).map(|r| self.extract_upload(src_host, r * fc.ts_ffn, fc.ts_ffn)).collect();
+        let hid = self.host(hid_full.clone());
+        for c in 0..t_h {
+            let out = vec![fc.sl_max, fc.ffn_col];
+            let mut acc = self.dispatch(
+                "mm_ffn2",
+                vec![
+                    Operand::Slot(y_panels[0]),
+                    w(layer, WeightKind::W1, 0, c),
+                    Operand::Runtime(RuntimeId::ZeroCol),
+                ],
+                out.clone(),
+            );
+            for r in 1..t_f {
+                acc = self.dispatch(
+                    "mm_ffn2",
+                    vec![
+                        Operand::Slot(y_panels[r]),
+                        w(layer, WeightKind::W1, r, c),
+                        Operand::Slot(acc),
+                    ],
+                    out.clone(),
+                );
+            }
+            let h = self.fetch(acc, out);
+            self.assemble(h, hid, c * fc.ffn_col);
+        }
+        let hid_slot = self.upload(hid);
+        let hid_r = self.dispatch(
+            "bias_relu_h",
+            vec![Operand::Slot(hid_slot), w(layer, WeightKind::B1, 0, 0)],
+            hid_full.clone(),
+        );
+        let hid_r_host = self.fetch(hid_r, hid_full);
+        let h_panels: Vec<SlotId> = (0..t_h)
+            .map(|r| self.extract_upload(hid_r_host, r * fc.ffn_col, fc.ffn_col))
+            .collect();
+        let out_h = self.host(full.clone());
+        for c in 0..t_f {
+            let out = vec![fc.sl_max, fc.ts_ffn];
+            let mut acc = self.dispatch(
+                "mm_ffn3",
+                vec![
+                    Operand::Slot(h_panels[0]),
+                    w(layer, WeightKind::W2, 0, c),
+                    Operand::Runtime(RuntimeId::ZeroFfn),
+                ],
+                out.clone(),
+            );
+            for r in 1..t_h {
+                acc = self.dispatch(
+                    "mm_ffn3",
+                    vec![
+                        Operand::Slot(h_panels[r]),
+                        w(layer, WeightKind::W2, r, c),
+                        Operand::Slot(acc),
+                    ],
+                    out.clone(),
+                );
+            }
+            let hh = self.fetch(acc, out);
+            self.assemble(hh, out_h, c * fc.ts_ffn);
+        }
+        let out_slot = self.upload(out_h);
+        let out_b = self.dispatch(
+            "bias_add_d",
+            vec![Operand::Slot(out_slot), w(layer, WeightKind::B2, 0, 0)],
+            full.clone(),
+        );
+        let fin = self.dispatch(
+            "residual_ln",
+            vec![
+                Operand::Slot(out_b),
+                Operand::Slot(res_slot),
+                w(layer, WeightKind::G2, 0, 0),
+                w(layer, WeightKind::B2n, 0, 0),
+                Operand::Runtime(RuntimeId::Dmask),
+                Operand::Runtime(RuntimeId::Count),
+            ],
+            full.clone(),
+        );
+        let fin_host = self.fetch(fin, full);
+        (fin, fin_host)
+    }
+
+    /// Lower the decoder **prefill** program: the whole prompt through
+    /// every decoder layer — masked (causal) self-attention, then (for
+    /// seq2seq topologies) cross-attention against the encoder memory
+    /// supplied as the program's one aux input host, then the FFN chain.
+    /// Each layer's self K/V panels (and cross K/V, projected once from
+    /// the memory) are **exported** to seed the device-resident KV cache;
+    /// export order per layer: per head `[k, v]` for self, then per head
+    /// `[k, v]` for cross — exactly `accel::decode::ExternLayout` order.
+    ///
+    /// Execution-mode flags (`mode`/`qkv_packed`/`quantized`) are ignored:
+    /// decoder layers always lower as the split chain so the prefill and
+    /// decode-step paths share numerics (see `opt::FuseAttention`'s causal
+    /// gate).
+    pub fn build_prefill(mut self) -> TileProgram {
+        let fc = self.fc;
+        let cfg = self.cfg;
+        assert!(cfg.dec_layers > 0, "prefill lowering needs dec_layers > 0");
+        let t_m = cfg.d_model / fc.ts_mha;
+        let full = vec![fc.sl_max, fc.dmodel_max];
+        let cross = cfg.enc_layers > 0;
+
+        let input = self.host(full.clone());
+        let mem_host = if cross { Some(self.host(full.clone())) } else { None };
+        // Memory panels are layer-invariant: extract + upload once, share
+        // across every layer's cross K/V projections.
+        let mem_panels: Vec<SlotId> = match mem_host {
+            Some(mh) => {
+                (0..t_m).map(|t| self.extract_upload(mh, t * fc.ts_mha, fc.ts_mha)).collect()
+            }
+            None => Vec::new(),
+        };
+
+        let mut exports: Vec<SlotId> = Vec::new();
+        let mut x_host = input;
+        let mut x_slot = self.upload(input);
+
+        for layer in 0..cfg.dec_layers {
+            // ---- masked self-attention (causal mask fences the future).
+            let x_panels: Vec<SlotId> =
+                (0..t_m).map(|t| self.extract_upload(x_host, t * fc.ts_mha, fc.ts_mha)).collect();
+            let attn = self.host(full.clone());
+            for head in 0..cfg.heads {
+                let q = self.project(layer, head, &x_panels, WeightKind::Wq, WeightKind::Bq);
+                let k = self.project(layer, head, &x_panels, WeightKind::Wk, WeightKind::Bk);
+                let v = self.project(layer, head, &x_panels, WeightKind::Wv, WeightKind::Bv);
+                exports.push(k);
+                exports.push(v);
+                let o = self.attn_chain(q, k, v, RuntimeId::CausalMask);
+                let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
+                self.assemble(oh, attn, head * fc.dk);
+            }
+            let (y1, y1_host) = self.out_projection(
+                layer,
+                attn,
+                x_slot,
+                WeightKind::Wo,
+                WeightKind::Bo,
+                WeightKind::G1,
+                WeightKind::B1n,
+            );
+
+            // ---- cross-attention against the encoder memory.
+            let (res_slot, res_host) = if cross {
+                let y_panels: Vec<SlotId> = (0..t_m)
+                    .map(|t| self.extract_upload(y1_host, t * fc.ts_mha, fc.ts_mha))
+                    .collect();
+                let cattn = self.host(full.clone());
+                for head in 0..cfg.heads {
+                    let q = self.project(layer, head, &y_panels, WeightKind::CWq, WeightKind::CBq);
+                    let ck =
+                        self.project(layer, head, &mem_panels, WeightKind::CWk, WeightKind::CBk);
+                    let cv =
+                        self.project(layer, head, &mem_panels, WeightKind::CWv, WeightKind::CBv);
+                    exports.push(ck);
+                    exports.push(cv);
+                    // Queries and memory keys are both fenced by the
+                    // padding mask (no causality across the two streams).
+                    let o = self.attn_chain(q, ck, cv, RuntimeId::Mask);
+                    let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
+                    self.assemble(oh, cattn, head * fc.dk);
+                }
+                self.out_projection(
+                    layer,
+                    cattn,
+                    y1,
+                    WeightKind::CWo,
+                    WeightKind::CBo,
+                    WeightKind::CG,
+                    WeightKind::CBn,
+                )
+            } else {
+                (y1, y1_host)
+            };
+
+            // ---- FFN chain + second (third, for seq2seq) residual/LN.
+            let (fin, fin_host) = self.ffn_block(layer, res_host, res_slot);
+            x_host = fin_host;
+            x_slot = fin;
+        }
+
+        let aux = mem_host.into_iter().collect();
+        self.finish(input, x_host, aux, Vec::new(), exports)
+    }
+
+    /// Lower the decoder **decode-step** program: one token row against
+    /// the cached K/V.  Inputs: the main host is the token's embedding row
+    /// `[1, DMODEL_MAX]`; aux hosts are the step-mask row `[1, SL_MAX]`
+    /// (fences keys `> pos`) and the position scalar `[1]` (where
+    /// `kv_append` writes the new K/V row).  Externs are the cache panels
+    /// in `accel::decode::ExternLayout` order; exports are the appended
+    /// self K/V panels (per layer, per head, `[k, v]`).
+    ///
+    /// The single-row datapath streams each full weight matrix in one
+    /// dispatch (`dec_*_row` artifacts) instead of walking SL_MAX-row
+    /// panel tiles, which is what makes a step strictly cheaper than
+    /// re-running prefill.
+    pub fn build_step(mut self) -> TileProgram {
+        let fc = self.fc;
+        let cfg = self.cfg;
+        assert!(cfg.dec_layers > 0, "decode-step lowering needs dec_layers > 0");
+        let cross = cfg.enc_layers > 0;
+        let row = vec![1, fc.dmodel_max];
+        let row_dk = vec![1, fc.dk];
+        let row_sl = vec![1, fc.sl_max];
+        let kv_shape = vec![fc.sl_max, fc.dk];
+
+        let input = self.host(row.clone());
+        let mask_host = self.host(row_sl.clone());
+        let pos_host = self.host(vec![1]);
+
+        // Extern table in `accel::decode::ExternLayout` order — the one
+        // index authority shared with the KV cache.
+        let layout = ExternLayout::of(&cfg);
+        let extern_shapes: Vec<Vec<usize>> =
+            (0..layout.total()).map(|_| kv_shape.clone()).collect();
+
+        let mask_slot = self.upload(mask_host);
+        let pos_slot = self.upload(pos_host);
+        let mut x_slot = self.upload(input);
+        let mut exports: Vec<SlotId> = Vec::new();
+
+        for layer in 0..cfg.dec_layers {
+            // ---- causal self-attention, one query row vs cached K/V.
+            let attn_row = self.host(row.clone());
+            for head in 0..cfg.heads {
+                let q = self.dispatch(
+                    "dec_qkv_row",
+                    vec![
+                        Operand::Slot(x_slot),
+                        w(layer, WeightKind::DWq, head, 0),
+                        w(layer, WeightKind::Bq, head, 0),
+                    ],
+                    row_dk.clone(),
+                );
+                let k_new = self.dispatch(
+                    "dec_qkv_row",
+                    vec![
+                        Operand::Slot(x_slot),
+                        w(layer, WeightKind::DWk, head, 0),
+                        w(layer, WeightKind::Bk, head, 0),
+                    ],
+                    row_dk.clone(),
+                );
+                let v_new = self.dispatch(
+                    "dec_qkv_row",
+                    vec![
+                        Operand::Slot(x_slot),
+                        w(layer, WeightKind::DWv, head, 0),
+                        w(layer, WeightKind::Bv, head, 0),
+                    ],
+                    row_dk.clone(),
+                );
+                let k_all = self.dispatch(
+                    "kv_append",
+                    vec![
+                        Operand::Extern(layout.self_k(layer, head)),
+                        Operand::Slot(k_new),
+                        Operand::Slot(pos_slot),
+                    ],
+                    kv_shape.clone(),
+                );
+                let v_all = self.dispatch(
+                    "kv_append",
+                    vec![
+                        Operand::Extern(layout.self_v(layer, head)),
+                        Operand::Slot(v_new),
+                        Operand::Slot(pos_slot),
+                    ],
+                    kv_shape.clone(),
+                );
+                exports.push(k_all);
+                exports.push(v_all);
+                let s = self.dispatch(
+                    "qk_row",
+                    vec![
+                        Operand::Slot(q),
+                        Operand::Slot(k_all),
+                        Operand::Slot(mask_slot),
+                        Operand::Runtime(RuntimeId::Scale),
+                    ],
+                    row_sl.clone(),
+                );
+                let p = self.dispatch("softmax_row", vec![Operand::Slot(s)], row_sl.clone());
+                let o = self.dispatch(
+                    "sv_row",
+                    vec![Operand::Slot(p), Operand::Slot(v_all)],
+                    row_dk.clone(),
+                );
+                let oh = self.fetch(o, row_dk.clone());
+                self.assemble(oh, attn_row, head * fc.dk);
+            }
+            let a_slot = self.upload(attn_row);
+            let proj = self.dispatch(
+                "dec_proj_row",
+                vec![
+                    Operand::Slot(a_slot),
+                    w(layer, WeightKind::DWo, 0, 0),
+                    w(layer, WeightKind::Bo, 0, 0),
+                ],
+                row.clone(),
+            );
+            let y1 = self.dispatch(
+                "residual_ln_row",
+                vec![
+                    Operand::Slot(proj),
+                    Operand::Slot(x_slot),
+                    w(layer, WeightKind::G1, 0, 0),
+                    w(layer, WeightKind::B1n, 0, 0),
+                    Operand::Runtime(RuntimeId::Dmask),
+                    Operand::Runtime(RuntimeId::Count),
+                ],
+                row.clone(),
+            );
+
+            // ---- cross-attention against the (step-invariant) cached
+            // memory K/V — no projections, no appends.
+            let cur = if cross {
+                let cattn_row = self.host(row.clone());
+                for head in 0..cfg.heads {
+                    let q = self.dispatch(
+                        "dec_qkv_row",
+                        vec![
+                            Operand::Slot(y1),
+                            w(layer, WeightKind::DCWq, head, 0),
+                            w(layer, WeightKind::CBq, head, 0),
+                        ],
+                        row_dk.clone(),
+                    );
+                    let s = self.dispatch(
+                        "qk_row",
+                        vec![
+                            Operand::Slot(q),
+                            Operand::Extern(layout.cross_k(layer, head)),
+                            Operand::Runtime(RuntimeId::MemMaskRow),
+                            Operand::Runtime(RuntimeId::Scale),
+                        ],
+                        row_sl.clone(),
+                    );
+                    let p = self.dispatch("softmax_row", vec![Operand::Slot(s)], row_sl.clone());
+                    let o = self.dispatch(
+                        "sv_row",
+                        vec![Operand::Slot(p), Operand::Extern(layout.cross_v(layer, head))],
+                        row_dk.clone(),
+                    );
+                    let oh = self.fetch(o, row_dk.clone());
+                    self.assemble(oh, cattn_row, head * fc.dk);
+                }
+                let c_slot = self.upload(cattn_row);
+                let cp = self.dispatch(
+                    "dec_proj_row",
+                    vec![
+                        Operand::Slot(c_slot),
+                        w(layer, WeightKind::DCWo, 0, 0),
+                        w(layer, WeightKind::CBo, 0, 0),
+                    ],
+                    row.clone(),
+                );
+                self.dispatch(
+                    "residual_ln_row",
+                    vec![
+                        Operand::Slot(cp),
+                        Operand::Slot(y1),
+                        w(layer, WeightKind::CG, 0, 0),
+                        w(layer, WeightKind::CBn, 0, 0),
+                        Operand::Runtime(RuntimeId::Dmask),
+                        Operand::Runtime(RuntimeId::Count),
+                    ],
+                    row.clone(),
+                )
+            } else {
+                y1
+            };
+
+            // ---- FFN, single row: bias+ReLU fused into dec_ffn1_row.
+            let h1 = self.dispatch(
+                "dec_ffn1_row",
+                vec![
+                    Operand::Slot(cur),
+                    w(layer, WeightKind::DW1, 0, 0),
+                    w(layer, WeightKind::B1, 0, 0),
+                ],
+                vec![1, fc.hidden_max],
+            );
+            let h2 = self.dispatch(
+                "dec_ffn2_row",
+                vec![
+                    Operand::Slot(h1),
+                    w(layer, WeightKind::DW2, 0, 0),
+                    w(layer, WeightKind::B2, 0, 0),
+                ],
+                row.clone(),
+            );
+            x_slot = self.dispatch(
+                "residual_ln_row",
+                vec![
+                    Operand::Slot(h2),
+                    Operand::Slot(cur),
+                    w(layer, WeightKind::G2, 0, 0),
+                    w(layer, WeightKind::B2n, 0, 0),
+                    Operand::Runtime(RuntimeId::Dmask),
+                    Operand::Runtime(RuntimeId::Count),
+                ],
+                row.clone(),
+            );
+        }
+
+        let out = self.fetch(x_slot, row);
+        self.finish(input, out, vec![mask_host, pos_host], extern_shapes, exports)
     }
 }

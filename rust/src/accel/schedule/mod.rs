@@ -38,10 +38,21 @@
 //!   the program).
 //!
 //! Operands are virtual: transient device [`Operand::Slot`]s, per-topology
-//! [`Operand::Runtime`] tensors (mask, dmask, count, zero accumulators —
-//! uploaded once and reused across requests), and [`Operand::Weight`]
-//! references resolved against whichever weight stack is bound at replay
-//! time, so one program serves every model with the same topology.
+//! [`Operand::Runtime`] tensors (masks — padding and causal — dmask,
+//! count, zero accumulators — uploaded once and reused across requests),
+//! [`Operand::Weight`] references resolved against whichever weight stack
+//! is bound at replay time (so one program serves every model with the
+//! same topology), and [`Operand::Extern`] caller-held device buffers —
+//! the KV-cache panels of the decoder path.
+//!
+//! Three program flavors exist per topology: the encoder stack
+//! ([`builder::ScheduleBuilder::build`]), the decoder **prefill**
+//! ([`builder::ScheduleBuilder::build_prefill`] — whole prompt, exports
+//! the K/V panels that seed `accel::decode::KvCache`), and the
+//! single-token **decode-step**
+//! ([`builder::ScheduleBuilder::build_step`] — row-shaped artifacts
+//! against the cached K/V, appending on-device); see DESIGN.md §Decoder
+//! execution & KV cache.
 
 pub mod builder;
 pub mod opt;
@@ -162,6 +173,13 @@ pub type HostId = usize;
 pub enum RuntimeId {
     /// Additive attention mask fencing the padded tail.
     Mask,
+    /// Additive **causal** attention mask (`j <= i` within the valid
+    /// prefix) — decoder masked self-attention (prefill path).
+    CausalMask,
+    /// One-row additive mask over memory positions (`[1, SL_MAX]`, zero on
+    /// the valid prefix) — decode-step cross-attention against the cached
+    /// encoder memory K/V.
+    MemMaskRow,
     /// 1/sqrt(dk) attention scale scalar.
     Scale,
     /// LayerNorm column mask (1.0 on the valid prefix).
@@ -206,6 +224,35 @@ pub enum WeightKind {
     /// Packed per-head `Q|K|V` panels: `row` = head, `col` = tile.
     QkvPacked,
     BQkvPacked,
+    /// Decoder cross-attention projection panels (`row` = head,
+    /// `col` = tile), biases (`row` = head), output-projection grid, and
+    /// the post-cross LayerNorm affine vectors.
+    CWq,
+    CWk,
+    CWv,
+    CBq,
+    CBk,
+    CBv,
+    CWo,
+    CBo,
+    CG,
+    CBn,
+    /// Decode-step **row** weights: the full (fabric-padded) matrices the
+    /// single-token datapath streams in one dispatch — per-head
+    /// `[DMODEL_MAX, DK]` projections (`row` = head), the
+    /// `[DMODEL_MAX, DMODEL_MAX]` output projection, and the FFN pair
+    /// (`[DMODEL_MAX, HIDDEN_MAX]` / `[HIDDEN_MAX, DMODEL_MAX]`).  A 1×d
+    /// activation row fits one BRAM line, so the decode path skips the
+    /// SL_MAX-row panel tiling entirely (AccelTran's per-token regime).
+    DWq,
+    DWk,
+    DWv,
+    DWo,
+    DW1,
+    DW2,
+    /// Decode-step cross-attention row weights (`row` = head for DCWq).
+    DCWq,
+    DCWo,
 }
 
 /// Symbolic reference into whatever weight stack is bound at replay time.
@@ -225,6 +272,11 @@ pub enum Operand {
     Slot(SlotId),
     Weight(WeightRef),
     Runtime(RuntimeId),
+    /// Caller-provided device buffer, resolved at replay time from the
+    /// `externs` slice of [`replay_full`] — how the decode-step program
+    /// reads the device-resident K/V cache without re-uploading it.
+    /// The index is into [`TileProgram::extern_shapes`].
+    Extern(usize),
 }
 
 /// One instruction of a [`TileProgram`].
@@ -264,8 +316,23 @@ pub struct TileProgram {
     pub n_slots: usize,
     /// Host slot the caller writes the padded input into before replay.
     pub input_host: HostId,
+    /// Additional caller-written input hosts (after `input_host`), in the
+    /// order [`replay_full`] expects its `inputs` slice: the encoder
+    /// memory for a decoder prefill program; the step-mask row and the
+    /// position scalar for a decode-step program.  Empty for encoder
+    /// programs.
+    pub aux_hosts: Vec<HostId>,
     /// Host slot holding the padded output after replay.
     pub output_host: HostId,
+    /// Shapes of the caller-provided device buffers [`Operand::Extern`]
+    /// operands index (the device-resident K/V cache panels).  Empty for
+    /// non-decode programs.
+    pub extern_shapes: Vec<Vec<usize>>,
+    /// Device slots kept live to the end of the replay and handed back by
+    /// [`replay_full`] in this order (the freshly computed / appended K/V
+    /// panels that seed or advance the cache).  Never dropped, never
+    /// recycled by `CompactSlots`.
+    pub export_slots: Vec<SlotId>,
     /// Device slots whose last use is step `i` (freed after executing it),
     /// computed at build time so replay memory matches the imperative
     /// engine's.
@@ -320,9 +387,14 @@ impl TileProgram {
                 Step::Dispatch { .. } => {}
             }
         }
-        // The caller writes the input slot before the walk starts.
+        // The caller writes the input slots before the walk starts.
         if let Some(init) = host_init.get_mut(self.input_host) {
             *init = false;
+        }
+        for h in &self.aux_hosts {
+            if let Some(init) = host_init.get_mut(*h) {
+                *init = false;
+            }
         }
         for (i, step) in self.steps.iter().enumerate() {
             match step {
@@ -356,9 +428,15 @@ impl TileProgram {
                 }
             }
         }
+        // Exported slots stay live past their last in-program use: replay
+        // hands them back to the caller after the final step.
+        let exported: std::collections::HashSet<SlotId> =
+            self.export_slots.iter().copied().collect();
         let mut drops = vec![Vec::new(); self.steps.len()];
         for (slot, last) in slot_last.iter().enumerate() {
-            drops[*last].push(slot);
+            if !exported.contains(&slot) {
+                drops[*last].push(slot);
+            }
         }
         let mut host_drops = vec![Vec::new(); self.steps.len()];
         for (host, last) in host_last.iter().enumerate() {
@@ -447,6 +525,8 @@ pub trait WeightSource<Buf> {
 #[derive(Debug)]
 pub struct RuntimeBufs<T> {
     pub mask: T,
+    pub causal_mask: T,
+    pub mem_mask_row: T,
     pub scale: T,
     pub dmask: T,
     pub count: T,
@@ -460,6 +540,8 @@ impl<T> RuntimeBufs<T> {
     pub fn get(&self, id: RuntimeId) -> &T {
         match id {
             RuntimeId::Mask => &self.mask,
+            RuntimeId::CausalMask => &self.causal_mask,
+            RuntimeId::MemMaskRow => &self.mem_mask_row,
             RuntimeId::Scale => &self.scale,
             RuntimeId::Dmask => &self.dmask,
             RuntimeId::Count => &self.count,
@@ -478,6 +560,15 @@ pub fn runtime_tensor(id: RuntimeId, cfg: &TnnConfig, fc: &FabricConstants) -> T
         RuntimeId::Mask => {
             let m = crate::model::reference::attention_mask(fc.sl_max, cfg.seq_len, false);
             Tensor::from_mat(&m)
+        }
+        RuntimeId::CausalMask => {
+            let m = crate::model::reference::attention_mask(fc.sl_max, cfg.seq_len, true);
+            Tensor::from_mat(&m)
+        }
+        RuntimeId::MemMaskRow => {
+            let mut v = vec![crate::model::reference::NEG_INF; fc.sl_max];
+            v[..cfg.seq_len].fill(0.0);
+            Tensor::new(vec![1, fc.sl_max], v)
         }
         RuntimeId::Scale => Tensor::scalar1(1.0 / (fc.dk as f32).sqrt()),
         RuntimeId::Dmask => {
@@ -508,6 +599,8 @@ pub fn build_runtime<B: FabricBackend>(
     let zeros = |id: RuntimeId| backend.upload_zeros(&runtime_tensor(id, cfg, fc).shape);
     Ok(RuntimeBufs {
         mask: up(RuntimeId::Mask)?,
+        causal_mask: up(RuntimeId::CausalMask)?,
+        mem_mask_row: up(RuntimeId::MemMaskRow)?,
         scale: up(RuntimeId::Scale)?,
         dmask: up(RuntimeId::Dmask)?,
         count: up(RuntimeId::Count)?,
@@ -604,9 +697,43 @@ pub fn replay_with<B: FabricBackend>(
     input: Tensor,
     pool: Option<&crate::runtime::pool::TensorPool>,
 ) -> anyhow::Result<Tensor> {
-    let want = vec![prog.fabric.sl_max, prog.fabric.dmodel_max];
-    if input.shape != want {
-        bail!("replay input shape {:?} != padded fabric shape {:?}", input.shape, want);
+    let (out, _) = replay_full(prog, backend, weights, runtime, vec![input], &[], pool)?;
+    Ok(out)
+}
+
+/// The full replay entry point: `inputs` supplies the main input host plus
+/// every [`TileProgram::aux_hosts`] slot (in order), `externs` resolves
+/// [`Operand::Extern`] operands (caller-held device buffers — the K/V
+/// cache), and the returned pair is the output host tensor plus the
+/// [`TileProgram::export_slots`] device buffers in program order (the
+/// cache panels the replay produced).
+pub fn replay_full<B: FabricBackend>(
+    prog: &TileProgram,
+    backend: &B,
+    weights: &dyn WeightSource<B::Buf>,
+    runtime: &RuntimeBufs<B::Buf>,
+    inputs: Vec<Tensor>,
+    externs: &[&B::Buf],
+    pool: Option<&crate::runtime::pool::TensorPool>,
+) -> anyhow::Result<(Tensor, Vec<B::Buf>)> {
+    if inputs.len() != 1 + prog.aux_hosts.len() {
+        bail!(
+            "replay wants 1 main + {} aux inputs, got {}",
+            prog.aux_hosts.len(),
+            inputs.len()
+        );
+    }
+    for (t, h) in inputs.iter().zip(std::iter::once(&prog.input_host).chain(&prog.aux_hosts)) {
+        if t.shape != prog.host_shapes[*h] {
+            bail!(
+                "replay input for host {h} has shape {:?}, program wants {:?}",
+                t.shape,
+                prog.host_shapes[*h]
+            );
+        }
+    }
+    if externs.len() != prog.extern_shapes.len() {
+        bail!("program wants {} extern buffers, got {}", prog.extern_shapes.len(), externs.len());
     }
     let take_zeroed = |shape: &[usize]| match pool {
         Some(p) => p.take_zeroed(shape),
@@ -631,7 +758,13 @@ pub fn replay_with<B: FabricBackend>(
             }
         })
         .collect();
-    hosts[prog.input_host] = input;
+    {
+        let mut it = inputs.into_iter();
+        hosts[prog.input_host] = it.next().expect("validated above");
+        for (h, t) in prog.aux_hosts.iter().zip(it) {
+            hosts[*h] = t;
+        }
+    }
     let mut slots: Vec<Option<B::Buf>> = Vec::with_capacity(prog.n_slots);
     slots.resize_with(prog.n_slots, || None);
     // Wave boundaries (cumulative end indices); empty → no hooks.
@@ -659,6 +792,12 @@ pub fn replay_with<B: FabricBackend>(
                         ),
                         Operand::Weight(w) => ins.push(weights.weight(w)?),
                         Operand::Runtime(r) => ins.push(runtime.get(*r)),
+                        Operand::Extern(e) => ins.push(
+                            externs
+                                .get(*e)
+                                .copied()
+                                .ok_or_else(|| anyhow!("step {i}: extern {e} out of range"))?,
+                        ),
                     }
                 }
                 let out = backend.dispatch(artifact, &ins, out_shape)?;
@@ -717,8 +856,16 @@ pub fn replay_with<B: FabricBackend>(
             }
         }
     }
+    // Export slots are excluded from the drop lists, so they are still
+    // live here; hand them back in program order.
+    let mut exports = Vec::with_capacity(prog.export_slots.len());
+    for s in &prog.export_slots {
+        exports.push(
+            slots[*s].take().ok_or_else(|| anyhow!("export slot {s} was freed mid-replay"))?,
+        );
+    }
     // The output host is excluded from host_drops, so it can be moved out.
-    Ok(std::mem::replace(&mut hosts[prog.output_host], Tensor::zeros(vec![0])))
+    Ok((std::mem::replace(&mut hosts[prog.output_host], Tensor::zeros(vec![0])), exports))
 }
 
 #[cfg(test)]

@@ -45,11 +45,11 @@
 //! and caches the optimized program; the request path replays it
 //! unchanged.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 use anyhow::bail;
 
-use super::{Operand, SlotId, Step, TileProgram};
+use super::{Operand, RuntimeId, SlotId, Step, TileProgram};
 
 /// Optimization level — part of the engine's program-cache key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -109,6 +109,16 @@ impl ArtifactInventory {
             "residual_ln",
             "quantize",
             "bias_residual_ln",
+            // decode-step row artifacts (accel::decode)
+            "dec_qkv_row",
+            "qk_row",
+            "softmax_row",
+            "sv_row",
+            "kv_append",
+            "dec_proj_row",
+            "dec_ffn1_row",
+            "dec_ffn2_row",
+            "residual_ln_row",
         ])
     }
 
@@ -433,6 +443,9 @@ impl Pass for DedupTransfers {
 
         let steps = std::mem::take(&mut prog.steps);
         let mut out = Vec::with_capacity(steps.len());
+        // Exported slots keep their identity (they are all dispatch
+        // outputs, never upload targets — the alias remap below is
+        // defensive for future step kinds).
         for mut step in steps {
             Self::rewrite(&mut step, &slot_alias, &host_alias);
             match &step {
@@ -472,6 +485,11 @@ impl Pass for DedupTransfers {
             out.push(step);
         }
         prog.steps = out;
+        for s in prog.export_slots.iter_mut() {
+            if let Some(a) = slot_alias.get(s) {
+                *s = *a;
+            }
+        }
         removed
     }
 }
@@ -508,7 +526,13 @@ where
         &HashMap<SlotId, usize>,
     ) -> Option<(Vec<usize>, Step)>,
 {
-    let (writer, uses) = slot_dataflow(&prog.steps);
+    let (writer, mut uses) = slot_dataflow(&prog.steps);
+    // An exported slot has an implicit extra reader (the caller), so a
+    // chain producing one never counts as single-use and is never fused
+    // away.
+    for s in &prog.export_slots {
+        *uses.entry(*s).or_default() += 1;
+    }
     let mut remove = vec![false; prog.steps.len()];
     let mut replace: Vec<(usize, Step)> = Vec::new();
     for i in 0..prog.steps.len() {
@@ -565,6 +589,13 @@ impl Pass for FuseAttention {
                 return None;
             };
             let [q_arg, k_arg, mask_arg, scale_arg] = qk_args.as_slice() else { return None };
+            // Causal gate: decoder masked self-attention keeps the split
+            // chain so the prefill path shares numerics (and artifacts)
+            // with the row-shaped decode-step chain — the fused rectangle
+            // kernel is left to the encoder/cross chains.
+            if *mask_arg == Operand::Runtime(RuntimeId::CausalMask) {
+                return None;
+            }
             Some((
                 vec![j, k],
                 Step::Dispatch {
@@ -705,6 +736,9 @@ impl Pass for CompactSlots {
                 last.insert(*s, i);
             }
         }
+        // Exported slots live past the program's end (replay hands them
+        // to the caller): never retire their ids.
+        let exported: HashSet<SlotId> = prog.export_slots.iter().copied().collect();
         let mut map: HashMap<SlotId, SlotId> = HashMap::new();
         let mut free: Vec<SlotId> = Vec::new();
         // Ids retired during the current wave, released at its boundary.
@@ -734,7 +768,7 @@ impl Pass for CompactSlots {
             retired.sort_unstable();
             retired.dedup();
             for s in &retired {
-                if last.get(s) == Some(&i) {
+                if last.get(s) == Some(&i) && !exported.contains(s) {
                     pending.push(map[s]);
                 }
             }
@@ -751,7 +785,7 @@ impl Pass for CompactSlots {
                     _ => unreachable!("slot writes only come from upload/dispatch/calibrate"),
                 }
                 // A value written and never read dies immediately.
-                if last.get(s) == Some(&i) {
+                if last.get(s) == Some(&i) && !exported.contains(s) {
                     pending.push(new);
                 }
             }
@@ -771,6 +805,11 @@ impl Pass for CompactSlots {
             if at_boundary {
                 free.append(&mut pending);
             }
+        }
+        // Exported slots were renamed like everything else — update the
+        // export table to the compacted ids.
+        for s in prog.export_slots.iter_mut() {
+            *s = *map.get(s).expect("export slot was never written");
         }
         let saved = prog.n_slots.saturating_sub(next);
         prog.n_slots = next;

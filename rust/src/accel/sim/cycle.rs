@@ -116,6 +116,7 @@ impl CycleBackend {
         let sim = super::simulate(cfg, &tiles);
         let l = &sim.layer;
         let h = cfg.heads as f64;
+        let sl = cfg.seq_len as f64;
         let t_m = (cfg.d_model / fc.ts_mha) as f64;
         let t_f = (cfg.d_model / fc.ts_ffn) as f64;
         let t_h = (cfg.hidden / fc.ffn_col) as f64;
@@ -147,6 +148,21 @@ impl CycleBackend {
             // sequential total invariant — only wave pricing changes it.
             ("bias_residual_ln", l.bias_ffn1 as f64 + l.ln1 as f64),
             ("quantize", qdq),
+            // ---- decode-step row artifacts: the single-token datapath
+            // streams one row where the prefill path streams seq_len, so
+            // each row dispatch is its full-height analog over seq_len.
+            // dec_qkv_row covers a head's whole projection (all tiles)
+            // plus its bias in one dispatch.
+            ("dec_qkv_row", (l.qkv_total as f64 / (3.0 * h) + l.bias_qkv as f64 / (3.0 * h)) / sl),
+            ("qk_row", l.score as f64 / h / sl),
+            ("softmax_row", l.softmax as f64 / h / sl),
+            ("sv_row", l.sv as f64 / h / sl),
+            // One K/V row written into the cache BRAM.
+            ("kv_append", nest(1, PipelinedLoop { depth: LOAD + STORE, ii: 1, trip: cfg.dk() as u64 }) as f64),
+            ("dec_proj_row", (l.ffn1_total as f64 + l.bias_ffn1 as f64) / sl),
+            ("dec_ffn1_row", (l.ffn2_total as f64 + l.bias_ffn2 as f64) / sl),
+            ("dec_ffn2_row", (l.ffn3_total as f64 + l.bias_ffn3 as f64) / sl),
+            ("residual_ln_row", l.ln1 as f64 / sl),
         ]);
         CycleBackend {
             costs,
@@ -160,6 +176,23 @@ impl CycleBackend {
     /// Enable wave pricing (`max` per wave instead of `sum`).
     pub fn with_wave_pricing(mut self, on: bool) -> Self {
         self.wave_pricing = on;
+        self
+    }
+
+    /// Divide the one-time input-load charge by `div` (ceiling).  A
+    /// decode step uploads one activation row, not the whole `seq_len`
+    /// prompt the default charge models.
+    pub fn with_input_load_div(mut self, div: u64) -> Self {
+        self.load_inputs = self.load_inputs.div_ceil(div.max(1));
+        self
+    }
+
+    /// Drop the flat decoder-stack surcharge.  The surcharge approximates
+    /// decoder cost when pricing an **encoder** program of a seq2seq
+    /// topology; a prefill/decode-step program lowers the decoder layers
+    /// for real, so pricing one with the surcharge on would double-count.
+    pub fn without_decoder_surcharge(mut self) -> Self {
+        self.dec_cycles = 0.0;
         self
     }
 
@@ -248,6 +281,10 @@ pub struct ShapeWeights {
     w1: Vec<usize>,
     vec_h: Vec<usize>,
     w2: Vec<usize>,
+    dw_qkv: Vec<usize>,
+    dw_proj: Vec<usize>,
+    dw_ffn1: Vec<usize>,
+    dw_ffn2: Vec<usize>,
 }
 
 impl ShapeWeights {
@@ -262,6 +299,10 @@ impl ShapeWeights {
             w1: vec![fc.ts_ffn, fc.ffn_col],
             vec_h: vec![fc.hidden_max],
             w2: vec![fc.ffn_col, fc.ts_ffn],
+            dw_qkv: vec![fc.dmodel_max, fc.dk],
+            dw_proj: vec![fc.dmodel_max, fc.dmodel_max],
+            dw_ffn1: vec![fc.dmodel_max, fc.hidden_max],
+            dw_ffn2: vec![fc.hidden_max, fc.dmodel_max],
         }
     }
 }
@@ -269,20 +310,37 @@ impl ShapeWeights {
 impl WeightSource<Vec<usize>> for ShapeWeights {
     fn weight(&self, r: &WeightRef) -> anyhow::Result<&Vec<usize>> {
         Ok(match r.kind {
-            WeightKind::Wq | WeightKind::Wk | WeightKind::Wv => &self.mha_panel,
+            WeightKind::Wq
+            | WeightKind::Wk
+            | WeightKind::Wv
+            | WeightKind::CWq
+            | WeightKind::CWk
+            | WeightKind::CWv => &self.mha_panel,
             WeightKind::QkvPacked => &self.qkv_panel,
-            WeightKind::Bq | WeightKind::Bk | WeightKind::Bv => &self.bias_dk,
+            WeightKind::Bq
+            | WeightKind::Bk
+            | WeightKind::Bv
+            | WeightKind::CBq
+            | WeightKind::CBk
+            | WeightKind::CBv => &self.bias_dk,
             WeightKind::BQkvPacked => &self.bias_qkv3,
-            WeightKind::Wo => &self.wo,
+            WeightKind::Wo | WeightKind::CWo => &self.wo,
             WeightKind::Bo
             | WeightKind::B2
             | WeightKind::G1
             | WeightKind::B1n
             | WeightKind::G2
-            | WeightKind::B2n => &self.vec_d,
+            | WeightKind::B2n
+            | WeightKind::CBo
+            | WeightKind::CG
+            | WeightKind::CBn => &self.vec_d,
             WeightKind::W1 => &self.w1,
             WeightKind::B1 => &self.vec_h,
             WeightKind::W2 => &self.w2,
+            WeightKind::DWq | WeightKind::DWk | WeightKind::DWv | WeightKind::DCWq => &self.dw_qkv,
+            WeightKind::DWo | WeightKind::DCWo => &self.dw_proj,
+            WeightKind::DW1 => &self.dw_ffn1,
+            WeightKind::DW2 => &self.dw_ffn2,
         })
     }
 }
@@ -310,6 +368,47 @@ fn replay_priced(prog: &TileProgram, waves: bool) -> anyhow::Result<CycleReport>
     let input = Tensor::zeros(vec![prog.fabric.sl_max, prog.fabric.dmodel_max]);
     schedule::replay(prog, &backend, &weights, &runtime, input)?;
     Ok(backend.report())
+}
+
+/// Replay any program — including decoder prefill / decode-step programs
+/// with aux inputs, extern cache panels and exports — through the cycle
+/// backend with the sequential pricing and **no** decoder surcharge (a
+/// decoder program carries its real decoder dispatches, so the flat
+/// surcharge of the encoder-side estimate would double-count).
+pub fn replay_decoder_program(prog: &TileProgram) -> anyhow::Result<CycleReport> {
+    let mut backend = CycleBackend::new(&prog.cfg, &prog.fabric).without_decoder_surcharge();
+    if prog.host_shapes[prog.input_host].first() == Some(&1) {
+        // Single-row (decode-step) input: charge one row's AXI write.
+        backend = backend.with_input_load_div(prog.cfg.seq_len as u64);
+    }
+    let weights = ShapeWeights::new(&prog.fabric);
+    let runtime = schedule::build_runtime(&backend, &prog.cfg, &prog.fabric)?;
+    // Main + aux inputs as zero tensors of the program's declared shapes;
+    // extern cache panels as bare shapes.
+    let mut inputs = vec![Tensor::zeros(prog.host_shapes[prog.input_host].clone())];
+    for h in &prog.aux_hosts {
+        inputs.push(Tensor::zeros(prog.host_shapes[*h].clone()));
+    }
+    let extern_bufs: Vec<Vec<usize>> = prog.extern_shapes.clone();
+    let externs: Vec<&Vec<usize>> = extern_bufs.iter().collect();
+    schedule::replay_full(prog, &backend, &weights, &runtime, inputs, &externs, None)?;
+    Ok(backend.report())
+}
+
+/// Build + price the decoder **prefill** program for `(cfg, fc)` — the
+/// whole-prompt cost of populating the KV cache (Table 2's "prefill" row).
+pub fn estimate_prefill(cfg: &TnnConfig, fc: &FabricConstants) -> anyhow::Result<CycleReport> {
+    let prog = ScheduleBuilder::new(*fc, *cfg)?.build_prefill();
+    replay_decoder_program(&prog)
+}
+
+/// Build + price the **decode-step** program for `(cfg, fc)` — the
+/// per-token marginal cost of KV-cached generation (Table 2's "per-token"
+/// row).  The one-time input load the backend charges per replay is the
+/// single-row AXI write of the step.
+pub fn estimate_step(cfg: &TnnConfig, fc: &FabricConstants) -> anyhow::Result<CycleReport> {
+    let prog = ScheduleBuilder::new(*fc, *cfg)?.build_step();
+    replay_decoder_program(&prog)
 }
 
 /// Build the program for `(cfg, fc, flags)` and replay it for cycles —
@@ -428,7 +527,7 @@ mod tests {
         assert_eq!(rep.dispatches as usize, prog.dispatch_count());
         assert_eq!(rep.trace.len(), prog.dispatch_count());
         assert_eq!(rep.trace, prog.dispatch_sequence());
-        assert_eq!(rep.uploads as usize, prog.upload_count() + 8, "+8 runtime tensors");
+        assert_eq!(rep.uploads as usize, prog.upload_count() + 10, "+10 runtime tensors");
         assert_eq!(rep.fetches as usize, prog.fetch_count());
     }
 
@@ -515,5 +614,45 @@ mod tests {
         let est = estimate(&cfg, &f, AttentionMode::Split, false, false).unwrap();
         let sim = super::super::simulate(&cfg, &tiles);
         assert!(rel_err(est.total_cycles, sim.total_cycles) < 0.005);
+    }
+
+    #[test]
+    fn decode_step_is_strictly_cheaper_than_prefill() {
+        let f = fc();
+        for cfg in [
+            crate::model::presets::gpt_small(64, 4),
+            crate::model::presets::seq2seq_small(64, 2, 2),
+            TnnConfig { dec_layers: 6, ..TnnConfig::encoder(64, 512, 8, 6) },
+        ] {
+            let pre = estimate_prefill(&cfg, &f).unwrap();
+            let step = estimate_step(&cfg, &f).unwrap();
+            assert!(step.dispatches < pre.dispatches, "{cfg}: {} vs {}", step.dispatches, pre.dispatches);
+            assert!(step.uploads < pre.uploads, "{cfg}");
+            assert!(
+                step.total_cycles < pre.total_cycles / 4,
+                "{cfg}: a cached step must be far cheaper ({} vs {})",
+                step.total_cycles,
+                pre.total_cycles
+            );
+            assert!(step.per_artifact.contains_key("kv_append"));
+            assert!(step.per_artifact.contains_key("qk_row"));
+        }
+    }
+
+    #[test]
+    fn prefill_of_a_seq2seq_topology_prices_both_attention_flavors() {
+        let f = fc();
+        let cfg = crate::model::presets::seq2seq_small(64, 2, 2);
+        let pre = estimate_prefill(&cfg, &f).unwrap();
+        // self + cross chains both walk the split artifacts
+        let qk = pre.per_artifact.get("qk_scores").unwrap().count;
+        assert_eq!(qk as usize, cfg.dec_layers * cfg.heads * 2, "self + cross per head per layer");
+        // decoder-only prefill has no cross chain
+        let solo = crate::model::presets::gpt_small(64, 2);
+        let ps = estimate_prefill(&solo, &f).unwrap();
+        assert_eq!(
+            ps.per_artifact.get("qk_scores").unwrap().count as usize,
+            solo.dec_layers * solo.heads
+        );
     }
 }

@@ -421,10 +421,58 @@ pub fn table2() -> (String, TextTable) {
             wave_cut,
         ]);
     }
+    // ---- generation rows: decoder prefill vs per-token decode-step,
+    // priced by replaying the engine's own prefill/step programs through
+    // the cycle backend (KV-cached generation's cost split).
+    for (dec_cfg, label) in [
+        (presets::gpt_small(64, 4), "gpt-small"),
+        (presets::transformer_base(64), "tf-base"),
+    ] {
+        let fc = FabricConstants::artifact_default();
+        let v = sweep::validate(&dec_cfg, &fc.tile_config(), &p, BW);
+        let rows = [
+            ("prefill", cycle::estimate_prefill(&dec_cfg, &fc)),
+            ("decode-step", cycle::estimate_step(&dec_cfg, &fc)),
+        ];
+        let prefill_cycles = rows[0].1.as_ref().ok().map(|r| r.total_cycles);
+        for (method, rep) in rows {
+            let (ms, extra) = match &rep {
+                Ok(r) => {
+                    // Last column: a step's cost as % of one prefill —
+                    // the marginal-token saving the KV cache buys.
+                    let pct = match (method, prefill_cycles) {
+                        ("decode-step", Some(pre)) => {
+                            fmt_f(100.0 * r.total_cycles as f64 / pre as f64, 2)
+                        }
+                        _ => String::new(),
+                    };
+                    (fmt_f(r.ms_at(v.freq_mhz), 4), pct)
+                }
+                Err(e) => (format!("n/a ({e})"), String::new()),
+            };
+            t.row(vec![
+                dec_cfg.seq_len.to_string(),
+                dec_cfg.d_model.to_string(),
+                dec_cfg.heads.to_string(),
+                label.to_string(),
+                method.into(),
+                String::new(),
+                String::new(),
+                fmt_f(v.freq_mhz, 0),
+                String::new(),
+                String::new(),
+                String::new(),
+                ms,
+                extra,
+            ]);
+        }
+    }
     let mut s = String::new();
     let _ = writeln!(s, "Table 2 — analytical model vs cycle-level simulation (paper: <=1.8% latency error)");
     let _ = writeln!(s, "('replayed' rows price the engine's own TileProgram through the cycle backend;");
-    let _ = writeln!(s, " 'replayed+waves' wave-prices the optimized program — last column is % cycles cut)");
+    let _ = writeln!(s, " 'replayed+waves' wave-prices the optimized program — last column is % cycles cut;");
+    let _ = writeln!(s, " 'prefill'/'decode-step' rows price the generation programs — the decode-step");
+    let _ = writeln!(s, " column's last field is the per-token cost as % of one prefill)");
     s.push_str(&t.render());
     (s, t)
 }
@@ -545,6 +593,22 @@ mod tests {
             );
             let cut: f64 = wav[12].parse().unwrap();
             assert!(cut > 0.0, "cycles-cut column must be positive, got {cut}");
+        }
+        // generation rows: every decoder workload gets a prefill and a
+        // decode-step price, and the cached step is far below the prefill
+        let prefill: Vec<_> = t.rows.iter().filter(|r| r[4] == "prefill").collect();
+        let steps: Vec<_> = t.rows.iter().filter(|r| r[4] == "decode-step").collect();
+        assert_eq!(prefill.len(), 2, "one prefill row per decoder workload");
+        assert_eq!(steps.len(), 2);
+        for (pre, step) in prefill.iter().zip(&steps) {
+            let pre_ms: f64 = pre[11].parse().unwrap();
+            let step_ms: f64 = step[11].parse().unwrap();
+            assert!(
+                step_ms < pre_ms / 4.0,
+                "per-token step ({step_ms} ms) must be far below prefill ({pre_ms} ms)"
+            );
+            let pct: f64 = step[12].parse().unwrap();
+            assert!(pct > 0.0 && pct < 25.0, "step-vs-prefill % out of band: {pct}");
         }
     }
 

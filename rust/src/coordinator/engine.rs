@@ -38,16 +38,19 @@
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use crate::accel::decode::KvCache;
 use crate::accel::registers::{RegisterFile, SynthMaxima};
 use crate::accel::schedule::{
     self, ArtifactInventory, FabricConstants, RuntimeBufs, ScheduleBuilder, TileProgram,
     WeightKind, WeightRef, WeightSource,
 };
 use crate::accel::sim::cycle::{self, CycleReport};
-use crate::model::weights::{LayerWeights, Mat};
+use crate::accel::decode;
+use crate::model::weights::{DecoderLayerWeights, LayerWeights, Mat};
 use crate::model::TnnConfig;
 use crate::runtime::{DeviceTensor, Executor, Tensor, TensorPool};
 
@@ -88,42 +91,163 @@ struct PreparedLayer {
     raw: LayerWeights,
 }
 
-/// A registered model: topology + prepared weight stack.
+/// One decoder layer's cross-attention block, device-resident: prefill
+/// panels (tiled like the encoder's MHA/FFN1 weights) plus the
+/// decode-step full-width row weights.
+struct PreparedCross {
+    /// Per head, per MHA tile: `TS_MHA × DK` panels of the cross Q/K/V.
+    cwq: Vec<Vec<DeviceTensor>>,
+    cwk: Vec<Vec<DeviceTensor>>,
+    cwv: Vec<Vec<DeviceTensor>>,
+    cbq: Vec<DeviceTensor>,
+    cbk: Vec<DeviceTensor>,
+    cbv: Vec<DeviceTensor>,
+    /// Cross output-projection grid, `TS_FFN × TS_FFN` panels.
+    cwo: Vec<Vec<DeviceTensor>>,
+    cbo: DeviceTensor,
+    cg: DeviceTensor,
+    cbn: DeviceTensor,
+    /// Decode-step row weights: per-head `[DMODEL_MAX, DK]` query
+    /// projection and the full `[DMODEL_MAX, DMODEL_MAX]` output
+    /// projection (cross K/V need no row weights — they are cached).
+    dcwq: Vec<DeviceTensor>,
+    dcwo: DeviceTensor,
+}
+
+/// One decoder layer: the self-attention + FFN half reuses the encoder
+/// layer's prefill panels (`base`); the decode-step path additionally
+/// parks the full (fabric-padded) matrices the single-row datapath
+/// streams in one dispatch each.
+struct PreparedDecoderLayer {
+    base: PreparedLayer,
+    /// Per head `[DMODEL_MAX, DK]` full projections (decode-step).
+    dwq: Vec<DeviceTensor>,
+    dwk: Vec<DeviceTensor>,
+    dwv: Vec<DeviceTensor>,
+    /// `[DMODEL_MAX, DMODEL_MAX]` output projection (decode-step).
+    dwo: DeviceTensor,
+    /// `[DMODEL_MAX, HIDDEN_MAX]` / `[HIDDEN_MAX, DMODEL_MAX]` FFN pair.
+    dw1: DeviceTensor,
+    dw2: DeviceTensor,
+    /// `None` for GPT-style decoder-only layers.
+    cross: Option<PreparedCross>,
+}
+
+/// A registered model: topology + prepared weight stacks (encoder layers
+/// and, for `dec_layers > 0` topologies, decoder layers).
 pub struct PreparedStack {
     pub cfg: TnnConfig,
     layers: Vec<PreparedLayer>,
+    dec: Vec<PreparedDecoderLayer>,
+}
+
+/// Resolve the encoder-program weight kinds against one prepared layer.
+fn encoder_layer_weight<'a>(
+    l: &'a PreparedLayer,
+    r: &WeightRef,
+) -> anyhow::Result<&'a DeviceTensor> {
+    Ok(match r.kind {
+        WeightKind::Wq => &l.wq[r.row][r.col],
+        WeightKind::Wk => &l.wk[r.row][r.col],
+        WeightKind::Wv => &l.wv[r.row][r.col],
+        WeightKind::Bq => &l.bq[r.row],
+        WeightKind::Bk => &l.bk[r.row],
+        WeightKind::Bv => &l.bv[r.row],
+        WeightKind::Wo => &l.wo[r.row][r.col],
+        WeightKind::Bo => &l.bo,
+        WeightKind::W1 => &l.w1[r.row][r.col],
+        WeightKind::B1 => &l.b1,
+        WeightKind::W2 => &l.w2[r.row][r.col],
+        WeightKind::B2 => &l.b2,
+        WeightKind::G1 => &l.g1,
+        WeightKind::B1n => &l.b1n,
+        WeightKind::G2 => &l.g2,
+        WeightKind::B2n => &l.b2n,
+        WeightKind::QkvPacked => &l.w_qkv_packed[r.row][r.col],
+        WeightKind::BQkvPacked => &l.b_qkv_packed[r.row],
+        other => bail!("weight kind {other:?} is only valid in decoder programs"),
+    })
 }
 
 /// A prepared stack resolves the program's symbolic weight references to
 /// its device-resident panels — one program serves every stack with the
-/// same topology.
+/// same topology.  This impl serves **encoder** programs (`WeightRef.layer`
+/// indexes the encoder stack); decoder programs resolve through
+/// [`DecoderStackView`].
 impl WeightSource<DeviceTensor> for PreparedStack {
     fn weight(&self, r: &WeightRef) -> anyhow::Result<&DeviceTensor> {
         let l = self
             .layers
             .get(r.layer)
             .ok_or_else(|| anyhow!("program references layer {} of a {}-layer stack", r.layer, self.layers.len()))?;
+        encoder_layer_weight(l, r)
+    }
+}
+
+/// The decoder-side weight view of a prepared stack: `WeightRef.layer`
+/// indexes the **decoder** stack; base kinds (self-attention, FFN, the
+/// first/last LayerNorm pair) resolve into the layer's `base` panels,
+/// cross and decode-row kinds into the decoder-specific tensors.
+pub struct DecoderStackView<'a>(pub &'a PreparedStack);
+
+impl WeightSource<DeviceTensor> for DecoderStackView<'_> {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&DeviceTensor> {
+        let l = self.0.dec.get(r.layer).ok_or_else(|| {
+            anyhow!(
+                "program references decoder layer {} of a {}-layer decoder stack",
+                r.layer,
+                self.0.dec.len()
+            )
+        })?;
+        use WeightKind as K;
+        let cross = || {
+            l.cross
+                .as_ref()
+                .ok_or_else(|| anyhow!("decoder-only layer {} has no cross-attention weights", r.layer))
+        };
         Ok(match r.kind {
-            WeightKind::Wq => &l.wq[r.row][r.col],
-            WeightKind::Wk => &l.wk[r.row][r.col],
-            WeightKind::Wv => &l.wv[r.row][r.col],
-            WeightKind::Bq => &l.bq[r.row],
-            WeightKind::Bk => &l.bk[r.row],
-            WeightKind::Bv => &l.bv[r.row],
-            WeightKind::Wo => &l.wo[r.row][r.col],
-            WeightKind::Bo => &l.bo,
-            WeightKind::W1 => &l.w1[r.row][r.col],
-            WeightKind::B1 => &l.b1,
-            WeightKind::W2 => &l.w2[r.row][r.col],
-            WeightKind::B2 => &l.b2,
-            WeightKind::G1 => &l.g1,
-            WeightKind::B1n => &l.b1n,
-            WeightKind::G2 => &l.g2,
-            WeightKind::B2n => &l.b2n,
-            WeightKind::QkvPacked => &l.w_qkv_packed[r.row][r.col],
-            WeightKind::BQkvPacked => &l.b_qkv_packed[r.row],
+            K::DWq => &l.dwq[r.row],
+            K::DWk => &l.dwk[r.row],
+            K::DWv => &l.dwv[r.row],
+            K::DWo => &l.dwo,
+            K::DW1 => &l.dw1,
+            K::DW2 => &l.dw2,
+            K::CWq => &cross()?.cwq[r.row][r.col],
+            K::CWk => &cross()?.cwk[r.row][r.col],
+            K::CWv => &cross()?.cwv[r.row][r.col],
+            K::CBq => &cross()?.cbq[r.row],
+            K::CBk => &cross()?.cbk[r.row],
+            K::CBv => &cross()?.cbv[r.row],
+            K::CWo => &cross()?.cwo[r.row][r.col],
+            K::CBo => &cross()?.cbo,
+            K::CG => &cross()?.cg,
+            K::CBn => &cross()?.cbn,
+            K::DCWq => &cross()?.dcwq[r.row],
+            K::DCWo => &cross()?.dcwo,
+            _ => encoder_layer_weight(&l.base, r)?,
         })
     }
+}
+
+/// What one greedy generation produced, plus the timing/dispatch split
+/// the serving metrics and the acceptance tests consume.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    /// Generated activation rows, `steps × d_model` (continuous greedy
+    /// feed-back — see `model::reference::greedy_decode`).
+    pub rows: Mat,
+    /// Per-step greedy token ids (argmax feature index of each row).
+    pub tokens: Vec<usize>,
+    /// Source encode (seq2seq) + prompt prefill wall time.
+    pub prefill: Duration,
+    /// Per-token decode-step wall times (`steps - 1` entries: the first
+    /// token falls out of the prefill).
+    pub step_times: Vec<Duration>,
+    /// Instructions one prefill replay dispatches.
+    pub prefill_dispatches: usize,
+    /// Instructions one decode-step replay dispatches (strictly fewer —
+    /// asserted by the regression tests via `ExecStats`).
+    pub step_dispatches: usize,
 }
 
 /// A built program plus its per-topology runtime tensors: the runtime
@@ -160,9 +284,20 @@ impl TopologyKey {
     }
 }
 
+/// Which instruction stream a cache entry holds for a topology: the
+/// encoder stack, the decoder prefill (whole prompt, exports the KV
+/// cache), or the KV-cached decode step (one token row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProgramKind {
+    Encoder,
+    Prefill,
+    DecodeStep,
+}
+
 /// Program cache key: the programmed topology plus the engine's execution
-/// flags (each flag selects a genuinely different instruction stream) and
-/// the optimization level (each level a different *optimized* stream).
+/// flags (each flag selects a genuinely different instruction stream), the
+/// optimization level (each level a different *optimized* stream) and the
+/// program kind (encoder / prefill / decode-step).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct ProgramKey {
     seq_len: usize,
@@ -175,6 +310,7 @@ struct ProgramKey {
     qkv_packed: bool,
     quantized: bool,
     opt_level: OptLevel,
+    kind: ProgramKind,
 }
 
 impl ProgramKey {
@@ -184,7 +320,15 @@ impl ProgramKey {
         qkv_packed: bool,
         quantized: bool,
         opt_level: OptLevel,
+        kind: ProgramKind,
     ) -> Self {
+        // Decoder lowering always uses the split chain (see
+        // `ScheduleBuilder::build_prefill`); normalize the flags so the
+        // cache never holds duplicate decoder programs.
+        let (mode, qkv_packed, quantized) = match kind {
+            ProgramKind::Encoder => (mode, qkv_packed, quantized),
+            _ => (AttentionMode::Split, false, false),
+        };
         ProgramKey {
             seq_len: cfg.seq_len,
             heads: cfg.heads,
@@ -196,12 +340,13 @@ impl ProgramKey {
             qkv_packed,
             quantized,
             opt_level,
+            kind,
         }
     }
 }
 
 /// Cap on cached programs per engine.  Far above any realistic model zoo
-/// on one fabric, but bounds device memory: each entry pins ~8 runtime
+/// on one fabric, but bounds device memory: each entry pins ~10 runtime
 /// device tensors, and without a cap a long-lived pool serving an
 /// unbounded stream of distinct topologies would grow forever.
 const PROGRAM_CACHE_CAP: usize = 64;
@@ -313,21 +458,41 @@ impl TileEngine {
         self.registers.current_config() == *cfg
     }
 
-    /// The cached program for `cfg` under the engine's current execution
-    /// flags and opt level, building + optimizing (and uploading the
-    /// runtime tensor set) on first use.
+    /// The cached encoder program for `cfg` under the engine's current
+    /// execution flags and opt level, building + optimizing (and
+    /// uploading the runtime tensor set) on first use.
     pub fn cached_program(&self, cfg: &TnnConfig) -> anyhow::Result<Rc<CachedProgram>> {
-        let key = ProgramKey::new(cfg, self.mode, self.qkv_packed, self.quantized, self.opt_level);
+        self.cached_program_kind(cfg, ProgramKind::Encoder)
+    }
+
+    /// [`Self::cached_program`] generalized over the program kind —
+    /// decoder topologies cache two extra flavors per topology: the
+    /// prefill and the decode-step stream.
+    pub fn cached_program_kind(
+        &self,
+        cfg: &TnnConfig,
+        kind: ProgramKind,
+    ) -> anyhow::Result<Rc<CachedProgram>> {
+        let key =
+            ProgramKey::new(cfg, self.mode, self.qkv_packed, self.quantized, self.opt_level, kind);
         if let Some(p) = self.programs.borrow().get(&key) {
             self.cache_hits.set(self.cache_hits.get() + 1);
             return Ok(p.clone());
         }
         self.cache_misses.set(self.cache_misses.get() + 1);
-        let mut program = ScheduleBuilder::new(self.fc, *cfg)?
-            .mode(self.mode)
-            .qkv_packed(self.qkv_packed)
-            .quantized(self.quantized)
-            .build();
+        if !matches!(kind, ProgramKind::Encoder) && cfg.dec_layers == 0 {
+            bail!("topology {cfg} has no decoder layers to lower a {kind:?} program for");
+        }
+        let builder = ScheduleBuilder::new(self.fc, *cfg)?;
+        let mut program = match kind {
+            ProgramKind::Encoder => builder
+                .mode(self.mode)
+                .qkv_packed(self.qkv_packed)
+                .quantized(self.quantized)
+                .build(),
+            ProgramKind::Prefill => builder.build_prefill(),
+            ProgramKind::DecodeStep => builder.build_step(),
+        };
         // Run the pass pipeline once; every replay gets the optimized
         // stream (fusion is gated on the manifest's actual inventory).
         // A validation failure fails this one request, not the fabric.
@@ -337,7 +502,7 @@ impl TileEngine {
         let mut programs = self.programs.borrow_mut();
         if programs.len() >= PROGRAM_CACHE_CAP {
             // Arbitrary eviction is fine this far above the working set; a
-            // re-miss just rebuilds the program and re-uploads 8 tensors.
+            // re-miss just rebuilds the program and re-uploads 10 tensors.
             if let Some(evict) = programs.keys().next().copied() {
                 programs.remove(&evict);
             }
@@ -397,15 +562,125 @@ impl TileEngine {
         self.pool.stats()
     }
 
-    /// Pre-tile a weight stack for the fabric (Algorithm 18 steps 7–9:
-    /// "load weight axi master interface buffers").
+    /// Pre-tile an encoder weight stack for the fabric (Algorithm 18
+    /// steps 7–9: "load weight axi master interface buffers").  For
+    /// `dec_layers > 0` topologies use [`Self::prepare_model`].
     pub fn prepare(&self, cfg: &TnnConfig, stack: &[LayerWeights]) -> anyhow::Result<PreparedStack> {
-        self.check_runtime_config(cfg)?;
-        if stack.len() != cfg.enc_layers {
-            bail!("{} weight layers for {} encoder layers", stack.len(), cfg.enc_layers);
+        if cfg.dec_layers > 0 {
+            bail!("topology {cfg} has decoder layers; prepare_model() wants their weights too");
         }
-        let layers = stack.iter().map(|w| self.prepare_layer(cfg, w)).collect::<Result<_, _>>()?;
-        Ok(PreparedStack { cfg: *cfg, layers })
+        self.prepare_model(cfg, stack, &[])
+    }
+
+    /// Pre-tile a full model — encoder layers plus decoder layers (self,
+    /// cross and decode-row weights) — parking everything device-resident.
+    pub fn prepare_model(
+        &self,
+        cfg: &TnnConfig,
+        enc: &[LayerWeights],
+        dec: &[DecoderLayerWeights],
+    ) -> anyhow::Result<PreparedStack> {
+        self.check_runtime_config(cfg)?;
+        if enc.len() != cfg.enc_layers {
+            bail!("{} weight layers for {} encoder layers", enc.len(), cfg.enc_layers);
+        }
+        if dec.len() != cfg.dec_layers {
+            bail!("{} decoder weight layers for {} decoder layers", dec.len(), cfg.dec_layers);
+        }
+        for (i, w) in dec.iter().enumerate() {
+            if w.cross.is_some() != (cfg.enc_layers > 0) {
+                bail!(
+                    "decoder layer {i}: cross-attention weights {} but enc_layers = {}",
+                    if w.cross.is_some() { "present" } else { "absent" },
+                    cfg.enc_layers
+                );
+            }
+        }
+        let layers = enc.iter().map(|w| self.prepare_layer(cfg, w)).collect::<Result<_, _>>()?;
+        let dec =
+            dec.iter().map(|w| self.prepare_decoder_layer(cfg, w)).collect::<Result<_, _>>()?;
+        Ok(PreparedStack { cfg: *cfg, layers, dec })
+    }
+
+    fn prepare_decoder_layer(
+        &self,
+        cfg: &TnnConfig,
+        w: &DecoderLayerWeights,
+    ) -> anyhow::Result<PreparedDecoderLayer> {
+        let base = self.prepare_layer(cfg, &w.base)?;
+        let fc = self.fc;
+        // Decode-step row weights: the full matrices, zero-padded to the
+        // fabric maxima (padded rows/cols multiply the zero-padded tail of
+        // the activation row, so the valid prefix is untouched).
+        let pad_full = |m: &Mat, rows: usize, cols: usize| {
+            self.exec.to_device(&Tensor::from_mat(&m.padded(rows, cols)))
+        };
+        let row_heads = |ws: &[Mat]| -> anyhow::Result<Vec<DeviceTensor>> {
+            ws.iter().map(|m| pad_full(m, fc.dmodel_max, fc.dk)).collect()
+        };
+        let cross = match &w.cross {
+            None => None,
+            Some(c) => {
+                let d = cfg.d_model;
+                let h = cfg.heads;
+                let t_m = d / fc.ts_mha;
+                let t_f = d / fc.ts_ffn;
+                let panel = |m: &Mat, r0: usize, c0: usize, rows: usize, cols: usize| {
+                    self.exec.to_device(&Tensor::from_mat(&m.block(r0, c0, rows, cols)))
+                };
+                let head_tiles = |ws: &[Mat]| -> anyhow::Result<Vec<Vec<DeviceTensor>>> {
+                    (0..h)
+                        .map(|hh| {
+                            (0..t_m)
+                                .map(|t| panel(&ws[hh], t * fc.ts_mha, 0, fc.ts_mha, fc.dk))
+                                .collect()
+                        })
+                        .collect()
+                };
+                let vec_pad = |v: &[f32], n: usize| {
+                    let mut data = v.to_vec();
+                    data.resize(n, 0.0);
+                    self.exec.to_device(&Tensor::new(vec![n], data))
+                };
+                let bias_heads = |bs: &[Vec<f32>]| -> anyhow::Result<Vec<DeviceTensor>> {
+                    bs.iter()
+                        .map(|b| self.exec.to_device(&Tensor::new(vec![fc.dk], b.clone())))
+                        .collect()
+                };
+                Some(PreparedCross {
+                    cwq: head_tiles(&c.wq)?,
+                    cwk: head_tiles(&c.wk)?,
+                    cwv: head_tiles(&c.wv)?,
+                    cbq: bias_heads(&c.bq)?,
+                    cbk: bias_heads(&c.bk)?,
+                    cbv: bias_heads(&c.bv)?,
+                    cwo: (0..t_f)
+                        .map(|r| {
+                            (0..t_f)
+                                .map(|cc| {
+                                    panel(&c.wo, r * fc.ts_ffn, cc * fc.ts_ffn, fc.ts_ffn, fc.ts_ffn)
+                                })
+                                .collect()
+                        })
+                        .collect::<anyhow::Result<_>>()?,
+                    cbo: vec_pad(&c.bo, fc.dmodel_max)?,
+                    cg: vec_pad(&c.g, fc.dmodel_max)?,
+                    cbn: vec_pad(&c.bn, fc.dmodel_max)?,
+                    dcwq: row_heads(&c.wq)?,
+                    dcwo: pad_full(&c.wo, fc.dmodel_max, fc.dmodel_max)?,
+                })
+            }
+        };
+        Ok(PreparedDecoderLayer {
+            dwq: row_heads(&w.base.wq)?,
+            dwk: row_heads(&w.base.wk)?,
+            dwv: row_heads(&w.base.wv)?,
+            dwo: pad_full(&w.base.wo, fc.dmodel_max, fc.dmodel_max)?,
+            dw1: pad_full(&w.base.w1, fc.dmodel_max, fc.hidden_max)?,
+            dw2: pad_full(&w.base.w2, fc.hidden_max, fc.dmodel_max)?,
+            cross,
+            base,
+        })
     }
 
     fn prepare_layer(&self, cfg: &TnnConfig, w: &LayerWeights) -> anyhow::Result<PreparedLayer> {
@@ -517,6 +792,181 @@ impl TileEngine {
         let result = schedule::crop_to_mat(&out, cfg.seq_len, cfg.d_model);
         self.pool.put(out);
         Ok(result)
+    }
+
+    /// Decoder **prefill**: run the whole prompt (`rows <= seq_len` of
+    /// `d_model` columns) through the decoder stack, returning the output
+    /// rows for the prompt and the populated device-resident [`KvCache`].
+    /// Seq2seq topologies additionally take the encoder memory
+    /// (`seq_len × d_model`, usually from [`Self::run_encoder`]).
+    pub fn decoder_prefill(
+        &self,
+        stack: &PreparedStack,
+        prompt: &Mat,
+        memory: Option<&Mat>,
+    ) -> anyhow::Result<(Mat, KvCache<DeviceTensor>)> {
+        let cfg = &stack.cfg;
+        if self.registers.current_config() != *cfg {
+            bail!("register file is programmed for a different topology (Algorithm 18 step 3 first)");
+        }
+        if cfg.dec_layers == 0 {
+            bail!("topology {cfg} has no decoder layers");
+        }
+        if prompt.cols != cfg.d_model || prompt.rows == 0 || prompt.rows > cfg.seq_len {
+            bail!(
+                "prompt is {}x{}, want 1..={} rows of {} columns",
+                prompt.rows,
+                prompt.cols,
+                cfg.seq_len,
+                cfg.d_model
+            );
+        }
+        let cached = self.cached_program_kind(cfg, ProgramKind::Prefill)?;
+        let mut padded = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
+        schedule::pad_into(prompt, &mut padded);
+        let mut inputs = vec![padded];
+        if cfg.enc_layers > 0 {
+            let mem = memory.ok_or_else(|| anyhow!("seq2seq topology needs an encoder memory"))?;
+            if (mem.rows, mem.cols) != (cfg.seq_len, cfg.d_model) {
+                bail!(
+                    "encoder memory is {}x{}, registers say {}x{}",
+                    mem.rows,
+                    mem.cols,
+                    cfg.seq_len,
+                    cfg.d_model
+                );
+            }
+            let mut mp = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
+            schedule::pad_into(mem, &mut mp);
+            inputs.push(mp);
+        } else if memory.is_some() {
+            bail!("decoder-only topology takes no encoder memory");
+        }
+        let (out, exports) = schedule::replay_full(
+            &cached.program,
+            &self.exec,
+            &DecoderStackView(stack),
+            &cached.runtime,
+            inputs,
+            &[],
+            Some(&self.pool),
+        )?;
+        let result = schedule::crop_to_mat(&out, prompt.rows, cfg.d_model);
+        self.pool.put(out);
+        let cache = KvCache::from_prefill(cfg, exports, prompt.rows)?;
+        Ok((result, cache))
+    }
+
+    /// One KV-cached decode step: feed the token row for position
+    /// `cache.len`, append its K/V on-device, and return the output row
+    /// (the activation of the *next* position).  Dispatches strictly
+    /// fewer instructions than a prefill replay — the whole point of the
+    /// cache.
+    pub fn decode_step(
+        &self,
+        stack: &PreparedStack,
+        cache: &mut KvCache<DeviceTensor>,
+        row: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let cfg = &stack.cfg;
+        if self.registers.current_config() != *cfg {
+            bail!("register file is programmed for a different topology (Algorithm 18 step 3 first)");
+        }
+        if row.len() != cfg.d_model {
+            bail!("step row has {} features, registers say {}", row.len(), cfg.d_model);
+        }
+        let pos = cache.len;
+        if pos >= cfg.seq_len {
+            bail!("sequence budget exhausted ({} of {} positions)", pos, cfg.seq_len);
+        }
+        let cached = self.cached_program_kind(cfg, ProgramKind::DecodeStep)?;
+        let mut input = self.pool.take_zeroed(&[1, self.fc.dmodel_max]);
+        input.data[..cfg.d_model].copy_from_slice(row);
+        let inputs =
+            vec![input, decode::step_mask_row(self.fc.sl_max, pos), decode::position_tensor(pos)];
+        let externs = cache.externs();
+        let (out, exports) = schedule::replay_full(
+            &cached.program,
+            &self.exec,
+            &DecoderStackView(stack),
+            &cached.runtime,
+            inputs,
+            &externs,
+            Some(&self.pool),
+        )?;
+        drop(externs);
+        cache.apply_step(exports)?;
+        let result = out.data[..cfg.d_model].to_vec();
+        self.pool.put(out);
+        Ok(result)
+    }
+
+    /// Greedy autoregressive generation: (optionally) encode the source
+    /// into a memory, prefill the prompt, then replay the decode-step
+    /// program once per remaining token against the pooled KV cache.
+    /// Matches `model::reference::greedy_decode` on the f32 path.
+    pub fn generate(
+        &self,
+        stack: &PreparedStack,
+        prompt: &Mat,
+        source: Option<&Mat>,
+        steps: usize,
+    ) -> anyhow::Result<Generated> {
+        let cfg = &stack.cfg;
+        if steps == 0 {
+            bail!("generation needs at least one step");
+        }
+        if prompt.rows + steps > cfg.seq_len {
+            bail!(
+                "prompt ({}) + steps ({steps}) exceed the sequence budget {}",
+                prompt.rows,
+                cfg.seq_len
+            );
+        }
+        let t0 = Instant::now();
+        let memory_mat;
+        let memory = if cfg.enc_layers > 0 {
+            let src =
+                source.ok_or_else(|| anyhow!("seq2seq topology needs a source to encode"))?;
+            memory_mat = self.run_encoder(stack, src)?;
+            Some(&memory_mat)
+        } else {
+            if source.is_some() {
+                bail!("decoder-only topology takes no source input");
+            }
+            None
+        };
+        let (pre_out, mut cache) = self.decoder_prefill(stack, prompt, memory)?;
+        let prefill = t0.elapsed();
+        let d = cfg.d_model;
+        let mut rows = Mat::zeros(steps, d);
+        let mut tokens = Vec::with_capacity(steps);
+        // The prompt's last output row is the first generated token.
+        let mut next: Vec<f32> = (0..d).map(|c| pre_out.at(prompt.rows - 1, c)).collect();
+        tokens.push(crate::model::reference::argmax_token(&next));
+        rows.data[..d].copy_from_slice(&next);
+        let mut step_times = Vec::with_capacity(steps.saturating_sub(1));
+        for i in 1..steps {
+            let t = Instant::now();
+            next = self.decode_step(stack, &mut cache, &next)?;
+            step_times.push(t.elapsed());
+            tokens.push(crate::model::reference::argmax_token(&next));
+            rows.data[i * d..(i + 1) * d].copy_from_slice(&next);
+        }
+        Ok(Generated {
+            rows,
+            tokens,
+            prefill,
+            step_times,
+            prefill_dispatches: self
+                .cached_program_kind(cfg, ProgramKind::Prefill)?
+                .program
+                .dispatch_count(),
+            step_dispatches: self
+                .cached_program_kind(cfg, ProgramKind::DecodeStep)?
+                .program
+                .dispatch_count(),
+        })
     }
 
     /// Run one layer through a *fused* per-config artifact (the
@@ -791,8 +1241,8 @@ mod tests {
         let per_replay = e.cached_program(&cfg).unwrap().program.upload_count() as u64;
         assert_eq!(
             s1.uploads - s0.uploads,
-            per_replay + 8,
-            "a miss uploads the 8 per-topology runtime tensors once"
+            per_replay + 10,
+            "a miss uploads the 10 per-topology runtime tensors once"
         );
         assert_eq!(
             s2.uploads - s1.uploads,

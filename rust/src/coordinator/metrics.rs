@@ -15,6 +15,12 @@ pub struct Metrics {
     /// Which fabric these numbers belong to; `None` for the aggregate.
     pub fabric: Option<usize>,
     /// End-to-end request latencies (queue wait + compute), seconds.
+    /// A **generation** is one request: it contributes a single sample
+    /// here (its whole prefill + N steps), deliberately — throughput and
+    /// failure accounting stay uniform across request kinds — while the
+    /// `prefills`/`decode_steps` samples below break that one number
+    /// down.  Read those (not this mixed histogram) when comparing
+    /// encode vs generation latency shapes.
     pub latencies: Vec<f64>,
     /// Compute component (time on the fabric proper), seconds.
     pub computes: Vec<f64>,
@@ -24,6 +30,15 @@ pub struct Metrics {
     /// Batch sizes drained — recorded only for batches that were actually
     /// served (prepared model, registers programmed).
     pub batch_sizes: Vec<usize>,
+    /// Generation prefill times (source encode + prompt prefill),
+    /// seconds — recorded only for generations that **succeeded**, so a
+    /// failed generation never pollutes the latency samples.
+    pub prefills: Vec<f64>,
+    /// Per-token decode-step times, seconds (each generation contributes
+    /// `steps - 1` samples) — success-only, like `prefills`.
+    pub decode_steps: Vec<f64>,
+    /// Completed generations.
+    pub generations: u64,
     /// Register reprogramming events (model switches on the fabric).
     pub reprograms: u64,
     /// Requests that failed (programming errors, execution errors).
@@ -50,6 +65,25 @@ impl Metrics {
 
     pub fn record_batch(&mut self, size: usize) {
         self.batch_sizes.push(size);
+    }
+
+    /// Record one **successful** generation's timing split.  Callers must
+    /// not invoke this on failure — the failure path only bumps `failed`,
+    /// keeping the prefill/per-token summaries clean.
+    pub fn record_generation(&mut self, prefill: Duration, steps: &[Duration]) {
+        self.generations += 1;
+        self.prefills.push(prefill.as_secs_f64());
+        self.decode_steps.extend(steps.iter().map(|d| d.as_secs_f64()));
+    }
+
+    /// Prefill-time summary (None until a generation succeeded).
+    pub fn prefill_summary(&self) -> Option<Summary> {
+        (!self.prefills.is_empty()).then(|| summarize(&self.prefills))
+    }
+
+    /// Per-token decode-step summary.
+    pub fn step_summary(&self) -> Option<Summary> {
+        (!self.decode_steps.is_empty()).then(|| summarize(&self.decode_steps))
     }
 
     /// Successfully served requests.
@@ -105,6 +139,9 @@ impl Metrics {
         self.computes.extend_from_slice(&other.computes);
         self.queue_waits.extend_from_slice(&other.queue_waits);
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.prefills.extend_from_slice(&other.prefills);
+        self.decode_steps.extend_from_slice(&other.decode_steps);
+        self.generations += other.generations;
         self.reprograms += other.reprograms;
         self.failed += other.failed;
         self.elapsed = self.elapsed.max(other.elapsed);
@@ -156,6 +193,24 @@ impl Metrics {
                 q.p50 * 1e3,
                 q.p95 * 1e3,
                 q.mean * 1e3
+            ));
+        }
+        if let Some(p) = self.prefill_summary() {
+            out.push_str(&format!(
+                "generations: {} | prefill ms: p50={:.2} p95={:.2} mean={:.2}\n",
+                self.generations,
+                p.p50 * 1e3,
+                p.p95 * 1e3,
+                p.mean * 1e3
+            ));
+        }
+        if let Some(s) = self.step_summary() {
+            out.push_str(&format!(
+                "decode-step ms ({} tokens): p50={:.2} p95={:.2} mean={:.2}\n",
+                self.decode_steps.len(),
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.mean * 1e3
             ));
         }
         out.push_str(&format!(
@@ -235,6 +290,48 @@ mod tests {
         assert_eq!(agg.per_fabric.len(), 2);
         assert_eq!(agg.per_fabric[0].fabric, Some(0));
         assert!(agg.report().contains("fabric 1"));
+    }
+
+    #[test]
+    fn generation_split_merges_and_failures_stay_out_of_the_samples() {
+        let mut a = Metrics::for_fabric(0);
+        a.record_generation(
+            Duration::from_millis(20),
+            &[Duration::from_millis(2), Duration::from_millis(3)],
+        );
+        // A failed generation takes the failure path only: no
+        // record_generation call, just the failure counter — the satellite
+        // invariant that failures never pollute the latency samples.
+        a.failed += 1;
+        let mut b = Metrics::for_fabric(1);
+        b.record_generation(Duration::from_millis(40), &[Duration::from_millis(4)]);
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.generations, 2);
+        assert_eq!(agg.failed, 1);
+        assert_eq!(agg.prefills.len(), 2, "one prefill sample per SUCCESSFUL generation");
+        assert_eq!(agg.decode_steps.len(), 3);
+        let p = agg.prefill_summary().unwrap();
+        assert!((p.mean - 0.030).abs() < 1e-9);
+        let s = agg.step_summary().unwrap();
+        assert!((s.mean - 0.003).abs() < 1e-9);
+        let rep = agg.report();
+        // record_generation only adds the prefill/step breakdown; the
+        // serving loop separately records the generation's single e2e
+        // sample via record() — so breakdown-only metrics report empty.
+        assert!(rep.contains("no requests served"), "{rep}");
+    }
+
+    #[test]
+    fn generation_summaries_render_in_the_report() {
+        let mut m = Metrics::default();
+        m.record(Duration::from_millis(9), Duration::from_millis(1), Duration::from_millis(10));
+        m.record_generation(Duration::from_millis(20), &[Duration::from_millis(2)]);
+        m.elapsed = 1.0;
+        let rep = m.report();
+        assert!(rep.contains("generations: 1"), "{rep}");
+        assert!(rep.contains("decode-step ms (1 tokens)"), "{rep}");
+        // empty metrics render no generation lines
+        assert!(!Metrics::default().report().contains("prefill"));
     }
 
     #[test]

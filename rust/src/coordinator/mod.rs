@@ -11,11 +11,13 @@
 //!   size/deadline policy).
 //! * [`router`] — model registry + request routing, with pool-affinity
 //!   hints.
-//! * [`server`] — the threaded serving loop: clients submit token
-//!   sequences; a dispatcher assigns model-homogeneous batches to a
-//!   **pool** of fabric worker threads (each owning one engine, like one
-//!   piece of hardware) under an affinity or round-robin schedule.
-//!   `pool_size = 1` is the paper's single-fabric host software.
+//! * [`server`] — the threaded serving loop: clients submit encode
+//!   requests or **generation requests** (greedy decode over the
+//!   prefill/KV-cached-step programs); a dispatcher assigns
+//!   model-homogeneous batches to a **pool** of fabric worker threads
+//!   (each owning one engine, like one piece of hardware) under an
+//!   affinity or round-robin schedule.  `pool_size = 1` is the paper's
+//!   single-fabric host software.
 //! * [`metrics`] — compute/queue/end-to-end latency and throughput
 //!   accounting (AXI-timer analog), per fabric and aggregated.
 
@@ -25,7 +27,10 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use engine::{AttentionMode, OptLevel, PreparedStack, TileEngine};
+pub use engine::{
+    AttentionMode, DecoderStackView, Generated, OptLevel, PreparedStack, ProgramKind, TileEngine,
+};
 pub use server::{
-    FaultInjection, PoolScheduler, Request, Response, SchedulePolicy, Server, ServerConfig,
+    FaultInjection, GenerateRequest, GenerateResponse, PoolScheduler, Request, Response,
+    SchedulePolicy, Server, ServerConfig,
 };

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail};
 
 use crate::accel::registers::SynthMaxima;
-use crate::model::weights::{init_stack, LayerWeights};
+use crate::model::weights::{init_decoder_stack, init_stack, DecoderLayerWeights, LayerWeights};
 use crate::model::TnnConfig;
 
 /// A deployable model: name, topology, deterministic weight seed.
@@ -37,9 +37,24 @@ impl ModelSpec {
         self
     }
 
-    /// Materialize the synthetic weight stack (DESIGN.md §Substitutions).
+    /// Materialize the synthetic encoder weight stack (DESIGN.md
+    /// §Substitutions).  Empty for decoder-only models.
     pub fn weights(&self) -> Vec<LayerWeights> {
         init_stack(self.seed, self.cfg.d_model, self.cfg.heads, self.cfg.enc_layers)
+    }
+
+    /// Materialize the synthetic decoder weight stack (self-attention +
+    /// FFN per layer; a cross-attention block iff the model also has an
+    /// encoder stack).  Empty for encoder-only models.  The seed stream
+    /// is offset from the encoder's so the stacks never share values.
+    pub fn decoder_weights(&self) -> Vec<DecoderLayerWeights> {
+        init_decoder_stack(
+            self.seed ^ 0x5eed_dec0,
+            self.cfg.d_model,
+            self.cfg.heads,
+            self.cfg.dec_layers,
+            self.cfg.enc_layers > 0,
+        )
     }
 }
 
@@ -92,15 +107,68 @@ impl Router {
         self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
     }
 
-    /// Validate a request's input shape against its model.
+    /// Validate an encode request's input shape against its model.
+    /// Models with decoder layers are **refused** here: the encode path
+    /// would silently execute only the encoder stack (the truncation bug
+    /// this explicit error replaces) — generation requests go through
+    /// [`Self::route_generate`].
     pub fn route(&self, model: &str, rows: usize, cols: usize) -> anyhow::Result<&ModelSpec> {
         let spec = self.lookup(model)?;
+        if spec.cfg.dec_layers > 0 {
+            bail!(
+                "model '{model}' has {} decoder layers; the encode path would silently drop \
+                 them — submit a generation request instead",
+                spec.cfg.dec_layers
+            );
+        }
         if rows != spec.cfg.seq_len || cols != spec.cfg.d_model {
             bail!(
                 "request for '{model}' is {rows}x{cols}, expected {}x{}",
                 spec.cfg.seq_len,
                 spec.cfg.d_model
             );
+        }
+        Ok(spec)
+    }
+
+    /// Validate a generation request: the model must carry decoder
+    /// layers, the prompt must fit the sequence budget with `steps` to
+    /// spare, and a source is required exactly when the model has an
+    /// encoder stack to run it through.
+    pub fn route_generate(
+        &self,
+        model: &str,
+        prompt: (usize, usize),
+        source: Option<(usize, usize)>,
+        steps: usize,
+    ) -> anyhow::Result<&ModelSpec> {
+        let spec = self.lookup(model)?;
+        let cfg = &spec.cfg;
+        if cfg.dec_layers == 0 {
+            bail!("model '{model}' has no decoder layers; submit a plain encode request");
+        }
+        if steps == 0 {
+            bail!("generation for '{model}' needs steps >= 1");
+        }
+        let (rows, cols) = prompt;
+        if cols != cfg.d_model || rows == 0 {
+            bail!("prompt for '{model}' is {rows}x{cols}, want >=1 rows of {}", cfg.d_model);
+        }
+        if rows + steps > cfg.seq_len {
+            bail!(
+                "prompt ({rows}) + steps ({steps}) exceed '{model}'s sequence budget {}",
+                cfg.seq_len
+            );
+        }
+        match (cfg.enc_layers > 0, source) {
+            (true, None) => bail!("seq2seq model '{model}' needs a source input to encode"),
+            (true, Some((sr, sc))) if (sr, sc) != (cfg.seq_len, cfg.d_model) => bail!(
+                "source for '{model}' is {sr}x{sc}, expected {}x{}",
+                cfg.seq_len,
+                cfg.d_model
+            ),
+            (false, Some(_)) => bail!("decoder-only model '{model}' takes no source input"),
+            _ => {}
         }
         Ok(spec)
     }
@@ -169,6 +237,53 @@ mod tests {
         assert_eq!(r.affinity_hint("pinned"), Some(2));
         assert_eq!(r.affinity_hint("free"), None);
         assert_eq!(r.affinity_hint("missing"), None);
+    }
+
+    #[test]
+    fn decoder_models_register_and_route_through_generation_only() {
+        // Satellite regression: dec_layers > 0 used to be silently served
+        // as an encoder — now the encode route is an explicit error and
+        // the generation route validates shape + budget.
+        let mut r = router();
+        let gpt = presets::gpt_small(64, 2);
+        r.register(ModelSpec::new("gpt", gpt, 7)).unwrap();
+        let err = r.route("gpt", 64, 256).unwrap_err().to_string();
+        assert!(err.contains("decoder layers"), "{err}");
+        assert!(r.route_generate("gpt", (4, 256), None, 8).is_ok());
+        // budget, shape, and source-mismatch failures are explicit
+        assert!(r.route_generate("gpt", (60, 256), None, 8).is_err());
+        assert!(r.route_generate("gpt", (4, 128), None, 8).is_err());
+        assert!(r.route_generate("gpt", (4, 256), Some((64, 256)), 8).is_err());
+        assert!(r.route_generate("gpt", (4, 256), None, 0).is_err());
+
+        let s2s = presets::seq2seq_small(64, 2, 2);
+        r.register(ModelSpec::new("s2s", s2s, 8)).unwrap();
+        assert!(r.route_generate("s2s", (4, 256), Some((64, 256)), 8).is_ok());
+        assert!(r.route_generate("s2s", (4, 256), None, 8).is_err());
+        assert!(r.route_generate("s2s", (4, 256), Some((32, 256)), 8).is_err());
+        // encoder-only models refuse the generation route
+        r.register(ModelSpec::new("enc", presets::small_encoder(64, 1), 9)).unwrap();
+        assert!(r.route_generate("enc", (4, 256), None, 8).is_err());
+    }
+
+    #[test]
+    fn decoder_weight_stacks_match_the_topology() {
+        let gpt = ModelSpec::new("gpt", presets::gpt_small(64, 3), 5);
+        let dw = gpt.decoder_weights();
+        assert_eq!(dw.len(), 3);
+        assert!(dw.iter().all(|w| w.cross.is_none()));
+        assert!(gpt.weights().is_empty());
+        let s2s = ModelSpec::new("s2s", presets::seq2seq_small(64, 2, 2), 5);
+        let dw = s2s.decoder_weights();
+        assert_eq!(dw.len(), 2);
+        assert!(dw.iter().all(|w| w.cross.is_some()));
+        assert_eq!(s2s.weights().len(), 2);
+        // deterministic and decoupled from the encoder stream
+        assert_eq!(
+            s2s.decoder_weights()[0].base.wo,
+            ModelSpec::new("x", presets::seq2seq_small(64, 2, 2), 5).decoder_weights()[0].base.wo
+        );
+        assert_ne!(s2s.decoder_weights()[0].base.wo, s2s.weights()[0].wo);
     }
 
     #[test]

@@ -61,6 +61,34 @@ pub struct Response {
     pub queue_wait: Duration,
 }
 
+/// One generation request: greedy-decode `steps` tokens from `prompt`
+/// (rows of `d_model` activations) on a `dec_layers > 0` model; seq2seq
+/// models additionally encode `source` into the cross-attention memory.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub model: String,
+    pub prompt: Mat,
+    pub source: Option<Mat>,
+    pub steps: usize,
+}
+
+/// A generation's response: the produced rows/token ids plus the
+/// per-token timing split the metrics aggregate.
+#[derive(Debug)]
+pub struct GenerateResponse {
+    /// Generated activation rows, `steps × d_model`.
+    pub rows: Mat,
+    /// Greedy token ids, one per step.
+    pub tokens: Vec<usize>,
+    /// End-to-end latency (queue + compute).
+    pub latency: Duration,
+    pub queue_wait: Duration,
+    /// Source encode + prompt prefill (cache population) time.
+    pub prefill: Duration,
+    /// Per-token decode-step times (`steps - 1` entries).
+    pub step_times: Vec<Duration>,
+}
+
 /// How the dispatcher assigns ready batches to pool fabrics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulePolicy {
@@ -116,12 +144,43 @@ impl ServerConfig {
 }
 
 type ReplyTx = Sender<anyhow::Result<Response>>;
-/// A request in flight: payload + submit instant + reply channel.
-type WorkItem = (Request, Instant, ReplyTx);
+type GenReplyTx = Sender<anyhow::Result<GenerateResponse>>;
+
+/// One unit of fabric work: an encode request or a generation, each with
+/// its own reply channel.  Both kinds ride the same per-model batcher
+/// queues (same register programming, same weight residency).
+enum Job {
+    Infer { req: Request, reply: ReplyTx },
+    Generate { req: GenerateRequest, reply: GenReplyTx },
+}
+
+impl Job {
+    fn model(&self) -> &str {
+        match self {
+            Job::Infer { req, .. } => &req.model,
+            Job::Generate { req, .. } => &req.model,
+        }
+    }
+
+    /// Fail the job with `msg` (worker lost, programming error, …).
+    fn fail(self, msg: String) {
+        match self {
+            Job::Infer { reply, .. } => {
+                let _ = reply.send(Err(anyhow!(msg)));
+            }
+            Job::Generate { reply, .. } => {
+                let _ = reply.send(Err(anyhow!(msg)));
+            }
+        }
+    }
+}
+
+/// A request in flight: payload + submit instant.
+type WorkItem = (Job, Instant);
 
 /// Client → dispatcher messages.
 enum Msg {
-    Work { req: Request, enqueued: Instant, reply: ReplyTx },
+    Work { job: Job, enqueued: Instant },
     Shutdown { reply: Sender<anyhow::Result<Metrics>> },
 }
 
@@ -289,7 +348,7 @@ impl Server {
         self.router.route(&req.model, req.input.rows, req.input.cols)?;
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Work { req, enqueued: Instant::now(), reply })
+            .send(Msg::Work { job: Job::Infer { req, reply }, enqueued: Instant::now() })
             .map_err(|_| anyhow!("dispatcher is gone"))?;
         Ok(rx)
     }
@@ -297,6 +356,30 @@ impl Server {
     /// Convenience: submit and wait.
     pub fn infer(&self, req: Request) -> anyhow::Result<Response> {
         self.submit(req)?.recv().map_err(|_| anyhow!("pool dropped the request"))?
+    }
+
+    /// Submit a generation request (fail-fast validated on the submit
+    /// side, like [`Self::submit`]); returns its reply channel.
+    pub fn submit_generate(
+        &self,
+        req: GenerateRequest,
+    ) -> anyhow::Result<Receiver<anyhow::Result<GenerateResponse>>> {
+        self.router.route_generate(
+            &req.model,
+            (req.prompt.rows, req.prompt.cols),
+            req.source.as_ref().map(|s| (s.rows, s.cols)),
+            req.steps,
+        )?;
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Work { job: Job::Generate { req, reply }, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("dispatcher is gone"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit a generation and wait.
+    pub fn generate(&self, req: GenerateRequest) -> anyhow::Result<GenerateResponse> {
+        self.submit_generate(req)?.recv().map_err(|_| anyhow!("pool dropped the request"))?
     }
 
     /// Stop the pool and collect final metrics (aggregate with per-fabric
@@ -347,9 +430,9 @@ fn dispatcher_thread(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Work { req, enqueued, reply }) => {
-                let model = req.model.clone();
-                batcher.push_at(&model, (req, enqueued, reply), enqueued);
+            Ok(Msg::Work { job, enqueued }) => {
+                let model = job.model().to_string();
+                batcher.push_at(&model, (job, enqueued), enqueued);
             }
             Ok(Msg::Shutdown { reply }) => {
                 shutdown_reply = Some(reply);
@@ -372,9 +455,8 @@ fn dispatcher_thread(
                 // The worker thread is gone: fail the batch loudly instead
                 // of dropping the reply channels.
                 if let FabricMsg::Batch { items, .. } = lost {
-                    for (_, _, reply) in items {
-                        let _ =
-                            reply.send(Err(anyhow!("fabric {fabric} is gone (worker died)")));
+                    for (job, _) in items {
+                        job.fail(format!("fabric {fabric} is gone (worker died)"));
                     }
                 }
                 sched.complete(fabric, n);
@@ -437,7 +519,7 @@ fn fabric_thread(
     // Prepare every registered model's weights once (Algorithm 18, 4–12).
     let mut prepared: Vec<(String, PreparedStack)> = Vec::new();
     for spec in &cfg.models {
-        match engine.prepare(&spec.cfg, &spec.weights()) {
+        match engine.prepare_model(&spec.cfg, &spec.weights(), &spec.decoder_weights()) {
             Ok(p) => prepared.push((spec.name.clone(), p)),
             Err(e) => {
                 let _ = ready
@@ -447,11 +529,19 @@ fn fabric_thread(
         }
     }
     // Warm the executable cache so first requests are not compile-bound.
-    let names: Vec<&str> = [
+    let mut names: Vec<&str> = vec![
         "mm_qkv", "mm_ffn1", "mm_ffn2", "mm_ffn3", "bias_add_dk", "bias_add_d", "bias_relu_h",
         "residual_ln", "qk_scores", "softmax", "sv", "attn_fused",
-    ]
-    .into();
+    ];
+    if cfg.models.iter().any(|m| m.cfg.dec_layers > 0) {
+        // Generation models need the decode-step row artifacts too; an
+        // artifact set predating them fails here, at warmup, with the
+        // missing names — not per-request mid-generation.
+        names.extend([
+            "dec_qkv_row", "qk_row", "softmax_row", "sv_row", "kv_append", "dec_proj_row",
+            "dec_ffn1_row", "dec_ffn2_row", "residual_ln_row",
+        ]);
+    }
     if let Err(e) = engine.executor().warmup(&names) {
         let _ = ready.send(Err(e));
         return;
@@ -488,8 +578,8 @@ fn serve_batch(
 ) {
     let Some((_, stack)) = prepared.iter().find(|(n, _)| n == model) else {
         metrics.failed += items.len() as u64;
-        for (_, _, reply) in items {
-            let _ = reply.send(Err(anyhow!("model '{model}' not prepared on this fabric")));
+        for (job, _) in items {
+            job.fail(format!("model '{model}' not prepared on this fabric"));
         }
         return;
     };
@@ -508,10 +598,8 @@ fn serve_batch(
                 // wrong numerics.
                 let msg = format!("{e:#}");
                 metrics.failed += items.len() as u64;
-                for (_, _, reply) in items {
-                    let _ = reply.send(Err(anyhow!(
-                        "programming registers for model '{model}': {msg}"
-                    )));
+                for (job, _) in items {
+                    job.fail(format!("programming registers for model '{model}': {msg}"));
                 }
                 return;
             }
@@ -519,20 +607,46 @@ fn serve_batch(
     }
     // Count the batch only once the model is prepared AND programmed.
     metrics.record_batch(items.len());
-    for (req, enqueued, reply) in items {
+    for (job, enqueued) in items {
         let queue_wait = enqueued.elapsed();
         let t0 = Instant::now();
-        let result = engine.run_encoder(stack, &req.input).map(|output| Response {
-            output,
-            compute: t0.elapsed(),
-            queue_wait,
-            latency: enqueued.elapsed(),
-        });
-        match &result {
-            Ok(r) => metrics.record(r.compute, r.queue_wait, r.latency),
-            Err(_) => metrics.failed += 1,
+        match job {
+            Job::Infer { req, reply } => {
+                let result = engine.run_encoder(stack, &req.input).map(|output| Response {
+                    output,
+                    compute: t0.elapsed(),
+                    queue_wait,
+                    latency: enqueued.elapsed(),
+                });
+                match &result {
+                    Ok(r) => metrics.record(r.compute, r.queue_wait, r.latency),
+                    Err(_) => metrics.failed += 1,
+                }
+                let _ = reply.send(result);
+            }
+            Job::Generate { req, reply } => {
+                let result = engine
+                    .generate(stack, &req.prompt, req.source.as_ref(), req.steps)
+                    .map(|g| GenerateResponse {
+                        rows: g.rows,
+                        tokens: g.tokens,
+                        latency: enqueued.elapsed(),
+                        queue_wait,
+                        prefill: g.prefill,
+                        step_times: g.step_times,
+                    });
+                match &result {
+                    Ok(r) => {
+                        // Success-only sampling: a failed generation must
+                        // never pollute the prefill/per-token summaries.
+                        metrics.record_generation(r.prefill, &r.step_times);
+                        metrics.record(t0.elapsed(), r.queue_wait, r.latency);
+                    }
+                    Err(_) => metrics.failed += 1,
+                }
+                let _ = reply.send(result);
+            }
         }
-        let _ = reply.send(result);
     }
 }
 

@@ -14,9 +14,12 @@
 //!   runtime-adaptive configuration register file, the roofline model,
 //!   and `accel::schedule` — the **TileProgram IR** that lowers the §3.9
 //!   tile schedules (Algorithms 1–17) into a flat instruction stream once
-//!   per topology, plus `accel::schedule::opt` — the pass pipeline
-//!   (transfer dedup, dispatch fusion, wave scheduling, slot compaction)
-//!   the engine runs before caching a program.
+//!   per topology (encoder, decoder **prefill**, and single-token
+//!   **decode-step** flavors), plus `accel::schedule::opt` — the pass
+//!   pipeline (transfer dedup, dispatch fusion, wave scheduling, slot
+//!   compaction) the engine runs before caching a program — and
+//!   `accel::decode` — the device-resident KV cache behind KV-cached
+//!   autoregressive generation.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`
 //!   lowered once by `python/compile/aot.py`; Python is never on the
 //!   request path), plus the `FabricBackend` trait a `TileProgram` replays
@@ -25,8 +28,10 @@
 //! * [`coordinator`] — the host-software half (paper §3.11, §4,
 //!   Algorithm 18): register programming, the tile-schedule engine that
 //!   builds/caches a `TileProgram` per programmed topology and replays it
-//!   per request, a request router + dynamic batcher, a multi-fabric
-//!   serving pool, and metrics.
+//!   per request — including `TileEngine::generate` (prefill + KV-cached
+//!   decode steps) — a request router + dynamic batcher, a multi-fabric
+//!   serving pool serving encode *and* generation requests, and metrics
+//!   with a prefill/per-token timing split.
 //! * [`baselines`] — literature datapoints (Table 1 / Fig 10 comparators)
 //!   and executable baselines (dense CPU oracle, non-adaptive accelerator).
 //! * [`analysis`] — design-space sweeps and the table/figure renderers that

@@ -13,7 +13,7 @@
 use adaptor::accel::{frequency, latency, power, resources, sim, tiling::TileConfig};
 use adaptor::accel::platform;
 use adaptor::analysis::report;
-use adaptor::coordinator::{OptLevel, Request, Server, ServerConfig};
+use adaptor::coordinator::{GenerateRequest, OptLevel, Request, Server, ServerConfig};
 use adaptor::coordinator::router::ModelSpec;
 use adaptor::model::{presets, quant::BitWidth, weights};
 
@@ -28,8 +28,9 @@ fn usage() -> ! {
          \n  report <fig5|fig8|fig9|fig10|fig11|fig12|fig13|table1|table2|ablation|all> [--out DIR]\
          \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
          \n  serve --model <preset> [--requests N] [--batch N] [--pool N] [--opt-level 0|1|2]\
+         \n  generate --model <preset> [--steps N] [--prompt-len N] [--pool N]\
          \n  sweep <tiles|heads>\
-         \n  presets\
+         \n  presets | list-models\
          \n  validate"
     );
     std::process::exit(2);
@@ -41,8 +42,9 @@ fn main() -> anyhow::Result<()> {
         Some("report") => cmd_report(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("generate") => cmd_generate(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
-        Some("presets") => cmd_presets(),
+        Some("presets") | Some("list-models") => cmd_presets(),
         Some("validate") => cmd_validate(),
         Some("gantt") => cmd_gantt(&args[1..]),
         _ => usage(),
@@ -139,6 +141,48 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             resp.queue_wait.as_secs_f64() * 1e3);
     }
     println!("wall time: {:.2} ms for {n} requests", t0.elapsed().as_secs_f64() * 1e3);
+    let metrics = server.shutdown()?;
+    println!("\n{}", metrics.report());
+    Ok(())
+}
+
+/// Autoregressive generation demo: serve a decoder model through the
+/// pool and greedy-decode a synthetic prompt, reporting the prefill vs
+/// per-token latency split.
+fn cmd_generate(args: &[String]) -> anyhow::Result<()> {
+    let model = flag_value(args, "--model").unwrap_or_else(|| "gpt-small".into());
+    let cfg = presets::by_name(&model).unwrap_or_else(|| {
+        eprintln!("unknown preset '{model}'");
+        std::process::exit(2);
+    });
+    if cfg.dec_layers == 0 {
+        eprintln!("preset '{model}' has no decoder layers; pick e.g. gpt-small or seq2seq-small");
+        std::process::exit(2);
+    }
+    let prompt_len: usize =
+        flag_value(args, "--prompt-len").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let steps: usize = flag_value(args, "--steps").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let pool: usize = flag_value(args, "--pool").and_then(|v| v.parse().ok()).unwrap_or(1);
+
+    let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
+    scfg.pool_size = pool;
+    println!("starting {pool} fabric(s) for {cfg} ...");
+    let server = Server::start(scfg)?;
+    let prompt = weights::init_input(7, prompt_len, cfg.d_model);
+    let source =
+        (cfg.enc_layers > 0).then(|| weights::init_input(8, cfg.seq_len, cfg.d_model));
+    let resp = server.generate(GenerateRequest { model: model.clone(), prompt, source, steps })?;
+    println!("tokens: {:?}", resp.tokens);
+    println!(
+        "prefill: {:.2} ms ({} prompt rows); {} decode steps, mean {:.2} ms/token",
+        resp.prefill.as_secs_f64() * 1e3,
+        prompt_len,
+        resp.step_times.len(),
+        resp.step_times.iter().map(|d| d.as_secs_f64()).sum::<f64>()
+            / resp.step_times.len().max(1) as f64
+            * 1e3,
+    );
+    println!("e2e: {:.2} ms (queue {:.2} ms)", resp.latency.as_secs_f64() * 1e3, resp.queue_wait.as_secs_f64() * 1e3);
     let metrics = server.shutdown()?;
     println!("\n{}", metrics.report());
     Ok(())

@@ -56,6 +56,20 @@ pub fn small_encoder(seq_len: usize, layers: usize) -> TnnConfig {
     TnnConfig::encoder(seq_len, 256, 4, layers)
 }
 
+/// A GPT-style **decoder-only** topology (d = 256, h = 4, no encoder
+/// stack): causal self-attention + FFN per layer, served through the
+/// prefill/decode-step generation path.  Executable on the default fabric
+/// (dk = 64, hidden = 4d).
+pub fn gpt_small(seq_len: usize, layers: usize) -> TnnConfig {
+    TnnConfig { seq_len, heads: 4, d_model: 256, hidden: 1024, enc_layers: 0, dec_layers: layers }
+}
+
+/// A small executable **seq2seq** topology (encoder + cross-attending
+/// decoder, d = 256, h = 4) — the generation regression workload.
+pub fn seq2seq_small(seq_len: usize, enc_layers: usize, dec_layers: usize) -> TnnConfig {
+    TnnConfig { seq_len, heads: 4, d_model: 256, hidden: 1024, enc_layers, dec_layers }
+}
+
 /// All named presets, for CLI listing.
 pub fn all() -> Vec<(&'static str, TnnConfig)> {
     vec![
@@ -67,6 +81,8 @@ pub fn all() -> Vec<(&'static str, TnnConfig)> {
         ("transformer-base", transformer_base(64)),
         ("transformer-big", transformer_big(64)),
         ("small", small_encoder(64, 4)),
+        ("gpt-small", gpt_small(64, 4)),
+        ("seq2seq-small", seq2seq_small(64, 2, 2)),
     ]
 }
 
@@ -99,6 +115,16 @@ mod tests {
         assert_eq!((b.d_model, b.heads, b.dk()), (512, 8, 64));
         let g = transformer_big(64);
         assert_eq!((g.d_model, g.heads, g.dk()), (1024, 16, 64));
+    }
+
+    #[test]
+    fn generation_presets_are_executable_shapes() {
+        let g = gpt_small(64, 4);
+        assert_eq!((g.enc_layers, g.dec_layers, g.dk()), (0, 4, 64));
+        assert!(g.validate_for_execution().is_ok());
+        let s = seq2seq_small(64, 2, 2);
+        assert_eq!((s.enc_layers, s.dec_layers, s.hidden), (2, 2, 4 * s.d_model));
+        assert!(s.validate_for_execution().is_ok());
     }
 
     #[test]

@@ -169,6 +169,169 @@ pub fn encoder_stack(x: &Mat, layers: &[LayerWeights], mask: &Mat) -> Mat {
     cur
 }
 
+// ---- decoder oracle ------------------------------------------------------
+
+use super::weights::DecoderLayerWeights;
+
+/// Multi-head attention with separate query (`xq`) and key/value (`xkv`)
+/// streams — self-attention when they coincide, cross-attention when
+/// `xkv` is the encoder memory.  `mask` is `xq.rows x xkv.rows` additive.
+#[allow(clippy::too_many_arguments)]
+fn mha(
+    xq: &Mat,
+    xkv: &Mat,
+    wq: &[Mat],
+    wk: &[Mat],
+    wv: &[Mat],
+    bq: &[Vec<f32>],
+    bk: &[Vec<f32>],
+    bv: &[Vec<f32>],
+    mask: &Mat,
+) -> Mat {
+    let heads = wq.len();
+    let dk = wq[0].cols;
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut out = Mat::zeros(xq.rows, heads * dk);
+    for h in 0..heads {
+        let mut q = matmul(xq, &wq[h]);
+        add_bias(&mut q, &bq[h]);
+        let mut k = matmul(xkv, &wk[h]);
+        add_bias(&mut k, &bk[h]);
+        let mut v = matmul(xkv, &wv[h]);
+        add_bias(&mut v, &bv[h]);
+        let o = attention_head(&q, &k, &v, mask, scale);
+        out.set_block(0, h * dk, &o);
+    }
+    out
+}
+
+/// One decoder layer (Vaswani §3.1, post-LN): masked self-attention →
+/// add&norm, then (iff the layer has a cross block AND a memory is given)
+/// cross-attention against `mem` → add&norm, then the FFN → add&norm.
+/// `self_mask` is causal over the decoder stream; `cross_mask` is
+/// `x.rows x mem.rows` additive (all-zero when both sides are exact).
+pub fn decoder_layer(
+    x: &Mat,
+    mem: Option<&Mat>,
+    w: &DecoderLayerWeights,
+    self_mask: &Mat,
+    cross_mask: Option<&Mat>,
+) -> Mat {
+    let b = &w.base;
+    // Masked self-attention block (causality lives in self_mask).
+    let attn = mha(x, x, &b.wq, &b.wk, &b.wv, &b.bq, &b.bk, &b.bv, self_mask);
+    let mut proj = matmul(&attn, &b.wo);
+    add_bias(&mut proj, &b.bo);
+    let y1 = residual_ln(&proj, x, &b.g1, &b.b1n);
+
+    // Cross-attention block.
+    let y2 = match (&w.cross, mem) {
+        (Some(c), Some(m)) => {
+            let zeros;
+            let cmask = match cross_mask {
+                Some(cm) => cm,
+                None => {
+                    zeros = Mat::zeros(y1.rows, m.rows);
+                    &zeros
+                }
+            };
+            let cat = mha(&y1, m, &c.wq, &c.wk, &c.wv, &c.bq, &c.bk, &c.bv, cmask);
+            let mut cp = matmul(&cat, &c.wo);
+            add_bias(&mut cp, &c.bo);
+            residual_ln(&cp, &y1, &c.g, &c.bn)
+        }
+        (None, _) => y1,
+        (Some(_), None) => panic!("seq2seq decoder layer needs an encoder memory"),
+    };
+
+    // FFN block.
+    let mut hidden = matmul(&y2, &b.w1);
+    add_bias(&mut hidden, &b.b1);
+    relu(&mut hidden);
+    let mut out = matmul(&hidden, &b.w2);
+    add_bias(&mut out, &b.b2);
+    residual_ln(&out, &y2, &b.g2, &b.b2n)
+}
+
+/// N-layer decoder stack (one shared memory for every layer's cross
+/// block, as in the original transformer).
+pub fn decoder_stack(
+    x: &Mat,
+    mem: Option<&Mat>,
+    layers: &[DecoderLayerWeights],
+    self_mask: &Mat,
+    cross_mask: Option<&Mat>,
+) -> Mat {
+    let mut cur = x.clone();
+    for w in layers {
+        cur = decoder_layer(&cur, mem, w, self_mask, cross_mask);
+    }
+    cur
+}
+
+/// The "token" a continuous activation row greedily decodes to: the
+/// argmax feature index (the substrate's pseudo-vocabulary is the
+/// embedding basis — the accelerator is weight- and vocab-agnostic, so
+/// generation feeds the continuous row back and reports the argmax id).
+pub fn argmax_token(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .fold((0usize, f32::NEG_INFINITY), |(bi, bv), (i, &v)| {
+            if v > bv {
+                (i, v)
+            } else {
+                (bi, bv)
+            }
+        })
+        .0
+}
+
+/// A greedy autoregressive decode's outputs.
+#[derive(Debug, Clone)]
+pub struct GreedyDecode {
+    /// The generated activation rows, `steps x d_model`.
+    pub rows: Mat,
+    /// Per-step greedy token ids ([`argmax_token`] of each row).
+    pub tokens: Vec<usize>,
+}
+
+/// Greedy autoregressive decoding oracle: starting from `prompt`
+/// (`m x d_model` rows), repeatedly run the full decoder stack with a
+/// causal mask over the current sequence, take the last row as the next
+/// "token" (continuous feed-back, argmax reported as the token id), and
+/// append it.  This is what `TileEngine::generate` (prefill + KV-cached
+/// steps) must reproduce — causality makes the incremental and the
+/// recompute-everything formulations identical.
+pub fn greedy_decode(
+    prompt: &Mat,
+    mem: Option<&Mat>,
+    layers: &[DecoderLayerWeights],
+    steps: usize,
+) -> GreedyDecode {
+    assert!(prompt.rows > 0, "greedy decode needs at least one prompt row");
+    let d = prompt.cols;
+    let mut x = prompt.clone();
+    let mut rows = Mat::zeros(steps, d);
+    let mut tokens = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let n = x.rows;
+        let self_mask = attention_mask(n, n, true);
+        let y = decoder_stack(&x, mem, layers, &self_mask, None);
+        let next: Vec<f32> = (0..d).map(|c| y.at(n - 1, c)).collect();
+        tokens.push(argmax_token(&next));
+        for (c, v) in next.iter().enumerate() {
+            *rows.at_mut(s, c) = *v;
+        }
+        let mut grown = Mat::zeros(n + 1, d);
+        grown.set_block(0, 0, &x);
+        for (c, v) in next.iter().enumerate() {
+            *grown.at_mut(n, c) = *v;
+        }
+        x = grown;
+    }
+    GreedyDecode { rows, tokens }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +412,66 @@ mod tests {
             let mu: f32 = row.iter().sum::<f32>() / 128.0;
             assert!(mu.abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn decoder_layer_respects_causality() {
+        // Changing a future row must not change earlier outputs.
+        let w = weights::init_decoder_layer(5, 128, 2, false);
+        let mut x = weights::init_input(7, 8, 128);
+        let mask = attention_mask(8, 8, true);
+        let a = decoder_layer(&x, None, &w, &mask, None);
+        for c in 0..128 {
+            *x.at_mut(7, c) += 3.0; // perturb only the last row
+        }
+        let b = decoder_layer(&x, None, &w, &mask, None);
+        for r in 0..7 {
+            for c in 0..128 {
+                assert_eq!(a.at(r, c), b.at(r, c), "row {r} saw the future");
+            }
+        }
+        assert!((0..128).any(|c| a.at(7, c) != b.at(7, c)));
+    }
+
+    #[test]
+    fn cross_attention_reads_the_memory() {
+        let w = weights::init_decoder_layer(6, 128, 2, true);
+        let x = weights::init_input(8, 8, 128);
+        let mask = attention_mask(8, 8, true);
+        let mem_a = weights::init_input(9, 8, 128);
+        let mem_b = weights::init_input(10, 8, 128);
+        let a = decoder_layer(&x, Some(&mem_a), &w, &mask, None);
+        let b = decoder_layer(&x, Some(&mem_b), &w, &mask, None);
+        assert!(a.max_abs_diff(&b) > 1e-4, "memory must influence the output");
+        // A decoder-only layer ignores any provided memory.
+        let solo = weights::init_decoder_layer(6, 128, 2, false);
+        let sa = decoder_layer(&x, Some(&mem_a), &solo, &mask, None);
+        let sb = decoder_layer(&x, Some(&mem_b), &solo, &mask, None);
+        assert_eq!(sa.max_abs_diff(&sb), 0.0);
+    }
+
+    #[test]
+    fn greedy_decode_is_incremental_consistent() {
+        // The oracle's defining property: generating k+1 tokens extends
+        // the k-token generation (causality — earlier steps never change).
+        let layers = weights::init_decoder_stack(11, 128, 2, 2, false);
+        let prompt = weights::init_input(12, 4, 128);
+        let short = greedy_decode(&prompt, None, &layers, 2);
+        let long = greedy_decode(&prompt, None, &layers, 4);
+        assert_eq!(short.tokens, long.tokens[..2]);
+        for r in 0..2 {
+            for c in 0..128 {
+                assert_eq!(short.rows.at(r, c), long.rows.at(r, c));
+            }
+        }
+        assert_eq!(long.tokens.len(), 4);
+        assert!(long.rows.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn argmax_token_picks_the_peak() {
+        assert_eq!(argmax_token(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax_token(&[5.0, 3.0]), 0);
     }
 
     #[test]

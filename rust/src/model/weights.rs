@@ -140,6 +140,77 @@ pub fn init_stack(seed: u64, d_model: usize, heads: usize, layers: usize) -> Vec
     (0..layers).map(|i| init_layer(seed + i as u64, d_model, heads)).collect()
 }
 
+/// The decoder layer's cross-attention block: Q from the decoder stream,
+/// K/V from the encoder memory, its own output projection and post-block
+/// LayerNorm affine pair.
+#[derive(Debug, Clone)]
+pub struct CrossAttnWeights {
+    /// Per-head projection panels, each `d_model x dk`.
+    pub wq: Vec<Mat>,
+    pub wk: Vec<Mat>,
+    pub wv: Vec<Mat>,
+    pub bq: Vec<Vec<f32>>,
+    pub bk: Vec<Vec<f32>>,
+    pub bv: Vec<Vec<f32>>,
+    /// Cross output projection: `d_model x d_model`.
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+    /// Post-cross LayerNorm affine.
+    pub g: Vec<f32>,
+    pub bn: Vec<f32>,
+}
+
+/// One decoder layer: `base` carries the masked self-attention block
+/// (its `wq..wo`, first LayerNorm) and the FFN chain (its `w1/w2`, second
+/// LayerNorm) — the same shapes as an encoder layer — while `cross` holds
+/// the middle cross-attention block.  `cross = None` is a GPT-style
+/// decoder-only layer (no encoder memory).
+#[derive(Debug, Clone)]
+pub struct DecoderLayerWeights {
+    pub base: LayerWeights,
+    pub cross: Option<CrossAttnWeights>,
+}
+
+/// Deterministic weights for one decoder layer.
+pub fn init_decoder_layer(seed: u64, d_model: usize, heads: usize, cross: bool) -> DecoderLayerWeights {
+    let base = init_layer(seed, d_model, heads);
+    let cross = cross.then(|| {
+        assert_eq!(d_model % heads, 0, "execution weights need divisibility");
+        let dk = d_model / heads;
+        // Distinct stream from the base layer's so self and cross blocks
+        // never share values.
+        let mut rng = SplitMix64::new(seed ^ 0xc205_5a77);
+        let s_attn = 1.0 / (d_model as f32).sqrt();
+        let heads_mat = |rng: &mut SplitMix64| {
+            (0..heads).map(|_| randn_mat(rng, d_model, dk, s_attn)).collect()
+        };
+        CrossAttnWeights {
+            wq: heads_mat(&mut rng),
+            wk: heads_mat(&mut rng),
+            wv: heads_mat(&mut rng),
+            bq: vec![vec![0.0; dk]; heads],
+            bk: vec![vec![0.0; dk]; heads],
+            bv: vec![vec![0.0; dk]; heads],
+            wo: randn_mat(&mut rng, d_model, d_model, s_attn),
+            bo: vec![0.0; d_model],
+            g: vec![1.0; d_model],
+            bn: vec![0.0; d_model],
+        }
+    });
+    DecoderLayerWeights { base, cross }
+}
+
+/// Weights for a whole decoder stack (layer i seeded `seed + i`).
+pub fn init_decoder_stack(
+    seed: u64,
+    d_model: usize,
+    heads: usize,
+    layers: usize,
+    cross: bool,
+) -> Vec<DecoderLayerWeights> {
+    (0..layers).map(|i| init_decoder_layer(seed + i as u64, d_model, heads, cross)).collect()
+}
+
 /// Deterministic input activations `seq_len x d_model`.
 pub fn init_input(seed: u64, seq_len: usize, d_model: usize) -> Mat {
     let mut rng = SplitMix64::new(seed ^ 0x5eed_1a7e);
@@ -197,5 +268,23 @@ mod tests {
     #[should_panic]
     fn block_out_of_bounds_panics() {
         Mat::zeros(2, 2).block(1, 1, 2, 2);
+    }
+
+    #[test]
+    fn decoder_weights_are_deterministic_and_distinct_from_base() {
+        let a = init_decoder_layer(3, 128, 2, true);
+        let b = init_decoder_layer(3, 128, 2, true);
+        let ca = a.cross.as_ref().unwrap();
+        let cb = b.cross.as_ref().unwrap();
+        assert_eq!(ca.wo, cb.wo);
+        assert_eq!(ca.wq[1], cb.wq[1]);
+        // cross stream must not alias the self-attention stream
+        assert_ne!(ca.wq[0], a.base.wq[0]);
+        let solo = init_decoder_layer(3, 128, 2, false);
+        assert!(solo.cross.is_none());
+        assert_eq!(solo.base.wo, a.base.wo, "base stream is cross-independent");
+        let stack = init_decoder_stack(9, 128, 2, 3, true);
+        assert_eq!(stack.len(), 3);
+        assert_ne!(stack[0].base.wo, stack[1].base.wo);
     }
 }

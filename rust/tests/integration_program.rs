@@ -117,15 +117,15 @@ fn cached_replay_drops_per_request_transfers() {
     let t_h = cfg.hidden / fc.ffn_col;
     let l = cfg.enc_layers;
     // 1 padded input + per-layer activation panels and assemblies — and
-    // NOT the old l-1 extra full-x uploads nor the 8 runtime tensors.
+    // NOT the old l-1 extra full-x uploads nor the 10 runtime tensors.
     let expected = (1 + l * (t_m + 2 * t_f + t_h + 3)) as u64;
     assert_eq!(s2.uploads - s1.uploads, expected, "replay upload count");
     assert_eq!(
         s1.uploads - s0.uploads,
-        expected + 8,
-        "first request additionally uploads the 8 per-topology runtime tensors"
+        expected + 10,
+        "first request additionally uploads the 10 per-topology runtime tensors"
     );
-    let naive = expected + 8 + (l as u64 - 1); // what the loop-nest engine paid
+    let naive = expected + 10 + (l as u64 - 1); // what the loop-nest engine paid
     assert!(s2.uploads - s1.uploads < naive, "the transfer drop must be real");
 
     let prog = e.cached_program(&cfg).unwrap();
