@@ -25,9 +25,10 @@ use adaptor::accel::{frequency, latency, resources, tiling::TileConfig};
 use adaptor::coordinator::batcher::BatchPolicy;
 use adaptor::coordinator::metrics::Metrics;
 use adaptor::coordinator::router::ModelSpec;
-use adaptor::coordinator::{AttentionMode, Request, Server, ServerConfig};
+use adaptor::coordinator::{AttentionMode, Server, ServerConfig};
 use adaptor::model::quant::BitWidth;
 use adaptor::model::{presets, reference, weights, TnnConfig};
+use adaptor::serve::{QoS, Submission};
 
 const REQS_PER_CLIENT: usize = 8;
 
@@ -67,13 +68,20 @@ fn run_workload(
                 let spec = if (c + i) % 3 == 0 { &tiny } else { &small };
                 let x =
                     weights::init_input((c * 100 + i) as u64, spec.cfg.seq_len, spec.cfg.d_model);
-                let resp = s
-                    .infer(Request { model: spec.name.clone(), input: x.clone() })
-                    .expect("inference failed");
+                let out = s
+                    .submit(
+                        Submission::Encode { model: spec.name.clone(), input: x.clone() },
+                        QoS::default(),
+                    )
+                    .expect("submit failed")
+                    .wait()
+                    .expect("inference failed")
+                    .into_encode()
+                    .expect("encode job yields an encode output");
                 // verify every response against the dense oracle
                 let mask = reference::attention_mask(spec.cfg.seq_len, spec.cfg.seq_len, false);
                 let want = reference::encoder_stack(&x, &spec.weights(), &mask);
-                let diff = resp.output.max_abs_diff(&want);
+                let diff = out.output.max_abs_diff(&want);
                 assert!(diff < 3e-3, "client {c} req {i}: diff {diff}");
                 checked += 1;
             }
@@ -82,6 +90,11 @@ fn run_workload(
     }
     let verified: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     let wall = t0.elapsed().as_secs_f64();
+
+    // Live snapshot while the pool is still up — Serving API v1 makes
+    // shutdown() no longer the only metrics exit.
+    let live = server.metrics();
+    assert_eq!(live.requests(), verified, "live snapshot must already account for every request");
 
     let server = Arc::try_unwrap(server).ok().expect("clients done");
     let metrics = server.shutdown()?;
@@ -142,16 +155,31 @@ fn main() -> anyhow::Result<()> {
     let mut gcfg = ServerConfig::new(vec![gpt.clone()]);
     gcfg.pool_size = pool.min(2);
     match Server::start(gcfg) {
-        Err(e) => out.push_str(&format!("generation section skipped: {e:#}\n")),
+        Err(e) => out.push_str(&format!("generation section skipped: {e}\n")),
         Ok(gserver) => {
             let prompt = weights::init_input(71, 6, gpt.cfg.d_model);
             let steps = 8;
-            let resp = gserver.generate(adaptor::coordinator::GenerateRequest {
-                model: gpt.name.clone(),
-                prompt: prompt.clone(),
-                source: None,
-                steps,
-            })?;
+            // Streamed generation: collect tokens as decode steps finish.
+            let mut handle = gserver.submit(
+                Submission::Generate {
+                    model: gpt.name.clone(),
+                    prompt: prompt.clone(),
+                    source: None,
+                    steps,
+                },
+                QoS::default(),
+            )?;
+            let mut streamed_tokens = Vec::new();
+            let mut streamed_rows: Vec<f32> = Vec::new();
+            while let Some(t) = handle.next_token() {
+                assert_eq!(t.index, streamed_tokens.len(), "tokens stream in order");
+                streamed_tokens.push(t.token);
+                streamed_rows.extend_from_slice(&t.row);
+            }
+            let resp = handle.wait()?.into_generate()?;
+            // the stream concatenates bit-identically to the transcript
+            assert_eq!(streamed_tokens, resp.tokens, "streamed tokens == final transcript");
+            assert_eq!(streamed_rows, resp.rows.data, "streamed rows are bit-identical");
             // verify against the dense greedy-decode oracle
             let want = reference::greedy_decode(&prompt, None, &gpt.decoder_weights(), steps);
             assert_eq!(resp.tokens, want.tokens, "served tokens must match the oracle");
@@ -160,13 +188,33 @@ fn main() -> anyhow::Result<()> {
             let mean_step = resp.step_times.iter().map(|d| d.as_secs_f64()).sum::<f64>()
                 / resp.step_times.len().max(1) as f64;
             out.push_str(&format!(
-                "{} tokens {:?} (oracle-verified)\nprefill {:.2} ms, {:.2} ms/token over {} cached steps\n",
+                "{} tokens {:?} (streamed + oracle-verified)\nprefill {:.2} ms, {:.2} ms/token over {} cached steps\n",
                 resp.tokens.len(),
                 resp.tokens,
                 resp.prefill.as_secs_f64() * 1e3,
                 mean_step * 1e3,
                 resp.step_times.len()
             ));
+            // Cancellation: stop a long generation after its first token;
+            // the pool keeps serving afterwards.
+            let mut doomed = gserver.submit(
+                Submission::Generate {
+                    model: gpt.name.clone(),
+                    prompt: prompt.clone(),
+                    source: None,
+                    steps: 24,
+                },
+                QoS::default(),
+            )?;
+            let _first = doomed.next_token().expect("first token streams before the cancel");
+            doomed.cancel();
+            match doomed.wait() {
+                Err(adaptor::serve::ServeError::Cancelled) => {
+                    out.push_str("cancelled a 24-step generation after its first token\n")
+                }
+                Ok(_) => out.push_str("cancellation raced a short generation to completion\n"),
+                Err(e) => return Err(e.into()),
+            }
             let gm = gserver.shutdown()?;
             out.push_str(&gm.report());
         }

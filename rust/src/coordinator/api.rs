@@ -1,0 +1,550 @@
+//! Serving API v1 — the single typed job surface of the coordinator
+//! (re-exported at the crate root as [`adaptor::serve`](crate::serve)).
+//!
+//! The paper's headline property is *runtime adaptability*: one
+//! programmed fabric serves many model shapes without resynthesis.  The
+//! serving surface mirrors that with one uniform request interface over
+//! the fabric pool (the NPE-style "one instruction surface over a fixed
+//! overlay" — see PAPERS.md):
+//!
+//! * [`Submission`] — every workload kind (encode, generation, future
+//!   additions) enters through **one** `Server::submit`;
+//! * [`QoS`] — per-request deadline, [`Priority`] and an optional
+//!   per-request [`OptLevel`] override, flowing router → batcher
+//!   (priority-and-deadline-aware ready-queue ordering) → fabric worker;
+//! * [`JobHandle`] — blocking wait, non-blocking poll, **cancellation**
+//!   (observed between decode steps on the fabric), and — for
+//!   generation — a **streamed token channel** ([`TokenEvent`]s arrive
+//!   as decode steps complete, not only as a final transcript);
+//! * [`ServeError`] — the typed error taxonomy of the whole public
+//!   coordinator boundary (no `anyhow` in any `pub` signature).
+//!
+//! Job lifecycle:
+//!
+//! ```text
+//! submit ──► queued (batcher: priority ► arrival; deadline sweeps)
+//!    │           │
+//!    │           ├─ deadline passes ──► Failed(DeadlineExceeded)
+//!    │           ├─ cancel() ─────────► Failed(Cancelled)
+//!    │           ▼
+//!    │        dispatched (capacity-gated, affinity-scheduled)
+//!    │           │
+//!    │           ├─ Encode ──────────────────────► Done(Encode)
+//!    │           └─ Generate ─ Token(0) ─ Token(1) ─ … ─► Done(Generate)
+//!    │                   └─ cancel() between steps ─► Failed(Cancelled)
+//!    ▼
+//! JobHandle: next_token() / poll() / wait() / cancel()
+//! ```
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::model::weights::Mat;
+
+pub use super::engine::OptLevel;
+
+/// Request priority class.  Orders the batcher's ready queues: among
+/// queued work for one model, `High` drains before `Normal` before
+/// `Low`; ties break by arrival order (FIFO).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// All classes, lowest first (indexable via [`Self::index`]).
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    /// Stable index for per-priority accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        })
+    }
+}
+
+/// Per-request quality-of-service knobs.  `QoS::default()` is a
+/// `Normal`-priority request with no deadline at the server's
+/// configured optimization level.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QoS {
+    pub priority: Priority,
+    /// Give up if the request has not **started executing** within this
+    /// much time of submission: a request whose deadline passes while
+    /// queued completes with [`ServeError::DeadlineExceeded`] instead of
+    /// being served late (or dropped silently).  Work already on the
+    /// fabric is never preempted by a deadline.
+    pub deadline: Option<Duration>,
+    /// Per-request override of the fabric's TileProgram optimization
+    /// level (the engine caches programs per opt level, so switching is
+    /// a cache lookup, not a rebuild after first use).
+    pub opt_level: Option<OptLevel>,
+}
+
+impl QoS {
+    pub fn high() -> Self {
+        QoS { priority: Priority::High, ..QoS::default() }
+    }
+
+    pub fn low() -> Self {
+        QoS { priority: Priority::Low, ..QoS::default() }
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_opt_level(mut self, l: OptLevel) -> Self {
+        self.opt_level = Some(l);
+        self
+    }
+}
+
+/// One unit of work for the pool — every workload kind goes through the
+/// same `Server::submit` and the same queues (adding a workload means
+/// adding a variant here, not a third API fork).
+#[derive(Debug, Clone)]
+pub enum Submission {
+    /// Run `input` (`seq_len × d_model`) through `model`'s encoder
+    /// stack.
+    Encode { model: String, input: Mat },
+    /// Greedy-decode `steps` tokens from `prompt` on a `dec_layers > 0`
+    /// model; seq2seq models additionally encode `source` into the
+    /// cross-attention memory.
+    Generate { model: String, prompt: Mat, source: Option<Mat>, steps: usize },
+}
+
+impl Submission {
+    /// The registered model this submission targets.
+    pub fn model(&self) -> &str {
+        match self {
+            Submission::Encode { model, .. } => model,
+            Submission::Generate { model, .. } => model,
+        }
+    }
+}
+
+/// The typed error taxonomy of the public serving boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// No model with that name is registered.
+    UnknownModel(String),
+    /// The submission does not fit its model (shape, sequence budget,
+    /// missing/superfluous source, zero steps, wrong request kind).
+    InvalidRequest(String),
+    /// The server configuration is unusable (zero pool, model exceeding
+    /// synthesis maxima, duplicate registration, …).
+    InvalidConfig(String),
+    /// A [`ModelSpec::with_affinity`](super::router::ModelSpec::with_affinity)
+    /// hint points at a fabric the pool does not have — refused at
+    /// `Server::start` instead of being silently ignored at dispatch.
+    AffinityOutOfRange { model: String, fabric: usize, pool_size: usize },
+    /// The request's QoS deadline passed before it started executing.
+    DeadlineExceeded { waited: Duration },
+    /// The job was cancelled via [`JobHandle::cancel`].
+    Cancelled,
+    /// Programming the configuration registers for the job's model
+    /// failed; the whole batch fails rather than running on stale
+    /// register state.
+    ProgramFailed(String),
+    /// The engine rejected or failed the work (artifact/runtime errors,
+    /// internal invariant violations).
+    Engine(String),
+    /// The serving infrastructure is gone (worker/dispatcher died,
+    /// thread panicked, channel closed before completion).
+    PoolLost(String),
+}
+
+impl ServeError {
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        ServeError::InvalidRequest(msg.into())
+    }
+
+    pub fn config(msg: impl Into<String>) -> Self {
+        ServeError::InvalidConfig(msg.into())
+    }
+
+    pub fn engine(msg: impl Into<String>) -> Self {
+        ServeError::Engine(msg.into())
+    }
+
+    pub fn pool_lost(msg: impl Into<String>) -> Self {
+        ServeError::PoolLost(msg.into())
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            ServeError::InvalidRequest(msg) => write!(f, "{msg}"),
+            ServeError::InvalidConfig(msg) => write!(f, "{msg}"),
+            ServeError::AffinityOutOfRange { model, fabric, pool_size } => write!(
+                f,
+                "model '{model}' is pinned to fabric {fabric}, but the pool has only \
+                 {pool_size} fabric(s) (indices 0..{pool_size})"
+            ),
+            ServeError::DeadlineExceeded { waited } => write!(
+                f,
+                "deadline exceeded: request waited {:.2} ms without starting",
+                waited.as_secs_f64() * 1e3
+            ),
+            ServeError::Cancelled => write!(f, "job cancelled"),
+            ServeError::ProgramFailed(msg) => write!(f, "{msg}"),
+            ServeError::Engine(msg) => write!(f, "{msg}"),
+            ServeError::PoolLost(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Internal boundary adapter: engine internals keep rich `anyhow`
+/// chains; the chain is flattened into the typed taxonomy exactly once,
+/// at the public signature.
+impl From<anyhow::Error> for ServeError {
+    fn from(e: anyhow::Error) -> Self {
+        ServeError::Engine(format!("{e:#}"))
+    }
+}
+
+/// Wall-clock decomposition every completed job reports:
+/// `latency == queue_wait + compute` by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Timing {
+    /// End-to-end: submit → result ready.
+    pub latency: Duration,
+    /// Submit → start of execution on the fabric (batching delay,
+    /// dispatch, register reprogram, earlier batch members).
+    pub queue_wait: Duration,
+    /// Time on the fabric proper.
+    pub compute: Duration,
+}
+
+/// One streamed generation token, delivered as its decode step
+/// completes.  `index` 0 is the token that falls out of the prefill;
+/// the concatenation of `row`s in index order is bit-identical to the
+/// final [`GenerateOutput::rows`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenEvent {
+    /// Position in the generated sequence, starting at 0.
+    pub index: usize,
+    /// Greedy token id (argmax feature index of the row).
+    pub token: usize,
+    /// The generated activation row (`d_model` values).
+    pub row: Vec<f32>,
+}
+
+/// A completed encode job.
+#[derive(Debug, Clone)]
+pub struct EncodeOutput {
+    /// Output activations, `seq_len × d_model`.
+    pub output: Mat,
+    pub timing: Timing,
+}
+
+/// A completed generation job (the full transcript; the same rows were
+/// also streamed incrementally as [`TokenEvent`]s).
+#[derive(Debug, Clone)]
+pub struct GenerateOutput {
+    /// Generated activation rows, `steps × d_model`.
+    pub rows: Mat,
+    /// Greedy token ids, one per step.
+    pub tokens: Vec<usize>,
+    pub timing: Timing,
+    /// Source encode (seq2seq) + prompt prefill time.
+    pub prefill: Duration,
+    /// Per-token decode-step times (`steps - 1` entries; the first
+    /// token falls out of the prefill).
+    pub step_times: Vec<Duration>,
+}
+
+/// What a finished job produced — one variant per [`Submission`] kind.
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    Encode(EncodeOutput),
+    Generate(GenerateOutput),
+}
+
+impl JobOutput {
+    pub fn timing(&self) -> Timing {
+        match self {
+            JobOutput::Encode(o) => o.timing,
+            JobOutput::Generate(o) => o.timing,
+        }
+    }
+
+    /// Unwrap an encode result; a generation output is an
+    /// [`ServeError::InvalidRequest`] (the caller mixed up its handles).
+    pub fn into_encode(self) -> Result<EncodeOutput, ServeError> {
+        match self {
+            JobOutput::Encode(o) => Ok(o),
+            JobOutput::Generate(_) => {
+                Err(ServeError::invalid("job completed as a generation, not an encode"))
+            }
+        }
+    }
+
+    /// Unwrap a generation result; see [`Self::into_encode`].
+    pub fn into_generate(self) -> Result<GenerateOutput, ServeError> {
+        match self {
+            JobOutput::Generate(o) => Ok(o),
+            JobOutput::Encode(_) => {
+                Err(ServeError::invalid("job completed as an encode, not a generation"))
+            }
+        }
+    }
+}
+
+/// Everything the server reports back about one job, in delivery order:
+/// zero or more `Token`s (generation only), then exactly one terminal
+/// `Done`/`Failed`.
+#[derive(Debug)]
+pub enum JobEvent {
+    Token(TokenEvent),
+    Done(Box<JobOutput>),
+    Failed(ServeError),
+}
+
+/// Clonable cancellation token for a submitted job — lets another
+/// thread cancel while the owner blocks in [`JobHandle::wait`].
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        CancelToken::default()
+    }
+
+    /// Request cancellation.  Observed by the dispatcher while the job
+    /// is queued and by the fabric worker **between decode steps**; the
+    /// job then completes with [`ServeError::Cancelled`].  Idempotent;
+    /// a job that already finished is unaffected.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Handle to one submitted job: stream tokens, poll, block, or cancel.
+#[derive(Debug)]
+pub struct JobHandle {
+    events: Receiver<JobEvent>,
+    cancel: CancelToken,
+    /// Tokens received but not yet handed to the caller.
+    pending: VecDeque<TokenEvent>,
+    /// The terminal event, once received.
+    terminal: Option<Result<JobOutput, ServeError>>,
+}
+
+impl JobHandle {
+    pub(crate) fn new(events: Receiver<JobEvent>, cancel: CancelToken) -> Self {
+        JobHandle { events, cancel, pending: VecDeque::new(), terminal: None }
+    }
+
+    /// Request cancellation (see [`CancelToken::cancel`]).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clonable token for cancelling from another thread.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    fn absorb(&mut self, ev: JobEvent) {
+        match ev {
+            JobEvent::Token(t) => self.pending.push_back(t),
+            JobEvent::Done(out) => self.terminal = Some(Ok(*out)),
+            JobEvent::Failed(e) => self.terminal = Some(Err(e)),
+        }
+    }
+
+    fn channel_lost() -> ServeError {
+        ServeError::pool_lost("job channel closed before completion (server dropped?)")
+    }
+
+    /// Block until the next streamed token, or `None` once the job has
+    /// reached its terminal state (retrieve it with [`Self::wait`] /
+    /// [`Self::poll`]).  Encode jobs stream no tokens.
+    pub fn next_token(&mut self) -> Option<TokenEvent> {
+        loop {
+            if let Some(t) = self.pending.pop_front() {
+                return Some(t);
+            }
+            if self.terminal.is_some() {
+                return None;
+            }
+            match self.events.recv() {
+                Ok(ev) => self.absorb(ev),
+                Err(_) => {
+                    self.terminal = Some(Err(Self::channel_lost()));
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking [`Self::next_token`].
+    pub fn try_token(&mut self) -> Option<TokenEvent> {
+        self.drain_available();
+        self.pending.pop_front()
+    }
+
+    /// Non-blocking completion check: drains available events and
+    /// returns the terminal result once the job finished.  Streamed
+    /// tokens drained here stay readable via [`Self::next_token`].
+    pub fn poll(&mut self) -> Option<&Result<JobOutput, ServeError>> {
+        self.drain_available();
+        self.terminal.as_ref()
+    }
+
+    fn drain_available(&mut self) {
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => self.absorb(ev),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if self.terminal.is_none() {
+                        self.terminal = Some(Err(Self::channel_lost()));
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Block until the job finishes, discarding any unread streamed
+    /// tokens (the full transcript is in the output anyway).
+    pub fn wait(mut self) -> Result<JobOutput, ServeError> {
+        loop {
+            if let Some(t) = self.terminal.take() {
+                return t;
+            }
+            match self.events.recv() {
+                Ok(ev) => self.absorb(ev),
+                Err(_) => return Err(Self::channel_lost()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn handle() -> (mpsc::Sender<JobEvent>, JobHandle) {
+        let (tx, rx) = mpsc::channel();
+        (tx, JobHandle::new(rx, CancelToken::new()))
+    }
+
+    fn tok(i: usize) -> TokenEvent {
+        TokenEvent { index: i, token: i * 10, row: vec![i as f32] }
+    }
+
+    #[test]
+    fn priority_orders_low_to_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for (i, p) in Priority::ALL.into_iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+    }
+
+    #[test]
+    fn qos_builders_compose() {
+        let q = QoS::high().with_deadline(Duration::from_millis(5)).with_opt_level(OptLevel::O0);
+        assert_eq!(q.priority, Priority::High);
+        assert_eq!(q.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(q.opt_level, Some(OptLevel::O0));
+        assert_eq!(QoS::default().priority, Priority::Normal);
+        assert_eq!(QoS::default().deadline, None);
+        assert_eq!(QoS::low().priority, Priority::Low);
+    }
+
+    #[test]
+    fn handle_streams_tokens_then_terminal() {
+        let (tx, mut h) = handle();
+        tx.send(JobEvent::Token(tok(0))).unwrap();
+        tx.send(JobEvent::Token(tok(1))).unwrap();
+        tx.send(JobEvent::Failed(ServeError::Cancelled)).unwrap();
+        assert_eq!(h.next_token().unwrap().index, 0);
+        assert_eq!(h.next_token().unwrap().token, 10);
+        assert!(h.next_token().is_none(), "terminal reached");
+        assert!(matches!(h.wait(), Err(ServeError::Cancelled)));
+    }
+
+    #[test]
+    fn poll_buffers_tokens_for_later_streaming() {
+        let (tx, mut h) = handle();
+        assert!(h.poll().is_none(), "nothing arrived yet");
+        tx.send(JobEvent::Token(tok(0))).unwrap();
+        tx.send(JobEvent::Failed(ServeError::Cancelled)).unwrap();
+        // poll sees the terminal but must not eat the streamed token
+        while h.poll().is_none() {}
+        assert_eq!(h.next_token().unwrap().index, 0);
+        assert!(h.next_token().is_none());
+    }
+
+    #[test]
+    fn dropped_channel_is_a_typed_pool_loss() {
+        let (tx, mut h) = handle();
+        drop(tx);
+        assert!(h.next_token().is_none());
+        assert!(matches!(h.wait(), Err(ServeError::PoolLost(_))));
+    }
+
+    #[test]
+    fn cancel_token_round_trips() {
+        let (_tx, h) = handle();
+        let t = h.cancel_token();
+        assert!(!t.is_cancelled());
+        h.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn error_display_taxonomy_is_stable() {
+        assert_eq!(ServeError::UnknownModel("m".into()).to_string(), "unknown model 'm'");
+        assert_eq!(ServeError::Cancelled.to_string(), "job cancelled");
+        assert!(ServeError::DeadlineExceeded { waited: Duration::from_millis(3) }
+            .to_string()
+            .contains("deadline exceeded"));
+        let aff =
+            ServeError::AffinityOutOfRange { model: "m".into(), fabric: 4, pool_size: 2 }.to_string();
+        assert!(aff.contains("fabric 4") && aff.contains("2 fabric(s)"), "{aff}");
+        // anyhow chains flatten into the Engine variant at the boundary
+        let e: ServeError = anyhow::anyhow!("inner").context("outer").into();
+        assert_eq!(e, ServeError::Engine("outer: inner".into()));
+    }
+}

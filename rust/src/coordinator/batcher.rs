@@ -7,16 +7,26 @@
 //! deadline — the standard serving tradeoff between throughput and tail
 //! latency.
 //!
-//! Requests are held in **per-model ready queues** (one FIFO per model)
-//! rather than one flat scan: `pop_ready` is O(models) instead of
-//! O(requests), and a ready batch of any model can be drained even while
-//! another model's oldest request is still inside its deadline.  Fairness
-//! is preserved by always draining the ready group whose *oldest* member
-//! arrived first, so a lone request for model B cannot starve behind a
-//! steady stream of full model-A batches.
+//! Requests are held in **per-model ready queues** (one queue per model)
+//! rather than one flat scan: `pop_ready` is O(models · queue) instead
+//! of O(requests), and a ready batch of any model can be drained even
+//! while another model's oldest request is still inside its deadline.
+//!
+//! Serving API v1 made the queues **QoS-aware**: each pending request
+//! carries a [`Priority`] and an optional absolute deadline.  Within a
+//! model's queue, requests order by (priority ▼, arrival ▲); among
+//! *ready* groups the one with the highest-priority front drains first,
+//! ties broken by the group's oldest member (so, at equal priority, a
+//! lone request for model B cannot starve behind a steady stream of
+//! full model-A batches — the original fairness rule).  Deadlines feed
+//! [`Batcher::next_deadline`] so the dispatcher wakes in time to sweep
+//! expired requests out with a typed error ([`Batcher::take_where`])
+//! instead of serving them late or dropping them silently.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
+
+use super::api::Priority;
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -38,7 +48,19 @@ impl Default for BatchPolicy {
 pub struct Pending<T> {
     pub model: String,
     pub arrived: Instant,
+    /// QoS class: orders the queue ahead of arrival time.
+    pub priority: Priority,
+    /// Absolute give-up instant; an item still queued past it is swept
+    /// out by [`Batcher::take_where`], never served late.
+    pub deadline: Option<Instant>,
     pub payload: T,
+}
+
+impl<T> Pending<T> {
+    /// Whether this item's deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| d <= now)
+    }
 }
 
 /// Accumulates pending requests per model and emits ready batches.
@@ -61,16 +83,31 @@ impl<T> Batcher<T> {
     /// Queue a request with an explicit arrival time (the server passes the
     /// submit-side enqueue instant so deadlines cover the channel hop too).
     pub fn push_at(&mut self, model: &str, payload: T, arrived: Instant) {
+        self.push_qos(model, payload, arrived, Priority::Normal, None);
+    }
+
+    /// Queue a request with its full QoS: the queue orders by
+    /// (priority ▼, arrival ▲).  The arrival stamp is taken before the
+    /// channel send, so messages can reach us out of stamp order; the
+    /// insertion walk re-establishes the order — O(1) amortized for the
+    /// common in-order case.
+    pub fn push_qos(
+        &mut self,
+        model: &str,
+        payload: T,
+        arrived: Instant,
+        priority: Priority,
+        deadline: Option<Instant>,
+    ) {
         let q = self.queues.entry(model.to_string()).or_default();
-        // The front-is-oldest invariant must survive concurrent submitters:
-        // the arrival stamp is taken before the channel send, so messages
-        // can reach us out of stamp order.  Walk back from the tail —
-        // O(1) amortized for the common in-order case.
         let mut idx = q.len();
-        while idx > 0 && q[idx - 1].arrived > arrived {
+        while idx > 0
+            && (q[idx - 1].priority < priority
+                || (q[idx - 1].priority == priority && q[idx - 1].arrived > arrived))
+        {
             idx -= 1;
         }
-        q.insert(idx, Pending { model: model.to_string(), arrived, payload });
+        q.insert(idx, Pending { model: model.to_string(), arrived, priority, deadline, payload });
         self.len += 1;
     }
 
@@ -87,47 +124,140 @@ impl<T> Batcher<T> {
         self.queues.keys().map(String::as_str)
     }
 
-    /// Earliest deadline among queued items (for the drain loop's sleep).
-    /// Each per-model queue is FIFO, so its front is its oldest member.
+    /// Earliest wake-up instant among queued items (for the drain loop's
+    /// sleep): the soonest batching deadline (oldest arrival + max_wait)
+    /// or QoS give-up deadline, whichever comes first.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queues
             .values()
-            .filter_map(|q| q.front())
-            .map(|p| p.arrived + self.policy.max_wait)
+            .flat_map(|q| {
+                let batching =
+                    q.iter().map(|p| p.arrived).min().map(|oldest| oldest + self.policy.max_wait);
+                let qos = q.iter().filter_map(|p| p.deadline).min();
+                batching.into_iter().chain(qos)
+            })
             .min()
     }
 
-    /// Pop a ready batch.  A model's group is *ready* when it reached
-    /// `max_batch`, its oldest member timed out, or `force` is set; among
-    /// ready groups the one whose oldest member arrived first is drained
-    /// (FIFO-by-oldest preserves fairness across models), up to
-    /// `max_batch` requests in arrival order.
-    pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<(String, Vec<Pending<T>>)> {
-        let mut best: Option<(&str, Instant)> = None;
+    /// Oldest arrival in a (priority-ordered) queue.
+    fn oldest(q: &VecDeque<Pending<T>>) -> Option<Instant> {
+        q.iter().map(|p| p.arrived).min()
+    }
+
+    /// The model [`Self::pop_ready`] would drain right now, without
+    /// draining it — the dispatcher previews the target fabric's
+    /// capacity before committing the pop.
+    pub fn peek_ready(&self, now: Instant, force: bool) -> Option<&str> {
+        self.select_ready(now, force, &[])
+    }
+
+    /// [`Self::peek_ready`] skipping the named models — the dispatcher
+    /// sets a model aside when its target fabric is at capacity and
+    /// keeps draining other models' ready work to idle fabrics (no
+    /// head-of-line blocking across models).
+    pub fn peek_ready_excluding(
+        &self,
+        now: Instant,
+        force: bool,
+        excluded: &[String],
+    ) -> Option<&str> {
+        self.select_ready(now, force, excluded)
+    }
+
+    /// Whether any queued item matches `pred` — a cheap pre-check so the
+    /// dispatcher only pays for a [`Self::take_where`] queue rebuild
+    /// when a sweep would actually remove something.
+    pub fn any_where(&self, mut pred: impl FnMut(&Pending<T>) -> bool) -> bool {
+        self.queues.values().flatten().any(|p| pred(p))
+    }
+
+    /// Remove and return every queued item matching `pred`, preserving
+    /// queue order among survivors.  The dispatcher sweeps out
+    /// deadline-expired and cancelled requests with this so they
+    /// complete with a typed error instead of being served late.
+    pub fn take_where(&mut self, mut pred: impl FnMut(&Pending<T>) -> bool) -> Vec<Pending<T>> {
+        let mut taken = Vec::new();
+        for q in self.queues.values_mut() {
+            let drained = std::mem::take(q);
+            for p in drained {
+                if pred(&p) {
+                    taken.push(p);
+                } else {
+                    q.push_back(p);
+                }
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        self.len -= taken.len();
+        taken
+    }
+
+    /// Convenience sweep: every item whose QoS deadline passed at `now`.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Pending<T>> {
+        self.take_where(|p| p.expired(now))
+    }
+
+    /// The shared selection scan behind [`Self::pop_ready`] /
+    /// [`Self::peek_ready`]: the ready group with the highest-priority
+    /// front, ties to the oldest member; `excluded` models are skipped.
+    fn select_ready(&self, now: Instant, force: bool, excluded: &[String]) -> Option<&str> {
+        let mut best: Option<(&str, Priority, Instant)> = None;
         for (model, q) in &self.queues {
+            if excluded.iter().any(|m| m == model) {
+                continue;
+            }
             let front = match q.front() {
                 Some(p) => p,
                 None => continue,
             };
+            let oldest = Self::oldest(q).expect("non-empty queue has an oldest member");
             let ready = force
                 || q.len() >= self.policy.max_batch
-                || now.duration_since(front.arrived) >= self.policy.max_wait;
+                || now.duration_since(oldest) >= self.policy.max_wait;
             if !ready {
                 continue;
             }
-            if best.map_or(true, |(_, t)| front.arrived < t) {
-                best = Some((model, front.arrived));
+            let better = match best {
+                None => true,
+                Some((_, bp, bo)) => {
+                    front.priority > bp || (front.priority == bp && oldest < bo)
+                }
+            };
+            if better {
+                best = Some((model, front.priority, oldest));
             }
         }
-        let model = best?.0.to_string();
-        let q = self.queues.get_mut(&model).expect("ready model is queued");
+        best.map(|(model, _, _)| model)
+    }
+
+    /// Pop a ready batch.  A model's group is *ready* when it reached
+    /// `max_batch`, its oldest member timed out, or `force` is set.
+    /// Among ready groups the one whose **front has the highest
+    /// priority** drains first; at equal priority the group whose oldest
+    /// member arrived first wins (FIFO-by-oldest preserves fairness
+    /// across models).  Up to `max_batch` requests drain in queue order
+    /// (priority ▼, arrival ▲).
+    pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<(String, Vec<Pending<T>>)> {
+        let model = self.select_ready(now, force, &[])?.to_string();
+        self.pop_model(&model)
+    }
+
+    /// Drain up to `max_batch` queued requests of one specific model
+    /// (the one a prior [`Self::peek_ready_excluding`] selected), in
+    /// queue order.  `None` if the model has nothing queued.
+    pub fn pop_model(&mut self, model: &str) -> Option<(String, Vec<Pending<T>>)> {
+        let q = self.queues.get_mut(model)?;
         let n = q.len().min(self.policy.max_batch);
         let batch: Vec<Pending<T>> = q.drain(..n).collect();
         if q.is_empty() {
-            self.queues.remove(&model);
+            self.queues.remove(model);
         }
         self.len -= batch.len();
-        Some((model, batch))
+        if batch.is_empty() {
+            None
+        } else {
+            Some((model.to_string(), batch))
+        }
     }
 }
 
@@ -286,6 +416,122 @@ mod tests {
         assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(50));
         let (_, batch) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
         assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn priority_orders_within_a_model_queue() {
+        // 3 normals then 2 highs, all inside max_wait: the drained batch
+        // leads with the highs (arrival order within each class).
+        let mut b = mk();
+        let t0 = Instant::now();
+        for (i, ms) in [(1u32, 0u64), (2, 1), (3, 2)] {
+            b.push_qos("m", i, t0 + Duration::from_millis(ms), Priority::Normal, None);
+        }
+        b.push_qos("m", 10, t0 + Duration::from_millis(3), Priority::High, None);
+        b.push_qos("m", 11, t0 + Duration::from_millis(4), Priority::High, None);
+        let (_, batch) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![10, 11, 1]);
+        let (_, batch) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn high_priority_group_outranks_an_older_normal_group() {
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_qos("old-normal", 1, t0, Priority::Normal, None);
+        b.push_qos("young-high", 2, t0 + Duration::from_millis(5), Priority::High, None);
+        // both groups are deadline-ready: priority outranks age…
+        let (model, _) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(model, "young-high");
+        // …then the normal drains.
+        let (model, _) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(model, "old-normal");
+    }
+
+    #[test]
+    fn low_priority_yields_to_normal() {
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_qos("m", 1, t0, Priority::Low, None);
+        b.push_qos("m", 2, t0 + Duration::from_millis(1), Priority::Normal, None);
+        let (_, batch) = b.pop_ready(t0 + Duration::from_millis(60), false).unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2, 1]);
+    }
+
+    #[test]
+    fn take_expired_sweeps_only_past_deadline_items() {
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_qos("m", 1, t0, Priority::Normal, Some(t0 + Duration::from_millis(10)));
+        b.push_qos("m", 2, t0, Priority::Normal, Some(t0 + Duration::from_millis(100)));
+        b.push_qos("m", 3, t0, Priority::Normal, None);
+        assert!(b.take_expired(t0 + Duration::from_millis(5)).is_empty());
+        let expired = b.take_expired(t0 + Duration::from_millis(20));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].payload, 1);
+        assert!(expired[0].expired(t0 + Duration::from_millis(20)));
+        assert_eq!(b.len(), 2, "survivors stay queued");
+        let (_, batch) = b.pop_ready(t0 + Duration::from_millis(60), true).unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn qos_deadline_feeds_next_deadline() {
+        let mut b = mk(); // max_wait = 50ms
+        let t0 = Instant::now();
+        b.push_qos("m", 1, t0, Priority::Normal, Some(t0 + Duration::from_millis(7)));
+        // the QoS give-up (7ms) is sooner than the batching deadline (50ms)
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(7));
+        b.push_qos("m", 2, t0 + Duration::from_millis(1), Priority::Normal, None);
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(7));
+    }
+
+    #[test]
+    fn take_where_removes_by_predicate_and_updates_len() {
+        let mut b = mk();
+        b.push("a", 1);
+        b.push("a", 2);
+        b.push("b", 3);
+        let odd = b.take_where(|p| p.payload % 2 == 1);
+        assert_eq!(odd.len(), 2);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.queued_models().collect::<Vec<_>>(), vec!["a"]);
+    }
+
+    #[test]
+    fn peek_ready_mirrors_pop_ready_without_draining() {
+        let mut b = mk(); // max_batch = 3
+        let t0 = Instant::now();
+        b.push_at("m", 1, t0);
+        assert!(b.peek_ready(t0, false).is_none(), "one item inside max_wait is not ready");
+        assert_eq!(b.peek_ready(t0, true), Some("m"), "force makes anything ready");
+        assert_eq!(b.peek_ready(t0 + Duration::from_millis(60), false), Some("m"));
+        assert_eq!(b.len(), 1, "peeking drains nothing");
+        b.push_at("m", 2, t0);
+        b.push_at("m", 3, t0);
+        assert_eq!(b.peek_ready(t0, false), Some("m"), "full group is ready");
+    }
+
+    #[test]
+    fn excluded_models_are_skipped_and_pop_model_drains_in_order() {
+        let mut b = mk();
+        let t0 = Instant::now();
+        b.push_at("a", 1, t0);
+        b.push_at("b", 2, t0 + Duration::from_millis(1));
+        let later = t0 + Duration::from_millis(60);
+        // "a" is the global pick; excluding it surfaces "b" instead of
+        // head-of-line blocking the whole queue.
+        assert_eq!(b.peek_ready(later, false), Some("a"));
+        assert_eq!(b.peek_ready_excluding(later, false, &["a".to_string()]), Some("b"));
+        assert!(b
+            .peek_ready_excluding(later, false, &["a".to_string(), "b".to_string()])
+            .is_none());
+        let (model, batch) = b.pop_model("b").unwrap();
+        assert_eq!(model, "b");
+        assert_eq!(batch[0].payload, 2);
+        assert_eq!(b.len(), 1);
+        assert!(b.pop_model("b").is_none(), "drained model is gone");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use super::api::ServeError;
 use crate::accel::decode::KvCache;
 use crate::accel::registers::{RegisterFile, SynthMaxima};
 use crate::accel::schedule::{
@@ -229,6 +230,16 @@ impl WeightSource<DeviceTensor> for DecoderStackView<'_> {
     }
 }
 
+/// What a [`TileEngine::generate_streamed`] observer tells the step
+/// loop after each produced token: keep decoding, or stop before the
+/// next decode step (the serving layer's cancellation hook — a
+/// cancelled generation stops within one decode step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepControl {
+    Continue,
+    Stop,
+}
+
 /// What one greedy generation produced, plus the timing/dispatch split
 /// the serving metrics and the acceptance tests consume.
 #[derive(Debug, Clone)]
@@ -393,7 +404,7 @@ pub struct TileEngine {
 }
 
 impl TileEngine {
-    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self, ServeError> {
         let exec = Executor::new(artifact_dir)?;
         let m = exec.manifest();
         let maxima = m.synth_maxima();
@@ -431,14 +442,14 @@ impl TileEngine {
 
     /// Fabric divisibility constraints for the tile engine (the FPGA's
     /// equivalents are the tile sizes baked at synthesis).
-    pub fn check_runtime_config(&self, cfg: &TnnConfig) -> anyhow::Result<()> {
-        self.fc.check(cfg).map_err(|e| anyhow!(e))
+    pub fn check_runtime_config(&self, cfg: &TnnConfig) -> Result<(), ServeError> {
+        self.fc.check(cfg).map_err(ServeError::Engine)
     }
 
     /// Program the register file for `cfg` (Algorithm 18 step 3).
-    pub fn program(&mut self, cfg: &TnnConfig) -> anyhow::Result<()> {
+    pub fn program(&mut self, cfg: &TnnConfig) -> Result<(), ServeError> {
         self.check_runtime_config(cfg)?;
-        self.registers.program(cfg).map_err(|e| anyhow!(e))
+        self.registers.program(cfg).map_err(ServeError::ProgramFailed)
     }
 
     /// The topology currently held in the register file, or `None` before
@@ -461,7 +472,7 @@ impl TileEngine {
     /// The cached encoder program for `cfg` under the engine's current
     /// execution flags and opt level, building + optimizing (and
     /// uploading the runtime tensor set) on first use.
-    pub fn cached_program(&self, cfg: &TnnConfig) -> anyhow::Result<Rc<CachedProgram>> {
+    pub fn cached_program(&self, cfg: &TnnConfig) -> Result<Rc<CachedProgram>, ServeError> {
         self.cached_program_kind(cfg, ProgramKind::Encoder)
     }
 
@@ -472,7 +483,7 @@ impl TileEngine {
         &self,
         cfg: &TnnConfig,
         kind: ProgramKind,
-    ) -> anyhow::Result<Rc<CachedProgram>> {
+    ) -> Result<Rc<CachedProgram>, ServeError> {
         let key =
             ProgramKey::new(cfg, self.mode, self.qkv_packed, self.quantized, self.opt_level, kind);
         if let Some(p) = self.programs.borrow().get(&key) {
@@ -481,7 +492,9 @@ impl TileEngine {
         }
         self.cache_misses.set(self.cache_misses.get() + 1);
         if !matches!(kind, ProgramKind::Encoder) && cfg.dec_layers == 0 {
-            bail!("topology {cfg} has no decoder layers to lower a {kind:?} program for");
+            return Err(ServeError::invalid(format!(
+                "topology {cfg} has no decoder layers to lower a {kind:?} program for"
+            )));
         }
         let builder = ScheduleBuilder::new(self.fc, *cfg)?;
         let mut program = match kind {
@@ -543,18 +556,18 @@ impl TileEngine {
     /// drift apart.  Sequential (`sum`) pricing — invariant across opt
     /// levels by construction (fused artifacts cost the sum of their
     /// parts, reorders commute under addition).
-    pub fn cycle_estimate(&self, cfg: &TnnConfig) -> anyhow::Result<CycleReport> {
+    pub fn cycle_estimate(&self, cfg: &TnnConfig) -> Result<CycleReport, ServeError> {
         let cached = self.cached_program(cfg)?;
-        cycle::replay_program(&cached.program)
+        Ok(cycle::replay_program(&cached.program)?)
     }
 
     /// [`Self::cycle_estimate`] with wave pricing: each wave of the
     /// cached (wave-scheduled) program costs `max` over its members —
     /// the utilization-adjusted latency the optimizer's parallelism is
     /// worth on a fabric that runs independent modules concurrently.
-    pub fn cycle_estimate_waves(&self, cfg: &TnnConfig) -> anyhow::Result<CycleReport> {
+    pub fn cycle_estimate_waves(&self, cfg: &TnnConfig) -> Result<CycleReport, ServeError> {
         let cached = self.cached_program(cfg)?;
-        cycle::replay_program_waves(&cached.program)
+        Ok(cycle::replay_program_waves(&cached.program)?)
     }
 
     /// `(hits, misses)` of the host-scratch tensor pool.
@@ -565,9 +578,15 @@ impl TileEngine {
     /// Pre-tile an encoder weight stack for the fabric (Algorithm 18
     /// steps 7–9: "load weight axi master interface buffers").  For
     /// `dec_layers > 0` topologies use [`Self::prepare_model`].
-    pub fn prepare(&self, cfg: &TnnConfig, stack: &[LayerWeights]) -> anyhow::Result<PreparedStack> {
+    pub fn prepare(
+        &self,
+        cfg: &TnnConfig,
+        stack: &[LayerWeights],
+    ) -> Result<PreparedStack, ServeError> {
         if cfg.dec_layers > 0 {
-            bail!("topology {cfg} has decoder layers; prepare_model() wants their weights too");
+            return Err(ServeError::invalid(format!(
+                "topology {cfg} has decoder layers; prepare_model() wants their weights too"
+            )));
         }
         self.prepare_model(cfg, stack, &[])
     }
@@ -579,21 +598,29 @@ impl TileEngine {
         cfg: &TnnConfig,
         enc: &[LayerWeights],
         dec: &[DecoderLayerWeights],
-    ) -> anyhow::Result<PreparedStack> {
+    ) -> Result<PreparedStack, ServeError> {
         self.check_runtime_config(cfg)?;
         if enc.len() != cfg.enc_layers {
-            bail!("{} weight layers for {} encoder layers", enc.len(), cfg.enc_layers);
+            return Err(ServeError::invalid(format!(
+                "{} weight layers for {} encoder layers",
+                enc.len(),
+                cfg.enc_layers
+            )));
         }
         if dec.len() != cfg.dec_layers {
-            bail!("{} decoder weight layers for {} decoder layers", dec.len(), cfg.dec_layers);
+            return Err(ServeError::invalid(format!(
+                "{} decoder weight layers for {} decoder layers",
+                dec.len(),
+                cfg.dec_layers
+            )));
         }
         for (i, w) in dec.iter().enumerate() {
             if w.cross.is_some() != (cfg.enc_layers > 0) {
-                bail!(
+                return Err(ServeError::invalid(format!(
                     "decoder layer {i}: cross-attention weights {} but enc_layers = {}",
                     if w.cross.is_some() { "present" } else { "absent" },
                     cfg.enc_layers
-                );
+                )));
             }
         }
         let layers = enc.iter().map(|w| self.prepare_layer(cfg, w)).collect::<Result<_, _>>()?;
@@ -764,13 +791,18 @@ impl TileEngine {
     /// returning `seq_len × d_model`.  This is the request-path entry:
     /// look up the cached program for the programmed topology, replay it
     /// on the PJRT backend against `stack`'s device-resident weights.
-    pub fn run_encoder(&self, stack: &PreparedStack, input: &Mat) -> anyhow::Result<Mat> {
+    pub fn run_encoder(&self, stack: &PreparedStack, input: &Mat) -> Result<Mat, ServeError> {
         let cfg = &stack.cfg;
         if self.registers.current_config() != *cfg {
-            bail!("register file is programmed for a different topology (Algorithm 18 step 3 first)");
+            return Err(ServeError::invalid(
+                "register file is programmed for a different topology (Algorithm 18 step 3 first)",
+            ));
         }
         if (input.rows, input.cols) != (cfg.seq_len, cfg.d_model) {
-            bail!("input is {}x{}, registers say {}x{}", input.rows, input.cols, cfg.seq_len, cfg.d_model);
+            return Err(ServeError::invalid(format!(
+                "input is {}x{}, registers say {}x{}",
+                input.rows, input.cols, cfg.seq_len, cfg.d_model
+            )));
         }
         let cached = self.cached_program(cfg)?;
         // Load inputs into the (padded) input BRAM — Algorithm 1.  The
@@ -804,43 +836,40 @@ impl TileEngine {
         stack: &PreparedStack,
         prompt: &Mat,
         memory: Option<&Mat>,
-    ) -> anyhow::Result<(Mat, KvCache<DeviceTensor>)> {
+    ) -> Result<(Mat, KvCache<DeviceTensor>), ServeError> {
         let cfg = &stack.cfg;
         if self.registers.current_config() != *cfg {
-            bail!("register file is programmed for a different topology (Algorithm 18 step 3 first)");
+            return Err(ServeError::invalid(
+                "register file is programmed for a different topology (Algorithm 18 step 3 first)",
+            ));
         }
         if cfg.dec_layers == 0 {
-            bail!("topology {cfg} has no decoder layers");
+            return Err(ServeError::invalid(format!("topology {cfg} has no decoder layers")));
         }
         if prompt.cols != cfg.d_model || prompt.rows == 0 || prompt.rows > cfg.seq_len {
-            bail!(
+            return Err(ServeError::invalid(format!(
                 "prompt is {}x{}, want 1..={} rows of {} columns",
-                prompt.rows,
-                prompt.cols,
-                cfg.seq_len,
-                cfg.d_model
-            );
+                prompt.rows, prompt.cols, cfg.seq_len, cfg.d_model
+            )));
         }
         let cached = self.cached_program_kind(cfg, ProgramKind::Prefill)?;
         let mut padded = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
         schedule::pad_into(prompt, &mut padded);
         let mut inputs = vec![padded];
         if cfg.enc_layers > 0 {
-            let mem = memory.ok_or_else(|| anyhow!("seq2seq topology needs an encoder memory"))?;
+            let mem = memory
+                .ok_or_else(|| ServeError::invalid("seq2seq topology needs an encoder memory"))?;
             if (mem.rows, mem.cols) != (cfg.seq_len, cfg.d_model) {
-                bail!(
+                return Err(ServeError::invalid(format!(
                     "encoder memory is {}x{}, registers say {}x{}",
-                    mem.rows,
-                    mem.cols,
-                    cfg.seq_len,
-                    cfg.d_model
-                );
+                    mem.rows, mem.cols, cfg.seq_len, cfg.d_model
+                )));
             }
             let mut mp = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
             schedule::pad_into(mem, &mut mp);
             inputs.push(mp);
         } else if memory.is_some() {
-            bail!("decoder-only topology takes no encoder memory");
+            return Err(ServeError::invalid("decoder-only topology takes no encoder memory"));
         }
         let (out, exports) = schedule::replay_full(
             &cached.program,
@@ -867,17 +896,26 @@ impl TileEngine {
         stack: &PreparedStack,
         cache: &mut KvCache<DeviceTensor>,
         row: &[f32],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> Result<Vec<f32>, ServeError> {
         let cfg = &stack.cfg;
         if self.registers.current_config() != *cfg {
-            bail!("register file is programmed for a different topology (Algorithm 18 step 3 first)");
+            return Err(ServeError::invalid(
+                "register file is programmed for a different topology (Algorithm 18 step 3 first)",
+            ));
         }
         if row.len() != cfg.d_model {
-            bail!("step row has {} features, registers say {}", row.len(), cfg.d_model);
+            return Err(ServeError::invalid(format!(
+                "step row has {} features, registers say {}",
+                row.len(),
+                cfg.d_model
+            )));
         }
         let pos = cache.len;
         if pos >= cfg.seq_len {
-            bail!("sequence budget exhausted ({} of {} positions)", pos, cfg.seq_len);
+            return Err(ServeError::invalid(format!(
+                "sequence budget exhausted ({} of {} positions)",
+                pos, cfg.seq_len
+            )));
         }
         let cached = self.cached_program_kind(cfg, ProgramKind::DecodeStep)?;
         let mut input = self.pool.take_zeroed(&[1, self.fc.dmodel_max]);
@@ -911,28 +949,50 @@ impl TileEngine {
         prompt: &Mat,
         source: Option<&Mat>,
         steps: usize,
-    ) -> anyhow::Result<Generated> {
+    ) -> Result<Generated, ServeError> {
+        self.generate_streamed(stack, prompt, source, steps, &mut |_, _, _| {
+            StepControl::Continue
+        })?
+        .ok_or(ServeError::Cancelled)
+    }
+
+    /// [`Self::generate`] with a per-token observer — the serving
+    /// layer's streaming and **cancellation hook**.  `on_token(index,
+    /// token_id, row)` is called after every produced token (index 0
+    /// falls out of the prefill); returning [`StepControl::Stop`] ends
+    /// the generation before the next decode step and yields
+    /// `Ok(None)`.  Stopping is clean by construction: the KV cache is
+    /// device-resident per-call state that drops here, and every pooled
+    /// scratch buffer was already returned by the completed steps —
+    /// the engine is immediately ready for the next request.
+    pub fn generate_streamed(
+        &self,
+        stack: &PreparedStack,
+        prompt: &Mat,
+        source: Option<&Mat>,
+        steps: usize,
+        on_token: &mut dyn FnMut(usize, usize, &[f32]) -> StepControl,
+    ) -> Result<Option<Generated>, ServeError> {
         let cfg = &stack.cfg;
         if steps == 0 {
-            bail!("generation needs at least one step");
+            return Err(ServeError::invalid("generation needs at least one step"));
         }
         if prompt.rows + steps > cfg.seq_len {
-            bail!(
+            return Err(ServeError::invalid(format!(
                 "prompt ({}) + steps ({steps}) exceed the sequence budget {}",
-                prompt.rows,
-                cfg.seq_len
-            );
+                prompt.rows, cfg.seq_len
+            )));
         }
         let t0 = Instant::now();
         let memory_mat;
         let memory = if cfg.enc_layers > 0 {
-            let src =
-                source.ok_or_else(|| anyhow!("seq2seq topology needs a source to encode"))?;
+            let src = source
+                .ok_or_else(|| ServeError::invalid("seq2seq topology needs a source to encode"))?;
             memory_mat = self.run_encoder(stack, src)?;
             Some(&memory_mat)
         } else {
             if source.is_some() {
-                bail!("decoder-only topology takes no source input");
+                return Err(ServeError::invalid("decoder-only topology takes no source input"));
             }
             None
         };
@@ -945,15 +1005,22 @@ impl TileEngine {
         let mut next: Vec<f32> = (0..d).map(|c| pre_out.at(prompt.rows - 1, c)).collect();
         tokens.push(crate::model::reference::argmax_token(&next));
         rows.data[..d].copy_from_slice(&next);
+        if on_token(0, tokens[0], &next) == StepControl::Stop {
+            return Ok(None);
+        }
         let mut step_times = Vec::with_capacity(steps.saturating_sub(1));
         for i in 1..steps {
             let t = Instant::now();
             next = self.decode_step(stack, &mut cache, &next)?;
             step_times.push(t.elapsed());
-            tokens.push(crate::model::reference::argmax_token(&next));
+            let token = crate::model::reference::argmax_token(&next);
+            tokens.push(token);
             rows.data[i * d..(i + 1) * d].copy_from_slice(&next);
+            if on_token(i, token, &next) == StepControl::Stop {
+                return Ok(None);
+            }
         }
-        Ok(Generated {
+        Ok(Some(Generated {
             rows,
             tokens,
             prefill,
@@ -966,21 +1033,29 @@ impl TileEngine {
                 .cached_program_kind(cfg, ProgramKind::DecodeStep)?
                 .program
                 .dispatch_count(),
-        })
+        }))
     }
 
     /// Run one layer through a *fused* per-config artifact (the
     /// non-adaptive baseline path) — topology must match exactly.
-    pub fn run_fused_layer(&self, name: &str, input: &Mat, w: &LayerWeights) -> anyhow::Result<Mat> {
+    pub fn run_fused_layer(
+        &self,
+        name: &str,
+        input: &Mat,
+        w: &LayerWeights,
+    ) -> Result<Mat, ServeError> {
         let fm = self
             .exec
             .manifest()
             .fused
             .get(name)
-            .ok_or_else(|| anyhow!("no fused artifact '{name}'"))?
+            .ok_or_else(|| ServeError::engine(format!("no fused artifact '{name}'")))?
             .clone();
         if (input.rows, input.cols) != (fm.sl, fm.d_model) {
-            bail!("fused '{name}' wants {}x{}", fm.sl, fm.d_model);
+            return Err(ServeError::invalid(format!(
+                "fused '{name}' wants {}x{}",
+                fm.sl, fm.d_model
+            )));
         }
         let h = fm.heads;
         let d = fm.d_model;
@@ -1024,7 +1099,12 @@ impl TileEngine {
 
     /// Fused full-stack convenience (for the ablation bench): chains the
     /// fused layer artifact across the stack.
-    pub fn run_fused_stack(&self, name: &str, input: &Mat, stack: &[LayerWeights]) -> anyhow::Result<Mat> {
+    pub fn run_fused_stack(
+        &self,
+        name: &str,
+        input: &Mat,
+        stack: &[LayerWeights],
+    ) -> Result<Mat, ServeError> {
         let mut x = input.clone();
         for w in stack {
             x = self.run_fused_layer(name, &x, w)?;

@@ -7,6 +7,7 @@
 
 use std::time::Duration;
 
+use super::api::Priority;
 use crate::util::stats::{summarize, Summary};
 
 /// Accumulated serving metrics (one fabric, or the pool aggregate).
@@ -43,6 +44,19 @@ pub struct Metrics {
     pub reprograms: u64,
     /// Requests that failed (programming errors, execution errors).
     pub failed: u64,
+    /// Requests stopped short of completion without failing: an
+    /// explicit `ServeError::Cancelled` (while queued or between decode
+    /// steps), or a generation abandoned mid-flight because its
+    /// `JobHandle` was dropped.  A cancelled/abandoned generation
+    /// records no latency/prefill/step samples (no partial generation
+    /// pollutes the summaries).
+    pub cancelled: u64,
+    /// Requests rejected with `ServeError::DeadlineExceeded` because
+    /// their QoS deadline passed before they started executing.
+    pub expired: u64,
+    /// Successfully served requests per [`Priority`] class, indexed by
+    /// [`Priority::index`] (low, normal, high).
+    pub by_priority: [u64; 3],
     /// Total wall time observed, seconds.
     pub elapsed: f64,
     /// Per-fabric breakdown (aggregate only; empty on a fabric's own
@@ -65,6 +79,16 @@ impl Metrics {
 
     pub fn record_batch(&mut self, size: usize) {
         self.batch_sizes.push(size);
+    }
+
+    /// Count one successfully served request against its QoS class.
+    pub fn record_priority(&mut self, p: Priority) {
+        self.by_priority[p.index()] += 1;
+    }
+
+    /// Served requests of one QoS class.
+    pub fn served_at(&self, p: Priority) -> u64 {
+        self.by_priority[p.index()]
     }
 
     /// Record one **successful** generation's timing split.  Callers must
@@ -144,6 +168,11 @@ impl Metrics {
         self.generations += other.generations;
         self.reprograms += other.reprograms;
         self.failed += other.failed;
+        self.cancelled += other.cancelled;
+        self.expired += other.expired;
+        for (mine, theirs) in self.by_priority.iter_mut().zip(other.by_priority) {
+            *mine += theirs;
+        }
         self.elapsed = self.elapsed.max(other.elapsed);
     }
 
@@ -165,6 +194,12 @@ impl Metrics {
                 let mut s = "no requests served\n".to_string();
                 if self.failed > 0 {
                     s.push_str(&format!("failed: {}\n", self.failed));
+                }
+                if self.cancelled > 0 {
+                    s.push_str(&format!("cancelled: {}\n", self.cancelled));
+                }
+                if self.expired > 0 {
+                    s.push_str(&format!("deadline-expired: {}\n", self.expired));
                 }
                 return s;
             }
@@ -219,6 +254,18 @@ impl Metrics {
             self.reprograms,
             self.reprograms_per_request(),
         ));
+        out.push_str(&format!(
+            "priority served: high={} normal={} low={}\n",
+            self.served_at(Priority::High),
+            self.served_at(Priority::Normal),
+            self.served_at(Priority::Low),
+        ));
+        if self.cancelled > 0 || self.expired > 0 {
+            out.push_str(&format!(
+                "cancelled: {} | deadline-expired: {}\n",
+                self.cancelled, self.expired
+            ));
+        }
         for f in &self.per_fabric {
             out.push_str(&format!(
                 "  fabric {}: {} served, {} failed, {} reprograms, {:.2} req/s\n",
@@ -332,6 +379,33 @@ mod tests {
         assert!(rep.contains("decode-step ms (1 tokens)"), "{rep}");
         // empty metrics render no generation lines
         assert!(!Metrics::default().report().contains("prefill"));
+    }
+
+    #[test]
+    fn qos_counters_merge_and_render() {
+        let mut a = Metrics::for_fabric(0);
+        a.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        a.record_priority(Priority::High);
+        a.cancelled = 1;
+        let mut b = Metrics::for_fabric(1);
+        b.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        b.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        b.record_priority(Priority::Normal);
+        b.record_priority(Priority::High);
+        b.expired = 2;
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.served_at(Priority::High), 2);
+        assert_eq!(agg.served_at(Priority::Normal), 1);
+        assert_eq!(agg.served_at(Priority::Low), 0);
+        assert_eq!(agg.cancelled, 1);
+        assert_eq!(agg.expired, 2);
+        let rep = agg.report();
+        assert!(rep.contains("priority served: high=2 normal=1 low=0"), "{rep}");
+        assert!(rep.contains("cancelled: 1 | deadline-expired: 2"), "{rep}");
+        // a clean run renders no cancellation noise
+        let mut clean = Metrics::default();
+        clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        assert!(!clean.report().contains("cancelled"));
     }
 
     #[test]

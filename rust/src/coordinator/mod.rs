@@ -11,24 +11,37 @@
 //!   size/deadline policy).
 //! * [`router`] — model registry + request routing, with pool-affinity
 //!   hints.
-//! * [`server`] — the threaded serving loop: clients submit encode
-//!   requests or **generation requests** (greedy decode over the
-//!   prefill/KV-cached-step programs); a dispatcher assigns
-//!   model-homogeneous batches to a **pool** of fabric worker threads
-//!   (each owning one engine, like one piece of hardware) under an
-//!   affinity or round-robin schedule.  `pool_size = 1` is the paper's
-//!   single-fabric host software.
+//! * [`api`] — **Serving API v1** (re-exported as
+//!   [`adaptor::serve`](crate::serve)): the single typed job surface —
+//!   `Submission` (encode / generation), per-request `QoS` (priority,
+//!   deadline, opt-level override), `JobHandle` (wait / poll / streamed
+//!   tokens / cancellation) and the `ServeError` taxonomy that replaced
+//!   `anyhow` across the public boundary.
+//! * [`server`] — the threaded serving loop behind the API: a
+//!   dispatcher assigns model-homogeneous batches to a **pool** of
+//!   fabric worker threads (each owning one engine, like one piece of
+//!   hardware) under an affinity or round-robin schedule, with
+//!   capacity-gated, QoS-ordered dispatch.  `pool_size = 1` is the
+//!   paper's single-fabric host software.
 //! * [`metrics`] — compute/queue/end-to-end latency and throughput
-//!   accounting (AXI-timer analog), per fabric and aggregated.
+//!   accounting (AXI-timer analog), per fabric and aggregated, with
+//!   per-priority / cancellation / deadline counters — readable live
+//!   via `Server::metrics()`, not only at shutdown.
 
+pub mod api;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use api::{
+    CancelToken, EncodeOutput, GenerateOutput, JobEvent, JobHandle, JobOutput, Priority, QoS,
+    ServeError, Submission, Timing, TokenEvent,
+};
 pub use engine::{
-    AttentionMode, DecoderStackView, Generated, OptLevel, PreparedStack, ProgramKind, TileEngine,
+    AttentionMode, DecoderStackView, Generated, OptLevel, PreparedStack, ProgramKind, StepControl,
+    TileEngine,
 };
 pub use server::{
     FaultInjection, GenerateRequest, GenerateResponse, PoolScheduler, Request, Response,

@@ -7,8 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail};
-
+use super::api::ServeError;
 use crate::accel::registers::SynthMaxima;
 use crate::model::weights::{init_decoder_stack, init_stack, DecoderLayerWeights, LayerWeights};
 use crate::model::TnnConfig;
@@ -72,8 +71,8 @@ impl Router {
 
     /// Register a model; refuses topologies the fabric cannot hold, naming
     /// every register that exceeds its synthesis maximum.
-    pub fn register(&mut self, spec: ModelSpec) -> anyhow::Result<()> {
-        spec.cfg.validate_for_execution().map_err(|e| anyhow!(e))?;
+    pub fn register(&mut self, spec: ModelSpec) -> Result<(), ServeError> {
+        spec.cfg.validate_for_execution().map_err(ServeError::InvalidConfig)?;
         if let Some(m) = &self.maxima {
             let mut over = Vec::new();
             if spec.cfg.seq_len > m.seq_len {
@@ -89,22 +88,22 @@ impl Router {
                 over.push(format!("hidden {} > {}", spec.cfg.hidden, m.hidden));
             }
             if !over.is_empty() {
-                bail!(
+                return Err(ServeError::config(format!(
                     "model '{}' exceeds the synthesis maxima: {} (re-synthesis required)",
                     spec.name,
                     over.join(", ")
-                );
+                )));
             }
         }
         if self.models.contains_key(&spec.name) {
-            bail!("model '{}' already registered", spec.name);
+            return Err(ServeError::config(format!("model '{}' already registered", spec.name)));
         }
         self.models.insert(spec.name.clone(), spec);
         Ok(())
     }
 
-    pub fn lookup(&self, name: &str) -> anyhow::Result<&ModelSpec> {
-        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+    pub fn lookup(&self, name: &str) -> Result<&ModelSpec, ServeError> {
+        self.models.get(name).ok_or_else(|| ServeError::UnknownModel(name.to_string()))
     }
 
     /// Validate an encode request's input shape against its model.
@@ -112,21 +111,20 @@ impl Router {
     /// would silently execute only the encoder stack (the truncation bug
     /// this explicit error replaces) — generation requests go through
     /// [`Self::route_generate`].
-    pub fn route(&self, model: &str, rows: usize, cols: usize) -> anyhow::Result<&ModelSpec> {
+    pub fn route(&self, model: &str, rows: usize, cols: usize) -> Result<&ModelSpec, ServeError> {
         let spec = self.lookup(model)?;
         if spec.cfg.dec_layers > 0 {
-            bail!(
+            return Err(ServeError::invalid(format!(
                 "model '{model}' has {} decoder layers; the encode path would silently drop \
                  them — submit a generation request instead",
                 spec.cfg.dec_layers
-            );
+            )));
         }
         if rows != spec.cfg.seq_len || cols != spec.cfg.d_model {
-            bail!(
+            return Err(ServeError::invalid(format!(
                 "request for '{model}' is {rows}x{cols}, expected {}x{}",
-                spec.cfg.seq_len,
-                spec.cfg.d_model
-            );
+                spec.cfg.seq_len, spec.cfg.d_model
+            )));
         }
         Ok(spec)
     }
@@ -141,33 +139,47 @@ impl Router {
         prompt: (usize, usize),
         source: Option<(usize, usize)>,
         steps: usize,
-    ) -> anyhow::Result<&ModelSpec> {
+    ) -> Result<&ModelSpec, ServeError> {
         let spec = self.lookup(model)?;
         let cfg = &spec.cfg;
         if cfg.dec_layers == 0 {
-            bail!("model '{model}' has no decoder layers; submit a plain encode request");
+            return Err(ServeError::invalid(format!(
+                "model '{model}' has no decoder layers; submit a plain encode request"
+            )));
         }
         if steps == 0 {
-            bail!("generation for '{model}' needs steps >= 1");
+            return Err(ServeError::invalid(format!("generation for '{model}' needs steps >= 1")));
         }
         let (rows, cols) = prompt;
         if cols != cfg.d_model || rows == 0 {
-            bail!("prompt for '{model}' is {rows}x{cols}, want >=1 rows of {}", cfg.d_model);
+            return Err(ServeError::invalid(format!(
+                "prompt for '{model}' is {rows}x{cols}, want >=1 rows of {}",
+                cfg.d_model
+            )));
         }
         if rows + steps > cfg.seq_len {
-            bail!(
+            return Err(ServeError::invalid(format!(
                 "prompt ({rows}) + steps ({steps}) exceed '{model}'s sequence budget {}",
                 cfg.seq_len
-            );
+            )));
         }
         match (cfg.enc_layers > 0, source) {
-            (true, None) => bail!("seq2seq model '{model}' needs a source input to encode"),
-            (true, Some((sr, sc))) if (sr, sc) != (cfg.seq_len, cfg.d_model) => bail!(
-                "source for '{model}' is {sr}x{sc}, expected {}x{}",
-                cfg.seq_len,
-                cfg.d_model
-            ),
-            (false, Some(_)) => bail!("decoder-only model '{model}' takes no source input"),
+            (true, None) => {
+                return Err(ServeError::invalid(format!(
+                    "seq2seq model '{model}' needs a source input to encode"
+                )))
+            }
+            (true, Some((sr, sc))) if (sr, sc) != (cfg.seq_len, cfg.d_model) => {
+                return Err(ServeError::invalid(format!(
+                    "source for '{model}' is {sr}x{sc}, expected {}x{}",
+                    cfg.seq_len, cfg.d_model
+                )))
+            }
+            (false, Some(_)) => {
+                return Err(ServeError::invalid(format!(
+                    "decoder-only model '{model}' takes no source input"
+                )))
+            }
             _ => {}
         }
         Ok(spec)
@@ -291,6 +303,30 @@ mod tests {
         let mut r = router();
         r.register(ModelSpec::new("m", presets::small_encoder(64, 1), 1)).unwrap();
         assert!(r.register(ModelSpec::new("m", presets::small_encoder(64, 1), 2)).is_err());
+    }
+
+    #[test]
+    fn routing_failures_are_typed() {
+        // Serving API v1: every routing failure is a ServeError variant
+        // callers can match on, not an opaque string.
+        let mut r = router();
+        r.register(ModelSpec::new("small", presets::small_encoder(64, 2), 1)).unwrap();
+        assert!(matches!(r.route("missing", 64, 256), Err(ServeError::UnknownModel(_))));
+        assert!(matches!(r.lookup("missing"), Err(ServeError::UnknownModel(_))));
+        assert!(matches!(r.route("small", 32, 256), Err(ServeError::InvalidRequest(_))));
+        assert!(matches!(
+            r.route_generate("small", (4, 256), None, 4),
+            Err(ServeError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            r.register(ModelSpec::new("small", presets::small_encoder(64, 2), 1)),
+            Err(ServeError::InvalidConfig(_))
+        ));
+        let big = TnnConfig::encoder(64, 1024, 16, 2);
+        assert!(matches!(
+            r.register(ModelSpec::new("big", big, 1)),
+            Err(ServeError::InvalidConfig(_))
+        ));
     }
 
     #[test]

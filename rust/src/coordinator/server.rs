@@ -1,52 +1,82 @@
-//! The serving loop — a pool of ADAPTOR fabrics behind one dispatcher.
+//! The serving loop — a pool of ADAPTOR fabrics behind one dispatcher,
+//! fronted by the Serving API v1 typed job surface ([`super::api`]).
 //!
 //! `PjRtLoadedExecutable` is not `Send`, so every fabric is a dedicated
 //! **worker thread** that constructs its own `TileEngine` locally and
 //! drains batches from a per-fabric mpsc queue.  A single **dispatcher**
-//! thread owns the batcher (per-model ready queues) and assigns ready
-//! batches to fabrics under a [`SchedulePolicy`]: with `Affinity` a batch
-//! is routed to a fabric already programmed for its model (avoiding a
-//! register reprogram), falling back to the least-loaded fabric; with
-//! `RoundRobin` fabrics are cycled regardless of programming state (the
-//! baseline the affinity tests compare against).
+//! thread owns the batcher (per-model, QoS-ordered ready queues) and
+//! assigns ready batches to fabrics under a [`SchedulePolicy`]: with
+//! `Affinity` a batch is routed to a fabric already programmed for its
+//! model (avoiding a register reprogram), falling back to the
+//! least-loaded fabric; with `RoundRobin` fabrics are cycled regardless
+//! of programming state (the baseline the affinity tests compare
+//! against).
+//!
+//! Serving API v1 semantics on top of the pool:
+//!
+//! * **one submission path** — [`Server::submit`] takes a
+//!   [`Submission`] (encode or generation) plus [`QoS`] and returns a
+//!   [`JobHandle`];
+//! * **QoS flows end to end** — priority orders the ready queues,
+//!   deadlines are swept while queued (typed
+//!   [`ServeError::DeadlineExceeded`], counted in metrics) and
+//!   re-checked at execution start, and dispatch is **capacity-gated**
+//!   ([`ServerConfig::queue_depth`] batches outstanding per fabric) so
+//!   priority is decided in the queue, not in a deep fabric FIFO;
+//! * **cancellation** — observed while queued, before execution, and
+//!   **between decode steps** (via the engine's
+//!   [`StepControl`](super::engine::StepControl) observer); a cancelled
+//!   generation stops within one decode step, leaves the KV cache and
+//!   pools clean, and records no partial samples;
+//! * **streaming** — generation tokens are delivered on the handle as
+//!   decode steps complete; their concatenation is bit-identical to the
+//!   final transcript;
+//! * **live metrics** — [`Server::metrics`] snapshots the running pool;
+//!   [`Server::shutdown`] is no longer the only metrics exit.
 //!
 //! `pool_size = 1` reproduces the paper's host software exactly: one
 //! fabric, one register file, reprograms on every model switch — the
-//! paper-reproduction path is unchanged.  Clients submit from any thread
-//! and receive their response over a per-request channel.
+//! paper-reproduction path is unchanged.  Clients submit from any
+//! thread.
 //!
-//! Failure semantics (each was a silent failure in the single-fabric
-//! predecessor):
-//! * a failed `engine.program()` fails the **whole batch** with the
-//!   programming error — requests are never run against the previous
-//!   model's register state;
+//! Failure semantics (each was a silent failure in a predecessor):
+//! * a failed `engine.program()` fails the **whole batch** with
+//!   [`ServeError::ProgramFailed`] — requests are never run against the
+//!   previous model's register state;
 //! * batches are counted in metrics only once actually served;
-//! * `Response` reports `compute`, `queue_wait` and end-to-end `latency`
-//!   separately;
-//! * `shutdown()` returns `anyhow::Result<Metrics>` and surfaces worker
-//!   panics instead of returning empty metrics as if the run were clean.
+//! * an out-of-range [`ModelSpec::with_affinity`] hint is refused at
+//!   [`Server::start`] ([`ServeError::AffinityOutOfRange`]) instead of
+//!   being silently ignored at dispatch;
+//! * a request whose deadline expired while queued completes with
+//!   [`ServeError::DeadlineExceeded`] and is counted, never served late
+//!   or dropped silently;
+//! * `shutdown()` surfaces worker panics instead of returning empty
+//!   metrics as if the run were clean.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail};
-
-use super::batcher::{BatchPolicy, Batcher};
-use super::engine::{AttentionMode, OptLevel, PreparedStack, TileEngine};
+use super::api::{
+    CancelToken, EncodeOutput, GenerateOutput, JobEvent, JobHandle, JobOutput, QoS, ServeError,
+    Submission, Timing, TokenEvent,
+};
+use super::batcher::{BatchPolicy, Batcher, Pending};
+use super::engine::{AttentionMode, OptLevel, PreparedStack, StepControl, TileEngine};
 use super::metrics::Metrics;
 use super::router::{ModelSpec, Router};
 use crate::model::weights::Mat;
 
-/// One inference request: model name + input activations.
+/// One inference request (v0 surface; see [`Submission::Encode`]).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub model: String,
     pub input: Mat,
 }
 
-/// The response: output activations + timing breakdown.
+/// The v0 encode response shape, produced by the [`Server::infer`] shim.
 #[derive(Debug)]
 pub struct Response {
     pub output: Mat,
@@ -61,9 +91,7 @@ pub struct Response {
     pub queue_wait: Duration,
 }
 
-/// One generation request: greedy-decode `steps` tokens from `prompt`
-/// (rows of `d_model` activations) on a `dec_layers > 0` model; seq2seq
-/// models additionally encode `source` into the cross-attention memory.
+/// One generation request (v0 surface; see [`Submission::Generate`]).
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
     pub model: String,
@@ -72,8 +100,8 @@ pub struct GenerateRequest {
     pub steps: usize,
 }
 
-/// A generation's response: the produced rows/token ids plus the
-/// per-token timing split the metrics aggregate.
+/// The v0 generation response shape, produced by the
+/// [`Server::generate`] shim.
 #[derive(Debug)]
 pub struct GenerateResponse {
     /// Generated activation rows, `steps × d_model`.
@@ -117,14 +145,23 @@ pub struct ServerConfig {
     pub models: Vec<ModelSpec>,
     pub policy: BatchPolicy,
     pub attention: AttentionMode,
-    /// TileProgram optimization level every fabric serves at (the pass
-    /// pipeline of `accel::schedule::opt`; `O2` — dedup, dispatch fusion,
-    /// wave scheduling, slot compaction — is the serving default).
+    /// TileProgram optimization level every fabric serves at by default
+    /// (the pass pipeline of `accel::schedule::opt`; `O2` — dedup,
+    /// dispatch fusion, wave scheduling, slot compaction — is the
+    /// serving default).  [`QoS::opt_level`] overrides it per request.
     pub opt_level: OptLevel,
     /// Number of fabric workers.  `1` (the default) is the paper's
     /// single-fabric host software.
     pub pool_size: usize,
     pub schedule: SchedulePolicy,
+    /// Batches outstanding on a fabric before the dispatcher holds that
+    /// fabric's ready work back in the (QoS-ordered) queue — gated per
+    /// target fabric, so a hot affinity fabric can never grow an
+    /// unbounded FIFO.  `2` double-buffers: one batch executes while the
+    /// next is staged, and priority still decides everything behind
+    /// those.  `1` gives the strictest priority ordering at a small
+    /// utilization cost; `0` is refused at [`Server::start`].
+    pub queue_depth: usize,
     pub fault: FaultInjection,
 }
 
@@ -138,64 +175,85 @@ impl ServerConfig {
             opt_level: OptLevel::O2,
             pool_size: 1,
             schedule: SchedulePolicy::Affinity,
+            queue_depth: 2,
             fault: FaultInjection::default(),
         }
     }
 }
 
-type ReplyTx = Sender<anyhow::Result<Response>>;
-type GenReplyTx = Sender<anyhow::Result<GenerateResponse>>;
-
-/// One unit of fabric work: an encode request or a generation, each with
-/// its own reply channel.  Both kinds ride the same per-model batcher
-/// queues (same register programming, same weight residency).
-enum Job {
-    Infer { req: Request, reply: ReplyTx },
-    Generate { req: GenerateRequest, reply: GenReplyTx },
+/// Lock that survives a poisoning panic on another thread — the panic
+/// itself is surfaced by `shutdown()`'s join; metrics reads must not
+/// double-panic on the way there.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-impl Job {
+/// One submitted job in flight through the pool.
+struct JobState {
+    submission: Submission,
+    qos: QoS,
+    events: Sender<JobEvent>,
+    cancel: CancelToken,
+}
+
+impl JobState {
     fn model(&self) -> &str {
-        match self {
-            Job::Infer { req, .. } => &req.model,
-            Job::Generate { req, .. } => &req.model,
-        }
+        self.submission.model()
     }
 
-    /// Fail the job with `msg` (worker lost, programming error, …).
-    fn fail(self, msg: String) {
-        match self {
-            Job::Infer { reply, .. } => {
-                let _ = reply.send(Err(anyhow!(msg)));
-            }
-            Job::Generate { reply, .. } => {
-                let _ = reply.send(Err(anyhow!(msg)));
-            }
-        }
+    /// Terminate the job with `err` (its handle observes `Failed`).
+    fn fail(self, err: ServeError) {
+        let _ = self.events.send(JobEvent::Failed(err));
     }
 }
 
-/// A request in flight: payload + submit instant.
-type WorkItem = (Job, Instant);
+/// A job as the fabric worker receives it: payload + queue timestamps.
+struct WorkItem {
+    job: JobState,
+    arrived: Instant,
+    deadline: Option<Instant>,
+}
 
 /// Client → dispatcher messages.
 enum Msg {
-    Work { job: Job, enqueued: Instant },
-    Shutdown { reply: Sender<anyhow::Result<Metrics>> },
+    Work { job: JobState, arrived: Instant, deadline: Option<Instant> },
+    Shutdown { reply: Sender<Result<(), ServeError>> },
 }
 
 /// Dispatcher → fabric messages (ordered per fabric: a `Shutdown` sent
 /// after a `Batch` is processed after it).
 enum FabricMsg {
     Batch { model: String, items: Vec<WorkItem> },
-    Shutdown { reply: Sender<Metrics> },
+    Shutdown { reply: Sender<()> },
 }
 
-/// Fabric → dispatcher completion events (separate channel so the
-/// dispatcher can still detect all *clients* disconnecting).
+/// Fabric → dispatcher completion events, one per batch (separate
+/// channel so the dispatcher can still detect all *clients*
+/// disconnecting on the main channel).  `died` marks the worker's
+/// death notice (sent from a panic-unwind guard) so the capacity gate
+/// never waits on a fabric that will not complete anything again.
 struct FabricEvent {
     fabric: usize,
     served: usize,
+    died: bool,
+}
+
+/// Panic-unwind guard a fabric worker arms after warmup: dropping it
+/// with `armed` still set (i.e. unwinding) tells the dispatcher the
+/// fabric is gone, so its queued work fails with a typed error instead
+/// of hanging behind a capacity slot that can never free.
+struct DeathNotice {
+    fabric: usize,
+    events: Sender<FabricEvent>,
+    armed: bool,
+}
+
+impl Drop for DeathNotice {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.events.send(FabricEvent { fabric: self.fabric, served: 0, died: true });
+        }
+    }
 }
 
 /// Per-fabric programming/load state tracked by the dispatcher.  This is
@@ -205,6 +263,11 @@ struct FabricEvent {
 struct FabricState {
     current_model: Option<String>,
     inflight: usize,
+    /// Batches dispatched but not yet completed — the unit the
+    /// capacity gate ([`ServerConfig::queue_depth`]) meters.
+    batches: usize,
+    /// The worker sent its death notice: never place work here again.
+    dead: bool,
 }
 
 /// Pure batch→fabric assignment logic (unit-testable without artifacts).
@@ -221,51 +284,111 @@ impl PoolScheduler {
         PoolScheduler { policy, states: vec![FabricState::default(); fabrics], rr_next: 0 }
     }
 
-    /// Choose the fabric for a ready batch of `model` and account for it
-    /// (`batch_len` requests become in-flight on the chosen fabric).
-    pub fn pick(&mut self, model: &str, hint: Option<usize>, batch_len: usize) -> usize {
+    /// The fabric [`Self::pick`] would choose for `model` among those
+    /// below `depth` outstanding batches, **without committing** the
+    /// assignment.  `None` when no eligible fabric has room: a *pinned*
+    /// model waits for its pinned fabric (that is what pinning means);
+    /// an affinity model falls back past full fabrics to any fabric
+    /// with room (queueing behind a different model costs a reprogram
+    /// but beats an unbounded FIFO); round-robin scans forward from the
+    /// cursor to the first fabric with room.
+    fn choose_within_depth(&self, model: &str, hint: Option<usize>, depth: usize) -> Option<usize> {
         let n = self.states.len();
-        let chosen = match self.policy {
+        let fits = |i: usize| !self.states[i].dead && self.states[i].batches < depth;
+        match self.policy {
             SchedulePolicy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % n;
-                i
+                (0..n).map(|k| (self.rr_next + k) % n).find(|&i| fits(i))
             }
             SchedulePolicy::Affinity => {
                 if let Some(h) = hint.filter(|h| *h < n) {
-                    h
-                } else if let Some(i) = self
+                    return fits(h).then_some(h);
+                }
+                if let Some(i) = self
                     .states
                     .iter()
                     .enumerate()
-                    .filter(|(_, s)| s.current_model.as_deref() == Some(model))
+                    .filter(|(i, s)| fits(*i) && s.current_model.as_deref() == Some(model))
                     .min_by_key(|(_, s)| s.inflight)
                     .map(|(i, _)| i)
                 {
-                    i
-                } else {
-                    // Least-loaded fallback; among equals prefer a fabric
-                    // with nothing programmed yet over evicting a resident
-                    // model, then the lowest index.
-                    self.states
-                        .iter()
-                        .enumerate()
-                        .min_by_key(|(i, s)| (s.inflight, s.current_model.is_some(), *i))
-                        .map(|(i, _)| i)
-                        .expect("pool is non-empty")
+                    return Some(i);
                 }
+                // Least-loaded fallback among fabrics with room; among
+                // equals prefer a fabric with nothing programmed yet over
+                // evicting a resident model, then the lowest index.
+                self.states
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| fits(*i))
+                    .min_by_key(|(i, s)| (s.inflight, s.current_model.is_some(), *i))
+                    .map(|(i, _)| i)
             }
-        };
+        }
+    }
+
+    /// Whether a batch of `model` could be placed right now under the
+    /// per-fabric `depth` gate (the dispatcher's pre-pop check).
+    pub fn can_place(&self, model: &str, hint: Option<usize>, depth: usize) -> bool {
+        self.choose_within_depth(model, hint, depth).is_some()
+    }
+
+    /// Whether a batch of `model` could EVER be placed — false when
+    /// every eligible fabric (the pinned one, or the whole live pool)
+    /// is dead, in which case queued work must fail instead of waiting
+    /// on a capacity slot that will never free.
+    pub fn can_place_ever(&self, model: &str, hint: Option<usize>) -> bool {
+        self.choose_within_depth(model, hint, usize::MAX).is_some()
+    }
+
+    /// Record a worker's death notice: the fabric takes no further
+    /// work, and its stuck capacity accounting is released.
+    pub fn mark_dead(&mut self, fabric: usize) {
+        if let Some(s) = self.states.get_mut(fabric) {
+            s.dead = true;
+            s.batches = 0;
+            s.inflight = 0;
+        }
+    }
+
+    /// The fabric [`Self::pick`] would choose, ignoring capacity —
+    /// pure; commits nothing.
+    pub fn preview(&self, model: &str, hint: Option<usize>) -> usize {
+        self.choose_within_depth(model, hint, usize::MAX).expect("a live fabric exists")
+    }
+
+    /// Choose the fabric for a ready batch of `model` under the
+    /// per-fabric `depth` gate and account for it (`batch_len` requests
+    /// become in-flight on the chosen fabric).  `None` when
+    /// [`Self::can_place`] would be false.
+    pub fn pick_within_depth(
+        &mut self,
+        model: &str,
+        hint: Option<usize>,
+        batch_len: usize,
+        depth: usize,
+    ) -> Option<usize> {
+        let chosen = self.choose_within_depth(model, hint, depth)?;
+        if self.policy == SchedulePolicy::RoundRobin {
+            self.rr_next = (chosen + 1) % self.states.len();
+        }
         let s = &mut self.states[chosen];
         s.current_model = Some(model.to_string());
         s.inflight += batch_len;
-        chosen
+        s.batches += 1;
+        Some(chosen)
     }
 
-    /// A fabric reported `served` requests finished.
+    /// Choose the fabric for a ready batch of `model` and account for it
+    /// (`batch_len` requests become in-flight on the chosen fabric).
+    pub fn pick(&mut self, model: &str, hint: Option<usize>, batch_len: usize) -> usize {
+        self.pick_within_depth(model, hint, batch_len, usize::MAX).expect("pool is non-empty")
+    }
+
+    /// A fabric reported one batch of `served` requests finished.
     pub fn complete(&mut self, fabric: usize, served: usize) {
         if let Some(s) = self.states.get_mut(fabric) {
             s.inflight = s.inflight.saturating_sub(served);
+            s.batches = s.batches.saturating_sub(1);
         }
     }
 
@@ -285,14 +408,37 @@ pub struct Server {
     router: Router,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    fabric_metrics: Vec<Arc<Mutex<Metrics>>>,
+    queue_metrics: Arc<Mutex<Metrics>>,
+    started: Instant,
 }
 
 impl Server {
     /// Start the fabric pool; blocks until every fabric is warmed up (all
     /// models prepared and artifacts compiled) or fails.
-    pub fn start(cfg: ServerConfig) -> anyhow::Result<Self> {
+    pub fn start(cfg: ServerConfig) -> Result<Self, ServeError> {
         if cfg.pool_size == 0 {
-            bail!("pool_size must be >= 1");
+            return Err(ServeError::config("pool_size must be >= 1"));
+        }
+        if cfg.queue_depth == 0 {
+            return Err(ServeError::config(
+                "queue_depth must be >= 1 (batches outstanding per fabric)",
+            ));
+        }
+        // Affinity hints are validated against the actual pool here —
+        // an out-of-range hint used to be silently dropped at dispatch
+        // (`filter(|h| *h < n)`), turning a pinning misconfiguration
+        // into an invisible scheduling change.
+        for spec in &cfg.models {
+            if let Some(f) = spec.preferred_fabric {
+                if f >= cfg.pool_size {
+                    return Err(ServeError::AffinityOutOfRange {
+                        model: spec.name.clone(),
+                        fabric: f,
+                        pool_size: cfg.pool_size,
+                    });
+                }
+            }
         }
         // Router lives on the submit side for fail-fast validation.
         let mut router = Router::new(crate::accel::registers::SynthMaxima::artifact_default());
@@ -306,22 +452,28 @@ impl Server {
         let mut fabric_txs = Vec::with_capacity(cfg.pool_size);
         let mut workers = Vec::with_capacity(cfg.pool_size);
         let mut readys = Vec::with_capacity(cfg.pool_size);
+        let mut fabric_metrics = Vec::with_capacity(cfg.pool_size);
         for id in 0..cfg.pool_size {
             let (ftx, frx) = mpsc::channel::<FabricMsg>();
-            let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), ServeError>>();
             let events = etx.clone();
             let fcfg = cfg.clone();
+            let metrics = Arc::new(Mutex::new(Metrics::for_fabric(id)));
+            let worker_metrics = metrics.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("adaptor-fabric-{id}"))
-                .spawn(move || fabric_thread(id, fcfg, frx, ready_tx, events))
+                .spawn(move || fabric_thread(id, fcfg, frx, ready_tx, events, worker_metrics))
                 .expect("spawning fabric thread");
             fabric_txs.push(ftx);
             workers.push(worker);
             readys.push((id, ready_rx));
+            fabric_metrics.push(metrics);
         }
         drop(etx); // dispatcher holds the receiver; fabrics hold the clones
         for (id, ready_rx) in readys {
-            ready_rx.recv().map_err(|_| anyhow!("fabric {id} died during warmup"))??;
+            ready_rx
+                .recv()
+                .map_err(|_| ServeError::pool_lost(format!("fabric {id} died during warmup")))??;
         }
 
         let hints: BTreeMap<String, usize> = cfg
@@ -329,70 +481,149 @@ impl Server {
             .iter()
             .filter_map(|s| s.preferred_fabric.map(|f| (s.name.clone(), f)))
             .collect();
-        let scheduler = PoolScheduler::new(cfg.schedule, cfg.pool_size);
-        let policy = cfg.policy;
+        let queue_metrics = Arc::new(Mutex::new(Metrics::default()));
+        let ctx = DispatchCtx {
+            policy: cfg.policy,
+            queue_depth: cfg.queue_depth,
+            rx,
+            events: erx,
+            fabrics: fabric_txs,
+            sched: PoolScheduler::new(cfg.schedule, cfg.pool_size),
+            hints,
+            queue_metrics: queue_metrics.clone(),
+        };
         let dispatcher = std::thread::Builder::new()
             .name("adaptor-dispatch".into())
-            .spawn(move || dispatcher_thread(policy, rx, erx, fabric_txs, scheduler, hints))
+            .spawn(move || dispatcher_thread(ctx))
             .expect("spawning dispatcher thread");
 
-        Ok(Server { tx, router, dispatcher: Some(dispatcher), workers })
+        Ok(Server {
+            tx,
+            router,
+            dispatcher: Some(dispatcher),
+            workers,
+            fabric_metrics,
+            queue_metrics,
+            started: Instant::now(),
+        })
     }
 
     pub fn models(&self) -> Vec<&str> {
         self.router.names()
     }
 
-    /// Submit a request; returns the channel the response will arrive on.
-    pub fn submit(&self, req: Request) -> anyhow::Result<Receiver<anyhow::Result<Response>>> {
-        self.router.route(&req.model, req.input.rows, req.input.cols)?;
-        let (reply, rx) = mpsc::channel();
+    /// Serving API v1: the single submission path.  Validates the
+    /// submission against the registry fail-fast, enqueues it with its
+    /// [`QoS`], and returns the [`JobHandle`] to stream/poll/wait/cancel.
+    pub fn submit(&self, submission: Submission, qos: QoS) -> Result<JobHandle, ServeError> {
+        match &submission {
+            Submission::Encode { model, input } => {
+                self.router.route(model, input.rows, input.cols)?;
+            }
+            Submission::Generate { model, prompt, source, steps } => {
+                self.router.route_generate(
+                    model,
+                    (prompt.rows, prompt.cols),
+                    source.as_ref().map(|s| (s.rows, s.cols)),
+                    *steps,
+                )?;
+            }
+        }
+        let arrived = Instant::now();
+        let deadline = qos.deadline.map(|d| arrived + d);
+        let (events, event_rx) = mpsc::channel();
+        let cancel = CancelToken::new();
+        let job = JobState { submission, qos, events, cancel: cancel.clone() };
         self.tx
-            .send(Msg::Work { job: Job::Infer { req, reply }, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("dispatcher is gone"))?;
-        Ok(rx)
+            .send(Msg::Work { job, arrived, deadline })
+            .map_err(|_| ServeError::pool_lost("dispatcher is gone"))?;
+        Ok(JobHandle::new(event_rx, cancel))
     }
 
-    /// Convenience: submit and wait.
-    pub fn infer(&self, req: Request) -> anyhow::Result<Response> {
-        self.submit(req)?.recv().map_err(|_| anyhow!("pool dropped the request"))?
+    /// Live metrics snapshot of the running pool: aggregate over the
+    /// per-fabric accumulators plus the dispatcher's queue counters
+    /// (deadline expiries, queued cancellations).  Does not drain or
+    /// disturb the pool — `shutdown()` is no longer the only metrics
+    /// exit.
+    pub fn metrics(&self) -> Metrics {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut per_fabric: Vec<Metrics> =
+            self.fabric_metrics.iter().map(|m| lock(m).clone()).collect();
+        for m in &mut per_fabric {
+            if m.elapsed == 0.0 {
+                m.elapsed = elapsed;
+            }
+        }
+        let mut agg = Metrics::aggregate(per_fabric);
+        agg.merge(&lock(&self.queue_metrics));
+        agg.elapsed = elapsed;
+        agg
     }
 
-    /// Submit a generation request (fail-fast validated on the submit
-    /// side, like [`Self::submit`]); returns its reply channel.
-    pub fn submit_generate(
-        &self,
-        req: GenerateRequest,
-    ) -> anyhow::Result<Receiver<anyhow::Result<GenerateResponse>>> {
-        self.router.route_generate(
-            &req.model,
-            (req.prompt.rows, req.prompt.cols),
-            req.source.as_ref().map(|s| (s.rows, s.cols)),
-            req.steps,
-        )?;
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Work { job: Job::Generate { req, reply }, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("dispatcher is gone"))?;
-        Ok(rx)
+    /// v0 entry point: submit an encode request and wait.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use Server::submit(Submission::Encode { .. }, QoS::default()) + JobHandle::wait"
+    )]
+    pub fn infer(&self, req: Request) -> Result<Response, ServeError> {
+        let handle =
+            self.submit(Submission::Encode { model: req.model, input: req.input }, QoS::default())?;
+        let out = handle.wait()?.into_encode()?;
+        Ok(Response {
+            output: out.output,
+            latency: out.timing.latency,
+            compute: out.timing.compute,
+            queue_wait: out.timing.queue_wait,
+        })
     }
 
-    /// Convenience: submit a generation and wait.
-    pub fn generate(&self, req: GenerateRequest) -> anyhow::Result<GenerateResponse> {
-        self.submit_generate(req)?.recv().map_err(|_| anyhow!("pool dropped the request"))?
+    /// v0 entry point: submit a generation request, returning its handle.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use Server::submit(Submission::Generate { .. }, QoS::default())"
+    )]
+    pub fn submit_generate(&self, req: GenerateRequest) -> Result<JobHandle, ServeError> {
+        self.submit(
+            Submission::Generate {
+                model: req.model,
+                prompt: req.prompt,
+                source: req.source,
+                steps: req.steps,
+            },
+            QoS::default(),
+        )
+    }
+
+    /// v0 entry point: submit a generation request and wait.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use Server::submit(Submission::Generate { .. }, QoS::default()) + JobHandle::wait"
+    )]
+    pub fn generate(&self, req: GenerateRequest) -> Result<GenerateResponse, ServeError> {
+        #[allow(deprecated)]
+        let handle = self.submit_generate(req)?;
+        let out = handle.wait()?.into_generate()?;
+        Ok(GenerateResponse {
+            rows: out.rows,
+            tokens: out.tokens,
+            latency: out.timing.latency,
+            queue_wait: out.timing.queue_wait,
+            prefill: out.prefill,
+            step_times: out.step_times,
+        })
     }
 
     /// Stop the pool and collect final metrics (aggregate with per-fabric
     /// breakdown).  A worker or dispatcher panic is propagated as an error
     /// rather than masked with empty metrics.
-    pub fn shutdown(mut self) -> anyhow::Result<Metrics> {
+    pub fn shutdown(mut self) -> Result<Metrics, ServeError> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Shutdown { reply })
-            .map_err(|_| anyhow!("dispatcher is gone (did it panic?)"))?;
-        let result = rx
-            .recv()
-            .map_err(|_| anyhow!("dispatcher exited without reporting metrics (panic?)"));
+            .map_err(|_| ServeError::pool_lost("dispatcher is gone (did it panic?)"))?;
+        let drained = rx.recv().map_err(|_| {
+            ServeError::pool_lost("dispatcher exited without confirming the drain (panic?)")
+        });
         let mut panicked = Vec::new();
         if let Some(h) = self.dispatcher.take() {
             if h.join().is_err() {
@@ -405,34 +636,69 @@ impl Server {
             }
         }
         if !panicked.is_empty() {
-            bail!("serving threads panicked: {}", panicked.join(", "));
+            return Err(ServeError::pool_lost(format!(
+                "serving threads panicked: {}",
+                panicked.join(", ")
+            )));
         }
-        result?
+        drained??;
+        Ok(self.metrics())
     }
 }
 
-fn dispatcher_thread(
+/// Everything the dispatcher thread owns (bundled so the spawn site
+/// stays readable).
+struct DispatchCtx {
     policy: BatchPolicy,
+    queue_depth: usize,
     rx: Receiver<Msg>,
-    erx: Receiver<FabricEvent>,
+    events: Receiver<FabricEvent>,
     fabrics: Vec<Sender<FabricMsg>>,
-    mut sched: PoolScheduler,
+    sched: PoolScheduler,
     hints: BTreeMap<String, usize>,
-) {
-    let mut batcher: Batcher<WorkItem> = Batcher::new(policy);
-    let started = Instant::now();
-    let mut shutdown_reply: Option<Sender<anyhow::Result<Metrics>>> = None;
+    queue_metrics: Arc<Mutex<Metrics>>,
+}
+
+fn dispatcher_thread(ctx: DispatchCtx) {
+    let DispatchCtx { policy, queue_depth, rx, events, fabrics, mut sched, hints, queue_metrics } =
+        ctx;
+    let mut batcher: Batcher<JobState> = Batcher::new(policy);
+    let mut shutdown_reply: Option<Sender<Result<(), ServeError>>> = None;
+    // Ready work was held back by the capacity gate last iteration: poll
+    // completions briskly instead of sleeping a full batching deadline.
+    let mut gated = false;
 
     'outer: loop {
-        // Wait for work, bounded by the oldest batch deadline.
-        let timeout = batcher
-            .next_deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
+        let timeout = if gated {
+            // All dispatchable work is out and the rest waits on fabric
+            // capacity: block on the completion channel (a completion is
+            // the only thing that can unblock dispatch) instead of
+            // spinning, then poll the client channel without sleeping.
+            match events.recv_timeout(Duration::from_millis(5)) {
+                Ok(ev) => {
+                    if ev.died {
+                        sched.mark_dead(ev.fabric);
+                    } else {
+                        sched.complete(ev.fabric, ev.served);
+                    }
+                    Duration::ZERO
+                }
+                Err(RecvTimeoutError::Timeout) => Duration::ZERO,
+                // Every worker is gone: nothing will ever complete, so
+                // wait on the client channel instead of spinning.
+                Err(RecvTimeoutError::Disconnected) => Duration::from_millis(5),
+            }
+        } else {
+            batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(50))
+        };
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Work { job, enqueued }) => {
+            Ok(Msg::Work { job, arrived, deadline }) => {
                 let model = job.model().to_string();
-                batcher.push_at(&model, (job, enqueued), enqueued);
+                let priority = job.qos.priority;
+                batcher.push_qos(&model, job, arrived, priority, deadline);
             }
             Ok(Msg::Shutdown { reply }) => {
                 shutdown_reply = Some(reply);
@@ -440,14 +706,83 @@ fn dispatcher_thread(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break 'outer,
         }
-        // Fold in completion events so load tracking stays fresh.
-        while let Ok(ev) = erx.try_recv() {
-            sched.complete(ev.fabric, ev.served);
+        // Fold in completion events so load tracking stays fresh; death
+        // notices retire a fabric from placement entirely.
+        while let Ok(ev) = events.try_recv() {
+            if ev.died {
+                sched.mark_dead(ev.fabric);
+            } else {
+                sched.complete(ev.fabric, ev.served);
+            }
+        }
+        // QoS sweep: cancelled or deadline-expired while queued complete
+        // *now* with a typed error — never served late, never dropped.
+        // Cheap scan first; the queue rebuild only runs when something
+        // actually needs sweeping.
+        let now = Instant::now();
+        let sweep = |p: &Pending<JobState>| p.payload.cancel.is_cancelled() || p.expired(now);
+        if batcher.any_where(sweep) {
+            let mut qm = lock(&queue_metrics);
+            for p in batcher.take_where(sweep) {
+                if p.payload.cancel.is_cancelled() {
+                    qm.cancelled += 1;
+                    p.payload.fail(ServeError::Cancelled);
+                } else {
+                    qm.expired += 1;
+                    p.payload.fail(ServeError::DeadlineExceeded {
+                        waited: now.duration_since(p.arrived),
+                    });
+                }
+            }
         }
         let draining = shutdown_reply.is_some();
-        while let Some((model, batch)) = batcher.pop_ready(Instant::now(), draining) {
-            let fabric = sched.pick(&model, hints.get(&model).copied(), batch.len());
-            let items: Vec<WorkItem> = batch.into_iter().map(|p| p.payload).collect();
+        gated = false;
+        // Models whose eligible fabrics are all at depth this round: set
+        // aside (they stay in the QoS-ordered queue, where priority
+        // still applies) while other models keep draining to fabrics
+        // with room — per-target gating without head-of-line blocking.
+        let mut blocked: Vec<String> = Vec::new();
+        loop {
+            let now = Instant::now();
+            let Some(model) =
+                batcher.peek_ready_excluding(now, draining, &blocked).map(|m| m.to_string())
+            else {
+                break;
+            };
+            let hint = hints.get(&model).copied();
+            if !sched.can_place(&model, hint, queue_depth) {
+                if !sched.can_place_ever(&model, hint) {
+                    // Every fabric this model could run on is dead —
+                    // fail its queued jobs now instead of waiting on a
+                    // capacity slot that will never free (this also
+                    // keeps the shutdown drain from hanging).
+                    let lost = batcher.take_where(|p| p.model == model);
+                    lock(&queue_metrics).failed += lost.len() as u64;
+                    for p in lost {
+                        p.payload.fail(ServeError::pool_lost(format!(
+                            "no live fabric can serve model '{model}' (worker died)"
+                        )));
+                    }
+                    continue;
+                }
+                gated = true;
+                blocked.push(model);
+                continue;
+            }
+            let Some((model, batch)) = batcher.pop_model(&model) else {
+                break;
+            };
+            let fabric = sched
+                .pick_within_depth(&model, hint, batch.len(), queue_depth)
+                .expect("can_place just found a fabric with room");
+            let items: Vec<WorkItem> = batch
+                .into_iter()
+                .map(|p: Pending<JobState>| WorkItem {
+                    job: p.payload,
+                    arrived: p.arrived,
+                    deadline: p.deadline,
+                })
+                .collect();
             let n = items.len();
             if let Err(mpsc::SendError(lost)) =
                 fabrics[fabric].send(FabricMsg::Batch { model, items })
@@ -455,8 +790,10 @@ fn dispatcher_thread(
                 // The worker thread is gone: fail the batch loudly instead
                 // of dropping the reply channels.
                 if let FabricMsg::Batch { items, .. } = lost {
-                    for (job, _) in items {
-                        job.fail(format!("fabric {fabric} is gone (worker died)"));
+                    for it in items {
+                        it.job.fail(ServeError::pool_lost(format!(
+                            "fabric {fabric} is gone (worker died)"
+                        )));
                     }
                 }
                 sched.complete(fabric, n);
@@ -467,34 +804,35 @@ fn dispatcher_thread(
         }
     }
 
-    // Collect per-fabric metrics; per-fabric channel order guarantees all
-    // dispatched batches are served before the Shutdown is processed.
-    let mut per_fabric = Vec::with_capacity(fabrics.len());
-    let mut failure: Option<anyhow::Error> = None;
+    // The server handle was dropped (or the drain finished): anything
+    // still queued can never be served.
+    for p in batcher.take_where(|_| true) {
+        p.payload.fail(ServeError::pool_lost("server shut down before the job was dispatched"));
+    }
+
+    // Quiesce the fabrics; per-fabric channel order guarantees all
+    // dispatched batches are served (and recorded) before the Shutdown
+    // ack.
+    let mut failure: Option<ServeError> = None;
     for (id, ftx) in fabrics.iter().enumerate() {
-        let (mtx, mrx) = mpsc::channel();
-        if ftx.send(FabricMsg::Shutdown { reply: mtx }).is_err() {
-            failure.get_or_insert_with(|| anyhow!("fabric {id} terminated abnormally"));
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if ftx.send(FabricMsg::Shutdown { reply: ack_tx }).is_err() {
+            failure.get_or_insert_with(|| {
+                ServeError::pool_lost(format!("fabric {id} terminated abnormally"))
+            });
             continue;
         }
-        match mrx.recv() {
-            Ok(m) => per_fabric.push(m),
-            Err(_) => {
-                failure
-                    .get_or_insert_with(|| anyhow!("fabric {id} died during shutdown (metrics lost)"));
-            }
+        if ack_rx.recv().is_err() {
+            failure.get_or_insert_with(|| {
+                ServeError::pool_lost(format!("fabric {id} died during shutdown"))
+            });
         }
     }
-    let result = match failure {
-        Some(e) => Err(e),
-        None => {
-            let mut agg = Metrics::aggregate(per_fabric);
-            agg.elapsed = started.elapsed().as_secs_f64();
-            Ok(agg)
-        }
-    };
     if let Some(reply) = shutdown_reply {
-        let _ = reply.send(result);
+        let _ = reply.send(match failure {
+            Some(e) => Err(e),
+            None => Ok(()),
+        });
     }
 }
 
@@ -502,8 +840,9 @@ fn fabric_thread(
     id: usize,
     cfg: ServerConfig,
     rx: Receiver<FabricMsg>,
-    ready: Sender<anyhow::Result<()>>,
+    ready: Sender<Result<(), ServeError>>,
     events: Sender<FabricEvent>,
+    metrics: Arc<Mutex<Metrics>>,
 ) {
     // Build the fabric locally (not Send).
     let mut engine = match TileEngine::new(&cfg.artifact_dir) {
@@ -522,8 +861,10 @@ fn fabric_thread(
         match engine.prepare_model(&spec.cfg, &spec.weights(), &spec.decoder_weights()) {
             Ok(p) => prepared.push((spec.name.clone(), p)),
             Err(e) => {
-                let _ = ready
-                    .send(Err(e.context(format!("fabric {id}: preparing model '{}'", spec.name))));
+                let _ = ready.send(Err(ServeError::engine(format!(
+                    "fabric {id}: preparing model '{}': {e}",
+                    spec.name
+                ))));
                 return;
             }
         }
@@ -543,110 +884,187 @@ fn fabric_thread(
         ]);
     }
     if let Err(e) = engine.executor().warmup(&names) {
-        let _ = ready.send(Err(e));
+        let _ = ready.send(Err(e.into()));
         return;
     }
     let _ = ready.send(Ok(()));
 
-    let mut metrics = Metrics::for_fabric(id);
+    // From here on, an unwinding panic must tell the dispatcher this
+    // fabric is gone — otherwise its queued work waits forever on a
+    // capacity slot that can never free.
+    let mut notice = DeathNotice { fabric: id, events: events.clone(), armed: true };
     let started = Instant::now();
     while let Ok(msg) = rx.recv() {
         match msg {
             FabricMsg::Batch { model, items } => {
                 let served = items.len();
-                serve_batch(&mut engine, &cfg.fault, &prepared, &mut metrics, &model, items);
-                let _ = events.send(FabricEvent { fabric: id, served });
+                serve_batch(&mut engine, &cfg, &prepared, &metrics, &model, items);
+                let _ = events.send(FabricEvent { fabric: id, served, died: false });
             }
             FabricMsg::Shutdown { reply } => {
-                metrics.elapsed = started.elapsed().as_secs_f64();
-                let _ = reply.send(metrics);
+                lock(&metrics).elapsed = started.elapsed().as_secs_f64();
+                notice.armed = false;
+                let _ = reply.send(());
                 return;
             }
         }
     }
-    // Dispatcher hung up without a shutdown (server dropped): just exit.
+    // Dispatcher hung up without a shutdown (server dropped): clean exit.
+    notice.armed = false;
 }
 
 /// Serve one model-homogeneous batch on a fabric.
 fn serve_batch(
     engine: &mut TileEngine,
-    fault: &FaultInjection,
+    cfg: &ServerConfig,
     prepared: &[(String, PreparedStack)],
-    metrics: &mut Metrics,
+    metrics: &Mutex<Metrics>,
     model: &str,
     items: Vec<WorkItem>,
 ) {
     let Some((_, stack)) = prepared.iter().find(|(n, _)| n == model) else {
-        metrics.failed += items.len() as u64;
-        for (job, _) in items {
-            job.fail(format!("model '{model}' not prepared on this fabric"));
+        lock(metrics).failed += items.len() as u64;
+        for it in items {
+            it.job.fail(ServeError::engine(format!("model '{model}' not prepared on this fabric")));
         }
         return;
     };
     // Reprogram only when the register file holds a different topology.
     if !engine.is_programmed_for(&stack.cfg) {
-        let programmed = if fault.fail_program_for.as_deref() == Some(model) {
-            Err(anyhow!("injected register-programming fault"))
+        let programmed = if cfg.fault.fail_program_for.as_deref() == Some(model) {
+            Err(ServeError::ProgramFailed("injected register-programming fault".into()))
         } else {
             engine.program(&stack.cfg)
         };
         match programmed {
-            Ok(()) => metrics.reprograms += 1,
+            Ok(()) => lock(metrics).reprograms += 1,
             Err(e) => {
                 // A failed program() fails the whole batch: running against
                 // the previous model's register state would silently return
                 // wrong numerics.
-                let msg = format!("{e:#}");
-                metrics.failed += items.len() as u64;
-                for (job, _) in items {
-                    job.fail(format!("programming registers for model '{model}': {msg}"));
+                lock(metrics).failed += items.len() as u64;
+                for it in items {
+                    it.job.fail(ServeError::ProgramFailed(format!(
+                        "programming registers for model '{model}': {e}"
+                    )));
                 }
                 return;
             }
         }
     }
-    // Count the batch only once the model is prepared AND programmed.
-    metrics.record_batch(items.len());
-    for (job, enqueued) in items {
-        let queue_wait = enqueued.elapsed();
+    // The batch is recorded only after the loop, sized by the items
+    // that actually started executing — cancel/deadline skips must not
+    // inflate the served-batch statistics ("batches are counted only
+    // once actually served").
+    let mut attempted = 0usize;
+    for item in items {
+        let WorkItem { job, arrived, deadline } = item;
+        let now = Instant::now();
+        // Last-line QoS checks at execution start: cancellation and the
+        // queued-deadline contract hold even for requests that expired
+        // or were cancelled after dispatch (inside a staged batch).
+        if job.cancel.is_cancelled() {
+            lock(metrics).cancelled += 1;
+            job.fail(ServeError::Cancelled);
+            continue;
+        }
+        if deadline.map_or(false, |d| d <= now) {
+            lock(metrics).expired += 1;
+            job.fail(ServeError::DeadlineExceeded { waited: now.duration_since(arrived) });
+            continue;
+        }
+        attempted += 1;
+        // Per-request opt-level override (cache-keyed: a lookup after
+        // first use, never a recompile).
+        engine.opt_level = job.qos.opt_level.unwrap_or(cfg.opt_level);
+        let priority = job.qos.priority;
+        let queue_wait = arrived.elapsed();
         let t0 = Instant::now();
-        match job {
-            Job::Infer { req, reply } => {
-                let result = engine.run_encoder(stack, &req.input).map(|output| Response {
-                    output,
-                    compute: t0.elapsed(),
-                    queue_wait,
-                    latency: enqueued.elapsed(),
-                });
-                match &result {
-                    Ok(r) => metrics.record(r.compute, r.queue_wait, r.latency),
-                    Err(_) => metrics.failed += 1,
-                }
-                let _ = reply.send(result);
-            }
-            Job::Generate { req, reply } => {
-                let result = engine
-                    .generate(stack, &req.prompt, req.source.as_ref(), req.steps)
-                    .map(|g| GenerateResponse {
-                        rows: g.rows,
-                        tokens: g.tokens,
-                        latency: enqueued.elapsed(),
+        let JobState { submission, events, cancel, .. } = job;
+        match submission {
+            Submission::Encode { input, .. } => match engine.run_encoder(stack, &input) {
+                Ok(output) => {
+                    let timing = Timing {
+                        compute: t0.elapsed(),
                         queue_wait,
-                        prefill: g.prefill,
-                        step_times: g.step_times,
-                    });
-                match &result {
-                    Ok(r) => {
-                        // Success-only sampling: a failed generation must
-                        // never pollute the prefill/per-token summaries.
-                        metrics.record_generation(r.prefill, &r.step_times);
-                        metrics.record(t0.elapsed(), r.queue_wait, r.latency);
+                        latency: arrived.elapsed(),
+                    };
+                    {
+                        let mut m = lock(metrics);
+                        m.record(timing.compute, timing.queue_wait, timing.latency);
+                        m.record_priority(priority);
                     }
-                    Err(_) => metrics.failed += 1,
+                    let _ = events
+                        .send(JobEvent::Done(Box::new(JobOutput::Encode(EncodeOutput {
+                            output,
+                            timing,
+                        }))));
                 }
-                let _ = reply.send(result);
+                Err(e) => {
+                    lock(metrics).failed += 1;
+                    let _ = events.send(JobEvent::Failed(e));
+                }
+            },
+            Submission::Generate { prompt, source, steps, .. } => {
+                // Stream each token as its decode step completes; observe
+                // cancellation between steps.  A failed send means the
+                // JobHandle is gone — nobody can ever observe the result,
+                // so stop instead of burning the remaining decode steps.
+                let mut on_token = |index: usize, token: usize, row: &[f32]| {
+                    let delivered = events
+                        .send(JobEvent::Token(TokenEvent { index, token, row: row.to_vec() }))
+                        .is_ok();
+                    if cancel.is_cancelled() || !delivered {
+                        StepControl::Stop
+                    } else {
+                        StepControl::Continue
+                    }
+                };
+                match engine.generate_streamed(stack, &prompt, source.as_ref(), steps, &mut on_token)
+                {
+                    Ok(Some(g)) => {
+                        let timing = Timing {
+                            compute: t0.elapsed(),
+                            queue_wait,
+                            latency: arrived.elapsed(),
+                        };
+                        {
+                            // Success-only sampling: a failed or cancelled
+                            // generation must never pollute the
+                            // prefill/per-token summaries.
+                            let mut m = lock(metrics);
+                            m.record_generation(g.prefill, &g.step_times);
+                            m.record(timing.compute, timing.queue_wait, timing.latency);
+                            m.record_priority(priority);
+                        }
+                        let _ = events.send(JobEvent::Done(Box::new(JobOutput::Generate(
+                            GenerateOutput {
+                                rows: g.rows,
+                                tokens: g.tokens,
+                                timing,
+                                prefill: g.prefill,
+                                step_times: g.step_times,
+                            },
+                        ))));
+                    }
+                    Ok(None) => {
+                        // Stopped between decode steps — an explicit
+                        // cancel, or the JobHandle was dropped (send
+                        // failed, nobody can observe the result).  Either
+                        // way no partial generation reaches the metrics.
+                        lock(metrics).cancelled += 1;
+                        let _ = events.send(JobEvent::Failed(ServeError::Cancelled));
+                    }
+                    Err(e) => {
+                        lock(metrics).failed += 1;
+                        let _ = events.send(JobEvent::Failed(e));
+                    }
+                }
             }
         }
+    }
+    if attempted > 0 {
+        lock(metrics).record_batch(attempted);
     }
 }
 
@@ -663,22 +1081,33 @@ mod tests {
         Server::start(cfg).expect("run `make artifacts` first")
     }
 
+    fn encode(model: &str, input: Mat) -> Submission {
+        Submission::Encode { model: model.into(), input }
+    }
+
     #[test]
     fn serves_correct_outputs() {
         require_artifacts!();
         let spec = ModelSpec::new("small", presets::small_encoder(32, 1), 21);
         let s = server(vec![spec.clone()]);
         let x = weights::init_input(1, 32, 256);
-        let resp = s.infer(Request { model: "small".into(), input: x.clone() }).unwrap();
+        let out = s
+            .submit(encode("small", x.clone()), QoS::default())
+            .unwrap()
+            .wait()
+            .unwrap()
+            .into_encode()
+            .unwrap();
         let mask = reference::attention_mask(32, 32, false);
         let want = reference::encoder_stack(&x, &spec.weights(), &mask);
-        assert!(resp.output.max_abs_diff(&want) < 2e-3);
+        assert!(out.output.max_abs_diff(&want) < 2e-3);
         // timing decomposition: e2e covers queue + compute
-        assert!(resp.latency >= resp.compute);
-        assert!(resp.latency >= resp.queue_wait);
+        assert!(out.timing.latency >= out.timing.compute);
+        assert!(out.timing.latency >= out.timing.queue_wait);
         let m = s.shutdown().unwrap();
         assert_eq!(m.requests(), 1);
         assert_eq!(m.failed, 0);
+        assert_eq!(m.served_at(crate::coordinator::api::Priority::Normal), 1);
     }
 
     #[test]
@@ -690,8 +1119,8 @@ mod tests {
         for i in 0..3 {
             let xa = weights::init_input(i, 32, 256);
             let xb = weights::init_input(i + 10, 48, 128);
-            assert!(s.infer(Request { model: "a".into(), input: xa }).is_ok());
-            assert!(s.infer(Request { model: "b".into(), input: xb }).is_ok());
+            assert!(s.submit(encode("a", xa), QoS::default()).unwrap().wait().is_ok());
+            assert!(s.submit(encode("b", xb), QoS::default()).unwrap().wait().is_ok());
         }
         let m = s.shutdown().unwrap();
         assert_eq!(m.requests(), 6);
@@ -699,13 +1128,51 @@ mod tests {
     }
 
     #[test]
+    fn live_metrics_snapshot_while_serving() {
+        require_artifacts!();
+        let s = server(vec![ModelSpec::new("small", presets::small_encoder(32, 1), 9)]);
+        assert_eq!(s.metrics().requests(), 0, "nothing served yet");
+        let x = weights::init_input(2, 32, 256);
+        s.submit(encode("small", x), QoS::default()).unwrap().wait().unwrap();
+        // the pool is still running — shutdown() is not the only exit
+        let live = s.metrics();
+        assert_eq!(live.requests(), 1);
+        assert_eq!(live.per_fabric.len(), 1);
+        assert!(live.elapsed > 0.0);
+        assert!(live.throughput_rps() > 0.0);
+        let end = s.shutdown().unwrap();
+        assert_eq!(end.requests(), 1);
+    }
+
+    #[test]
     fn rejects_bad_requests_fast() {
         require_artifacts!();
         let s = server(vec![ModelSpec::new("small", presets::small_encoder(32, 1), 3)]);
         let wrong_shape = weights::init_input(0, 16, 256);
-        assert!(s.submit(Request { model: "small".into(), input: wrong_shape }).is_err());
+        assert!(matches!(
+            s.submit(encode("small", wrong_shape), QoS::default()),
+            Err(ServeError::InvalidRequest(_))
+        ));
         let unknown = weights::init_input(0, 32, 256);
-        assert!(s.submit(Request { model: "nope".into(), input: unknown }).is_err());
+        assert!(matches!(
+            s.submit(encode("nope", unknown), QoS::default()),
+            Err(ServeError::UnknownModel(_))
+        ));
+        s.shutdown().unwrap();
+    }
+
+    #[test]
+    fn deprecated_v0_shims_still_serve() {
+        require_artifacts!();
+        let spec = ModelSpec::new("small", presets::small_encoder(32, 1), 21);
+        let s = server(vec![spec.clone()]);
+        let x = weights::init_input(1, 32, 256);
+        #[allow(deprecated)]
+        let resp = s.infer(Request { model: "small".into(), input: x.clone() }).unwrap();
+        let mask = reference::attention_mask(32, 32, false);
+        let want = reference::encoder_stack(&x, &spec.weights(), &mask);
+        assert!(resp.output.max_abs_diff(&want) < 2e-3);
+        assert!(resp.latency >= resp.compute);
         s.shutdown().unwrap();
     }
 
@@ -713,7 +1180,24 @@ mod tests {
     fn zero_pool_size_is_refused() {
         let mut cfg = ServerConfig::new(vec![]);
         cfg.pool_size = 0;
-        assert!(Server::start(cfg).is_err());
+        assert!(matches!(Server::start(cfg), Err(ServeError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn out_of_range_affinity_is_refused_at_start() {
+        // No artifacts needed: validation runs before any fabric spawns.
+        let spec = ModelSpec::new("pinned", presets::small_encoder(32, 1), 1).with_affinity(3);
+        let mut cfg = ServerConfig::new(vec![spec]);
+        cfg.pool_size = 2;
+        match Server::start(cfg) {
+            Err(ServeError::AffinityOutOfRange { model, fabric, pool_size }) => {
+                assert_eq!(model, "pinned");
+                assert_eq!(fabric, 3);
+                assert_eq!(pool_size, 2);
+            }
+            Err(other) => panic!("expected AffinityOutOfRange, got {other:?}"),
+            Ok(_) => panic!("expected AffinityOutOfRange, got a running server"),
+        }
     }
 
     // ---- PoolScheduler unit tests (no artifacts needed) ----
@@ -762,7 +1246,8 @@ mod tests {
         let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 3);
         assert_eq!(s.pick("pinned", Some(2), 1), 2);
         assert_eq!(s.pick("pinned", Some(2), 1), 2);
-        // out-of-range hints are ignored, falling back to the heuristic
+        // out-of-range hints are ignored at this layer, falling back to
+        // the heuristic (Server::start refuses them before they get here)
         assert_eq!(s.pick("other", Some(9), 1), 0);
     }
 
@@ -776,6 +1261,94 @@ mod tests {
         s.complete(0, 5); // over-completion saturates at zero
         assert_eq!(s.inflight(0), 0);
         s.complete(7, 1); // unknown fabric is ignored
+    }
+
+    #[test]
+    fn capacity_gate_meters_outstanding_batches() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        assert!(s.can_place("a", None, 1));
+        s.pick("a", None, 4); // one batch on fabric 0
+        // "a"'s affinity fabric is full at depth 1, but another fabric
+        // has room — affinity falls back rather than queue-blocking.
+        assert!(s.can_place("a", None, 1));
+        assert_eq!(s.pick_within_depth("a", None, 1, 1), Some(1), "falls back past the full fabric");
+        assert!(!s.can_place("b", None, 1), "both fabrics hold a batch");
+        assert!(s.can_place("b", None, 2), "depth 2 double-buffers");
+        s.complete(0, 4);
+        assert!(s.can_place("b", None, 1), "completion frees the slot");
+        assert_eq!(s.pick_within_depth("b", None, 1, 1), Some(0));
+    }
+
+    #[test]
+    fn pinned_models_wait_for_their_pinned_fabric() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        s.pick("a", Some(0), 1);
+        // fabric 0 (the pin target) is full at depth 1; fabric 1 is idle,
+        // but a pin means THAT fabric — the batch waits in the queue.
+        assert!(!s.can_place("a", Some(0), 1));
+        assert_eq!(s.pick_within_depth("a", Some(0), 1, 1), None);
+        assert!(s.can_place("a", Some(0), 2));
+        s.complete(0, 1);
+        assert_eq!(s.pick_within_depth("a", Some(0), 1, 1), Some(0));
+    }
+
+    #[test]
+    fn round_robin_scans_past_full_fabrics() {
+        let mut s = PoolScheduler::new(SchedulePolicy::RoundRobin, 3);
+        assert_eq!(s.pick_within_depth("a", None, 1, 1), Some(0));
+        // cursor is at 1; all of 1, 2 free → next pick lands on 1
+        assert_eq!(s.pick_within_depth("a", None, 1, 1), Some(1));
+        // cursor at 2; fill it too, then the pool is saturated at depth 1
+        assert_eq!(s.pick_within_depth("a", None, 1, 1), Some(2));
+        assert!(!s.can_place("a", None, 1));
+        // freeing fabric 1 lets the scan skip still-full fabric 0
+        s.complete(1, 1);
+        assert_eq!(s.pick_within_depth("a", None, 1, 1), Some(1), "scan skips full fabrics");
+    }
+
+    #[test]
+    fn dead_fabrics_are_never_placed_and_release_capacity() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        s.pick("a", None, 2); // fabric 0 busy with "a"
+        s.mark_dead(0);
+        // the dead fabric's stuck capacity no longer gates anything and
+        // placement skips it entirely
+        assert!(s.can_place("a", None, 1));
+        assert_eq!(s.pick_within_depth("a", None, 1, 1), Some(1));
+        // a model pinned to the dead fabric can never be placed — the
+        // dispatcher fails its queued jobs instead of hanging
+        assert!(!s.can_place_ever("pinned", Some(0)));
+        assert!(s.can_place_ever("a", None));
+        // a fully dead pool can place nothing
+        let mut all = PoolScheduler::new(SchedulePolicy::Affinity, 1);
+        all.mark_dead(0);
+        assert!(!all.can_place_ever("x", None));
+    }
+
+    #[test]
+    fn preview_matches_pick_and_does_not_commit() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        let previewed = s.preview("a", None);
+        assert_eq!(s.pick("a", None, 1), previewed);
+        // preview is pure: repeated calls agree and nothing is accounted
+        assert_eq!(s.preview("a", None), 0, "affinity sticks to the programmed fabric");
+        assert_eq!(s.preview("a", None), 0);
+        assert_eq!(s.preview("b", None), 1, "new model previews the unprogrammed fabric");
+        assert_eq!(s.inflight(1), 0, "preview must not account in-flight work");
+
+        // round-robin preview shows the next target without advancing
+        let mut r = PoolScheduler::new(SchedulePolicy::RoundRobin, 2);
+        assert_eq!(r.preview("a", None), 0);
+        assert_eq!(r.preview("a", None), 0, "preview must not advance the cursor");
+        assert_eq!(r.pick("a", None, 1), 0);
+        assert_eq!(r.preview("a", None), 1);
+    }
+
+    #[test]
+    fn zero_queue_depth_is_refused() {
+        let mut cfg = ServerConfig::new(vec![]);
+        cfg.queue_depth = 0;
+        assert!(matches!(Server::start(cfg), Err(ServeError::InvalidConfig(_))));
     }
 
     #[test]
@@ -815,13 +1388,19 @@ mod tests {
         let s = Server::start(cfg).unwrap();
         // "a" serves fine
         let xa = weights::init_input(1, 32, 256);
-        assert!(s.infer(Request { model: "a".into(), input: xa.clone() }).is_ok());
-        // "b" must fail with the programming error — not run on stale registers
+        assert!(s.submit(encode("a", xa.clone()), QoS::default()).unwrap().wait().is_ok());
+        // "b" must fail with the typed programming error — not run on
+        // stale registers
         let xb = weights::init_input(2, 48, 128);
-        let err = s.infer(Request { model: "b".into(), input: xb }).unwrap_err();
-        assert!(err.to_string().contains("programming registers"), "{err}");
+        let err = s.submit(encode("b", xb), QoS::default()).unwrap().wait().unwrap_err();
+        match &err {
+            ServeError::ProgramFailed(msg) => {
+                assert!(msg.contains("programming registers"), "{msg}")
+            }
+            other => panic!("expected ProgramFailed, got {other:?}"),
+        }
         // the fabric recovers: "a" still serves afterwards
-        assert!(s.infer(Request { model: "a".into(), input: xa }).is_ok());
+        assert!(s.submit(encode("a", xa), QoS::default()).unwrap().wait().is_ok());
         let m = s.shutdown().unwrap();
         assert_eq!(m.requests(), 2, "failed request must not count as served");
         assert_eq!(m.failed, 1);

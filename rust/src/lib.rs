@@ -29,9 +29,16 @@
 //!   Algorithm 18): register programming, the tile-schedule engine that
 //!   builds/caches a `TileProgram` per programmed topology and replays it
 //!   per request — including `TileEngine::generate` (prefill + KV-cached
-//!   decode steps) — a request router + dynamic batcher, a multi-fabric
-//!   serving pool serving encode *and* generation requests, and metrics
-//!   with a prefill/per-token timing split.
+//!   decode steps) — a request router + QoS-ordered dynamic batcher, a
+//!   multi-fabric serving pool, and metrics with a prefill/per-token
+//!   timing split.
+//! * [`serve`] — **Serving API v1** (`coordinator::api`): the single
+//!   typed job surface over the pool — `Submission::{Encode,Generate}`
+//!   through one `Server::submit` → `JobHandle` with blocking wait,
+//!   polling, cancellation and streamed generation tokens; per-request
+//!   `QoS { priority, deadline, opt_level }`; a typed `ServeError`
+//!   taxonomy (no `anyhow` on the public boundary); live
+//!   `Server::metrics()`.
 //! * [`baselines`] — literature datapoints (Table 1 / Fig 10 comparators)
 //!   and executable baselines (dense CPU oracle, non-adaptive accelerator).
 //! * [`analysis`] — design-space sweeps and the table/figure renderers that
@@ -47,6 +54,9 @@ pub mod coordinator;
 pub mod model;
 pub mod runtime;
 pub mod util;
+
+/// Serving API v1 — the public typed job surface (`coordinator::api`).
+pub use coordinator::api as serve;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -13,9 +13,10 @@
 use adaptor::accel::{frequency, latency, power, resources, sim, tiling::TileConfig};
 use adaptor::accel::platform;
 use adaptor::analysis::report;
-use adaptor::coordinator::{GenerateRequest, OptLevel, Request, Server, ServerConfig};
 use adaptor::coordinator::router::ModelSpec;
+use adaptor::coordinator::{OptLevel, Server, ServerConfig};
 use adaptor::model::{presets, quant::BitWidth, weights};
+use adaptor::serve::{Priority, QoS, Submission};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
@@ -28,12 +29,38 @@ fn usage() -> ! {
          \n  report <fig5|fig8|fig9|fig10|fig11|fig12|fig13|table1|table2|ablation|all> [--out DIR]\
          \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
          \n  serve --model <preset> [--requests N] [--batch N] [--pool N] [--opt-level 0|1|2]\
-         \n  generate --model <preset> [--steps N] [--prompt-len N] [--pool N]\
+         \n        [--priority low|normal|high] [--deadline-ms N]\
+         \n  generate --model <preset> [--steps N] [--prompt-len N] [--pool N] [--stream]\
+         \n        [--priority low|normal|high]\
          \n  sweep <tiles|heads>\
          \n  presets | list-models\
          \n  validate"
     );
     std::process::exit(2);
+}
+
+/// Parse the shared `--priority` / `--deadline-ms` QoS flags.
+fn parse_qos(args: &[String]) -> QoS {
+    let mut qos = QoS::default();
+    match flag_value(args, "--priority").as_deref() {
+        None | Some("normal") => {}
+        Some("low") => qos = qos.with_priority(Priority::Low),
+        Some("high") => qos = qos.with_priority(Priority::High),
+        Some(other) => {
+            eprintln!("unknown priority '{other}' (want low, normal or high)");
+            std::process::exit(2);
+        }
+    }
+    if let Some(ms) = flag_value(args, "--deadline-ms") {
+        match ms.parse::<u64>() {
+            Ok(ms) => qos = qos.with_deadline(std::time::Duration::from_millis(ms)),
+            Err(_) => {
+                eprintln!("--deadline-ms wants a millisecond count, got '{ms}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    qos
 }
 
 fn main() -> anyhow::Result<()> {
@@ -125,22 +152,31 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             std::process::exit(2);
         }
     };
+    let qos = parse_qos(args);
     println!("starting {pool} fabric(s) for {cfg} (opt level {:?}) ...", scfg.opt_level);
     let server = Server::start(scfg)?;
-    let mut receivers = Vec::new();
+    let mut handles = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n {
         let x = weights::init_input(i as u64, cfg.seq_len, cfg.d_model);
-        receivers.push(server.submit(Request { model: model.clone(), input: x })?);
+        handles.push(server.submit(Submission::Encode { model: model.clone(), input: x }, qos)?);
     }
-    for (i, rx) in receivers.into_iter().enumerate() {
-        let resp = rx.recv()??;
-        println!("req {i:>3}: e2e {:>7.2} ms (compute {:>6.2} ms, queue {:>6.2} ms)",
-            resp.latency.as_secs_f64() * 1e3,
-            resp.compute.as_secs_f64() * 1e3,
-            resp.queue_wait.as_secs_f64() * 1e3);
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.wait() {
+            Ok(out) => {
+                let t = out.timing();
+                println!("req {i:>3}: e2e {:>7.2} ms (compute {:>6.2} ms, queue {:>6.2} ms)",
+                    t.latency.as_secs_f64() * 1e3,
+                    t.compute.as_secs_f64() * 1e3,
+                    t.queue_wait.as_secs_f64() * 1e3);
+            }
+            Err(e) => println!("req {i:>3}: {e}"),
+        }
     }
     println!("wall time: {:.2} ms for {n} requests", t0.elapsed().as_secs_f64() * 1e3);
+    // Live snapshot before shutdown — no longer the only metrics exit.
+    let live = server.metrics();
+    println!("\nlive snapshot: {} served, {:.2} req/s", live.requests(), live.throughput_rps());
     let metrics = server.shutdown()?;
     println!("\n{}", metrics.report());
     Ok(())
@@ -148,8 +184,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
 
 /// Autoregressive generation demo: serve a decoder model through the
 /// pool and greedy-decode a synthetic prompt, reporting the prefill vs
-/// per-token latency split.
+/// per-token latency split.  With `--stream`, tokens print as their
+/// decode steps complete on the fabric.
 fn cmd_generate(args: &[String]) -> anyhow::Result<()> {
+    use std::io::Write as _;
+
     let model = flag_value(args, "--model").unwrap_or_else(|| "gpt-small".into());
     let cfg = presets::by_name(&model).unwrap_or_else(|| {
         eprintln!("unknown preset '{model}'");
@@ -163,6 +202,8 @@ fn cmd_generate(args: &[String]) -> anyhow::Result<()> {
         flag_value(args, "--prompt-len").and_then(|v| v.parse().ok()).unwrap_or(8);
     let steps: usize = flag_value(args, "--steps").and_then(|v| v.parse().ok()).unwrap_or(16);
     let pool: usize = flag_value(args, "--pool").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let stream = args.iter().any(|a| a == "--stream");
+    let qos = parse_qos(args);
 
     let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
     scfg.pool_size = pool;
@@ -171,8 +212,22 @@ fn cmd_generate(args: &[String]) -> anyhow::Result<()> {
     let prompt = weights::init_input(7, prompt_len, cfg.d_model);
     let source =
         (cfg.enc_layers > 0).then(|| weights::init_input(8, cfg.seq_len, cfg.d_model));
-    let resp = server.generate(GenerateRequest { model: model.clone(), prompt, source, steps })?;
-    println!("tokens: {:?}", resp.tokens);
+    let submission = Submission::Generate { model: model.clone(), prompt, source, steps };
+    let mut handle = server.submit(submission, qos)?;
+    if stream {
+        // Tokens arrive as decode steps complete — not as a final
+        // transcript.
+        print!("tokens (streamed):");
+        while let Some(t) = handle.next_token() {
+            print!(" {}", t.token);
+            std::io::stdout().flush()?;
+        }
+        println!();
+    }
+    let resp = handle.wait()?.into_generate()?;
+    if !stream {
+        println!("tokens: {:?}", resp.tokens);
+    }
     println!(
         "prefill: {:.2} ms ({} prompt rows); {} decode steps, mean {:.2} ms/token",
         resp.prefill.as_secs_f64() * 1e3,
@@ -182,7 +237,11 @@ fn cmd_generate(args: &[String]) -> anyhow::Result<()> {
             / resp.step_times.len().max(1) as f64
             * 1e3,
     );
-    println!("e2e: {:.2} ms (queue {:.2} ms)", resp.latency.as_secs_f64() * 1e3, resp.queue_wait.as_secs_f64() * 1e3);
+    println!(
+        "e2e: {:.2} ms (queue {:.2} ms)",
+        resp.timing.latency.as_secs_f64() * 1e3,
+        resp.timing.queue_wait.as_secs_f64() * 1e3
+    );
     let metrics = server.shutdown()?;
     println!("\n{}", metrics.report());
     Ok(())

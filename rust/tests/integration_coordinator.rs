@@ -6,12 +6,17 @@ use std::time::Duration;
 
 use adaptor::coordinator::batcher::BatchPolicy;
 use adaptor::coordinator::router::ModelSpec;
-use adaptor::coordinator::{AttentionMode, Request, Server, ServerConfig, TileEngine};
+use adaptor::coordinator::{AttentionMode, Server, ServerConfig, TileEngine};
 use adaptor::model::weights::init_input;
 use adaptor::model::{presets, reference, weights, TnnConfig};
 use adaptor::runtime::default_artifact_dir;
+use adaptor::serve::{QoS, Submission};
 
 use adaptor::require_artifacts;
+
+fn encode(model: &str, input: weights::Mat) -> Submission {
+    Submission::Encode { model: model.into(), input }
+}
 
 fn policy() -> BatchPolicy {
     BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
@@ -89,11 +94,17 @@ fn server_concurrent_clients_all_answered_correctly() {
                     ("b", TnnConfig::encoder(16, 128, 2, 1), 8u64)
                 };
                 let x = init_input(t * 10 + i, mcfg.seq_len, mcfg.d_model);
-                let resp = s.infer(Request { model: model.into(), input: x.clone() }).unwrap();
+                let out = s
+                    .submit(encode(model, x.clone()), QoS::default())
+                    .unwrap()
+                    .wait()
+                    .unwrap()
+                    .into_encode()
+                    .unwrap();
                 let ws = weights::init_stack(seed, mcfg.d_model, mcfg.heads, mcfg.enc_layers);
                 let mask = reference::attention_mask(mcfg.seq_len, mcfg.seq_len, false);
                 let want = reference::encoder_stack(&x, &ws, &mask);
-                assert!(resp.output.max_abs_diff(&want) < 3e-3);
+                assert!(out.output.max_abs_diff(&want) < 3e-3);
             }
         }));
     }
@@ -117,7 +128,14 @@ fn attention_modes_agree_through_the_server() {
         cfg.attention = mode;
         let s = Server::start(cfg).unwrap();
         let x = init_input(1, 32, 256);
-        let out = s.infer(Request { model: "m".into(), input: x }).unwrap().output;
+        let out = s
+            .submit(encode("m", x), QoS::default())
+            .unwrap()
+            .wait()
+            .unwrap()
+            .into_encode()
+            .unwrap()
+            .output;
         s.shutdown().unwrap();
         out
     };
@@ -133,13 +151,13 @@ fn metrics_accumulate_latency_and_batches() {
     let mut cfg = ServerConfig::new(vec![spec]);
     cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
     let s = Server::start(cfg).unwrap();
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..6 {
         let x = init_input(i, 32, 256);
-        rxs.push(s.submit(Request { model: "m".into(), input: x }).unwrap());
+        handles.push(s.submit(encode("m", x), QoS::default()).unwrap());
     }
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
+    for h in handles {
+        h.wait().unwrap();
     }
     let m = s.shutdown().unwrap();
     assert_eq!(m.requests(), 6);

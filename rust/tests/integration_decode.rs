@@ -10,9 +10,10 @@ use std::time::Duration;
 
 use adaptor::coordinator::batcher::BatchPolicy;
 use adaptor::coordinator::router::ModelSpec;
-use adaptor::coordinator::{GenerateRequest, Request, Server, ServerConfig, TileEngine};
+use adaptor::coordinator::{Server, ServerConfig, TileEngine};
 use adaptor::model::{presets, reference, weights, TnnConfig};
 use adaptor::runtime::{artifacts_available, default_artifact_dir, Manifest};
+use adaptor::serve::{GenerateOutput, QoS, ServeError, Submission};
 
 /// Skip when the artifact set is absent or predates the decode-step
 /// artifacts (`make artifacts` regenerates them).
@@ -133,6 +134,20 @@ fn decode_step_replay_dispatches_strictly_fewer_instructions_than_prefill() {
     assert_eq!(cache.len, prompt.rows + 1, "the step advanced the cache");
 }
 
+/// Submit a generation on the v1 surface and wait for the transcript.
+fn generate(
+    server: &Server,
+    model: &str,
+    prompt: weights::Mat,
+    source: Option<weights::Mat>,
+    steps: usize,
+) -> Result<GenerateOutput, ServeError> {
+    server
+        .submit(Submission::Generate { model: model.into(), prompt, source, steps }, QoS::default())?
+        .wait()?
+        .into_generate()
+}
+
 #[test]
 fn generation_serves_through_the_pool_with_per_token_metrics() {
     require_decode_artifacts!();
@@ -144,33 +159,28 @@ fn generation_serves_through_the_pool_with_per_token_metrics() {
 
     // decoder-only generation, checked against the oracle
     let prompt = weights::init_input(31, 4, 256);
-    let resp = server
-        .generate(GenerateRequest { model: "gpt".into(), prompt: prompt.clone(), source: None, steps: 5 })
-        .unwrap();
+    let resp = generate(&server, "gpt", prompt.clone(), None, 5).unwrap();
     let want = reference::greedy_decode(&prompt, None, &gpt.decoder_weights(), 5);
     assert_eq!(resp.tokens, want.tokens);
     assert_eq!(resp.step_times.len(), 4, "steps - 1 per-token samples");
-    assert!(resp.latency >= resp.queue_wait);
+    assert!(resp.timing.latency >= resp.timing.queue_wait);
 
     // seq2seq generation through the same pool
     let source = weights::init_input(32, 32, 256);
-    let resp2 = server
-        .generate(GenerateRequest {
-            model: "s2s".into(),
-            prompt: weights::init_input(33, 3, 256),
-            source: Some(source),
-            steps: 4,
-        })
-        .unwrap();
+    let resp2 =
+        generate(&server, "s2s", weights::init_input(33, 3, 256), Some(source), 4).unwrap();
     assert_eq!(resp2.tokens.len(), 4);
 
-    // plain encode on a decoder model is an explicit error (the old
-    // silent-truncation path)
+    // plain encode on a decoder model is an explicit typed error (the
+    // old silent-truncation path)
     let err = server
-        .submit(Request { model: "gpt".into(), input: weights::init_input(34, 32, 256) })
-        .unwrap_err()
-        .to_string();
-    assert!(err.contains("decoder layers"), "{err}");
+        .submit(
+            Submission::Encode { model: "gpt".into(), input: weights::init_input(34, 32, 256) },
+            QoS::default(),
+        )
+        .unwrap_err();
+    assert!(matches!(&err, ServeError::InvalidRequest(_)), "{err:?}");
+    assert!(err.to_string().contains("decoder layers"), "{err}");
 
     let m = server.shutdown().unwrap();
     assert_eq!(m.generations, 2);
@@ -189,18 +199,103 @@ fn failed_generations_do_not_pollute_the_latency_samples() {
     cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
     cfg.fault.fail_program_for = Some("gpt".into());
     let server = Server::start(cfg).unwrap();
-    let err = server
-        .generate(GenerateRequest {
-            model: "gpt".into(),
-            prompt: weights::init_input(42, 4, 256),
-            source: None,
-            steps: 4,
-        })
-        .unwrap_err();
+    let err = generate(&server, "gpt", weights::init_input(42, 4, 256), None, 4).unwrap_err();
+    assert!(matches!(&err, ServeError::ProgramFailed(_)), "{err:?}");
     assert!(err.to_string().contains("programming registers"), "{err}");
     let m = server.shutdown().unwrap();
     assert_eq!(m.failed, 1);
     assert_eq!(m.generations, 0);
     assert!(m.prefills.is_empty(), "failed generation must not add prefill samples");
     assert!(m.decode_steps.is_empty());
+}
+
+#[test]
+fn streamed_tokens_concatenate_bit_identically_to_the_transcript() {
+    require_decode_artifacts!();
+    let gpt = ModelSpec::new("gpt", presets::gpt_small(32, 1), 61);
+    let server = Server::start(ServerConfig::new(vec![gpt.clone()])).unwrap();
+    let prompt = weights::init_input(62, 4, 256);
+
+    // non-streamed baseline transcript
+    let base = generate(&server, "gpt", prompt.clone(), None, 6).unwrap();
+
+    // streamed run: drain every token event, then take the transcript
+    let mut handle = server
+        .submit(
+            Submission::Generate {
+                model: "gpt".into(),
+                prompt: prompt.clone(),
+                source: None,
+                steps: 6,
+            },
+            QoS::default(),
+        )
+        .unwrap();
+    let mut tokens = Vec::new();
+    let mut rows: Vec<f32> = Vec::new();
+    while let Some(t) = handle.next_token() {
+        assert_eq!(t.index, tokens.len(), "tokens arrive in step order");
+        assert_eq!(t.row.len(), 256, "each event carries one d_model row");
+        tokens.push(t.token);
+        rows.extend_from_slice(&t.row);
+    }
+    let out = handle.wait().unwrap().into_generate().unwrap();
+
+    // the stream concatenates bit-identically to the final transcript…
+    assert_eq!(tokens, out.tokens);
+    assert_eq!(rows, out.rows.data);
+    // …which is bit-identical to the non-streamed replay of the same job
+    assert_eq!(out.tokens, base.tokens);
+    assert_eq!(out.rows.data, base.rows.data);
+    // and matches the dense greedy oracle
+    let want = reference::greedy_decode(&prompt, None, &gpt.decoder_weights(), 6);
+    assert_eq!(out.tokens, want.tokens);
+
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.generations, 2);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn cancellation_mid_generation_stops_cleanly_and_pool_recovers() {
+    require_decode_artifacts!();
+    let gpt = ModelSpec::new("gpt", presets::gpt_small(32, 1), 71);
+    let server = Server::start(ServerConfig::new(vec![gpt.clone()])).unwrap();
+    let prompt = weights::init_input(72, 4, 256);
+
+    // A long generation (24 of a possible 28 steps): cancel right after
+    // the first streamed token; the worker observes the flag between
+    // decode steps.
+    let mut doomed = server
+        .submit(
+            Submission::Generate {
+                model: "gpt".into(),
+                prompt: prompt.clone(),
+                source: None,
+                steps: 24,
+            },
+            QoS::default(),
+        )
+        .unwrap();
+    let first = doomed.next_token().expect("the first token streams out of the prefill");
+    assert_eq!(first.index, 0);
+    doomed.cancel();
+    match doomed.wait() {
+        Err(ServeError::Cancelled) => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+
+    // The pool serves correctly afterwards: KV cache/pool state from the
+    // cancelled run leaks into nothing.
+    let out = generate(&server, "gpt", prompt.clone(), None, 5).unwrap();
+    let want = reference::greedy_decode(&prompt, None, &gpt.decoder_weights(), 5);
+    assert_eq!(out.tokens, want.tokens, "post-cancel generation must match the oracle");
+    assert!(out.rows.max_abs_diff(&want.rows) < 5e-3);
+
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.cancelled, 1, "the cancellation must be counted");
+    assert_eq!(m.generations, 1, "a cancelled generation is not a completed one");
+    assert_eq!(m.prefills.len(), 1, "no partial generation pollutes the prefill samples");
+    assert_eq!(m.decode_steps.len(), 4, "only the successful generation's steps are sampled");
+    assert_eq!(m.requests(), 1, "cancelled generation records no e2e latency sample");
 }

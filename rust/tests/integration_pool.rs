@@ -8,11 +8,21 @@ use std::time::Duration;
 
 use adaptor::coordinator::batcher::BatchPolicy;
 use adaptor::coordinator::router::ModelSpec;
-use adaptor::coordinator::{Request, SchedulePolicy, Server, ServerConfig};
+use adaptor::coordinator::{SchedulePolicy, Server, ServerConfig};
 use adaptor::model::weights::init_input;
 use adaptor::model::{presets, reference, weights, TnnConfig};
+use adaptor::serve::{Priority, QoS, ServeError, Submission};
 
 use adaptor::require_artifacts;
+
+fn encode(model: &str, input: weights::Mat) -> Submission {
+    Submission::Encode { model: model.into(), input }
+}
+
+/// Submit-and-wait convenience on the v1 surface.
+fn infer(server: &Server, model: &str, input: weights::Mat) -> Result<weights::Mat, ServeError> {
+    Ok(server.submit(encode(model, input), QoS::default())?.wait()?.into_encode()?.output)
+}
 
 fn two_models() -> (ModelSpec, ModelSpec) {
     (
@@ -35,7 +45,7 @@ fn pool_drains_mixed_model_workload_across_fabrics() {
     require_artifacts!();
     let server = Server::start(pool_config(2, SchedulePolicy::Affinity)).expect("make artifacts");
     // submit everything up front so both fabrics get saturated
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..12u64 {
         let (model, cfg) = if i % 3 == 0 {
             ("b", TnnConfig::encoder(16, 128, 2, 1))
@@ -43,15 +53,20 @@ fn pool_drains_mixed_model_workload_across_fabrics() {
             ("a", presets::small_encoder(32, 1))
         };
         let x = init_input(i, cfg.seq_len, cfg.d_model);
-        rxs.push((i, model, cfg, x.clone(), server.submit(Request { model: model.into(), input: x }).unwrap()));
+        let h = server.submit(encode(model, x.clone()), QoS::default()).unwrap();
+        handles.push((i, model, cfg, x, h));
     }
-    for (i, model, cfg, x, rx) in rxs {
-        let resp = rx.recv().unwrap().unwrap_or_else(|e| panic!("req {i} ({model}): {e}"));
+    for (i, model, cfg, x, h) in handles {
+        let out = h
+            .wait()
+            .unwrap_or_else(|e| panic!("req {i} ({model}): {e}"))
+            .into_encode()
+            .unwrap();
         let seed = if model == "a" { 7 } else { 8 };
         let ws = weights::init_stack(seed, cfg.d_model, cfg.heads, cfg.enc_layers);
         let mask = reference::attention_mask(cfg.seq_len, cfg.seq_len, false);
         let want = reference::encoder_stack(&x, &ws, &mask);
-        assert!(resp.output.max_abs_diff(&want) < 3e-3, "req {i} wrong numerics");
+        assert!(out.output.max_abs_diff(&want) < 3e-3, "req {i} wrong numerics");
     }
     let m = server.shutdown().unwrap();
     assert_eq!(m.requests(), 12);
@@ -83,7 +98,7 @@ fn affinity_scheduling_reprograms_less_than_round_robin() {
                     TnnConfig::encoder(16, 128, 2, 1)
                 };
                 let x = init_input(round * 10 + j as u64, c.seq_len, c.d_model);
-                server.infer(Request { model: model.into(), input: x }).unwrap();
+                infer(&server, model, x).unwrap();
             }
         }
         server.shutdown().unwrap()
@@ -116,7 +131,7 @@ fn router_affinity_hint_pins_model_to_fabric() {
     let server = Server::start(cfg).unwrap();
     for i in 0..4u64 {
         let x = init_input(i, 32, 256);
-        server.infer(Request { model: "a".into(), input: x }).unwrap();
+        infer(&server, "a", x).unwrap();
     }
     let m = server.shutdown().unwrap();
     assert_eq!(m.requests(), 4);
@@ -134,21 +149,123 @@ fn program_failure_fails_batch_and_pool_recovers() {
     // "a" requests serve normally on the pool
     for i in 0..3u64 {
         let x = init_input(i, 32, 256);
-        assert!(server.infer(Request { model: "a".into(), input: x }).is_ok());
+        assert!(infer(&server, "a", x).is_ok());
     }
-    // every "b" request fails with the programming error — no silent
-    // stale-register execution, no hung reply channel
+    // every "b" request fails with the typed programming error — no
+    // silent stale-register execution, no hung reply channel
     for i in 0..2u64 {
         let x = init_input(100 + i, 16, 128);
-        let err = server.infer(Request { model: "b".into(), input: x }).unwrap_err();
+        let err = infer(&server, "b", x).unwrap_err();
+        assert!(matches!(&err, ServeError::ProgramFailed(_)), "{err:?}");
         assert!(err.to_string().contains("programming registers"), "{err}");
     }
     // and "a" keeps serving afterwards
     let x = init_input(50, 32, 256);
-    assert!(server.infer(Request { model: "a".into(), input: x }).is_ok());
+    assert!(infer(&server, "a", x).is_ok());
     let m = server.shutdown().unwrap();
     assert_eq!(m.requests(), 4);
     assert_eq!(m.failed, 2);
+}
+
+#[test]
+fn high_priority_jumps_the_queue_on_a_saturated_single_fabric() {
+    require_artifacts!();
+    // One slow-ish fabric, one request in flight at a time: priority
+    // ordering is decided entirely in the batcher's ready queue.
+    let spec = ModelSpec::new("m", presets::small_encoder(64, 4), 7);
+    let mut cfg = ServerConfig::new(vec![spec]);
+    cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    cfg.pool_size = 1;
+    cfg.queue_depth = 1;
+    let server = Server::start(cfg).unwrap();
+    let x = |i: u64| init_input(i, 64, 256);
+    // Saturate: the warmup request occupies the fabric while the rest
+    // queue behind it (submission takes µs, each compute takes ms).
+    let warm = server.submit(encode("m", x(0)), QoS::default()).unwrap();
+    let normals: Vec<_> =
+        (1..=4).map(|i| server.submit(encode("m", x(i)), QoS::default()).unwrap()).collect();
+    let highs: Vec<_> =
+        (5..=6).map(|i| server.submit(encode("m", x(i)), QoS::high()).unwrap()).collect();
+    warm.wait().unwrap();
+    // The highs were submitted LAST but must start (and finish) before
+    // every still-queued normal: their end-to-end latency is strictly
+    // below the slowest normal's (all submits happened within µs of one
+    // another, so latencies are directly comparable).
+    let high_lat: Vec<Duration> =
+        highs.into_iter().map(|h| h.wait().unwrap().timing().latency).collect();
+    let normal_lat: Vec<Duration> =
+        normals.into_iter().map(|h| h.wait().unwrap().timing().latency).collect();
+    let worst_high = *high_lat.iter().max().unwrap();
+    let worst_normal = *normal_lat.iter().max().unwrap();
+    assert!(
+        worst_high < worst_normal,
+        "high-priority latencies {high_lat:?} must stay below the slowest normal {normal_lat:?}"
+    );
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests(), 7);
+    assert_eq!(m.served_at(Priority::High), 2);
+    assert_eq!(m.served_at(Priority::Normal), 5);
+}
+
+#[test]
+fn queued_deadline_expiry_is_typed_and_counted() {
+    require_artifacts!();
+    // A request whose QoS deadline cannot be met while queued completes
+    // with ServeError::DeadlineExceeded and is counted — not served
+    // late, not dropped silently.
+    let spec = ModelSpec::new("m", presets::small_encoder(64, 4), 7);
+    let mut cfg = ServerConfig::new(vec![spec]);
+    cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    cfg.pool_size = 1;
+    cfg.queue_depth = 1;
+    let server = Server::start(cfg).unwrap();
+    let x = |i: u64| init_input(i, 64, 256);
+    let warm = server.submit(encode("m", x(0)), QoS::default()).unwrap();
+    let fillers: Vec<_> =
+        (1..=3).map(|i| server.submit(encode("m", x(i)), QoS::default()).unwrap()).collect();
+    // Queued behind ~4 multi-millisecond computes with a 1ms deadline:
+    // expires in the queue, swept out by the dispatcher.
+    let doomed = server
+        .submit(encode("m", x(9)), QoS::default().with_deadline(Duration::from_millis(1)))
+        .unwrap();
+    match doomed.wait() {
+        Err(ServeError::DeadlineExceeded { waited }) => {
+            assert!(waited >= Duration::from_millis(1), "waited {waited:?}")
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    warm.wait().unwrap();
+    for f in fillers {
+        f.wait().unwrap();
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.expired, 1, "the expiry must be counted");
+    assert_eq!(m.requests(), 4, "expired request must not count as served");
+    assert_eq!(m.failed, 0, "deadline expiry is not an execution failure");
+}
+
+#[test]
+fn cancelling_a_queued_job_completes_it_without_serving() {
+    require_artifacts!();
+    let spec = ModelSpec::new("m", presets::small_encoder(64, 4), 7);
+    let mut cfg = ServerConfig::new(vec![spec]);
+    cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    cfg.pool_size = 1;
+    cfg.queue_depth = 1;
+    let server = Server::start(cfg).unwrap();
+    let x = |i: u64| init_input(i, 64, 256);
+    let warm = server.submit(encode("m", x(0)), QoS::default()).unwrap();
+    // Low priority keeps it parked behind any other work while queued.
+    let doomed = server.submit(encode("m", x(1)), QoS::low()).unwrap();
+    doomed.cancel();
+    match doomed.wait() {
+        Err(ServeError::Cancelled) => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    warm.wait().unwrap();
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.requests(), 1, "cancelled job must not be served");
 }
 
 #[test]
@@ -160,8 +277,8 @@ fn single_fabric_pool_matches_paper_host_semantics() {
     for i in 0..3u64 {
         let xa = init_input(i, 32, 256);
         let xb = init_input(i + 10, 16, 128);
-        assert!(server.infer(Request { model: "a".into(), input: xa }).is_ok());
-        assert!(server.infer(Request { model: "b".into(), input: xb }).is_ok());
+        assert!(infer(&server, "a", xa).is_ok());
+        assert!(infer(&server, "b", xb).is_ok());
     }
     let m = server.shutdown().unwrap();
     assert_eq!(m.requests(), 6);

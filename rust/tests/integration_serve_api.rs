@@ -1,0 +1,171 @@
+//! Serving API v1 surface guard — runs WITHOUT artifacts, so CI can
+//! never ship an accidental break of the public `adaptor::serve`
+//! module.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Signature snapshot** — every public entry point is assigned to
+//!    an explicitly-typed `fn` pointer.  Changing a signature (or
+//!    removing an item) fails compilation right here, which is the
+//!    offline, no-network stand-in for `cargo semver-checks`.
+//! 2. **Semantics snapshot** — error taxonomy `Display` strings, QoS
+//!    defaults, priority ordering and the submit-side typed failures
+//!    that need no fabric (config validation happens before any worker
+//!    spawns).
+
+#![allow(clippy::type_complexity)]
+
+use std::time::Duration;
+
+use adaptor::coordinator::metrics::Metrics;
+use adaptor::coordinator::router::ModelSpec;
+use adaptor::coordinator::{Server, ServerConfig};
+use adaptor::model::presets;
+use adaptor::model::weights::Mat;
+use adaptor::serve::{
+    CancelToken, EncodeOutput, GenerateOutput, JobHandle, JobOutput, OptLevel, Priority, QoS,
+    ServeError, Submission, Timing, TokenEvent,
+};
+
+/// The compile-time API snapshot.  Every line pins one public
+/// signature; a change here is a breaking change of Serving API v1 and
+/// must be deliberate.
+#[test]
+fn public_api_snapshot() {
+    // Server lifecycle
+    let _start: fn(ServerConfig) -> Result<Server, ServeError> = Server::start;
+    let _submit: fn(&Server, Submission, QoS) -> Result<JobHandle, ServeError> = Server::submit;
+    let _metrics: fn(&Server) -> Metrics = Server::metrics;
+    let _shutdown: fn(Server) -> Result<Metrics, ServeError> = Server::shutdown;
+
+    // JobHandle
+    let _wait: fn(JobHandle) -> Result<JobOutput, ServeError> = JobHandle::wait;
+    let _poll: fn(&mut JobHandle) -> Option<&Result<JobOutput, ServeError>> = JobHandle::poll;
+    let _next_token: fn(&mut JobHandle) -> Option<TokenEvent> = JobHandle::next_token;
+    let _try_token: fn(&mut JobHandle) -> Option<TokenEvent> = JobHandle::try_token;
+    let _cancel: fn(&JobHandle) = JobHandle::cancel;
+    let _token: fn(&JobHandle) -> CancelToken = JobHandle::cancel_token;
+    let _tok_cancel: fn(&CancelToken) = CancelToken::cancel;
+    let _tok_query: fn(&CancelToken) -> bool = CancelToken::is_cancelled;
+
+    // Outputs
+    let _into_encode: fn(JobOutput) -> Result<EncodeOutput, ServeError> = JobOutput::into_encode;
+    let _into_generate: fn(JobOutput) -> Result<GenerateOutput, ServeError> =
+        JobOutput::into_generate;
+    let _timing: fn(&JobOutput) -> Timing = JobOutput::timing;
+
+    // QoS builders
+    let _qos_high: fn() -> QoS = QoS::high;
+    let _qos_low: fn() -> QoS = QoS::low;
+    let _with_priority: fn(QoS, Priority) -> QoS = QoS::with_priority;
+    let _with_deadline: fn(QoS, Duration) -> QoS = QoS::with_deadline;
+    let _with_opt: fn(QoS, OptLevel) -> QoS = QoS::with_opt_level;
+
+    // Submission accessors
+    let _model: fn(&Submission) -> &str = Submission::model;
+
+    // The typed taxonomy is exhaustive-matchable by downstream code:
+    // adding a variant is intentional API evolution, caught here.
+    let classify = |e: &ServeError| -> &'static str {
+        match e {
+            ServeError::UnknownModel(_) => "unknown-model",
+            ServeError::InvalidRequest(_) => "invalid-request",
+            ServeError::InvalidConfig(_) => "invalid-config",
+            ServeError::AffinityOutOfRange { .. } => "affinity-out-of-range",
+            ServeError::DeadlineExceeded { .. } => "deadline-exceeded",
+            ServeError::Cancelled => "cancelled",
+            ServeError::ProgramFailed(_) => "program-failed",
+            ServeError::Engine(_) => "engine",
+            ServeError::PoolLost(_) => "pool-lost",
+        }
+    };
+    assert_eq!(classify(&ServeError::Cancelled), "cancelled");
+}
+
+#[test]
+fn qos_defaults_and_priority_order_are_stable() {
+    let q = QoS::default();
+    assert_eq!(q.priority, Priority::Normal);
+    assert_eq!(q.deadline, None);
+    assert_eq!(q.opt_level, None);
+    assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+    assert_eq!(Priority::ALL, [Priority::Low, Priority::Normal, Priority::High]);
+    assert_eq!(QoS::high().priority, Priority::High);
+    let dl = QoS::default().with_deadline(Duration::from_millis(3));
+    assert_eq!(dl.deadline, Some(Duration::from_millis(3)));
+}
+
+#[test]
+fn serve_error_is_a_std_error_and_interops_with_anyhow() {
+    // ServeError must stay a real std error so callers can `?` it into
+    // anyhow (examples, main) without the coordinator depending on
+    // anyhow at its boundary.
+    fn takes_std_error(_: &(dyn std::error::Error + Send + Sync + 'static)) {}
+    let e = ServeError::UnknownModel("m".into());
+    takes_std_error(&e);
+    let as_anyhow: anyhow::Error = e.into();
+    assert!(as_anyhow.to_string().contains("unknown model 'm'"));
+    // and the reverse direction flattens context chains into Engine
+    let back: ServeError = anyhow::anyhow!("root cause").context("while replaying").into();
+    assert_eq!(back, ServeError::Engine("while replaying: root cause".into()));
+}
+
+#[test]
+fn config_failures_are_typed_without_any_fabric() {
+    // These all fail before a worker (and thus the artifact set) is
+    // touched, so this guard runs everywhere.
+    let mut zero = ServerConfig::new(vec![]);
+    zero.pool_size = 0;
+    assert!(matches!(Server::start(zero), Err(ServeError::InvalidConfig(_))));
+
+    let mut no_depth = ServerConfig::new(vec![]);
+    no_depth.queue_depth = 0;
+    assert!(matches!(Server::start(no_depth), Err(ServeError::InvalidConfig(_))));
+
+    let pinned = ModelSpec::new("pinned", presets::small_encoder(32, 1), 1).with_affinity(5);
+    let mut cfg = ServerConfig::new(vec![pinned]);
+    cfg.pool_size = 2;
+    match Server::start(cfg) {
+        Err(ServeError::AffinityOutOfRange { model, fabric, pool_size }) => {
+            assert_eq!((model.as_str(), fabric, pool_size), ("pinned", 5, 2));
+        }
+        Err(other) => panic!("expected AffinityOutOfRange, got {other:?}"),
+        Ok(_) => panic!("expected AffinityOutOfRange, got a running server"),
+    }
+
+    let dup = vec![
+        ModelSpec::new("m", presets::small_encoder(32, 1), 1),
+        ModelSpec::new("m", presets::small_encoder(32, 1), 2),
+    ];
+    assert!(matches!(
+        Server::start(ServerConfig::new(dup)),
+        Err(ServeError::InvalidConfig(_))
+    ));
+}
+
+#[test]
+fn submission_carries_its_model_name() {
+    let e = Submission::Encode { model: "enc".into(), input: Mat::zeros(1, 1) };
+    let g = Submission::Generate {
+        model: "gen".into(),
+        prompt: Mat::zeros(1, 1),
+        source: None,
+        steps: 1,
+    };
+    assert_eq!(e.model(), "enc");
+    assert_eq!(g.model(), "gen");
+}
+
+#[test]
+fn error_messages_stay_operator_readable() {
+    let msgs = [
+        ServeError::UnknownModel("bert".into()).to_string(),
+        ServeError::DeadlineExceeded { waited: Duration::from_millis(12) }.to_string(),
+        ServeError::Cancelled.to_string(),
+        ServeError::AffinityOutOfRange { model: "m".into(), fabric: 9, pool_size: 4 }.to_string(),
+    ];
+    assert_eq!(msgs[0], "unknown model 'bert'");
+    assert!(msgs[1].starts_with("deadline exceeded"), "{}", msgs[1]);
+    assert_eq!(msgs[2], "job cancelled");
+    assert!(msgs[3].contains("fabric 9"), "{}", msgs[3]);
+}
