@@ -72,15 +72,33 @@ impl ExternLayout {
         self.self_k(layer, head) + 1
     }
 
-    pub fn cross_k(&self, layer: usize, head: usize) -> usize {
-        debug_assert!(self.cross);
-        layer * self.per_layer() + self.heads * 2 + head * 2
+    /// Cross-attention K panel index.  Asking a self-attention-only
+    /// layout is a typed error in every build profile (a `debug_assert`
+    /// here used to let release builds silently alias a self panel).
+    pub fn cross_k(&self, layer: usize, head: usize) -> Result<usize, NoCrossPanels> {
+        if !self.cross {
+            return Err(NoCrossPanels);
+        }
+        Ok(layer * self.per_layer() + self.heads * 2 + head * 2)
     }
 
-    pub fn cross_v(&self, layer: usize, head: usize) -> usize {
-        self.cross_k(layer, head) + 1
+    pub fn cross_v(&self, layer: usize, head: usize) -> Result<usize, NoCrossPanels> {
+        Ok(self.cross_k(layer, head)? + 1)
     }
 }
+
+/// Cross-attention panels were requested from a layout whose topology has
+/// no encoder stack (no cross-attention, hence no cross K/V in the cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoCrossPanels;
+
+impl std::fmt::Display for NoCrossPanels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("cross-attention K/V panels requested from a self-attention-only cache layout")
+    }
+}
+
+impl std::error::Error for NoCrossPanels {}
 
 /// Device-resident K/V panels for one in-flight generation.
 ///
@@ -178,9 +196,12 @@ mod tests {
         let mut seen = std::collections::HashSet::new();
         for layer in 0..3 {
             for head in 0..4 {
-                for idx in
-                    [l.self_k(layer, head), l.self_v(layer, head), l.cross_k(layer, head), l.cross_v(layer, head)]
-                {
+                for idx in [
+                    l.self_k(layer, head),
+                    l.self_v(layer, head),
+                    l.cross_k(layer, head).unwrap(),
+                    l.cross_v(layer, head).unwrap(),
+                ] {
                     assert!(idx < l.total());
                     assert!(seen.insert(idx), "index {idx} reused");
                 }
@@ -200,6 +221,16 @@ mod tests {
     }
 
     #[test]
+    fn cross_panels_from_a_self_only_layout_are_a_typed_error() {
+        let mut cfg = seq2seq(2, 2);
+        cfg.enc_layers = 0;
+        let l = ExternLayout::of(&cfg);
+        assert_eq!(l.cross_k(0, 0), Err(NoCrossPanels));
+        assert_eq!(l.cross_v(1, 1), Err(NoCrossPanels));
+        assert!(NoCrossPanels.to_string().contains("self-attention-only"));
+    }
+
+    #[test]
     fn cache_round_trips_prefill_and_steps() {
         let cfg = seq2seq(2, 2);
         let l = ExternLayout::of(&cfg);
@@ -215,7 +246,8 @@ mod tests {
         assert_eq!(*ext[l.self_k(0, 0)], 100);
         assert_eq!(*ext[l.self_v(0, 0)], 101);
         // cross entries untouched
-        assert_eq!(*ext[l.cross_k(0, 0)], l.cross_k(0, 0) as u32);
+        let ck = l.cross_k(0, 0).unwrap();
+        assert_eq!(*ext[ck], ck as u32);
         // wrong sizes are refused
         assert!(cache.apply_step(vec![1, 2]).is_err());
         assert!(KvCache::from_prefill(&cfg, vec![0u32; 3], 1).is_err());

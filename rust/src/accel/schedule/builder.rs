@@ -740,7 +740,9 @@ impl ScheduleBuilder {
                         "qk_row",
                         vec![
                             Operand::Slot(q),
-                            Operand::Extern(layout.cross_k(layer, head)),
+                            Operand::Extern(
+                                layout.cross_k(layer, head).expect("cross gated above"),
+                            ),
                             Operand::Runtime(RuntimeId::MemMaskRow),
                             Operand::Runtime(RuntimeId::Scale),
                         ],
@@ -749,7 +751,12 @@ impl ScheduleBuilder {
                     let p = self.dispatch("softmax_row", vec![Operand::Slot(s)], row_sl.clone());
                     let o = self.dispatch(
                         "sv_row",
-                        vec![Operand::Slot(p), Operand::Extern(layout.cross_v(layer, head))],
+                        vec![
+                            Operand::Slot(p),
+                            Operand::Extern(
+                                layout.cross_v(layer, head).expect("cross gated above"),
+                            ),
+                        ],
                         row_dk.clone(),
                     );
                     let oh = self.fetch(o, row_dk.clone());

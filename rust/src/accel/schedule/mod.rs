@@ -56,9 +56,11 @@
 
 pub mod builder;
 pub mod opt;
+pub mod verify;
 
 pub use builder::ScheduleBuilder;
-pub use opt::{optimize, ArtifactInventory, OptLevel, OptReport};
+pub use opt::{optimize, ArtifactInventory, ArtifactSig, OptLevel, OptReport};
+pub use verify::{Diagnostic, Rule, Severity, VerifyError, VerifyReport};
 
 use anyhow::{anyhow, bail};
 
@@ -72,6 +74,16 @@ use crate::runtime::{Manifest, Tensor};
 pub enum AttentionMode {
     Split,
     Fused,
+}
+
+/// Which instruction stream a cache entry holds for a topology: the
+/// encoder stack, the decoder prefill (whole prompt, exports the KV
+/// cache), or the KV-cached decode step (one token row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProgramKind {
+    Encoder,
+    Prefill,
+    DecodeStep,
 }
 
 /// The synthesis-time shape constants of the fabric — everything the

@@ -45,9 +45,7 @@
 //! and caches the optimized program; the request path replays it
 //! unchanged.
 
-use std::collections::{BTreeSet, HashMap, HashSet};
-
-use anyhow::bail;
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 use super::{Operand, RuntimeId, SlotId, Step, TileProgram};
 
@@ -66,12 +64,24 @@ pub enum OptLevel {
     O2,
 }
 
+/// The manifest interface of one artifact: operand shapes in dispatch
+/// order plus output shapes.  Present only when the inventory was built
+/// from a loaded manifest; name-only inventories carry no signatures and
+/// the verifier skips signature-based checks for them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSig {
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
 /// The artifact names a fabric actually provides — fusion rewrites only
 /// into artifacts that exist, so one optimized program never outruns the
 /// artifact set it will replay against.
 #[derive(Debug, Clone)]
 pub struct ArtifactInventory {
     names: BTreeSet<String>,
+    /// Manifest signatures keyed by artifact name, when known.
+    sigs: BTreeMap<String, ArtifactSig>,
 }
 
 impl ArtifactInventory {
@@ -80,12 +90,28 @@ impl ArtifactInventory {
         I: IntoIterator<Item = S>,
         S: Into<String>,
     {
-        ArtifactInventory { names: names.into_iter().map(Into::into).collect() }
+        ArtifactInventory {
+            names: names.into_iter().map(Into::into).collect(),
+            sigs: BTreeMap::new(),
+        }
     }
 
-    /// The inventory of a loaded artifact set.
+    /// The inventory of a loaded artifact set — carries the manifest's
+    /// per-artifact shape signatures, so the static verifier can check
+    /// every dispatch interface against what the fabric really provides.
     pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
-        Self::from_names(m.artifacts.keys().cloned())
+        let mut inv = Self::from_names(m.artifacts.keys().cloned());
+        inv.sigs = m
+            .artifacts
+            .iter()
+            .map(|(name, a)| {
+                (
+                    name.clone(),
+                    ArtifactSig { inputs: a.inputs.clone(), outputs: a.outputs.clone() },
+                )
+            })
+            .collect();
+        inv
     }
 
     /// Every artifact the builder or the fusion passes can emit — for
@@ -124,6 +150,11 @@ impl ArtifactInventory {
 
     pub fn has(&self, name: &str) -> bool {
         self.names.contains(name)
+    }
+
+    /// The manifest signature of `name`, when this inventory carries one.
+    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.sigs.get(name)
     }
 }
 
@@ -193,10 +224,27 @@ impl Pipeline {
         for pass in &self.passes {
             let n = pass.run(prog, &cx);
             report.applied.push((pass.name(), n));
+            // Debug builds run the kind-agnostic static verifier after
+            // every pass: a pass that corrupts dataflow, shapes, or wave
+            // legality is caught at the pass boundary that introduced the
+            // bug, not at the end of the pipeline.
+            #[cfg(debug_assertions)]
+            {
+                let rep = super::verify::verify_structure(prog, inventory);
+                if !rep.is_clean() {
+                    let msgs: Vec<String> = rep.errors().map(ToString::to_string).collect();
+                    anyhow::bail!(
+                        "pass '{}' left the program malformed: {}",
+                        pass.name(),
+                        msgs.join("; ")
+                    );
+                }
+            }
         }
         prog.finalize();
-        validate_waves(prog)
-            .map_err(|e| e.context("optimizer produced an illegal wave partition"))?;
+        validate_waves(prog).map_err(|e| {
+            anyhow::Error::new(e).context("optimizer produced an illegal wave partition")
+        })?;
         Ok(report)
     }
 }
@@ -269,7 +317,7 @@ fn access(step: &Step) -> Access {
 /// reads), the slot WAR/WAW edges are vacuous; they exist so that
 /// [`validate_waves`], which re-runs after `CompactSlots` has recycled
 /// slot ids, catches any reuse that would make wave members race.
-fn dependence_lists(prog: &TileProgram) -> Vec<Vec<usize>> {
+pub(super) fn dependence_lists(prog: &TileProgram) -> Vec<Vec<usize>> {
     let n_hosts = prog.host_shapes.len();
     let mut slot_writer: HashMap<SlotId, usize> = HashMap::new();
     let mut slot_readers: HashMap<SlotId, Vec<usize>> = HashMap::new();
@@ -333,40 +381,14 @@ fn dependence_lists(prog: &TileProgram) -> Vec<Vec<usize>> {
 /// Check the program's wave partition: every dependence must cross a wave
 /// boundary backwards (members of one wave are mutually independent).  A
 /// program without waves is trivially valid (sequential semantics).
-pub fn validate_waves(prog: &TileProgram) -> anyhow::Result<()> {
-    if prog.waves.is_empty() {
-        return Ok(());
-    }
-    if *prog.waves.last().unwrap() != prog.steps.len() {
-        bail!(
-            "wave partition covers {} of {} steps",
-            prog.waves.last().unwrap(),
-            prog.steps.len()
-        );
-    }
-    // wave index per step position
-    let mut wave_of = vec![0usize; prog.steps.len()];
-    let mut start = 0usize;
-    for (w, end) in prog.waves.iter().enumerate() {
-        if *end <= start {
-            bail!("empty wave {w}");
-        }
-        for i in start..*end {
-            wave_of[i] = w;
-        }
-        start = *end;
-    }
-    let deps = dependence_lists(prog);
-    for (i, d) in deps.iter().enumerate() {
-        for &j in d {
-            if wave_of[j] >= wave_of[i] {
-                bail!(
-                    "step {i} (wave {}) depends on step {j} (wave {}) — not strictly earlier",
-                    wave_of[i],
-                    wave_of[j]
-                );
-            }
-        }
+///
+/// A thin typed wrapper over [`super::verify::wave_diagnostics`] — the
+/// full static verifier reports the same analysis as structured,
+/// step-anchored diagnostics.
+pub fn validate_waves(prog: &TileProgram) -> Result<(), super::verify::VerifyError> {
+    let diags = super::verify::wave_diagnostics(prog);
+    if diags.iter().any(|d| d.severity == super::verify::Severity::Error) {
+        return Err(super::verify::VerifyError::new(diags));
     }
     Ok(())
 }

@@ -1,0 +1,1112 @@
+//! The **TileProgram static verifier**: multi-analysis checking of a
+//! lowered (and possibly optimized) instruction stream, with structured,
+//! location-carrying diagnostics.
+//!
+//! Every request the engine serves is a replay of a cached program, and
+//! four optimizer passes rewrite those programs before they ever touch a
+//! backend.  The verifier is the correctness substrate under that
+//! machinery: it proves, per program, the invariants replay silently
+//! assumes, so a builder or pass bug surfaces as one failed cache-miss
+//! request (typed `ServeError::ProgramFailed`) instead of a panic or a
+//! silent numeric corruption mid-stream.  Four analyses run over one walk
+//! of the stream plus a wave pass:
+//!
+//! 1. **Def-before-use dataflow** over both operand namespaces — every
+//!    `Dispatch` slot arg, `Fetch` src and panel-op src must be dominated
+//!    by a def; values written and never read are flagged as leaks
+//!    (warnings: replay tolerates them, they are wasted transfers).
+//! 2. **Shape checking** — operand shapes are propagated symbolically
+//!    (slot defs carry `out_shape`, weights/runtime tensors have
+//!    fabric-fixed shapes) and checked against the
+//!    [`ArtifactInventory`]'s manifest signatures where bound, plus
+//!    manifest-free structural rules (fetch/host agreement, panel column
+//!    bounds, `kv_append` panel shapes) that hold for any artifact set.
+//!    Calibrated int8 scale slots may feed only the `quantize` artifact —
+//!    the quantized and float families never mix in one chain.
+//! 3. **Wave race detection** — intra-wave RAW/WAR/WAW conflicts over
+//!    slots *and* hosts, on the same dependence model the scheduler used
+//!    ([`opt::dependence_lists`]); `opt::validate_waves` is now a thin
+//!    wrapper over this analysis.
+//! 4. **Extern/export contract checking** — `Operand::Extern` cache
+//!    panels are never read after the `kv_append` that advanced them,
+//!    `export_slots` are defined exactly once and never recycled, and the
+//!    per-kind `accel::decode::ExternLayout` ordering contract holds
+//!    (extern/export counts, self-vs-cross panel regions, append→export
+//!    position agreement).
+//!
+//! The verifier runs at three points: mandatorily at program-cache
+//! insertion in `TileEngine` (zero per-request cost — once per topology),
+//! after every optimizer pass in debug builds (`opt::Pipeline::run`), and
+//! on demand via the `adaptor verify-programs` CLI sweep.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use crate::accel::decode::ExternLayout;
+
+use super::opt::ArtifactInventory;
+use super::{
+    FabricConstants, HostId, Operand, ProgramKind, RuntimeId, SlotId, Step, TileProgram,
+    WeightKind,
+};
+
+/// How bad a diagnostic is.  `Error` means replay is (or may become)
+/// incorrect; `Warning` means the program is legal but wasteful or
+/// suspicious (e.g. a computed value nothing reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Which verifier rule produced a diagnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// A slot/host is read before any step (or the caller) wrote it, or
+    /// an operand index is out of the program's declared tables.
+    UseBeforeDef,
+    /// A written value is never read (dead upload/dispatch/fetch).
+    DeadWrite,
+    /// A dispatched artifact is not in the bound artifact set.
+    UnknownArtifact,
+    /// A dispatch's operand count disagrees with the manifest signature.
+    ArityMismatch,
+    /// An operand or output shape disagrees with the manifest signature
+    /// or with a structural shape rule (fetch target, panel bounds).
+    ShapeMismatch,
+    /// A calibrated int8 scale slot flows into a non-`quantize` artifact.
+    QuantFamily,
+    /// The wave partition itself is malformed (coverage/empty waves).
+    WavePartition,
+    /// Two steps of one wave are ordered by a RAW/WAR/WAW dependence.
+    WaveRace,
+    /// An `Operand::Extern` cache-panel rule is violated.
+    ExternContract,
+    /// An `export_slots` rule is violated.
+    ExportContract,
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Rule::UseBeforeDef => "use-before-def",
+            Rule::DeadWrite => "dead-write",
+            Rule::UnknownArtifact => "unknown-artifact",
+            Rule::ArityMismatch => "arity-mismatch",
+            Rule::ShapeMismatch => "shape-mismatch",
+            Rule::QuantFamily => "quant-family",
+            Rule::WavePartition => "wave-partition",
+            Rule::WaveRace => "wave-race",
+            Rule::ExternContract => "extern-contract",
+            Rule::ExportContract => "export-contract",
+        })
+    }
+}
+
+/// One verifier finding, anchored to the offending step where one exists
+/// (`None` for whole-program properties like partition coverage).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub step: Option<usize>,
+    pub severity: Severity,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.step {
+            Some(i) => write!(f, "step {i}: {}[{}]: {}", self.severity, self.rule, self.message),
+            None => write!(f, "program: {}[{}]: {}", self.severity, self.rule, self.message),
+        }
+    }
+}
+
+/// Everything one verification run found.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.warnings().count()
+    }
+
+    /// No error-severity findings (warnings allowed).
+    pub fn is_clean(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    /// Whether any *error* carries `rule` — the mutation-corpus assertion.
+    pub fn has_error(&self, rule: Rule) -> bool {
+        self.errors().any(|d| d.rule == rule)
+    }
+}
+
+/// A failed verification: the error-severity diagnostics, as a typed
+/// `std::error::Error` so `anyhow` and `ServeError` can wrap it.
+#[derive(Debug, Clone)]
+pub struct VerifyError {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyError {
+    pub fn new(diagnostics: Vec<Diagnostic>) -> Self {
+        VerifyError { diagnostics }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let errors: Vec<String> = self
+            .diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(Diagnostic::to_string)
+            .collect();
+        write!(f, "program verification failed ({} error(s)): {}", errors.len(), errors.join("; "))
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+// ---- fabric-fixed operand shapes ----------------------------------------
+
+/// Shape of a runtime tensor — mirrors `schedule::runtime_tensor` without
+/// materializing the data (a unit test pins the two together).
+pub fn runtime_shape(id: RuntimeId, fc: &FabricConstants) -> Vec<usize> {
+    match id {
+        RuntimeId::Mask | RuntimeId::CausalMask => vec![fc.sl_max, fc.sl_max],
+        RuntimeId::MemMaskRow => vec![1, fc.sl_max],
+        RuntimeId::Scale | RuntimeId::Count => vec![1],
+        RuntimeId::Dmask => vec![fc.dmodel_max],
+        RuntimeId::ZeroDk => vec![fc.sl_max, fc.dk],
+        RuntimeId::ZeroFfn => vec![fc.sl_max, fc.ts_ffn],
+        RuntimeId::ZeroCol => vec![fc.sl_max, fc.ffn_col],
+        RuntimeId::ZeroQkv3 => vec![fc.sl_max, 3 * fc.dk],
+    }
+}
+
+/// Fabric-padded shape of a prepared weight tensor, per [`WeightKind`] —
+/// what the register file uploads for each kind, and therefore what the
+/// manifest signatures expect in the corresponding operand positions.
+pub fn weight_shape(kind: WeightKind, fc: &FabricConstants) -> Vec<usize> {
+    use WeightKind::*;
+    match kind {
+        Wq | Wk | Wv | CWq | CWk | CWv => vec![fc.ts_mha, fc.dk],
+        Bq | Bk | Bv | CBq | CBk | CBv => vec![fc.dk],
+        Wo | CWo => vec![fc.ts_ffn, fc.ts_ffn],
+        Bo | B2 | CBo | G1 | B1n | G2 | B2n | CG | CBn => vec![fc.dmodel_max],
+        W1 => vec![fc.ts_ffn, fc.ffn_col],
+        B1 => vec![fc.hidden_max],
+        W2 => vec![fc.ffn_col, fc.ts_ffn],
+        QkvPacked => vec![fc.ts_mha, 3 * fc.dk],
+        BQkvPacked => vec![3 * fc.dk],
+        DWq | DWk | DWv | DCWq => vec![fc.dmodel_max, fc.dk],
+        DWo | DCWo => vec![fc.dmodel_max, fc.dmodel_max],
+        DW1 => vec![fc.dmodel_max, fc.hidden_max],
+        DW2 => vec![fc.hidden_max, fc.dmodel_max],
+    }
+}
+
+// ---- the stream walker ---------------------------------------------------
+
+struct Analyzer<'a> {
+    prog: &'a TileProgram,
+    inventory: &'a ArtifactInventory,
+    diags: Vec<Diagnostic>,
+    /// Shape carried by the current def of each slot (`None`: unknown).
+    slot_shape: HashMap<SlotId, Option<Vec<usize>>>,
+    /// Slots whose current def is a `CalibrateScale` result.
+    scale_slots: HashSet<SlotId>,
+    /// Unread slot defs: slot → defining step.
+    pending_slot: HashMap<SlotId, usize>,
+    /// Hosts written so far (the caller pre-writes input/aux hosts).
+    host_written: Vec<bool>,
+    /// Current (possibly fetch-updated) shape of each host.
+    host_cur: Vec<Vec<usize>>,
+    /// Unread host writes: host → writing step.
+    pending_host: HashMap<HostId, usize>,
+    /// Extern panels consumed by a `kv_append`: index → appending step.
+    consumed_extern: HashMap<usize, usize>,
+    exported: HashSet<SlotId>,
+    /// Times each exported slot id was written.
+    export_defs: HashMap<SlotId, usize>,
+    /// `(step, extern index, dst slot)` of every `kv_append`.
+    kv_appends: Vec<(usize, usize, SlotId)>,
+}
+
+impl<'a> Analyzer<'a> {
+    fn new(prog: &'a TileProgram, inventory: &'a ArtifactInventory) -> Self {
+        let n_hosts = prog.host_shapes.len();
+        let mut host_written = vec![false; n_hosts];
+        if let Some(w) = host_written.get_mut(prog.input_host) {
+            *w = true;
+        }
+        for h in &prog.aux_hosts {
+            if let Some(w) = host_written.get_mut(*h) {
+                *w = true;
+            }
+        }
+        Analyzer {
+            prog,
+            inventory,
+            diags: Vec::new(),
+            slot_shape: HashMap::new(),
+            scale_slots: HashSet::new(),
+            pending_slot: HashMap::new(),
+            host_written,
+            host_cur: prog.host_shapes.clone(),
+            pending_host: HashMap::new(),
+            consumed_extern: HashMap::new(),
+            exported: prog.export_slots.iter().copied().collect(),
+            export_defs: HashMap::new(),
+            kv_appends: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, step: Option<usize>, severity: Severity, rule: Rule, message: String) {
+        self.diags.push(Diagnostic { step, severity, rule, message });
+    }
+
+    fn error(&mut self, step: usize, rule: Rule, message: String) {
+        self.push(Some(step), Severity::Error, rule, message);
+    }
+
+    fn warn(&mut self, step: usize, rule: Rule, message: String) {
+        self.push(Some(step), Severity::Warning, rule, message);
+    }
+
+    /// Record a slot def; returns whether the id was in range.
+    fn def_slot(&mut self, s: SlotId, i: usize, shape: Option<Vec<usize>>, is_scale: bool) {
+        if s >= self.prog.n_slots {
+            self.error(
+                i,
+                Rule::UseBeforeDef,
+                format!("writes slot {s}, but the program declares only {} slots", self.prog.n_slots),
+            );
+            return;
+        }
+        if let Some(prev) = self.pending_slot.insert(s, i) {
+            self.warn(
+                prev,
+                Rule::DeadWrite,
+                format!("slot {s} written at step {prev} is overwritten at step {i} without being read"),
+            );
+        }
+        self.slot_shape.insert(s, shape);
+        if is_scale {
+            self.scale_slots.insert(s);
+        } else {
+            self.scale_slots.remove(&s);
+        }
+        if self.exported.contains(&s) {
+            *self.export_defs.entry(s).or_default() += 1;
+        }
+    }
+
+    /// Resolve a slot read; returns the carried shape when the def is
+    /// known (`None` on use-before-def or unknown shape).
+    fn read_slot(&mut self, s: SlotId, i: usize, what: &str) -> Option<Vec<usize>> {
+        if s >= self.prog.n_slots {
+            self.error(
+                i,
+                Rule::UseBeforeDef,
+                format!("{what} reads slot {s}, but the program declares only {} slots", self.prog.n_slots),
+            );
+            return None;
+        }
+        self.pending_slot.remove(&s);
+        match self.slot_shape.get(&s) {
+            None => {
+                self.error(
+                    i,
+                    Rule::UseBeforeDef,
+                    format!("{what} reads slot {s} before any step writes it"),
+                );
+                None
+            }
+            Some(shape) => shape.clone(),
+        }
+    }
+
+    /// Resolve a host read; warns when nothing (program or caller) has
+    /// written it yet — replay zero-materializes such hosts, so this is
+    /// legal but almost always a builder bug.
+    fn read_host(&mut self, h: HostId, i: usize, what: &str) -> Option<Vec<usize>> {
+        if h >= self.host_cur.len() {
+            self.error(
+                i,
+                Rule::UseBeforeDef,
+                format!("{what} reads host {h}, but the program declares only {} hosts", self.host_cur.len()),
+            );
+            return None;
+        }
+        if !self.host_written[h] {
+            self.warn(
+                i,
+                Rule::UseBeforeDef,
+                format!("{what} reads host {h} before any write (replay sees zeros)"),
+            );
+        }
+        self.pending_host.remove(&h);
+        Some(self.host_cur[h].clone())
+    }
+
+    /// Record a host write.  `rmw` marks read-modify-write steps
+    /// (`AssemblePanel`) that must not count the previous write as dead.
+    fn write_host(&mut self, h: HostId, i: usize, rmw: bool) -> bool {
+        if h >= self.host_cur.len() {
+            self.error(
+                i,
+                Rule::UseBeforeDef,
+                format!("writes host {h}, but the program declares only {} hosts", self.host_cur.len()),
+            );
+            return false;
+        }
+        if rmw {
+            self.pending_host.remove(&h);
+        }
+        if let Some(prev) = self.pending_host.insert(h, i) {
+            self.warn(
+                prev,
+                Rule::DeadWrite,
+                format!("host {h} written at step {prev} is overwritten at step {i} without being read"),
+            );
+        }
+        self.host_written[h] = true;
+        true
+    }
+
+    /// Shape of one dispatch operand, with def-before-use, staleness and
+    /// quant-family checks applied as a side effect.
+    fn operand_shape(
+        &mut self,
+        artifact: &str,
+        arg: &Operand,
+        i: usize,
+    ) -> Option<Vec<usize>> {
+        match arg {
+            Operand::Slot(s) => {
+                let shape = self.read_slot(*s, i, &format!("dispatch '{artifact}'"));
+                if self.scale_slots.contains(s) && artifact != "quantize" {
+                    self.error(
+                        i,
+                        Rule::QuantFamily,
+                        format!(
+                            "calibrated int8 scale slot {s} feeds '{artifact}' — scale slots may only feed 'quantize'"
+                        ),
+                    );
+                }
+                shape
+            }
+            Operand::Weight(w) => Some(weight_shape(w.kind, &self.prog.fabric)),
+            Operand::Runtime(r) => Some(runtime_shape(*r, &self.prog.fabric)),
+            Operand::Extern(e) => {
+                if *e >= self.prog.extern_shapes.len() {
+                    self.error(
+                        i,
+                        Rule::ExternContract,
+                        format!(
+                            "extern {e} out of range ({} extern buffers declared)",
+                            self.prog.extern_shapes.len()
+                        ),
+                    );
+                    return None;
+                }
+                if let Some(&j) = self.consumed_extern.get(e) {
+                    self.error(
+                        i,
+                        Rule::ExternContract,
+                        format!(
+                            "extern {e} read at step {i} after the kv_append at step {j} advanced it — stale cache panel"
+                        ),
+                    );
+                }
+                Some(self.prog.extern_shapes[*e].clone())
+            }
+        }
+    }
+
+    fn dispatch(&mut self, artifact: &'static str, args: &[Operand], dst: SlotId, out_shape: &[usize], i: usize) {
+        if !self.inventory.has(artifact) {
+            self.warn(
+                i,
+                Rule::UnknownArtifact,
+                format!("artifact '{artifact}' is not in the bound artifact set"),
+            );
+        }
+        let sig = self.inventory.signature(artifact).cloned();
+        if let Some(sig) = &sig {
+            if args.len() != sig.inputs.len() {
+                self.error(
+                    i,
+                    Rule::ArityMismatch,
+                    format!(
+                        "artifact '{artifact}' takes {} operands per the manifest, dispatch passes {}",
+                        sig.inputs.len(),
+                        args.len()
+                    ),
+                );
+            }
+        }
+        for (j, arg) in args.iter().enumerate() {
+            let shape = self.operand_shape(artifact, arg, i);
+            if let (Some(shape), Some(sig)) = (&shape, &sig) {
+                if let Some(want) = sig.inputs.get(j) {
+                    if shape != want {
+                        self.error(
+                            i,
+                            Rule::ShapeMismatch,
+                            format!(
+                                "artifact '{artifact}' operand {j} has shape {shape:?}, manifest wants {want:?}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        if let Some(want) = sig.as_ref().and_then(|s| s.outputs.first()) {
+            if out_shape != want.as_slice() {
+                self.error(
+                    i,
+                    Rule::ShapeMismatch,
+                    format!(
+                        "artifact '{artifact}' records out_shape {out_shape:?}, manifest wants {want:?}"
+                    ),
+                );
+            }
+        }
+        if artifact == "kv_append" {
+            match args.first() {
+                Some(Operand::Extern(e)) => {
+                    if let Some(panel) = self.prog.extern_shapes.get(*e).cloned() {
+                        if out_shape != panel.as_slice() {
+                            self.error(
+                                i,
+                                Rule::ExternContract,
+                                format!(
+                                    "kv_append out_shape {out_shape:?} must match extern {e} panel shape {panel:?}"
+                                ),
+                            );
+                        }
+                        self.kv_appends.push((i, *e, dst));
+                        self.consumed_extern.insert(*e, i);
+                    }
+                }
+                _ => self.error(
+                    i,
+                    Rule::ExternContract,
+                    "kv_append's first operand must be an extern cache panel".to_string(),
+                ),
+            }
+        }
+        self.def_slot(dst, i, Some(out_shape.to_vec()), false);
+    }
+
+    fn walk(&mut self) {
+        let prog = self.prog;
+        for (i, step) in prog.steps.iter().enumerate() {
+            match step {
+                Step::Upload { host, dst } => {
+                    let shape = self.read_host(*host, i, "upload");
+                    self.def_slot(*dst, i, shape, false);
+                }
+                Step::Dispatch { artifact, args, dst, out_shape } => {
+                    self.dispatch(*artifact, args, *dst, out_shape, i);
+                }
+                Step::Fetch { src, host } => {
+                    let shape = self.read_slot(*src, i, "fetch");
+                    if !self.write_host(*host, i, false) {
+                        continue;
+                    }
+                    if let Some(shape) = shape {
+                        if shape != self.prog.host_shapes[*host] {
+                            self.error(
+                                i,
+                                Rule::ShapeMismatch,
+                                format!(
+                                    "fetch writes slot {src} (shape {shape:?}) into host {host} declared as {:?}",
+                                    self.prog.host_shapes[*host]
+                                ),
+                            );
+                        }
+                        self.host_cur[*host] = shape;
+                    }
+                }
+                Step::ExtractPanel { src, c0, width, dst } => {
+                    let src_shape = self.read_host(*src, i, "extract-panel");
+                    if let Some(src_shape) = &src_shape {
+                        if src_shape.len() != 2 {
+                            self.error(
+                                i,
+                                Rule::ShapeMismatch,
+                                format!("extract-panel src host {src} has shape {src_shape:?}, want rank 2"),
+                            );
+                        } else if c0 + width > src_shape[1] {
+                            self.error(
+                                i,
+                                Rule::ShapeMismatch,
+                                format!(
+                                    "extract-panel columns {c0}..{} exceed src host {src} width {}",
+                                    c0 + width,
+                                    src_shape[1]
+                                ),
+                            );
+                        }
+                    }
+                    if !self.write_host(*dst, i, false) {
+                        continue;
+                    }
+                    if let Some(src_shape) = &src_shape {
+                        if src_shape.len() == 2 {
+                            let want = vec![src_shape[0], *width];
+                            if self.prog.host_shapes[*dst] != want {
+                                self.error(
+                                    i,
+                                    Rule::ShapeMismatch,
+                                    format!(
+                                        "extract-panel dst host {dst} declared as {:?}, panel is {want:?}",
+                                        self.prog.host_shapes[*dst]
+                                    ),
+                                );
+                            }
+                            self.host_cur[*dst] = want;
+                        }
+                    }
+                }
+                Step::AssemblePanel { src, dst, c0 } => {
+                    let src_shape = self.read_host(*src, i, "assemble-panel");
+                    if !self.write_host(*dst, i, true) {
+                        continue;
+                    }
+                    let dst_shape = self.host_cur[*dst].clone();
+                    if let Some(src_shape) = &src_shape {
+                        if src_shape.len() == 2 && dst_shape.len() == 2 {
+                            if c0 + src_shape[1] > dst_shape[1] || src_shape[0] > dst_shape[0] {
+                                self.error(
+                                    i,
+                                    Rule::ShapeMismatch,
+                                    format!(
+                                        "assemble-panel writes {src_shape:?} at column {c0} of host {dst} shaped {dst_shape:?}"
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+                Step::CalibrateScale { src, dst } => {
+                    self.read_host(*src, i, "calibrate-scale");
+                    self.def_slot(*dst, i, Some(vec![1]), true);
+                }
+            }
+        }
+        // Leaks: defs still unread at the end of the stream.
+        let mut dead_slots: Vec<(usize, SlotId)> = self
+            .pending_slot
+            .iter()
+            .filter(|(s, _)| !self.exported.contains(s))
+            .map(|(s, i)| (*i, *s))
+            .collect();
+        dead_slots.sort_unstable();
+        for (i, s) in dead_slots {
+            self.warn(i, Rule::DeadWrite, format!("slot {s} written at step {i} is never read"));
+        }
+        let mut dead_hosts: Vec<(usize, HostId)> = self
+            .pending_host
+            .iter()
+            .filter(|(h, _)| **h != self.prog.output_host)
+            .map(|(h, i)| (*i, *h))
+            .collect();
+        dead_hosts.sort_unstable();
+        for (i, h) in dead_hosts {
+            self.warn(i, Rule::DeadWrite, format!("host {h} written at step {i} is never read"));
+        }
+    }
+
+    /// Export-table rules that hold for every program kind.
+    fn check_exports(&mut self) {
+        let mut seen: HashSet<SlotId> = HashSet::new();
+        for s in self.prog.export_slots.clone() {
+            if !seen.insert(s) {
+                self.push(
+                    None,
+                    Severity::Error,
+                    Rule::ExportContract,
+                    format!("export slot {s} is listed more than once"),
+                );
+                continue;
+            }
+            if s >= self.prog.n_slots {
+                self.push(
+                    None,
+                    Severity::Error,
+                    Rule::ExportContract,
+                    format!("export slot {s} out of range ({} slots declared)", self.prog.n_slots),
+                );
+                continue;
+            }
+            match self.export_defs.get(&s).copied().unwrap_or(0) {
+                0 => self.push(
+                    None,
+                    Severity::Error,
+                    Rule::ExportContract,
+                    format!("export slot {s} is never written — replay would hand back a freed buffer"),
+                ),
+                1 => {}
+                n => self.push(
+                    None,
+                    Severity::Error,
+                    Rule::ExportContract,
+                    format!(
+                        "export slot {s} is written {n} times — its id was recycled despite being exported"
+                    ),
+                ),
+            }
+        }
+    }
+
+    /// Kind-specific extern/export layout contracts
+    /// (`accel::decode::ExternLayout` is the index authority).
+    fn check_kind(&mut self, kind: ProgramKind) {
+        let prog = self.prog;
+        let layout = ExternLayout::of(&prog.cfg);
+        match kind {
+            ProgramKind::Encoder => {
+                if !prog.extern_shapes.is_empty() {
+                    self.push(
+                        None,
+                        Severity::Error,
+                        Rule::ExternContract,
+                        format!(
+                            "encoder program declares {} extern buffers, want 0",
+                            prog.extern_shapes.len()
+                        ),
+                    );
+                }
+                if !prog.export_slots.is_empty() {
+                    self.push(
+                        None,
+                        Severity::Error,
+                        Rule::ExportContract,
+                        format!("encoder program exports {} slots, want 0", prog.export_slots.len()),
+                    );
+                }
+            }
+            ProgramKind::Prefill => {
+                if !prog.extern_shapes.is_empty() {
+                    self.push(
+                        None,
+                        Severity::Error,
+                        Rule::ExternContract,
+                        format!(
+                            "prefill program declares {} extern buffers, want 0",
+                            prog.extern_shapes.len()
+                        ),
+                    );
+                }
+                if prog.export_slots.len() != layout.total() {
+                    self.push(
+                        None,
+                        Severity::Error,
+                        Rule::ExportContract,
+                        format!(
+                            "prefill exports {} K/V panels, ExternLayout wants {}",
+                            prog.export_slots.len(),
+                            layout.total()
+                        ),
+                    );
+                }
+            }
+            ProgramKind::DecodeStep => {
+                if prog.extern_shapes.len() != layout.total() {
+                    self.push(
+                        None,
+                        Severity::Error,
+                        Rule::ExternContract,
+                        format!(
+                            "decode-step declares {} extern buffers, ExternLayout wants {}",
+                            prog.extern_shapes.len(),
+                            layout.total()
+                        ),
+                    );
+                }
+                if prog.export_slots.len() != layout.step_exports() {
+                    self.push(
+                        None,
+                        Severity::Error,
+                        Rule::ExportContract,
+                        format!(
+                            "decode-step exports {} panels, ExternLayout wants {}",
+                            prog.export_slots.len(),
+                            layout.step_exports()
+                        ),
+                    );
+                }
+                let per = layout.per_layer();
+                let appended: HashSet<SlotId> =
+                    self.kv_appends.iter().map(|(_, _, dst)| *dst).collect();
+                for (i, e, dst) in self.kv_appends.clone() {
+                    if per == 0 {
+                        continue;
+                    }
+                    let rem = e % per;
+                    if rem >= 2 * layout.heads {
+                        self.error(
+                            i,
+                            Rule::ExternContract,
+                            format!(
+                                "kv_append consumes cross-attention panel {e} — only self K/V panels are appended"
+                            ),
+                        );
+                        continue;
+                    }
+                    let pos = ((e / per) * layout.heads + rem / 2) * 2 + rem % 2;
+                    match prog.export_slots.get(pos) {
+                        Some(&want) if want != dst => self.error(
+                            i,
+                            Rule::ExportContract,
+                            format!(
+                                "kv_append result slot {dst} for panel {e} should be export {pos}, which lists slot {want}"
+                            ),
+                        ),
+                        _ => {}
+                    }
+                }
+                for &s in &prog.export_slots {
+                    if self.export_defs.get(&s).copied().unwrap_or(0) == 1 && !appended.contains(&s)
+                    {
+                        self.push(
+                            None,
+                            Severity::Error,
+                            Rule::ExportContract,
+                            format!("decode-step export slot {s} is not a kv_append result"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---- the wave analysis ---------------------------------------------------
+
+/// Wave-partition and intra-wave race diagnostics on the exact dependence
+/// model the scheduler used.  Empty for an unscheduled program
+/// (sequential semantics are trivially race-free).
+pub fn wave_diagnostics(prog: &TileProgram) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if prog.waves.is_empty() {
+        return diags;
+    }
+    let covered = *prog.waves.last().unwrap();
+    if covered != prog.steps.len() {
+        diags.push(Diagnostic {
+            step: None,
+            severity: Severity::Error,
+            rule: Rule::WavePartition,
+            message: format!("wave partition covers {covered} of {} steps", prog.steps.len()),
+        });
+        return diags;
+    }
+    let mut wave_of = vec![0usize; prog.steps.len()];
+    let mut start = 0usize;
+    for (w, &end) in prog.waves.iter().enumerate() {
+        if end <= start || end > prog.steps.len() {
+            diags.push(Diagnostic {
+                step: None,
+                severity: Severity::Error,
+                rule: Rule::WavePartition,
+                message: format!("malformed wave {w} (runs {start}..{end})"),
+            });
+            return diags;
+        }
+        for slot in wave_of.iter_mut().take(end).skip(start) {
+            *slot = w;
+        }
+        start = end;
+    }
+    let deps = super::opt::dependence_lists(prog);
+    for (i, d) in deps.iter().enumerate() {
+        for &j in d {
+            if wave_of[j] >= wave_of[i] {
+                diags.push(Diagnostic {
+                    step: Some(i),
+                    severity: Severity::Error,
+                    rule: Rule::WaveRace,
+                    message: format!(
+                        "step {i} (wave {}) depends on step {j} (wave {}) — not strictly earlier",
+                        wave_of[i], wave_of[j]
+                    ),
+                });
+            }
+        }
+    }
+    diags
+}
+
+// ---- entry points --------------------------------------------------------
+
+/// Kind-agnostic verification: dataflow, shapes, waves and the generic
+/// extern/export rules — everything that holds for any [`TileProgram`]
+/// regardless of which program flavor it is.  This is what
+/// `opt::Pipeline::run` checks after every pass in debug builds.
+pub fn verify_structure(prog: &TileProgram, inventory: &ArtifactInventory) -> VerifyReport {
+    let mut a = Analyzer::new(prog, inventory);
+    a.walk();
+    a.check_exports();
+    let mut diags = a.diags;
+    diags.extend(wave_diagnostics(prog));
+    VerifyReport { diagnostics: diags }
+}
+
+/// Full verification of one cached program: everything in
+/// [`verify_structure`] plus the `kind`-specific
+/// `accel::decode::ExternLayout` contracts.
+pub fn verify(prog: &TileProgram, kind: ProgramKind, inventory: &ArtifactInventory) -> VerifyReport {
+    let mut a = Analyzer::new(prog, inventory);
+    a.walk();
+    a.check_exports();
+    a.check_kind(kind);
+    let mut diags = a.diags;
+    diags.extend(wave_diagnostics(prog));
+    VerifyReport { diagnostics: diags }
+}
+
+/// [`verify`] as a hard gate: `Err` when any error-severity diagnostic
+/// exists — the program-cache insertion check.
+pub fn verify_program(
+    prog: &TileProgram,
+    kind: ProgramKind,
+    inventory: &ArtifactInventory,
+) -> Result<VerifyReport, VerifyError> {
+    let report = verify(prog, kind, inventory);
+    if report.is_clean() {
+        Ok(report)
+    } else {
+        Err(VerifyError::new(report.diagnostics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::opt::{optimize, ArtifactInventory, OptLevel};
+    use super::super::{
+        FabricConstants, Operand, ProgramKind, ScheduleBuilder, Step, TileProgram,
+    };
+    use super::*;
+    use crate::model::presets;
+
+    fn fc() -> FabricConstants {
+        FabricConstants::artifact_default()
+    }
+
+    fn inv() -> ArtifactInventory {
+        ArtifactInventory::assume_all()
+    }
+
+    fn encoder(level: OptLevel) -> TileProgram {
+        let mut p = ScheduleBuilder::new(fc(), presets::small_encoder(32, 2)).unwrap().build();
+        optimize(&mut p, level, &inv()).unwrap();
+        p
+    }
+
+    fn step_program() -> TileProgram {
+        ScheduleBuilder::new(fc(), presets::gpt_small(32, 2)).unwrap().build_step()
+    }
+
+    const ALL_RUNTIME_IDS: [super::super::RuntimeId; 10] = {
+        use super::super::RuntimeId::*;
+        [Mask, CausalMask, MemMaskRow, Scale, Dmask, Count, ZeroDk, ZeroFfn, ZeroCol, ZeroQkv3]
+    };
+
+    #[test]
+    fn runtime_shapes_match_the_materialized_tensors() {
+        let cfg = presets::small_encoder(32, 1);
+        let f = fc();
+        for id in ALL_RUNTIME_IDS {
+            assert_eq!(
+                runtime_shape(id, &f),
+                super::super::runtime_tensor(id, &cfg, &f).shape,
+                "{id:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimized_encoder_programs_verify_clean() {
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let p = encoder(level);
+            let report = verify(&p, ProgramKind::Encoder, &inv());
+            assert!(
+                report.is_clean(),
+                "{level:?}: {:?}",
+                report.errors().collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn swapped_slot_is_use_before_def() {
+        let mut p = encoder(OptLevel::O0);
+        // Replace the first dispatch's slot operand with a slot that is
+        // only defined much later in the stream.
+        let late = p
+            .steps
+            .iter()
+            .rev()
+            .find_map(|s| match s {
+                Step::Dispatch { dst, .. } => Some(*dst),
+                _ => None,
+            })
+            .unwrap();
+        let corrupted = p
+            .steps
+            .iter_mut()
+            .find_map(|s| match s {
+                Step::Dispatch { args, .. } => args.iter_mut().find_map(|a| match a {
+                    Operand::Slot(slot) => {
+                        *slot = late;
+                        Some(())
+                    }
+                    _ => None,
+                }),
+                _ => None,
+            });
+        assert!(corrupted.is_some());
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::UseBeforeDef));
+        assert!(report.errors().any(|d| d.step.is_some()), "diagnostic must name a step");
+    }
+
+    #[test]
+    fn forged_single_wave_partition_races() {
+        let mut p = encoder(OptLevel::O1);
+        p.waves = vec![p.steps.len()];
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::WaveRace));
+    }
+
+    #[test]
+    fn partial_wave_coverage_is_flagged() {
+        let mut p = encoder(OptLevel::O1);
+        p.waves = vec![1];
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::WavePartition));
+    }
+
+    #[test]
+    fn merging_adjacent_waves_races_a_member() {
+        // ASAP scheduling guarantees every wave-k member depends on some
+        // wave-(k-1) member, so claiming wave k's members into k-1 (the
+        // "reordered wave member" corruption) must trip the race rule.
+        let mut p = encoder(OptLevel::O1);
+        assert!(p.waves.len() >= 2);
+        let cut = p.waves.len() - 2;
+        p.waves.remove(cut);
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::WaveRace));
+        assert!(report.errors().any(|d| d.rule == Rule::WaveRace && d.step.is_some()));
+    }
+
+    #[test]
+    fn decode_step_program_verifies_clean_at_all_levels() {
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let mut p = step_program();
+            optimize(&mut p, level, &inv()).unwrap();
+            let report = verify(&p, ProgramKind::DecodeStep, &inv());
+            assert!(
+                report.is_clean(),
+                "{level:?}: {:?}",
+                report.errors().collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn stale_extern_read_after_kv_append_is_flagged() {
+        let mut p = step_program();
+        let (idx, _) = p
+            .steps
+            .iter()
+            .enumerate()
+            .find_map(|(i, s)| match s {
+                Step::Dispatch { artifact: "kv_append", args, .. } => match args.first() {
+                    Some(Operand::Extern(e)) => Some((*e, i)),
+                    _ => None,
+                },
+                _ => None,
+            })
+            .unwrap();
+        // A late reader of the pre-append panel: stale by construction.
+        let dst = p.n_slots;
+        p.n_slots += 1;
+        p.steps.push(Step::Dispatch {
+            artifact: "qk_row",
+            args: vec![Operand::Extern(idx)],
+            dst,
+            out_shape: vec![1, p.fabric.sl_max],
+        });
+        let report = verify(&p, ProgramKind::DecodeStep, &inv());
+        assert!(report.has_error(Rule::ExternContract));
+    }
+
+    #[test]
+    fn scale_slot_into_non_quantize_artifact_is_flagged() {
+        let f = fc();
+        let mut p = ScheduleBuilder::new(f, presets::small_encoder(32, 1))
+            .unwrap()
+            .quantized(true)
+            .build();
+        // Redirect the quantize dispatch to a different artifact: the
+        // calibrated scale now feeds a float-family kernel.
+        let hit = p.steps.iter_mut().find_map(|s| match s {
+            Step::Dispatch { artifact, .. } if *artifact == "quantize" => {
+                *artifact = "softmax";
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::QuantFamily));
+    }
+
+    #[test]
+    fn diagnostics_render_step_rule_and_severity() {
+        let d = Diagnostic {
+            step: Some(7),
+            severity: Severity::Error,
+            rule: Rule::WaveRace,
+            message: "x".into(),
+        };
+        let s = d.to_string();
+        assert!(s.contains("step 7"));
+        assert!(s.contains("error"));
+        assert!(s.contains("wave-race"));
+        let e = VerifyError::new(vec![d]);
+        assert!(e.to_string().contains("1 error(s)"));
+    }
+}

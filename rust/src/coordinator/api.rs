@@ -233,6 +233,15 @@ impl From<anyhow::Error> for ServeError {
     }
 }
 
+/// A program that fails static verification at cache-insertion time is a
+/// programming failure: the fabric never sees it, the one request that
+/// forced the build fails typed.
+impl From<crate::accel::schedule::VerifyError> for ServeError {
+    fn from(e: crate::accel::schedule::VerifyError) -> Self {
+        ServeError::ProgramFailed(e.to_string())
+    }
+}
+
 /// Wall-clock decomposition every completed job reports:
 /// `latency == queue_wait + compute` by construction.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]

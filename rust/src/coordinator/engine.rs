@@ -55,7 +55,7 @@ use crate::model::weights::{DecoderLayerWeights, LayerWeights, Mat};
 use crate::model::TnnConfig;
 use crate::runtime::{DeviceTensor, Executor, Tensor, TensorPool};
 
-pub use crate::accel::schedule::{AttentionMode, OptLevel};
+pub use crate::accel::schedule::{AttentionMode, OptLevel, ProgramKind};
 
 /// One layer's weights, pre-tiled into fabric-shaped panels and parked
 /// **device-resident** (§Perf iteration 2) — the substrate analog of the
@@ -295,16 +295,6 @@ impl TopologyKey {
     }
 }
 
-/// Which instruction stream a cache entry holds for a topology: the
-/// encoder stack, the decoder prefill (whole prompt, exports the KV
-/// cache), or the KV-cached decode step (one token row).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum ProgramKind {
-    Encoder,
-    Prefill,
-    DecodeStep,
-}
-
 /// Program cache key: the programmed topology plus the engine's execution
 /// flags (each flag selects a genuinely different instruction stream), the
 /// optimization level (each level a different *optimized* stream) and the
@@ -510,6 +500,10 @@ impl TileEngine {
         // stream (fusion is gated on the manifest's actual inventory).
         // A validation failure fails this one request, not the fabric.
         schedule::optimize(&mut program, self.opt_level, &self.inventory)?;
+        // Static verification gates cache insertion: a malformed program
+        // (builder bug, bad opt pass, IR drift) fails here as a typed
+        // `ProgramFailed` before first dispatch, at zero per-request cost.
+        schedule::verify::verify_program(&program, kind, &self.inventory)?;
         let runtime = self.runtime_for(cfg)?;
         let cached = Rc::new(CachedProgram { program, runtime });
         let mut programs = self.programs.borrow_mut();

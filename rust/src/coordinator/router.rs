@@ -72,7 +72,7 @@ impl Router {
     /// Register a model; refuses topologies the fabric cannot hold, naming
     /// every register that exceeds its synthesis maximum.
     pub fn register(&mut self, spec: ModelSpec) -> Result<(), ServeError> {
-        spec.cfg.validate_for_execution().map_err(ServeError::InvalidConfig)?;
+        spec.cfg.validate_for_execution().map_err(|e| ServeError::InvalidConfig(e.to_string()))?;
         if let Some(m) = &self.maxima {
             let mut over = Vec::new();
             if spec.cfg.seq_len > m.seq_len {

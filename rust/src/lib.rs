@@ -17,9 +17,13 @@
 //!   per topology (encoder, decoder **prefill**, and single-token
 //!   **decode-step** flavors), plus `accel::schedule::opt` — the pass
 //!   pipeline (transfer dedup, dispatch fusion, wave scheduling, slot
-//!   compaction) the engine runs before caching a program — and
-//!   `accel::decode` — the device-resident KV cache behind KV-cached
-//!   autoregressive generation.
+//!   compaction) the engine runs before caching a program,
+//!   `accel::schedule::verify` — the static verifier (def-before-use
+//!   dataflow, manifest shape/arity checks, intra-wave race detection,
+//!   KV extern/export contracts) gating program-cache insertion and the
+//!   `adaptor verify-programs` CI sweep — and `accel::decode` — the
+//!   device-resident KV cache behind KV-cached autoregressive
+//!   generation.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (`artifacts/*.hlo.txt`
 //!   lowered once by `python/compile/aot.py`; Python is never on the
 //!   request path), plus the `FabricBackend` trait a `TileProgram` replays

@@ -7,6 +7,7 @@
 //!   sweep tiles|heads                  design-space sweeps (Fig 5/8)
 //!   presets                            list model presets
 //!   validate                           Table-2 style validation rows
+//!   verify-programs                    static-verify preset programs
 //!
 //! Arg parsing is in-tree (offline build — no clap; see util/).
 
@@ -34,7 +35,8 @@ fn usage() -> ! {
          \n        [--priority low|normal|high]\
          \n  sweep <tiles|heads>\
          \n  presets | list-models\
-         \n  validate"
+         \n  validate\
+         \n  verify-programs [--model <preset>]"
     );
     std::process::exit(2);
 }
@@ -73,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("presets") | Some("list-models") => cmd_presets(),
         Some("validate") => cmd_validate(),
+        Some("verify-programs") => cmd_verify_programs(&args[1..]),
         Some("gantt") => cmd_gantt(&args[1..]),
         _ => usage(),
     }
@@ -269,6 +272,82 @@ fn cmd_presets() -> anyhow::Result<()> {
 
 fn cmd_validate() -> anyhow::Result<()> {
     println!("{}", report::render("table2").unwrap());
+    Ok(())
+}
+
+/// Statically verify every executable preset topology × program kind ×
+/// opt level with `accel::schedule::verify` — the CI sweep.  With a
+/// loaded artifact manifest the dispatch interfaces are checked against
+/// the real signatures; without one the artifact-free subset runs
+/// (dataflow, waves, KV contracts — signature checks skip).
+fn cmd_verify_programs(args: &[String]) -> anyhow::Result<()> {
+    use adaptor::accel::schedule::{
+        optimize, verify, ArtifactInventory, FabricConstants, ProgramKind, ScheduleBuilder,
+    };
+    use adaptor::runtime::Manifest;
+
+    let only = flag_value(args, "--model");
+    let (fc, inventory) = match Manifest::load(adaptor::runtime::default_artifact_dir()) {
+        Ok(m) => {
+            println!("artifact manifest loaded: dispatch signature checks on");
+            (FabricConstants::from_manifest(&m), ArtifactInventory::from_manifest(&m))
+        }
+        Err(_) => {
+            println!("no artifact set: running the artifact-free sweep (signature checks off)");
+            (FabricConstants::artifact_default(), ArtifactInventory::assume_all())
+        }
+    };
+
+    let levels = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+    let (mut programs, mut errors, mut warnings) = (0usize, 0usize, 0usize);
+    for (name, cfg) in presets::all() {
+        if only.as_deref().is_some_and(|m| m != name) {
+            continue;
+        }
+        if let Err(why) = fc.check(&cfg) {
+            println!("{name:<20} skipped: {why}");
+            continue;
+        }
+        let mut kinds: Vec<ProgramKind> = Vec::new();
+        if cfg.enc_layers > 0 {
+            kinds.push(ProgramKind::Encoder);
+        }
+        if cfg.dec_layers > 0 {
+            kinds.extend([ProgramKind::Prefill, ProgramKind::DecodeStep]);
+        }
+        for kind in kinds {
+            // The encoder stream has a quantized flavor; decoder lowering
+            // is always the split f32 chain.
+            let flavors: &[bool] =
+                if kind == ProgramKind::Encoder { &[false, true] } else { &[false] };
+            for &quantized in flavors {
+                for level in levels {
+                    let builder = ScheduleBuilder::new(fc, cfg)?;
+                    let mut p = match kind {
+                        ProgramKind::Encoder => builder.quantized(quantized).build(),
+                        ProgramKind::Prefill => builder.build_prefill(),
+                        ProgramKind::DecodeStep => builder.build_step(),
+                    };
+                    optimize(&mut p, level, &inventory)?;
+                    let report = verify::verify(&p, kind, &inventory);
+                    programs += 1;
+                    errors += report.error_count();
+                    warnings += report.warning_count();
+                    if !report.diagnostics.is_empty() {
+                        let q = if quantized { " int8" } else { "" };
+                        println!("{name} {kind:?} {level:?}{q}:");
+                        for d in &report.diagnostics {
+                            println!("  {d}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!("verified {programs} program(s): {errors} error(s), {warnings} warning(s)");
+    if errors > 0 {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

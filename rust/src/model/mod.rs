@@ -13,6 +13,40 @@ pub mod quant;
 pub mod reference;
 pub mod weights;
 
+/// Why a [`TnnConfig`] is structurally unusable — the typed causes behind
+/// `validate`/`validate_for_execution`, so serving-boundary errors wrap a
+/// matchable reason instead of a pre-formatted string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigError {
+    /// Some dimension register (seq_len/heads/d_model/hidden) is zero.
+    ZeroDimension,
+    /// Neither an encoder nor a decoder stack.
+    NoLayers,
+    /// The numeric engine requires `d_model % heads == 0`.
+    HeadsDontDivide { d_model: usize, heads: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroDimension => f.write_str("all dimensions must be nonzero"),
+            ConfigError::NoLayers => f.write_str("need at least one encoder or decoder layer"),
+            ConfigError::HeadsDontDivide { d_model, heads } => {
+                write!(f, "d_model {d_model} not divisible by heads {heads}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Pre-typed-error call sites (`Result<(), String>` chains) keep working.
+impl From<ConfigError> for String {
+    fn from(e: ConfigError) -> Self {
+        e.to_string()
+    }
+}
+
 /// A transformer topology — exactly the paper's runtime-programmable
 /// parameter set (§3.12 configuration registers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,26 +86,24 @@ impl TnnConfig {
         self.enc_layers + self.dec_layers
     }
 
-    /// Structural sanity; returns a human-readable reason on failure.
-    pub fn validate(&self) -> std::result::Result<(), String> {
+    /// Structural sanity; returns the typed reason on failure (its
+    /// `Display` is the human-readable message).
+    pub fn validate(&self) -> std::result::Result<(), ConfigError> {
         if self.seq_len == 0 || self.heads == 0 || self.d_model == 0 || self.hidden == 0 {
-            return Err("all dimensions must be nonzero".into());
+            return Err(ConfigError::ZeroDimension);
         }
         if self.enc_layers == 0 && self.dec_layers == 0 {
-            return Err("need at least one encoder or decoder layer".into());
+            return Err(ConfigError::NoLayers);
         }
         Ok(())
     }
 
     /// Strict divisibility requirements of the *numeric* engine (the
     /// analytical/simulated models accept anything `validate` accepts).
-    pub fn validate_for_execution(&self) -> std::result::Result<(), String> {
+    pub fn validate_for_execution(&self) -> std::result::Result<(), ConfigError> {
         self.validate()?;
         if self.d_model % self.heads != 0 {
-            return Err(format!(
-                "d_model {} not divisible by heads {}",
-                self.d_model, self.heads
-            ));
+            return Err(ConfigError::HeadsDontDivide { d_model: self.d_model, heads: self.heads });
         }
         Ok(())
     }
@@ -135,9 +167,23 @@ mod tests {
     fn zero_dims_rejected() {
         let mut c = TnnConfig::encoder(64, 768, 12, 1);
         c.seq_len = 0;
-        assert!(c.validate().is_err());
+        assert_eq!(c.validate(), Err(ConfigError::ZeroDimension));
         let c2 = TnnConfig { enc_layers: 0, dec_layers: 0, ..TnnConfig::encoder(64, 768, 12, 1) };
-        assert!(c2.validate().is_err());
+        assert_eq!(c2.validate(), Err(ConfigError::NoLayers));
+    }
+
+    #[test]
+    fn config_errors_render_the_historical_messages() {
+        assert_eq!(ConfigError::ZeroDimension.to_string(), "all dimensions must be nonzero");
+        assert_eq!(
+            ConfigError::NoLayers.to_string(),
+            "need at least one encoder or decoder layer"
+        );
+        let e = TnnConfig::encoder(64, 200, 3, 2).validate_for_execution().unwrap_err();
+        assert_eq!(e, ConfigError::HeadsDontDivide { d_model: 200, heads: 3 });
+        assert_eq!(e.to_string(), "d_model 200 not divisible by heads 3");
+        let s: String = e.into();
+        assert!(s.contains("not divisible"));
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Integration: the static verifier over the public schedule surface.
+//!
+//! Two halves:
+//!
+//! * a **sweep** — every preset topology executable on the default fabric
+//!   × applicable `ProgramKind` × opt level must verify clean (the same
+//!   matrix `adaptor verify-programs` and the CI job run);
+//! * a **mutation corpus** — deliberate IR corruptions applied through
+//!   the public program surface, each of which the verifier must reject
+//!   with a diagnostic naming the offending step and rule.
+//!
+//! Artifact-free on purpose: the inventory is `assume_all()`, so the
+//! manifest-signature rules (arity/shape vs the AOT interface) stay
+//! quiet and everything here runs in CI without `make artifacts`.
+
+use adaptor::accel::schedule::{
+    optimize, verify, ArtifactInventory, FabricConstants, OptLevel, Operand, ProgramKind, Rule,
+    ScheduleBuilder, Step, TileProgram,
+};
+use adaptor::model::presets;
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+fn inv() -> ArtifactInventory {
+    ArtifactInventory::assume_all()
+}
+
+const LEVELS: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+
+#[test]
+fn every_executable_preset_program_verifies_clean_at_all_levels() {
+    let mut verified = 0usize;
+    for (name, cfg) in presets::all() {
+        if fc().check(&cfg).is_err() {
+            continue; // analytical-only topologies (e.g. d_model % heads != 0)
+        }
+        let mut kinds = Vec::new();
+        if cfg.enc_layers > 0 {
+            kinds.push(ProgramKind::Encoder);
+        }
+        if cfg.dec_layers > 0 {
+            kinds.extend([ProgramKind::Prefill, ProgramKind::DecodeStep]);
+        }
+        for kind in kinds {
+            for level in LEVELS {
+                let builder = ScheduleBuilder::new(fc(), cfg).unwrap();
+                let mut p = match kind {
+                    ProgramKind::Encoder => builder.build(),
+                    ProgramKind::Prefill => builder.build_prefill(),
+                    ProgramKind::DecodeStep => builder.build_step(),
+                };
+                optimize(&mut p, level, &inv()).unwrap();
+                let report = verify::verify(&p, kind, &inv());
+                assert!(
+                    report.is_clean(),
+                    "{name} {kind:?} {level:?}: {:?}",
+                    report.errors().collect::<Vec<_>>()
+                );
+                verified += 1;
+            }
+        }
+    }
+    // 8 executable presets; decoder topologies contribute 2–3 kinds each.
+    assert!(verified >= 30, "sweep shrank to {verified} programs");
+}
+
+#[test]
+fn quantized_encoder_verifies_clean_at_all_levels() {
+    for level in LEVELS {
+        let mut p = ScheduleBuilder::new(fc(), presets::small_encoder(32, 2))
+            .unwrap()
+            .quantized(true)
+            .build();
+        optimize(&mut p, level, &inv()).unwrap();
+        let report = verify::verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.is_clean(), "{level:?}: {:?}", report.errors().collect::<Vec<_>>());
+    }
+}
+
+// ---- the mutation corpus -------------------------------------------------
+
+fn encoder(level: OptLevel) -> TileProgram {
+    let mut p = ScheduleBuilder::new(fc(), presets::small_encoder(32, 2)).unwrap().build();
+    optimize(&mut p, level, &inv()).unwrap();
+    p
+}
+
+fn step_program() -> TileProgram {
+    ScheduleBuilder::new(fc(), presets::gpt_small(32, 2)).unwrap().build_step()
+}
+
+/// Swapped slot operand: the first dispatch reads a slot only defined by
+/// the *last* dispatch — dataflow must flag the forward reference.
+#[test]
+fn swapped_slot_operand_is_use_before_def() {
+    let mut p = encoder(OptLevel::O0);
+    let last_dst = p
+        .steps
+        .iter()
+        .rev()
+        .find_map(|s| match s {
+            Step::Dispatch { dst, .. } => Some(*dst),
+            _ => None,
+        })
+        .unwrap();
+    let first_arg = p
+        .steps
+        .iter_mut()
+        .find_map(|s| match s {
+            Step::Dispatch { args, .. } => args.iter_mut().find_map(|a| match a {
+                Operand::Slot(s) => Some(s),
+                _ => None,
+            }),
+            _ => None,
+        })
+        .unwrap();
+    assert_ne!(*first_arg, last_dst);
+    *first_arg = last_dst;
+    let report = verify::verify(&p, ProgramKind::Encoder, &inv());
+    assert!(
+        report.errors().any(|d| d.rule == Rule::UseBeforeDef && d.step.is_some()),
+        "{:?}",
+        report.diagnostics
+    );
+}
+
+/// Dropped upload: the input transfer disappears, so every consumer of
+/// its slot reads an undefined value.
+#[test]
+fn dropped_upload_is_use_before_def() {
+    let mut p = encoder(OptLevel::O0);
+    let i = p.steps.iter().position(|s| matches!(s, Step::Upload { .. })).unwrap();
+    p.steps.remove(i);
+    let report = verify::verify(&p, ProgramKind::Encoder, &inv());
+    assert!(
+        report.errors().any(|d| d.rule == Rule::UseBeforeDef && d.step.is_some()),
+        "{:?}",
+        report.diagnostics
+    );
+}
+
+/// Wrong out_shape: a dispatch whose result is fetched records a bogus
+/// output shape — the fetch target no longer matches its host.
+#[test]
+fn wrong_out_shape_is_a_shape_mismatch() {
+    let mut p = encoder(OptLevel::O0);
+    let fetched = p
+        .steps
+        .iter()
+        .find_map(|s| match s {
+            Step::Fetch { src, .. } => Some(*src),
+            _ => None,
+        })
+        .unwrap();
+    let corrupted = p.steps.iter_mut().any(|s| match s {
+        Step::Dispatch { dst, out_shape, .. } if *dst == fetched => {
+            *out_shape = vec![3, 3];
+            true
+        }
+        _ => false,
+    });
+    assert!(corrupted, "no dispatch feeds the first fetch?");
+    let report = verify::verify(&p, ProgramKind::Encoder, &inv());
+    assert!(
+        report.errors().any(|d| d.rule == Rule::ShapeMismatch && d.step.is_some()),
+        "{:?}",
+        report.diagnostics
+    );
+}
+
+/// Stale export: the decode-step export table points at a slot no step
+/// ever writes — replay would hand the cache a freed buffer.
+#[test]
+fn stale_export_slot_is_an_export_contract_violation() {
+    let mut p = step_program();
+    p.n_slots += 1;
+    p.export_slots[0] = p.n_slots - 1;
+    let report = verify::verify(&p, ProgramKind::DecodeStep, &inv());
+    assert!(report.has_error(Rule::ExportContract), "{:?}", report.diagnostics);
+}
+
+/// An encoder program must not carry KV-cache plumbing.
+#[test]
+fn encoder_with_extern_buffers_is_rejected() {
+    let mut p = encoder(OptLevel::O1);
+    p.extern_shapes.push(vec![128, 64]);
+    let report = verify::verify(&p, ProgramKind::Encoder, &inv());
+    assert!(report.has_error(Rule::ExternContract), "{:?}", report.diagnostics);
+}
+
+/// The typed error renders every error diagnostic with step and rule.
+#[test]
+fn verify_program_returns_a_typed_rendered_error() {
+    let mut p = encoder(OptLevel::O0);
+    let i = p.steps.iter().position(|s| matches!(s, Step::Upload { .. })).unwrap();
+    p.steps.remove(i);
+    let err = verify::verify_program(&p, ProgramKind::Encoder, &inv()).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("program verification failed"), "{msg}");
+    assert!(msg.contains("use-before-def"), "{msg}");
+    assert!(msg.contains("step "), "{msg}");
+}
