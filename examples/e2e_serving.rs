@@ -215,6 +215,43 @@ fn main() -> anyhow::Result<()> {
                 Ok(_) => out.push_str("cancellation raced a short generation to completion\n"),
                 Err(e) => return Err(e.into()),
             }
+            // Continuous batching: overlap several generations and read
+            // the live occupancy metrics — the sequence scheduler must
+            // hold more than one generation in flight at once.
+            let k = 4usize;
+            let gsteps = 16usize;
+            let mut overlapped: Vec<_> = (0..k)
+                .map(|i| {
+                    let p = weights::init_input(200 + i as u64, 6, gpt.cfg.d_model);
+                    gserver.submit(
+                        Submission::Generate {
+                            model: gpt.name.clone(),
+                            prompt: p,
+                            source: None,
+                            steps: gsteps,
+                        },
+                        QoS::default(),
+                    )
+                })
+                .collect::<Result<_, _>>()?;
+            let mut overlapped_tokens = 0usize;
+            for h in overlapped.iter_mut() {
+                let g = h.wait()?.into_generate()?;
+                assert_eq!(g.tokens.len(), gsteps, "every overlapped generation completes");
+                overlapped_tokens += g.tokens.len();
+            }
+            let live = gserver.metrics();
+            assert!(
+                live.live_peak > 1,
+                "continuous batching must overlap generations (in-flight peak {})",
+                live.live_peak
+            );
+            assert!(live.decode_rounds > 0, "scheduler rounds must be counted");
+            out.push_str(&format!(
+                "overlapped {k} x {gsteps}-token generations: {overlapped_tokens} tokens, \
+                 in-flight peak {}, {} scheduler rounds, {} admitted\n",
+                live.live_peak, live.decode_rounds, live.admitted
+            ));
             let gm = gserver.shutdown()?;
             out.push_str(&gm.report());
         }

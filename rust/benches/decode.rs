@@ -1,7 +1,9 @@
 //! Generation-path bench: decoder program compilation, cycle-backend
-//! prefill vs per-token pricing, and (with the AOT artifact set present)
-//! real PJRT generation — prefill p50/p95/p99 plus per-token decode-step
-//! latency through `TileEngine::generate`.
+//! prefill vs per-token pricing, continuous-batching throughput (K
+//! interleaved sequences vs one-at-a-time on a single fabric, wave-priced
+//! cycle backend), and (with the AOT artifact set present) real PJRT
+//! generation — prefill p50/p95/p99 plus per-token decode-step latency
+//! through `TileEngine::generate`.
 //!
 //! Every run writes `BENCH_decode.json` (machine-readable summaries via
 //! `util::benchkit::write_json`); without artifacts only the
@@ -57,6 +59,107 @@ fn bench_decoder_compiler(results: &mut Vec<BenchResult>) {
     );
 }
 
+/// Continuous-batching section (artifact-free): price K interleaved
+/// generations on ONE fabric with the wave-priced cycle backend against
+/// serving the same K jobs one at a time.
+///
+/// The scheduler model mirrors `coordinator::server`'s sequence
+/// scheduler.  One-at-a-time serving drains each job fully — the fabric
+/// sees a *dependent* chain, every prefill and every decode step pays
+/// its full latency.  Continuous batching exposes inter-sequence
+/// independence at iteration granularity: the K admission prefills are
+/// mutually independent, so back-to-back replays stream through the
+/// module pipeline at the prefill program's initiation interval (its
+/// slowest wave, `CycleReport::max_wave_cycles`), and each decode round
+/// runs K independent step programs the same way — only consecutive
+/// steps of the *same* sequence (token t feeds token t+1) pay the full
+/// step latency between rounds.
+fn bench_concurrent_generation(results: &mut Vec<BenchResult>) {
+    const K: usize = 8; // concurrent sequences (the live-set size)
+    const N: u64 = 56; // tokens per sequence (8-row prompt + 56 <= sl 64)
+    const FREQ_MHZ: f64 = 200.0;
+    let fc = FabricConstants::artifact_default();
+    let cfg = presets::gpt_small(64, 4);
+
+    let mut pre = ScheduleBuilder::new(fc, cfg).unwrap().build_prefill();
+    optimize(&mut pre, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+    let mut step = ScheduleBuilder::new(fc, cfg).unwrap().build_step();
+    optimize(&mut step, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+    let p = cycle::replay_decoder_program_waves(&pre).unwrap();
+    let s = cycle::replay_decoder_program_waves(&step).unwrap();
+    let (p_cy, s_cy) = (p.total_cycles as f64, s.total_cycles as f64);
+    let (ii_p, ii_s) = (p.max_wave_cycles as f64, s.max_wave_cycles as f64);
+    assert!(ii_p > 0.0 && ii_p < p_cy, "wave-scheduled prefill must pipeline");
+    assert!(ii_s > 0.0 && ii_s < s_cy, "wave-scheduled step must pipeline");
+
+    let k = K as f64;
+    let n1 = (N - 1) as f64;
+    // One at a time: K dependent chains of prefill + (N-1) full steps.
+    let sequential = k * (p_cy + n1 * s_cy);
+    // Continuous: pipelined admission burst, then N-1 decode rounds of
+    // K independent steps each (first step full, the rest at the II).
+    let concurrent = (p_cy + (k - 1.0) * ii_p) + n1 * (s_cy + (k - 1.0) * ii_s);
+    let speedup = sequential / concurrent;
+
+    let secs = |cy: f64| cy / (FREQ_MHZ * 1e6);
+    let tokens = (K as u64 * N) as f64;
+    let tput_seq = tokens / secs(sequential);
+    let tput_conc = tokens / secs(concurrent);
+
+    // TTFT per sequence: one-at-a-time holds job i behind i whole jobs;
+    // continuous batching admits every prefill in the opening burst.
+    let ttft_seq: Vec<f64> =
+        (0..K).map(|i| secs(i as f64 * (p_cy + n1 * s_cy) + p_cy)).collect();
+    let ttft_conc: Vec<f64> = (0..K).map(|i| secs(p_cy + i as f64 * ii_p)).collect();
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+
+    println!("== continuous batching (cycle backend, 1 fabric, K={K} x {N} tokens) ==");
+    println!(
+        "prefill {} cy (II {} cy), step {} cy (II {} cy, {:.1}% of step)",
+        p.total_cycles,
+        p.max_wave_cycles,
+        s.total_cycles,
+        s.max_wave_cycles,
+        100.0 * ii_s / s_cy,
+    );
+    println!(
+        "aggregate: one-at-a-time {tput_seq:.0} tok/s, continuous {tput_conc:.0} tok/s \
+         ({speedup:.2}x)",
+    );
+    println!(
+        "mean TTFT: one-at-a-time {:.2} ms, continuous {:.2} ms\n",
+        1e3 * mean(&ttft_seq),
+        1e3 * mean(&ttft_conc),
+    );
+    results.push(BenchResult {
+        name: format!("concurrent/tokens_per_s_one_at_a_time_k{K}"),
+        summary: summarize(&[tput_seq]),
+    });
+    results.push(BenchResult {
+        name: format!("concurrent/tokens_per_s_continuous_k{K}"),
+        summary: summarize(&[tput_conc]),
+    });
+    results.push(BenchResult {
+        name: format!("concurrent/speedup_k{K}"),
+        summary: summarize(&[speedup]),
+    });
+    results.push(BenchResult {
+        name: format!("concurrent/ttft_one_at_a_time_k{K}"),
+        summary: summarize(&ttft_seq),
+    });
+    results.push(BenchResult {
+        name: format!("concurrent/ttft_continuous_k{K}"),
+        summary: summarize(&ttft_conc),
+    });
+
+    // The PR's acceptance bar: iteration-level scheduling must at least
+    // double aggregate tokens/sec over the one-at-a-time baseline.
+    assert!(
+        speedup >= 2.0,
+        "continuous batching must reach >= 2x aggregate throughput (got {speedup:.2}x)"
+    );
+}
+
 /// PJRT generation section — needs the artifact set incl. decode
 /// artifacts.
 fn bench_pjrt_generation(results: &mut Vec<BenchResult>) -> anyhow::Result<()> {
@@ -108,6 +211,7 @@ fn decode_artifacts_present() -> bool {
 fn main() {
     let mut results = Vec::new();
     bench_decoder_compiler(&mut results);
+    bench_concurrent_generation(&mut results);
     if decode_artifacts_present() {
         if let Err(e) = bench_pjrt_generation(&mut results) {
             eprintln!("PJRT generation section failed: {e:#}");

@@ -53,6 +53,15 @@ pub struct CycleReport {
     /// Waves priced as `max` over their members (0 when wave pricing was
     /// off or the program was unscheduled).
     pub waves: u64,
+    /// The slowest single wave of the replay (0 unless wave pricing ran
+    /// on a wave-scheduled program).  This is the program's
+    /// **initiation-interval bound**: waves are the pipeline stages of
+    /// one replay, so back-to-back *independent* replays (decode steps
+    /// of different sequences under continuous batching) can be admitted
+    /// every `max_wave_cycles` — the slowest stage gates the stream —
+    /// while a single sequence must wait the full `total_cycles` between
+    /// its own (data-dependent) steps.
+    pub max_wave_cycles: u64,
     /// Artifact names in dispatch order — compared against the PJRT
     /// executor's trace of the identical program in the equivalence tests.
     /// Interned: the names are the cost table's `&'static` keys, so
@@ -83,6 +92,8 @@ struct CycleState {
     /// folded into `cycles` at `wave_end`.
     in_wave: bool,
     wave_max: f64,
+    /// Max over all completed waves' `wave_max` — the slowest stage.
+    max_wave: f64,
     trace: Vec<&'static str>,
     per_artifact: BTreeMap<&'static str, ArtifactCycles>,
 }
@@ -207,6 +218,7 @@ impl CycleBackend {
             uploads: st.uploads,
             fetches: st.fetches,
             waves: st.waves,
+            max_wave_cycles: st.max_wave.round() as u64,
             trace: st.trace.clone(),
             per_artifact: st.per_artifact.clone(),
         }
@@ -263,6 +275,7 @@ impl FabricBackend for CycleBackend {
         if self.wave_pricing {
             let mut st = self.state.borrow_mut();
             st.cycles += st.wave_max;
+            st.max_wave = st.max_wave.max(st.wave_max);
             st.in_wave = false;
             st.waves += 1;
         }
@@ -376,7 +389,23 @@ fn replay_priced(prog: &TileProgram, waves: bool) -> anyhow::Result<CycleReport>
 /// decoder program carries its real decoder dispatches, so the flat
 /// surcharge of the encoder-side estimate would double-count).
 pub fn replay_decoder_program(prog: &TileProgram) -> anyhow::Result<CycleReport> {
-    let mut backend = CycleBackend::new(&prog.cfg, &prog.fabric).without_decoder_surcharge();
+    replay_decoder_priced(prog, false)
+}
+
+/// [`replay_decoder_program`] with wave pricing: each wave of a
+/// wave-scheduled prefill/step program costs `max` over its members, and
+/// the report's `max_wave_cycles` carries the slowest wave — the
+/// initiation-interval bound continuous-batching throughput models need
+/// (`benches/decode.rs`).  On an unscheduled program this degenerates to
+/// the sequential price.
+pub fn replay_decoder_program_waves(prog: &TileProgram) -> anyhow::Result<CycleReport> {
+    replay_decoder_priced(prog, true)
+}
+
+fn replay_decoder_priced(prog: &TileProgram, waves: bool) -> anyhow::Result<CycleReport> {
+    let mut backend = CycleBackend::new(&prog.cfg, &prog.fabric)
+        .without_decoder_surcharge()
+        .with_wave_pricing(waves);
     if prog.host_shapes[prog.input_host].first() == Some(&1) {
         // Single-row (decode-step) input: charge one row's AXI write.
         backend = backend.with_input_load_div(prog.cfg.seq_len as u64);
@@ -637,6 +666,30 @@ mod tests {
             assert!(step.per_artifact.contains_key("kv_append"));
             assert!(step.per_artifact.contains_key("qk_row"));
         }
+    }
+
+    #[test]
+    fn step_wave_replay_reports_the_initiation_interval_bound() {
+        use crate::accel::schedule::{optimize, ArtifactInventory, OptLevel};
+        let f = fc();
+        let cfg = crate::model::presets::gpt_small(64, 4);
+        let mut step = ScheduleBuilder::new(f, cfg).unwrap().build_step();
+        optimize(&mut step, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+        let seq = replay_decoder_program(&step).unwrap();
+        assert_eq!(seq.max_wave_cycles, 0, "sequential pricing sees no waves");
+        let waved = replay_decoder_program_waves(&step).unwrap();
+        assert!(waved.waves > 0, "a wave-scheduled step program must replay in waves");
+        // The slowest wave is one pipeline stage of the step: positive,
+        // and strictly inside the whole step — otherwise back-to-back
+        // independent steps could never overlap at all.
+        assert!(waved.max_wave_cycles > 0);
+        assert!(
+            waved.max_wave_cycles < waved.total_cycles,
+            "II bound {} must be a strict fraction of the step ({})",
+            waved.max_wave_cycles,
+            waved.total_cycles
+        );
+        assert!(waved.total_cycles <= seq.total_cycles, "wave pricing never costs more");
     }
 
     #[test]

@@ -31,7 +31,8 @@
 //!    │           │
 //!    │           ├─ Encode ──────────────────────► Done(Encode)
 //!    │           └─ Generate ─ Token(0) ─ Token(1) ─ … ─► Done(Generate)
-//!    │                   └─ cancel() between steps ─► Failed(Cancelled)
+//!    │                   ├─ cancel() between steps ───► Failed(Cancelled)
+//!    │                   └─ deadline between rounds ──► Failed(DeadlineExceeded)
 //!    ▼
 //! JobHandle: next_token() / poll() / wait() / cancel()
 //! ```
@@ -88,11 +89,15 @@ impl fmt::Display for Priority {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QoS {
     pub priority: Priority,
-    /// Give up if the request has not **started executing** within this
-    /// much time of submission: a request whose deadline passes while
-    /// queued completes with [`ServeError::DeadlineExceeded`] instead of
-    /// being served late (or dropped silently).  Work already on the
-    /// fabric is never preempted by a deadline.
+    /// Give up this much time after submission.  A request whose
+    /// deadline passes while queued completes with
+    /// [`ServeError::DeadlineExceeded`] instead of being served late
+    /// (or dropped silently).  An in-flight **generation** is also
+    /// checked between scheduler decode rounds: a sequence whose
+    /// deadline passes mid-generation retires with `DeadlineExceeded`
+    /// (counted in `Metrics::expired`), freeing its KV cache and its
+    /// live-set slot immediately.  An `Encode` already on the fabric is
+    /// never preempted — it has no between-step boundary to stop at.
     pub deadline: Option<Duration>,
     /// Per-request override of the fabric's TileProgram optimization
     /// level (the engine caches programs per opt level, so switching is
@@ -164,7 +169,8 @@ pub enum ServeError {
     /// hint points at a fabric the pool does not have — refused at
     /// `Server::start` instead of being silently ignored at dispatch.
     AffinityOutOfRange { model: String, fabric: usize, pool_size: usize },
-    /// The request's QoS deadline passed before it started executing.
+    /// The request's QoS deadline passed — while queued, or (for a
+    /// generation) between decode rounds mid-flight.
     DeadlineExceeded { waited: Duration },
     /// The job was cancelled via [`JobHandle::cancel`].
     Cancelled,

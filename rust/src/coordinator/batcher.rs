@@ -8,9 +8,12 @@
 //! latency.
 //!
 //! Requests are held in **per-model ready queues** (one queue per model)
-//! rather than one flat scan: `pop_ready` is O(models · queue) instead
-//! of O(requests), and a ready batch of any model can be drained even
-//! while another model's oldest request is still inside its deadline.
+//! rather than one flat scan, and the per-model selection key (front
+//! priority, oldest arrival) is memoized — kept current in O(1) on
+//! push, invalidated on pop/sweep — so ready-group selection costs
+//! O(live models) per round instead of O(queued requests).  That
+//! matters under continuous batching, where the dispatcher re-runs the
+//! selection every scheduler round, not once per drained batch.
 //!
 //! Serving API v1 made the queues **QoS-aware**: each pending request
 //! carries a [`Priority`] and an optional absolute deadline.  Within a
@@ -23,7 +26,8 @@
 //! expired requests out with a typed error ([`Batcher::take_where`])
 //! instead of serving them late or dropping them silently.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use super::api::Priority;
@@ -69,11 +73,27 @@ pub struct Batcher<T> {
     policy: BatchPolicy,
     queues: BTreeMap<String, VecDeque<Pending<T>>>,
     len: usize,
+    /// Memoized per-model selection key `(front priority, oldest
+    /// arrival)`.  Kept current in O(1) by `push_qos` (an insertion can
+    /// only raise the front's priority and lower the oldest stamp),
+    /// dropped by `pop_model_n` / `take_where` and lazily recomputed on
+    /// the next selection — so a steady-state selection round touches
+    /// each live model once, not each queued request.
+    fronts: RefCell<HashMap<String, (Priority, Instant)>>,
+    /// Queue elements visited while recomputing selection keys —
+    /// instrumentation for the O(live models) regression test.
+    scan_cost: Cell<u64>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queues: BTreeMap::new(), len: 0 }
+        Batcher {
+            policy,
+            queues: BTreeMap::new(),
+            len: 0,
+            fronts: RefCell::new(HashMap::new()),
+            scan_cost: Cell::new(0),
+        }
     }
 
     pub fn push(&mut self, model: &str, payload: T) {
@@ -109,6 +129,17 @@ impl<T> Batcher<T> {
         }
         q.insert(idx, Pending { model: model.to_string(), arrived, priority, deadline, payload });
         self.len += 1;
+        // Maintain the memoized selection key without a rescan: the new
+        // front is O(1) to read, and an insertion can only lower the
+        // oldest arrival.
+        let front = (q.front().expect("just inserted").priority, arrived);
+        let mut fronts = self.fronts.borrow_mut();
+        if q.len() == 1 {
+            fronts.insert(model.to_string(), front);
+        } else if let Some(e) = fronts.get_mut(model) {
+            e.0 = front.0;
+            e.1 = e.1.min(arrived);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -189,6 +220,9 @@ impl<T> Batcher<T> {
         }
         self.queues.retain(|_, q| !q.is_empty());
         self.len -= taken.len();
+        // A sweep can remove any member, so every memoized selection key
+        // is suspect; recompute lazily on the next selection round.
+        self.fronts.borrow_mut().clear();
         taken
     }
 
@@ -202,6 +236,7 @@ impl<T> Batcher<T> {
     /// front, ties to the oldest member; `excluded` models are skipped.
     fn select_ready(&self, now: Instant, force: bool, excluded: &[String]) -> Option<&str> {
         let mut best: Option<(&str, Priority, Instant)> = None;
+        let mut fronts = self.fronts.borrow_mut();
         for (model, q) in &self.queues {
             if excluded.iter().any(|m| m == model) {
                 continue;
@@ -210,7 +245,18 @@ impl<T> Batcher<T> {
                 Some(p) => p,
                 None => continue,
             };
-            let oldest = Self::oldest(q).expect("non-empty queue has an oldest member");
+            let (priority, oldest) = match fronts.get(model.as_str()) {
+                Some(&k) => k,
+                None => {
+                    self.scan_cost.set(self.scan_cost.get() + q.len() as u64);
+                    let k = (
+                        front.priority,
+                        Self::oldest(q).expect("non-empty queue has an oldest member"),
+                    );
+                    fronts.insert(model.clone(), k);
+                    k
+                }
+            };
             let ready = force
                 || q.len() >= self.policy.max_batch
                 || now.duration_since(oldest) >= self.policy.max_wait;
@@ -219,15 +265,28 @@ impl<T> Batcher<T> {
             }
             let better = match best {
                 None => true,
-                Some((_, bp, bo)) => {
-                    front.priority > bp || (front.priority == bp && oldest < bo)
-                }
+                Some((_, bp, bo)) => priority > bp || (priority == bp && oldest < bo),
             };
             if better {
-                best = Some((model, front.priority, oldest));
+                best = Some((model, priority, oldest));
             }
         }
         best.map(|(model, _, _)| model)
+    }
+
+    /// Queue elements visited recomputing memoized selection keys since
+    /// construction.  Instrumentation for the regression test pinning
+    /// selection at O(live models) per round on a deep queue.
+    pub fn selection_scan_cost(&self) -> u64 {
+        self.scan_cost.get()
+    }
+
+    /// The item [`Self::pop_model`] would drain first, without draining
+    /// it — the dispatcher inspects a ready group's front to decide
+    /// whether to drain a whole encode batch or yield a **single
+    /// generation** for the continuous-batching scheduler round.
+    pub fn front(&self, model: &str) -> Option<&Pending<T>> {
+        self.queues.get(model)?.front()
     }
 
     /// Pop a ready batch.  A model's group is *ready* when it reached
@@ -246,12 +305,24 @@ impl<T> Batcher<T> {
     /// (the one a prior [`Self::peek_ready_excluding`] selected), in
     /// queue order.  `None` if the model has nothing queued.
     pub fn pop_model(&mut self, model: &str) -> Option<(String, Vec<Pending<T>>)> {
+        self.pop_model_n(model, self.policy.max_batch)
+    }
+
+    /// [`Self::pop_model`] with an explicit batch-size cap.  The
+    /// continuous-batching dispatcher pops generations with `max = 1`
+    /// so the batcher yields individual sequences between scheduler
+    /// rounds — each round's admission re-runs the QoS selection
+    /// instead of committing a whole drained batch up front.
+    pub fn pop_model_n(&mut self, model: &str, max: usize) -> Option<(String, Vec<Pending<T>>)> {
         let q = self.queues.get_mut(model)?;
-        let n = q.len().min(self.policy.max_batch);
+        let n = q.len().min(max);
         let batch: Vec<Pending<T>> = q.drain(..n).collect();
         if q.is_empty() {
             self.queues.remove(model);
         }
+        // The drain removed the front (and possibly the oldest member);
+        // recompute this model's selection key lazily.
+        self.fronts.borrow_mut().remove(model);
         self.len -= batch.len();
         if batch.is_empty() {
             None
@@ -532,6 +603,79 @@ mod tests {
         assert_eq!(batch[0].payload, 2);
         assert_eq!(b.len(), 1);
         assert!(b.pop_model("b").is_none(), "drained model is gone");
+    }
+
+    #[test]
+    fn selection_cost_stays_flat_on_a_deep_queue() {
+        // Satellite bugfix regression: ready-group selection used to
+        // rescan every queued request per round (O(queue)); with the
+        // memoized per-model front it must stay O(live models) — deep
+        // queues cost nothing extra once their key is known.
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let t0 = Instant::now();
+        for i in 0..10_000 {
+            b.push_at("m", i, t0 + Duration::from_micros(i as u64));
+        }
+        assert_eq!(b.selection_scan_cost(), 0, "in-order pushes maintain the memo in O(1)");
+        let now = t0 + Duration::from_millis(60);
+        for _ in 0..1_000 {
+            assert_eq!(b.peek_ready(now, false), Some("m"));
+        }
+        assert_eq!(b.selection_scan_cost(), 0, "admission rounds reuse the memo");
+        // A pop invalidates exactly this model's key; the next round
+        // recomputes it once and the rounds after that are free again.
+        let (_, batch) = b.pop_model("m").unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.peek_ready(now, false), Some("m"));
+        let after_pop = b.selection_scan_cost();
+        assert_eq!(after_pop, 9_996, "one recompute scans the queue once");
+        for _ in 0..1_000 {
+            assert_eq!(b.peek_ready(now, false), Some("m"));
+        }
+        assert_eq!(b.selection_scan_cost(), after_pop);
+    }
+
+    #[test]
+    fn memoized_selection_stays_correct_across_push_pop_and_sweep() {
+        // The memo must never change *what* is selected — only how fast.
+        let mut b = mk(); // max_batch = 3
+        let t0 = Instant::now();
+        let later = t0 + Duration::from_millis(60);
+        b.push_qos("a", 1, t0, Priority::Normal, None);
+        b.push_qos("b", 2, t0 + Duration::from_millis(1), Priority::Normal, None);
+        assert_eq!(b.peek_ready(later, false), Some("a"));
+        // a High push re-fronts "b" past the older "a" (memo updated on push)
+        b.push_qos("b", 3, t0 + Duration::from_millis(2), Priority::High, None);
+        assert_eq!(b.peek_ready(later, false), Some("b"));
+        // draining "b" invalidates its key; "a" wins again
+        let (_, batch) = b.pop_model("b").unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![3, 2]);
+        assert_eq!(b.peek_ready(later, false), Some("a"));
+        // a sweep that removes "a"'s only member clears the stale key
+        let taken = b.take_where(|p| p.payload == 1);
+        assert_eq!(taken.len(), 1);
+        assert!(b.peek_ready(later, false).is_none());
+        b.push_at("c", 9, t0);
+        assert_eq!(b.peek_ready(later, false), Some("c"));
+    }
+
+    #[test]
+    fn front_peeks_and_pop_model_n_drains_exactly_n() {
+        let mut b = mk(); // max_batch = 3
+        let t0 = Instant::now();
+        b.push_at("m", 1, t0);
+        b.push_at("m", 2, t0 + Duration::from_millis(1));
+        assert_eq!(b.front("m").unwrap().payload, 1);
+        assert!(b.front("ghost").is_none());
+        let (model, batch) = b.pop_model_n("m", 1).unwrap();
+        assert_eq!(model, "m");
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.front("m").unwrap().payload, 2, "front advanced");
+        let (_, batch) = b.pop_model_n("m", 5).unwrap();
+        assert_eq!(batch.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![2]);
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -261,6 +261,64 @@ pub struct Generated {
     pub step_dispatches: usize,
 }
 
+/// One resumable in-flight generation: the per-sequence state a
+/// scheduler needs to drive decoding **round-robin** across many
+/// sequences on one fabric.  Produced by
+/// [`TileEngine::begin_generation`] (validation + optional source
+/// encode + prompt prefill + the first token), advanced one token at a
+/// time by [`TileEngine::step_once`], and finished into a [`Generated`]
+/// by [`TileEngine::finish_generation`].
+///
+/// The session owns the sequence's [`KvCache`] (device-resident K/V
+/// panels) — dropping an unfinished session frees the cache buffers
+/// immediately, which is exactly how the serving layer retires a
+/// cancelled or expired sequence mid-flight.
+pub struct GenSession {
+    rows: Mat,
+    tokens: Vec<usize>,
+    /// The activation row fed to the next decode step (greedy feedback).
+    next: Vec<f32>,
+    /// Tokens produced so far (>= 1: the first falls out of the prefill).
+    produced: usize,
+    /// Target token count.
+    steps: usize,
+    cache: KvCache<DeviceTensor>,
+    prefill: Duration,
+    step_times: Vec<Duration>,
+}
+
+impl GenSession {
+    /// Tokens produced so far (always >= 1).
+    pub fn produced(&self) -> usize {
+        self.produced
+    }
+
+    /// Target token count for this generation.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Whether the generation has produced all requested tokens.
+    pub fn is_done(&self) -> bool {
+        self.produced == self.steps
+    }
+
+    /// The most recently produced token id.
+    pub fn last_token(&self) -> usize {
+        self.tokens[self.produced - 1]
+    }
+
+    /// The most recently produced activation row (`d_model` values).
+    pub fn last_row(&self) -> &[f32] {
+        &self.next
+    }
+
+    /// Source encode (seq2seq) + prompt prefill wall time.
+    pub fn prefill_time(&self) -> Duration {
+        self.prefill
+    }
+}
+
 /// A built program plus its per-topology runtime tensors: the runtime
 /// tensors (mask, dmask, count, zero accumulators) are uploaded exactly
 /// once per *topology* and shared by every replay — including across
@@ -967,6 +1025,33 @@ impl TileEngine {
         steps: usize,
         on_token: &mut dyn FnMut(usize, usize, &[f32]) -> StepControl,
     ) -> Result<Option<Generated>, ServeError> {
+        let mut session = self.begin_generation(stack, prompt, source, steps)?;
+        if on_token(0, session.last_token(), session.last_row()) == StepControl::Stop {
+            return Ok(None);
+        }
+        while !session.is_done() {
+            let (i, token) = self.step_once(stack, &mut session)?;
+            if on_token(i, token, session.last_row()) == StepControl::Stop {
+                return Ok(None);
+            }
+        }
+        Ok(Some(self.finish_generation(stack, session)?))
+    }
+
+    /// Start a resumable generation: validate the request, (optionally)
+    /// encode the source, prefill the prompt, and produce the first
+    /// token (which falls out of the prefill's last output row).  The
+    /// returned [`GenSession`] is then advanced one token per
+    /// [`Self::step_once`] call — the continuous-batching scheduler
+    /// holds one session per in-flight sequence and drives them
+    /// round-robin against the shared cached step program.
+    pub fn begin_generation(
+        &self,
+        stack: &PreparedStack,
+        prompt: &Mat,
+        source: Option<&Mat>,
+        steps: usize,
+    ) -> Result<GenSession, ServeError> {
         let cfg = &stack.cfg;
         if steps == 0 {
             return Err(ServeError::invalid("generation needs at least one step"));
@@ -990,35 +1075,73 @@ impl TileEngine {
             }
             None
         };
-        let (pre_out, mut cache) = self.decoder_prefill(stack, prompt, memory)?;
+        let (pre_out, cache) = self.decoder_prefill(stack, prompt, memory)?;
         let prefill = t0.elapsed();
         let d = cfg.d_model;
         let mut rows = Mat::zeros(steps, d);
         let mut tokens = Vec::with_capacity(steps);
         // The prompt's last output row is the first generated token.
-        let mut next: Vec<f32> = (0..d).map(|c| pre_out.at(prompt.rows - 1, c)).collect();
+        let next: Vec<f32> = (0..d).map(|c| pre_out.at(prompt.rows - 1, c)).collect();
         tokens.push(crate::model::reference::argmax_token(&next));
         rows.data[..d].copy_from_slice(&next);
-        if on_token(0, tokens[0], &next) == StepControl::Stop {
-            return Ok(None);
-        }
-        let mut step_times = Vec::with_capacity(steps.saturating_sub(1));
-        for i in 1..steps {
-            let t = Instant::now();
-            next = self.decode_step(stack, &mut cache, &next)?;
-            step_times.push(t.elapsed());
-            let token = crate::model::reference::argmax_token(&next);
-            tokens.push(token);
-            rows.data[i * d..(i + 1) * d].copy_from_slice(&next);
-            if on_token(i, token, &next) == StepControl::Stop {
-                return Ok(None);
-            }
-        }
-        Ok(Some(Generated {
+        Ok(GenSession {
             rows,
             tokens,
+            next,
+            produced: 1,
+            steps,
+            cache,
             prefill,
-            step_times,
+            step_times: Vec::with_capacity(steps.saturating_sub(1)),
+        })
+    }
+
+    /// Advance a [`GenSession`] by exactly one decode step and return
+    /// `(token_index, token_id)` for the newly produced token (its
+    /// activation row is [`GenSession::last_row`]).  The engine must be
+    /// programmed for the session's topology — the scheduler reprograms
+    /// the register file when it switches models between sequences; the
+    /// session's KV cache is plain device memory and survives register
+    /// reprogramming untouched.
+    pub fn step_once(
+        &self,
+        stack: &PreparedStack,
+        session: &mut GenSession,
+    ) -> Result<(usize, usize), ServeError> {
+        if session.is_done() {
+            return Err(ServeError::invalid("generation already produced all requested tokens"));
+        }
+        let d = stack.cfg.d_model;
+        let t = Instant::now();
+        session.next = self.decode_step(stack, &mut session.cache, &session.next)?;
+        session.step_times.push(t.elapsed());
+        let i = session.produced;
+        let token = crate::model::reference::argmax_token(&session.next);
+        session.tokens.push(token);
+        session.rows.data[i * d..(i + 1) * d].copy_from_slice(&session.next);
+        session.produced += 1;
+        Ok((i, token))
+    }
+
+    /// Close out a completed [`GenSession`] into the [`Generated`]
+    /// result the serving layer reports (dropping the KV cache).
+    pub fn finish_generation(
+        &self,
+        stack: &PreparedStack,
+        session: GenSession,
+    ) -> Result<Generated, ServeError> {
+        if !session.is_done() {
+            return Err(ServeError::invalid(format!(
+                "generation finished early ({} of {} tokens)",
+                session.produced, session.steps
+            )));
+        }
+        let cfg = &stack.cfg;
+        Ok(Generated {
+            rows: session.rows,
+            tokens: session.tokens,
+            prefill: session.prefill,
+            step_times: session.step_times,
             prefill_dispatches: self
                 .cached_program_kind(cfg, ProgramKind::Prefill)?
                 .program
@@ -1027,7 +1150,7 @@ impl TileEngine {
                 .cached_program_kind(cfg, ProgramKind::DecodeStep)?
                 .program
                 .dispatch_count(),
-        }))
+        })
     }
 
     /// Run one layer through a *fused* per-config artifact (the

@@ -36,10 +36,28 @@ pub struct Metrics {
     /// failed generation never pollutes the latency samples.
     pub prefills: Vec<f64>,
     /// Per-token decode-step times, seconds (each generation contributes
-    /// `steps - 1` samples) — success-only, like `prefills`.
+    /// `steps - 1` samples) — success-only, like `prefills`.  Under
+    /// continuous batching this is the **inter-token latency**: the gap
+    /// between a sequence's consecutive tokens includes the decode
+    /// steps the scheduler ran for other live sequences in between.
     pub decode_steps: Vec<f64>,
+    /// Time-to-first-token samples, seconds: submission → the first
+    /// streamed `TokenEvent` (admission wait + prefill).  Success-only,
+    /// like `prefills` — together with `decode_steps` this is the
+    /// TTFT vs inter-token split continuous batching trades on.
+    pub ttfts: Vec<f64>,
     /// Completed generations.
     pub generations: u64,
+    /// Generation sequences admitted into a fabric's live set (each
+    /// admission = one prefill executed under the per-round budget).
+    pub admitted: u64,
+    /// Continuous-batching scheduler rounds executed (each round runs
+    /// one decode step per live sequence).
+    pub decode_rounds: u64,
+    /// Peak concurrently in-flight generation sequences observed on one
+    /// fabric (aggregate: max across fabrics, not a sum — fabrics hold
+    /// separate live sets).
+    pub live_peak: u64,
     /// Register reprogramming events (model switches on the fabric).
     pub reprograms: u64,
     /// Requests that failed (programming errors, execution errors).
@@ -100,9 +118,21 @@ impl Metrics {
         self.decode_steps.extend(steps.iter().map(|d| d.as_secs_f64()));
     }
 
+    /// Record a **successful** generation's time-to-first-token
+    /// (submission → first streamed token).  Success-only, like
+    /// [`Self::record_generation`].
+    pub fn record_ttft(&mut self, ttft: Duration) {
+        self.ttfts.push(ttft.as_secs_f64());
+    }
+
     /// Prefill-time summary (None until a generation succeeded).
     pub fn prefill_summary(&self) -> Option<Summary> {
         (!self.prefills.is_empty()).then(|| summarize(&self.prefills))
+    }
+
+    /// Time-to-first-token summary (None until a generation succeeded).
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        (!self.ttfts.is_empty()).then(|| summarize(&self.ttfts))
     }
 
     /// Per-token decode-step summary.
@@ -165,7 +195,11 @@ impl Metrics {
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
         self.prefills.extend_from_slice(&other.prefills);
         self.decode_steps.extend_from_slice(&other.decode_steps);
+        self.ttfts.extend_from_slice(&other.ttfts);
         self.generations += other.generations;
+        self.admitted += other.admitted;
+        self.decode_rounds += other.decode_rounds;
+        self.live_peak = self.live_peak.max(other.live_peak);
         self.reprograms += other.reprograms;
         self.failed += other.failed;
         self.cancelled += other.cancelled;
@@ -246,6 +280,20 @@ impl Metrics {
                 s.p50 * 1e3,
                 s.p95 * 1e3,
                 s.mean * 1e3
+            ));
+        }
+        if let Some(t) = self.ttft_summary() {
+            out.push_str(&format!(
+                "time-to-first-token ms: p50={:.2} p95={:.2} mean={:.2}\n",
+                t.p50 * 1e3,
+                t.p95 * 1e3,
+                t.mean * 1e3
+            ));
+        }
+        if self.admitted > 0 {
+            out.push_str(&format!(
+                "continuous batching: {} admitted, {} decode rounds, in-flight peak {}\n",
+                self.admitted, self.decode_rounds, self.live_peak
             ));
         }
         out.push_str(&format!(
@@ -406,6 +454,36 @@ mod tests {
         let mut clean = Metrics::default();
         clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
         assert!(!clean.report().contains("cancelled"));
+    }
+
+    #[test]
+    fn continuous_batching_counters_merge_and_render() {
+        let mut a = Metrics::for_fabric(0);
+        a.record(Duration::from_millis(9), Duration::from_millis(1), Duration::from_millis(10));
+        a.record_ttft(Duration::from_millis(10));
+        a.admitted = 3;
+        a.decode_rounds = 12;
+        a.live_peak = 3;
+        let mut b = Metrics::for_fabric(1);
+        b.record_ttft(Duration::from_millis(30));
+        b.admitted = 1;
+        b.decode_rounds = 4;
+        b.live_peak = 1;
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.admitted, 4, "admissions add across fabrics");
+        assert_eq!(agg.decode_rounds, 16);
+        assert_eq!(agg.live_peak, 3, "in-flight peak is a max, fabrics hold separate live sets");
+        assert_eq!(agg.ttfts.len(), 2);
+        let t = agg.ttft_summary().unwrap();
+        assert!((t.mean - 0.020).abs() < 1e-9);
+        let rep = agg.report();
+        assert!(rep.contains("time-to-first-token ms"), "{rep}");
+        assert!(rep.contains("continuous batching: 4 admitted, 16 decode rounds, in-flight peak 3"), "{rep}");
+        // encode-only runs render no continuous-batching noise
+        let mut clean = Metrics::default();
+        clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        assert!(!clean.report().contains("continuous batching"));
+        assert!(clean.ttft_summary().is_none());
     }
 
     #[test]

@@ -40,8 +40,8 @@ pub use api::{
     ServeError, Submission, Timing, TokenEvent,
 };
 pub use engine::{
-    AttentionMode, DecoderStackView, Generated, OptLevel, PreparedStack, ProgramKind, StepControl,
-    TileEngine,
+    AttentionMode, DecoderStackView, GenSession, Generated, OptLevel, PreparedStack, ProgramKind,
+    StepControl, TileEngine,
 };
 pub use server::{
     FaultInjection, GenerateRequest, GenerateResponse, PoolScheduler, Request, Response,

@@ -12,6 +12,25 @@
 //! of programming state (the baseline the affinity tests compare
 //! against).
 //!
+//! Each fabric worker is split in two along the job-kind axis
+//! (**continuous batching**; see DESIGN.md):
+//!
+//! * the **batch executor** serves model-homogeneous *encode* batches
+//!   whole, exactly as before;
+//! * the **sequence scheduler** keeps a live set of up to
+//!   [`ServerConfig::max_seqs`] in-flight *generations* (one
+//!   [`GenSession`] — KV cache + position — per sequence, all sharing
+//!   the cached step program) and each round (1) admits new prefills
+//!   under the capacity budget shared with encode batches, (2) runs
+//!   **one decode step per live sequence** in QoS order, streaming its
+//!   token and observing its `CancelToken` and deadline between steps,
+//!   (3) retires finished / cancelled / expired sequences immediately,
+//!   freeing their KV cache, and backfills from the batcher.
+//!
+//! Generations are acked to the dispatcher **at admission**, so for
+//! them [`ServerConfig::queue_depth`] meters *per-round admissions*
+//! into the live set — not whole jobs held to completion.
+//!
 //! Serving API v1 semantics on top of the pool:
 //!
 //! * **one submission path** — [`Server::submit`] takes a
@@ -19,19 +38,21 @@
 //!   [`JobHandle`];
 //! * **QoS flows end to end** — priority orders the ready queues,
 //!   deadlines are swept while queued (typed
-//!   [`ServeError::DeadlineExceeded`], counted in metrics) and
-//!   re-checked at execution start, and dispatch is **capacity-gated**
+//!   [`ServeError::DeadlineExceeded`], counted in metrics), re-checked
+//!   at execution start, and — for in-flight generations — enforced
+//!   **between decode rounds**; dispatch is **capacity-gated**
 //!   ([`ServerConfig::queue_depth`] batches outstanding per fabric) so
 //!   priority is decided in the queue, not in a deep fabric FIFO;
 //! * **cancellation** — observed while queued, before execution, and
-//!   **between decode steps** (via the engine's
-//!   [`StepControl`](super::engine::StepControl) observer); a cancelled
-//!   generation stops within one decode step, leaves the KV cache and
-//!   pools clean, and records no partial samples;
+//!   between decode rounds; a cancelled generation stops within one
+//!   decode step, leaves the KV cache and pools clean, and records no
+//!   partial samples;
 //! * **streaming** — generation tokens are delivered on the handle as
 //!   decode steps complete; their concatenation is bit-identical to the
-//!   final transcript;
-//! * **live metrics** — [`Server::metrics`] snapshots the running pool;
+//!   final transcript, and to the one-job-at-a-time transcript even
+//!   when sequences interleave;
+//! * **live metrics** — [`Server::metrics`] snapshots the running pool
+//!   (including in-flight occupancy and time-to-first-token);
 //!   [`Server::shutdown`] is no longer the only metrics exit.
 //!
 //! `pool_size = 1` reproduces the paper's host software exactly: one
@@ -60,11 +81,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::api::{
-    CancelToken, EncodeOutput, GenerateOutput, JobEvent, JobHandle, JobOutput, QoS, ServeError,
-    Submission, Timing, TokenEvent,
+    CancelToken, EncodeOutput, GenerateOutput, JobEvent, JobHandle, JobOutput, Priority, QoS,
+    ServeError, Submission, Timing, TokenEvent,
 };
 use super::batcher::{BatchPolicy, Batcher, Pending};
-use super::engine::{AttentionMode, OptLevel, PreparedStack, StepControl, TileEngine};
+use super::engine::{AttentionMode, GenSession, OptLevel, PreparedStack, TileEngine};
 use super::metrics::Metrics;
 use super::router::{ModelSpec, Router};
 use crate::model::weights::Mat;
@@ -162,6 +183,14 @@ pub struct ServerConfig {
     /// those.  `1` gives the strictest priority ordering at a small
     /// utilization cost; `0` is refused at [`Server::start`].
     pub queue_depth: usize,
+    /// In-flight generation sequences a fabric's sequence scheduler
+    /// keeps live at once (continuous batching).  Each live sequence
+    /// holds one KV cache on the device pool; a decode round runs one
+    /// step per live sequence, so `max_seqs` bounds both pool pressure
+    /// and the worst-case inter-token latency of any one sequence.
+    /// `1` serializes generations (the paper's one-at-a-time host
+    /// loop); `0` is refused at [`Server::start`].
+    pub max_seqs: usize,
     pub fault: FaultInjection,
 }
 
@@ -176,6 +205,7 @@ impl ServerConfig {
             pool_size: 1,
             schedule: SchedulePolicy::Affinity,
             queue_depth: 2,
+            max_seqs: 4,
             fault: FaultInjection::default(),
         }
     }
@@ -423,6 +453,11 @@ impl Server {
         if cfg.queue_depth == 0 {
             return Err(ServeError::config(
                 "queue_depth must be >= 1 (batches outstanding per fabric)",
+            ));
+        }
+        if cfg.max_seqs == 0 {
+            return Err(ServeError::config(
+                "max_seqs must be >= 1 (in-flight generations per fabric)",
             ));
         }
         // Affinity hints are validated against the actual pool here —
@@ -769,7 +804,21 @@ fn dispatcher_thread(ctx: DispatchCtx) {
                 blocked.push(model);
                 continue;
             }
-            let Some((model, batch)) = batcher.pop_model(&model) else {
+            // Generations dispatch one sequence at a time: the fabric's
+            // sequence scheduler interleaves them at decode-step
+            // granularity and acks each at admission, so popping singly
+            // keeps the per-round admission decision (and its QoS
+            // ordering) in the queue instead of committing a whole
+            // batch to one fabric up front.  Model queues are
+            // kind-homogeneous (the router refuses encodes on decoder
+            // models), so the front item decides for the queue.
+            let single = matches!(
+                batcher.front(&model).map(|p| &p.payload.submission),
+                Some(Submission::Generate { .. })
+            );
+            let popped =
+                if single { batcher.pop_model_n(&model, 1) } else { batcher.pop_model(&model) };
+            let Some((model, batch)) = popped else {
                 break;
             };
             let fabric = sched
@@ -894,26 +943,360 @@ fn fabric_thread(
     // capacity slot that can never free.
     let mut notice = DeathNotice { fabric: id, events: events.clone(), armed: true };
     let started = Instant::now();
-    while let Ok(msg) = rx.recv() {
+    // The sequence scheduler's live set: in-flight generations, one
+    // resumable GenSession (KV cache + position) each.
+    let mut live: Vec<LiveSeq> = Vec::new();
+    loop {
+        // Work acquisition: block when idle, poll (without stalling the
+        // decode rounds) while sequences are live, and stop pulling
+        // entirely once the live set is at capacity — queued work then
+        // waits behind the max_seqs budget, not in a deeper FIFO.
+        let msg = if live.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else if live.len() < cfg.max_seqs {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        } else {
+            None
+        };
         match msg {
-            FabricMsg::Batch { model, items } => {
+            Some(FabricMsg::Batch { model, items }) => {
                 let served = items.len();
-                serve_batch(&mut engine, &cfg, &prepared, &metrics, &model, items);
+                // Kind split: encode batches run whole on the batch
+                // executor; generations are admitted into the live set.
+                // (Model queues are kind-homogeneous, so one side is
+                // always empty — the partition is belt-and-braces.)
+                let (gens, encs): (Vec<_>, Vec<_>) = items
+                    .into_iter()
+                    .partition(|it| matches!(it.job.submission, Submission::Generate { .. }));
+                if !encs.is_empty() {
+                    serve_batch(&mut engine, &cfg, &prepared, &metrics, &model, encs);
+                }
+                if !gens.is_empty() {
+                    admit_generations(&mut engine, &cfg, &prepared, &metrics, &model, gens, &mut live);
+                }
+                // Ack at admission: a generation frees its capacity slot
+                // as soon as it joins the live set, so queue_depth meters
+                // per-round admissions — not whole jobs held to
+                // completion.
                 let _ = events.send(FabricEvent { fabric: id, served, died: false });
             }
-            FabricMsg::Shutdown { reply } => {
+            Some(FabricMsg::Shutdown { reply }) => {
+                // Drain the live set before acking — dispatched work is
+                // always served (or typed-failed) before shutdown.
+                while !live.is_empty() {
+                    decode_round(&mut engine, &cfg, &prepared, &metrics, &mut live);
+                }
                 lock(&metrics).elapsed = started.elapsed().as_secs_f64();
                 notice.armed = false;
                 let _ = reply.send(());
                 return;
             }
+            None => {}
+        }
+        if !live.is_empty() {
+            decode_round(&mut engine, &cfg, &prepared, &metrics, &mut live);
         }
     }
-    // Dispatcher hung up without a shutdown (server dropped): clean exit.
+    // Dispatcher hung up without a shutdown (server dropped): finish
+    // the live sequences — their handles may still be held — then exit.
+    while !live.is_empty() {
+        decode_round(&mut engine, &cfg, &prepared, &metrics, &mut live);
+    }
     notice.armed = false;
 }
 
-/// Serve one model-homogeneous batch on a fabric.
+/// One in-flight generation in a fabric's sequence scheduler.  Owns the
+/// job's event channel and its [`GenSession`] (KV cache + position);
+/// dropping a `LiveSeq` without finishing it releases the KV cache and
+/// its pool buffers immediately — that *is* the cancellation path.
+struct LiveSeq {
+    model: String,
+    arrived: Instant,
+    deadline: Option<Instant>,
+    priority: Priority,
+    opt_level: Option<OptLevel>,
+    events: Sender<JobEvent>,
+    cancel: CancelToken,
+    /// When the sequence was admitted (prefill start) — the boundary
+    /// between `queue_wait` and `compute` in the final [`Timing`].
+    exec_start: Instant,
+    /// Submit → first streamed token (prefill included), recorded into
+    /// the metrics TTFT summary on success.
+    ttft: Duration,
+    session: GenSession,
+}
+
+/// Round order for the sequence scheduler: priority first (QoS leads),
+/// then model — grouping same-model sequences so a round pays at most
+/// one reprogram per *model*, not per sequence — then arrival (FIFO
+/// fairness within a model).
+fn seq_round_order(
+    a: (Priority, &str, Instant),
+    b: (Priority, &str, Instant),
+) -> std::cmp::Ordering {
+    b.0.cmp(&a.0).then_with(|| a.1.cmp(b.1)).then_with(|| a.2.cmp(&b.2))
+}
+
+/// Admit generation jobs into the fabric's live set: re-check QoS at
+/// the last line, run each prompt's prefill (token 0 streams here —
+/// the time-to-first-token edge), and park the resumable session for
+/// the scheduler's decode rounds.
+fn admit_generations(
+    engine: &mut TileEngine,
+    cfg: &ServerConfig,
+    prepared: &[(String, PreparedStack)],
+    metrics: &Mutex<Metrics>,
+    model: &str,
+    items: Vec<WorkItem>,
+    live: &mut Vec<LiveSeq>,
+) {
+    let Some((_, stack)) = prepared.iter().find(|(n, _)| n == model) else {
+        lock(metrics).failed += items.len() as u64;
+        for it in items {
+            it.job.fail(ServeError::engine(format!("model '{model}' not prepared on this fabric")));
+        }
+        return;
+    };
+    let mut attempted = 0usize;
+    for item in items {
+        let WorkItem { job, arrived, deadline } = item;
+        let now = Instant::now();
+        if job.cancel.is_cancelled() {
+            lock(metrics).cancelled += 1;
+            job.fail(ServeError::Cancelled);
+            continue;
+        }
+        if deadline.map_or(false, |d| d <= now) {
+            lock(metrics).expired += 1;
+            job.fail(ServeError::DeadlineExceeded { waited: now.duration_since(arrived) });
+            continue;
+        }
+        // Re-checked per admission: decode rounds for other live models
+        // may have left a different topology in the register file.
+        if !engine.is_programmed_for(&stack.cfg) {
+            let programmed = if cfg.fault.fail_program_for.as_deref() == Some(model) {
+                Err(ServeError::ProgramFailed("injected register-programming fault".into()))
+            } else {
+                engine.program(&stack.cfg)
+            };
+            match programmed {
+                Ok(()) => lock(metrics).reprograms += 1,
+                Err(e) => {
+                    lock(metrics).failed += 1;
+                    job.fail(ServeError::ProgramFailed(format!(
+                        "programming registers for model '{model}': {e}"
+                    )));
+                    continue;
+                }
+            }
+        }
+        attempted += 1;
+        engine.opt_level = job.qos.opt_level.unwrap_or(cfg.opt_level);
+        let exec_start = Instant::now();
+        let JobState { submission, qos, events, cancel } = job;
+        let (prompt, source, steps) = match submission {
+            Submission::Generate { prompt, source, steps, .. } => (prompt, source, steps),
+            Submission::Encode { .. } => unreachable!("admission receives only generations"),
+        };
+        match engine.begin_generation(stack, &prompt, source.as_ref(), steps) {
+            Ok(session) => {
+                let ttft = arrived.elapsed();
+                let delivered = events
+                    .send(JobEvent::Token(TokenEvent {
+                        index: 0,
+                        token: session.last_token(),
+                        row: session.last_row().to_vec(),
+                    }))
+                    .is_ok();
+                if cancel.is_cancelled() || !delivered {
+                    // Cancelled during prefill, or the handle is gone —
+                    // dropping the session frees the KV cache now.
+                    lock(metrics).cancelled += 1;
+                    let _ = events.send(JobEvent::Failed(ServeError::Cancelled));
+                    continue;
+                }
+                let seq = LiveSeq {
+                    model: model.to_string(),
+                    arrived,
+                    deadline,
+                    priority: qos.priority,
+                    opt_level: qos.opt_level,
+                    events,
+                    cancel,
+                    exec_start,
+                    ttft,
+                    session,
+                };
+                lock(metrics).admitted += 1;
+                if seq.session.is_done() {
+                    // steps == 1: the prefill token was the whole job.
+                    retire_done(engine, stack, metrics, seq);
+                } else {
+                    live.push(seq);
+                }
+            }
+            Err(e) => {
+                lock(metrics).failed += 1;
+                let _ = events.send(JobEvent::Failed(e));
+            }
+        }
+    }
+    if attempted > 0 {
+        let mut m = lock(metrics);
+        m.record_batch(attempted);
+        m.live_peak = m.live_peak.max(live.len() as u64);
+    }
+}
+
+/// One scheduler round: a single decode step for every live sequence in
+/// [`seq_round_order`], streaming each token and observing cancellation
+/// and deadlines between steps.  Finished, cancelled, expired, and
+/// failed sequences retire immediately (their KV caches free with the
+/// session); survivors stay for the next round.
+fn decode_round(
+    engine: &mut TileEngine,
+    cfg: &ServerConfig,
+    prepared: &[(String, PreparedStack)],
+    metrics: &Mutex<Metrics>,
+    live: &mut Vec<LiveSeq>,
+) {
+    live.sort_by(|a, b| {
+        seq_round_order(
+            (a.priority, a.model.as_str(), a.arrived),
+            (b.priority, b.model.as_str(), b.arrived),
+        )
+    });
+    let mut i = 0;
+    while i < live.len() {
+        // Between-step QoS: cancellation and deadlines bind
+        // mid-generation, at decode-round granularity.
+        if live[i].cancel.is_cancelled() {
+            let seq = live.remove(i);
+            lock(metrics).cancelled += 1;
+            let _ = seq.events.send(JobEvent::Failed(ServeError::Cancelled));
+            continue;
+        }
+        let now = Instant::now();
+        if live[i].deadline.map_or(false, |d| d <= now) {
+            let seq = live.remove(i);
+            lock(metrics).expired += 1;
+            let waited = now.duration_since(seq.arrived);
+            let _ = seq.events.send(JobEvent::Failed(ServeError::DeadlineExceeded { waited }));
+            continue;
+        }
+        let Some((_, stack)) = prepared.iter().find(|(n, _)| n == &live[i].model) else {
+            let seq = live.remove(i);
+            lock(metrics).failed += 1;
+            let _ = seq.events.send(JobEvent::Failed(ServeError::engine(format!(
+                "model '{}' not prepared on this fabric",
+                seq.model
+            ))));
+            continue;
+        };
+        // KV caches are plain device memory — they survive register
+        // reprogramming, so interleaving models costs a program(), not
+        // a re-prefill.
+        if !engine.is_programmed_for(&stack.cfg) {
+            match engine.program(&stack.cfg) {
+                Ok(()) => lock(metrics).reprograms += 1,
+                Err(e) => {
+                    let seq = live.remove(i);
+                    lock(metrics).failed += 1;
+                    let _ = seq.events.send(JobEvent::Failed(ServeError::ProgramFailed(format!(
+                        "programming registers for model '{}': {e}",
+                        seq.model
+                    ))));
+                    continue;
+                }
+            }
+        }
+        engine.opt_level = live[i].opt_level.unwrap_or(cfg.opt_level);
+        let seq = &mut live[i];
+        match engine.step_once(stack, &mut seq.session) {
+            Ok((index, token)) => {
+                let delivered = seq
+                    .events
+                    .send(JobEvent::Token(TokenEvent {
+                        index,
+                        token,
+                        row: seq.session.last_row().to_vec(),
+                    }))
+                    .is_ok();
+                if !delivered {
+                    // The JobHandle is gone: nobody can observe the
+                    // result, so stop burning decode steps on it.
+                    live.remove(i);
+                    lock(metrics).cancelled += 1;
+                    continue;
+                }
+                if seq.session.is_done() {
+                    let seq = live.remove(i);
+                    retire_done(engine, stack, metrics, seq);
+                    continue;
+                }
+                i += 1;
+            }
+            Err(e) => {
+                let seq = live.remove(i);
+                lock(metrics).failed += 1;
+                let _ = seq.events.send(JobEvent::Failed(e));
+            }
+        }
+    }
+    lock(metrics).decode_rounds += 1;
+}
+
+/// Retire a finished sequence: close out its transcript and timing,
+/// record success-only samples, and deliver the final output.
+fn retire_done(
+    engine: &TileEngine,
+    stack: &PreparedStack,
+    metrics: &Mutex<Metrics>,
+    seq: LiveSeq,
+) {
+    let LiveSeq { arrived, priority, events, exec_start, ttft, session, .. } = seq;
+    match engine.finish_generation(stack, session) {
+        Ok(g) => {
+            // `compute` spans admission → completion, so under
+            // interleaving it includes rounds spent on *other* live
+            // sequences — the wall-clock this sequence was held live.
+            let timing = Timing {
+                compute: exec_start.elapsed(),
+                queue_wait: exec_start.duration_since(arrived),
+                latency: arrived.elapsed(),
+            };
+            {
+                let mut m = lock(metrics);
+                m.record_generation(g.prefill, &g.step_times);
+                m.record(timing.compute, timing.queue_wait, timing.latency);
+                m.record_priority(priority);
+                m.record_ttft(ttft);
+            }
+            let _ = events.send(JobEvent::Done(Box::new(JobOutput::Generate(GenerateOutput {
+                rows: g.rows,
+                tokens: g.tokens,
+                timing,
+                prefill: g.prefill,
+                step_times: g.step_times,
+            }))));
+        }
+        Err(e) => {
+            lock(metrics).failed += 1;
+            let _ = events.send(JobEvent::Failed(e));
+        }
+    }
+}
+
+/// The batch executor: serve one model-homogeneous *encode* batch
+/// whole.  Generations never reach here — the fabric loop routes them
+/// to [`admit_generations`] and the sequence scheduler.
 fn serve_batch(
     engine: &mut TileEngine,
     cfg: &ServerConfig,
@@ -980,86 +1363,29 @@ fn serve_batch(
         let priority = job.qos.priority;
         let queue_wait = arrived.elapsed();
         let t0 = Instant::now();
-        let JobState { submission, events, cancel, .. } = job;
-        match submission {
-            Submission::Encode { input, .. } => match engine.run_encoder(stack, &input) {
-                Ok(output) => {
-                    let timing = Timing {
-                        compute: t0.elapsed(),
-                        queue_wait,
-                        latency: arrived.elapsed(),
-                    };
-                    {
-                        let mut m = lock(metrics);
-                        m.record(timing.compute, timing.queue_wait, timing.latency);
-                        m.record_priority(priority);
-                    }
-                    let _ = events
-                        .send(JobEvent::Done(Box::new(JobOutput::Encode(EncodeOutput {
-                            output,
-                            timing,
-                        }))));
-                }
-                Err(e) => {
-                    lock(metrics).failed += 1;
-                    let _ = events.send(JobEvent::Failed(e));
-                }
-            },
-            Submission::Generate { prompt, source, steps, .. } => {
-                // Stream each token as its decode step completes; observe
-                // cancellation between steps.  A failed send means the
-                // JobHandle is gone — nobody can ever observe the result,
-                // so stop instead of burning the remaining decode steps.
-                let mut on_token = |index: usize, token: usize, row: &[f32]| {
-                    let delivered = events
-                        .send(JobEvent::Token(TokenEvent { index, token, row: row.to_vec() }))
-                        .is_ok();
-                    if cancel.is_cancelled() || !delivered {
-                        StepControl::Stop
-                    } else {
-                        StepControl::Continue
-                    }
-                };
-                match engine.generate_streamed(stack, &prompt, source.as_ref(), steps, &mut on_token)
+        let JobState { submission, events, .. } = job;
+        let input = match submission {
+            Submission::Encode { input, .. } => input,
+            Submission::Generate { .. } => unreachable!("the fabric loop admits generations"),
+        };
+        match engine.run_encoder(stack, &input) {
+            Ok(output) => {
+                let timing =
+                    Timing { compute: t0.elapsed(), queue_wait, latency: arrived.elapsed() };
                 {
-                    Ok(Some(g)) => {
-                        let timing = Timing {
-                            compute: t0.elapsed(),
-                            queue_wait,
-                            latency: arrived.elapsed(),
-                        };
-                        {
-                            // Success-only sampling: a failed or cancelled
-                            // generation must never pollute the
-                            // prefill/per-token summaries.
-                            let mut m = lock(metrics);
-                            m.record_generation(g.prefill, &g.step_times);
-                            m.record(timing.compute, timing.queue_wait, timing.latency);
-                            m.record_priority(priority);
-                        }
-                        let _ = events.send(JobEvent::Done(Box::new(JobOutput::Generate(
-                            GenerateOutput {
-                                rows: g.rows,
-                                tokens: g.tokens,
-                                timing,
-                                prefill: g.prefill,
-                                step_times: g.step_times,
-                            },
-                        ))));
-                    }
-                    Ok(None) => {
-                        // Stopped between decode steps — an explicit
-                        // cancel, or the JobHandle was dropped (send
-                        // failed, nobody can observe the result).  Either
-                        // way no partial generation reaches the metrics.
-                        lock(metrics).cancelled += 1;
-                        let _ = events.send(JobEvent::Failed(ServeError::Cancelled));
-                    }
-                    Err(e) => {
-                        lock(metrics).failed += 1;
-                        let _ = events.send(JobEvent::Failed(e));
-                    }
+                    let mut m = lock(metrics);
+                    m.record(timing.compute, timing.queue_wait, timing.latency);
+                    m.record_priority(priority);
                 }
+                let _ = events
+                    .send(JobEvent::Done(Box::new(JobOutput::Encode(EncodeOutput {
+                        output,
+                        timing,
+                    }))));
+            }
+            Err(e) => {
+                lock(metrics).failed += 1;
+                let _ = events.send(JobEvent::Failed(e));
             }
         }
     }
@@ -1349,6 +1675,33 @@ mod tests {
         let mut cfg = ServerConfig::new(vec![]);
         cfg.queue_depth = 0;
         assert!(matches!(Server::start(cfg), Err(ServeError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn zero_max_seqs_is_refused() {
+        let mut cfg = ServerConfig::new(vec![]);
+        cfg.max_seqs = 0;
+        assert!(matches!(Server::start(cfg), Err(ServeError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn scheduler_round_order_is_priority_model_arrival() {
+        // The sequence scheduler's per-round order: QoS priority leads,
+        // same-model sequences group (one reprogram per model per
+        // round), FIFO within a model.
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(1);
+        let mut seqs = vec![
+            ("n-b-late", Priority::Normal, "b", t1),
+            ("n-a-late", Priority::Normal, "a", t1),
+            ("h-b", Priority::High, "b", t0),
+            ("n-a-early", Priority::Normal, "a", t0),
+            ("l-a", Priority::Low, "a", t0),
+            ("h-a", Priority::High, "a", t1),
+        ];
+        seqs.sort_by(|a, b| seq_round_order((a.1, a.2, a.3), (b.1, b.2, b.3)));
+        let order: Vec<&str> = seqs.iter().map(|s| s.0).collect();
+        assert_eq!(order, ["h-a", "h-b", "n-a-early", "n-a-late", "n-b-late", "l-a"]);
     }
 
     #[test]

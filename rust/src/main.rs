@@ -29,10 +29,10 @@ fn usage() -> ! {
          \n  gantt --model <preset>\
          \n  report <fig5|fig8|fig9|fig10|fig11|fig12|fig13|table1|table2|ablation|all> [--out DIR]\
          \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
-         \n  serve --model <preset> [--requests N] [--batch N] [--pool N] [--opt-level 0|1|2]\
-         \n        [--priority low|normal|high] [--deadline-ms N]\
-         \n  generate --model <preset> [--steps N] [--prompt-len N] [--pool N] [--stream]\
-         \n        [--priority low|normal|high]\
+         \n  serve --model <preset> [--requests N] [--batch N] [--pool N] [--max-seqs N]\
+         \n        [--opt-level 0|1|2] [--priority low|normal|high] [--deadline-ms N]\
+         \n  generate --model <preset> [--steps N] [--prompt-len N] [--pool N] [--max-seqs N]\
+         \n        [--stream] [--priority low|normal|high]\
          \n  sweep <tiles|heads>\
          \n  presets | list-models\
          \n  validate\
@@ -146,6 +146,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
     scfg.policy.max_batch = batch;
     scfg.pool_size = pool;
+    if let Some(n) = flag_value(args, "--max-seqs").and_then(|v| v.parse().ok()) {
+        scfg.max_seqs = n;
+    }
     scfg.opt_level = match flag_value(args, "--opt-level").as_deref() {
         Some("0") => OptLevel::O0,
         Some("1") => OptLevel::O1,
@@ -210,6 +213,9 @@ fn cmd_generate(args: &[String]) -> anyhow::Result<()> {
 
     let mut scfg = ServerConfig::new(vec![ModelSpec::new(&model, cfg, 42)]);
     scfg.pool_size = pool;
+    if let Some(n) = flag_value(args, "--max-seqs").and_then(|v| v.parse().ok()) {
+        scfg.max_seqs = n;
+    }
     println!("starting {pool} fabric(s) for {cfg} ...");
     let server = Server::start(scfg)?;
     let prompt = weights::init_input(7, prompt_len, cfg.d_model);

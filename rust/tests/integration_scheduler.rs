@@ -1,0 +1,397 @@
+//! Sequence-scheduler invariants, artifact-free.  The continuous-batching
+//! worker in `coordinator::server` interleaves decode steps of many live
+//! sequences (and whole encode batches) on one fabric; its correctness
+//! contract is that interleaving is *invisible* to each sequence — the
+//! streamed transcript must be bit-identical to draining that sequence
+//! alone, cancellation must not perturb survivors, and the shared scratch
+//! pool must keep recycling.  These tests pin that contract at the replay
+//! level with a pseudo-numeric backend (same construction as
+//! `integration_opt.rs`): each sequence owns a `KvCache<Tensor>` fed by
+//! the real prefill/decode-step programs, and a scheduler round is "one
+//! step per live sequence" exactly as `decode_round` runs it.  The
+//! PJRT/engine counterparts are gated on artifacts in
+//! `integration_decode.rs` and the server tests.
+
+use std::collections::HashMap;
+
+use adaptor::accel::decode::{self, KvCache};
+use adaptor::accel::schedule::{
+    self, optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder,
+    TileProgram, WeightKind, WeightRef, WeightSource,
+};
+use adaptor::model::TnnConfig;
+use adaptor::runtime::{FabricBackend, Tensor, TensorPool};
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+/// Decoder-only topology with room for a prompt plus several decode
+/// steps under `sl_max`.
+fn gpt() -> TnnConfig {
+    TnnConfig { seq_len: 32, heads: 4, d_model: 256, hidden: 1024, enc_layers: 0, dec_layers: 2 }
+}
+
+fn fnv(s: &str) -> u32 {
+    s.bytes().fold(2166136261u32, |h, b| (h ^ b as u32).wrapping_mul(16777619))
+}
+
+/// Pseudo-numeric backend: buffers are host tensors, dispatch output is a
+/// bounded deterministic mix of `(artifact, inputs)`.  Any cross-sequence
+/// contamination — a stale pooled buffer, a cache panel from the wrong
+/// sequence — changes some output bit-for-bit.
+struct HashBackend;
+
+impl FabricBackend for HashBackend {
+    type Buf = Tensor;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(t.clone())
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&Tensor],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        let n: usize = out_shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        let mut h = fnv(artifact);
+        for (k, t) in inputs.iter().enumerate() {
+            let len = t.data.len().max(1);
+            let w = ((h % 13) + k as u32 + 1) as f32 * 0.0625;
+            for (j, v) in data.iter_mut().enumerate() {
+                *v += t.data[(j + 7 * k) % len] * w;
+            }
+            h = h.wrapping_mul(16777619) ^ (k as u32 + 1);
+        }
+        for v in data.iter_mut() {
+            *v = (*v * 0.25).sin();
+        }
+        Ok(Tensor::new(out_shape.to_vec(), data))
+    }
+
+    fn fetch(&self, b: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(b.clone())
+    }
+}
+
+/// Fabric-fixed panel shape per weight kind (mirrors `integration_opt`).
+fn weight_shape(f: &FabricConstants, kind: WeightKind) -> Vec<usize> {
+    match kind {
+        WeightKind::Wq
+        | WeightKind::Wk
+        | WeightKind::Wv
+        | WeightKind::CWq
+        | WeightKind::CWk
+        | WeightKind::CWv => vec![f.ts_mha, f.dk],
+        WeightKind::QkvPacked => vec![f.ts_mha, 3 * f.dk],
+        WeightKind::Bq
+        | WeightKind::Bk
+        | WeightKind::Bv
+        | WeightKind::CBq
+        | WeightKind::CBk
+        | WeightKind::CBv => vec![f.dk],
+        WeightKind::BQkvPacked => vec![3 * f.dk],
+        WeightKind::Wo | WeightKind::CWo => vec![f.ts_ffn, f.ts_ffn],
+        WeightKind::Bo
+        | WeightKind::B2
+        | WeightKind::G1
+        | WeightKind::B1n
+        | WeightKind::G2
+        | WeightKind::B2n
+        | WeightKind::CBo
+        | WeightKind::CG
+        | WeightKind::CBn => vec![f.dmodel_max],
+        WeightKind::W1 => vec![f.ts_ffn, f.ffn_col],
+        WeightKind::B1 => vec![f.hidden_max],
+        WeightKind::W2 => vec![f.ffn_col, f.ts_ffn],
+        WeightKind::DWq | WeightKind::DWk | WeightKind::DWv | WeightKind::DCWq => {
+            vec![f.dmodel_max, f.dk]
+        }
+        WeightKind::DWo | WeightKind::DCWo => vec![f.dmodel_max, f.dmodel_max],
+        WeightKind::DW1 => vec![f.dmodel_max, f.hidden_max],
+        WeightKind::DW2 => vec![f.hidden_max, f.dmodel_max],
+    }
+}
+
+/// Deterministic weight stand-ins keyed by `WeightRef` — the same ref
+/// seeds the same tensor in every map, so prefill and step programs of
+/// one model agree on shared weights.
+struct HashWeights {
+    map: HashMap<WeightRef, Tensor>,
+}
+
+impl HashWeights {
+    fn for_program(prog: &TileProgram, f: &FabricConstants) -> Self {
+        let mut map = HashMap::new();
+        for step in &prog.steps {
+            let schedule::Step::Dispatch { args, .. } = step else { continue };
+            for arg in args {
+                let schedule::Operand::Weight(r) = arg else { continue };
+                map.entry(*r).or_insert_with(|| {
+                    let shape = weight_shape(f, r.kind);
+                    let seed =
+                        fnv(&format!("{:?}/{}/{}/{}", r.kind, r.layer, r.row, r.col)) % 1000;
+                    let n: usize = shape.iter().product();
+                    let data =
+                        (0..n).map(|i| ((seed as usize + i) as f32 * 0.137).sin()).collect();
+                    Tensor::new(shape, data)
+                });
+            }
+        }
+        HashWeights { map }
+    }
+}
+
+impl WeightSource<Tensor> for HashWeights {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Tensor> {
+        self.map.get(r).ok_or_else(|| anyhow::anyhow!("unseeded weight ref {r:?}"))
+    }
+}
+
+/// Per-sequence prompt: deterministic, distinct per `seed` so any
+/// cross-sequence leak shows up as a transcript mismatch.
+fn prompt_input(cfg: &TnnConfig, f: &FabricConstants, seed: usize) -> Tensor {
+    let mut t = Tensor::zeros(vec![f.sl_max, f.dmodel_max]);
+    for r in 0..cfg.seq_len {
+        for c in 0..cfg.d_model {
+            t.data[r * f.dmodel_max + c] = ((r * 31 + c + seed * 101) as f32 * 0.0917).sin();
+        }
+    }
+    t
+}
+
+/// One live generation as the scheduler holds it: the feedback row, the
+/// sequence-private KV cache, and the transcript of every step output.
+struct Seq {
+    row: Tensor,
+    cache: KvCache<Tensor>,
+    transcript: Vec<Vec<f32>>,
+}
+
+/// Admission: run the prefill program, seed the KV cache from its
+/// exports, and extract the last prompt row as the first step's input.
+fn begin_seq(
+    pre: &TileProgram,
+    weights: &HashWeights,
+    runtime: &schedule::RuntimeBufs<Tensor>,
+    seed: usize,
+    pool: Option<&TensorPool>,
+) -> Seq {
+    let backend = HashBackend;
+    let f = pre.fabric;
+    let cfg = pre.cfg;
+    let mut inputs = vec![prompt_input(&cfg, &f, seed)];
+    for h in &pre.aux_hosts {
+        let shape = pre.host_shapes[*h].clone();
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|j| ((j * 7 + 3) as f32 * 0.0713).sin()).collect();
+        inputs.push(Tensor::new(shape, data));
+    }
+    let (out, exports) =
+        schedule::replay_full(pre, &backend, weights, runtime, inputs, &[], pool).unwrap();
+    let prompt_len = cfg.seq_len / 2;
+    let cache = KvCache::from_prefill(&cfg, exports, prompt_len).unwrap();
+    let row_start = (prompt_len - 1) * f.dmodel_max;
+    let row = Tensor::new(
+        vec![1, f.dmodel_max],
+        out.data[row_start..row_start + f.dmodel_max].to_vec(),
+    );
+    Seq { row, cache, transcript: Vec::new() }
+}
+
+/// One decode step of one sequence: replay the step program against the
+/// sequence's cache, append the exported K/V row, feed the output row
+/// back — exactly the engine's `step_once` dataflow.
+fn step_seq(
+    step: &TileProgram,
+    weights: &HashWeights,
+    runtime: &schedule::RuntimeBufs<Tensor>,
+    seq: &mut Seq,
+    pool: Option<&TensorPool>,
+) {
+    let backend = HashBackend;
+    let f = step.fabric;
+    let pos = seq.cache.len;
+    let inputs = vec![
+        seq.row.clone(),
+        decode::step_mask_row(f.sl_max, pos),
+        decode::position_tensor(pos),
+    ];
+    let ext = seq.cache.externs();
+    let (out, exports) =
+        schedule::replay_full(step, &backend, weights, runtime, inputs, &ext, pool).unwrap();
+    seq.cache.apply_step(exports).unwrap();
+    seq.transcript.push(out.data.clone());
+    seq.row = out;
+}
+
+/// Build the O1-optimized prefill + step programs the serving path caches.
+fn programs(f: FabricConstants, cfg: TnnConfig) -> (TileProgram, TileProgram) {
+    let inv = ArtifactInventory::assume_all();
+    let mut pre = ScheduleBuilder::new(f, cfg).unwrap().build_prefill();
+    optimize(&mut pre, OptLevel::O1, &inv).unwrap();
+    let mut step = ScheduleBuilder::new(f, cfg).unwrap().build_step();
+    optimize(&mut step, OptLevel::O1, &inv).unwrap();
+    (pre, step)
+}
+
+/// Baseline: each sequence admitted and drained to completion alone
+/// (the pre-continuous-batching, one-job-at-a-time transcript).
+fn sequential_transcripts(
+    pre: &TileProgram,
+    step: &TileProgram,
+    pw: &HashWeights,
+    sw: &HashWeights,
+    runtime: &schedule::RuntimeBufs<Tensor>,
+    k: usize,
+    n: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    (0..k)
+        .map(|seed| {
+            let mut s = begin_seq(pre, pw, runtime, seed, None);
+            for _ in 0..n {
+                step_seq(step, sw, runtime, &mut s, None);
+            }
+            s.transcript
+        })
+        .collect()
+}
+
+#[test]
+fn interleaved_decode_rounds_are_bit_identical_to_sequential_serving() {
+    const K: usize = 3;
+    const N: usize = 6;
+    let f = fc();
+    let cfg = gpt();
+    let (pre, step) = programs(f, cfg);
+    let backend = HashBackend;
+    let runtime = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    let pw = HashWeights::for_program(&pre, &f);
+    let sw = HashWeights::for_program(&step, &f);
+
+    let sequential = sequential_transcripts(&pre, &step, &pw, &sw, &runtime, K, N);
+
+    // Continuous batching: admit all K, then N scheduler rounds of one
+    // step per live sequence, all sharing one scratch pool.
+    let pool = TensorPool::new();
+    let mut live: Vec<Seq> =
+        (0..K).map(|seed| begin_seq(&pre, &pw, &runtime, seed, Some(&pool))).collect();
+    for _ in 0..N {
+        for s in live.iter_mut() {
+            step_seq(&step, &sw, &runtime, s, Some(&pool));
+        }
+    }
+
+    for (k, s) in live.iter().enumerate() {
+        assert_eq!(s.transcript.len(), N, "sequence {k}");
+        assert!(
+            s.transcript == sequential[k],
+            "sequence {k}: interleaving changed the transcript"
+        );
+    }
+}
+
+#[test]
+fn encode_batches_interleave_without_perturbing_generations() {
+    const K: usize = 2;
+    const N: usize = 5;
+    let f = fc();
+    let cfg = gpt();
+    let (pre, step) = programs(f, cfg);
+    let backend = HashBackend;
+    let dec_rt = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    let pw = HashWeights::for_program(&pre, &f);
+    let sw = HashWeights::for_program(&step, &f);
+
+    // A second, encoder-only model sharing the fabric (the mixed
+    // Encode+Generate case the dispatcher produces).
+    let enc_cfg = TnnConfig::encoder(32, 256, 4, 2);
+    let mut enc = ScheduleBuilder::new(f, enc_cfg).unwrap().build();
+    optimize(&mut enc, OptLevel::O1, &ArtifactInventory::assume_all()).unwrap();
+    let ew = HashWeights::for_program(&enc, &f);
+    let enc_rt = schedule::build_runtime(&backend, &enc_cfg, &f).unwrap();
+    let enc_in = prompt_input(&enc_cfg, &f, 7);
+    let enc_alone =
+        schedule::replay_with(&enc, &backend, &ew, &enc_rt, enc_in.clone(), None).unwrap();
+
+    let sequential = sequential_transcripts(&pre, &step, &pw, &sw, &dec_rt, K, N);
+
+    // Interleave: every scheduler round serves one encode batch between
+    // decode steps, all on one pool.
+    let pool = TensorPool::new();
+    let mut live: Vec<Seq> =
+        (0..K).map(|seed| begin_seq(&pre, &pw, &dec_rt, seed, Some(&pool))).collect();
+    for round in 0..N {
+        let e = schedule::replay_with(&enc, &backend, &ew, &enc_rt, enc_in.clone(), Some(&pool))
+            .unwrap();
+        assert!(
+            e.data == enc_alone.data,
+            "round {round}: live generations perturbed the encode batch"
+        );
+        for s in live.iter_mut() {
+            step_seq(&step, &sw, &dec_rt, s, Some(&pool));
+        }
+    }
+    for (k, s) in live.iter().enumerate() {
+        assert!(
+            s.transcript == sequential[k],
+            "sequence {k}: encode batches perturbed the generation"
+        );
+    }
+}
+
+#[test]
+fn cancelling_one_sequence_leaves_survivors_bit_identical_and_scratch_recycled() {
+    const K: usize = 3;
+    const N: usize = 8;
+    const CANCEL_AT: usize = 3; // rounds the doomed sequence survives
+    let f = fc();
+    let cfg = gpt();
+    let (pre, step) = programs(f, cfg);
+    let backend = HashBackend;
+    let runtime = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    let pw = HashWeights::for_program(&pre, &f);
+    let sw = HashWeights::for_program(&step, &f);
+
+    let sequential = sequential_transcripts(&pre, &step, &pw, &sw, &runtime, K, N);
+
+    let pool = TensorPool::new();
+    let mut live: Vec<(usize, Seq)> =
+        (0..K).map(|seed| (seed, begin_seq(&pre, &pw, &runtime, seed, Some(&pool)))).collect();
+    let mut cancelled_prefix = None;
+    let mut warm_misses = 0;
+    for round in 0..N {
+        if round == CANCEL_AT {
+            // Mid-flight cancellation: the scheduler drops the LiveSeq,
+            // which frees the sequence's KV cache immediately.
+            let (_, doomed) = live.remove(1);
+            cancelled_prefix = Some(doomed.transcript);
+            let (_, misses) = pool.stats();
+            warm_misses = misses;
+        }
+        for (_, s) in live.iter_mut() {
+            step_seq(&step, &sw, &runtime, s, Some(&pool));
+        }
+    }
+
+    // Survivors never saw the cancellation.
+    for (seed, s) in &live {
+        assert_eq!(s.transcript.len(), N, "sequence {seed}");
+        assert!(
+            s.transcript == sequential[*seed],
+            "sequence {seed}: cancelling a peer changed the transcript"
+        );
+    }
+    // The cancelled sequence's partial transcript matches its own prefix.
+    let prefix = cancelled_prefix.unwrap();
+    assert_eq!(prefix.len(), CANCEL_AT);
+    assert!(prefix == sequential[1][..CANCEL_AT], "cancelled prefix diverged before the drop");
+    // Scratch keeps recycling after the drop: warm steady state allocates
+    // nothing new, and post-cancel rounds run on recycled buffers.
+    let (hits, misses) = pool.stats();
+    assert_eq!(misses, warm_misses, "cancellation leaked pool scratch");
+    assert!(hits > 0, "post-cancel rounds must recycle scratch");
+}

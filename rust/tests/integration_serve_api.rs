@@ -122,6 +122,11 @@ fn config_failures_are_typed_without_any_fabric() {
     no_depth.queue_depth = 0;
     assert!(matches!(Server::start(no_depth), Err(ServeError::InvalidConfig(_))));
 
+    // a live set of zero could never admit a generation
+    let mut no_seqs = ServerConfig::new(vec![]);
+    no_seqs.max_seqs = 0;
+    assert!(matches!(Server::start(no_seqs), Err(ServeError::InvalidConfig(_))));
+
     let pinned = ModelSpec::new("pinned", presets::small_encoder(32, 1), 1).with_affinity(5);
     let mut cfg = ServerConfig::new(vec![pinned]);
     cfg.pool_size = 2;
