@@ -80,6 +80,30 @@ fn bench_schedule_compiler(results: &mut Vec<BenchResult>) {
         waved.total_cycles,
         100.0 * (1.0 - waved.total_cycles as f64 / seq.total_cycles as f64),
     );
+
+    // --- length-adaptive request price per bucket: the cycles a request
+    // of 1/4, 1/2 and full seq_len pays through the covering bucket's
+    // skippable program, against the dense max-length program every
+    // request used to pay (the recovered padding waste, Table 2's
+    // per-bucket rows).  Each row also lands in BENCH_hotpath.json.
+    println!("== length-adaptive dispatch (artifact-free) ==");
+    println!("{}", header());
+    let dense_cycles = cycle::replay_program(&opt).unwrap().total_cycles;
+    for rows in [cfg.seq_len / 4, cfg.seq_len / 2, cfg.seq_len] {
+        let rep = cycle::estimate_adaptive(&cfg, &fc, rows, OptLevel::O2).unwrap();
+        let r = bench(&format!("cycle/adaptive_live{rows}_of{}", cfg.seq_len), 3, 30, || {
+            std::hint::black_box(cycle::estimate_adaptive(&cfg, &fc, rows, OptLevel::O2).unwrap());
+        });
+        println!("{}", r.line());
+        results.push(r);
+        println!(
+            "    {rows:>3} live rows: {} cycles vs {} dense ({:.1}% recovered)",
+            rep.total_cycles,
+            dense_cycles,
+            100.0 * (1.0 - rep.total_cycles as f64 / dense_cycles as f64),
+        );
+    }
+    println!();
 }
 
 fn bench_pjrt(results: &mut Vec<BenchResult>) -> anyhow::Result<()> {

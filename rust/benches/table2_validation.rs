@@ -1,7 +1,7 @@
 //! Bench + regenerator for Table 2: analytical vs cycle-level simulation
 //! vs schedule replay, timing all three (build+replay of the TileProgram
 //! is the expensive one — which is why the engine caches it per topology).
-use adaptor::accel::schedule::{AttentionMode, FabricConstants};
+use adaptor::accel::schedule::{AttentionMode, FabricConstants, OptLevel};
 use adaptor::accel::sim::cycle;
 use adaptor::accel::{latency, sim, tiling::TileConfig};
 use adaptor::analysis::report;
@@ -15,7 +15,7 @@ fn main() {
     let t = TileConfig::paper_optimum();
     // default fabric geometry, but the Table 2 rows run 8 heads (dk = 96)
     let fc = FabricConstants { dk: 96, ..FabricConstants::artifact_default() };
-    let cases = vec![
+    let mut cases = vec![
         bench("table2/analytical_model", 10, 2000, || {
             std::hint::black_box(latency::model_latency(&cfg, &t));
         }),
@@ -28,5 +28,21 @@ fn main() {
             );
         }),
     ];
+    // Per-bucket rows: what a request of 1/4, 1/2 and full seq_len pays
+    // through the covering bucket's skippable program, against the dense
+    // max-length replay every request used to pay.
+    let dense = cycle::estimate(&cfg, &fc, AttentionMode::Split, false, false).unwrap();
+    println!("length-adaptive request price (dense {} cycles):", dense.total_cycles);
+    for rows in [cfg.seq_len / 4, cfg.seq_len / 2, cfg.seq_len] {
+        let rep = cycle::estimate_adaptive(&cfg, &fc, rows, OptLevel::O1).unwrap();
+        println!(
+            "  {rows:>3} live rows -> {} cycles ({:.1}% recovered)",
+            rep.total_cycles,
+            100.0 * (1.0 - rep.total_cycles as f64 / dense.total_cycles as f64),
+        );
+        cases.push(bench(&format!("table2/adaptive_live{rows}_of{}", cfg.seq_len), 3, 50, || {
+            std::hint::black_box(cycle::estimate_adaptive(&cfg, &fc, rows, OptLevel::O1).unwrap());
+        }));
+    }
     run_suite("Table 2 — model vs simulation vs schedule replay cost", cases);
 }

@@ -11,8 +11,8 @@
 //! activations stay in BRAM between layers).
 
 use super::{
-    AttentionMode, FabricConstants, HostId, Operand, RuntimeId, SlotId, Step, TileProgram,
-    WeightKind, WeightRef,
+    length_tiers, AttentionMode, FabricConstants, HostId, LivePred, Operand, RuntimeId, SlotId,
+    Step, TileProgram, WeightKind, WeightRef,
 };
 use crate::accel::decode::ExternLayout;
 use crate::model::TnnConfig;
@@ -30,6 +30,7 @@ pub struct ScheduleBuilder {
     mode: AttentionMode,
     qkv_packed: bool,
     quantized: bool,
+    skippable: bool,
     steps: Vec<Step>,
     host_shapes: Vec<Vec<usize>>,
     n_slots: usize,
@@ -46,6 +47,7 @@ impl ScheduleBuilder {
             mode: AttentionMode::Split,
             qkv_packed: false,
             quantized: false,
+            skippable: false,
             steps: Vec::new(),
             host_shapes: Vec::new(),
             n_slots: 0,
@@ -64,6 +66,18 @@ impl ScheduleBuilder {
 
     pub fn quantized(mut self, on: bool) -> Self {
         self.quantized = on;
+        self
+    }
+
+    /// Emit **skippable** attention chains: one copy per length tier of
+    /// [`length_tiers`]`(seq_len)`, each behind a disjoint [`LivePred`]
+    /// and fenced by that tier's mask, all converging on one shared
+    /// output slot.  Replay fires exactly the tier covering the request's
+    /// live row count; the rest are skipped (and priced at zero by the
+    /// cycle backend).  Off by default — the lowering is then
+    /// byte-identical to the legacy dense stream.
+    pub fn skippable(mut self, on: bool) -> Self {
+        self.skippable = on;
         self
     }
 
@@ -91,9 +105,73 @@ impl ScheduleBuilder {
         args: Vec<Operand>,
         out_shape: Vec<usize>,
     ) -> SlotId {
+        self.dispatch_pred(artifact, args, out_shape, None)
+    }
+
+    fn dispatch_pred(
+        &mut self,
+        artifact: &'static str,
+        args: Vec<Operand>,
+        out_shape: Vec<usize>,
+        pred: Option<LivePred>,
+    ) -> SlotId {
         let dst = self.slot();
-        self.steps.push(Step::Dispatch { artifact, args, dst, out_shape });
+        self.steps.push(Step::Dispatch { artifact, args, dst, out_shape, pred });
         dst
+    }
+
+    /// Predicated dispatch into a caller-chosen slot — how the tiers of
+    /// one skippable chain share a single output slot (disjoint
+    /// predicates: exactly one tier writes it per replay).
+    fn dispatch_into(
+        &mut self,
+        artifact: &'static str,
+        args: Vec<Operand>,
+        dst: SlotId,
+        out_shape: Vec<usize>,
+        pred: Option<LivePred>,
+    ) {
+        self.steps.push(Step::Dispatch { artifact, args, dst, out_shape, pred });
+    }
+
+    /// The `(tier, predicate)` list of one skippable attention chain:
+    /// predicates partition `(0, seq_len]`, so exactly one fires per
+    /// request.  In dense mode (or when the grid degenerates to one
+    /// tier) this is a single unpredicated entry — the legacy lowering.
+    fn attn_tiers(&self) -> Vec<(usize, Option<LivePred>)> {
+        if !self.skippable {
+            return vec![(self.cfg.seq_len, None)];
+        }
+        let tiers = length_tiers(self.cfg.seq_len);
+        if tiers.len() == 1 {
+            return vec![(self.cfg.seq_len, None)];
+        }
+        let mut lo = 0usize;
+        tiers
+            .into_iter()
+            .map(|t| {
+                let pred = LivePred { lo, hi: t };
+                lo = t;
+                (t, Some(pred))
+            })
+            .collect()
+    }
+
+    /// The mask fencing attention at `tier` rows: the topology's own mask
+    /// for the top tier (value-identical by construction), a
+    /// [`RuntimeId::TierMask`] otherwise.
+    fn tier_mask(&self, tier: usize, causal: bool) -> RuntimeId {
+        if tier == self.cfg.seq_len {
+            if causal {
+                RuntimeId::CausalMask
+            } else {
+                RuntimeId::Mask
+            }
+        } else if causal {
+            RuntimeId::TierCausalMask(tier as u16)
+        } else {
+            RuntimeId::TierMask(tier as u16)
+        }
     }
 
     fn fetch(&mut self, src: SlotId, shape: Vec<usize>) -> HostId {
@@ -193,15 +271,21 @@ impl ScheduleBuilder {
                         vec![Operand::Slot(acc), w(layer, WeightKind::BQkvPacked, head, 0)],
                         out3.clone(),
                     );
-                    let o = self.dispatch(
-                        "attn_packed",
-                        vec![
-                            Operand::Slot(qkv),
-                            Operand::Runtime(RuntimeId::Mask),
-                            Operand::Runtime(RuntimeId::Scale),
-                        ],
-                        vec![fc.sl_max, fc.dk],
-                    );
+                    let o = self.slot();
+                    for (tier, pred) in self.attn_tiers() {
+                        let mask = self.tier_mask(tier, false);
+                        self.dispatch_into(
+                            "attn_packed",
+                            vec![
+                                Operand::Slot(qkv),
+                                Operand::Runtime(mask),
+                                Operand::Runtime(RuntimeId::Scale),
+                            ],
+                            o,
+                            vec![fc.sl_max, fc.dk],
+                            pred,
+                        );
+                    }
                     let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
                     self.assemble(oh, attn, head * fc.dk);
                 }
@@ -211,39 +295,27 @@ impl ScheduleBuilder {
                     let k = self.project(layer, head, &x_panels, WeightKind::Wk, WeightKind::Bk);
                     let v = self.project(layer, head, &x_panels, WeightKind::Wv, WeightKind::Bv);
                     let o = match self.mode {
-                        AttentionMode::Fused => self.dispatch(
-                            "attn_fused",
-                            vec![
-                                Operand::Slot(q),
-                                Operand::Slot(k),
-                                Operand::Slot(v),
-                                Operand::Runtime(RuntimeId::Mask),
-                                Operand::Runtime(RuntimeId::Scale),
-                            ],
-                            vec![fc.sl_max, fc.dk],
-                        ),
-                        AttentionMode::Split => {
-                            let s = self.dispatch(
-                                "qk_scores",
-                                vec![
-                                    Operand::Slot(q),
-                                    Operand::Slot(k),
-                                    Operand::Runtime(RuntimeId::Mask),
-                                    Operand::Runtime(RuntimeId::Scale),
-                                ],
-                                vec![fc.sl_max, fc.sl_max],
-                            );
-                            let p = self.dispatch(
-                                "softmax",
-                                vec![Operand::Slot(s)],
-                                vec![fc.sl_max, fc.sl_max],
-                            );
-                            self.dispatch(
-                                "sv",
-                                vec![Operand::Slot(p), Operand::Slot(v)],
-                                vec![fc.sl_max, fc.dk],
-                            )
+                        AttentionMode::Fused => {
+                            let out = self.slot();
+                            for (tier, pred) in self.attn_tiers() {
+                                let mask = self.tier_mask(tier, false);
+                                self.dispatch_into(
+                                    "attn_fused",
+                                    vec![
+                                        Operand::Slot(q),
+                                        Operand::Slot(k),
+                                        Operand::Slot(v),
+                                        Operand::Runtime(mask),
+                                        Operand::Runtime(RuntimeId::Scale),
+                                    ],
+                                    out,
+                                    vec![fc.sl_max, fc.dk],
+                                    pred,
+                                );
+                            }
+                            out
                         }
+                        AttentionMode::Split => self.attn_chain_tiered(q, k, v, false),
                     };
                     let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
                     self.assemble(oh, attn, head * fc.dk);
@@ -330,6 +402,48 @@ impl ScheduleBuilder {
         );
         let p = self.dispatch("softmax", vec![Operand::Slot(s)], vec![fc.sl_max, fc.sl_max]);
         self.dispatch("sv", vec![Operand::Slot(p), Operand::Slot(v)], vec![fc.sl_max, fc.dk])
+    }
+
+    /// [`ScheduleBuilder::attn_chain`], once per length tier in skippable
+    /// mode: every tier's `sv` converges on one shared output slot behind
+    /// disjoint predicates.  Dense mode (single unpredicated tier)
+    /// lowers exactly as the legacy chain.
+    fn attn_chain_tiered(&mut self, q: SlotId, k: SlotId, v: SlotId, causal: bool) -> SlotId {
+        let tiers = self.attn_tiers();
+        if tiers.len() == 1 && tiers[0].1.is_none() {
+            let mask = self.tier_mask(tiers[0].0, causal);
+            return self.attn_chain(q, k, v, mask);
+        }
+        let fc = self.fc;
+        let out = self.slot();
+        for (tier, pred) in tiers {
+            let mask = self.tier_mask(tier, causal);
+            let s = self.dispatch_pred(
+                "qk_scores",
+                vec![
+                    Operand::Slot(q),
+                    Operand::Slot(k),
+                    Operand::Runtime(mask),
+                    Operand::Runtime(RuntimeId::Scale),
+                ],
+                vec![fc.sl_max, fc.sl_max],
+                pred,
+            );
+            let p = self.dispatch_pred(
+                "softmax",
+                vec![Operand::Slot(s)],
+                vec![fc.sl_max, fc.sl_max],
+                pred,
+            );
+            self.dispatch_into(
+                "sv",
+                vec![Operand::Slot(p), Operand::Slot(v)],
+                out,
+                vec![fc.sl_max, fc.dk],
+                pred,
+            );
+        }
+        out
     }
 
     /// Output-projection block (the encoder's FFN1_PM shape): 2-D grid
@@ -535,7 +649,9 @@ impl ScheduleBuilder {
                 let v = self.project(layer, head, &x_panels, WeightKind::Wv, WeightKind::Bv);
                 exports.push(k);
                 exports.push(v);
-                let o = self.attn_chain(q, k, v, RuntimeId::CausalMask);
+                // Causal tiers fence rows *and* keys at the tier — exact
+                // for any live prefix within the fired tier.
+                let o = self.attn_chain_tiered(q, k, v, true);
                 let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
                 self.assemble(oh, attn, head * fc.dk);
             }
@@ -565,6 +681,8 @@ impl ScheduleBuilder {
                     exports.push(cv);
                     // Queries and memory keys are both fenced by the
                     // padding mask (no causality across the two streams).
+                    // Never tiered: the memory fence must stay at the
+                    // encoder's seq_len regardless of the prompt length.
                     let o = self.attn_chain(q, ck, cv, RuntimeId::Mask);
                     let oh = self.fetch(o, vec![fc.sl_max, fc.dk]);
                     self.assemble(oh, cattn, head * fc.dk);

@@ -173,6 +173,33 @@ impl FabricConstants {
     }
 }
 
+/// Smallest length tier — buckets never shrink below this row count, so
+/// very short requests share one program instead of fragmenting the
+/// program cache.
+pub const MIN_TIER: usize = 16;
+
+/// The length-tier grid of a topology with `seq_len` rows: powers of two
+/// from [`MIN_TIER`] up, always ending exactly at `seq_len` (the top
+/// tier), e.g. `128 → [16, 32, 64, 128]`, `100 → [16, 32, 64, 100]`,
+/// `16 → [16]`.  Bucketed program specialization and skippable attention
+/// chains both quantize request length onto this grid.
+pub fn length_tiers(seq_len: usize) -> Vec<usize> {
+    let mut tiers = Vec::new();
+    let mut t = MIN_TIER;
+    while t < seq_len {
+        tiers.push(t);
+        t *= 2;
+    }
+    tiers.push(seq_len);
+    tiers
+}
+
+/// The smallest tier of [`length_tiers`]`(seq_len)` covering `rows` —
+/// the dispatch-time bucket of a request with `rows` live rows.
+pub fn covering_bucket(rows: usize, seq_len: usize) -> usize {
+    length_tiers(seq_len).into_iter().find(|&t| t >= rows).unwrap_or(seq_len)
+}
+
 /// Index of a transient device-resident value.
 pub type SlotId = usize;
 /// Index of a host-side scratch tensor.
@@ -206,6 +233,14 @@ pub enum RuntimeId {
     ZeroCol,
     /// Zero accumulator, `[SL_MAX, 3*DK]` (packed QKV).
     ZeroQkv3,
+    /// Additive attention mask fencing rows/keys beyond length tier `t` —
+    /// the per-tier fence of a skippable attention chain.
+    /// `TierMask(t)` with `t == seq_len` is value-identical to
+    /// [`RuntimeId::Mask`]; smaller tiers fence tighter.
+    TierMask(u16),
+    /// Causal variant of [`RuntimeId::TierMask`] (decoder prefill
+    /// self-attention tiers).
+    TierCausalMask(u16),
 }
 
 /// Which prepared-weight tensor a [`WeightRef`] names.
@@ -291,6 +326,26 @@ pub enum Operand {
     Extern(usize),
 }
 
+/// Replay-time liveness predicate of a skippable dispatch: fires iff the
+/// request's live row count `live` satisfies `lo < live <= hi`.  The
+/// tiers of one skippable attention chain carry disjoint predicates
+/// partitioning `(0, seq_len]`, so exactly one tier fires per request;
+/// a dispatch whose predicate does not fire is skipped outright — no
+/// operand resolution, no backend call, destination slot untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LivePred {
+    /// Exclusive lower bound on the live row count.
+    pub lo: usize,
+    /// Inclusive upper bound — the tier's fence (its mask row count).
+    pub hi: usize,
+}
+
+impl LivePred {
+    pub fn fires(&self, live: usize) -> bool {
+        self.lo < live && live <= self.hi
+    }
+}
+
 /// One instruction of a [`TileProgram`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum Step {
@@ -298,8 +353,16 @@ pub enum Step {
     Upload { host: HostId, dst: SlotId },
     /// Run artifact `artifact` over `args`, writing device slot `dst`.
     /// `out_shape` is the artifact's (fabric-fixed) output shape, recorded
-    /// so shape-only backends can replay without a manifest.
-    Dispatch { artifact: &'static str, args: Vec<Operand>, dst: SlotId, out_shape: Vec<usize> },
+    /// so shape-only backends can replay without a manifest.  `pred`
+    /// makes the dispatch skippable: it executes only when the predicate
+    /// fires against the replay's live row count (see [`LivePred`]).
+    Dispatch {
+        artifact: &'static str,
+        args: Vec<Operand>,
+        dst: SlotId,
+        out_shape: Vec<usize>,
+        pred: Option<LivePred>,
+    },
     /// Device slot `src` → host scratch `host`.
     Fetch { src: SlotId, host: HostId },
     /// Column panel `[rows, width]` of host `src` (columns `c0..c0+width`)
@@ -509,6 +572,63 @@ impl TileProgram {
         out
     }
 
+    /// Every tier-mask runtime id the program references (both families,
+    /// deduplicated, program order) — what [`upload_tier_masks`] must
+    /// provide before replay.  Empty for non-tiered programs.
+    pub fn tier_mask_ids(&self) -> Vec<RuntimeId> {
+        let mut out = Vec::new();
+        for step in &self.steps {
+            if let Step::Dispatch { args, .. } = step {
+                for a in args {
+                    if let Operand::Runtime(
+                        id @ (RuntimeId::TierMask(_) | RuntimeId::TierCausalMask(_)),
+                    ) = a
+                    {
+                        if !out.contains(id) {
+                            out.push(*id);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of skippable (predicated) dispatches in the stream.
+    pub fn predicated_dispatch_count(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, Step::Dispatch { pred: Some(_), .. }))
+            .count()
+    }
+
+    /// Number of dispatches that actually execute when replayed with
+    /// `live` live rows — unpredicated dispatches plus the fired tiers.
+    pub fn live_dispatch_count(&self, live: usize) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| match s {
+                Step::Dispatch { pred: Some(p), .. } => p.fires(live),
+                Step::Dispatch { pred: None, .. } => true,
+                _ => false,
+            })
+            .count()
+    }
+
+    /// The artifact names that actually dispatch when replayed with
+    /// `live` live rows, in program order (skipped tiers elided).  For a
+    /// program with no predicates this is [`Self::dispatch_sequence`].
+    pub fn live_dispatch_sequence(&self, live: usize) -> Vec<&'static str> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Dispatch { artifact, pred: Some(p), .. } if p.fires(live) => Some(*artifact),
+                Step::Dispatch { artifact, pred: None, .. } => Some(*artifact),
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Maximum number of dispatches sharing one wave — the peak module
     /// parallelism the schedule exposes (1 for an unscheduled program
     /// with any dispatch at all).
@@ -546,6 +666,12 @@ pub struct RuntimeBufs<T> {
     pub zero_ffn: T,
     pub zero_col: T,
     pub zero_qkv3: T,
+    /// Per-tier additive masks keyed by tier row count — the fences of
+    /// skippable attention chains, uploaded by [`upload_tier_masks`]
+    /// (empty for non-tiered programs).
+    pub tier_masks: Vec<(u16, T)>,
+    /// Causal counterparts of [`RuntimeBufs::tier_masks`].
+    pub tier_causal_masks: Vec<(u16, T)>,
 }
 
 impl<T> RuntimeBufs<T> {
@@ -561,6 +687,22 @@ impl<T> RuntimeBufs<T> {
             RuntimeId::ZeroFfn => &self.zero_ffn,
             RuntimeId::ZeroCol => &self.zero_col,
             RuntimeId::ZeroQkv3 => &self.zero_qkv3,
+            RuntimeId::TierMask(t) => self
+                .tier_masks
+                .iter()
+                .find(|(k, _)| *k == t)
+                .map(|(_, b)| b)
+                .unwrap_or_else(|| {
+                    panic!("tier mask {t} not uploaded — call upload_tier_masks first")
+                }),
+            RuntimeId::TierCausalMask(t) => self
+                .tier_causal_masks
+                .iter()
+                .find(|(k, _)| *k == t)
+                .map(|(_, b)| b)
+                .unwrap_or_else(|| {
+                    panic!("causal tier mask {t} not uploaded — call upload_tier_masks first")
+                }),
         }
     }
 }
@@ -593,6 +735,16 @@ pub fn runtime_tensor(id: RuntimeId, cfg: &TnnConfig, fc: &FabricConstants) -> T
         RuntimeId::ZeroFfn => Tensor::zeros(vec![fc.sl_max, fc.ts_ffn]),
         RuntimeId::ZeroCol => Tensor::zeros(vec![fc.sl_max, fc.ffn_col]),
         RuntimeId::ZeroQkv3 => Tensor::zeros(vec![fc.sl_max, 3 * fc.dk]),
+        // Tier masks fence at the tier's row count, not the topology's
+        // seq_len — the whole point of the per-tier chains.
+        RuntimeId::TierMask(t) => {
+            let m = crate::model::reference::attention_mask(fc.sl_max, t as usize, false);
+            Tensor::from_mat(&m)
+        }
+        RuntimeId::TierCausalMask(t) => {
+            let m = crate::model::reference::attention_mask(fc.sl_max, t as usize, true);
+            Tensor::from_mat(&m)
+        }
     }
 }
 
@@ -620,7 +772,40 @@ pub fn build_runtime<B: FabricBackend>(
         zero_ffn: zeros(RuntimeId::ZeroFfn)?,
         zero_col: zeros(RuntimeId::ZeroCol)?,
         zero_qkv3: zeros(RuntimeId::ZeroQkv3)?,
+        tier_masks: Vec::new(),
+        tier_causal_masks: Vec::new(),
     })
+}
+
+/// Upload the per-tier masks a tiered (skippable) program references,
+/// extending `bufs` in place.  Idempotent per tier id; safe to call for a
+/// non-tiered program (no-op).  The engine calls this once per cached
+/// `(topology, bucket)` program, right after [`build_runtime`].
+pub fn upload_tier_masks<B: FabricBackend>(
+    backend: &B,
+    bufs: &mut RuntimeBufs<B::Buf>,
+    cfg: &TnnConfig,
+    fc: &FabricConstants,
+    ids: &[RuntimeId],
+) -> anyhow::Result<()> {
+    for id in ids {
+        match *id {
+            RuntimeId::TierMask(t) => {
+                if !bufs.tier_masks.iter().any(|(k, _)| *k == t) {
+                    let buf = backend.upload(&runtime_tensor(*id, cfg, fc))?;
+                    bufs.tier_masks.push((t, buf));
+                }
+            }
+            RuntimeId::TierCausalMask(t) => {
+                if !bufs.tier_causal_masks.iter().any(|(k, _)| *k == t) {
+                    let buf = backend.upload(&runtime_tensor(*id, cfg, fc))?;
+                    bufs.tier_causal_masks.push((t, buf));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
 }
 
 /// Column panel `[rows, width]` of a row-major 2-D tensor.
@@ -713,6 +898,24 @@ pub fn replay_with<B: FabricBackend>(
     Ok(out)
 }
 
+/// [`replay_with`] against an explicit live row count — the
+/// length-adaptive entry: skippable dispatches whose tier does not cover
+/// `live` are skipped, and fired tiers are priced at their tier's row
+/// count by pricing backends (see [`FabricBackend::dispatch_rows`]).
+pub fn replay_with_live<B: FabricBackend>(
+    prog: &TileProgram,
+    backend: &B,
+    weights: &dyn WeightSource<B::Buf>,
+    runtime: &RuntimeBufs<B::Buf>,
+    input: Tensor,
+    pool: Option<&crate::runtime::pool::TensorPool>,
+    live: usize,
+) -> anyhow::Result<Tensor> {
+    let (out, _) =
+        replay_full_adaptive(prog, backend, weights, runtime, vec![input], &[], pool, live)?;
+    Ok(out)
+}
+
 /// The full replay entry point: `inputs` supplies the main input host plus
 /// every [`TileProgram::aux_hosts`] slot (in order), `externs` resolves
 /// [`Operand::Extern`] operands (caller-held device buffers — the K/V
@@ -728,6 +931,30 @@ pub fn replay_full<B: FabricBackend>(
     externs: &[&B::Buf],
     pool: Option<&crate::runtime::pool::TensorPool>,
 ) -> anyhow::Result<(Tensor, Vec<B::Buf>)> {
+    // Full-length replay: the top tier of every skippable chain fires,
+    // which is exactly the legacy dense behavior.
+    replay_full_adaptive(prog, backend, weights, runtime, inputs, externs, pool, prog.cfg.seq_len)
+}
+
+/// [`replay_full`] against an explicit live row count `live` (clamped to
+/// `[1, seq_len]`).  A predicated dispatch whose [`LivePred`] does not
+/// fire is skipped outright: its operands are never resolved (they may
+/// belong to an equally skipped tier) and its destination slot is left
+/// untouched, because a disjoint-pred twin of another tier may own that
+/// slot.  Per-step drop bookkeeping still runs for skipped steps so slot
+/// lifetimes match the static analysis.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_full_adaptive<B: FabricBackend>(
+    prog: &TileProgram,
+    backend: &B,
+    weights: &dyn WeightSource<B::Buf>,
+    runtime: &RuntimeBufs<B::Buf>,
+    inputs: Vec<Tensor>,
+    externs: &[&B::Buf],
+    pool: Option<&crate::runtime::pool::TensorPool>,
+    live: usize,
+) -> anyhow::Result<(Tensor, Vec<B::Buf>)> {
+    let live = live.clamp(1, prog.cfg.seq_len);
     if inputs.len() != 1 + prog.aux_hosts.len() {
         bail!(
             "replay wants 1 main + {} aux inputs, got {}",
@@ -793,27 +1020,36 @@ pub fn replay_full<B: FabricBackend>(
             Step::Upload { host, dst } => {
                 slots[*dst] = Some(backend.upload(&hosts[*host])?);
             }
-            Step::Dispatch { artifact, args, dst, out_shape } => {
-                let mut ins: Vec<&B::Buf> = Vec::with_capacity(args.len());
-                for a in args {
-                    match a {
-                        Operand::Slot(s) => ins.push(
-                            slots[*s]
-                                .as_ref()
-                                .ok_or_else(|| anyhow!("step {i}: slot {s} already freed"))?,
-                        ),
-                        Operand::Weight(w) => ins.push(weights.weight(w)?),
-                        Operand::Runtime(r) => ins.push(runtime.get(*r)),
-                        Operand::Extern(e) => ins.push(
-                            externs
-                                .get(*e)
-                                .copied()
-                                .ok_or_else(|| anyhow!("step {i}: extern {e} out of range"))?,
-                        ),
+            Step::Dispatch { artifact, args, dst, out_shape, pred } => {
+                // Skippable dispatch: an unfired tier is skipped before
+                // operand resolution (its inputs may come from equally
+                // skipped steps) and leaves `dst` untouched — a fired
+                // disjoint-pred twin may own the slot.
+                if pred.is_some_and(|p| !p.fires(live)) {
+                    // fall through to the drop bookkeeping below
+                } else {
+                    let mut ins: Vec<&B::Buf> = Vec::with_capacity(args.len());
+                    for a in args {
+                        match a {
+                            Operand::Slot(s) => ins.push(
+                                slots[*s]
+                                    .as_ref()
+                                    .ok_or_else(|| anyhow!("step {i}: slot {s} already freed"))?,
+                            ),
+                            Operand::Weight(w) => ins.push(weights.weight(w)?),
+                            Operand::Runtime(r) => ins.push(runtime.get(*r)),
+                            Operand::Extern(e) => ins.push(
+                                externs
+                                    .get(*e)
+                                    .copied()
+                                    .ok_or_else(|| anyhow!("step {i}: extern {e} out of range"))?,
+                            ),
+                        }
                     }
+                    let rows = pred.as_ref().map(|p| p.hi);
+                    let out = backend.dispatch_rows(artifact, &ins, out_shape, rows)?;
+                    slots[*dst] = Some(out);
                 }
-                let out = backend.dispatch(artifact, &ins, out_shape)?;
-                slots[*dst] = Some(out);
             }
             Step::Fetch { src, host } => {
                 let buf = slots[*src]

@@ -590,7 +590,7 @@ impl Pass for FuseAttention {
             return 0;
         }
         rewrite_fused(prog, |steps, i, writer, uses| {
-            let Step::Dispatch { artifact: "sv", args: sv_args, dst, out_shape } = &steps[i]
+            let Step::Dispatch { artifact: "sv", args: sv_args, dst, out_shape, pred } = &steps[i]
             else {
                 return None;
             };
@@ -599,7 +599,9 @@ impl Pass for FuseAttention {
                 return None;
             }
             let j = *writer.get(p)?;
-            let Step::Dispatch { artifact: "softmax", args: sm_args, .. } = &steps[j] else {
+            let Step::Dispatch { artifact: "softmax", args: sm_args, pred: sm_pred, .. } =
+                &steps[j]
+            else {
                 return None;
             };
             let [Operand::Slot(s)] = sm_args.as_slice() else { return None };
@@ -607,15 +609,28 @@ impl Pass for FuseAttention {
                 return None;
             }
             let k = *writer.get(s)?;
-            let Step::Dispatch { artifact: "qk_scores", args: qk_args, .. } = &steps[k] else {
+            let Step::Dispatch { artifact: "qk_scores", args: qk_args, pred: qk_pred, .. } =
+                &steps[k]
+            else {
                 return None;
             };
+            // Skippable tiers fuse tier-by-tier: the whole triple must
+            // share one predicate (the fused step inherits it), so a
+            // fired tier still runs its complete chain and a skipped one
+            // skips it whole.
+            if sm_pred != pred || qk_pred != pred {
+                return None;
+            }
             let [q_arg, k_arg, mask_arg, scale_arg] = qk_args.as_slice() else { return None };
             // Causal gate: decoder masked self-attention keeps the split
             // chain so the prefill path shares numerics (and artifacts)
             // with the row-shaped decode-step chain — the fused rectangle
-            // kernel is left to the encoder/cross chains.
-            if *mask_arg == Operand::Runtime(RuntimeId::CausalMask) {
+            // kernel is left to the encoder/cross chains.  Tiered causal
+            // fences are causal chains too.
+            if matches!(
+                mask_arg,
+                Operand::Runtime(RuntimeId::CausalMask | RuntimeId::TierCausalMask(_))
+            ) {
                 return None;
             }
             Some((
@@ -631,6 +646,7 @@ impl Pass for FuseAttention {
                     ],
                     dst: *dst,
                     out_shape: out_shape.clone(),
+                    pred: *pred,
                 },
             ))
         })
@@ -652,8 +668,15 @@ impl Pass for FuseBiasLn {
             return 0;
         }
         rewrite_fused(prog, |steps, i, writer, uses| {
-            let Step::Dispatch { artifact: "residual_ln", args: ln_args, dst, out_shape } =
-                &steps[i]
+            // The bias/LN pair is never predicated (only attention chains
+            // tier); require both unpredicated so the fusion stays exact.
+            let Step::Dispatch {
+                artifact: "residual_ln",
+                args: ln_args,
+                dst,
+                out_shape,
+                pred: None,
+            } = &steps[i]
             else {
                 return None;
             };
@@ -662,7 +685,9 @@ impl Pass for FuseBiasLn {
                 return None;
             }
             let j = *writer.get(b)?;
-            let Step::Dispatch { artifact: "bias_add_d", args: bias_args, .. } = &steps[j] else {
+            let Step::Dispatch { artifact: "bias_add_d", args: bias_args, pred: None, .. } =
+                &steps[j]
+            else {
                 return None;
             };
             let [x_arg, bias_arg] = bias_args.as_slice() else { return None };
@@ -676,6 +701,7 @@ impl Pass for FuseBiasLn {
                     args,
                     dst: *dst,
                     out_shape: out_shape.clone(),
+                    pred: None,
                 },
             ))
         })
@@ -795,10 +821,19 @@ impl Pass for CompactSlots {
                 }
             }
             for s in &a.slot_writes {
-                let new = free.pop().unwrap_or_else(|| {
-                    next += 1;
-                    next - 1
-                });
+                // A write to an already-named slot is a disjoint-pred twin
+                // def (skippable tiers converging on one output): it must
+                // keep the shared id, not shadow it — replay fires exactly
+                // one twin and downstream readers resolve the shared id.
+                // (A stale mapping is impossible: a slot is retired only
+                // after its final reference, so a re-written slot is live.)
+                let new = match map.get(s) {
+                    Some(&id) => id,
+                    None => free.pop().unwrap_or_else(|| {
+                        next += 1;
+                        next - 1
+                    }),
+                };
                 map.insert(*s, new);
                 match &mut prog.steps[i] {
                     Step::Upload { dst, .. }

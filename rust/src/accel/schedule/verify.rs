@@ -46,8 +46,8 @@ use crate::accel::decode::ExternLayout;
 
 use super::opt::ArtifactInventory;
 use super::{
-    FabricConstants, HostId, Operand, ProgramKind, RuntimeId, SlotId, Step, TileProgram,
-    WeightKind,
+    FabricConstants, HostId, LivePred, Operand, ProgramKind, RuntimeId, SlotId, Step,
+    TileProgram, WeightKind,
 };
 
 /// How bad a diagnostic is.  `Error` means replay is (or may become)
@@ -93,6 +93,11 @@ pub enum Rule {
     ExternContract,
     /// An `export_slots` rule is violated.
     ExportContract,
+    /// A skippable-dispatch rule is violated: a dispatch may read a slot
+    /// only over live ranges its (possibly predicated) defs cover — a
+    /// skipped dispatch must never define a slot consumed by an unskipped
+    /// one.  Also covers malformed predicates (empty or out-of-range).
+    SkipContract,
 }
 
 impl fmt::Display for Rule {
@@ -108,6 +113,7 @@ impl fmt::Display for Rule {
             Rule::WaveRace => "wave-race",
             Rule::ExternContract => "extern-contract",
             Rule::ExportContract => "export-contract",
+            Rule::SkipContract => "skip-contract",
         })
     }
 }
@@ -198,7 +204,10 @@ impl std::error::Error for VerifyError {}
 /// materializing the data (a unit test pins the two together).
 pub fn runtime_shape(id: RuntimeId, fc: &FabricConstants) -> Vec<usize> {
     match id {
-        RuntimeId::Mask | RuntimeId::CausalMask => vec![fc.sl_max, fc.sl_max],
+        RuntimeId::Mask
+        | RuntimeId::CausalMask
+        | RuntimeId::TierMask(_)
+        | RuntimeId::TierCausalMask(_) => vec![fc.sl_max, fc.sl_max],
         RuntimeId::MemMaskRow => vec![1, fc.sl_max],
         RuntimeId::Scale | RuntimeId::Count => vec![1],
         RuntimeId::Dmask => vec![fc.dmodel_max],
@@ -243,6 +252,11 @@ struct Analyzer<'a> {
     scale_slots: HashSet<SlotId>,
     /// Unread slot defs: slot → defining step.
     pending_slot: HashMap<SlotId, usize>,
+    /// Live-range cover of the current def group per slot, as merged
+    /// half-open `(lo, hi]` intervals.  An unpredicated def covers the
+    /// full `(0, seq_len]`; disjoint-pred twin defs accumulate; an
+    /// overlapping def starts a new group (legacy slot reuse).
+    slot_cover: HashMap<SlotId, Vec<(usize, usize)>>,
     /// Hosts written so far (the caller pre-writes input/aux hosts).
     host_written: Vec<bool>,
     /// Current (possibly fetch-updated) shape of each host.
@@ -277,6 +291,7 @@ impl<'a> Analyzer<'a> {
             slot_shape: HashMap::new(),
             scale_slots: HashSet::new(),
             pending_slot: HashMap::new(),
+            slot_cover: HashMap::new(),
             host_written,
             host_cur: prog.host_shapes.clone(),
             pending_host: HashMap::new(),
@@ -299,8 +314,25 @@ impl<'a> Analyzer<'a> {
         self.push(Some(step), Severity::Warning, rule, message);
     }
 
-    /// Record a slot def; returns whether the id was in range.
-    fn def_slot(&mut self, s: SlotId, i: usize, shape: Option<Vec<usize>>, is_scale: bool) {
+    /// The live range a predicate selects, clamped to the topology
+    /// (`None` — an unpredicated step — covers every live row count).
+    fn live_range(&self, pred: Option<LivePred>) -> (usize, usize) {
+        let seq = self.prog.cfg.seq_len;
+        match pred {
+            Some(p) => (p.lo, p.hi.min(seq)),
+            None => (0, seq),
+        }
+    }
+
+    /// Record a slot def under `pred`; returns whether the id was in range.
+    fn def_slot(
+        &mut self,
+        s: SlotId,
+        i: usize,
+        shape: Option<Vec<usize>>,
+        is_scale: bool,
+        pred: Option<LivePred>,
+    ) {
         if s >= self.prog.n_slots {
             self.error(
                 i,
@@ -309,12 +341,64 @@ impl<'a> Analyzer<'a> {
             );
             return;
         }
-        if let Some(prev) = self.pending_slot.insert(s, i) {
-            self.warn(
-                prev,
-                Rule::DeadWrite,
-                format!("slot {s} written at step {prev} is overwritten at step {i} without being read"),
-            );
+        if let Some(p) = pred {
+            if p.lo >= p.hi || p.hi > self.prog.cfg.seq_len {
+                self.error(
+                    i,
+                    Rule::SkipContract,
+                    format!(
+                        "malformed predicate ({}, {}] — want lo < hi <= seq_len {}",
+                        p.lo,
+                        p.hi,
+                        self.prog.cfg.seq_len
+                    ),
+                );
+            }
+        }
+        let range = self.live_range(pred);
+        let cover = self.slot_cover.get(&s).cloned().unwrap_or_default();
+        // A predicated def disjoint from the slot's current cover is a
+        // twin of a shared skippable output: it extends the def group
+        // instead of overwriting the value.  Anything overlapping (or any
+        // unpredicated def) starts a fresh group — legacy slot reuse.
+        let disjoint_twin = !cover.is_empty()
+            && pred.is_some()
+            && !cover.iter().any(|&(l, h)| l < range.1 && range.0 < h);
+        if disjoint_twin {
+            if let (Some(new), Some(Some(prev))) = (&shape, self.slot_shape.get(&s)) {
+                if new != prev {
+                    self.error(
+                        i,
+                        Rule::ShapeMismatch,
+                        format!(
+                            "disjoint-pred twin defs of slot {s} disagree on shape ({prev:?} vs {new:?})"
+                        ),
+                    );
+                }
+            }
+            let entry = self.slot_cover.entry(s).or_default();
+            entry.push(range);
+            entry.sort_unstable();
+            let mut merged: Vec<(usize, usize)> = Vec::new();
+            for r in entry.drain(..) {
+                match merged.last_mut() {
+                    Some(last) if r.0 <= last.1 => last.1 = last.1.max(r.1),
+                    _ => merged.push(r),
+                }
+            }
+            *entry = merged;
+            // Exactly one twin fires per replay, so the group counts as
+            // one pending def — never a dead overwrite of its siblings.
+            self.pending_slot.insert(s, i);
+        } else {
+            if let Some(prev) = self.pending_slot.insert(s, i) {
+                self.warn(
+                    prev,
+                    Rule::DeadWrite,
+                    format!("slot {s} written at step {prev} is overwritten at step {i} without being read"),
+                );
+            }
+            self.slot_cover.insert(s, vec![range]);
         }
         self.slot_shape.insert(s, shape);
         if is_scale {
@@ -327,9 +411,18 @@ impl<'a> Analyzer<'a> {
         }
     }
 
-    /// Resolve a slot read; returns the carried shape when the def is
-    /// known (`None` on use-before-def or unknown shape).
-    fn read_slot(&mut self, s: SlotId, i: usize, what: &str) -> Option<Vec<usize>> {
+    /// Resolve a slot read under the reader's `pred`; returns the carried
+    /// shape when the def is known (`None` on use-before-def or unknown
+    /// shape).  The reader's live range must be inside the def group's
+    /// cover — otherwise some live row count would make a fired reader
+    /// consume a slot every def of which was skipped.
+    fn read_slot(
+        &mut self,
+        s: SlotId,
+        i: usize,
+        what: &str,
+        pred: Option<LivePred>,
+    ) -> Option<Vec<usize>> {
         if s >= self.prog.n_slots {
             self.error(
                 i,
@@ -348,7 +441,20 @@ impl<'a> Analyzer<'a> {
                 );
                 None
             }
-            Some(shape) => shape.clone(),
+            Some(shape) => {
+                let (lo, hi) = self.live_range(pred);
+                let cover = self.slot_cover.get(&s).cloned().unwrap_or_default();
+                if lo < hi && !cover.iter().any(|&(l, h)| l <= lo && hi <= h) {
+                    self.error(
+                        i,
+                        Rule::SkipContract,
+                        format!(
+                            "{what} reads slot {s} over live rows ({lo}, {hi}], but its defs cover only {cover:?} — a skipped dispatch may not define a slot consumed by an unskipped one"
+                        ),
+                    );
+                }
+                shape.clone()
+            }
         }
     }
 
@@ -407,10 +513,11 @@ impl<'a> Analyzer<'a> {
         artifact: &str,
         arg: &Operand,
         i: usize,
+        pred: Option<LivePred>,
     ) -> Option<Vec<usize>> {
         match arg {
             Operand::Slot(s) => {
-                let shape = self.read_slot(*s, i, &format!("dispatch '{artifact}'"));
+                let shape = self.read_slot(*s, i, &format!("dispatch '{artifact}'"), pred);
                 if self.scale_slots.contains(s) && artifact != "quantize" {
                     self.error(
                         i,
@@ -450,7 +557,16 @@ impl<'a> Analyzer<'a> {
         }
     }
 
-    fn dispatch(&mut self, artifact: &'static str, args: &[Operand], dst: SlotId, out_shape: &[usize], i: usize) {
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &mut self,
+        artifact: &'static str,
+        args: &[Operand],
+        dst: SlotId,
+        out_shape: &[usize],
+        i: usize,
+        pred: Option<LivePred>,
+    ) {
         if !self.inventory.has(artifact) {
             self.warn(
                 i,
@@ -473,7 +589,7 @@ impl<'a> Analyzer<'a> {
             }
         }
         for (j, arg) in args.iter().enumerate() {
-            let shape = self.operand_shape(artifact, arg, i);
+            let shape = self.operand_shape(artifact, arg, i, pred);
             if let (Some(shape), Some(sig)) = (&shape, &sig) {
                 if let Some(want) = sig.inputs.get(j) {
                     if shape != want {
@@ -523,7 +639,7 @@ impl<'a> Analyzer<'a> {
                 ),
             }
         }
-        self.def_slot(dst, i, Some(out_shape.to_vec()), false);
+        self.def_slot(dst, i, Some(out_shape.to_vec()), false, pred);
     }
 
     fn walk(&mut self) {
@@ -532,13 +648,13 @@ impl<'a> Analyzer<'a> {
             match step {
                 Step::Upload { host, dst } => {
                     let shape = self.read_host(*host, i, "upload");
-                    self.def_slot(*dst, i, shape, false);
+                    self.def_slot(*dst, i, shape, false, None);
                 }
-                Step::Dispatch { artifact, args, dst, out_shape } => {
-                    self.dispatch(*artifact, args, *dst, out_shape, i);
+                Step::Dispatch { artifact, args, dst, out_shape, pred } => {
+                    self.dispatch(*artifact, args, *dst, out_shape, i, *pred);
                 }
                 Step::Fetch { src, host } => {
-                    let shape = self.read_slot(*src, i, "fetch");
+                    let shape = self.read_slot(*src, i, "fetch", None);
                     if !self.write_host(*host, i, false) {
                         continue;
                     }
@@ -619,7 +735,7 @@ impl<'a> Analyzer<'a> {
                 }
                 Step::CalibrateScale { src, dst } => {
                     self.read_host(*src, i, "calibrate-scale");
-                    self.def_slot(*dst, i, Some(vec![1]), true);
+                    self.def_slot(*dst, i, Some(vec![1]), true, None);
                 }
             }
         }
@@ -675,7 +791,22 @@ impl<'a> Analyzer<'a> {
                     Rule::ExportContract,
                     format!("export slot {s} is never written — replay would hand back a freed buffer"),
                 ),
-                1 => {}
+                1 => {
+                    // Replay hands exports back unconditionally, so an
+                    // export must be defined at every live row count.
+                    let seq = self.prog.cfg.seq_len;
+                    let cover = self.slot_cover.get(&s).cloned().unwrap_or_default();
+                    if !cover.iter().any(|&(l, h)| l == 0 && h >= seq) {
+                        self.push(
+                            None,
+                            Severity::Error,
+                            Rule::SkipContract,
+                            format!(
+                                "export slot {s} is defined only over live ranges {cover:?} — a short request would export a freed buffer"
+                            ),
+                        );
+                    }
+                }
                 n => self.push(
                     None,
                     Severity::Error,
@@ -1068,6 +1199,7 @@ mod tests {
             args: vec![Operand::Extern(idx)],
             dst,
             out_shape: vec![1, p.fabric.sl_max],
+            pred: None,
         });
         let report = verify(&p, ProgramKind::DecodeStep, &inv());
         assert!(report.has_error(Rule::ExternContract));
@@ -1092,6 +1224,96 @@ mod tests {
         assert!(hit.is_some());
         let report = verify(&p, ProgramKind::Encoder, &inv());
         assert!(report.has_error(Rule::QuantFamily));
+    }
+
+    #[test]
+    fn tier_mask_shapes_match_the_materialized_tensors() {
+        let cfg = presets::small_encoder(32, 1);
+        let f = fc();
+        for id in [
+            super::super::RuntimeId::TierMask(16),
+            super::super::RuntimeId::TierCausalMask(16),
+        ] {
+            assert_eq!(
+                runtime_shape(id, &f),
+                super::super::runtime_tensor(id, &cfg, &f).shape,
+                "{id:?}"
+            );
+        }
+    }
+
+    fn skippable_encoder(level: OptLevel) -> TileProgram {
+        let mut p = ScheduleBuilder::new(fc(), presets::small_encoder(64, 2))
+            .unwrap()
+            .skippable(true)
+            .build();
+        optimize(&mut p, level, &inv()).unwrap();
+        p
+    }
+
+    #[test]
+    fn skippable_programs_verify_clean_at_all_levels() {
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let p = skippable_encoder(level);
+            assert!(p.predicated_dispatch_count() > 0, "{level:?}: no tiers were emitted");
+            let report = verify(&p, ProgramKind::Encoder, &inv());
+            assert!(
+                report.is_clean(),
+                "{level:?}: {:?}",
+                report.errors().collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn unpredicated_reader_of_a_tiered_slot_is_a_skip_contract_error() {
+        let mut p = skippable_encoder(OptLevel::O0);
+        // Strip the predicate from one tier's softmax: it now reads its
+        // tier's qk_scores output unconditionally, but that def only
+        // exists when the tier fires.
+        let hit = p.steps.iter_mut().find_map(|s| match s {
+            Step::Dispatch { artifact: "softmax", pred: pred @ Some(_), .. } => {
+                *pred = None;
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::SkipContract));
+    }
+
+    #[test]
+    fn cover_hole_in_a_shared_output_is_a_skip_contract_error() {
+        let mut p = skippable_encoder(OptLevel::O0);
+        // Shrink the top tier's predicate of one shared sv output: the
+        // tiers no longer cover (0, seq_len], so the unpredicated fetch
+        // downstream can read a slot no def produced.
+        let hit = p.steps.iter_mut().find_map(|s| match s {
+            Step::Dispatch { artifact: "sv", pred: Some(pr), .. } if pr.hi == 64 => {
+                pr.hi = 48;
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::SkipContract));
+    }
+
+    #[test]
+    fn malformed_predicate_is_flagged() {
+        let mut p = skippable_encoder(OptLevel::O0);
+        let hit = p.steps.iter_mut().find_map(|s| match s {
+            Step::Dispatch { pred: Some(pr), .. } => {
+                pr.lo = pr.hi; // empty live range
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify(&p, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::SkipContract));
     }
 
     #[test]

@@ -330,6 +330,10 @@ pub struct CachedProgram {
 
 /// Topology-only cache key for the shared runtime tensor sets (the
 /// register-file-derived tensors don't depend on the execution flags).
+/// `bucket` is the **sequence bucket** the set was materialized at — the
+/// attention masks of a bucket-specialized program fence at the bucket,
+/// not at the model's full `seq_len`, so each bucket owns its own set.
+/// Non-bucketed programs use `bucket == seq_len`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct TopologyKey {
     seq_len: usize,
@@ -338,10 +342,11 @@ struct TopologyKey {
     hidden: usize,
     enc_layers: usize,
     dec_layers: usize,
+    bucket: usize,
 }
 
 impl TopologyKey {
-    fn new(cfg: &TnnConfig) -> Self {
+    fn new(cfg: &TnnConfig, bucket: usize) -> Self {
         TopologyKey {
             seq_len: cfg.seq_len,
             heads: cfg.heads,
@@ -349,14 +354,18 @@ impl TopologyKey {
             hidden: cfg.hidden,
             enc_layers: cfg.enc_layers,
             dec_layers: cfg.dec_layers,
+            bucket,
         }
     }
 }
 
 /// Program cache key: the programmed topology plus the engine's execution
 /// flags (each flag selects a genuinely different instruction stream), the
-/// optimization level (each level a different *optimized* stream) and the
-/// program kind (encoder / prefill / decode-step).
+/// optimization level (each level a different *optimized* stream), the
+/// program kind (encoder / prefill / decode-step) and the **sequence
+/// bucket** the program was lowered at (a bucket-specialized program is a
+/// different instruction stream from the full-length one; non-bucketed
+/// kinds use `bucket == seq_len`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct ProgramKey {
     seq_len: usize,
@@ -370,9 +379,11 @@ struct ProgramKey {
     quantized: bool,
     opt_level: OptLevel,
     kind: ProgramKind,
+    bucket: usize,
 }
 
 impl ProgramKey {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         cfg: &TnnConfig,
         mode: AttentionMode,
@@ -380,6 +391,7 @@ impl ProgramKey {
         quantized: bool,
         opt_level: OptLevel,
         kind: ProgramKind,
+        bucket: usize,
     ) -> Self {
         // Decoder lowering always uses the split chain (see
         // `ScheduleBuilder::build_prefill`); normalize the flags so the
@@ -400,6 +412,7 @@ impl ProgramKey {
             quantized,
             opt_level,
             kind,
+            bucket,
         }
     }
 }
@@ -524,16 +537,28 @@ impl TileEngine {
         self.cached_program_kind(cfg, ProgramKind::Encoder)
     }
 
-    /// [`Self::cached_program`] generalized over the program kind —
-    /// decoder topologies cache two extra flavors per topology: the
-    /// prefill and the decode-step stream.
-    pub fn cached_program_kind(
+    /// [`Self::cached_program_kind`] generalized over the **sequence
+    /// bucket**: the program is lowered at `seq_len = bucket` with
+    /// skippable attention tiers (Encoder/Prefill kinds), so a short
+    /// request replays a schedule sized for its covering bucket instead
+    /// of the model's full length.  `bucket` must be a tier of
+    /// [`schedule::length_tiers`]`(cfg.seq_len)`; callers derive it via
+    /// [`schedule::covering_bucket`] from the request's actual row count.
+    pub fn cached_program_bucket(
         &self,
         cfg: &TnnConfig,
         kind: ProgramKind,
+        bucket: usize,
     ) -> Result<Rc<CachedProgram>, ServeError> {
-        let key =
-            ProgramKey::new(cfg, self.mode, self.qkv_packed, self.quantized, self.opt_level, kind);
+        let key = ProgramKey::new(
+            cfg,
+            self.mode,
+            self.qkv_packed,
+            self.quantized,
+            self.opt_level,
+            kind,
+            bucket,
+        );
         if let Some(p) = self.programs.borrow().get(&key) {
             self.cache_hits.set(self.cache_hits.get() + 1);
             return Ok(p.clone());
@@ -544,14 +569,26 @@ impl TileEngine {
                 "topology {cfg} has no decoder layers to lower a {kind:?} program for"
             )));
         }
-        let builder = ScheduleBuilder::new(self.fc, *cfg)?;
+        if !schedule::length_tiers(cfg.seq_len).contains(&bucket) {
+            return Err(ServeError::invalid(format!(
+                "bucket {bucket} is not a length tier of seq_len {}",
+                cfg.seq_len
+            )));
+        }
+        // Lower at the bucket's row count: the builder sees a topology
+        // whose seq_len IS the bucket, so masks, loop trips and cycle
+        // costs all shrink to it.  Decode-step programs are single-row
+        // and never bucketed (callers pass bucket == seq_len).
+        let cfg_b = TnnConfig { seq_len: bucket, ..*cfg };
+        let builder = ScheduleBuilder::new(self.fc, cfg_b)?;
         let mut program = match kind {
             ProgramKind::Encoder => builder
                 .mode(self.mode)
                 .qkv_packed(self.qkv_packed)
                 .quantized(self.quantized)
+                .skippable(true)
                 .build(),
-            ProgramKind::Prefill => builder.build_prefill(),
+            ProgramKind::Prefill => builder.skippable(true).build_prefill(),
             ProgramKind::DecodeStep => builder.build_step(),
         };
         // Run the pass pipeline once; every replay gets the optimized
@@ -562,12 +599,13 @@ impl TileEngine {
         // (builder bug, bad opt pass, IR drift) fails here as a typed
         // `ProgramFailed` before first dispatch, at zero per-request cost.
         schedule::verify::verify_program(&program, kind, &self.inventory)?;
-        let runtime = self.runtime_for(cfg)?;
+        let runtime = self.runtime_for(cfg, bucket)?;
         let cached = Rc::new(CachedProgram { program, runtime });
         let mut programs = self.programs.borrow_mut();
         if programs.len() >= PROGRAM_CACHE_CAP {
             // Arbitrary eviction is fine this far above the working set; a
-            // re-miss just rebuilds the program and re-uploads 10 tensors.
+            // re-miss just rebuilds the program and re-uploads the runtime
+            // tensor set (10 + the bucket's tier masks).
             if let Some(evict) = programs.keys().next().copied() {
                 programs.remove(&evict);
             }
@@ -576,14 +614,46 @@ impl TileEngine {
         Ok(cached)
     }
 
-    /// The shared runtime tensor set for `cfg`'s topology, uploading it on
-    /// first use.
-    fn runtime_for(&self, cfg: &TnnConfig) -> anyhow::Result<Rc<RuntimeBufs<DeviceTensor>>> {
-        let tkey = TopologyKey::new(cfg);
+    /// [`Self::cached_program`] generalized over the program kind —
+    /// decoder topologies cache two extra flavors per topology: the
+    /// prefill and the decode-step stream.
+    pub fn cached_program_kind(
+        &self,
+        cfg: &TnnConfig,
+        kind: ProgramKind,
+    ) -> Result<Rc<CachedProgram>, ServeError> {
+        self.cached_program_bucket(cfg, kind, cfg.seq_len)
+    }
+
+    /// The shared runtime tensor set for `cfg`'s topology at `bucket`,
+    /// uploading it on first use: the base 10 register-file-derived
+    /// tensors (materialized at the bucket's fence) plus both mask
+    /// families for every non-top tier of the bucket — the union every
+    /// program flavor of this `(topology, bucket)` pair can reference, so
+    /// the set stays shareable across flag variants.
+    fn runtime_for(
+        &self,
+        cfg: &TnnConfig,
+        bucket: usize,
+    ) -> anyhow::Result<Rc<RuntimeBufs<DeviceTensor>>> {
+        let tkey = TopologyKey::new(cfg, bucket);
         if let Some(r) = self.runtimes.borrow().get(&tkey) {
             return Ok(r.clone());
         }
-        let r = Rc::new(schedule::build_runtime(&self.exec, cfg, &self.fc)?);
+        let cfg_b = TnnConfig { seq_len: bucket, ..*cfg };
+        let mut bufs = schedule::build_runtime(&self.exec, &cfg_b, &self.fc)?;
+        let tiers = schedule::length_tiers(bucket);
+        let ids: Vec<schedule::RuntimeId> = tiers[..tiers.len() - 1]
+            .iter()
+            .flat_map(|&t| {
+                [
+                    schedule::RuntimeId::TierMask(t as u16),
+                    schedule::RuntimeId::TierCausalMask(t as u16),
+                ]
+            })
+            .collect();
+        schedule::upload_tier_masks(&self.exec, &mut bufs, &cfg_b, &self.fc, &ids)?;
+        let r = Rc::new(bufs);
         let mut runtimes = self.runtimes.borrow_mut();
         if runtimes.len() >= PROGRAM_CACHE_CAP {
             // Drop only sets no cached program still pins (count == 1 means
@@ -611,6 +681,22 @@ impl TileEngine {
     pub fn cycle_estimate(&self, cfg: &TnnConfig) -> Result<CycleReport, ServeError> {
         let cached = self.cached_program(cfg)?;
         Ok(cycle::replay_program(&cached.program)?)
+    }
+
+    /// [`Self::cycle_estimate`] for a request of `rows` actual rows: the
+    /// price of the bucket-specialized program the engine would replay
+    /// for it, at the live row count.  For `rows == seq_len` this is
+    /// exactly [`Self::cycle_estimate`]; for shorter requests it is
+    /// strictly lower — the recovered padding waste.
+    pub fn cycle_estimate_rows(
+        &self,
+        cfg: &TnnConfig,
+        rows: usize,
+    ) -> Result<CycleReport, ServeError> {
+        let rows = rows.clamp(1, cfg.seq_len);
+        let bucket = schedule::covering_bucket(rows, cfg.seq_len);
+        let cached = self.cached_program_bucket(cfg, ProgramKind::Encoder, bucket)?;
+        Ok(cycle::replay_program_live(&cached.program, rows)?)
     }
 
     /// [`Self::cycle_estimate`] with wave pricing: each wave of the
@@ -839,10 +925,14 @@ impl TileEngine {
         })
     }
 
-    /// Run the full encoder stack on `input` (`seq_len × d_model`),
-    /// returning `seq_len × d_model`.  This is the request-path entry:
-    /// look up the cached program for the programmed topology, replay it
-    /// on the PJRT backend against `stack`'s device-resident weights.
+    /// Run the full encoder stack on `input` (`rows <= seq_len` rows of
+    /// `d_model` columns), returning `rows × d_model`.  This is the
+    /// request-path entry: pick the smallest length bucket covering the
+    /// request's **actual** row count, look up (or build) the
+    /// bucket-specialized program, pad the input into the bucket and
+    /// replay at the live row count — short requests execute a schedule
+    /// sized for their bucket, not the model's full `seq_len`.  Inputs
+    /// longer than `seq_len` are a typed [`ServeError::InvalidRequest`].
     pub fn run_encoder(&self, stack: &PreparedStack, input: &Mat) -> Result<Mat, ServeError> {
         let cfg = &stack.cfg;
         if self.registers.current_config() != *cfg {
@@ -850,30 +940,32 @@ impl TileEngine {
                 "register file is programmed for a different topology (Algorithm 18 step 3 first)",
             ));
         }
-        if (input.rows, input.cols) != (cfg.seq_len, cfg.d_model) {
+        if input.cols != cfg.d_model || input.rows == 0 || input.rows > cfg.seq_len {
             return Err(ServeError::invalid(format!(
-                "input is {}x{}, registers say {}x{}",
+                "input is {}x{}, want 1..={} rows of {} columns",
                 input.rows, input.cols, cfg.seq_len, cfg.d_model
             )));
         }
-        let cached = self.cached_program(cfg)?;
+        let bucket = schedule::covering_bucket(input.rows, cfg.seq_len);
+        let cached = self.cached_program_bucket(cfg, ProgramKind::Encoder, bucket)?;
         // Load inputs into the (padded) input BRAM — Algorithm 1.  The
         // padded staging tensor comes from the engine's scratch pool, so
         // steady-state requests allocate no host memory for it; the
         // replay returns it to the pool when the input host is dropped.
         let mut padded = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
         schedule::pad_into(input, &mut padded);
-        let out = schedule::replay_with(
+        let out = schedule::replay_with_live(
             &cached.program,
             &self.exec,
             stack,
             &cached.runtime,
             padded,
             Some(&self.pool),
+            input.rows,
         )?;
-        // Crop to the programmed topology without the to_mat round trip,
+        // Crop to the request's live rows without the to_mat round trip,
         // then recycle the padded output buffer.
-        let result = schedule::crop_to_mat(&out, cfg.seq_len, cfg.d_model);
+        let result = schedule::crop_to_mat(&out, input.rows, cfg.d_model);
         self.pool.put(out);
         Ok(result)
     }
@@ -904,7 +996,19 @@ impl TileEngine {
                 prompt.rows, prompt.cols, cfg.seq_len, cfg.d_model
             )));
         }
-        let cached = self.cached_program_kind(cfg, ProgramKind::Prefill)?;
+        // Length-adaptive prefill: decoder-only topologies lower the
+        // program at the prompt's covering bucket (causal chains are
+        // exact at any live prefix).  Seq2seq prefill keeps the
+        // full-length program — the cross-attention memory fence must
+        // stay at the encoder's seq_len regardless of the prompt length —
+        // but still tier-skips its causal self-attention at the live row
+        // count.
+        let bucket = if cfg.enc_layers == 0 {
+            schedule::covering_bucket(prompt.rows, cfg.seq_len)
+        } else {
+            cfg.seq_len
+        };
+        let cached = self.cached_program_bucket(cfg, ProgramKind::Prefill, bucket)?;
         let mut padded = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
         schedule::pad_into(prompt, &mut padded);
         let mut inputs = vec![padded];
@@ -923,7 +1027,7 @@ impl TileEngine {
         } else if memory.is_some() {
             return Err(ServeError::invalid("decoder-only topology takes no encoder memory"));
         }
-        let (out, exports) = schedule::replay_full(
+        let (out, exports) = schedule::replay_full_adaptive(
             &cached.program,
             &self.exec,
             &DecoderStackView(stack),
@@ -931,6 +1035,7 @@ impl TileEngine {
             inputs,
             &[],
             Some(&self.pool),
+            prompt.rows,
         )?;
         let result = schedule::crop_to_mat(&out, prompt.rows, cfg.d_model);
         self.pool.put(out);
@@ -1436,10 +1541,13 @@ mod tests {
         assert_eq!(e.program_cache_stats(), (1, 1));
         assert!(a.max_abs_diff(&b) < 1e-6, "replays must be deterministic");
         let per_replay = e.cached_program(&cfg).unwrap().program.upload_count() as u64;
+        // A miss uploads the 10 base runtime tensors plus both mask
+        // families for every non-top length tier of the bucket, once.
+        let runtime_set = 10 + 2 * (schedule::length_tiers(cfg.seq_len).len() as u64 - 1);
         assert_eq!(
             s1.uploads - s0.uploads,
-            per_replay + 10,
-            "a miss uploads the 10 per-topology runtime tensors once"
+            per_replay + runtime_set,
+            "a miss uploads the per-topology runtime tensor set once"
         );
         assert_eq!(
             s2.uploads - s1.uploads,
@@ -1523,6 +1631,55 @@ mod tests {
     }
 
     #[test]
+    fn short_encoder_requests_run_in_their_bucket() {
+        require_artifacts!();
+        let mut e = engine();
+        let cfg = presets::small_encoder(64, 2);
+        let ws = weights::init_stack(71, cfg.d_model, cfg.heads, 2);
+        e.program(&cfg).unwrap();
+        let p = e.prepare(&cfg, &ws).unwrap();
+        // rows = 16 picks the bucket-16 program: attention fences at the
+        // bucket, so the oracle is a 16-length encoder run.
+        let x = weights::init_input(72, 16, cfg.d_model);
+        let got = e.run_encoder(&p, &x).unwrap();
+        assert_eq!((got.rows, got.cols), (16, cfg.d_model));
+        let cfg16 = TnnConfig { seq_len: 16, ..cfg };
+        let want = oracle(&cfg16, &ws, &x);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 3e-3, "bucketed engine vs 16-length oracle diff = {diff}");
+        // Edge: exactly seq_len rows still runs (top bucket)…
+        let full = weights::init_input(73, cfg.seq_len, cfg.d_model);
+        assert!(e.run_encoder(&p, &full).is_ok());
+        // …and one row over is a typed InvalidRequest, not a panic.
+        let over = weights::init_input(74, cfg.seq_len + 1, cfg.d_model);
+        assert!(matches!(e.run_encoder(&p, &over), Err(ServeError::InvalidRequest(_))));
+        // Distinct buckets cache distinct programs (16 + 64), both below
+        // the model's full length only when the request is short.
+        assert_eq!(e.program_cache_stats().1, 2, "one miss per touched bucket");
+    }
+
+    #[test]
+    fn short_requests_cost_fewer_cycles_than_the_dense_program() {
+        require_artifacts!();
+        let mut e = engine();
+        let cfg = presets::small_encoder(64, 2);
+        e.program(&cfg).unwrap();
+        let dense = e.cycle_estimate(&cfg).unwrap();
+        // The ISSUE acceptance bound: a request at ≤ seq_len/4 prices
+        // strictly below the dense max-length program.
+        let quarter = e.cycle_estimate_rows(&cfg, cfg.seq_len / 4).unwrap();
+        assert!(
+            quarter.total_cycles < dense.total_cycles,
+            "quarter={} dense={}",
+            quarter.total_cycles,
+            dense.total_cycles
+        );
+        // Full-length requests price exactly as the dense estimate.
+        let full = e.cycle_estimate_rows(&cfg, cfg.seq_len).unwrap();
+        assert_eq!(full.total_cycles, dense.total_cycles);
+    }
+
+    #[test]
     fn cycle_estimate_replays_the_cached_program_within_band() {
         require_artifacts!();
         let mut e = engine();
@@ -1530,7 +1687,9 @@ mod tests {
         e.program(&cfg).unwrap();
         let rep = e.cycle_estimate(&cfg).unwrap();
         let cached = e.cached_program(&cfg).unwrap();
-        assert_eq!(rep.dispatches as usize, cached.program.dispatch_count());
+        // A skippable program carries every tier; a full-length replay
+        // dispatches exactly the live (top-tier) subset.
+        assert_eq!(rep.dispatches as usize, cached.program.live_dispatch_count(cfg.seq_len));
         let tiles = e.fabric_constants().tile_config();
         let ana = crate::accel::latency::model_latency(&cfg, &tiles);
         let err = (rep.total_cycles as f64 - ana.total_cycles as f64).abs()

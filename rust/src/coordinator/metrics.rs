@@ -72,6 +72,14 @@ pub struct Metrics {
     /// Requests rejected with `ServeError::DeadlineExceeded` because
     /// their QoS deadline passed before they started executing.
     pub expired: u64,
+    /// Sum of **live** rows actually requested across served encode /
+    /// prefill requests (the request's true length).
+    pub actual_rows: u64,
+    /// Sum of rows the fabric was dispatched at for those same requests
+    /// (the covering length bucket).  `padded_rows - actual_rows` is the
+    /// padding the length-adaptive schedule recovered vs. always running
+    /// at `seq_len`; the residual ratio is what bucketing still wastes.
+    pub padded_rows: u64,
     /// Successfully served requests per [`Priority`] class, indexed by
     /// [`Priority::index`] (low, normal, high).
     pub by_priority: [u64; 3],
@@ -116,6 +124,23 @@ impl Metrics {
         self.generations += 1;
         self.prefills.push(prefill.as_secs_f64());
         self.decode_steps.extend(steps.iter().map(|d| d.as_secs_f64()));
+    }
+
+    /// Record one request's length-adaptive padding split: `actual` live
+    /// rows dispatched inside a `padded`-row bucket.
+    pub fn record_rows(&mut self, actual: usize, padded: usize) {
+        self.actual_rows += actual as u64;
+        self.padded_rows += padded as u64;
+    }
+
+    /// Fraction of dispatched rows that were bucket padding, 0.0 when no
+    /// row counts were recorded.
+    pub fn padding_waste(&self) -> f64 {
+        if self.padded_rows == 0 {
+            0.0
+        } else {
+            1.0 - self.actual_rows as f64 / self.padded_rows as f64
+        }
     }
 
     /// Record a **successful** generation's time-to-first-token
@@ -204,6 +229,8 @@ impl Metrics {
         self.failed += other.failed;
         self.cancelled += other.cancelled;
         self.expired += other.expired;
+        self.actual_rows += other.actual_rows;
+        self.padded_rows += other.padded_rows;
         for (mine, theirs) in self.by_priority.iter_mut().zip(other.by_priority) {
             *mine += theirs;
         }
@@ -312,6 +339,14 @@ impl Metrics {
             out.push_str(&format!(
                 "cancelled: {} | deadline-expired: {}\n",
                 self.cancelled, self.expired
+            ));
+        }
+        if self.padded_rows > 0 {
+            out.push_str(&format!(
+                "rows: {} live / {} dispatched (padding waste {:.1}%)\n",
+                self.actual_rows,
+                self.padded_rows,
+                self.padding_waste() * 100.0,
             ));
         }
         for f in &self.per_fabric {
@@ -484,6 +519,26 @@ mod tests {
         clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
         assert!(!clean.report().contains("continuous batching"));
         assert!(clean.ttft_summary().is_none());
+    }
+
+    #[test]
+    fn padding_rows_merge_and_render_the_waste_ratio() {
+        let mut a = Metrics::for_fabric(0);
+        a.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        a.record_rows(10, 16); // 10 live rows dispatched in a 16-row bucket
+        let mut b = Metrics::for_fabric(1);
+        b.record_rows(50, 64);
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.actual_rows, 60);
+        assert_eq!(agg.padded_rows, 80);
+        assert!((agg.padding_waste() - 0.25).abs() < 1e-12);
+        let rep = agg.report();
+        assert!(rep.contains("rows: 60 live / 80 dispatched (padding waste 25.0%)"), "{rep}");
+        // runs with no row accounting render no padding line
+        let mut clean = Metrics::default();
+        clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        assert!(!clean.report().contains("padding"));
+        assert_eq!(clean.padding_waste(), 0.0);
     }
 
     #[test]

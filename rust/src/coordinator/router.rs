@@ -120,9 +120,12 @@ impl Router {
                 spec.cfg.dec_layers
             )));
         }
-        if rows != spec.cfg.seq_len || cols != spec.cfg.d_model {
+        // Length-adaptive serving: any live prefix of the sequence budget
+        // is a valid request (the engine pads into the covering bucket);
+        // only empty, over-long, or wrong-width inputs are refused.
+        if rows == 0 || rows > spec.cfg.seq_len || cols != spec.cfg.d_model {
             return Err(ServeError::invalid(format!(
-                "request for '{model}' is {rows}x{cols}, expected {}x{}",
+                "request for '{model}' is {rows}x{cols}, expected 1..={} rows of {} columns",
                 spec.cfg.seq_len, spec.cfg.d_model
             )));
         }
@@ -214,7 +217,13 @@ mod tests {
         let mut r = router();
         r.register(ModelSpec::new("small", presets::small_encoder(64, 2), 1)).unwrap();
         assert!(r.route("small", 64, 256).is_ok());
-        assert!(r.route("small", 32, 256).is_err());
+        // any live prefix of the sequence budget routes (length-adaptive)
+        assert!(r.route("small", 32, 256).is_ok());
+        assert!(r.route("small", 1, 256).is_ok());
+        // empty, over-long, and wrong-width inputs are still refused
+        assert!(r.route("small", 0, 256).is_err());
+        assert!(r.route("small", 65, 256).is_err());
+        assert!(r.route("small", 64, 128).is_err());
         assert!(r.route("missing", 64, 256).is_err());
     }
 
@@ -313,7 +322,7 @@ mod tests {
         r.register(ModelSpec::new("small", presets::small_encoder(64, 2), 1)).unwrap();
         assert!(matches!(r.route("missing", 64, 256), Err(ServeError::UnknownModel(_))));
         assert!(matches!(r.lookup("missing"), Err(ServeError::UnknownModel(_))));
-        assert!(matches!(r.route("small", 32, 256), Err(ServeError::InvalidRequest(_))));
+        assert!(matches!(r.route("small", 100, 256), Err(ServeError::InvalidRequest(_))));
         assert!(matches!(
             r.route_generate("small", (4, 256), None, 4),
             Err(ServeError::InvalidRequest(_))

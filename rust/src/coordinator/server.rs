@@ -88,6 +88,7 @@ use super::batcher::{BatchPolicy, Batcher, Pending};
 use super::engine::{AttentionMode, GenSession, OptLevel, PreparedStack, TileEngine};
 use super::metrics::Metrics;
 use super::router::{ModelSpec, Router};
+use crate::accel::schedule;
 use crate::model::weights::Mat;
 
 /// One inference request (v0 surface; see [`Submission::Encode`]).
@@ -1376,6 +1377,12 @@ fn serve_batch(
                     let mut m = lock(metrics);
                     m.record(timing.compute, timing.queue_wait, timing.latency);
                     m.record_priority(priority);
+                    // Length-adaptive accounting: live rows vs the bucket
+                    // the engine actually dispatched them in.
+                    m.record_rows(
+                        input.rows,
+                        schedule::covering_bucket(input.rows, stack.cfg.seq_len),
+                    );
                 }
                 let _ = events
                     .send(JobEvent::Done(Box::new(JobOutput::Encode(EncodeOutput {
@@ -1437,6 +1444,43 @@ mod tests {
     }
 
     #[test]
+    fn short_requests_serve_in_their_bucket_and_record_padding() {
+        require_artifacts!();
+        let spec = ModelSpec::new("small", presets::small_encoder(32, 1), 21);
+        let s = server(vec![spec.clone()]);
+        // A 16-row request lands exactly on the 16-row bucket: the served
+        // output must match a native seq_len=16 encoder within the band.
+        let x = weights::init_input(5, 16, 256);
+        let out = s
+            .submit(encode("small", x.clone()), QoS::default())
+            .unwrap()
+            .wait()
+            .unwrap()
+            .into_encode()
+            .unwrap();
+        assert_eq!((out.output.rows, out.output.cols), (16, 256));
+        let mask = reference::attention_mask(16, 16, false);
+        let want = reference::encoder_stack(&x, &spec.weights(), &mask);
+        assert!(out.output.max_abs_diff(&want) < 2e-3);
+        // A 10-row request pads into the same 16-row bucket and is
+        // cropped back to its live rows on the way out.
+        let y = weights::init_input(6, 10, 256);
+        let out = s
+            .submit(encode("small", y), QoS::default())
+            .unwrap()
+            .wait()
+            .unwrap()
+            .into_encode()
+            .unwrap();
+        assert_eq!((out.output.rows, out.output.cols), (10, 256));
+        let m = s.shutdown().unwrap();
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.actual_rows, 16 + 10, "live rows as requested");
+        assert_eq!(m.padded_rows, 16 + 16, "both requests dispatch in the 16-row bucket");
+        assert!(m.report().contains("padding waste"), "{}", m.report());
+    }
+
+    #[test]
     fn multi_model_serving_reprograms_between_models() {
         require_artifacts!();
         let a = ModelSpec::new("a", presets::small_encoder(32, 1), 1);
@@ -1474,9 +1518,16 @@ mod tests {
     fn rejects_bad_requests_fast() {
         require_artifacts!();
         let s = server(vec![ModelSpec::new("small", presets::small_encoder(32, 1), 3)]);
-        let wrong_shape = weights::init_input(0, 16, 256);
+        // Short inputs now route (length-adaptive); only over-long rows
+        // and wrong widths are refused at submission time.
+        let too_long = weights::init_input(0, 40, 256);
         assert!(matches!(
-            s.submit(encode("small", wrong_shape), QoS::default()),
+            s.submit(encode("small", too_long), QoS::default()),
+            Err(ServeError::InvalidRequest(_))
+        ));
+        let wrong_width = weights::init_input(0, 16, 128);
+        assert!(matches!(
+            s.submit(encode("small", wrong_width), QoS::default()),
             Err(ServeError::InvalidRequest(_))
         ));
         let unknown = weights::init_input(0, 32, 256);

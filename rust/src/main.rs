@@ -288,7 +288,7 @@ fn cmd_validate() -> anyhow::Result<()> {
 /// (dataflow, waves, KV contracts — signature checks skip).
 fn cmd_verify_programs(args: &[String]) -> anyhow::Result<()> {
     use adaptor::accel::schedule::{
-        optimize, verify, ArtifactInventory, FabricConstants, ProgramKind, ScheduleBuilder,
+        self, optimize, verify, ArtifactInventory, FabricConstants, ProgramKind, ScheduleBuilder,
     };
     use adaptor::runtime::Manifest;
 
@@ -326,24 +326,53 @@ fn cmd_verify_programs(args: &[String]) -> anyhow::Result<()> {
             // is always the split f32 chain.
             let flavors: &[bool] =
                 if kind == ProgramKind::Encoder { &[false, true] } else { &[false] };
+            // Bucket sweep: every program the engine's length-adaptive
+            // cache can serve for this topology — the dense max-length
+            // program (bucket = None) plus one skippable program per
+            // length tier.  Seq2seq prefills never re-bucket (the
+            // cross-attention memory fence is the encoder's seq_len) and
+            // the decode step is never skippable, so those sweep only
+            // the full-length bucket / the dense program respectively.
+            let mut buckets: Vec<Option<usize>> = vec![None];
+            match kind {
+                ProgramKind::Encoder => {
+                    buckets.extend(schedule::length_tiers(cfg.seq_len).into_iter().map(Some));
+                }
+                ProgramKind::Prefill if cfg.enc_layers == 0 => {
+                    buckets.extend(schedule::length_tiers(cfg.seq_len).into_iter().map(Some));
+                }
+                ProgramKind::Prefill => buckets.push(Some(cfg.seq_len)),
+                ProgramKind::DecodeStep => {}
+            }
             for &quantized in flavors {
                 for level in levels {
-                    let builder = ScheduleBuilder::new(fc, cfg)?;
-                    let mut p = match kind {
-                        ProgramKind::Encoder => builder.quantized(quantized).build(),
-                        ProgramKind::Prefill => builder.build_prefill(),
-                        ProgramKind::DecodeStep => builder.build_step(),
-                    };
-                    optimize(&mut p, level, &inventory)?;
-                    let report = verify::verify(&p, kind, &inventory);
-                    programs += 1;
-                    errors += report.error_count();
-                    warnings += report.warning_count();
-                    if !report.diagnostics.is_empty() {
-                        let q = if quantized { " int8" } else { "" };
-                        println!("{name} {kind:?} {level:?}{q}:");
-                        for d in &report.diagnostics {
-                            println!("  {d}");
+                    for &bucket in &buckets {
+                        let cfg_b = match bucket {
+                            Some(b) => adaptor::model::TnnConfig { seq_len: b, ..cfg },
+                            None => cfg,
+                        };
+                        let builder =
+                            ScheduleBuilder::new(fc, cfg_b)?.skippable(bucket.is_some());
+                        let mut p = match kind {
+                            ProgramKind::Encoder => builder.quantized(quantized).build(),
+                            ProgramKind::Prefill => builder.build_prefill(),
+                            ProgramKind::DecodeStep => builder.build_step(),
+                        };
+                        optimize(&mut p, level, &inventory)?;
+                        let report = verify::verify(&p, kind, &inventory);
+                        programs += 1;
+                        errors += report.error_count();
+                        warnings += report.warning_count();
+                        if !report.diagnostics.is_empty() {
+                            let q = if quantized { " int8" } else { "" };
+                            let b = match bucket {
+                                Some(b) => format!(" bucket={b}"),
+                                None => String::new(),
+                            };
+                            println!("{name} {kind:?} {level:?}{q}{b}:");
+                            for d in &report.diagnostics {
+                                println!("  {d}");
+                            }
                         }
                     }
                 }

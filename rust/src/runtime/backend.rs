@@ -50,6 +50,24 @@ pub trait FabricBackend {
         self.upload(&Tensor::zeros(shape.to_vec()))
     }
 
+    /// [`FabricBackend::dispatch`] with a replay-time live-row bound:
+    /// `rows` is `Some(t)` when the dispatch sits behind a fired length
+    /// tier of `t` rows (a skippable attention dispatch), `None` for
+    /// unpredicated dispatches.  Numeric backends ignore the bound — the
+    /// per-tier masks already fence the dead rows — while pricing
+    /// backends (`accel::sim::cycle::CycleBackend`) scale the dispatch
+    /// cost to the live tier, which is where the recovered padding waste
+    /// of length-adaptive programs shows up.  Default: plain dispatch.
+    fn dispatch_rows(
+        &self,
+        artifact: &str,
+        inputs: &[&Self::Buf],
+        out_shape: &[usize],
+        _rows: Option<usize>,
+    ) -> anyhow::Result<Self::Buf> {
+        self.dispatch(artifact, inputs, out_shape)
+    }
+
     /// Wave-replay entry points: a wave-scheduled `TileProgram` brackets
     /// each wave of mutually independent instructions with
     /// `wave_begin(index, len)` / `wave_end()`.  Execution inside a wave

@@ -1,0 +1,497 @@
+//! Length-adaptive equivalence proof, artifact-free.  The tentpole
+//! contract of seq-bucketed specialization + skippable dispatch is that
+//! serving a request of `live` rows through the covering bucket's
+//! skippable program is **indistinguishable on the live rows** from
+//! padding it into the dense max-length program.  These tests pin that
+//! bit-for-bit with a *row-local, zero-preserving* pseudo-numeric
+//! backend (a sharper construction than `integration_opt`'s row-global
+//! hash backend, which cannot isolate live rows):
+//!
+//! - every non-attention dispatch maps row `r` of its activation input
+//!   to row `r` of its output, and an all-zero (dead) row stays exactly
+//!   zero — no bias leaks into padding;
+//! - attention is mask- and liveness-aware: dead query rows score
+//!   `NEG_INF` everywhere (their probability rows collapse to zero), and
+//!   dead key rows carry zero values, so they contribute exactly `+0.0`
+//!   to every live row whether the mask fences them (bucketed program)
+//!   or not (dense program).
+//!
+//! Under those semantics — which model the real fabric's zero-padded
+//! tiles — the dense replay and the bucketed/skipping replay agree
+//! bit-for-bit on rows `[0, live)` across the topology × bucket sweep at
+//! O0, O1 and O2, for encoders and decoder prefills (causal tiers are
+//! exact for any live prefix; cross-attention is never tiered).  The
+//! same file carries the artifact-free cycle acceptance: a request at
+//! ≤ ¼ `seq_len` must price strictly below the dense maximum.
+
+use adaptor::accel::schedule::{
+    self, optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder, TileProgram,
+    WeightKind, WeightRef, WeightSource,
+};
+use adaptor::accel::sim::cycle;
+use adaptor::model::reference::NEG_INF;
+use adaptor::model::{presets, TnnConfig};
+use adaptor::runtime::{FabricBackend, Tensor};
+
+use std::collections::HashMap;
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+/// Scores at or below this are "fenced" — mirrors the mask's `NEG_INF`
+/// with headroom for the bounded mix added on top.
+const DEAD_FENCE: f32 = NEG_INF / 2.0;
+
+fn dead(row: &[f32]) -> bool {
+    row.iter().all(|v| *v == 0.0)
+}
+
+fn row(t: &Tensor, r: usize) -> &[f32] {
+    let w = t.data.len() / t.shape[0];
+    &t.data[r * w..(r + 1) * w]
+}
+
+/// Bounded deterministic stand-in for a q·k dot product.
+fn mix(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (c, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        acc += x * y * (((c % 7) + 1) as f32) * 0.0625;
+    }
+    (acc * 0.25).sin()
+}
+
+/// Pseudo-exp: zero past the fence (masked), bounded positive elsewhere,
+/// and exactly `1.0` at a zero score — so a dead key under an open mask
+/// (dense program) weights its all-zero value row by 1, contributing the
+/// same `+0.0` as the fenced bucketed program's weight of 0.
+fn pexp(x: f32) -> f32 {
+    if x <= DEAD_FENCE {
+        0.0
+    } else {
+        (0.5 * x).sin() * 0.5 + 1.0
+    }
+}
+
+/// Row-local, zero-preserving pseudo-numeric backend (see module doc).
+struct RowBackend;
+
+impl RowBackend {
+    fn qk(q: &Tensor, k: &Tensor, mask: &Tensor, scale: f32) -> Vec<f32> {
+        let sl = mask.shape[0];
+        let mut out = vec![0.0f32; sl * sl];
+        for i in 0..sl {
+            let qi = row(q, i);
+            if dead(qi) {
+                out[i * sl..(i + 1) * sl].fill(NEG_INF);
+                continue;
+            }
+            for j in 0..sl {
+                let kj = row(k, j);
+                let s = if dead(kj) { 0.0 } else { mix(qi, kj) * scale };
+                out[i * sl + j] = s + mask.data[i * sl + j];
+            }
+        }
+        out
+    }
+
+    fn sv(p: &[f32], sl: usize, v: &Tensor) -> Vec<f32> {
+        let dk = v.shape[1];
+        let mut out = vec![0.0f32; sl * dk];
+        for i in 0..sl {
+            for c in 0..dk {
+                let mut acc = 0.0f32;
+                for j in 0..sl {
+                    acc += p[i * sl + j] * v.data[j * dk + c];
+                }
+                out[i * dk + c] = (acc * 0.0625).sin();
+            }
+        }
+        out
+    }
+
+    /// Generic row-local op: row `r` of the output mixes row `r` of every
+    /// row-aligned input plus the global (weight/bias) inputs — gated on
+    /// the first operand's row being live, which is the builder's
+    /// activation-first convention.  Dead rows stay exactly zero.
+    fn generic(artifact: &str, inputs: &[&Tensor], out_shape: &[usize]) -> Vec<f32> {
+        let n = out_shape[0];
+        let cols: usize = out_shape[1..].iter().product::<usize>().max(1);
+        let h0 = artifact.bytes().fold(2166136261u32, |h, b| (h ^ b as u32).wrapping_mul(16777619));
+        let mut data = vec![0.0f32; n * cols];
+        for r in 0..n {
+            let gate = inputs
+                .first()
+                .map(|t| t.shape.len() < 2 || t.shape[0] != n || !dead(row(t, r)))
+                .unwrap_or(true);
+            if !gate {
+                continue;
+            }
+            let mut h = h0;
+            for (k, t) in inputs.iter().enumerate() {
+                let src: &[f32] =
+                    if t.shape.len() == 2 && t.shape[0] == n { row(t, r) } else { &t.data };
+                let len = src.len().max(1);
+                let w = ((h % 13) + k as u32 + 1) as f32 * 0.0625;
+                for c in 0..cols {
+                    data[r * cols + c] += src[(c + 7 * k) % len] * w;
+                }
+                h = h.wrapping_mul(16777619) ^ (k as u32 + 1);
+            }
+            for c in 0..cols {
+                data[r * cols + c] = (data[r * cols + c] * 0.25).sin();
+            }
+        }
+        data
+    }
+}
+
+impl FabricBackend for RowBackend {
+    type Buf = Tensor;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(t.clone())
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&Tensor],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        let data = match artifact {
+            "qk_scores" => {
+                let (q, k, mask, scale) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+                Self::qk(q, k, mask, scale.data[0])
+            }
+            "softmax" => inputs[0].data.iter().map(|x| pexp(*x)).collect(),
+            "sv" => Self::sv(&inputs[0].data, inputs[0].shape[0], inputs[1]),
+            "attn_fused" => {
+                let (q, k, v, mask, scale) =
+                    (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+                let s = Self::qk(q, k, mask, scale.data[0]);
+                let p: Vec<f32> = s.iter().map(|x| pexp(*x)).collect();
+                Self::sv(&p, mask.shape[0], v)
+            }
+            _ => Self::generic(artifact, inputs, out_shape),
+        };
+        Ok(Tensor::new(out_shape.to_vec(), data))
+    }
+
+    fn fetch(&self, b: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(b.clone())
+    }
+}
+
+/// Fabric-fixed panel shape per weight kind (same table as
+/// `integration_opt` / `integration_scheduler`).
+fn weight_shape(f: &FabricConstants, kind: WeightKind) -> Vec<usize> {
+    match kind {
+        WeightKind::Wq
+        | WeightKind::Wk
+        | WeightKind::Wv
+        | WeightKind::CWq
+        | WeightKind::CWk
+        | WeightKind::CWv => vec![f.ts_mha, f.dk],
+        WeightKind::QkvPacked => vec![f.ts_mha, 3 * f.dk],
+        WeightKind::Bq
+        | WeightKind::Bk
+        | WeightKind::Bv
+        | WeightKind::CBq
+        | WeightKind::CBk
+        | WeightKind::CBv => vec![f.dk],
+        WeightKind::BQkvPacked => vec![3 * f.dk],
+        WeightKind::Wo | WeightKind::CWo => vec![f.ts_ffn, f.ts_ffn],
+        WeightKind::Bo
+        | WeightKind::B2
+        | WeightKind::G1
+        | WeightKind::B1n
+        | WeightKind::G2
+        | WeightKind::B2n
+        | WeightKind::CBo
+        | WeightKind::CG
+        | WeightKind::CBn => vec![f.dmodel_max],
+        WeightKind::W1 => vec![f.ts_ffn, f.ffn_col],
+        WeightKind::B1 => vec![f.hidden_max],
+        WeightKind::W2 => vec![f.ffn_col, f.ts_ffn],
+        WeightKind::DWq | WeightKind::DWk | WeightKind::DWv | WeightKind::DCWq => {
+            vec![f.dmodel_max, f.dk]
+        }
+        WeightKind::DWo | WeightKind::DCWo => vec![f.dmodel_max, f.dmodel_max],
+        WeightKind::DW1 => vec![f.dmodel_max, f.hidden_max],
+        WeightKind::DW2 => vec![f.hidden_max, f.dmodel_max],
+    }
+}
+
+/// Deterministic weight stand-ins keyed by `WeightRef`, seeded from
+/// every program in `progs` — the dense and bucketed programs of one
+/// topology share refs, so they resolve identical tensors.
+struct RefWeights {
+    map: HashMap<WeightRef, Tensor>,
+}
+
+impl RefWeights {
+    fn for_programs(progs: &[&TileProgram], f: &FabricConstants) -> Self {
+        let mut map = HashMap::new();
+        for prog in progs {
+            for step in &prog.steps {
+                let schedule::Step::Dispatch { args, .. } = step else { continue };
+                for arg in args {
+                    let schedule::Operand::Weight(r) = arg else { continue };
+                    map.entry(*r).or_insert_with(|| {
+                        let shape = weight_shape(f, r.kind);
+                        let seed = (r.layer * 7919 + r.row * 131 + r.col * 17) % 1000;
+                        let n: usize = shape.iter().product();
+                        let data =
+                            (0..n).map(|i| ((seed + i) as f32 * 0.137).sin()).collect();
+                        Tensor::new(shape, data)
+                    });
+                }
+            }
+        }
+        RefWeights { map }
+    }
+}
+
+impl WeightSource<Tensor> for RefWeights {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Tensor> {
+        self.map.get(r).ok_or_else(|| anyhow::anyhow!("unseeded weight ref {r:?}"))
+    }
+}
+
+/// Padded input with deterministic nonzero content in the first `live`
+/// rows and exact zeros everywhere else.
+fn live_input(f: &FabricConstants, d_model: usize, live: usize) -> Tensor {
+    let mut t = Tensor::zeros(vec![f.sl_max, f.dmodel_max]);
+    for r in 0..live {
+        for c in 0..d_model {
+            t.data[r * f.dmodel_max + c] = ((r * 31 + c) as f32 * 0.0917).sin();
+        }
+    }
+    t
+}
+
+/// The live row counts worth probing for `seq_len`: every tier boundary
+/// plus one interior point per tier (first row the tier covers).
+fn live_sweep(seq_len: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut lo = 0usize;
+    for t in schedule::length_tiers(seq_len) {
+        out.push(lo + 1);
+        if t != lo + 1 {
+            out.push(t);
+        }
+        lo = t;
+    }
+    out
+}
+
+fn build_encoder(f: FabricConstants, cfg: TnnConfig, skippable: bool, level: OptLevel) -> TileProgram {
+    let inv = ArtifactInventory::assume_all();
+    let mut p = ScheduleBuilder::new(f, cfg).unwrap().skippable(skippable).build();
+    optimize(&mut p, level, &inv).unwrap();
+    p
+}
+
+fn build_prefill(f: FabricConstants, cfg: TnnConfig, skippable: bool, level: OptLevel) -> TileProgram {
+    let inv = ArtifactInventory::assume_all();
+    let mut p = ScheduleBuilder::new(f, cfg).unwrap().skippable(skippable).build_prefill();
+    optimize(&mut p, level, &inv).unwrap();
+    p
+}
+
+/// The proof for one encoder topology at one opt level: for every live
+/// row count, the covering bucket's skippable program must match the
+/// dense max-length program bit-for-bit on rows `[0, live)` — and leave
+/// its padding rows exactly zero.
+fn assert_encoder_equivalence(cfg: TnnConfig, level: OptLevel) {
+    let f = fc();
+    let backend = RowBackend;
+    let dense = build_encoder(f, cfg, false, level);
+    let runtime_dense = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    for live in live_sweep(cfg.seq_len) {
+        let bucket = schedule::covering_bucket(live, cfg.seq_len);
+        let cfg_b = TnnConfig { seq_len: bucket, ..cfg };
+        let adaptive = build_encoder(f, cfg_b, true, level);
+        let weights = RefWeights::for_programs(&[&dense, &adaptive], &f);
+        let x = live_input(&f, cfg.d_model, live);
+        let a =
+            schedule::replay_with(&dense, &backend, &weights, &runtime_dense, x.clone(), None)
+                .unwrap();
+        let mut rt = schedule::build_runtime(&backend, &cfg_b, &f).unwrap();
+        schedule::upload_tier_masks(&backend, &mut rt, &cfg_b, &f, &adaptive.tier_mask_ids())
+            .unwrap();
+        let b = schedule::replay_with_live(&adaptive, &backend, &weights, &rt, x, None, live)
+            .unwrap();
+        let n = live * f.dmodel_max;
+        assert!(
+            a.data[..n] == b.data[..n],
+            "{cfg} {level:?}: live={live} bucket={bucket} diverged on live rows"
+        );
+        assert!(
+            b.data[n..].iter().all(|v| *v == 0.0),
+            "{cfg} {level:?}: live={live} bucket={bucket} leaked into padding rows"
+        );
+    }
+}
+
+/// The decoder-prefill proof: causal tiers are exact for any live
+/// prefix, and the exported K/V panels (the KV-cache seed) must agree in
+/// full — dead rows are zero on both sides.
+fn assert_prefill_equivalence(cfg: TnnConfig, level: OptLevel, lives: &[usize]) {
+    let f = fc();
+    let backend = RowBackend;
+    let dense = build_prefill(f, cfg, false, level);
+    let runtime_dense = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    for &live in lives {
+        // seq2seq prefills keep the full-length bucket (the cross-attn
+        // memory fence must stay at seq_len); decoder-only prompts drop
+        // into their covering bucket — exactly the engine's policy.
+        let bucket = if cfg.enc_layers == 0 {
+            schedule::covering_bucket(live, cfg.seq_len)
+        } else {
+            cfg.seq_len
+        };
+        let cfg_b = TnnConfig { seq_len: bucket, ..cfg };
+        let adaptive = build_prefill(f, cfg_b, true, level);
+        let weights = RefWeights::for_programs(&[&dense, &adaptive], &f);
+
+        let mut inputs = vec![live_input(&f, cfg.d_model, live)];
+        for _ in 0..dense.aux_hosts.len() {
+            // the encoder memory of a seq2seq prefill is full-length
+            inputs.push(live_input(&f, cfg.d_model, cfg.seq_len));
+        }
+        let (a, ax) = schedule::replay_full(
+            &dense,
+            &backend,
+            &weights,
+            &runtime_dense,
+            inputs.clone(),
+            &[],
+            None,
+        )
+        .unwrap();
+        let mut rt = schedule::build_runtime(&backend, &cfg_b, &f).unwrap();
+        schedule::upload_tier_masks(&backend, &mut rt, &cfg_b, &f, &adaptive.tier_mask_ids())
+            .unwrap();
+        let (b, bx) = schedule::replay_full_adaptive(
+            &adaptive, &backend, &weights, &rt, inputs, &[], None, live,
+        )
+        .unwrap();
+        let n = live * f.dmodel_max;
+        assert!(
+            a.data[..n] == b.data[..n],
+            "{cfg} {level:?}: prefill live={live} bucket={bucket} diverged on live rows"
+        );
+        assert_eq!(ax.len(), bx.len(), "{cfg} {level:?}: export count diverged");
+        for (i, (pa, pb)) in ax.iter().zip(&bx).enumerate() {
+            assert!(
+                pa.data == pb.data,
+                "{cfg} {level:?}: prefill live={live} KV export panel {i} diverged"
+            );
+        }
+    }
+}
+
+/// ≥ 3 encoder topologies: full tier ladder, a two-tier mid-size, and a
+/// topology whose seq_len is not a power of two (uneven top tier).
+fn encoder_sweep() -> Vec<TnnConfig> {
+    vec![
+        TnnConfig::encoder(128, 256, 4, 2),
+        TnnConfig::encoder(64, 128, 2, 1),
+        TnnConfig::encoder(48, 256, 4, 1),
+    ]
+}
+
+#[test]
+fn bucketed_encoders_match_dense_on_live_rows_at_o0() {
+    for cfg in encoder_sweep() {
+        assert_encoder_equivalence(cfg, OptLevel::O0);
+    }
+}
+
+#[test]
+fn bucketed_encoders_match_dense_on_live_rows_at_o1() {
+    for cfg in encoder_sweep() {
+        assert_encoder_equivalence(cfg, OptLevel::O1);
+    }
+}
+
+#[test]
+fn bucketed_encoders_match_dense_on_live_rows_at_o2() {
+    for cfg in encoder_sweep() {
+        assert_encoder_equivalence(cfg, OptLevel::O2);
+    }
+}
+
+#[test]
+fn bucketed_prefills_match_dense_on_live_rows_at_o0() {
+    assert_prefill_equivalence(presets::gpt_small(64, 2), OptLevel::O0, &[4, 16, 33, 64]);
+    assert_prefill_equivalence(presets::seq2seq_small(64, 1, 1), OptLevel::O0, &[4, 32]);
+}
+
+#[test]
+fn bucketed_prefills_match_dense_on_live_rows_at_o1() {
+    assert_prefill_equivalence(presets::gpt_small(64, 2), OptLevel::O1, &[4, 16, 33, 64]);
+    assert_prefill_equivalence(presets::seq2seq_small(64, 1, 1), OptLevel::O1, &[4, 32]);
+}
+
+#[test]
+fn bucketed_prefills_match_dense_on_live_rows_at_o2() {
+    assert_prefill_equivalence(presets::gpt_small(64, 2), OptLevel::O2, &[4, 16, 33, 64]);
+    assert_prefill_equivalence(presets::seq2seq_small(64, 1, 1), OptLevel::O2, &[4, 32]);
+}
+
+/// The ISSUE's cycle acceptance, artifact-free: a request at ≤ ¼ of the
+/// topology's seq_len must price strictly below the dense maximum, at
+/// every opt level.
+#[test]
+fn quarter_length_requests_price_strictly_below_dense() {
+    let f = fc();
+    for cfg in [
+        TnnConfig::encoder(128, 256, 4, 2),
+        TnnConfig::encoder(64, 128, 2, 1),
+        TnnConfig::encoder(64, 512, 8, 4),
+    ] {
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let dense = build_encoder(f, cfg, false, level);
+            let d = cycle::replay_program(&dense).unwrap();
+            let a = cycle::estimate_adaptive(&cfg, &f, cfg.seq_len / 4, level).unwrap();
+            assert!(
+                a.total_cycles < d.total_cycles,
+                "{cfg} {level:?}: quarter-length {} !< dense {}",
+                a.total_cycles,
+                d.total_cycles
+            );
+        }
+    }
+}
+
+/// Bucket dispatch of the whole ladder: the adaptive estimate is
+/// monotone in request length and lands exactly on the dense estimate at
+/// the top bucket.
+#[test]
+fn adaptive_estimates_are_monotone_and_close_the_ladder() {
+    let f = fc();
+    let cfg = TnnConfig::encoder(128, 256, 4, 2);
+    let mut prev = 0u64;
+    for rows in schedule::length_tiers(cfg.seq_len) {
+        let rep = cycle::estimate_adaptive(&cfg, &f, rows, OptLevel::O1).unwrap();
+        assert!(
+            rep.total_cycles >= prev,
+            "bucket {rows}: cycles {} regressed below {prev}",
+            rep.total_cycles
+        );
+        prev = rep.total_cycles;
+    }
+    let dense = build_encoder(f, cfg, false, OptLevel::O1);
+    let d = cycle::replay_program(&dense).unwrap();
+    let top = cycle::estimate_adaptive(&cfg, &f, cfg.seq_len, OptLevel::O1).unwrap();
+    assert_eq!(top.dispatches, d.dispatches, "top bucket must fire the dense stream");
+    assert!(
+        (top.total_cycles as i64 - d.total_cycles as i64).unsigned_abs() <= 2,
+        "top bucket {} vs dense {} drifted past rounding",
+        top.total_cycles,
+        d.total_cycles
+    );
+}

@@ -50,11 +50,13 @@ fn pjrt_and_cycle_backend_replay_identical_streams() {
         );
         assert_eq!(pjrt_trace, rep.trace, "{cfg}: artifact sequences diverge");
 
-        // both must also agree with the program's own stream
+        // both must also agree with the program's own stream — at full
+        // length only the top tier of the skippable program fires, so
+        // compare against the live (fired) sequence, not the static one
         let prog = e.cached_program(&cfg).unwrap();
         assert_eq!(
             pjrt_trace,
-            prog.program.dispatch_sequence(),
+            prog.program.live_dispatch_sequence(cfg.seq_len),
             "{cfg}: PJRT strayed from the program"
         );
     }
@@ -117,21 +119,29 @@ fn cached_replay_drops_per_request_transfers() {
     let t_h = cfg.hidden / fc.ffn_col;
     let l = cfg.enc_layers;
     // 1 padded input + per-layer activation panels and assemblies — and
-    // NOT the old l-1 extra full-x uploads nor the 10 runtime tensors.
+    // NOT the old l-1 extra full-x uploads nor the runtime tensors.
     let expected = (1 + l * (t_m + 2 * t_f + t_h + 3)) as u64;
     assert_eq!(s2.uploads - s1.uploads, expected, "replay upload count");
+    // The per-topology runtime set is the 10 base tensors plus one
+    // mask + causal-mask pair per non-top length tier.
+    let tiers = adaptor::accel::schedule::length_tiers(cfg.seq_len).len() as u64;
+    let runtime_set = 10 + 2 * (tiers - 1);
     assert_eq!(
         s1.uploads - s0.uploads,
-        expected + 10,
-        "first request additionally uploads the 10 per-topology runtime tensors"
+        expected + runtime_set,
+        "first request additionally uploads the per-topology runtime tensors"
     );
-    let naive = expected + 10 + (l as u64 - 1); // what the loop-nest engine paid
+    let naive = expected + runtime_set + (l as u64 - 1); // what the loop-nest engine paid
     assert!(s2.uploads - s1.uploads < naive, "the transfer drop must be real");
 
     let prog = e.cached_program(&cfg).unwrap();
     assert_eq!(prog.program.upload_count() as u64, expected);
     assert_eq!(s2.fetches - s1.fetches, prog.program.fetch_count() as u64);
-    assert_eq!(s2.dispatches - s1.dispatches, prog.program.dispatch_count() as u64);
+    // at full length only the fired (top-tier) dispatches execute
+    assert_eq!(
+        s2.dispatches - s1.dispatches,
+        prog.program.live_dispatch_count(cfg.seq_len) as u64
+    );
 }
 
 #[test]
@@ -226,16 +236,17 @@ fn o2_serving_path_is_strictly_cheaper_and_in_band() {
     assert!(d2 < d0, "optimized replay must dispatch less ({d2} vs {d0})");
     assert!(u2 <= u0, "optimized replay must not upload more ({u2} vs {u0})");
     assert!(d2 + u2 < d0 + u0, "dispatches+uploads must strictly drop");
-    // counts must agree with the cached programs themselves
+    // counts must agree with the cached programs themselves (live counts:
+    // at full length only the top tier of the skippable program fires)
     let prog = e.cached_program(&cfg).unwrap();
-    assert_eq!(d2, prog.program.dispatch_count() as u64);
+    assert_eq!(d2, prog.program.live_dispatch_count(cfg.seq_len) as u64);
     assert_eq!(u2, prog.program.upload_count() as u64);
     // and numerics stay within the fused artifacts' band
     assert!(raw_out.max_abs_diff(&opt_out) < 1e-3);
     // the dispatch trace of the optimized replay is the optimized stream
     e.executor().trace_dispatches(true);
     e.run_encoder(&p, &x).unwrap();
-    assert_eq!(e.executor().take_trace(), prog.program.dispatch_sequence());
+    assert_eq!(e.executor().take_trace(), prog.program.live_dispatch_sequence(cfg.seq_len));
 }
 
 #[test]

@@ -286,3 +286,62 @@ fn prop_mat_pad_preserves_content() {
         assert_eq!(s, s0);
     }
 }
+
+#[test]
+fn prop_covering_bucket_is_smallest_covering_tier() {
+    use adaptor::accel::schedule::{covering_bucket, length_tiers};
+    let mut rng = SplitMix64::new(0x5EB0);
+    for _ in 0..CASES {
+        let seq_len = [8usize, 16, 24, 32, 48, 64, 100, 128][rng.below(8) as usize];
+        let tiers = length_tiers(seq_len);
+        // the ladder itself is sane: strictly increasing, topped by seq_len
+        assert!(tiers.windows(2).all(|w| w[0] < w[1]), "{tiers:?}");
+        assert_eq!(*tiers.last().unwrap(), seq_len);
+        let rows = 1 + rng.below(seq_len as u64) as usize;
+        let b = covering_bucket(rows, seq_len);
+        assert!(tiers.contains(&b), "bucket {b} not a tier of {tiers:?}");
+        assert!(b >= rows, "bucket {b} does not cover {rows}");
+        // smallest: no tier below b also covers rows
+        assert!(
+            tiers.iter().all(|t| *t >= b || *t < rows),
+            "rows={rows} seq_len={seq_len}: {b} is not the smallest covering tier of {tiers:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_live_dispatch_count_monotone_in_live_rows() {
+    use adaptor::accel::schedule::{
+        length_tiers, optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder,
+    };
+    // A longer request can never fire fewer dispatches: tier predicates
+    // partition (0, seq_len] with per-tier chains of identical length, and
+    // everything else is unpredicated.  Swept over random topologies and
+    // opt levels rather than proved from the builder's structure.
+    let mut rng = SplitMix64::new(0xD15C);
+    let fc = FabricConstants::artifact_default();
+    let inv = ArtifactInventory::assume_all();
+    for _ in 0..24 {
+        let heads = [2usize, 4, 6][rng.below(3) as usize];
+        let seq_len = [16usize, 32, 48, 64, 128][rng.below(5) as usize];
+        let layers = 1 + rng.below(3) as usize;
+        let cfg = TnnConfig::encoder(seq_len, heads * 64, heads, layers);
+        let level = [OptLevel::O0, OptLevel::O1, OptLevel::O2][rng.below(3) as usize];
+        let mut prog = ScheduleBuilder::new(fc, cfg).unwrap().skippable(true).build();
+        optimize(&mut prog, level, &inv).unwrap();
+        let mut prev = 0usize;
+        for live in 1..=seq_len {
+            let n = prog.live_dispatch_count(live);
+            assert!(
+                n >= prev,
+                "{cfg} {level:?}: live={live} fires {n} dispatches, fewer than {prev}"
+            );
+            prev = n;
+        }
+        // and the full-length replay fires the whole dense stream: the
+        // static count minus the skipped lower tiers of each chain
+        let tiers = length_tiers(seq_len).len();
+        assert!(tiers >= 1);
+        assert!(prog.live_dispatch_count(seq_len) <= prog.dispatch_count());
+    }
+}
