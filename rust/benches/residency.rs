@@ -1,0 +1,251 @@
+//! Multi-model churn bench: weight residency vs the paper's
+//! reprogram-on-every-switch host loop.
+//!
+//! Three presets are round-robined over a 2-fabric pool whose per-fabric
+//! weight memory holds only **two** of the three stacks (capacity = the
+//! two largest footprints).  The managed run uses the serving default —
+//! `SchedulePolicy::CostAware` placement over per-fabric
+//! `WeightResidencyManager`s — so model↔fabric affinity emerges from
+//! residency and the pool settles into a stable split after three
+//! uploads.  The baseline run is `RoundRobin` + `ReprogramAlways`:
+//! every dispatch re-uploads the whole stack, exactly as the paper's
+//! host loop reprograms on every model switch.
+//!
+//! Outputs are modeled as a deterministic mix of (resident-stack
+//! fingerprint, request index), so a stale or wrongly-evicted stack
+//! would break the managed↔baseline checksum equality the bench
+//! asserts.  `BENCH_residency.json` is **deliberately timing-free**:
+//! every field is a deterministic counter or integer cycle derivation
+//! (upload beats at 64 B/cycle, `residency::UPLOAD_BYTES_PER_CYCLE`),
+//! so the tracked file is bit-stable across machines and PRs.  Wall
+//! timings of the manager hot path print to stdout only.
+
+use std::collections::VecDeque;
+
+use adaptor::accel::schedule::FabricConstants;
+use adaptor::coordinator::residency::{upload_cycles, weight_footprint_bytes};
+use adaptor::coordinator::{
+    PoolScheduler, ResidencyMode, ResidencyPolicy, SchedulePolicy, WeightResidencyManager,
+};
+use adaptor::model::presets;
+use adaptor::util::benchkit::{bench, header};
+use adaptor::util::json;
+
+const JSON_PATH: &str = "BENCH_residency.json";
+const PRESETS: [&str; 3] = ["gpt-small", "shallow", "custom-encoder-4l"];
+const REQUESTS: usize = 300;
+const POOL: usize = 2;
+/// Dispatches kept in flight before the oldest completes — deep enough
+/// to spread load across the pool, shallower than the upload penalty so
+/// placement stays residency-sticky.
+const WINDOW: usize = 4;
+/// Constant reprogram penalty (queued-request equivalents) handed to the
+/// cost-aware scorer.  The serve path prices this per model via
+/// `residency::upload_penalty_requests`; the bench pins one value larger
+/// than any in-flight gap so the placement trace — and with it the
+/// committed JSON — is independent of the cycle backend.
+const PENALTY: f64 = 8.0;
+
+fn fnv64(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Deterministic stand-in for one served request's output: a mix of the
+/// resident stack's fingerprint and the request index.
+fn output_token(stack: u64, request: u64) -> u64 {
+    (stack ^ request.wrapping_mul(0x9e3779b97f4a7c15)).wrapping_mul(0x100000001b3)
+}
+
+struct RunStats {
+    uploads: u64,
+    hits: u64,
+    evictions: u64,
+    upload_cycles_total: u64,
+    resident_bytes_peak: u64,
+    checksum: u64,
+}
+
+/// One churn run: `REQUESTS` dispatches of the preset round-robin over a
+/// `POOL`-fabric pool, driving the real `PoolScheduler` and one real
+/// `WeightResidencyManager` per fabric exactly as the serve path does
+/// (pick → acquire → residency snapshot back to the scheduler →
+/// completion when the in-flight window slides).
+fn run_churn(
+    policy: SchedulePolicy,
+    mode: ResidencyMode,
+    models: &[(&str, u64)],
+    capacity_bytes: u64,
+) -> RunStats {
+    let mut sched = PoolScheduler::new(policy, POOL);
+    let rp = ResidencyPolicy { mode, capacity_bytes, ..ResidencyPolicy::default() };
+    let mut mgrs: Vec<WeightResidencyManager<u64>> =
+        (0..POOL).map(|_| WeightResidencyManager::new(rp)).collect();
+    for (name, _) in models {
+        sched.set_upload_penalty(name, PENALTY);
+    }
+
+    let mut inflight: VecDeque<usize> = VecDeque::new();
+    let mut upload_cycles_total = 0u64;
+    let mut checksum = 0u64;
+    for r in 0..REQUESTS {
+        let (name, bytes) = models[r % models.len()];
+        let f = sched.pick(name, None, 1);
+        let before = mgrs[f].stats().uploads;
+        mgrs[f]
+            .acquire_with(name, bytes, None, || Ok(fnv64(name)))
+            .expect("in-memory loader cannot fail");
+        if mgrs[f].stats().uploads > before {
+            upload_cycles_total += upload_cycles(bytes);
+        }
+        sched.note_residency(f, &mgrs[f].resident_models());
+        let stack = *mgrs[f].get(name).expect("just acquired");
+        checksum = (checksum ^ output_token(stack, r as u64)).wrapping_mul(0x100000001b3);
+        inflight.push_back(f);
+        if inflight.len() >= WINDOW {
+            let done = inflight.pop_front().expect("non-empty window");
+            sched.complete(done, 1);
+        }
+    }
+
+    let mut s = RunStats {
+        uploads: 0,
+        hits: 0,
+        evictions: 0,
+        upload_cycles_total,
+        resident_bytes_peak: 0,
+        checksum,
+    };
+    for m in &mgrs {
+        let st = m.stats();
+        s.uploads += st.uploads;
+        s.hits += st.hits;
+        s.evictions += st.evictions;
+        s.resident_bytes_peak = s.resident_bytes_peak.max(st.resident_bytes_peak);
+    }
+    s
+}
+
+fn stats_json(s: &RunStats) -> String {
+    format!(
+        concat!(
+            "{{\"uploads\": {}, \"hits\": {}, \"evictions\": {}, ",
+            "\"upload_cycles_total\": {}, \"upload_cycles_per_request\": {:.2}, ",
+            "\"resident_bytes_peak\": {}, \"outputs_checksum\": \"{:016x}\"}}"
+        ),
+        s.uploads,
+        s.hits,
+        s.evictions,
+        s.upload_cycles_total,
+        s.upload_cycles_total as f64 / REQUESTS as f64,
+        s.resident_bytes_peak,
+        s.checksum,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let fc = FabricConstants::artifact_default();
+    let models: Vec<(&str, u64)> = PRESETS
+        .iter()
+        .map(|name| {
+            let cfg = presets::by_name(name).expect("known preset");
+            (*name, weight_footprint_bytes(&cfg, &fc))
+        })
+        .collect();
+    // Per-fabric capacity = the two largest stacks: any two presets are
+    // co-resident, all three are not.
+    let mut sizes: Vec<u64> = models.iter().map(|(_, b)| *b).collect();
+    sizes.sort_unstable();
+    let capacity_bytes: u64 = sizes.iter().rev().take(2).sum();
+
+    println!("== weight-residency churn ({REQUESTS} requests, {POOL} fabrics) ==");
+    for (name, bytes) in &models {
+        println!("  {name:<20} {bytes:>12} bytes ({} upload cycles)", upload_cycles(*bytes));
+    }
+    println!("  per-fabric weight memory: {capacity_bytes} bytes (two largest stacks)\n");
+
+    let managed =
+        run_churn(SchedulePolicy::CostAware, ResidencyMode::Managed, &models, capacity_bytes);
+    let baseline = run_churn(
+        SchedulePolicy::RoundRobin,
+        ResidencyMode::ReprogramAlways,
+        &models,
+        capacity_bytes,
+    );
+
+    let fmt = |s: &RunStats, label: &str| {
+        println!(
+            "{label:<18} {:>7} uploads {:>7} hits {:>9} evictions {:>12} upload cycles",
+            s.uploads, s.hits, s.evictions, s.upload_cycles_total
+        );
+    };
+    fmt(&managed, "managed+costaware");
+    fmt(&baseline, "reprogram-always");
+    assert_eq!(
+        managed.checksum, baseline.checksum,
+        "residency caching changed the served outputs"
+    );
+    assert!(
+        managed.uploads < baseline.uploads,
+        "managed must upload strictly less than reprogram-always"
+    );
+    println!(
+        "\nupload reduction: {}x fewer stack uploads, bit-identical outputs",
+        baseline.uploads / managed.uploads
+    );
+
+    // Manager hot-path wall timings — stdout only, never in the JSON.
+    println!("\n{}", header());
+    let rp = ResidencyPolicy { capacity_bytes, ..ResidencyPolicy::default() };
+    let mut m: WeightResidencyManager<u64> = WeightResidencyManager::new(rp);
+    let r = bench("residency/acquire_hit", 10, 200, || {
+        for (name, bytes) in &models[..2] {
+            m.acquire_with(name, *bytes, None, || Ok(1)).unwrap();
+        }
+    });
+    println!("{}", r.line());
+    let mut m: WeightResidencyManager<u64> = WeightResidencyManager::new(ResidencyPolicy {
+        capacity_bytes: sizes.iter().rev().take(1).sum(),
+        ..ResidencyPolicy::default()
+    });
+    let r = bench("residency/evict_reload_churn", 10, 200, || {
+        for (name, bytes) in &models {
+            m.acquire_with(name, *bytes, None, || Ok(1)).unwrap();
+        }
+    });
+    println!("{}", r.line());
+
+    let json_text = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"residency_churn\",\n",
+            "  \"note\": \"deterministic counters and cycle derivations only; ",
+            "no wall-clock fields\",\n",
+            "  \"workload\": {{\"presets\": [{}], \"requests\": {}, \"pool\": {}, ",
+            "\"window\": {}, \"capacity_bytes\": {}, \"upload_penalty_requests\": {:.1}}},\n",
+            "  \"footprint_bytes\": {{{}}},\n",
+            "  \"managed_costaware\": {},\n",
+            "  \"reprogram_always\": {},\n",
+            "  \"upload_reduction_factor\": {:.2},\n",
+            "  \"bit_identical\": true\n",
+            "}}\n"
+        ),
+        PRESETS.map(|p| format!("\"{p}\"")).join(", "),
+        REQUESTS,
+        POOL,
+        WINDOW,
+        capacity_bytes,
+        PENALTY,
+        models
+            .iter()
+            .map(|(n, b)| format!("\"{n}\": {b}"))
+            .collect::<Vec<_>>()
+            .join(", "),
+        stats_json(&managed),
+        stats_json(&baseline),
+        baseline.uploads as f64 / managed.uploads as f64,
+    );
+    json::parse(&json_text).map_err(|e| anyhow::anyhow!("bench JSON is malformed: {e}"))?;
+    std::fs::write(JSON_PATH, &json_text)?;
+    println!("\nwrote {JSON_PATH}");
+    Ok(())
+}

@@ -149,6 +149,19 @@ pub fn luts_structural(cfg: &TnnConfig, tiles: &TileConfig, bit_w: f64) -> u64 {
     (pe_glue + dividers + softmax + ln + bias + LUT_AXI_CTRL + lutram).round() as u64
 }
 
+/// Device weight-memory envelope for `p`, in bytes: the capacity budget
+/// the residency manager ([`crate::coordinator::residency`]) treats as a
+/// cache of model weight stacks.
+///
+/// URAM (when the part has it — U55C's 960 blocks of 288 Kib) is the
+/// natural weight store; of the BRAM18k pool, half is budgeted for
+/// weights, the other half staying with activations, KV panels and the
+/// AXI/stream FIFOs the structural model above accounts for.
+pub fn weight_memory_bytes(p: &Platform) -> u64 {
+    const URAM_BITS: u64 = 288 * 1024;
+    p.uram_total * URAM_BITS / 8 + p.bram_bytes() / 2
+}
+
 /// Combined estimate for one synthesis.
 #[derive(Debug, Clone, Copy)]
 pub struct ResourceEstimate {
@@ -322,6 +335,19 @@ mod tests {
         let e = estimate(&cfg, &t, BitWidth::Fixed16, &platform::u55c());
         assert!((e.dsp_util - 0.40).abs() < 0.02, "{}", e.dsp_util);
         assert!((e.lut_util - 0.30).abs() < 0.03, "{}", e.lut_util);
+    }
+
+    #[test]
+    fn weight_memory_envelope_orders_platforms() {
+        // U55C's URAM dwarfs the pure-BRAM parts: ~38 MB vs ~2 MB.
+        let u = weight_memory_bytes(&platform::u55c());
+        let v = weight_memory_bytes(&platform::vc707());
+        let z = weight_memory_bytes(&platform::zcu102());
+        assert_eq!(u, 960 * 288 * 1024 / 8 + platform::u55c().bram_bytes() / 2);
+        assert!(u > 10 * v, "{u} vs {v}");
+        assert!(v > z, "{v} vs {z}");
+        // no-URAM parts budget exactly half their BRAM for weights
+        assert_eq!(v, platform::vc707().bram_bytes() / 2);
     }
 
     #[test]

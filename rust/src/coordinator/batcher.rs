@@ -155,6 +155,12 @@ impl<T> Batcher<T> {
         self.queues.keys().map(String::as_str)
     }
 
+    /// Requests queued for one model — the dispatcher's prefetch
+    /// trigger reads this as its queue-deepening signal.
+    pub fn model_len(&self, model: &str) -> usize {
+        self.queues.get(model).map_or(0, |q| q.len())
+    }
+
     /// Earliest wake-up instant among queued items (for the drain loop's
     /// sleep): the soonest batching deadline (oldest arrival + max_wait)
     /// or QoS give-up deadline, whichever comes first.

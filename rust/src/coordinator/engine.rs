@@ -501,6 +501,14 @@ impl TileEngine {
         self.fc
     }
 
+    /// Drop the host scratch pool's free lists, returning the bytes
+    /// released (see `TensorPool::trim`).  The serving layer calls this
+    /// after a weight-stack eviction so host scratch tracks the
+    /// resident working set instead of every topology ever served.
+    pub fn trim_scratch(&self) -> u64 {
+        self.pool.trim()
+    }
+
     /// Fabric divisibility constraints for the tile engine (the FPGA's
     /// equivalents are the tile sizes baked at synthesis).
     pub fn check_runtime_config(&self, cfg: &TnnConfig) -> Result<(), ServeError> {

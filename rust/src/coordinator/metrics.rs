@@ -60,6 +60,23 @@ pub struct Metrics {
     pub live_peak: u64,
     /// Register reprogramming events (model switches on the fabric).
     pub reprograms: u64,
+    /// Full weight-stack uploads (`prepare_model` runs) — under the
+    /// residency manager a model switch whose stack is still resident
+    /// reprograms registers *without* re-uploading, so
+    /// `reprograms - weight_uploads` is the traffic the cache saved.
+    pub weight_uploads: u64,
+    /// Acquires served from an already-resident weight stack.
+    pub residency_hits: u64,
+    /// Weight stacks evicted to make room for an incoming model.
+    pub residency_evictions: u64,
+    /// High-water mark of device-resident weight bytes on one fabric
+    /// (aggregate: max across fabrics — each fabric has its own weight
+    /// memory).  Exceeds the configured capacity only when in-flight
+    /// pinning forced an over-budget admission.
+    pub resident_bytes_peak: u64,
+    /// Stacks uploaded off the dispatch path because a hot model's queue
+    /// deepened (the residency prefetch trigger).
+    pub prefetches: u64,
     /// Requests that failed (programming errors, execution errors).
     pub failed: u64,
     /// Requests stopped short of completion without failing: an
@@ -226,6 +243,11 @@ impl Metrics {
         self.decode_rounds += other.decode_rounds;
         self.live_peak = self.live_peak.max(other.live_peak);
         self.reprograms += other.reprograms;
+        self.weight_uploads += other.weight_uploads;
+        self.residency_hits += other.residency_hits;
+        self.residency_evictions += other.residency_evictions;
+        self.resident_bytes_peak = self.resident_bytes_peak.max(other.resident_bytes_peak);
+        self.prefetches += other.prefetches;
         self.failed += other.failed;
         self.cancelled += other.cancelled;
         self.expired += other.expired;
@@ -329,6 +351,16 @@ impl Metrics {
             self.reprograms,
             self.reprograms_per_request(),
         ));
+        if self.weight_uploads > 0 || self.residency_hits > 0 {
+            out.push_str(&format!(
+                "weight residency: {} uploads, {} hits, {} evictions, {} prefetches, peak {} bytes\n",
+                self.weight_uploads,
+                self.residency_hits,
+                self.residency_evictions,
+                self.prefetches,
+                self.resident_bytes_peak,
+            ));
+        }
         out.push_str(&format!(
             "priority served: high={} normal={} low={}\n",
             self.served_at(Priority::High),
@@ -539,6 +571,40 @@ mod tests {
         clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
         assert!(!clean.report().contains("padding"));
         assert_eq!(clean.padding_waste(), 0.0);
+    }
+
+    #[test]
+    fn residency_counters_merge_and_render() {
+        let mut a = Metrics::for_fabric(0);
+        a.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        a.weight_uploads = 2;
+        a.residency_hits = 5;
+        a.residency_evictions = 1;
+        a.resident_bytes_peak = 4096;
+        let mut b = Metrics::for_fabric(1);
+        b.weight_uploads = 1;
+        b.residency_hits = 3;
+        b.resident_bytes_peak = 9000;
+        b.prefetches = 1;
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.weight_uploads, 3);
+        assert_eq!(agg.residency_hits, 8);
+        assert_eq!(agg.residency_evictions, 1);
+        assert_eq!(agg.prefetches, 1);
+        assert_eq!(
+            agg.resident_bytes_peak, 9000,
+            "peak is a max, fabrics have separate weight memories"
+        );
+        let rep = agg.report();
+        assert!(
+            rep.contains("weight residency: 3 uploads, 8 hits, 1 evictions"),
+            "{rep}"
+        );
+        assert!(rep.contains("1 prefetches, peak 9000 bytes"), "{rep}");
+        // runs that never touched the residency path render no line
+        let mut clean = Metrics::default();
+        clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        assert!(!clean.report().contains("weight residency"));
     }
 
     #[test]

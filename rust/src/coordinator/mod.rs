@@ -23,6 +23,11 @@
 //!   hardware) under an affinity or round-robin schedule, with
 //!   capacity-gated, QoS-ordered dispatch.  `pool_size = 1` is the
 //!   paper's single-fabric host software.
+//! * [`residency`] — device weight memory as a traffic-aware cache: a
+//!   per-fabric residency manager (capacity from `accel::resources`,
+//!   traffic-weighted-LRU eviction, in-flight pinning) plus the
+//!   footprint/upload-cost model the cost-aware placement policy and the
+//!   dispatcher's prefetch trigger price reprogramming with.
 //! * [`metrics`] — compute/queue/end-to-end latency and throughput
 //!   accounting (AXI-timer analog), per fabric and aggregated, with
 //!   per-priority / cancellation / deadline counters — readable live
@@ -32,6 +37,7 @@ pub mod api;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod residency;
 pub mod router;
 pub mod server;
 
@@ -43,6 +49,7 @@ pub use engine::{
     AttentionMode, DecoderStackView, GenSession, Generated, OptLevel, PreparedStack, ProgramKind,
     StepControl, TileEngine,
 };
+pub use residency::{ResidencyMode, ResidencyPolicy, ResidencyStats, WeightResidencyManager};
 pub use server::{
     FaultInjection, GenerateRequest, GenerateResponse, PoolScheduler, Request, Response,
     SchedulePolicy, Server, ServerConfig,

@@ -1,0 +1,480 @@
+//! Weight residency: device weight memory as a traffic-aware cache.
+//!
+//! ADAPTOR's runtime adaptivity means one synthesized fabric serves many
+//! topologies — but until this layer existed, the pool re-uploaded a
+//! fabric's **entire weight stack on every model switch**, the way the
+//! paper's host loop does (Algorithm 18 steps 7–9).  NPE keeps one fixed
+//! overlay serving many NLP models by managing on-device memory as a
+//! resource, and FTRANS shows weight memory is the binding constraint
+//! when several transformer stacks contend for one FPGA's BRAM/URAM
+//! (PAPERS.md).  This module is that discipline for the pool:
+//!
+//! * [`WeightResidencyManager`] — a per-fabric, capacity-bounded cache of
+//!   device-resident model stacks (encoder panels, decoder/cross stacks,
+//!   decode-row weights), keyed by model name and sized from the platform
+//!   envelope ([`resources::weight_memory_bytes`]).  A hit replays the
+//!   cached program against already-resident weights; a miss evicts by
+//!   **traffic-weighted LRU** until the incoming stack fits, then uploads.
+//! * **Pinning** — a model with live KV-cached generations on a fabric is
+//!   never evicted mid-flight; the worker recomputes the pin set from its
+//!   live-sequence list after every admission and decode round.
+//! * **Cost model** — [`weight_footprint_bytes`] prices a topology's
+//!   device stack from the same tiling arithmetic `prepare_model` uses,
+//!   and [`upload_penalty_requests`] converts it into the scheduler
+//!   currency (equivalent queued requests) so placement can weigh a
+//!   reprogram against a deeper queue (`SchedulePolicy::CostAware` in
+//!   [`super::server`]).
+//!
+//! ### Traffic-weighted LRU
+//!
+//! Recency alone thrashes under multi-tenant churn: a burst of one-off
+//! models evicts the steady tenant everyone is about to hit again.  Each
+//! entry therefore carries an arrival-rate EWMA over a **logical tick**
+//! clock (one tick per acquire on the fabric — deterministic, no wall
+//! time).  On an access at tick `t` of an entry last touched at `t₀`:
+//!
+//! ```text
+//! rate ← rate · decay^(t − t₀) + (1 − decay)
+//! ```
+//!
+//! and the eviction heat of an idle entry at tick `now` is its rate
+//! decayed to the present, `H = rate · decay^(now − t₀)`.  The victim is
+//! always the unpinned entry with minimal `H` — least recently *and*
+//! least frequently needed.  The dispatcher's own per-model arrival EWMA
+//! rides along as `rate_hint` so a fabric seeing a model for the first
+//! time still knows it is hot.
+//!
+//! Capacity is best-effort, never availability-limiting: if every
+//! resident entry is pinned, the incoming stack is admitted over budget
+//! (the substrate can — real hardware would stall the upload) and the
+//! overshoot is visible as `resident_bytes_peak` in metrics.
+
+use std::collections::BTreeSet;
+
+use crate::accel::schedule::{AttentionMode, FabricConstants};
+use crate::accel::sim::cycle;
+use crate::accel::{platform, resources};
+use crate::coordinator::api::ServeError;
+use crate::model::TnnConfig;
+
+/// How a fabric treats its weight memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidencyMode {
+    /// Capacity-bounded cache with traffic-weighted-LRU eviction and
+    /// in-flight pinning — the managed default.
+    Managed,
+    /// The paper's host-loop behavior: at most one stack resident, every
+    /// model switch evicts and re-uploads.  Kept as the measurable
+    /// baseline (`BENCH_residency.json`) and as a debugging escape hatch.
+    ReprogramAlways,
+}
+
+/// Policy knobs for one fabric's [`WeightResidencyManager`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidencyPolicy {
+    pub mode: ResidencyMode,
+    /// Device weight-memory budget in bytes.  Defaults to the U55C
+    /// envelope from [`resources::weight_memory_bytes`].
+    pub capacity_bytes: u64,
+    /// Per-tick EWMA decay of the arrival-rate estimate, in (0, 1);
+    /// higher keeps history longer.
+    pub decay: f64,
+    /// Queue depth at which the dispatcher prefetches a hot model's stack
+    /// to a second fabric (see `coordinator::server`).
+    pub prefetch_depth: usize,
+}
+
+impl Default for ResidencyPolicy {
+    fn default() -> Self {
+        ResidencyPolicy {
+            mode: ResidencyMode::Managed,
+            capacity_bytes: resources::weight_memory_bytes(&platform::u55c()),
+            decay: 0.85,
+            prefetch_depth: 3,
+        }
+    }
+}
+
+/// Counters one manager accumulates; mirrored into `Metrics` by the
+/// fabric worker after every acquire.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Acquires served from an already-resident stack.
+    pub hits: u64,
+    /// Full weight-stack uploads (`prepare_model` calls).
+    pub uploads: u64,
+    /// Stacks evicted to make room.
+    pub evictions: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` — exceeds `capacity_bytes`
+    /// only when pinning forced an over-budget admission.
+    pub resident_bytes_peak: u64,
+}
+
+struct Entry<S> {
+    model: String,
+    stack: S,
+    bytes: u64,
+    /// Live KV-cached generations reference this stack — not evictable.
+    pinned: bool,
+    /// Arrival-rate EWMA at `last_tick` (see module docs).
+    rate: f64,
+    last_tick: u64,
+}
+
+/// One fabric's weight memory, managed as a cache of prepared stacks.
+///
+/// Generic over the stack type so the serving path (`PreparedStack`) and
+/// the artifact-free tests/benches (plain host-side stand-ins) share the
+/// exact eviction/pinning logic being proven.
+pub struct WeightResidencyManager<S> {
+    policy: ResidencyPolicy,
+    entries: Vec<Entry<S>>,
+    tick: u64,
+    stats: ResidencyStats,
+}
+
+fn heat<S>(e: &Entry<S>, decay: f64, now: u64) -> f64 {
+    e.rate * decay.powi(now.saturating_sub(e.last_tick) as i32)
+}
+
+impl<S> WeightResidencyManager<S> {
+    pub fn new(policy: ResidencyPolicy) -> Self {
+        WeightResidencyManager {
+            policy,
+            entries: Vec::new(),
+            tick: 0,
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    pub fn policy(&self) -> &ResidencyPolicy {
+        &self.policy
+    }
+
+    /// The acquire path: return `model`'s resident stack, uploading via
+    /// `load` on a miss after evicting enough unpinned cold entries.
+    /// `bytes` is the stack's device footprint
+    /// ([`weight_footprint_bytes`]); `rate_hint` is the dispatcher's
+    /// arrival-rate estimate, folded into the entry's own EWMA.
+    ///
+    /// Eviction never touches pinned entries; if the victims run out the
+    /// stack is admitted over budget (recorded in `resident_bytes_peak`)
+    /// rather than failing the batch.
+    pub fn acquire_with<F>(
+        &mut self,
+        model: &str,
+        bytes: u64,
+        rate_hint: Option<f64>,
+        load: F,
+    ) -> Result<&S, ServeError>
+    where
+        F: FnOnce() -> Result<S, ServeError>,
+    {
+        self.tick += 1;
+        let now = self.tick;
+        let decay = self.policy.decay;
+        if let Some(i) = self.entries.iter().position(|e| e.model == model) {
+            let e = &mut self.entries[i];
+            e.rate = e.rate * decay.powi(now.saturating_sub(e.last_tick) as i32) + (1.0 - decay);
+            if let Some(h) = rate_hint {
+                e.rate = e.rate.max(h);
+            }
+            e.last_tick = now;
+            self.stats.hits += 1;
+            return Ok(&self.entries[i].stack);
+        }
+        match self.policy.mode {
+            ResidencyMode::ReprogramAlways => {
+                // The baseline fabric holds one stack: any switch evicts.
+                self.stats.evictions += self.entries.len() as u64;
+                self.entries.clear();
+            }
+            ResidencyMode::Managed => {
+                while self.resident_bytes() + bytes > self.policy.capacity_bytes {
+                    let victim = self
+                        .entries
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, e)| !e.pinned)
+                        .min_by(|(_, a), (_, b)| {
+                            heat(a, decay, now).total_cmp(&heat(b, decay, now))
+                        })
+                        .map(|(i, _)| i);
+                    match victim {
+                        Some(i) => {
+                            self.entries.remove(i);
+                            self.stats.evictions += 1;
+                        }
+                        // Everything left is pinned by live generations —
+                        // admit over budget rather than stall the batch.
+                        None => break,
+                    }
+                }
+            }
+        }
+        let stack = load()?;
+        self.entries.push(Entry {
+            model: model.to_string(),
+            stack,
+            bytes,
+            pinned: false,
+            rate: rate_hint.unwrap_or(1.0 - decay),
+            last_tick: now,
+        });
+        self.stats.uploads += 1;
+        let resident = self.resident_bytes();
+        self.stats.resident_bytes_peak = self.stats.resident_bytes_peak.max(resident);
+        let i = self.entries.len() - 1;
+        Ok(&self.entries[i].stack)
+    }
+
+    /// Non-ticking peek — the decode-round path, which must not distort
+    /// the traffic estimate (one generation is one arrival, not one
+    /// arrival per emitted token).
+    pub fn get(&self, model: &str) -> Option<&S> {
+        self.entries.iter().find(|e| e.model == model).map(|e| &e.stack)
+    }
+
+    pub fn is_resident(&self, model: &str) -> bool {
+        self.entries.iter().any(|e| e.model == model)
+    }
+
+    /// Recompute the pin set wholesale from the models with live
+    /// generations on this fabric.  Called after every admission and
+    /// decode round; a pin lapses the moment its last sequence retires.
+    pub fn set_pinned<'a, I>(&mut self, live: I)
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        let live: BTreeSet<&str> = live.into_iter().collect();
+        for e in &mut self.entries {
+            e.pinned = live.contains(e.model.as_str());
+        }
+    }
+
+    /// Resident model names, for the dispatcher's placement belief
+    /// (carried back on every fabric completion event).
+    pub fn resident_models(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.model.clone()).collect()
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Counter snapshot with `resident_bytes` refreshed.
+    pub fn stats(&self) -> ResidencyStats {
+        ResidencyStats { resident_bytes: self.resident_bytes(), ..self.stats }
+    }
+}
+
+/// Bytes per fabric cycle the weight AXI masters move during a stack
+/// upload: one 512-bit beat per cycle (§4's m_axi ports are 512-bit).
+pub const UPLOAD_BYTES_PER_CYCLE: u64 = 64;
+
+/// Fabric cycles to upload `bytes` of weights at the AXI beat rate.
+pub fn upload_cycles(bytes: u64) -> u64 {
+    bytes.div_ceil(UPLOAD_BYTES_PER_CYCLE)
+}
+
+/// Device weight-memory footprint of `cfg`'s prepared stack in bytes —
+/// the same panel inventory `TileEngine::prepare_model` parks
+/// device-resident, priced without touching a device:
+///
+/// * per **encoder layer**: per-head Q/K/V tile panels plus their packed
+///   Q|K|V variant, the FFN1/FFN2/FFN3 panel grids, and the bias/LN
+///   vectors (padded to fabric maxima);
+/// * per **decoder layer**: one encoder layer (the self-attention + FFN
+///   prefill half) plus the full-width decode-row matrices, and — for
+///   seq2seq topologies — the cross-attention prefill panels and
+///   decode-row projections.
+///
+/// All panels are f32 on the device (quantization happens inside the
+/// fabric datapath, §5.2).
+pub fn weight_footprint_bytes(cfg: &TnnConfig, fc: &FabricConstants) -> u64 {
+    const F32: u64 = 4;
+    let d = cfg.d_model as u64;
+    let h = cfg.heads as u64;
+    let hidden = cfg.hidden as u64;
+    let dk = fc.dk as u64;
+    let ts_mha = fc.ts_mha as u64;
+    let ts_ffn = fc.ts_ffn as u64;
+    let ffn_col = fc.ffn_col as u64;
+    let dmax = fc.dmodel_max as u64;
+    let hmax = fc.hidden_max as u64;
+    let t_m = d / ts_mha;
+    let t_f = d / ts_ffn;
+    let t_h = hidden / ffn_col;
+
+    // One encoder layer, in f32 elements.
+    let enc = h * t_m * ts_mha * 3 * dk // packed Q|K|V panels
+        + h * 3 * dk                    // packed biases
+        + 3 * h * t_m * ts_mha * dk     // unpacked W_q/W_k/W_v panels
+        + 3 * h * dk                    // b_q/b_k/b_v
+        + t_f * t_f * ts_ffn * ts_ffn   // FFN1 (output projection) grid
+        + t_f * t_h * ts_ffn * ffn_col  // FFN2 grid
+        + t_h * t_f * ffn_col * ts_ffn  // FFN3 grid
+        + 6 * dmax                      // b_o, b_2, LN gains/biases
+        + hmax; // b_1
+
+    // Decode-row extras of one decoder layer (on top of its `enc` half).
+    let dec_rows = 3 * h * dmax * dk // per-head full Q/K/V projections
+        + dmax * dmax                // output projection
+        + dmax * hmax                // FFN up
+        + hmax * dmax; // FFN down
+
+    // Cross-attention block (present iff the topology has an encoder).
+    let cross = if cfg.enc_layers > 0 {
+        3 * h * t_m * ts_mha * dk       // cross Q/K/V prefill panels
+            + 3 * h * dk                // cross biases
+            + t_f * t_f * ts_ffn * ts_ffn // cross output-projection grid
+            + 3 * dmax                  // cb_o, LN gain/bias
+            + h * dmax * dk             // decode-row cross query
+            + dmax * dmax // decode-row cross output projection
+    } else {
+        0
+    };
+
+    let elems =
+        cfg.enc_layers as u64 * enc + cfg.dec_layers as u64 * (enc + dec_rows + cross);
+    elems * F32
+}
+
+/// The reprogram penalty in scheduler currency: uploading `cfg`'s stack
+/// costs this many *queued requests* of the same model.  Upload cycles
+/// come from [`upload_cycles`] over the stack footprint; request cycles
+/// from the artifact-free cycle backend (whole-prompt prefill for
+/// decoder topologies, one encoder pass otherwise).  Falls back to 1.0 —
+/// "one request's worth" — if the topology can't be priced.
+pub fn upload_penalty_requests(cfg: &TnnConfig, fc: &FabricConstants) -> f64 {
+    let up = upload_cycles(weight_footprint_bytes(cfg, fc)) as f64;
+    let req = if cfg.dec_layers > 0 {
+        cycle::estimate_prefill(cfg, fc).map(|r| r.total_cycles)
+    } else {
+        cycle::estimate(cfg, fc, AttentionMode::Fused, false, false).map(|r| r.total_cycles)
+    };
+    match req {
+        Ok(c) if c > 0 => up / c as f64,
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    fn policy(capacity_bytes: u64) -> ResidencyPolicy {
+        ResidencyPolicy { capacity_bytes, ..ResidencyPolicy::default() }
+    }
+
+    fn acquire(m: &mut WeightResidencyManager<String>, model: &str, bytes: u64) {
+        m.acquire_with(model, bytes, None, || Ok(model.to_uppercase())).unwrap();
+    }
+
+    #[test]
+    fn hit_skips_the_loader() {
+        let mut m = WeightResidencyManager::new(policy(100));
+        acquire(&mut m, "a", 10);
+        let loaded =
+            m.acquire_with("a", 10, None, || -> Result<String, ServeError> {
+                panic!("resident stack must not reload")
+            });
+        assert_eq!(loaded.unwrap(), "A");
+        let s = m.stats();
+        assert_eq!((s.hits, s.uploads, s.evictions), (1, 1, 0));
+        assert_eq!(s.resident_bytes, 10);
+    }
+
+    #[test]
+    fn traffic_weighted_lru_evicts_the_cold_entry() {
+        // Capacity for two stacks; "hot" is touched repeatedly, "cold"
+        // was loaded more recently but only once. Plain LRU would evict
+        // "hot"'s older last-touch; the traffic weighting keeps it.
+        let mut m = WeightResidencyManager::new(policy(20));
+        acquire(&mut m, "hot", 10);
+        acquire(&mut m, "cold", 10);
+        for _ in 0..5 {
+            acquire(&mut m, "hot", 10);
+        }
+        acquire(&mut m, "cold", 10); // cold's last touch is most recent
+        acquire(&mut m, "new", 10);
+        assert!(m.is_resident("hot"));
+        assert!(!m.is_resident("cold"));
+        assert_eq!(m.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_entries_survive_and_admit_over_budget() {
+        let mut m = WeightResidencyManager::new(policy(10));
+        acquire(&mut m, "live", 10);
+        m.set_pinned(["live"]);
+        acquire(&mut m, "peer", 10); // nothing evictable: over-budget admit
+        assert!(m.is_resident("live"));
+        assert!(m.is_resident("peer"));
+        let s = m.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.resident_bytes, 20);
+        assert_eq!(s.resident_bytes_peak, 20);
+        // Unpinning makes "live" evictable again.
+        m.set_pinned(std::iter::empty::<&str>());
+        acquire(&mut m, "third", 10);
+        assert_eq!(m.stats().evictions, 2);
+    }
+
+    #[test]
+    fn reprogram_always_holds_one_stack() {
+        let mut m = WeightResidencyManager::new(ResidencyPolicy {
+            mode: ResidencyMode::ReprogramAlways,
+            ..ResidencyPolicy::default()
+        });
+        acquire(&mut m, "a", 10);
+        acquire(&mut m, "b", 10);
+        acquire(&mut m, "a", 10);
+        let s = m.stats();
+        assert_eq!((s.hits, s.uploads, s.evictions), (0, 3, 2));
+        assert_eq!(s.resident_bytes, 10);
+        assert!(m.is_resident("a") && !m.is_resident("b"));
+    }
+
+    #[test]
+    fn rate_hint_seeds_a_new_entrys_heat() {
+        let mut m = WeightResidencyManager::new(policy(20));
+        acquire(&mut m, "old", 10);
+        // A brand-new model arrives with a hot dispatcher rate; the cold
+        // steady entry loses the next eviction despite being resident
+        // longer.
+        m.acquire_with("burst", 10, Some(5.0), || Ok(String::new())).unwrap();
+        acquire(&mut m, "third", 10);
+        assert!(m.is_resident("burst"));
+        assert!(!m.is_resident("old"));
+    }
+
+    #[test]
+    fn footprint_scales_with_depth_and_decoder() {
+        let fc = FabricConstants::artifact_default();
+        let enc2 = presets::by_name("shallow").unwrap();
+        let enc4 = presets::by_name("custom-encoder-4l").unwrap();
+        let b2 = weight_footprint_bytes(&enc2, &fc);
+        let b4 = weight_footprint_bytes(&enc4, &fc);
+        assert_eq!(b4, 2 * b2, "same topology at 2x depth is 2x bytes");
+        // A decoder layer strictly outweighs an encoder layer (row
+        // matrices ride along), and seq2seq cross blocks add more still.
+        let gpt = presets::by_name("gpt-small").unwrap();
+        assert!(weight_footprint_bytes(&gpt, &fc) > 0);
+        let s2s = presets::by_name("seq2seq-small").unwrap();
+        let dec_only = TnnConfig { enc_layers: 0, ..s2s };
+        assert!(weight_footprint_bytes(&s2s, &fc) > weight_footprint_bytes(&dec_only, &fc));
+    }
+
+    #[test]
+    fn upload_penalty_is_finite_and_positive() {
+        let fc = FabricConstants::artifact_default();
+        for (name, cfg) in presets::all() {
+            let pen = upload_penalty_requests(&cfg, &fc);
+            assert!(pen.is_finite() && pen > 0.0, "{name}: {pen}");
+        }
+    }
+}

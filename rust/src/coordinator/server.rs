@@ -6,11 +6,24 @@
 //! drains batches from a per-fabric mpsc queue.  A single **dispatcher**
 //! thread owns the batcher (per-model, QoS-ordered ready queues) and
 //! assigns ready batches to fabrics under a [`SchedulePolicy`]: with
-//! `Affinity` a batch is routed to a fabric already programmed for its
-//! model (avoiding a register reprogram), falling back to the
-//! least-loaded fabric; with `RoundRobin` fabrics are cycled regardless
-//! of programming state (the baseline the affinity tests compare
-//! against).
+//! `CostAware` (the default) each candidate fabric is scored by queue
+//! depth **plus the predicted upload cost of the model's weight stack
+//! when it is not resident there**, so model↔fabric affinity emerges
+//! from weight residency; with `Affinity` a batch is routed to a fabric
+//! already programmed for its model (avoiding a register reprogram),
+//! falling back to the least-loaded fabric; with `RoundRobin` fabrics
+//! are cycled regardless of programming state (the baseline the
+//! affinity tests compare against).
+//!
+//! Each fabric worker owns a [`WeightResidencyManager`]
+//! ([`super::residency`]): weight stacks upload *lazily* on first
+//! dispatch and live in device weight memory as a capacity-bounded,
+//! traffic-weighted-LRU cache, pinned while the model has live
+//! generations in flight.  Workers report their resident set back on
+//! every completion event, correcting the dispatcher's placement
+//! belief, and a hot model whose queue deepens past
+//! [`ResidencyPolicy::prefetch_depth`] gets its stack prefetched to a
+//! second fabric off the dispatch path.
 //!
 //! Each fabric worker is split in two along the job-kind axis
 //! (**continuous batching**; see DESIGN.md):
@@ -74,7 +87,7 @@
 //! * `shutdown()` surfaces worker panics instead of returning empty
 //!   metrics as if the run were clean.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -87,6 +100,7 @@ use super::api::{
 use super::batcher::{BatchPolicy, Batcher, Pending};
 use super::engine::{AttentionMode, GenSession, OptLevel, PreparedStack, TileEngine};
 use super::metrics::Metrics;
+use super::residency::{self, ResidencyMode, ResidencyPolicy, WeightResidencyManager};
 use super::router::{ModelSpec, Router};
 use crate::accel::schedule;
 use crate::model::weights::Mat;
@@ -149,6 +163,14 @@ pub enum SchedulePolicy {
     /// Cycle through fabrics regardless of programming state (baseline
     /// scheduler; maximizes reprograms under mixed-model load).
     RoundRobin,
+    /// Score each candidate fabric by queue depth **plus a predicted
+    /// reprogram penalty** — the upload cost of the model's weight
+    /// stack when it is not device-resident there, priced in queued
+    /// request equivalents by [`residency::upload_penalty_requests`] —
+    /// so model↔fabric affinity emerges from weight residency instead
+    /// of static programming state.  Router hints still pin absolutely.
+    /// The serving default.
+    CostAware,
 }
 
 /// Fault injection for failure-path regression tests.  Inert by default;
@@ -192,6 +214,11 @@ pub struct ServerConfig {
     /// `1` serializes generations (the paper's one-at-a-time host
     /// loop); `0` is refused at [`Server::start`].
     pub max_seqs: usize,
+    /// How each fabric worker manages its device weight memory (the
+    /// [`WeightResidencyManager`] it runs): capacity envelope, EWMA
+    /// decay, prefetch trigger depth, and the managed-vs-reprogram-
+    /// always mode switch.
+    pub residency: ResidencyPolicy,
     pub fault: FaultInjection,
 }
 
@@ -204,9 +231,10 @@ impl ServerConfig {
             attention: AttentionMode::Fused,
             opt_level: OptLevel::O2,
             pool_size: 1,
-            schedule: SchedulePolicy::Affinity,
+            schedule: SchedulePolicy::CostAware,
             queue_depth: 2,
             max_seqs: 4,
+            residency: ResidencyPolicy::default(),
             fault: FaultInjection::default(),
         }
     }
@@ -254,7 +282,18 @@ enum Msg {
 /// Dispatcher → fabric messages (ordered per fabric: a `Shutdown` sent
 /// after a `Batch` is processed after it).
 enum FabricMsg {
-    Batch { model: String, items: Vec<WorkItem> },
+    Batch {
+        model: String,
+        items: Vec<WorkItem>,
+        /// The dispatcher's arrival-rate EWMA for the model, seeding the
+        /// worker's traffic-weighted LRU heat (see `residency`).
+        rate: f64,
+    },
+    /// Stage `model`'s weight stack between batches (no work attached):
+    /// a later dispatch then hits residency instead of paying the
+    /// upload inline.  Best-effort — a failure costs nothing that the
+    /// next dispatch would not have paid anyway.
+    Prefetch { model: String, rate: f64 },
     Shutdown { reply: Sender<()> },
 }
 
@@ -267,6 +306,12 @@ struct FabricEvent {
     fabric: usize,
     served: usize,
     died: bool,
+    /// The event acks a dispatched batch, freeing one capacity slot.
+    /// Prefetch acks and death notices leave capacity accounting alone.
+    batch: bool,
+    /// Authoritative resident-model snapshot from the worker's residency
+    /// manager; corrects the dispatcher's optimistic placement belief.
+    resident: Option<Vec<String>>,
 }
 
 /// Panic-unwind guard a fabric worker arms after warmup: dropping it
@@ -282,7 +327,13 @@ struct DeathNotice {
 impl Drop for DeathNotice {
     fn drop(&mut self) {
         if self.armed {
-            let _ = self.events.send(FabricEvent { fabric: self.fabric, served: 0, died: true });
+            let _ = self.events.send(FabricEvent {
+                fabric: self.fabric,
+                served: 0,
+                died: true,
+                batch: false,
+                resident: None,
+            });
         }
     }
 }
@@ -299,6 +350,11 @@ struct FabricState {
     batches: usize,
     /// The worker sent its death notice: never place work here again.
     dead: bool,
+    /// Models believed device-resident on the fabric: inserted
+    /// optimistically at [`PoolScheduler::pick_within_depth`], replaced
+    /// by the worker's authoritative snapshot on every completion
+    /// event.  [`SchedulePolicy::CostAware`] scores against this set.
+    resident: BTreeSet<String>,
 }
 
 /// Pure batch→fabric assignment logic (unit-testable without artifacts).
@@ -307,12 +363,70 @@ pub struct PoolScheduler {
     policy: SchedulePolicy,
     states: Vec<FabricState>,
     rr_next: usize,
+    /// Per-model reprogram penalty in queued-request equivalents
+    /// ([`residency::upload_penalty_requests`]); consulted by
+    /// [`SchedulePolicy::CostAware`] when a model is not believed
+    /// resident on a candidate fabric.
+    penalties: BTreeMap<String, f64>,
 }
 
 impl PoolScheduler {
     pub fn new(policy: SchedulePolicy, fabrics: usize) -> Self {
         assert!(fabrics > 0, "a pool needs at least one fabric");
-        PoolScheduler { policy, states: vec![FabricState::default(); fabrics], rr_next: 0 }
+        PoolScheduler {
+            policy,
+            states: vec![FabricState::default(); fabrics],
+            rr_next: 0,
+            penalties: BTreeMap::new(),
+        }
+    }
+
+    /// Register `model`'s predicted upload cost (in queued-request
+    /// equivalents) for cost-aware scoring.  Unpriced models default to
+    /// 1.0 — one request's worth.
+    pub fn set_upload_penalty(&mut self, model: &str, penalty: f64) {
+        self.penalties.insert(model.to_string(), penalty);
+    }
+
+    /// Replace the resident-set belief for `fabric` with the worker's
+    /// authoritative snapshot (carried on every completion event).
+    pub fn note_residency(&mut self, fabric: usize, resident: &[String]) {
+        if let Some(s) = self.states.get_mut(fabric) {
+            s.resident = resident.iter().cloned().collect();
+        }
+    }
+
+    /// Cost-aware placement score: queue depth plus the predicted
+    /// reprogram penalty when the stack would have to be uploaded.
+    fn place_cost(&self, s: &FabricState, model: &str) -> f64 {
+        let penalty = if s.resident.contains(model) {
+            0.0
+        } else {
+            self.penalties.get(model).copied().unwrap_or(1.0)
+        };
+        s.inflight as f64 + penalty
+    }
+
+    /// The fabric to stage a hot `model` on *in addition to* where it
+    /// already lives — `Some` only when the model is believed resident
+    /// on exactly one live fabric (zero means normal dispatch will
+    /// upload it anyway; two or more means it is already spread).
+    /// Commits the belief so the trigger does not re-fire every round.
+    pub fn prefetch_target(&mut self, model: &str) -> Option<usize> {
+        let copies =
+            self.states.iter().filter(|s| !s.dead && s.resident.contains(model)).count();
+        if copies != 1 {
+            return None;
+        }
+        let target = self
+            .states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.dead && !s.resident.contains(model))
+            .min_by_key(|(i, s)| (s.inflight, *i))
+            .map(|(i, _)| i)?;
+        self.states[target].resident.insert(model.to_string());
+        Some(target)
     }
 
     /// The fabric [`Self::pick`] would choose for `model` among those
@@ -352,6 +466,27 @@ impl PoolScheduler {
                     .enumerate()
                     .filter(|(i, _)| fits(*i))
                     .min_by_key(|(i, s)| (s.inflight, s.current_model.is_some(), *i))
+                    .map(|(i, _)| i)
+            }
+            SchedulePolicy::CostAware => {
+                if let Some(h) = hint.filter(|h| *h < n) {
+                    return fits(h).then_some(h);
+                }
+                // Queue depth + predicted upload cost; among equal
+                // scores prefer the fabric already holding the stack,
+                // then the lowest index (determinism).
+                self.states
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| fits(*i))
+                    .min_by(|(i, a), (j, b)| {
+                        self.place_cost(a, model)
+                            .total_cmp(&self.place_cost(b, model))
+                            .then_with(|| {
+                                b.resident.contains(model).cmp(&a.resident.contains(model))
+                            })
+                            .then_with(|| i.cmp(j))
+                    })
                     .map(|(i, _)| i)
             }
         }
@@ -404,6 +539,10 @@ impl PoolScheduler {
         }
         let s = &mut self.states[chosen];
         s.current_model = Some(model.to_string());
+        // Optimistic residency belief: the worker will make this stack
+        // resident before serving; the snapshot on its completion event
+        // corrects any divergence (e.g. under `ReprogramAlways`).
+        s.resident.insert(model.to_string());
         s.inflight += batch_len;
         s.batches += 1;
         Some(chosen)
@@ -445,8 +584,11 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the fabric pool; blocks until every fabric is warmed up (all
-    /// models prepared and artifacts compiled) or fails.
+    /// Start the fabric pool; blocks until every fabric is warmed up
+    /// (artifacts compiled and every model validated against the
+    /// fabric constraints) or fails.  Weight stacks are **not**
+    /// uploaded here: each worker's residency manager uploads them
+    /// lazily on first dispatch, within its capacity envelope.
     pub fn start(cfg: ServerConfig) -> Result<Self, ServeError> {
         if cfg.pool_size == 0 {
             return Err(ServeError::config("pool_size must be >= 1"));
@@ -518,13 +660,26 @@ impl Server {
             .filter_map(|s| s.preferred_fabric.map(|f| (s.name.clone(), f)))
             .collect();
         let queue_metrics = Arc::new(Mutex::new(Metrics::default()));
+        // Price every model's upload penalty once so cost-aware
+        // placement can weigh a predicted reprogram against queue depth
+        // without touching an engine.
+        let fc = match crate::runtime::Manifest::load(&cfg.artifact_dir) {
+            Ok(m) => schedule::FabricConstants::from_manifest(&m),
+            Err(_) => schedule::FabricConstants::artifact_default(),
+        };
+        let mut sched = PoolScheduler::new(cfg.schedule, cfg.pool_size);
+        for spec in &cfg.models {
+            let penalty = residency::upload_penalty_requests(&spec.cfg, &fc);
+            sched.set_upload_penalty(&spec.name, penalty);
+        }
         let ctx = DispatchCtx {
             policy: cfg.policy,
             queue_depth: cfg.queue_depth,
+            residency: cfg.residency,
             rx,
             events: erx,
             fabrics: fabric_txs,
-            sched: PoolScheduler::new(cfg.schedule, cfg.pool_size),
+            sched,
             hints,
             queue_metrics: queue_metrics.clone(),
         };
@@ -687,6 +842,7 @@ impl Server {
 struct DispatchCtx {
     policy: BatchPolicy,
     queue_depth: usize,
+    residency: ResidencyPolicy,
     rx: Receiver<Msg>,
     events: Receiver<FabricEvent>,
     fabrics: Vec<Sender<FabricMsg>>,
@@ -696,10 +852,44 @@ struct DispatchCtx {
 }
 
 fn dispatcher_thread(ctx: DispatchCtx) {
-    let DispatchCtx { policy, queue_depth, rx, events, fabrics, mut sched, hints, queue_metrics } =
-        ctx;
+    let DispatchCtx {
+        policy,
+        queue_depth,
+        residency,
+        rx,
+        events,
+        fabrics,
+        mut sched,
+        hints,
+        queue_metrics,
+    } = ctx;
+    // Fold one worker event into the scheduler: death retires the
+    // fabric; a batch ack frees its capacity slot; a residency snapshot
+    // (batch or prefetch ack) replaces the placement belief.
+    fn fold_event(sched: &mut PoolScheduler, ev: FabricEvent) {
+        if ev.died {
+            sched.mark_dead(ev.fabric);
+            return;
+        }
+        if ev.batch {
+            sched.complete(ev.fabric, ev.served);
+        }
+        if let Some(resident) = ev.resident {
+            sched.note_residency(ev.fabric, &resident);
+        }
+    }
+    // Decayed per-model arrival rate at logical tick `now` (one tick per
+    // submission) — the dispatcher-side half of the traffic-weighted
+    // LRU: it seeds worker-side entry heat and ranks prefetch urgency.
+    fn rate_now(rates: &BTreeMap<String, (f64, u64)>, decay: f64, now: u64, model: &str) -> f64 {
+        rates.get(model).map_or(0.0, |&(r, t)| r * decay.powi(now.saturating_sub(t) as i32))
+    }
     let mut batcher: Batcher<JobState> = Batcher::new(policy);
     let mut shutdown_reply: Option<Sender<Result<(), ServeError>>> = None;
+    // Per-model arrival-rate EWMAs over a logical tick clock (one tick
+    // per submission), same recurrence as the residency manager's.
+    let mut arrivals: u64 = 0;
+    let mut rates: BTreeMap<String, (f64, u64)> = BTreeMap::new();
     // Ready work was held back by the capacity gate last iteration: poll
     // completions briskly instead of sleeping a full batching deadline.
     let mut gated = false;
@@ -712,11 +902,7 @@ fn dispatcher_thread(ctx: DispatchCtx) {
             // spinning, then poll the client channel without sleeping.
             match events.recv_timeout(Duration::from_millis(5)) {
                 Ok(ev) => {
-                    if ev.died {
-                        sched.mark_dead(ev.fabric);
-                    } else {
-                        sched.complete(ev.fabric, ev.served);
-                    }
+                    fold_event(&mut sched, ev);
                     Duration::ZERO
                 }
                 Err(RecvTimeoutError::Timeout) => Duration::ZERO,
@@ -734,6 +920,11 @@ fn dispatcher_thread(ctx: DispatchCtx) {
             Ok(Msg::Work { job, arrived, deadline }) => {
                 let model = job.model().to_string();
                 let priority = job.qos.priority;
+                arrivals += 1;
+                let slot = rates.entry(model.clone()).or_insert((0.0, arrivals));
+                let gap = (arrivals - slot.1) as i32;
+                slot.0 = slot.0 * residency.decay.powi(gap) + (1.0 - residency.decay);
+                slot.1 = arrivals;
                 batcher.push_qos(&model, job, arrived, priority, deadline);
             }
             Ok(Msg::Shutdown { reply }) => {
@@ -745,11 +936,7 @@ fn dispatcher_thread(ctx: DispatchCtx) {
         // Fold in completion events so load tracking stays fresh; death
         // notices retire a fabric from placement entirely.
         while let Ok(ev) = events.try_recv() {
-            if ev.died {
-                sched.mark_dead(ev.fabric);
-            } else {
-                sched.complete(ev.fabric, ev.served);
-            }
+            fold_event(&mut sched, ev);
         }
         // QoS sweep: cancelled or deadline-expired while queued complete
         // *now* with a typed error — never served late, never dropped.
@@ -834,8 +1021,9 @@ fn dispatcher_thread(ctx: DispatchCtx) {
                 })
                 .collect();
             let n = items.len();
+            let rate = rate_now(&rates, residency.decay, arrivals, &model);
             if let Err(mpsc::SendError(lost)) =
-                fabrics[fabric].send(FabricMsg::Batch { model, items })
+                fabrics[fabric].send(FabricMsg::Batch { model, items, rate })
             {
                 // The worker thread is gone: fail the batch loudly instead
                 // of dropping the reply channels.
@@ -847,6 +1035,24 @@ fn dispatcher_thread(ctx: DispatchCtx) {
                     }
                 }
                 sched.complete(fabric, n);
+            }
+        }
+        // Prefetch trigger: a hot model whose queue is deepening
+        // (>= prefetch_depth waiting, typically because its resident
+        // fabric is at the capacity gate) gets its stack staged on a
+        // second fabric off the dispatch path, so the next burst can
+        // split across fabrics without paying the upload inline.
+        if residency.mode == ResidencyMode::Managed && fabrics.len() > 1 && !draining {
+            let hot: Vec<String> = batcher
+                .queued_models()
+                .filter(|m| batcher.model_len(m) >= residency.prefetch_depth)
+                .map(str::to_string)
+                .collect();
+            for model in hot {
+                if let Some(f) = sched.prefetch_target(&model) {
+                    let rate = rate_now(&rates, residency.decay, arrivals, &model);
+                    let _ = fabrics[f].send(FabricMsg::Prefetch { model, rate });
+                }
             }
         }
         if draining && batcher.is_empty() {
@@ -905,20 +1111,24 @@ fn fabric_thread(
     engine.mode = cfg.attention;
     engine.opt_level = cfg.opt_level;
 
-    // Prepare every registered model's weights once (Algorithm 18, 4–12).
-    let mut prepared: Vec<(String, PreparedStack)> = Vec::new();
+    // Validate every registered model against the fabric's synthesized
+    // constraints up front — a model that can never execute here fails
+    // at warmup, not mid-traffic.  Weight uploads themselves are
+    // *lazy*: the residency manager below performs them on first
+    // dispatch (Algorithm 18, 4–12) and keeps device weight memory
+    // within its capacity envelope thereafter.
     for spec in &cfg.models {
-        match engine.prepare_model(&spec.cfg, &spec.weights(), &spec.decoder_weights()) {
-            Ok(p) => prepared.push((spec.name.clone(), p)),
-            Err(e) => {
-                let _ = ready.send(Err(ServeError::engine(format!(
-                    "fabric {id}: preparing model '{}': {e}",
-                    spec.name
-                ))));
-                return;
-            }
+        if let Err(e) = engine.check_runtime_config(&spec.cfg) {
+            let _ = ready.send(Err(ServeError::engine(format!(
+                "fabric {id}: model '{}' cannot run on this fabric: {e}",
+                spec.name
+            ))));
+            return;
         }
     }
+    let fc = engine.fabric_constants();
+    let mut resmgr: WeightResidencyManager<PreparedStack> =
+        WeightResidencyManager::new(cfg.residency);
     // Warm the executable cache so first requests are not compile-bound.
     let mut names: Vec<&str> = vec![
         "mm_qkv", "mm_ffn1", "mm_ffn2", "mm_ffn3", "bias_add_dk", "bias_add_d", "bias_relu_h",
@@ -967,7 +1177,7 @@ fn fabric_thread(
             None
         };
         match msg {
-            Some(FabricMsg::Batch { model, items }) => {
+            Some(FabricMsg::Batch { model, items, rate }) => {
                 let served = items.len();
                 // Kind split: encode batches run whole on the batch
                 // executor; generations are admitted into the live set.
@@ -976,23 +1186,75 @@ fn fabric_thread(
                 let (gens, encs): (Vec<_>, Vec<_>) = items
                     .into_iter()
                     .partition(|it| matches!(it.job.submission, Submission::Generate { .. }));
-                if !encs.is_empty() {
-                    serve_batch(&mut engine, &cfg, &prepared, &metrics, &model, encs);
+                // Make the model's weight stack device-resident (a hit
+                // reuses it; a miss evicts cold peers and uploads).
+                match acquire_stack(&mut resmgr, &engine, &cfg, &fc, &metrics, &model, Some(rate))
+                {
+                    Ok(stack) => {
+                        if !encs.is_empty() {
+                            serve_batch(&mut engine, &cfg, stack, &metrics, &model, encs);
+                        }
+                        if !gens.is_empty() {
+                            admit_generations(
+                                &mut engine,
+                                &cfg,
+                                stack,
+                                &metrics,
+                                &model,
+                                gens,
+                                &mut live,
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        lock(&metrics).failed += served as u64;
+                        for it in gens.into_iter().chain(encs) {
+                            it.job.fail(ServeError::engine(format!(
+                                "fabric {id}: weights for model '{model}': {e}"
+                            )));
+                        }
+                    }
                 }
-                if !gens.is_empty() {
-                    admit_generations(&mut engine, &cfg, &prepared, &metrics, &model, gens, &mut live);
-                }
+                // Pinning tracks the live set: a model with in-flight
+                // KV-cached generations is never evicted mid-flight.
+                resmgr.set_pinned(live.iter().map(|s| s.model.as_str()));
                 // Ack at admission: a generation frees its capacity slot
                 // as soon as it joins the live set, so queue_depth meters
                 // per-round admissions — not whole jobs held to
-                // completion.
-                let _ = events.send(FabricEvent { fabric: id, served, died: false });
+                // completion.  The resident snapshot corrects the
+                // dispatcher's placement belief.
+                let _ = events.send(FabricEvent {
+                    fabric: id,
+                    served,
+                    died: false,
+                    batch: true,
+                    resident: Some(resmgr.resident_models()),
+                });
+            }
+            Some(FabricMsg::Prefetch { model, rate }) => {
+                // Stage the stack between batches; best-effort — on
+                // failure the next dispatch pays the upload inline,
+                // exactly as it would have without the prefetch.
+                let was_resident = resmgr.is_resident(&model);
+                let staged =
+                    acquire_stack(&mut resmgr, &engine, &cfg, &fc, &metrics, &model, Some(rate));
+                if staged.is_ok() && !was_resident {
+                    lock(&metrics).prefetches += 1;
+                }
+                let _ = events.send(FabricEvent {
+                    fabric: id,
+                    served: 0,
+                    died: false,
+                    batch: false,
+                    resident: Some(resmgr.resident_models()),
+                });
             }
             Some(FabricMsg::Shutdown { reply }) => {
                 // Drain the live set before acking — dispatched work is
                 // always served (or typed-failed) before shutdown.
                 while !live.is_empty() {
-                    decode_round(&mut engine, &cfg, &prepared, &metrics, &mut live);
+                    decode_round(&mut engine, &cfg, &mut resmgr, &fc, &metrics, &mut live);
+                    resmgr.set_pinned(live.iter().map(|s| s.model.as_str()));
                 }
                 lock(&metrics).elapsed = started.elapsed().as_secs_f64();
                 notice.armed = false;
@@ -1002,15 +1264,55 @@ fn fabric_thread(
             None => {}
         }
         if !live.is_empty() {
-            decode_round(&mut engine, &cfg, &prepared, &metrics, &mut live);
+            decode_round(&mut engine, &cfg, &mut resmgr, &fc, &metrics, &mut live);
+            resmgr.set_pinned(live.iter().map(|s| s.model.as_str()));
         }
     }
     // Dispatcher hung up without a shutdown (server dropped): finish
     // the live sequences — their handles may still be held — then exit.
     while !live.is_empty() {
-        decode_round(&mut engine, &cfg, &prepared, &metrics, &mut live);
+        decode_round(&mut engine, &cfg, &mut resmgr, &fc, &metrics, &mut live);
+        resmgr.set_pinned(live.iter().map(|s| s.model.as_str()));
     }
     notice.armed = false;
+}
+
+/// Look up `model`'s spec and make its prepared stack device-resident
+/// through the fabric's residency manager — a hit reuses the resident
+/// stack, a miss evicts by traffic-weighted LRU and uploads via
+/// `prepare_model` — then mirror the manager's counters into the
+/// fabric metrics.
+fn acquire_stack<'m>(
+    resmgr: &'m mut WeightResidencyManager<PreparedStack>,
+    engine: &TileEngine,
+    cfg: &ServerConfig,
+    fc: &schedule::FabricConstants,
+    metrics: &Mutex<Metrics>,
+    model: &str,
+    rate: Option<f64>,
+) -> Result<&'m PreparedStack, ServeError> {
+    let Some(spec) = cfg.models.iter().find(|s| s.name == model) else {
+        return Err(ServeError::engine(format!("model '{model}' is not registered")));
+    };
+    let bytes = residency::weight_footprint_bytes(&spec.cfg, fc);
+    let evictions_before = resmgr.stats().evictions;
+    resmgr.acquire_with(model, bytes, rate, || {
+        engine.prepare_model(&spec.cfg, &spec.weights(), &spec.decoder_weights())
+    })?;
+    let s = resmgr.stats();
+    if s.evictions > evictions_before {
+        // Low-water moment: shed host scratch shapes that may belong
+        // only to the topology just evicted.
+        engine.trim_scratch();
+    }
+    {
+        let mut m = lock(metrics);
+        m.weight_uploads = s.uploads;
+        m.residency_hits = s.hits;
+        m.residency_evictions = s.evictions;
+        m.resident_bytes_peak = m.resident_bytes_peak.max(s.resident_bytes_peak);
+    }
+    Ok(resmgr.get(model).expect("the stack was just made resident"))
 }
 
 /// One in-flight generation in a fabric's sequence scheduler.  Owns the
@@ -1052,19 +1354,12 @@ fn seq_round_order(
 fn admit_generations(
     engine: &mut TileEngine,
     cfg: &ServerConfig,
-    prepared: &[(String, PreparedStack)],
+    stack: &PreparedStack,
     metrics: &Mutex<Metrics>,
     model: &str,
     items: Vec<WorkItem>,
     live: &mut Vec<LiveSeq>,
 ) {
-    let Some((_, stack)) = prepared.iter().find(|(n, _)| n == model) else {
-        lock(metrics).failed += items.len() as u64;
-        for it in items {
-            it.job.fail(ServeError::engine(format!("model '{model}' not prepared on this fabric")));
-        }
-        return;
-    };
     let mut attempted = 0usize;
     for item in items {
         let WorkItem { job, arrived, deadline } = item;
@@ -1164,7 +1459,8 @@ fn admit_generations(
 fn decode_round(
     engine: &mut TileEngine,
     cfg: &ServerConfig,
-    prepared: &[(String, PreparedStack)],
+    resmgr: &mut WeightResidencyManager<PreparedStack>,
+    fc: &schedule::FabricConstants,
     metrics: &Mutex<Metrics>,
     live: &mut Vec<LiveSeq>,
 ) {
@@ -1192,15 +1488,21 @@ fn decode_round(
             let _ = seq.events.send(JobEvent::Failed(ServeError::DeadlineExceeded { waited }));
             continue;
         }
-        let Some((_, stack)) = prepared.iter().find(|(n, _)| n == &live[i].model) else {
-            let seq = live.remove(i);
-            lock(metrics).failed += 1;
-            let _ = seq.events.send(JobEvent::Failed(ServeError::engine(format!(
-                "model '{}' not prepared on this fabric",
-                seq.model
-            ))));
-            continue;
-        };
+        // Pinning keeps a live model's stack resident under `Managed`;
+        // under `ReprogramAlways` a peer model's batch may have evicted
+        // it between rounds — re-upload before stepping.  (KV caches
+        // are separate device memory: they survive both register
+        // reprogramming and weight eviction.)
+        if !resmgr.is_resident(&live[i].model) {
+            let model = live[i].model.clone();
+            if let Err(e) = acquire_stack(resmgr, engine, cfg, fc, metrics, &model, None) {
+                let seq = live.remove(i);
+                lock(metrics).failed += 1;
+                let _ = seq.events.send(JobEvent::Failed(e));
+                continue;
+            }
+        }
+        let stack = resmgr.get(&live[i].model).expect("resident or just acquired");
         // KV caches are plain device memory — they survive register
         // reprogramming, so interleaving models costs a program(), not
         // a re-prefill.
@@ -1301,18 +1603,11 @@ fn retire_done(
 fn serve_batch(
     engine: &mut TileEngine,
     cfg: &ServerConfig,
-    prepared: &[(String, PreparedStack)],
+    stack: &PreparedStack,
     metrics: &Mutex<Metrics>,
     model: &str,
     items: Vec<WorkItem>,
 ) {
-    let Some((_, stack)) = prepared.iter().find(|(n, _)| n == model) else {
-        lock(metrics).failed += items.len() as u64;
-        for it in items {
-            it.job.fail(ServeError::engine(format!("model '{model}' not prepared on this fabric")));
-        }
-        return;
-    };
     // Reprogram only when the register file holds a different topology.
     if !engine.is_programmed_for(&stack.cfg) {
         let programmed = if cfg.fault.fail_program_for.as_deref() == Some(model) {
@@ -1753,6 +2048,62 @@ mod tests {
         seqs.sort_by(|a, b| seq_round_order((a.1, a.2, a.3), (b.1, b.2, b.3)));
         let order: Vec<&str> = seqs.iter().map(|s| s.0).collect();
         assert_eq!(order, ["h-a", "h-b", "n-a-early", "n-a-late", "n-b-late", "l-a"]);
+    }
+
+    #[test]
+    fn cost_aware_prefers_the_resident_fabric() {
+        let mut s = PoolScheduler::new(SchedulePolicy::CostAware, 2);
+        s.set_upload_penalty("a", 2.0);
+        s.note_residency(1, &["a".to_string()]);
+        // fabric 0 is idle but cold (cost 0 + 2.0); fabric 1 holds the
+        // stack (cost 0 + 0.0) — affinity emerges from residency.
+        assert_eq!(s.pick("a", None, 1), 1);
+        assert_eq!(s.pick("a", None, 1), 1, "stays put while its queue is shallow");
+    }
+
+    #[test]
+    fn cost_aware_spills_when_queue_cost_exceeds_the_upload_penalty() {
+        let mut s = PoolScheduler::new(SchedulePolicy::CostAware, 2);
+        s.set_upload_penalty("a", 1.5);
+        s.note_residency(0, &["a".to_string()]);
+        assert_eq!(s.pick("a", None, 1), 0);
+        assert_eq!(s.pick("a", None, 1), 0, "inflight 1 < penalty 1.5 keeps affinity");
+        // Two requests deep, the queue now outweighs a 1.5-request
+        // upload: the batch spills to the cold fabric, which will
+        // upload the stack and share the load from here on.
+        assert_eq!(s.pick("a", None, 1), 1);
+    }
+
+    #[test]
+    fn cost_aware_hint_still_pins() {
+        let mut s = PoolScheduler::new(SchedulePolicy::CostAware, 3);
+        s.set_upload_penalty("p", 10.0);
+        s.note_residency(1, &["p".to_string()]);
+        assert_eq!(s.pick("p", Some(2), 1), 2, "an operator pin beats residency scoring");
+    }
+
+    #[test]
+    fn prefetch_stages_a_hot_model_on_exactly_one_extra_fabric() {
+        let mut s = PoolScheduler::new(SchedulePolicy::CostAware, 3);
+        assert_eq!(s.prefetch_target("a"), None, "not resident anywhere: dispatch uploads it");
+        s.note_residency(0, &["a".to_string()]);
+        assert_eq!(s.prefetch_target("a"), Some(1), "least-loaded cold fabric");
+        assert_eq!(s.prefetch_target("a"), None, "already staged on a second fabric");
+    }
+
+    #[test]
+    fn residency_snapshots_replace_the_belief() {
+        let mut s = PoolScheduler::new(SchedulePolicy::CostAware, 2);
+        s.set_upload_penalty("a", 3.0);
+        // Equal cost everywhere: deterministic lowest index, and the
+        // pick optimistically marks fabric 0 resident.
+        assert_eq!(s.pick("a", None, 1), 0);
+        s.complete(0, 1);
+        // The worker's snapshot says the stack was evicted on 0 and
+        // lives on 1 — the belief is replaced, not merged.
+        s.note_residency(0, &[]);
+        s.note_residency(1, &["a".to_string()]);
+        assert_eq!(s.pick("a", None, 1), 1);
     }
 
     #[test]

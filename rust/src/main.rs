@@ -15,7 +15,7 @@ use adaptor::accel::{frequency, latency, power, resources, sim, tiling::TileConf
 use adaptor::accel::platform;
 use adaptor::analysis::report;
 use adaptor::coordinator::router::ModelSpec;
-use adaptor::coordinator::{OptLevel, Server, ServerConfig};
+use adaptor::coordinator::{OptLevel, ResidencyMode, Server, ServerConfig};
 use adaptor::model::{presets, quant::BitWidth, weights};
 use adaptor::serve::{Priority, QoS, Submission};
 
@@ -31,6 +31,7 @@ fn usage() -> ! {
          \n  simulate --model <preset> [--ts-mha N] [--ts-ffn N] [--platform u55c|zcu102|vc707]\
          \n  serve --model <preset> [--requests N] [--batch N] [--pool N] [--max-seqs N]\
          \n        [--opt-level 0|1|2] [--priority low|normal|high] [--deadline-ms N]\
+         \n        [--weight-mem-mb N] [--residency managed|always]\
          \n  generate --model <preset> [--steps N] [--prompt-len N] [--pool N] [--max-seqs N]\
          \n        [--stream] [--priority low|normal|high]\
          \n  sweep <tiles|heads>\
@@ -158,6 +159,26 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             std::process::exit(2);
         }
     };
+    // Weight-residency knobs: a tight --weight-mem-mb exercises eviction
+    // under churn; --residency always is the paper's reprogram-on-every-
+    // switch host loop, kept as the measurable baseline.
+    if let Some(mb) = flag_value(args, "--weight-mem-mb") {
+        match mb.parse::<u64>() {
+            Ok(mb) if mb > 0 => scfg.residency.capacity_bytes = mb * 1024 * 1024,
+            _ => {
+                eprintln!("--weight-mem-mb wants a positive megabyte count, got '{mb}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    match flag_value(args, "--residency").as_deref() {
+        None | Some("managed") => {}
+        Some("always") => scfg.residency.mode = ResidencyMode::ReprogramAlways,
+        Some(other) => {
+            eprintln!("unknown residency mode '{other}' (want managed or always)");
+            std::process::exit(2);
+        }
+    }
     let qos = parse_qos(args);
     println!("starting {pool} fabric(s) for {cfg} (opt level {:?}) ...", scfg.opt_level);
     let server = Server::start(scfg)?;
@@ -266,11 +287,42 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_presets() -> anyhow::Result<()> {
-    println!("{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12}", "name", "sl", "d", "h", "hidden", "enc", "dec", "params");
+    use adaptor::accel::schedule::FabricConstants;
+    use adaptor::coordinator::residency::weight_footprint_bytes;
+
+    // Residency-pressure view: each preset's device weight footprint
+    // (prepared-stack bytes) against every platform's weight-memory
+    // envelope.  Over 100% can never be fully resident on that part;
+    // a large fraction means multi-tenant churn will evict it.
+    let fc = FabricConstants::artifact_default();
+    let plats = [platform::u55c(), platform::zcu102(), platform::vc707()];
+    println!(
+        "{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12} {:>12} {:>8} {:>8} {:>8}",
+        "name", "sl", "d", "h", "hidden", "enc", "dec", "params", "wbytes", "%u55c", "%zcu102",
+        "%vc707"
+    );
     for (name, c) in presets::all() {
+        let wb = weight_footprint_bytes(&c, &fc);
+        let pct: Vec<String> = plats
+            .iter()
+            .map(|p| {
+                format!("{:.1}", 100.0 * wb as f64 / resources::weight_memory_bytes(p) as f64)
+            })
+            .collect();
         println!(
-            "{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12}",
-            name, c.seq_len, c.d_model, c.heads, c.hidden, c.enc_layers, c.dec_layers, c.total_params()
+            "{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12} {:>12} {:>8} {:>8} {:>8}",
+            name,
+            c.seq_len,
+            c.d_model,
+            c.heads,
+            c.hidden,
+            c.enc_layers,
+            c.dec_layers,
+            c.total_params(),
+            wb,
+            pct[0],
+            pct[1],
+            pct[2]
         );
     }
     Ok(())

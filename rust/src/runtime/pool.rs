@@ -80,6 +80,29 @@ impl TensorPool {
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.get(), self.misses.get())
     }
+
+    /// Bytes currently parked in the free lists.
+    pub fn retained_bytes(&self) -> u64 {
+        self.free
+            .borrow()
+            .values()
+            .flat_map(|l| l.iter())
+            .map(|b| (b.len() * std::mem::size_of::<f32>()) as u64)
+            .sum()
+    }
+
+    /// Drop every free buffer, returning the bytes released.  The
+    /// serving layer calls this (via `TileEngine::trim_scratch`) when a
+    /// weight stack is evicted: multi-tenant model churn otherwise
+    /// accumulates free lists for shapes only departed topologies
+    /// replayed, and an eviction is the natural low-water moment to
+    /// shed them.  Surviving models re-warm their shapes on the next
+    /// replay (one allocation per shape, then steady state again).
+    pub fn trim(&self) -> u64 {
+        let bytes = self.retained_bytes();
+        self.free.borrow_mut().clear();
+        bytes
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +140,19 @@ mod tests {
         let p = TensorPool::new();
         p.put(Tensor::zeros(vec![0]));
         let _ = p.take_zeroed(&[0]);
+        assert_eq!(p.stats(), (0, 1));
+    }
+
+    #[test]
+    fn trim_releases_retained_scratch() {
+        let p = TensorPool::new();
+        p.put(Tensor::zeros(vec![4, 8]));
+        p.put(Tensor::zeros(vec![16]));
+        assert_eq!(p.retained_bytes(), (32 + 16) * 4);
+        assert_eq!(p.trim(), (32 + 16) * 4);
+        assert_eq!(p.retained_bytes(), 0);
+        // the next take of a trimmed shape is a fresh allocation
+        let _ = p.take_zeroed(&[4, 8]);
         assert_eq!(p.stats(), (0, 1));
     }
 

@@ -1,0 +1,428 @@
+//! Weight-residency invariants, artifact-free.  The residency manager in
+//! `coordinator::residency` turns a fabric's weight memory into a
+//! capacity-bounded cache of prepared stacks; its correctness contract is
+//! that caching is *invisible* to the served numerics — an evicted and
+//! re-uploaded stack must reproduce the never-evicted transcript bit for
+//! bit, a model with live KV-cached generations must never lose its stack
+//! to peer churn, and the whole point of the layer — strictly fewer
+//! uploads than the paper's reprogram-on-every-switch host loop — must
+//! hold on a real churn workload.  These tests pin that contract at the
+//! replay level with the same pseudo-numeric backend as
+//! `integration_scheduler.rs`: the manager's `S` is a full host-side
+//! model stack (programs + deterministic weights + runtime buffers) and
+//! every acquire serves an actual program replay.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+
+use adaptor::accel::decode::{self, KvCache};
+use adaptor::accel::schedule::{
+    self, optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder, TileProgram,
+    WeightKind, WeightRef, WeightSource,
+};
+use adaptor::coordinator::residency::weight_footprint_bytes;
+use adaptor::coordinator::{ResidencyMode, ResidencyPolicy, WeightResidencyManager};
+use adaptor::model::TnnConfig;
+use adaptor::runtime::{FabricBackend, Tensor};
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+/// Decoder-only topology with room for a prompt plus several decode
+/// steps under `sl_max`.
+fn gpt() -> TnnConfig {
+    TnnConfig { seq_len: 32, heads: 4, d_model: 256, hidden: 1024, enc_layers: 0, dec_layers: 2 }
+}
+
+fn fnv(s: &str) -> u32 {
+    s.bytes().fold(2166136261u32, |h, b| (h ^ b as u32).wrapping_mul(16777619))
+}
+
+/// Pseudo-numeric backend (same construction as `integration_scheduler`):
+/// buffers are host tensors, dispatch output is a bounded deterministic
+/// mix of `(artifact, inputs)`.  A stack rebuilt from the wrong weights —
+/// or a stale panel surviving an eviction — changes some output
+/// bit-for-bit.
+struct HashBackend;
+
+impl FabricBackend for HashBackend {
+    type Buf = Tensor;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(t.clone())
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&Tensor],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        let n: usize = out_shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        let mut h = fnv(artifact);
+        for (k, t) in inputs.iter().enumerate() {
+            let len = t.data.len().max(1);
+            let w = ((h % 13) + k as u32 + 1) as f32 * 0.0625;
+            for (j, v) in data.iter_mut().enumerate() {
+                *v += t.data[(j + 7 * k) % len] * w;
+            }
+            h = h.wrapping_mul(16777619) ^ (k as u32 + 1);
+        }
+        for v in data.iter_mut() {
+            *v = (*v * 0.25).sin();
+        }
+        Ok(Tensor::new(out_shape.to_vec(), data))
+    }
+
+    fn fetch(&self, b: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(b.clone())
+    }
+}
+
+/// Fabric-fixed panel shape per weight kind (mirrors `integration_opt`).
+fn weight_shape(f: &FabricConstants, kind: WeightKind) -> Vec<usize> {
+    match kind {
+        WeightKind::Wq
+        | WeightKind::Wk
+        | WeightKind::Wv
+        | WeightKind::CWq
+        | WeightKind::CWk
+        | WeightKind::CWv => vec![f.ts_mha, f.dk],
+        WeightKind::QkvPacked => vec![f.ts_mha, 3 * f.dk],
+        WeightKind::Bq
+        | WeightKind::Bk
+        | WeightKind::Bv
+        | WeightKind::CBq
+        | WeightKind::CBk
+        | WeightKind::CBv => vec![f.dk],
+        WeightKind::BQkvPacked => vec![3 * f.dk],
+        WeightKind::Wo | WeightKind::CWo => vec![f.ts_ffn, f.ts_ffn],
+        WeightKind::Bo
+        | WeightKind::B2
+        | WeightKind::G1
+        | WeightKind::B1n
+        | WeightKind::G2
+        | WeightKind::B2n
+        | WeightKind::CBo
+        | WeightKind::CG
+        | WeightKind::CBn => vec![f.dmodel_max],
+        WeightKind::W1 => vec![f.ts_ffn, f.ffn_col],
+        WeightKind::B1 => vec![f.hidden_max],
+        WeightKind::W2 => vec![f.ffn_col, f.ts_ffn],
+        WeightKind::DWq | WeightKind::DWk | WeightKind::DWv | WeightKind::DCWq => {
+            vec![f.dmodel_max, f.dk]
+        }
+        WeightKind::DWo | WeightKind::DCWo => vec![f.dmodel_max, f.dmodel_max],
+        WeightKind::DW1 => vec![f.dmodel_max, f.hidden_max],
+        WeightKind::DW2 => vec![f.hidden_max, f.dmodel_max],
+    }
+}
+
+/// Deterministic weight stand-ins keyed by `WeightRef`, salted per model
+/// name — re-preparing the same model reproduces the same tensors
+/// bit-for-bit (the property the residency layer's lazy re-upload relies
+/// on), while distinct models get distinct weights so any stale-stack
+/// bug surfaces as a transcript mismatch.
+struct HashWeights {
+    map: HashMap<WeightRef, Tensor>,
+}
+
+impl HashWeights {
+    fn for_program(prog: &TileProgram, f: &FabricConstants, salt: &str) -> Self {
+        let mut map = HashMap::new();
+        for step in &prog.steps {
+            let schedule::Step::Dispatch { args, .. } = step else { continue };
+            for arg in args {
+                let schedule::Operand::Weight(r) = arg else { continue };
+                map.entry(*r).or_insert_with(|| {
+                    let shape = weight_shape(f, r.kind);
+                    let seed =
+                        fnv(&format!("{salt}/{:?}/{}/{}/{}", r.kind, r.layer, r.row, r.col))
+                            % 1000;
+                    let n: usize = shape.iter().product();
+                    let data =
+                        (0..n).map(|i| ((seed as usize + i) as f32 * 0.137).sin()).collect();
+                    Tensor::new(shape, data)
+                });
+            }
+        }
+        HashWeights { map }
+    }
+}
+
+impl WeightSource<Tensor> for HashWeights {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Tensor> {
+        self.map.get(r).ok_or_else(|| anyhow::anyhow!("unseeded weight ref {r:?}"))
+    }
+}
+
+/// Everything `prepare_model` parks device-side for one model, as the
+/// manager's cached `S`: the optimized programs, the (salted,
+/// deterministic) weights and the per-topology runtime buffers.  Building
+/// one IS the upload being counted.
+struct ModelStack {
+    pre: TileProgram,
+    step: Option<TileProgram>,
+    pw: HashWeights,
+    sw: Option<HashWeights>,
+    runtime: schedule::RuntimeBufs<Tensor>,
+}
+
+fn load_stack(name: &str, cfg: TnnConfig, f: FabricConstants) -> ModelStack {
+    let inv = ArtifactInventory::assume_all();
+    let backend = HashBackend;
+    let runtime = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    if cfg.dec_layers > 0 {
+        let mut pre = ScheduleBuilder::new(f, cfg).unwrap().build_prefill();
+        optimize(&mut pre, OptLevel::O1, &inv).unwrap();
+        let mut step = ScheduleBuilder::new(f, cfg).unwrap().build_step();
+        optimize(&mut step, OptLevel::O1, &inv).unwrap();
+        let pw = HashWeights::for_program(&pre, &f, name);
+        let sw = HashWeights::for_program(&step, &f, name);
+        ModelStack { pre, step: Some(step), pw, sw: Some(sw), runtime }
+    } else {
+        let mut prog = ScheduleBuilder::new(f, cfg).unwrap().build();
+        optimize(&mut prog, OptLevel::O1, &inv).unwrap();
+        let pw = HashWeights::for_program(&prog, &f, name);
+        ModelStack { pre: prog, step: None, pw, sw: None, runtime }
+    }
+}
+
+/// A (model, footprint, upload-counter) triple driven through the
+/// manager exactly as `fabric_thread::acquire_stack` drives the real one.
+struct Tenant {
+    name: &'static str,
+    cfg: TnnConfig,
+    bytes: u64,
+    loads: Cell<u64>,
+}
+
+impl Tenant {
+    fn new(name: &'static str, cfg: TnnConfig) -> Self {
+        let bytes = weight_footprint_bytes(&cfg, &fc());
+        Tenant { name, cfg, bytes, loads: Cell::new(0) }
+    }
+
+    fn acquire<'m>(&self, m: &'m mut WeightResidencyManager<ModelStack>) -> &'m ModelStack {
+        m.acquire_with(self.name, self.bytes, None, || {
+            self.loads.set(self.loads.get() + 1);
+            Ok(load_stack(self.name, self.cfg, fc()))
+        })
+        .unwrap();
+        m.get(self.name).unwrap()
+    }
+}
+
+/// Per-sequence prompt: deterministic, distinct per `seed`.
+fn prompt_input(cfg: &TnnConfig, f: &FabricConstants, seed: usize) -> Tensor {
+    let mut t = Tensor::zeros(vec![f.sl_max, f.dmodel_max]);
+    for r in 0..cfg.seq_len {
+        for c in 0..cfg.d_model {
+            t.data[r * f.dmodel_max + c] = ((r * 31 + c + seed * 101) as f32 * 0.0917).sin();
+        }
+    }
+    t
+}
+
+/// One live generation: the feedback row, the sequence-private KV cache
+/// (device memory *outside* the weight stack — it must survive the
+/// stack's eviction), and the transcript of every step output.
+struct Seq {
+    row: Tensor,
+    cache: KvCache<Tensor>,
+    transcript: Vec<Vec<f32>>,
+}
+
+fn begin_seq(stack: &ModelStack, seed: usize) -> Seq {
+    let backend = HashBackend;
+    let pre = &stack.pre;
+    let f = pre.fabric;
+    let cfg = pre.cfg;
+    let mut inputs = vec![prompt_input(&cfg, &f, seed)];
+    for h in &pre.aux_hosts {
+        let shape = pre.host_shapes[*h].clone();
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|j| ((j * 7 + 3) as f32 * 0.0713).sin()).collect();
+        inputs.push(Tensor::new(shape, data));
+    }
+    let (out, exports) =
+        schedule::replay_full(pre, &backend, &stack.pw, &stack.runtime, inputs, &[], None)
+            .unwrap();
+    let prompt_len = cfg.seq_len / 2;
+    let cache = KvCache::from_prefill(&cfg, exports, prompt_len).unwrap();
+    let row_start = (prompt_len - 1) * f.dmodel_max;
+    let row = Tensor::new(
+        vec![1, f.dmodel_max],
+        out.data[row_start..row_start + f.dmodel_max].to_vec(),
+    );
+    Seq { row, cache, transcript: Vec::new() }
+}
+
+fn step_seq(stack: &ModelStack, seq: &mut Seq) {
+    let backend = HashBackend;
+    let step = stack.step.as_ref().expect("decoder stack");
+    let sw = stack.sw.as_ref().expect("decoder stack");
+    let f = step.fabric;
+    let pos = seq.cache.len;
+    let inputs = vec![
+        seq.row.clone(),
+        decode::step_mask_row(f.sl_max, pos),
+        decode::position_tensor(pos),
+    ];
+    let ext = seq.cache.externs();
+    let (out, exports) =
+        schedule::replay_full(step, &backend, sw, &stack.runtime, inputs, &ext, None).unwrap();
+    seq.cache.apply_step(exports).unwrap();
+    seq.transcript.push(out.data.clone());
+    seq.row = out;
+}
+
+/// One encode batch of an encoder-only tenant against its resident stack.
+fn encode_once(stack: &ModelStack, seed: usize) -> Tensor {
+    let backend = HashBackend;
+    let input = prompt_input(&stack.pre.cfg, &stack.pre.fabric, seed);
+    schedule::replay_with(&stack.pre, &backend, &stack.pw, &stack.runtime, input, None).unwrap()
+}
+
+fn policy(mode: ResidencyMode, capacity_bytes: u64) -> ResidencyPolicy {
+    ResidencyPolicy { mode, capacity_bytes, ..ResidencyPolicy::default() }
+}
+
+/// (a) Evict-then-reload is bit-identical to never-evicted serving.
+///
+/// Under `ReprogramAlways` — the paper's host loop — a live generation's
+/// stack is evicted on *every* peer batch and re-uploaded before its next
+/// decode step (the `decode_round` re-acquire path).  The sequence's KV
+/// cache lives outside the stack, so N rounds of evict/reload must
+/// reproduce the undisturbed transcript exactly.
+#[test]
+fn evict_then_reload_is_bit_identical_to_never_evicted_serving() {
+    const N: usize = 6;
+    let gen = Tenant::new("gen", gpt());
+    let enc = Tenant::new("enc", TnnConfig::encoder(32, 256, 4, 2));
+
+    // Baseline: the generation served alone, stack never evicted.
+    let baseline = {
+        let stack = load_stack(gen.name, gen.cfg, fc());
+        let mut s = begin_seq(&stack, 0);
+        for _ in 0..N {
+            step_seq(&stack, &mut s);
+        }
+        s.transcript
+    };
+    let enc_alone = {
+        let stack = load_stack(enc.name, enc.cfg, fc());
+        encode_once(&stack, 7)
+    };
+
+    // Churned: every round an encode batch of the peer model evicts the
+    // generation's stack, which is re-uploaded for the decode step.
+    let cap = gen.bytes + enc.bytes;
+    let mut m = WeightResidencyManager::new(policy(ResidencyMode::ReprogramAlways, cap));
+    let mut s = {
+        let stack = gen.acquire(&mut m);
+        begin_seq(stack, 0)
+    };
+    for round in 0..N {
+        let e = encode_once(enc.acquire(&mut m), 7);
+        assert!(e.data == enc_alone.data, "round {round}: churned encode batch diverged");
+        assert!(!m.is_resident(gen.name), "reprogram-always must have evicted the generator");
+        step_seq(gen.acquire(&mut m), &mut s);
+    }
+    assert!(s.transcript == baseline, "evict/reload changed the transcript");
+    // The reloads really happened: initial upload + one per round.
+    assert_eq!(gen.loads.get(), 1 + N as u64);
+    let st = m.stats();
+    assert_eq!(st.uploads, (1 + 2 * N) as u64);
+    assert_eq!(st.evictions, 2 * N as u64);
+    assert_eq!(st.hits, 0);
+}
+
+/// (b) A model with live generations is never evicted: its pin holds
+/// through arbitrary peer churn, its stack uploads exactly once, and the
+/// KV-cached transcript matches undisturbed serving.
+#[test]
+fn pinned_live_generation_survives_peer_churn() {
+    const N: usize = 5;
+    let gen = Tenant::new("gen", gpt());
+    let peer_a = Tenant::new("peer-a", TnnConfig::encoder(32, 256, 4, 2));
+    let peer_b = Tenant::new("peer-b", TnnConfig::encoder(32, 256, 4, 2));
+
+    let baseline = {
+        let stack = load_stack(gen.name, gen.cfg, fc());
+        let mut s = begin_seq(&stack, 3);
+        for _ in 0..N {
+            step_seq(&stack, &mut s);
+        }
+        s.transcript
+    };
+
+    // Capacity holds the generator plus ONE peer: the peers must churn
+    // against each other, never against the pinned generator.
+    let cap = gen.bytes + peer_a.bytes.max(peer_b.bytes);
+    let mut m = WeightResidencyManager::new(policy(ResidencyMode::Managed, cap));
+    let mut s = {
+        let stack = gen.acquire(&mut m);
+        begin_seq(stack, 3)
+    };
+    m.set_pinned([gen.name]);
+    for _ in 0..N {
+        encode_once(peer_a.acquire(&mut m), 1);
+        encode_once(peer_b.acquire(&mut m), 2);
+        assert!(m.is_resident(gen.name), "pinned generator lost its stack to peer churn");
+        step_seq(gen.acquire(&mut m), &mut s);
+        m.set_pinned([gen.name]);
+    }
+    assert!(s.transcript == baseline, "peer churn perturbed the pinned generation");
+    assert_eq!(gen.loads.get(), 1, "the pinned stack must upload exactly once");
+    let st = m.stats();
+    assert!(st.evictions >= (2 * N - 2) as u64, "the peers never churned: {st:?}");
+    assert!(st.resident_bytes_peak <= cap, "pinning should not have forced over-budget");
+
+    // The pin lapses with the last live sequence: a large incoming stack
+    // may now evict the generator like any other tenant.
+    m.set_pinned(std::iter::empty::<&str>());
+    let big = Tenant::new("big", TnnConfig::encoder(32, 256, 4, 6));
+    big.acquire(&mut m);
+    assert!(!m.is_resident(gen.name), "unpinned generator must be evictable again");
+}
+
+/// (c) Two-model churn on one capacity-constrained fabric: the managed
+/// cache does strictly fewer weight uploads than the reprogram-always
+/// baseline, with bit-identical outputs.
+#[test]
+fn managed_churn_uploads_strictly_fewer_than_reprogram_always() {
+    const ROUNDS: usize = 8;
+    let run = |mode: ResidencyMode| {
+        let a = Tenant::new("tenant-a", TnnConfig::encoder(32, 256, 4, 2));
+        let b = Tenant::new("tenant-b", TnnConfig::encoder(32, 256, 4, 4));
+        let mut m = WeightResidencyManager::new(policy(mode, a.bytes + b.bytes));
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        for round in 0..ROUNDS {
+            outputs.push(encode_once(a.acquire(&mut m), round).data);
+            outputs.push(encode_once(b.acquire(&mut m), round).data);
+        }
+        (m.stats(), a.loads.get() + b.loads.get(), outputs)
+    };
+
+    let (managed, managed_loads, managed_out) = run(ResidencyMode::Managed);
+    let (always, always_loads, always_out) = run(ResidencyMode::ReprogramAlways);
+
+    assert!(managed_out == always_out, "residency caching changed the served numerics");
+    assert!(
+        managed.uploads < always.uploads,
+        "managed ({}) must upload strictly less than reprogram-always ({})",
+        managed.uploads,
+        always.uploads
+    );
+    // Both stacks fit: the managed fabric uploads each exactly once and
+    // serves every later switch from residency; the baseline re-uploads
+    // on every one of the 2·ROUNDS dispatches.
+    assert_eq!((managed.uploads, managed_loads), (2, 2));
+    assert_eq!(managed.hits, (2 * ROUNDS - 2) as u64);
+    assert_eq!(managed.evictions, 0);
+    assert_eq!((always.uploads, always_loads), (2 * ROUNDS as u64, 2 * ROUNDS as u64));
+    assert_eq!(always.evictions, (2 * ROUNDS - 1) as u64);
+}
