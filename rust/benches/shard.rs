@@ -1,0 +1,197 @@
+//! Cross-fabric shard-chain bench: 2- and 4-shard pipelines vs the
+//! single-fabric oracle.
+//!
+//! An 8-layer encoder is lowered whole (the oracle) and as K∈{2,4}
+//! contiguous shard chains (`coordinator::shard::lower_chain`), every
+//! program priced by the cycle backend.  Stdout reports the pipeline
+//! economics:
+//!
+//! * **fill latency** — the sum of stage cycles one request pays end to
+//!   end, including each sender's link time (`LINK_BYTES_PER_CYCLE`);
+//! * **bottleneck interval** — the slowest stage, which bounds
+//!   steady-state throughput once K requests overlap in the pipeline;
+//! * **link traffic** — `K−1` full padded-activation hops per request.
+//!
+//! `BENCH_shard.json` is **deliberately closed-form**: every tracked
+//! field is a counter the partitioner and link protocol fix by
+//! construction (layer splits, shard footprints, upload beats, hop
+//! bytes at `LINK_BYTES_PER_CYCLE`) — bit-stable across machines and
+//! PRs, and auditable by hand.  Cycle-sim totals print to stdout only,
+//! like the residency bench's wall timings; the chain↔oracle numeric
+//! equivalence itself is proved bit-for-bit in `integration_shard.rs`.
+
+use adaptor::accel::schedule::{
+    optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder, TileProgram,
+};
+use adaptor::accel::sim::cycle;
+use adaptor::coordinator::residency::{upload_cycles, weight_footprint_bytes};
+use adaptor::coordinator::shard::{self, ShardPlan};
+use adaptor::model::TnnConfig;
+use adaptor::util::benchkit::{bench, header};
+use adaptor::util::json;
+
+const JSON_PATH: &str = "BENCH_shard.json";
+const LEVEL: OptLevel = OptLevel::O1;
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+/// The bench topology: deep enough that a 4-way split stays balanced
+/// (2 layers per shard), small enough to lower in milliseconds.
+fn topology() -> TnnConfig {
+    TnnConfig::encoder(64, 256, 4, 8)
+}
+
+fn monolith(f: FabricConstants, cfg: TnnConfig, inv: &ArtifactInventory) -> TileProgram {
+    let mut p = ScheduleBuilder::new(f, cfg).expect("bench topology fits the fabric").build();
+    optimize(&mut p, LEVEL, inv).expect("optimize cannot fail on a built program");
+    p
+}
+
+/// Closed-form chain counters — everything the committed JSON tracks.
+struct ChainCounters {
+    stage_layers: Vec<usize>,
+    shard_bytes: Vec<u64>,
+    max_shard_bytes: u64,
+    upload_cycles_per_shard: Vec<u64>,
+    activation_hops: u64,
+    link_bytes: u64,
+    link_cycles: u64,
+}
+
+fn chain_counters(plan: &ShardPlan, act_bytes: u64) -> ChainCounters {
+    let k = plan.shards.len() as u64;
+    ChainCounters {
+        stage_layers: plan.shards.iter().map(shard::ShardSpec::layer_count).collect(),
+        shard_bytes: plan.shards.iter().map(|s| s.bytes).collect(),
+        max_shard_bytes: plan.max_shard_bytes(),
+        upload_cycles_per_shard: plan.shards.iter().map(|s| upload_cycles(s.bytes)).collect(),
+        activation_hops: k - 1,
+        link_bytes: (k - 1) * act_bytes,
+        link_cycles: (k - 1) * act_bytes.div_ceil(cycle::LINK_BYTES_PER_CYCLE),
+    }
+}
+
+fn join<T: ToString>(v: &[T]) -> String {
+    v.iter().map(T::to_string).collect::<Vec<_>>().join(", ")
+}
+
+fn chain_json(c: &ChainCounters) -> String {
+    format!(
+        concat!(
+            "{{\"shards\": {}, \"stage_layers\": [{}], \"shard_bytes\": [{}], ",
+            "\"max_shard_bytes\": {}, \"upload_cycles_per_shard\": [{}], ",
+            "\"activation_hops\": {}, \"link_bytes\": {}, \"link_cycles\": {}}}"
+        ),
+        c.stage_layers.len(),
+        join(&c.stage_layers),
+        join(&c.shard_bytes),
+        c.max_shard_bytes,
+        join(&c.upload_cycles_per_shard),
+        c.activation_hops,
+        c.link_bytes,
+        c.link_cycles,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let f = fc();
+    let inv = ArtifactInventory::assume_all();
+    let cfg = topology();
+
+    let oracle = monolith(f, cfg, &inv);
+    let o = cycle::replay_program(&oracle)?;
+    println!("== shard-chain pipeline vs single-fabric oracle ({cfg}, {LEVEL:?}) ==");
+    println!(
+        "  oracle: {} cycles, {} dispatches, link untouched ({} hops)\n",
+        o.total_cycles, o.dispatches, o.activation_hops
+    );
+    assert_eq!(o.activation_hops, 0, "the monolith must never touch the link");
+    assert_eq!(o.link_bytes, 0);
+
+    let act_bytes = (f.sl_max * f.dmodel_max * 4) as u64;
+    let mut counters = Vec::new();
+    for k in [2usize, 4] {
+        let plan = ShardPlan::partition_k(&cfg, &f, k)?;
+        let chain = shard::lower_chain(&plan, &f, LEVEL, &inv)?;
+        let report = shard::verify_chain(&chain);
+        assert!(
+            report.is_clean(),
+            "{k}-shard chain failed its contract: {:?}",
+            report.errors().collect::<Vec<_>>()
+        );
+        let c = chain_counters(&plan, act_bytes);
+
+        // Cycle-sim acceptance (stdout-only figures): the priced link
+        // traffic matches the closed-form counters exactly, and every
+        // stage's compute undercuts the oracle.
+        let mut fill = 0u64;
+        let mut bottleneck = 0u64;
+        let (mut hops, mut bytes) = (0u64, 0u64);
+        for (i, prog) in chain.iter().enumerate() {
+            let r = cycle::replay_program(prog)?;
+            fill += r.total_cycles;
+            bottleneck = bottleneck.max(r.total_cycles);
+            hops += r.activation_hops;
+            bytes += r.link_bytes;
+            let compute = r.total_cycles - r.link_cycles;
+            assert!(
+                compute < o.total_cycles,
+                "stage {i} of {k} computes {compute} cycles, not under the oracle's {}",
+                o.total_cycles
+            );
+        }
+        assert_eq!(hops, c.activation_hops, "cycle sim disagrees with the hop count");
+        assert_eq!(bytes, c.link_bytes, "cycle sim disagrees with the link bytes");
+        println!(
+            "  k={k}: fill {:>8} cycles, bottleneck {:>8} ({:.2}x steady-state), \
+             {} hops / {} link bytes",
+            fill,
+            bottleneck,
+            o.total_cycles as f64 / bottleneck as f64,
+            hops,
+            bytes
+        );
+        counters.push(c);
+    }
+
+    // Chain-lowering wall timings — stdout only, never in the JSON.
+    println!("\n{}", header());
+    let plan4 = ShardPlan::partition_k(&cfg, &f, 4)?;
+    let r = bench("shard/lower_chain_k4", 5, 20, || {
+        shard::lower_chain(&plan4, &f, LEVEL, &inv).expect("lowering cannot fail");
+    });
+    println!("{}", r.line());
+
+    let json_text = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"shard_pipeline\",\n",
+            "  \"note\": \"closed-form counters only: layer splits, shard footprints, upload ",
+            "beats and link traffic fixed by the partitioner and link protocol. cycle-sim ",
+            "figures print to stdout; chain-vs-oracle equivalence is integration_shard.rs\",\n",
+            "  \"workload\": {{\"topology\": \"{}\", \"opt_level\": \"{:?}\", \"layers\": {}, ",
+            "\"activation_bytes_per_hop\": {}, \"link_bytes_per_cycle\": {}, ",
+            "\"upload_bytes_per_cycle\": {}}},\n",
+            "  \"oracle\": {{\"weight_bytes\": {}, \"upload_cycles\": {}, ",
+            "\"activation_hops\": 0, \"link_bytes\": 0}},\n",
+            "  \"chains\": [\n    {},\n    {}\n  ]\n",
+            "}}\n"
+        ),
+        cfg,
+        LEVEL,
+        cfg.enc_layers,
+        act_bytes,
+        cycle::LINK_BYTES_PER_CYCLE,
+        adaptor::coordinator::residency::UPLOAD_BYTES_PER_CYCLE,
+        weight_footprint_bytes(&cfg, &f),
+        upload_cycles(weight_footprint_bytes(&cfg, &f)),
+        chain_json(&counters[0]),
+        chain_json(&counters[1]),
+    );
+    json::parse(&json_text).map_err(|e| anyhow::anyhow!("bench JSON is malformed: {e}"))?;
+    std::fs::write(JSON_PATH, &json_text)?;
+    println!("\nwrote {JSON_PATH}");
+    Ok(())
+}

@@ -31,6 +31,8 @@ pub struct ScheduleBuilder {
     qkv_packed: bool,
     quantized: bool,
     skippable: bool,
+    send_boundary: Option<usize>,
+    recv_boundary: Option<usize>,
     steps: Vec<Step>,
     host_shapes: Vec<Vec<usize>>,
     n_slots: usize,
@@ -48,6 +50,8 @@ impl ScheduleBuilder {
             qkv_packed: false,
             quantized: false,
             skippable: false,
+            send_boundary: None,
+            recv_boundary: None,
             steps: Vec::new(),
             host_shapes: Vec::new(),
             n_slots: 0,
@@ -78,6 +82,26 @@ impl ScheduleBuilder {
     /// byte-identical to the legacy dense stream.
     pub fn skippable(mut self, on: bool) -> Self {
         self.skippable = on;
+        self
+    }
+
+    /// Lower as a pipeline-shard **sender** over cut `boundary`: the
+    /// stack's trailing fetch of the output activation becomes a
+    /// [`Step::SendActivation`], so the replay return value is exactly
+    /// the activation handed to the next shard's fabric.  Every shard of
+    /// a chain except the tail sets this.
+    pub fn send_activation(mut self, boundary: usize) -> Self {
+        self.send_boundary = Some(boundary);
+        self
+    }
+
+    /// Lower as a pipeline-shard **receiver** over cut `boundary`: a
+    /// [`Step::RecvActivation`] of the input host is prepended, marking
+    /// (and letting pricing backends charge) that the input activation
+    /// arrives over the inter-fabric link rather than from the caller.
+    /// Every shard of a chain except the head sets this.
+    pub fn recv_activation(mut self, boundary: usize) -> Self {
+        self.recv_boundary = Some(boundary);
         self
     }
 
@@ -358,15 +382,32 @@ impl ScheduleBuilder {
         self.finish(input, x_host, Vec::new(), Vec::new(), Vec::new())
     }
 
-    /// Package the emitted stream into a finalized [`TileProgram`].
+    /// Package the emitted stream into a finalized [`TileProgram`],
+    /// applying any shard roles: a recv role prepends the boundary marker
+    /// on the input host, a send role rewrites the stack's trailing fetch
+    /// of the output activation into the boundary transfer.
     fn finish(
-        self,
+        mut self,
         input: HostId,
         output: HostId,
         aux_hosts: Vec<HostId>,
         extern_shapes: Vec<Vec<usize>>,
         export_slots: Vec<SlotId>,
     ) -> TileProgram {
+        if let Some(boundary) = self.recv_boundary {
+            self.steps.insert(0, Step::RecvActivation { host: input, boundary });
+        }
+        if let Some(boundary) = self.send_boundary {
+            let hit = self.steps.iter_mut().rev().find_map(|s| match s {
+                Step::Fetch { src, host } if *host == output => {
+                    let (src, host) = (*src, *host);
+                    *s = Step::SendActivation { src, host, boundary };
+                    Some(())
+                }
+                _ => None,
+            });
+            assert!(hit.is_some(), "send-role program has no trailing fetch of the output host");
+        }
         let mut prog = TileProgram {
             cfg: self.cfg,
             fabric: self.fc,

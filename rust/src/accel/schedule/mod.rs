@@ -373,6 +373,24 @@ pub enum Step {
     /// Calibrate a per-tensor int8 scale from host `src` and upload it as
     /// scalar device slot `dst` (the only data-dependent step).
     CalibrateScale { src: HostId, dst: SlotId },
+    /// Shard-boundary egress: device slot `src` is fetched into host
+    /// `host` — exactly [`Step::Fetch`]'s data movement; the host is the
+    /// program's output host, so the replay return value *is* the
+    /// activation handed to the peer shard — and the backend's
+    /// [`crate::runtime::FabricBackend::link_send`] hook is charged for
+    /// moving it over the inter-fabric link.  `boundary` numbers the
+    /// shard cut: shard `i` of a K-shard chain sends boundary `i`
+    /// (for `i < K-1`).
+    SendActivation { src: SlotId, host: HostId, boundary: usize },
+    /// Shard-boundary ingress marker: the activation in host `host`
+    /// (always the program's input host) arrived over the link from the
+    /// peer shard's [`Step::SendActivation`].  The caller supplies it as
+    /// the replay's main input, so the step moves no data; it exists so
+    /// pricing backends charge
+    /// [`crate::runtime::FabricBackend::link_recv`] and the verifier can
+    /// match the chain's send/recv pairs.  Shard `i` receives boundary
+    /// `i - 1` (for `i > 0`).
+    RecvActivation { host: HostId, boundary: usize },
 }
 
 /// A lowered tile schedule: flat instruction stream + slot tables.
@@ -459,6 +477,14 @@ impl TileProgram {
                     touch(&mut touched, &mut host_init, *src, true);
                     touch(&mut touched, &mut host_init, *dst, true);
                 }
+                // A send overwrites its host wholesale (it is a Fetch with
+                // link pricing); a recv's host is the caller-written input.
+                Step::SendActivation { host, .. } => {
+                    touch(&mut touched, &mut host_init, *host, false)
+                }
+                Step::RecvActivation { host, .. } => {
+                    touch(&mut touched, &mut host_init, *host, false)
+                }
                 Step::Dispatch { .. } => {}
             }
         }
@@ -501,6 +527,13 @@ impl TileProgram {
                     host_last[*src] = i;
                     slot_last[*dst] = i;
                 }
+                Step::SendActivation { src, host, .. } => {
+                    slot_last[*src] = i;
+                    host_last[*host] = i;
+                }
+                Step::RecvActivation { host, .. } => {
+                    host_last[*host] = i;
+                }
             }
         }
         // Exported slots stay live past their last in-program use: replay
@@ -538,9 +571,38 @@ impl TileProgram {
             .count()
     }
 
-    /// Number of device→host transfers in one replay.
+    /// Number of device→host transfers in one replay (a shard-boundary
+    /// send is a fetch with link pricing, so it counts here too).
     pub fn fetch_count(&self) -> usize {
-        self.steps.iter().filter(|s| matches!(s, Step::Fetch { .. })).count()
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, Step::Fetch { .. } | Step::SendActivation { .. }))
+            .count()
+    }
+
+    /// The shard boundaries this program sends, in program order.  Empty
+    /// for an unsharded program; exactly one entry for a non-final shard.
+    pub fn send_boundaries(&self) -> Vec<usize> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::SendActivation { boundary, .. } => Some(*boundary),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The shard boundaries this program receives, in program order.
+    /// Empty for an unsharded program; exactly one entry for a non-head
+    /// shard.
+    pub fn recv_boundaries(&self) -> Vec<usize> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::RecvActivation { boundary, .. } => Some(*boundary),
+                _ => None,
+            })
+            .collect()
     }
 
     /// The artifact names dispatched, in program order.
@@ -1088,6 +1150,21 @@ pub fn replay_full_adaptive<B: FabricBackend>(
             Step::CalibrateScale { src, dst } => {
                 let sc = crate::model::quant::calibrate_scale(&hosts[*src].data);
                 slots[*dst] = Some(backend.upload(&Tensor::scalar1(sc))?);
+            }
+            Step::SendActivation { src, host, boundary } => {
+                // Data movement is Fetch's; the link hook lets pricing
+                // backends charge the inter-fabric transfer.
+                let buf = slots[*src]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("step {i}: send of freed slot {src}"))?;
+                let fetched = backend.fetch(buf)?;
+                backend.link_send(fetched.data.len() * 4, *boundary);
+                recycle(std::mem::replace(&mut hosts[*host], fetched));
+            }
+            Step::RecvActivation { host, boundary } => {
+                // The activation already sits in the (caller-written)
+                // input host; only the link receive is charged.
+                backend.link_recv(hosts[*host].data.len() * 4, *boundary);
             }
         }
         for s in &prog.drops[i] {

@@ -307,6 +307,15 @@ fn access(step: &Step) -> Access {
             a.host_reads.push(*src);
             a.slot_writes.push(*dst);
         }
+        // A send is a fetch with link pricing; a recv only observes the
+        // caller-written input host (the activation arrived off-program).
+        Step::SendActivation { src, host, .. } => {
+            a.slot_reads.push(*src);
+            a.host_writes.push(*host);
+        }
+        Step::RecvActivation { host, .. } => {
+            a.host_reads.push(*host);
+        }
     }
     a
 }
@@ -431,6 +440,8 @@ impl DedupTransfers {
             Step::ExtractPanel { src, .. } => host(src),
             Step::AssemblePanel { src, .. } => host(src),
             Step::CalibrateScale { src, .. } => host(src),
+            Step::SendActivation { src, .. } => slot(src),
+            Step::RecvActivation { .. } => {}
         }
     }
 }
@@ -502,7 +513,15 @@ impl Pass for DedupTransfers {
                 Step::AssemblePanel { dst, .. } => {
                     host_ver[*dst] += 1;
                 }
-                Step::Dispatch { .. } | Step::CalibrateScale { .. } => {}
+                // Same residency bookkeeping as Fetch: after a send the
+                // host mirrors the device slot.
+                Step::SendActivation { src, host, .. } => {
+                    host_ver[*host] += 1;
+                    resident.insert((*host, host_ver[*host]), *src);
+                }
+                Step::Dispatch { .. }
+                | Step::CalibrateScale { .. }
+                | Step::RecvActivation { .. } => {}
             }
             out.push(step);
         }
@@ -809,7 +828,9 @@ impl Pass for CompactSlots {
                         }
                     }
                 }
-                Step::Fetch { src, .. } => rewrite_read(src, &map),
+                Step::Fetch { src, .. } | Step::SendActivation { src, .. } => {
+                    rewrite_read(src, &map)
+                }
                 _ => {}
             }
             let mut retired = a.slot_reads.clone();

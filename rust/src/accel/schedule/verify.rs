@@ -98,6 +98,13 @@ pub enum Rule {
     /// skipped dispatch must never define a slot consumed by an unskipped
     /// one.  Also covers malformed predicates (empty or out-of-range).
     SkipContract,
+    /// A shard-transfer rule is violated: a program carries at most one
+    /// `SendActivation` (writing its output host) and one
+    /// `RecvActivation` (observing its input host), and across a chain
+    /// every shard boundary must be covered exactly once by a send whose
+    /// activation shape matches its peer recv (see
+    /// [`verify_shard_chain`]).
+    ShardContract,
 }
 
 impl fmt::Display for Rule {
@@ -114,6 +121,7 @@ impl fmt::Display for Rule {
             Rule::ExternContract => "extern-contract",
             Rule::ExportContract => "export-contract",
             Rule::SkipContract => "skip-contract",
+            Rule::ShardContract => "shard-contract",
         })
     }
 }
@@ -737,6 +745,34 @@ impl<'a> Analyzer<'a> {
                     self.read_host(*src, i, "calibrate-scale");
                     self.def_slot(*dst, i, Some(vec![1]), true, None);
                 }
+                Step::SendActivation { src, host, .. } => {
+                    // Fetch semantics plus link pricing: the activation is
+                    // downloaded into `host`, which the chain driver hands
+                    // to the peer shard's replay.
+                    let shape = self.read_slot(*src, i, "send-activation", None);
+                    if !self.write_host(*host, i, false) {
+                        continue;
+                    }
+                    if let Some(shape) = shape {
+                        if shape != self.prog.host_shapes[*host] {
+                            self.error(
+                                i,
+                                Rule::ShapeMismatch,
+                                format!(
+                                    "send-activation writes slot {src} (shape {shape:?}) into host {host} declared as {:?}",
+                                    self.prog.host_shapes[*host]
+                                ),
+                            );
+                        }
+                        self.host_cur[*host] = shape;
+                    }
+                }
+                Step::RecvActivation { host, .. } => {
+                    // The peer's activation was written into the input host
+                    // by the chain driver before replay; the step itself
+                    // only observes it (and prices the link).
+                    self.read_host(*host, i, "recv-activation");
+                }
             }
         }
         // Leaks: defs still unread at the end of the stream.
@@ -940,6 +976,74 @@ impl<'a> Analyzer<'a> {
             }
         }
     }
+
+    /// Per-program shard-transfer rules: at most one `SendActivation` and
+    /// one `RecvActivation`, the send writing the output host (the replay
+    /// return value IS the activation handed over the link) and the recv
+    /// observing the input host (where the chain driver lands the peer's
+    /// activation).  Cross-program boundary pairing is
+    /// [`verify_shard_chain`]'s job.
+    fn check_shard(&mut self) {
+        let prog = self.prog;
+        let sends: Vec<(usize, HostId)> = prog
+            .steps
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                Step::SendActivation { host, .. } => Some((i, *host)),
+                _ => None,
+            })
+            .collect();
+        let recvs: Vec<(usize, HostId)> = prog
+            .steps
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                Step::RecvActivation { host, .. } => Some((i, *host)),
+                _ => None,
+            })
+            .collect();
+        if sends.len() > 1 {
+            self.push(
+                None,
+                Severity::Error,
+                Rule::ShardContract,
+                format!("{} send-activation steps — one shard covers at most one boundary", sends.len()),
+            );
+        }
+        if recvs.len() > 1 {
+            self.push(
+                None,
+                Severity::Error,
+                Rule::ShardContract,
+                format!("{} recv-activation steps — one shard covers at most one boundary", recvs.len()),
+            );
+        }
+        for (i, host) in sends {
+            if host != prog.output_host {
+                self.error(
+                    i,
+                    Rule::ShardContract,
+                    format!(
+                        "send-activation writes host {host}, want the output host {} — the replay return value is the sent activation",
+                        prog.output_host
+                    ),
+                );
+            }
+        }
+        for (i, host) in recvs {
+            if host != prog.input_host {
+                self.error(
+                    i,
+                    Rule::ShardContract,
+                    format!(
+                        "recv-activation observes host {host}, want the input host {} — the peer's activation lands there",
+                        prog.input_host
+                    ),
+                );
+            }
+        }
+    }
 }
 
 // ---- the wave analysis ---------------------------------------------------
@@ -1008,6 +1112,7 @@ pub fn verify_structure(prog: &TileProgram, inventory: &ArtifactInventory) -> Ve
     let mut a = Analyzer::new(prog, inventory);
     a.walk();
     a.check_exports();
+    a.check_shard();
     let mut diags = a.diags;
     diags.extend(wave_diagnostics(prog));
     VerifyReport { diagnostics: diags }
@@ -1020,6 +1125,7 @@ pub fn verify(prog: &TileProgram, kind: ProgramKind, inventory: &ArtifactInvento
     let mut a = Analyzer::new(prog, inventory);
     a.walk();
     a.check_exports();
+    a.check_shard();
     a.check_kind(kind);
     let mut diags = a.diags;
     diags.extend(wave_diagnostics(prog));
@@ -1039,6 +1145,74 @@ pub fn verify_program(
     } else {
         Err(VerifyError::new(report.diagnostics))
     }
+}
+
+/// Cross-program verification of a K-shard pipeline chain, ordered head
+/// to tail.  Boundary `b` is the cut between shard `b` and shard `b+1`;
+/// the contract is:
+///
+/// * the head shard receives nothing (it takes the caller's input) and
+///   the tail shard sends nothing (it returns to the caller);
+/// * every interior shard `i` sends exactly boundary `i` and receives
+///   exactly boundary `i-1` — each cut is covered exactly once;
+/// * across each boundary the sender's activation shape (its output-host
+///   shape) equals the receiver's input-host shape.  The IR is f32 end
+///   to end, so shape agreement is dtype agreement.
+///
+/// Per-program rules (dataflow, at-most-one transfer each way, host
+/// targeting) still come from [`verify`] / [`verify_structure`]; this
+/// checks only the inter-program contract.  A single-program chain is
+/// the monolithic case and must carry no transfers at all.
+pub fn verify_shard_chain(chain: &[&TileProgram]) -> VerifyReport {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut fail = |message: String| {
+        diags.push(Diagnostic {
+            step: None,
+            severity: Severity::Error,
+            rule: Rule::ShardContract,
+            message,
+        });
+    };
+    let k = chain.len();
+    for (i, prog) in chain.iter().enumerate() {
+        let sends = prog.send_boundaries();
+        let recvs = prog.recv_boundaries();
+        if i == 0 {
+            if !recvs.is_empty() {
+                fail(format!(
+                    "head shard receives boundaries {recvs:?} — the chain head takes the caller's input"
+                ));
+            }
+        } else if recvs != [i - 1] {
+            fail(format!(
+                "shard {i} receives boundaries {recvs:?}, want exactly [{}]",
+                i - 1
+            ));
+        }
+        if i + 1 == k {
+            if !sends.is_empty() {
+                fail(format!(
+                    "tail shard sends boundaries {sends:?} — the chain tail returns to the caller"
+                ));
+            }
+        } else if sends != [i] {
+            fail(format!("shard {i} sends boundaries {sends:?}, want exactly [{i}]"));
+        }
+    }
+    // Shape agreement across each cut: the sender's output host carries
+    // the activation, the receiver's input host is where it lands.
+    for b in 0..k.saturating_sub(1) {
+        let (tx, rx) = (chain[b], chain[b + 1]);
+        let sent = &tx.host_shapes[tx.output_host];
+        let want = &rx.host_shapes[rx.input_host];
+        if sent != want {
+            fail(format!(
+                "boundary {b}: shard {b} sends an activation shaped {sent:?}, shard {} expects {want:?}",
+                b + 1
+            ));
+        }
+    }
+    VerifyReport { diagnostics: diags }
 }
 
 #[cfg(test)]
@@ -1314,6 +1488,130 @@ mod tests {
         assert!(hit.is_some());
         let report = verify(&p, ProgramKind::Encoder, &inv());
         assert!(report.has_error(Rule::SkipContract));
+    }
+
+    /// A head/tail shard pair by step surgery: the head's trailing fetch
+    /// of the output host becomes a boundary-0 send (exactly the
+    /// builder's send lowering) and the tail gains a boundary-0 recv of
+    /// its input host.  Unoptimized builds so the wave partition stays
+    /// empty under mutation.
+    fn sharded_pair() -> (TileProgram, TileProgram) {
+        let mut head = ScheduleBuilder::new(fc(), presets::small_encoder(32, 1)).unwrap().build();
+        let out = head.output_host;
+        let replaced = head.steps.iter_mut().rev().find_map(|s| match s {
+            Step::Fetch { src, host } if *host == out => {
+                let (src, host) = (*src, *host);
+                *s = Step::SendActivation { src, host, boundary: 0 };
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(replaced.is_some(), "no trailing fetch of the output host to convert");
+        let mut tail = ScheduleBuilder::new(fc(), presets::small_encoder(32, 1)).unwrap().build();
+        let input = tail.input_host;
+        tail.steps.push(Step::RecvActivation { host: input, boundary: 0 });
+        (head, tail)
+    }
+
+    #[test]
+    fn sharded_pair_verifies_clean_and_the_chain_is_covered() {
+        let (head, tail) = sharded_pair();
+        for (name, p) in [("head", &head), ("tail", &tail)] {
+            let report = verify(p, ProgramKind::Encoder, &inv());
+            assert!(report.is_clean(), "{name}: {:?}", report.errors().collect::<Vec<_>>());
+        }
+        let report = verify_shard_chain(&[&head, &tail]);
+        assert!(report.is_clean(), "{:?}", report.errors().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn second_send_is_a_shard_contract_error() {
+        let (mut head, _) = sharded_pair();
+        let (src, host) = head
+            .steps
+            .iter()
+            .find_map(|s| match s {
+                Step::SendActivation { src, host, .. } => Some((*src, *host)),
+                _ => None,
+            })
+            .unwrap();
+        head.steps.push(Step::SendActivation { src, host, boundary: 1 });
+        let report = verify(&head, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn send_off_the_output_host_is_a_shard_contract_error() {
+        let (mut head, _) = sharded_pair();
+        let input = head.input_host;
+        let hit = head.steps.iter_mut().find_map(|s| match s {
+            Step::SendActivation { host, .. } => {
+                *host = input;
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify(&head, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn recv_off_the_input_host_is_a_shard_contract_error() {
+        let (_, mut tail) = sharded_pair();
+        let out = tail.output_host;
+        let hit = tail.steps.iter_mut().find_map(|s| match s {
+            Step::RecvActivation { host, .. } => {
+                *host = out;
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify(&tail, ProgramKind::Encoder, &inv());
+        assert!(report.has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn uncovered_boundary_is_a_shard_chain_error() {
+        // Two plain programs: neither covers the cut between them.
+        let a = ScheduleBuilder::new(fc(), presets::small_encoder(32, 1)).unwrap().build();
+        let b = ScheduleBuilder::new(fc(), presets::small_encoder(32, 1)).unwrap().build();
+        let report = verify_shard_chain(&[&a, &b]);
+        assert!(report.has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn forged_boundary_number_is_a_shard_chain_error() {
+        let (mut head, tail) = sharded_pair();
+        let hit = head.steps.iter_mut().find_map(|s| match s {
+            Step::SendActivation { boundary, .. } => {
+                *boundary = 7;
+                Some(())
+            }
+            _ => None,
+        });
+        assert!(hit.is_some());
+        let report = verify_shard_chain(&[&head, &tail]);
+        assert!(report.has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn peer_shape_disagreement_is_a_shard_chain_error() {
+        let (head, mut tail) = sharded_pair();
+        let input = tail.input_host;
+        tail.host_shapes[input] = vec![1, 2];
+        let report = verify_shard_chain(&[&head, &tail]);
+        assert!(report.has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn single_program_chain_must_carry_no_transfers() {
+        let (head, tail) = sharded_pair();
+        assert!(verify_shard_chain(&[&head]).has_error(Rule::ShardContract));
+        assert!(verify_shard_chain(&[&tail]).has_error(Rule::ShardContract));
+        let plain = ScheduleBuilder::new(fc(), presets::small_encoder(32, 1)).unwrap().build();
+        assert!(verify_shard_chain(&[&plain]).is_clean());
     }
 
     #[test]

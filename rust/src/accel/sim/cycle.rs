@@ -41,6 +41,13 @@ pub struct ArtifactCycles {
     pub cycles: f64,
 }
 
+/// Inter-fabric link bandwidth: bytes of activation per fabric cycle.
+/// The board-to-board serial link is far narrower than the on-board AXI
+/// DMA (`coordinator::residency::UPLOAD_BYTES_PER_CYCLE`, 64 B/cycle), so
+/// a shard handoff prices at 16 B/cycle — the cost a partitioner trades
+/// against weight-upload savings when it cuts a stack.
+pub const LINK_BYTES_PER_CYCLE: u64 = 16;
+
 /// The outcome of replaying a program through the cycle backend.
 #[derive(Debug, Clone)]
 pub struct CycleReport {
@@ -73,6 +80,15 @@ pub struct CycleReport {
     /// member while this table counts every member's full cost — the gap
     /// between the two is exactly the concurrency the schedule exposed.
     pub per_artifact: BTreeMap<&'static str, ArtifactCycles>,
+    /// Shard-boundary crossings this replay sent (`SendActivation` steps
+    /// that reached the backend).  0 for any monolithic program.
+    pub activation_hops: u64,
+    /// Activation bytes pushed over the inter-fabric link by those hops.
+    pub link_bytes: u64,
+    /// Cycles charged for the link traffic at [`LINK_BYTES_PER_CYCLE`]
+    /// (already included in `total_cycles`; the sender pays the full
+    /// transfer, a recv is free — its buffer was written by the peer).
+    pub link_cycles: u64,
 }
 
 impl CycleReport {
@@ -96,6 +112,9 @@ struct CycleState {
     max_wave: f64,
     trace: Vec<&'static str>,
     per_artifact: BTreeMap<&'static str, ArtifactCycles>,
+    activation_hops: u64,
+    link_bytes: u64,
+    link_cycles: f64,
 }
 
 /// A [`FabricBackend`] whose buffers are bare shapes and whose dispatches
@@ -257,6 +276,9 @@ impl CycleBackend {
             max_wave_cycles: st.max_wave.round() as u64,
             trace: st.trace.clone(),
             per_artifact: st.per_artifact.clone(),
+            activation_hops: st.activation_hops,
+            link_bytes: st.link_bytes,
+            link_cycles: st.link_cycles.round() as u64,
         }
     }
 }
@@ -322,6 +344,23 @@ impl FabricBackend for CycleBackend {
             st.waves += 1;
         }
     }
+
+    /// The sender pays the whole transfer: `bytes` of activation at
+    /// [`LINK_BYTES_PER_CYCLE`], charged outside wave pricing (the link
+    /// serializes against compute — a handoff is a pipeline bubble for
+    /// this request; only overlapping *other* requests hides it).
+    fn link_send(&self, bytes: usize, _boundary: usize) {
+        let cost = (bytes as u64).div_ceil(LINK_BYTES_PER_CYCLE) as f64;
+        let mut st = self.state.borrow_mut();
+        st.cycles += cost;
+        st.link_cycles += cost;
+        st.activation_hops += 1;
+        st.link_bytes += bytes as u64;
+    }
+
+    /// A recv is free: the peer's send already paid the wire time and the
+    /// activation sits in the input host before replay begins.
+    fn link_recv(&self, _bytes: usize, _boundary: usize) {}
 }
 
 /// Shape-only stand-ins for a prepared weight stack: every reference

@@ -380,6 +380,12 @@ struct ProgramKey {
     opt_level: OptLevel,
     kind: ProgramKind,
     bucket: usize,
+    /// `(index, count)` when the program is one pipeline shard of a
+    /// K-shard chain (`coordinator::shard`): the index decides the
+    /// send/recv roles, so each shard is its own instruction stream even
+    /// when two shards share a sub-topology.  `None` for monolithic
+    /// programs.
+    shard: Option<(u16, u16)>,
 }
 
 impl ProgramKey {
@@ -392,6 +398,7 @@ impl ProgramKey {
         opt_level: OptLevel,
         kind: ProgramKind,
         bucket: usize,
+        shard: Option<(u16, u16)>,
     ) -> Self {
         // Decoder lowering always uses the split chain (see
         // `ScheduleBuilder::build_prefill`); normalize the flags so the
@@ -413,6 +420,7 @@ impl ProgramKey {
             opt_level,
             kind,
             bucket,
+            shard,
         }
     }
 }
@@ -558,6 +566,36 @@ impl TileEngine {
         kind: ProgramKind,
         bucket: usize,
     ) -> Result<Rc<CachedProgram>, ServeError> {
+        self.cached_shard_program_bucket(cfg, kind, bucket, None)
+    }
+
+    /// [`Self::cached_program_bucket`] for one **pipeline shard**: `cfg`
+    /// is the shard's sub-topology (its own layer count) and
+    /// `shard = Some((index, count))` selects the transfer roles — every
+    /// shard but the head gets a `RecvActivation` of boundary
+    /// `index - 1`, every shard but the tail a `SendActivation` of
+    /// boundary `index`.  `None` is exactly the monolithic path.  Decode
+    /// steps never shard (KV locality pins a generating sequence to one
+    /// fabric), so `DecodeStep` with a shard role is refused.
+    pub fn cached_shard_program_bucket(
+        &self,
+        cfg: &TnnConfig,
+        kind: ProgramKind,
+        bucket: usize,
+        shard: Option<(u16, u16)>,
+    ) -> Result<Rc<CachedProgram>, ServeError> {
+        if let Some((index, count)) = shard {
+            if count < 2 || index >= count {
+                return Err(ServeError::invalid(format!(
+                    "shard {index} of {count} is not a valid chain position"
+                )));
+            }
+            if matches!(kind, ProgramKind::DecodeStep) {
+                return Err(ServeError::invalid(
+                    "decode-step programs never shard — KV locality pins generation to one fabric",
+                ));
+            }
+        }
         let key = ProgramKey::new(
             cfg,
             self.mode,
@@ -566,6 +604,7 @@ impl TileEngine {
             self.opt_level,
             kind,
             bucket,
+            shard,
         );
         if let Some(p) = self.programs.borrow().get(&key) {
             self.cache_hits.set(self.cache_hits.get() + 1);
@@ -588,7 +627,15 @@ impl TileEngine {
         // costs all shrink to it.  Decode-step programs are single-row
         // and never bucketed (callers pass bucket == seq_len).
         let cfg_b = TnnConfig { seq_len: bucket, ..*cfg };
-        let builder = ScheduleBuilder::new(self.fc, cfg_b)?;
+        let mut builder = ScheduleBuilder::new(self.fc, cfg_b)?;
+        if let Some((index, count)) = shard {
+            if index > 0 {
+                builder = builder.recv_activation(index as usize - 1);
+            }
+            if index + 1 < count {
+                builder = builder.send_activation(index as usize);
+            }
+        }
         let mut program = match kind {
             ProgramKind::Encoder => builder
                 .mode(self.mode)
@@ -976,6 +1023,73 @@ impl TileEngine {
         let result = schedule::crop_to_mat(&out, input.rows, cfg.d_model);
         self.pool.put(out);
         Ok(result)
+    }
+
+    /// One stage of a **sharded** encoder chain (`coordinator::shard`):
+    /// replay shard `(index, count)` of the chain against this fabric's
+    /// prepared sub-stack.  `stack.cfg` is the shard's sub-topology, and
+    /// `activation` is the full padded `[SL_MAX, DMODEL_MAX]` activation —
+    /// the caller's padded request for the head stage
+    /// ([`Self::pad_stage_input`]) or the relay tensor the previous stage
+    /// returned.  The return value is the padded output activation: for
+    /// every stage but the tail it is exactly what `SendActivation`
+    /// shipped over the link, and the tail's caller crops it with
+    /// [`Self::crop_stage_output`].
+    pub fn run_encoder_stage(
+        &self,
+        stack: &PreparedStack,
+        shard: (u16, u16),
+        activation: Tensor,
+        live: usize,
+    ) -> Result<Tensor, ServeError> {
+        let cfg = &stack.cfg;
+        if self.registers.current_config() != *cfg {
+            return Err(ServeError::invalid(
+                "register file is programmed for a different topology (Algorithm 18 step 3 first)",
+            ));
+        }
+        if live == 0 || live > cfg.seq_len {
+            return Err(ServeError::invalid(format!(
+                "stage live rows {live}, want 1..={}",
+                cfg.seq_len
+            )));
+        }
+        if activation.shape != [self.fc.sl_max, self.fc.dmodel_max] {
+            return Err(ServeError::invalid(format!(
+                "stage activation is {:?}, want the padded [{}, {}]",
+                activation.shape, self.fc.sl_max, self.fc.dmodel_max
+            )));
+        }
+        let bucket = schedule::covering_bucket(live, cfg.seq_len);
+        let cached =
+            self.cached_shard_program_bucket(cfg, ProgramKind::Encoder, bucket, Some(shard))?;
+        let out = schedule::replay_with_live(
+            &cached.program,
+            &self.exec,
+            stack,
+            &cached.runtime,
+            activation,
+            Some(&self.pool),
+            live,
+        )?;
+        Ok(out)
+    }
+
+    /// Pad a request into the fabric's `[SL_MAX, DMODEL_MAX]` staging
+    /// tensor (from the engine's scratch pool) — the head-stage input of
+    /// [`Self::run_encoder_stage`].
+    pub fn pad_stage_input(&self, input: &Mat) -> Tensor {
+        let mut padded = self.pool.take_zeroed(&[self.fc.sl_max, self.fc.dmodel_max]);
+        schedule::pad_into(input, &mut padded);
+        padded
+    }
+
+    /// Crop a tail stage's padded output activation to the request's live
+    /// rows, recycling the padded buffer into the scratch pool.
+    pub fn crop_stage_output(&self, out: Tensor, live: usize, d_model: usize) -> Mat {
+        let result = schedule::crop_to_mat(&out, live, d_model);
+        self.pool.put(out);
+        result
     }
 
     /// Decoder **prefill**: run the whole prompt (`rows <= seq_len` of

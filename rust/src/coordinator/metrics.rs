@@ -77,6 +77,18 @@ pub struct Metrics {
     /// Stacks uploaded off the dispatch path because a hot model's queue
     /// deepened (the residency prefetch trigger).
     pub prefetches: u64,
+    /// Inter-fabric activation handoffs forwarded by shard-chain stages
+    /// (one per activation a stage sent downstream; aggregate: sum —
+    /// every hop crosses a link exactly once).
+    pub activation_hops: u64,
+    /// Activation bytes those handoffs moved across fabric links
+    /// (aggregate: sum, like `activation_hops`).
+    pub interfabric_bytes: u64,
+    /// Largest single shard weight stack made device-resident on one
+    /// fabric by the sharded serving path (aggregate: **max** across
+    /// fabrics — each fabric homes its own shard, so the pool-wide
+    /// figure is the worst per-fabric footprint, not a total).
+    pub shard_resident_bytes_peak: u64,
     /// Requests that failed (programming errors, execution errors).
     pub failed: u64,
     /// Requests stopped short of completion without failing: an
@@ -248,6 +260,10 @@ impl Metrics {
         self.residency_evictions += other.residency_evictions;
         self.resident_bytes_peak = self.resident_bytes_peak.max(other.resident_bytes_peak);
         self.prefetches += other.prefetches;
+        self.activation_hops += other.activation_hops;
+        self.interfabric_bytes += other.interfabric_bytes;
+        self.shard_resident_bytes_peak =
+            self.shard_resident_bytes_peak.max(other.shard_resident_bytes_peak);
         self.failed += other.failed;
         self.cancelled += other.cancelled;
         self.expired += other.expired;
@@ -359,6 +375,12 @@ impl Metrics {
                 self.residency_evictions,
                 self.prefetches,
                 self.resident_bytes_peak,
+            ));
+        }
+        if self.activation_hops > 0 || self.shard_resident_bytes_peak > 0 {
+            out.push_str(&format!(
+                "shard chain: {} activation hops, {} inter-fabric bytes, shard peak {} bytes\n",
+                self.activation_hops, self.interfabric_bytes, self.shard_resident_bytes_peak,
             ));
         }
         out.push_str(&format!(
@@ -605,6 +627,54 @@ mod tests {
         let mut clean = Metrics::default();
         clean.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
         assert!(!clean.report().contains("weight residency"));
+    }
+
+    #[test]
+    fn shard_counters_merge_sums_traffic_and_maxes_the_peak() {
+        // A 2-shard chain over fabrics 0 and 1: the head forwards every
+        // activation (hops and bytes are per-link traffic, so they ADD
+        // across fabrics), while each fabric homes a different shard
+        // stack (the pool-wide shard footprint is a MAX, not a sum).
+        let mut head = Metrics::for_fabric(0);
+        head.activation_hops = 3;
+        head.interfabric_bytes = 3 * 4096;
+        head.shard_resident_bytes_peak = 2_000_000;
+        let mut tail = Metrics::for_fabric(1);
+        tail.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        tail.shard_resident_bytes_peak = 3_000_000;
+        let agg = Metrics::aggregate(vec![head, tail]);
+        assert_eq!(agg.activation_hops, 3, "hops add: each crosses one link once");
+        assert_eq!(agg.interfabric_bytes, 3 * 4096, "link bytes add like hops");
+        assert_eq!(
+            agg.shard_resident_bytes_peak, 3_000_000,
+            "shard peak is a max: fabrics home different shards in separate memories"
+        );
+        let rep = agg.report();
+        assert!(
+            rep.contains("shard chain: 3 activation hops, 12288 inter-fabric bytes"),
+            "{rep}"
+        );
+        assert!(rep.contains("shard peak 3000000 bytes"), "{rep}");
+    }
+
+    #[test]
+    fn shard_counters_stay_silent_and_zero_on_unsharded_pools() {
+        // Merging unsharded fabrics leaves every shard counter at zero
+        // and keeps the report free of shard noise.
+        let mut a = Metrics::for_fabric(0);
+        a.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        let b = Metrics::for_fabric(1);
+        let agg = Metrics::aggregate(vec![a, b]);
+        assert_eq!(agg.activation_hops, 0);
+        assert_eq!(agg.interfabric_bytes, 0);
+        assert_eq!(agg.shard_resident_bytes_peak, 0);
+        assert!(!agg.report().contains("shard chain"), "{}", agg.report());
+        // A tail-only chain fabric (receives but never forwards) still
+        // renders: the resident shard peak alone must surface the line.
+        let mut tail = Metrics::for_fabric(2);
+        tail.record(Duration::from_millis(1), Duration::ZERO, Duration::from_millis(1));
+        tail.shard_resident_bytes_peak = 7;
+        assert!(tail.report().contains("shard peak 7 bytes"), "{}", tail.report());
     }
 
     #[test]

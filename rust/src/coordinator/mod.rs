@@ -32,6 +32,11 @@
 //!   accounting (AXI-timer analog), per fabric and aggregated, with
 //!   per-priority / cancellation / deadline counters — readable live
 //!   via `Server::metrics()`, not only at shutdown.
+//! * [`shard`] — cross-fabric pipeline sharding: a layer-range
+//!   partitioner sized to each fabric's weight-memory envelope, chain
+//!   lowering with `SendActivation`/`RecvActivation` transfer roles, and
+//!   the sequential chain driver — "model too big" becomes a placement
+//!   decision instead of a refusal.
 
 pub mod api;
 pub mod batcher;
@@ -40,6 +45,7 @@ pub mod metrics;
 pub mod residency;
 pub mod router;
 pub mod server;
+pub mod shard;
 
 pub use api::{
     CancelToken, EncodeOutput, GenerateOutput, JobEvent, JobHandle, JobOutput, Priority, QoS,
@@ -50,6 +56,7 @@ pub use engine::{
     StepControl, TileEngine,
 };
 pub use residency::{ResidencyMode, ResidencyPolicy, ResidencyStats, WeightResidencyManager};
+pub use shard::{min_shards, ShardPlan, ShardSpec};
 pub use server::{
     FaultInjection, GenerateRequest, GenerateResponse, PoolScheduler, Request, Response,
     SchedulePolicy, Server, ServerConfig,

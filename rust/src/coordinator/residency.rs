@@ -294,7 +294,27 @@ pub fn upload_cycles(bytes: u64) -> u64 {
 /// All panels are f32 on the device (quantization happens inside the
 /// fabric datapath, §5.2).
 pub fn weight_footprint_bytes(cfg: &TnnConfig, fc: &FabricConstants) -> u64 {
-    const F32: u64 = 4;
+    cfg.enc_layers as u64 * encoder_layer_bytes(cfg, fc)
+        + cfg.dec_layers as u64 * decoder_layer_bytes(cfg, fc)
+}
+
+/// Weight-memory bytes of **one encoder layer** of `cfg` on `fc` — the
+/// per-layer `enc` term of [`weight_footprint_bytes`], exposed as the
+/// unit the shard partitioner (`coordinator::shard`) packs into fabric
+/// envelopes.
+pub fn encoder_layer_bytes(cfg: &TnnConfig, fc: &FabricConstants) -> u64 {
+    layer_elems(cfg, fc).0 * 4
+}
+
+/// Weight-memory bytes of **one decoder layer** of `cfg` on `fc`: its
+/// encoder-shaped prefill half plus the decode-row matrices, and the
+/// cross-attention block for seq2seq topologies.
+pub fn decoder_layer_bytes(cfg: &TnnConfig, fc: &FabricConstants) -> u64 {
+    layer_elems(cfg, fc).1 * 4
+}
+
+/// `(encoder layer, decoder layer)` footprints of `cfg` in f32 elements.
+fn layer_elems(cfg: &TnnConfig, fc: &FabricConstants) -> (u64, u64) {
     let d = cfg.d_model as u64;
     let h = cfg.heads as u64;
     let hidden = cfg.hidden as u64;
@@ -337,9 +357,7 @@ pub fn weight_footprint_bytes(cfg: &TnnConfig, fc: &FabricConstants) -> u64 {
         0
     };
 
-    let elems =
-        cfg.enc_layers as u64 * enc + cfg.dec_layers as u64 * (enc + dec_rows + cross);
-    elems * F32
+    (enc, enc + dec_rows + cross)
 }
 
 /// The reprogram penalty in scheduler currency: uploading `cfg`'s stack

@@ -68,6 +68,20 @@
 //!   (including in-flight occupancy and time-to-first-token);
 //!   [`Server::shutdown`] is no longer the only metrics exit.
 //!
+//! **Cross-fabric sharding** ([`super::shard`]): a model whose weight
+//! footprint exceeds ONE fabric's envelope
+//! ([`ResidencyPolicy::capacity_bytes`]) is admitted anyway when its
+//! contiguous layer-range chain fits the *pool* — [`Server::start`]
+//! partitions it with [`ShardPlan::partition_for_envelope`] and refuses
+//! only chains longer than the pool.  The dispatcher co-places each
+//! round on `K` distinct live fabrics ([`PoolScheduler::place_chain`],
+//! preferring fabrics already homing a stage's shard stack) and wires
+//! the stages with mpsc **activation handoff channels**; each stage
+//! worker streams relays — run the stage, forward the activation —
+//! so a `K`-shard encode overlaps `K` in-flight requests (stage *i*
+//! computes request *r* while stage *i+1* computes *r−1*).  Sharded
+//! serving is encode-only: KV locality pins generation to one fabric.
+//!
 //! `pool_size = 1` reproduces the paper's host software exactly: one
 //! fabric, one register file, reprograms on every model switch — the
 //! paper-reproduction path is unchanged.  Clients submit from any
@@ -102,8 +116,10 @@ use super::engine::{AttentionMode, GenSession, OptLevel, PreparedStack, TileEngi
 use super::metrics::Metrics;
 use super::residency::{self, ResidencyMode, ResidencyPolicy, WeightResidencyManager};
 use super::router::{ModelSpec, Router};
+use super::shard::{self, ShardPlan};
 use crate::accel::schedule;
 use crate::model::weights::Mat;
+use crate::runtime::Tensor;
 
 /// One inference request (v0 surface; see [`Submission::Encode`]).
 #[derive(Debug, Clone)]
@@ -294,7 +310,41 @@ enum FabricMsg {
     /// upload inline.  Best-effort — a failure costs nothing that the
     /// next dispatch would not have paid anyway.
     Prefetch { model: String, rate: f64 },
+    /// One stage of a sharded encode round: this fabric runs shard
+    /// `shard.0` of `shard.1` of `model`'s chain (see [`super::shard`]).
+    /// The head stage (`upstream == None`) owns the batch `items` and
+    /// pads them into stage activations; every other stage drains
+    /// `upstream` until the peer closes it; every stage but the tail
+    /// forwards on `downstream`.  `expected` sizes the round for
+    /// capacity accounting — a stage acks that many served even when
+    /// upstream cancellations shrank what actually arrived, so the
+    /// dispatcher's in-flight belief stays balanced.
+    ShardStage {
+        model: String,
+        shard: (u16, u16),
+        rate: f64,
+        items: Vec<WorkItem>,
+        upstream: Option<Receiver<ShardRelay>>,
+        downstream: Option<Sender<ShardRelay>>,
+        expected: usize,
+    },
     Shutdown { reply: Sender<()> },
+}
+
+/// One encode request travelling a shard chain between fabric workers:
+/// the job rides with its padded `[SL_MAX, DMODEL_MAX]` stage
+/// activation so any stage can fail it typed and the tail can reply on
+/// the job's own event channel.
+struct ShardRelay {
+    job: JobState,
+    arrived: Instant,
+    deadline: Option<Instant>,
+    /// When the head stage started executing — the queue-wait/compute
+    /// boundary for the whole chain's [`Timing`].
+    exec_start: Instant,
+    /// Live rows of the original request (the tail's crop height).
+    live: usize,
+    activation: Tensor,
 }
 
 /// Fabric → dispatcher completion events, one per batch (separate
@@ -506,6 +556,74 @@ impl PoolScheduler {
         self.choose_within_depth(model, hint, usize::MAX).is_some()
     }
 
+    /// The `k` **distinct** live fabrics a shard chain of `model` would
+    /// occupy under the per-fabric `depth` gate — stage `i` runs on the
+    /// `i`-th entry.  Stages greedily prefer a fabric already believed
+    /// to hold their shard stack (keyed by [`shard::residency_key`]),
+    /// then the least-loaded, then the lowest index, so a warmed chain
+    /// reuses its homes round after round instead of re-uploading
+    /// shards.  Pure; commits nothing.  `None` when fewer than `k`
+    /// distinct live fabrics have room.
+    fn choose_chain(&self, model: &str, k: usize, depth: usize) -> Option<Vec<usize>> {
+        let n = self.states.len();
+        let mut chain: Vec<usize> = Vec::with_capacity(k);
+        for stage in 0..k {
+            let key = shard::residency_key(model, stage, k);
+            let pick = (0..n)
+                .filter(|i| {
+                    let s = &self.states[*i];
+                    !s.dead && s.batches < depth && !chain.contains(i)
+                })
+                .min_by_key(|i| {
+                    let s = &self.states[*i];
+                    (!s.resident.contains(&key), s.inflight, *i)
+                })?;
+            chain.push(pick);
+        }
+        Some(chain)
+    }
+
+    /// Whether a `k`-stage shard chain of `model` could be co-placed
+    /// right now under the `depth` gate (the dispatcher's pre-pop check
+    /// for sharded models, the chain analog of [`Self::can_place`]).
+    pub fn can_place_chain(&self, model: &str, k: usize, depth: usize) -> bool {
+        self.choose_chain(model, k, depth).is_some()
+    }
+
+    /// Whether a `k`-stage chain could EVER be placed: a chain needs
+    /// `k` *distinct* live fabrics, so once deaths shrink the pool
+    /// below `k` the model's queued work must fail typed instead of
+    /// waiting on fabrics that will never come back.
+    pub fn can_place_chain_ever(&self, k: usize) -> bool {
+        self.states.iter().filter(|s| !s.dead).count() >= k
+    }
+
+    /// Co-place one sharded round of `model` on a `k`-fabric chain and
+    /// account for it: every chain fabric takes one batch slot and
+    /// `batch_len` in-flight requests — each request visits every
+    /// stage, and each stage acks its own completion event.  Commits
+    /// the optimistic per-stage shard-residency belief exactly as
+    /// [`Self::pick_within_depth`] does for whole models; the workers'
+    /// authoritative snapshots correct it.  `None` when
+    /// [`Self::can_place_chain`] would be false.
+    pub fn place_chain(
+        &mut self,
+        model: &str,
+        k: usize,
+        batch_len: usize,
+        depth: usize,
+    ) -> Option<Vec<usize>> {
+        let chain = self.choose_chain(model, k, depth)?;
+        for (stage, &f) in chain.iter().enumerate() {
+            let s = &mut self.states[f];
+            s.current_model = Some(model.to_string());
+            s.resident.insert(shard::residency_key(model, stage, k));
+            s.inflight += batch_len;
+            s.batches += 1;
+        }
+        Some(chain)
+    }
+
     /// Record a worker's death notice: the fabric takes no further
     /// work, and its stuck capacity accounting is released.
     pub fn mark_dead(&mut self, fabric: usize) {
@@ -624,6 +742,54 @@ impl Server {
             router.register(spec.clone())?;
         }
 
+        // Host-side fabric constants (manifest-backed when artifacts
+        // exist, synth defaults otherwise) — shared by the pool-fit
+        // admission below and the upload-penalty pricing after spawn.
+        let fc = match crate::runtime::Manifest::load(&cfg.artifact_dir) {
+            Ok(m) => schedule::FabricConstants::from_manifest(&m),
+            Err(_) => schedule::FabricConstants::artifact_default(),
+        };
+        // Pool-fit admission: a model bigger than ONE fabric's weight
+        // envelope is partitioned into a contiguous layer-range shard
+        // chain and served across that many fabrics — refused only when
+        // the chain cannot fit the *pool*.  Oversize generation models
+        // have no sharded path (KV locality pins generation to one
+        // fabric), and a pinned chain is a contradiction (it spans
+        // distinct fabrics by construction): both refuse typed here,
+        // at start, not per-request mid-traffic.
+        for spec in &cfg.models {
+            let bytes = residency::weight_footprint_bytes(&spec.cfg, &fc);
+            if bytes <= cfg.residency.capacity_bytes {
+                continue;
+            }
+            if spec.cfg.dec_layers > 0 {
+                return Err(ServeError::config(format!(
+                    "model '{}' needs {bytes} B of weight memory, over the fabric envelope \
+                     of {} B, and has decoder layers — sharded serving is encode-only \
+                     (KV locality pins generation to one fabric)",
+                    spec.name, cfg.residency.capacity_bytes
+                )));
+            }
+            let plan =
+                ShardPlan::partition_for_envelope(&spec.cfg, &fc, cfg.residency.capacity_bytes)?;
+            let k = plan.shards.len();
+            if k > cfg.pool_size {
+                return Err(ServeError::config(format!(
+                    "model '{}' needs a {k}-shard chain under the {} B fabric envelope but \
+                     the pool has only {} fabrics — it fits neither one fabric nor the pool",
+                    spec.name, cfg.residency.capacity_bytes, cfg.pool_size
+                )));
+            }
+            if spec.preferred_fabric.is_some() {
+                return Err(ServeError::config(format!(
+                    "model '{}' is pinned to one fabric but needs a {k}-shard chain \
+                     spanning {k} distinct fabrics — drop the affinity hint",
+                    spec.name
+                )));
+            }
+        }
+        let plans = shard_plans(&cfg, &fc);
+
         let (tx, rx) = mpsc::channel::<Msg>();
         let (etx, erx) = mpsc::channel::<FabricEvent>();
 
@@ -663,10 +829,6 @@ impl Server {
         // Price every model's upload penalty once so cost-aware
         // placement can weigh a predicted reprogram against queue depth
         // without touching an engine.
-        let fc = match crate::runtime::Manifest::load(&cfg.artifact_dir) {
-            Ok(m) => schedule::FabricConstants::from_manifest(&m),
-            Err(_) => schedule::FabricConstants::artifact_default(),
-        };
         let mut sched = PoolScheduler::new(cfg.schedule, cfg.pool_size);
         for spec in &cfg.models {
             let penalty = residency::upload_penalty_requests(&spec.cfg, &fc);
@@ -681,6 +843,7 @@ impl Server {
             fabrics: fabric_txs,
             sched,
             hints,
+            plans,
             queue_metrics: queue_metrics.clone(),
         };
         let dispatcher = std::thread::Builder::new()
@@ -848,7 +1011,34 @@ struct DispatchCtx {
     fabrics: Vec<Sender<FabricMsg>>,
     sched: PoolScheduler,
     hints: BTreeMap<String, usize>,
+    /// Shard chains this pool serves, one per admitted model whose
+    /// weight footprint exceeds a single fabric's envelope (validated
+    /// at [`Server::start`]; workers recompute the identical plans).
+    plans: BTreeMap<String, ShardPlan>,
     queue_metrics: Arc<Mutex<Metrics>>,
+}
+
+/// The shard plans a pool serves under: one per model whose weight
+/// footprint exceeds a single fabric's envelope.  Pure arithmetic over
+/// the server config — [`Server::start`] validated every partition, so
+/// the dispatcher and each worker recompute identical plans instead of
+/// shipping them across threads.
+fn shard_plans(
+    cfg: &ServerConfig,
+    fc: &schedule::FabricConstants,
+) -> BTreeMap<String, ShardPlan> {
+    let mut plans = BTreeMap::new();
+    for spec in &cfg.models {
+        if residency::weight_footprint_bytes(&spec.cfg, fc) <= cfg.residency.capacity_bytes {
+            continue;
+        }
+        if let Ok(plan) =
+            ShardPlan::partition_for_envelope(&spec.cfg, fc, cfg.residency.capacity_bytes)
+        {
+            plans.insert(spec.name.clone(), plan);
+        }
+    }
+    plans
 }
 
 fn dispatcher_thread(ctx: DispatchCtx) {
@@ -861,6 +1051,7 @@ fn dispatcher_thread(ctx: DispatchCtx) {
         fabrics,
         mut sched,
         hints,
+        plans,
         queue_metrics,
     } = ctx;
     // Fold one worker event into the scheduler: death retires the
@@ -973,6 +1164,48 @@ fn dispatcher_thread(ctx: DispatchCtx) {
                 break;
             };
             let hint = hints.get(&model).copied();
+            // Sharded models dispatch as a chain: one round occupies K
+            // distinct fabrics at once, wired with handoff channels.
+            if let Some(k) = plans.get(&model).map(|p| p.shards.len()) {
+                if !sched.can_place_chain(&model, k, queue_depth) {
+                    if !sched.can_place_chain_ever(k) {
+                        // The pool shrank below the chain length: no
+                        // future completion can ever free enough
+                        // distinct fabrics — fail the queue typed now.
+                        let lost = batcher.take_where(|p| p.model == model);
+                        lock(&queue_metrics).failed += lost.len() as u64;
+                        for p in lost {
+                            p.payload.fail(ServeError::pool_lost(format!(
+                                "model '{model}' needs a {k}-fabric shard chain but fewer \
+                                 than {k} live fabrics remain"
+                            )));
+                        }
+                        continue;
+                    }
+                    gated = true;
+                    blocked.push(model);
+                    continue;
+                }
+                // Sharded models are encode-only (admission enforces
+                // it), so the whole ready batch pops at once.
+                let Some((model, batch)) = batcher.pop_model(&model) else {
+                    break;
+                };
+                let items: Vec<WorkItem> = batch
+                    .into_iter()
+                    .map(|p: Pending<JobState>| WorkItem {
+                        job: p.payload,
+                        arrived: p.arrived,
+                        deadline: p.deadline,
+                    })
+                    .collect();
+                let rate = rate_now(&rates, residency.decay, arrivals, &model);
+                let chain = sched
+                    .place_chain(&model, k, items.len(), queue_depth)
+                    .expect("can_place_chain just found a chain");
+                dispatch_chain(&fabrics, &mut sched, &model, &chain, items, rate);
+                continue;
+            }
             if !sched.can_place(&model, hint, queue_depth) {
                 if !sched.can_place_ever(&model, hint) {
                     // Every fabric this model could run on is dead —
@@ -1046,12 +1279,23 @@ fn dispatcher_thread(ctx: DispatchCtx) {
             let hot: Vec<String> = batcher
                 .queued_models()
                 .filter(|m| batcher.model_len(m) >= residency.prefetch_depth)
+                // Chains prefetch nothing: place_chain already steers
+                // every stage toward its shard's resident fabric, and a
+                // whole-model stack would not fit one fabric anyway.
+                .filter(|m| !plans.contains_key(*m))
                 .map(str::to_string)
                 .collect();
             for model in hot {
                 if let Some(f) = sched.prefetch_target(&model) {
                     let rate = rate_now(&rates, residency.decay, arrivals, &model);
-                    let _ = fabrics[f].send(FabricMsg::Prefetch { model, rate });
+                    // Guard the staging path against a worker that died
+                    // between its last event and this trigger: a failed
+                    // send retires the fabric in the scheduler (which
+                    // just committed the resident belief to it) so no
+                    // further staging lands on a dead worker's queue.
+                    if fabrics[f].send(FabricMsg::Prefetch { model, rate }).is_err() {
+                        sched.mark_dead(f);
+                    }
                 }
             }
         }
@@ -1092,6 +1336,66 @@ fn dispatcher_thread(ctx: DispatchCtx) {
     }
 }
 
+/// Send one sharded encode round down its chain: `K` [`FabricMsg::ShardStage`]
+/// messages wired stage-to-stage with fresh relay channels.  Stages go
+/// out **tail-first** so a dead fabric is discovered while the
+/// dispatcher still owns the head's items — the round then fails typed
+/// instead of entering a chain that cannot finish.  Stages already sent
+/// see their upstream close, drain empty, and still ack `expected`
+/// served on their own; the failed and unsent stages are completed
+/// here, keeping the capacity accounting balanced either way.
+fn dispatch_chain(
+    fabrics: &[Sender<FabricMsg>],
+    sched: &mut PoolScheduler,
+    model: &str,
+    chain: &[usize],
+    items: Vec<WorkItem>,
+    rate: f64,
+) {
+    let k = chain.len();
+    let n = items.len();
+    // Handoff channels: boundary b carries stage b's output activations
+    // into stage b + 1.
+    let mut ups: Vec<Option<Receiver<ShardRelay>>> = Vec::with_capacity(k);
+    let mut downs: Vec<Option<Sender<ShardRelay>>> = Vec::with_capacity(k);
+    ups.push(None);
+    for _ in 0..k - 1 {
+        let (btx, brx) = mpsc::channel::<ShardRelay>();
+        downs.push(Some(btx));
+        ups.push(Some(brx));
+    }
+    downs.push(None);
+    let mut items = Some(items);
+    for stage in (0..k).rev() {
+        let msg = FabricMsg::ShardStage {
+            model: model.to_string(),
+            shard: (stage as u16, k as u16),
+            rate,
+            items: if stage == 0 { items.take().unwrap_or_default() } else { Vec::new() },
+            upstream: ups[stage].take(),
+            downstream: downs[stage].take(),
+            expected: n,
+        };
+        if let Err(mpsc::SendError(lost)) = fabrics[chain[stage]].send(msg) {
+            // This stage's worker died before its notice folded: fail
+            // the round's jobs typed (they live in the head's items —
+            // either still owned here or returned inside `lost`).
+            if let FabricMsg::ShardStage { items: lost_items, .. } = lost {
+                for it in lost_items.into_iter().chain(items.take().unwrap_or_default()) {
+                    it.job.fail(ServeError::pool_lost(format!(
+                        "fabric {} died mid-chain for model '{model}'",
+                        chain[stage]
+                    )));
+                }
+            }
+            for &f in &chain[..=stage] {
+                sched.complete(f, n);
+            }
+            return;
+        }
+    }
+}
+
 fn fabric_thread(
     id: usize,
     cfg: ServerConfig,
@@ -1117,8 +1421,19 @@ fn fabric_thread(
     // *lazy*: the residency manager below performs them on first
     // dispatch (Algorithm 18, 4–12) and keeps device weight memory
     // within its capacity envelope thereafter.
+    let fc = engine.fabric_constants();
+    // Sharded models validate per shard sub-config: only a shard's
+    // layer slice ever programs this fabric's registers, and the full
+    // stack deliberately exceeds what one fabric can hold.
+    let plans = shard_plans(&cfg, &fc);
     for spec in &cfg.models {
-        if let Err(e) = engine.check_runtime_config(&spec.cfg) {
+        let fits = match plans.get(&spec.name) {
+            Some(plan) => {
+                plan.shards.iter().try_for_each(|s| engine.check_runtime_config(&s.cfg))
+            }
+            None => engine.check_runtime_config(&spec.cfg),
+        };
+        if let Err(e) = fits {
             let _ = ready.send(Err(ServeError::engine(format!(
                 "fabric {id}: model '{}' cannot run on this fabric: {e}",
                 spec.name
@@ -1126,7 +1441,6 @@ fn fabric_thread(
             return;
         }
     }
-    let fc = engine.fabric_constants();
     let mut resmgr: WeightResidencyManager<PreparedStack> =
         WeightResidencyManager::new(cfg.residency);
     // Warm the executable cache so first requests are not compile-bound.
@@ -1231,6 +1545,40 @@ fn fabric_thread(
                     resident: Some(resmgr.resident_models()),
                 });
             }
+            Some(FabricMsg::ShardStage {
+                model,
+                shard,
+                rate,
+                items,
+                upstream,
+                downstream,
+                expected,
+            }) => {
+                serve_shard_stage(
+                    &mut engine,
+                    &cfg,
+                    &mut resmgr,
+                    &plans,
+                    &metrics,
+                    &model,
+                    shard,
+                    rate,
+                    items,
+                    upstream,
+                    downstream,
+                );
+                // Ack the dispatched round size (not what survived the
+                // chain): the dispatcher committed `expected` in-flight
+                // on this fabric at placement, and upstream
+                // cancellations must not strand the difference.
+                let _ = events.send(FabricEvent {
+                    fabric: id,
+                    served: expected,
+                    died: false,
+                    batch: true,
+                    resident: Some(resmgr.resident_models()),
+                });
+            }
             Some(FabricMsg::Prefetch { model, rate }) => {
                 // Stage the stack between batches; best-effort — on
                 // failure the next dispatch pays the upload inline,
@@ -1313,6 +1661,221 @@ fn acquire_stack<'m>(
         m.resident_bytes_peak = m.resident_bytes_peak.max(s.resident_bytes_peak);
     }
     Ok(resmgr.get(model).expect("the stack was just made resident"))
+}
+
+/// Abandon a whole shard-stage round with one typed error: every head
+/// item and every relay still arriving on the upstream channel fails.
+/// Returning (and thereby dropping the stage's downstream sender)
+/// closes the rest of the chain, which drains empty and acks on its
+/// own — the failure surfaces on the jobs, never as a stuck chain.
+fn drain_round(
+    head: std::vec::IntoIter<WorkItem>,
+    upstream: Option<Receiver<ShardRelay>>,
+    metrics: &Mutex<Metrics>,
+    msg: &str,
+) {
+    for job in
+        head.map(|it| it.job).chain(upstream.into_iter().flatten().map(|relay| relay.job))
+    {
+        lock(metrics).failed += 1;
+        job.fail(ServeError::engine(msg.to_string()));
+    }
+}
+
+/// Serve one stage of a sharded encode round (see [`super::shard`]):
+/// make the stage's shard stack device-resident under its own
+/// [`shard::residency_key`] (shards cache independently, sized by
+/// their own bytes), program the shard sub-topology, then stream
+/// relays through [`TileEngine::run_encoder_stage`] — the head pads
+/// each batch item into the fabric's staging shape, inner stages block
+/// on the upstream handoff until the peer closes it — forwarding each
+/// output activation downstream, or cropping and replying at the tail.
+///
+/// The streaming IS the pipeline: this stage computes relay *i* while
+/// the downstream fabric computes relay *i − 1*, so a `K`-shard chain
+/// overlaps `K` in-flight requests.
+#[allow(clippy::too_many_arguments)]
+fn serve_shard_stage(
+    engine: &mut TileEngine,
+    cfg: &ServerConfig,
+    resmgr: &mut WeightResidencyManager<PreparedStack>,
+    plans: &BTreeMap<String, ShardPlan>,
+    metrics: &Mutex<Metrics>,
+    model: &str,
+    shard_id: (u16, u16),
+    rate: f64,
+    items: Vec<WorkItem>,
+    upstream: Option<Receiver<ShardRelay>>,
+    downstream: Option<Sender<ShardRelay>>,
+) {
+    let (index, count) = (shard_id.0 as usize, shard_id.1 as usize);
+    let head = items.into_iter();
+    // The stage's shard spec: plans are deterministic arithmetic over
+    // the shared config, so a mismatch with the dispatcher is an
+    // internal invariant break, not a user error.
+    let spec = match plans
+        .get(model)
+        .and_then(|p| p.shards.get(index))
+        .filter(|s| s.count == count)
+    {
+        Some(s) => s,
+        None => {
+            return drain_round(
+                head,
+                upstream,
+                metrics,
+                &format!("no shard {index}/{count} plan for model '{model}' on this fabric"),
+            );
+        }
+    };
+    let Some(mspec) = cfg.models.iter().find(|s| s.name == model) else {
+        return drain_round(
+            head,
+            upstream,
+            metrics,
+            &format!("model '{model}' is not registered"),
+        );
+    };
+    // Make the shard stack resident.  The stack is the parent's layer
+    // slice prepared under the shard sub-config — weight references
+    // inside the shard's programs are 0-based, so the slice IS the
+    // stack (no offsetting; see `shard::OffsetWeights` for the other
+    // direction).
+    let key = shard::residency_key(model, index, count);
+    let evictions_before = resmgr.stats().evictions;
+    if let Err(e) = resmgr.acquire_with(&key, spec.bytes, Some(rate), || {
+        engine.prepare_model(&spec.cfg, &mspec.weights()[spec.layers.clone()], &[])
+    }) {
+        return drain_round(
+            head,
+            upstream,
+            metrics,
+            &format!("weights for shard {index}/{count} of model '{model}': {e}"),
+        );
+    }
+    let s = resmgr.stats();
+    if s.evictions > evictions_before {
+        engine.trim_scratch();
+    }
+    {
+        let mut m = lock(metrics);
+        m.weight_uploads = s.uploads;
+        m.residency_hits = s.hits;
+        m.residency_evictions = s.evictions;
+        m.resident_bytes_peak = m.resident_bytes_peak.max(s.resident_bytes_peak);
+        m.shard_resident_bytes_peak = m.shard_resident_bytes_peak.max(spec.bytes);
+    }
+    // Program the shard sub-topology — chains interleave with other
+    // models' batches on this fabric, so the register file may hold
+    // anything between rounds.
+    if !engine.is_programmed_for(&spec.cfg) {
+        match engine.program(&spec.cfg) {
+            Ok(()) => lock(metrics).reprograms += 1,
+            Err(e) => {
+                return drain_round(
+                    head,
+                    upstream,
+                    metrics,
+                    &format!(
+                        "programming registers for shard {index}/{count} of model \
+                         '{model}': {e}"
+                    ),
+                );
+            }
+        }
+    }
+    let stack = resmgr.get(&key).expect("the shard stack was just made resident");
+    let d_model = spec.cfg.d_model;
+    let mut head = head;
+    let mut attempted = 0usize;
+    loop {
+        // Intake: inner stages block on the handoff until the peer
+        // closes it (that blocking is the pipeline hand-over); the head
+        // pads its next batch item into a fresh stage activation.
+        let relay = match &upstream {
+            Some(rx) => match rx.recv() {
+                Ok(relay) => relay,
+                Err(_) => break,
+            },
+            None => match head.next() {
+                Some(WorkItem { job, arrived, deadline }) => {
+                    let exec_start = Instant::now();
+                    let (live, activation) = match &job.submission {
+                        Submission::Encode { input, .. } => {
+                            (input.rows, engine.pad_stage_input(input))
+                        }
+                        Submission::Generate { .. } => {
+                            unreachable!("sharded serving is encode-only (admission enforces it)")
+                        }
+                    };
+                    ShardRelay { job, arrived, deadline, exec_start, live, activation }
+                }
+                None => break,
+            },
+        };
+        let ShardRelay { job, arrived, deadline, exec_start, live, activation } = relay;
+        // Last-line QoS at every stage: a cancelled or expired request
+        // stops travelling the chain here (downstream simply sees one
+        // fewer relay — intake is drain-until-close, not a count).
+        let now = Instant::now();
+        if job.cancel.is_cancelled() {
+            lock(metrics).cancelled += 1;
+            job.fail(ServeError::Cancelled);
+            continue;
+        }
+        if deadline.map_or(false, |d| d <= now) {
+            lock(metrics).expired += 1;
+            job.fail(ServeError::DeadlineExceeded { waited: now.duration_since(arrived) });
+            continue;
+        }
+        attempted += 1;
+        engine.opt_level = job.qos.opt_level.unwrap_or(cfg.opt_level);
+        match engine.run_encoder_stage(stack, shard_id, activation, live) {
+            Ok(out) => match &downstream {
+                Some(tx) => {
+                    {
+                        let mut m = lock(metrics);
+                        m.activation_hops += 1;
+                        m.interfabric_bytes += (out.data.len() * 4) as u64;
+                    }
+                    let onward =
+                        ShardRelay { job, arrived, deadline, exec_start, live, activation: out };
+                    if let Err(mpsc::SendError(lost)) = tx.send(onward) {
+                        lock(metrics).failed += 1;
+                        lost.job.fail(ServeError::pool_lost(format!(
+                            "stage {}/{count} of model '{model}' is gone (worker died)",
+                            index + 1
+                        )));
+                    }
+                }
+                None => {
+                    let output = engine.crop_stage_output(out, live, d_model);
+                    let timing = Timing {
+                        compute: exec_start.elapsed(),
+                        queue_wait: exec_start.duration_since(arrived),
+                        latency: arrived.elapsed(),
+                    };
+                    let priority = job.qos.priority;
+                    {
+                        let mut m = lock(metrics);
+                        m.record(timing.compute, timing.queue_wait, timing.latency);
+                        m.record_priority(priority);
+                        m.record_rows(live, schedule::covering_bucket(live, spec.cfg.seq_len));
+                    }
+                    let _ = job.events.send(JobEvent::Done(Box::new(JobOutput::Encode(
+                        EncodeOutput { output, timing },
+                    ))));
+                }
+            },
+            Err(e) => {
+                lock(metrics).failed += 1;
+                job.fail(e);
+            }
+        }
+    }
+    if attempted > 0 {
+        lock(metrics).record_batch(attempted);
+    }
 }
 
 /// One in-flight generation in a fabric's sequence scheduler.  Owns the
@@ -2130,6 +2693,69 @@ mod tests {
         let rr = switches(SchedulePolicy::RoundRobin);
         assert_eq!(affinity, 2, "affinity programs each fabric exactly once");
         assert!(rr > affinity, "round-robin ({rr}) must reprogram more than affinity ({affinity})");
+    }
+
+    #[test]
+    fn place_chain_spreads_stages_over_distinct_fabrics() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 3);
+        let chain = s.place_chain("big", 3, 2, 1).expect("3 live fabrics fit a 3-stage chain");
+        assert_eq!(chain.len(), 3);
+        let mut sorted = chain.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "a fabric may host at most one stage of a chain");
+        // every chain fabric carries the round's accounting
+        for &f in &chain {
+            assert_eq!(s.inflight(f), 2);
+        }
+        for &f in &chain {
+            s.complete(f, 2);
+            assert_eq!(s.inflight(f), 0, "stage acks release the chain capacity");
+        }
+    }
+
+    #[test]
+    fn place_chain_prefers_shard_resident_fabrics() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 3);
+        // the worker snapshots say stage 0 lives on fabric 2, stage 1 on 0
+        s.note_residency(2, &[shard::residency_key("big", 0, 2)]);
+        s.note_residency(0, &[shard::residency_key("big", 1, 2)]);
+        let chain = s.place_chain("big", 2, 1, 1).unwrap();
+        assert_eq!(chain, vec![2, 0], "each stage lands where its shard is already resident");
+        // a stale key for the wrong shard count must not attract a stage
+        let mut t = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        t.note_residency(1, &[shard::residency_key("big", 0, 3)]);
+        assert_eq!(t.place_chain("big", 2, 1, 1).unwrap(), vec![0, 1], "3-way keys don't match a 2-way chain");
+    }
+
+    #[test]
+    fn chain_capacity_gate_respects_queue_depth() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 2);
+        assert!(s.can_place_chain("big", 2, 1));
+        let chain = s.place_chain("big", 2, 4, 1).unwrap();
+        // every fabric now holds a batch: a depth-1 pool is saturated,
+        // for chains and singles alike
+        assert!(!s.can_place_chain("big", 2, 1));
+        assert!(!s.can_place("other", None, 1));
+        assert!(s.can_place_chain("big", 2, 2), "depth 2 double-buffers the pipeline");
+        for &f in &chain {
+            s.complete(f, 4);
+        }
+        assert!(s.can_place_chain("big", 2, 1), "acks reopen the gate");
+    }
+
+    #[test]
+    fn chains_need_k_live_fabrics_forever_not_just_now() {
+        let mut s = PoolScheduler::new(SchedulePolicy::Affinity, 3);
+        assert!(s.can_place_chain_ever(3));
+        s.mark_dead(1);
+        // two live fabrics can still host a 2-chain, never a 3-chain
+        assert!(s.can_place_chain_ever(2));
+        assert!(!s.can_place_chain_ever(3), "a dead fabric shrinks the pool for good");
+        let chain = s.place_chain("big", 2, 1, 1).unwrap();
+        assert!(!chain.contains(&1), "dead fabrics never host a stage");
+        s.mark_dead(0);
+        assert!(!s.can_place_chain_ever(2));
     }
 
     #[test]

@@ -1,0 +1,464 @@
+//! Cross-fabric pipeline sharding: serve models bigger than any single
+//! fabric.
+//!
+//! ADAPTOR's runtime adaptability stops at the single-fabric boundary —
+//! a topology whose weight footprint exceeds one platform's weight-memory
+//! envelope (`accel::resources::weight_memory_bytes`) cannot be served
+//! even when the pool has idle fabrics.  The FTRANS-style fix is to
+//! pipeline the layer stack: split it into K **contiguous layer-range
+//! shards**, park each shard's weights as a pinnable resident stack on
+//! its home fabric, and relay the full padded activation over the
+//! inter-fabric link at each cut.  Because every layer consumes and
+//! produces the same `[SL_MAX, DMODEL_MAX]` padded activation, the cut
+//! interface is exactly the inter-layer interface — a K-shard chain is
+//! bit-identical to the monolithic program by construction (proved
+//! against the pseudo-numeric backend in `integration_shard.rs`).
+//!
+//! The pieces:
+//!
+//! * [`ShardPlan`] — the partitioner: balanced contiguous K-way splits
+//!   ([`ShardPlan::partition_k`]) and envelope-driven splits
+//!   ([`ShardPlan::partition_for_envelope`]), plus the pure-arithmetic
+//!   [`min_shards`] every topology (including seq2seq) can answer;
+//! * [`lower_chain`] — one [`TileProgram`] per shard, the head/tail
+//!   getting `SendActivation`/`RecvActivation` roles from the builder
+//!   and the whole chain checked by
+//!   `accel::schedule::verify::verify_shard_chain` ([`verify_chain`]);
+//! * [`replay_chain`] + [`OffsetWeights`] — the sequential chain driver
+//!   for artifact-free backends (tests, cycle pricing): each shard's
+//!   0-based weight references resolve against the parent model's stack
+//!   shifted by the shard's layer offset;
+//! * [`residency_key`] — the per-shard resident-stack identity the
+//!   serving pool registers with `coordinator::residency`.
+//!
+//! Execution sharding covers **single-stack** topologies: encoder-only
+//! stacks and decoder-only (gpt-style) stacks.  Seq2seq topologies are
+//! refused with a typed error — every decoder layer's cross-attention
+//! reads the *encoder's* output, so a contiguous layer range does not
+//! have the single-activation interface the link protocol relays — but
+//! [`min_shards`] still prices them, so the CLI can report how many
+//! fabrics a hypothetical split would need.  Decode steps never shard:
+//! KV locality pins a generating sequence to one fabric.
+
+use std::ops::Range;
+
+use crate::accel::schedule::{
+    self, FabricConstants, OptLevel, ScheduleBuilder, TileProgram, VerifyReport, WeightRef,
+    WeightSource,
+};
+use crate::model::TnnConfig;
+use crate::runtime::{backend::FabricBackend, Tensor};
+
+use super::api::ServeError;
+use super::residency::{decoder_layer_bytes, encoder_layer_bytes};
+
+/// One contiguous layer-range shard of a parent topology.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Position in the chain, `0..count` (0 = head, takes the caller's
+    /// input; `count - 1` = tail, returns to the caller).
+    pub index: usize,
+    /// Chain length K.
+    pub count: usize,
+    /// The parent stack's layer range this shard executes.  Weight
+    /// references inside the shard's program are 0-based; add
+    /// `layers.start` to reach the parent layer (see [`OffsetWeights`]).
+    pub layers: Range<usize>,
+    /// The shard's sub-topology: the parent config with this shard's
+    /// layer count in the sharded stack and zero in the other.  This is
+    /// what the home fabric's register file programs and what its
+    /// prepared weight stack is keyed by.
+    pub cfg: TnnConfig,
+    /// Device weight-memory footprint of this shard's stack in bytes.
+    pub bytes: u64,
+}
+
+impl ShardSpec {
+    /// Layers this shard executes.
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// The parent-stack index of this shard's first layer — the offset
+    /// [`OffsetWeights`] shifts by.
+    pub fn offset(&self) -> usize {
+        self.layers.start
+    }
+}
+
+/// A complete contiguous partition of one topology's layer stack.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// The parent topology the shards reassemble.
+    pub cfg: TnnConfig,
+    /// The shards in chain order; layer ranges tile `0..stack_len`.
+    pub shards: Vec<ShardSpec>,
+}
+
+/// `(stack length, per-layer bytes, is_decoder)` of the single stack a
+/// topology shards over, or the typed refusal for stackless / seq2seq
+/// configs.
+fn stack_shape(cfg: &TnnConfig, fc: &FabricConstants) -> Result<(usize, u64, bool), ServeError> {
+    match (cfg.enc_layers, cfg.dec_layers) {
+        (0, 0) => Err(ServeError::invalid(format!("topology {cfg} has no layers to shard"))),
+        (e, 0) => Ok((e, encoder_layer_bytes(cfg, fc), false)),
+        (0, d) => Ok((d, decoder_layer_bytes(cfg, fc), true)),
+        _ => Err(ServeError::invalid(format!(
+            "seq2seq topology {cfg} does not shard: every decoder layer's cross-attention reads \
+             the encoder output, so a contiguous layer range has no single-activation interface \
+             for the link to relay"
+        ))),
+    }
+}
+
+impl ShardPlan {
+    /// Balanced contiguous K-way partition of `cfg`'s layer stack:
+    /// shard sizes differ by at most one layer, earlier shards taking
+    /// the extra (the head also pays the input upload, so the tail-heavy
+    /// alternative would stack both imbalances on one fabric).
+    pub fn partition_k(
+        cfg: &TnnConfig,
+        fc: &FabricConstants,
+        k: usize,
+    ) -> Result<ShardPlan, ServeError> {
+        let (stack_len, per_layer, is_dec) = stack_shape(cfg, fc)?;
+        if k == 0 || k > stack_len {
+            return Err(ServeError::invalid(format!(
+                "cannot split {stack_len} layers into {k} non-empty contiguous shards"
+            )));
+        }
+        let base = stack_len / k;
+        let extra = stack_len % k;
+        let mut shards = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for index in 0..k {
+            let len = base + usize::from(index < extra);
+            let sub = if is_dec {
+                TnnConfig { enc_layers: 0, dec_layers: len, ..*cfg }
+            } else {
+                TnnConfig { enc_layers: len, dec_layers: 0, ..*cfg }
+            };
+            shards.push(ShardSpec {
+                index,
+                count: k,
+                layers: start..start + len,
+                cfg: sub,
+                bytes: per_layer * len as u64,
+            });
+            start += len;
+        }
+        Ok(ShardPlan { cfg: *cfg, shards })
+    }
+
+    /// Partition `cfg` so every shard's weight stack fits a fabric with
+    /// `envelope` bytes of weight memory — the admission path's "model
+    /// too big" → placement decision.  A topology that fits whole comes
+    /// back as one shard; a single layer exceeding the envelope is a
+    /// typed refusal (no contiguous split can help).
+    pub fn partition_for_envelope(
+        cfg: &TnnConfig,
+        fc: &FabricConstants,
+        envelope: u64,
+    ) -> Result<ShardPlan, ServeError> {
+        let (stack_len, per_layer, _) = stack_shape(cfg, fc)?;
+        if per_layer == 0 || per_layer > envelope {
+            return Err(ServeError::invalid(format!(
+                "one layer of {cfg} needs {per_layer} B of weight memory, over the fabric's \
+                 {envelope} B envelope — no contiguous split fits"
+            )));
+        }
+        let layers_per_shard = (envelope / per_layer) as usize;
+        let k = stack_len.div_ceil(layers_per_shard).max(1);
+        // ceil(stack_len / k) <= layers_per_shard, so the balanced split
+        // respects the envelope.
+        Self::partition_k(cfg, fc, k)
+    }
+
+    /// Total weight bytes across the chain — equals the parent model's
+    /// `residency::weight_footprint_bytes` by construction.
+    pub fn total_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.bytes).sum()
+    }
+
+    /// The largest single shard — what the tightest fabric must hold.
+    pub fn max_shard_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.bytes).max().unwrap_or(0)
+    }
+}
+
+/// Minimum number of fabrics with `envelope` bytes of weight memory
+/// needed to hold `cfg`'s full weight stack as contiguous layer ranges.
+/// Pure arithmetic over the per-layer byte sequence — answers for
+/// *every* topology, including the seq2seq configs execution sharding
+/// refuses — so `adaptor list-models` can flag oversize presets with a
+/// concrete shard count.  `None` when a single layer exceeds the
+/// envelope (no contiguous split can serve the model).
+pub fn min_shards(cfg: &TnnConfig, fc: &FabricConstants, envelope: u64) -> Option<usize> {
+    if envelope == 0 {
+        return None;
+    }
+    let enc = encoder_layer_bytes(cfg, fc);
+    let dec = decoder_layer_bytes(cfg, fc);
+    let layers = std::iter::repeat(enc)
+        .take(cfg.enc_layers)
+        .chain(std::iter::repeat(dec).take(cfg.dec_layers));
+    let mut bins = 0usize;
+    let mut cur = 0u64;
+    for bytes in layers {
+        if bytes > envelope {
+            return None;
+        }
+        if cur + bytes > envelope {
+            bins += 1;
+            cur = 0;
+        }
+        cur += bytes;
+    }
+    Some(if cur > 0 || bins == 0 { bins + 1 } else { bins })
+}
+
+/// The resident-stack identity of one shard in the serving pool's
+/// `coordinator::residency` manager: shards of one model are distinct
+/// stacks (they live on distinct fabrics), so each gets its own key.
+pub fn residency_key(model: &str, index: usize, count: usize) -> String {
+    format!("{model}::shard{index}/{count}")
+}
+
+/// Lower one [`TileProgram`] per shard of `plan` at the schedule level
+/// (no engine, no cache — the CLI sweep, the cycle bench and the
+/// artifact-free equivalence tests).  Encoder stacks lower with
+/// `build()`; decoder-only stacks with `build_prefill()`, the
+/// KV-exporting whole-prompt pass, so a chain's concatenated exports
+/// line up with the monolithic prefill's (shard order = layer order).
+/// Every shard but the head receives boundary `index - 1`; every shard
+/// but the tail sends boundary `index`.
+pub fn lower_chain(
+    plan: &ShardPlan,
+    fc: &FabricConstants,
+    level: OptLevel,
+    inventory: &schedule::ArtifactInventory,
+) -> anyhow::Result<Vec<TileProgram>> {
+    let mut chain = Vec::with_capacity(plan.shards.len());
+    for s in &plan.shards {
+        let mut b = ScheduleBuilder::new(*fc, s.cfg)?;
+        if s.index > 0 {
+            b = b.recv_activation(s.index - 1);
+        }
+        if s.index + 1 < s.count {
+            b = b.send_activation(s.index);
+        }
+        let mut p = if s.cfg.dec_layers > 0 { b.build_prefill() } else { b.build() };
+        schedule::optimize(&mut p, level, inventory)?;
+        chain.push(p);
+    }
+    Ok(chain)
+}
+
+/// Run `accel::schedule::verify`'s chain contract over a lowered chain:
+/// every boundary covered exactly once, head never receives, tail never
+/// sends, peer activation shapes agree.
+pub fn verify_chain(chain: &[TileProgram]) -> VerifyReport {
+    let refs: Vec<&TileProgram> = chain.iter().collect();
+    schedule::verify::verify_shard_chain(&refs)
+}
+
+/// A [`WeightSource`] view that shifts every reference's layer by a
+/// shard's offset: shard programs index their layers 0-based, the parent
+/// model's stack indexes them absolutely, and this adapter is the whole
+/// difference — sharding never re-tiles a weight panel.
+pub struct OffsetWeights<'a, Buf> {
+    pub inner: &'a dyn WeightSource<Buf>,
+    pub offset: usize,
+}
+
+impl<Buf> WeightSource<Buf> for OffsetWeights<'_, Buf> {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Buf> {
+        let shifted =
+            WeightRef { layer: r.layer + self.offset, kind: r.kind, row: r.row, col: r.col };
+        self.inner.weight(&shifted)
+    }
+}
+
+/// Drive a lowered chain **sequentially on one backend** — the
+/// single-process stand-in for the pipelined multi-fabric execution,
+/// numerically identical to it (stage order is the only difference, and
+/// stages are data-dependent within one request anyway).  This is what
+/// the artifact-free equivalence tests and the cycle bench run.
+///
+/// `weights` is the **parent** model's weight source; each shard
+/// resolves its 0-based references through an [`OffsetWeights`] shifted
+/// to its layer range.  Returns the final activation and the
+/// concatenated exports of every stage (a gpt prefill chain's KV panels,
+/// in the monolithic program's order).
+pub fn replay_chain<B: FabricBackend>(
+    chain: &[TileProgram],
+    plan: &ShardPlan,
+    backend: &B,
+    weights: &dyn WeightSource<B::Buf>,
+    input: Tensor,
+    live: usize,
+) -> anyhow::Result<(Tensor, Vec<B::Buf>)> {
+    anyhow::ensure!(
+        chain.len() == plan.shards.len() && !chain.is_empty(),
+        "chain has {} programs for {} shards",
+        chain.len(),
+        plan.shards.len()
+    );
+    let mut act = input;
+    let mut exports = Vec::new();
+    for (prog, spec) in chain.iter().zip(&plan.shards) {
+        anyhow::ensure!(
+            prog.aux_hosts.is_empty(),
+            "shard {} takes {} aux inputs — sharded replay relays a single activation",
+            spec.index,
+            prog.aux_hosts.len()
+        );
+        let mut runtime = schedule::build_runtime(backend, &prog.cfg, &prog.fabric)?;
+        schedule::upload_tier_masks(
+            backend,
+            &mut runtime,
+            &prog.cfg,
+            &prog.fabric,
+            &prog.tier_mask_ids(),
+        )?;
+        let shifted = OffsetWeights { inner: weights, offset: spec.offset() };
+        let (out, ex) = schedule::replay_full_adaptive(
+            prog, backend, &shifted, &runtime, vec![act], &[], None, live,
+        )?;
+        exports.extend(ex);
+        act = out;
+    }
+    Ok((act, exports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::schedule::{ArtifactInventory, Rule};
+    use crate::coordinator::residency::weight_footprint_bytes;
+    use crate::model::presets;
+
+    fn fc() -> FabricConstants {
+        FabricConstants::artifact_default()
+    }
+
+    #[test]
+    fn partition_tiles_the_stack_contiguously_and_balanced() {
+        let cfg = presets::by_name("custom-encoder-4l").unwrap();
+        for k in 1..=4 {
+            let plan = ShardPlan::partition_k(&cfg, &fc(), k).unwrap();
+            assert_eq!(plan.shards.len(), k);
+            let mut next = 0usize;
+            for (i, s) in plan.shards.iter().enumerate() {
+                assert_eq!(s.index, i);
+                assert_eq!(s.count, k);
+                assert_eq!(s.layers.start, next, "shard {i} is not contiguous");
+                assert!(s.layer_count() >= 1);
+                assert_eq!(s.cfg.enc_layers, s.layer_count());
+                assert_eq!(s.cfg.dec_layers, 0);
+                next = s.layers.end;
+            }
+            assert_eq!(next, cfg.enc_layers);
+            let sizes: Vec<usize> = plan.shards.iter().map(ShardSpec::layer_count).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced split {sizes:?}");
+            assert_eq!(plan.total_bytes(), weight_footprint_bytes(&cfg, &fc()));
+        }
+    }
+
+    #[test]
+    fn decoder_only_stacks_shard_over_dec_layers() {
+        let cfg = presets::gpt_small(64, 4);
+        let plan = ShardPlan::partition_k(&cfg, &fc(), 2).unwrap();
+        for s in &plan.shards {
+            assert_eq!(s.cfg.enc_layers, 0);
+            assert_eq!(s.cfg.dec_layers, s.layer_count());
+        }
+        assert_eq!(plan.total_bytes(), weight_footprint_bytes(&cfg, &fc()));
+    }
+
+    #[test]
+    fn invalid_partitions_are_refused() {
+        let cfg = presets::small_encoder(32, 2);
+        assert!(ShardPlan::partition_k(&cfg, &fc(), 0).is_err());
+        assert!(ShardPlan::partition_k(&cfg, &fc(), 3).is_err());
+        let s2s = presets::seq2seq_small(32, 2, 2);
+        assert!(ShardPlan::partition_k(&s2s, &fc(), 2).is_err());
+    }
+
+    #[test]
+    fn envelope_partition_matches_min_shards_and_respects_the_envelope() {
+        let f = fc();
+        for cfg in [presets::gpt_small(64, 4), presets::small_encoder(64, 4)] {
+            let per_layer = weight_footprint_bytes(&cfg, &f)
+                / (cfg.enc_layers + cfg.dec_layers) as u64;
+            // An envelope holding ~1.5 layers forces one layer per shard.
+            let envelope = per_layer + per_layer / 2;
+            let plan = ShardPlan::partition_for_envelope(&cfg, &f, envelope).unwrap();
+            assert_eq!(Some(plan.shards.len()), min_shards(&cfg, &f, envelope));
+            assert!(plan.max_shard_bytes() <= envelope);
+            // A roomy envelope keeps the model whole.
+            let whole = ShardPlan::partition_for_envelope(&cfg, &f, u64::MAX).unwrap();
+            assert_eq!(whole.shards.len(), 1);
+            assert_eq!(min_shards(&cfg, &f, u64::MAX), Some(1));
+        }
+    }
+
+    #[test]
+    fn min_shards_handles_every_topology_and_the_impossible_envelope() {
+        let f = fc();
+        let s2s = presets::seq2seq_small(32, 2, 2);
+        // seq2seq still gets the arithmetic answer...
+        assert!(min_shards(&s2s, &f, u64::MAX) == Some(1));
+        // ...while a sub-layer envelope is unservable for anyone.
+        assert_eq!(min_shards(&s2s, &f, 1), None);
+        assert_eq!(min_shards(&presets::gpt_small(32, 2), &f, 0), None);
+    }
+
+    #[test]
+    fn lowered_chains_verify_clean_per_program_and_as_a_chain() {
+        let f = fc();
+        let inv = ArtifactInventory::assume_all();
+        for (cfg, kind) in [
+            (presets::small_encoder(32, 2), schedule::ProgramKind::Encoder),
+            (presets::gpt_small(32, 2), schedule::ProgramKind::Prefill),
+        ] {
+            let plan = ShardPlan::partition_k(&cfg, &f, 2).unwrap();
+            let chain = lower_chain(&plan, &f, OptLevel::O2, &inv).unwrap();
+            for (i, p) in chain.iter().enumerate() {
+                let report = schedule::verify::verify(p, kind, &inv);
+                assert!(
+                    report.is_clean(),
+                    "shard {i}: {:?}",
+                    report.errors().collect::<Vec<_>>()
+                );
+            }
+            let report = verify_chain(&chain);
+            assert!(report.is_clean(), "{:?}", report.errors().collect::<Vec<_>>());
+            assert_eq!(chain[0].send_boundaries(), vec![0]);
+            assert_eq!(chain[1].recv_boundaries(), vec![0]);
+            assert!(chain[0].recv_boundaries().is_empty());
+            assert!(chain[1].send_boundaries().is_empty());
+        }
+    }
+
+    #[test]
+    fn a_forged_chain_fails_the_chain_contract() {
+        let f = fc();
+        let inv = ArtifactInventory::assume_all();
+        let cfg = presets::small_encoder(32, 2);
+        let plan = ShardPlan::partition_k(&cfg, &f, 2).unwrap();
+        let chain = lower_chain(&plan, &f, OptLevel::O0, &inv).unwrap();
+        // Reversed chain: the receiver leads and the sender trails.
+        let reversed: Vec<TileProgram> = chain.iter().rev().cloned().collect();
+        assert!(verify_chain(&reversed).has_error(Rule::ShardContract));
+    }
+
+    #[test]
+    fn residency_keys_are_unique_per_shard() {
+        let a = residency_key("bert-base", 0, 2);
+        let b = residency_key("bert-base", 1, 2);
+        assert_ne!(a, b);
+        assert!(a.starts_with("bert-base::shard"));
+    }
+}

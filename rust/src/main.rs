@@ -289,6 +289,7 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
 fn cmd_presets() -> anyhow::Result<()> {
     use adaptor::accel::schedule::FabricConstants;
     use adaptor::coordinator::residency::weight_footprint_bytes;
+    use adaptor::coordinator::shard;
 
     // Residency-pressure view: each preset's device weight footprint
     // (prepared-stack bytes) against every platform's weight-memory
@@ -296,6 +297,7 @@ fn cmd_presets() -> anyhow::Result<()> {
     // a large fraction means multi-tenant churn will evict it.
     let fc = FabricConstants::artifact_default();
     let plats = [platform::u55c(), platform::zcu102(), platform::vc707()];
+    let mut oversize: Vec<String> = Vec::new();
     println!(
         "{:<20} {:>4} {:>6} {:>5} {:>7} {:>4} {:>4} {:>12} {:>12} {:>8} {:>8} {:>8}",
         "name", "sl", "d", "h", "hidden", "enc", "dec", "params", "wbytes", "%u55c", "%zcu102",
@@ -324,6 +326,31 @@ fn cmd_presets() -> anyhow::Result<()> {
             pct[1],
             pct[2]
         );
+        // Oversize on any platform → report the cross-fabric pipeline
+        // cost: the minimum contiguous-shard count per platform (see
+        // coordinator::shard).  "-" marks platforms the preset fits
+        // whole; "never" marks a single layer exceeding the envelope.
+        let needs: Vec<(String, Option<usize>)> = plats
+            .iter()
+            .filter(|p| wb > resources::weight_memory_bytes(p))
+            .map(|p| (p.name.clone(), shard::min_shards(&c, &fc, resources::weight_memory_bytes(p))))
+            .collect();
+        if !needs.is_empty() {
+            let detail: Vec<String> = needs
+                .iter()
+                .map(|(plat, k)| match k {
+                    Some(k) => format!("{plat}: {k} shards"),
+                    None => format!("{plat}: never (one layer exceeds the envelope)"),
+                })
+                .collect();
+            oversize.push(format!("  {name:<20} {}", detail.join(", ")));
+        }
+    }
+    if !oversize.is_empty() {
+        println!("\noversize presets (need cross-fabric sharding to be served):");
+        for line in &oversize {
+            println!("{line}");
+        }
     }
     Ok(())
 }
@@ -431,6 +458,61 @@ fn cmd_verify_programs(args: &[String]) -> anyhow::Result<()> {
             }
         }
     }
+    // Sharded-chain sweep: every single-stack preset that can split,
+    // lowered as a K-shard pipeline (coordinator::shard) and checked
+    // both per shard program and as a chain (boundary coverage, peer
+    // shape agreement — Rule::ShardContract).
+    use adaptor::coordinator::shard;
+    for (name, cfg) in presets::all() {
+        if only.as_deref().is_some_and(|m| m != name) {
+            continue;
+        }
+        if fc.check(&cfg).is_err() {
+            continue;
+        }
+        let (stack_len, kind) = match (cfg.enc_layers, cfg.dec_layers) {
+            (e, 0) if e >= 2 => (e, ProgramKind::Encoder),
+            (0, d) if d >= 2 => (d, ProgramKind::Prefill),
+            _ => continue, // seq2seq / single-layer stacks don't shard
+        };
+        for k in [2usize, 3] {
+            if k > stack_len {
+                continue;
+            }
+            let plan = match shard::ShardPlan::partition_k(&cfg, &fc, k) {
+                Ok(plan) => plan,
+                Err(why) => {
+                    println!("{name:<20} {k}-shard skipped: {why}");
+                    continue;
+                }
+            };
+            for level in [OptLevel::O0, OptLevel::O2] {
+                let chain = shard::lower_chain(&plan, &fc, level, &inventory)?;
+                for (i, p) in chain.iter().enumerate() {
+                    let report = verify::verify(p, kind, &inventory);
+                    programs += 1;
+                    errors += report.error_count();
+                    warnings += report.warning_count();
+                    if !report.diagnostics.is_empty() {
+                        println!("{name} shard {i}/{k} {level:?}:");
+                        for d in &report.diagnostics {
+                            println!("  {d}");
+                        }
+                    }
+                }
+                let report = shard::verify_chain(&chain);
+                errors += report.error_count();
+                warnings += report.warning_count();
+                if !report.diagnostics.is_empty() {
+                    println!("{name} {k}-shard chain {level:?}:");
+                    for d in &report.diagnostics {
+                        println!("  {d}");
+                    }
+                }
+            }
+        }
+    }
+
     println!("verified {programs} program(s): {errors} error(s), {warnings} warning(s)");
     if errors > 0 {
         std::process::exit(1);

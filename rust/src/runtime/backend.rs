@@ -76,6 +76,17 @@ pub trait FabricBackend {
     /// its members, the PE-array parallelism analog.  Default: no-ops.
     fn wave_begin(&self, _wave: usize, _steps: usize) {}
     fn wave_end(&self) {}
+
+    /// Inter-fabric link hooks: a sharded program's `SendActivation` /
+    /// `RecvActivation` steps call these when the replay crosses a shard
+    /// boundary (`bytes` of activation over cut `boundary`).  The data
+    /// itself moves through [`FabricBackend::fetch`] on the sending
+    /// fabric and the peer replay's input on the receiving one, so
+    /// numeric backends need nothing here; pricing backends
+    /// (`accel::sim::cycle::CycleBackend`) charge the link's bandwidth
+    /// and count the hop.  Defaults: no-ops.
+    fn link_send(&self, _bytes: usize, _boundary: usize) {}
+    fn link_recv(&self, _bytes: usize, _boundary: usize) {}
 }
 
 impl FabricBackend for Executor {

@@ -1,0 +1,426 @@
+//! Cross-fabric shard-chain equivalence proof, artifact-free.  The
+//! tentpole contract of pipeline sharding is that splitting a layer
+//! stack into K contiguous shards and relaying the padded activation
+//! over the inter-fabric link at each cut is **bit-identical** to
+//! running the monolithic single-fabric program: every layer consumes
+//! and produces the same `[SL_MAX, DMODEL_MAX]` activation, so a cut
+//! between layers is exactly the inter-layer interface.
+//!
+//! These tests pin that with the same row-local, zero-preserving
+//! pseudo-numeric backend as `integration_adaptive` (dead rows stay
+//! exactly zero, attention is mask- and liveness-aware — the model of
+//! the real fabric's zero-padded tiles).  The chain replays through
+//! `coordinator::shard::replay_chain`, which resolves each shard's
+//! 0-based weight references against the parent stack through
+//! `OffsetWeights`; the monolith replays the dense program directly.
+//! Outputs AND exported KV panels (a gpt prefill chain's cache seed)
+//! must agree bit-for-bit across ≥3 topologies × K∈{2,3} × O0/O2, at
+//! full length and at a partial live prefix.
+//!
+//! The same file carries the chain's static acceptance (every lowered
+//! chain passes `verify_shard_chain` clean) and the cycle-model
+//! acceptance: senders pay the link at `LINK_BYTES_PER_CYCLE`, receivers
+//! ride free, and every stage prices below the monolith it replaces.
+
+use adaptor::accel::schedule::{
+    self, optimize, ArtifactInventory, FabricConstants, OptLevel, ScheduleBuilder, TileProgram,
+    WeightKind, WeightRef, WeightSource,
+};
+use adaptor::accel::sim::cycle;
+use adaptor::coordinator::shard::{self, ShardPlan};
+use adaptor::model::reference::NEG_INF;
+use adaptor::model::{presets, TnnConfig};
+use adaptor::runtime::{FabricBackend, Tensor};
+
+use std::collections::HashMap;
+
+fn fc() -> FabricConstants {
+    FabricConstants::artifact_default()
+}
+
+/// Scores at or below this are "fenced" — mirrors the mask's `NEG_INF`
+/// with headroom for the bounded mix added on top.
+const DEAD_FENCE: f32 = NEG_INF / 2.0;
+
+fn dead(row: &[f32]) -> bool {
+    row.iter().all(|v| *v == 0.0)
+}
+
+fn row(t: &Tensor, r: usize) -> &[f32] {
+    let w = t.data.len() / t.shape[0];
+    &t.data[r * w..(r + 1) * w]
+}
+
+/// Bounded deterministic stand-in for a q·k dot product.
+fn mix(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (c, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        acc += x * y * (((c % 7) + 1) as f32) * 0.0625;
+    }
+    (acc * 0.25).sin()
+}
+
+/// Pseudo-exp: zero past the fence (masked), bounded positive elsewhere,
+/// and exactly `1.0` at a zero score — a dead key under an open mask
+/// weights its all-zero value row by 1, contributing exactly `+0.0`.
+fn pexp(x: f32) -> f32 {
+    if x <= DEAD_FENCE {
+        0.0
+    } else {
+        (0.5 * x).sin() * 0.5 + 1.0
+    }
+}
+
+/// Row-local, zero-preserving pseudo-numeric backend (see module doc).
+struct RowBackend;
+
+impl RowBackend {
+    fn qk(q: &Tensor, k: &Tensor, mask: &Tensor, scale: f32) -> Vec<f32> {
+        let sl = mask.shape[0];
+        let mut out = vec![0.0f32; sl * sl];
+        for i in 0..sl {
+            let qi = row(q, i);
+            if dead(qi) {
+                out[i * sl..(i + 1) * sl].fill(NEG_INF);
+                continue;
+            }
+            for j in 0..sl {
+                let kj = row(k, j);
+                let s = if dead(kj) { 0.0 } else { mix(qi, kj) * scale };
+                out[i * sl + j] = s + mask.data[i * sl + j];
+            }
+        }
+        out
+    }
+
+    fn sv(p: &[f32], sl: usize, v: &Tensor) -> Vec<f32> {
+        let dk = v.shape[1];
+        let mut out = vec![0.0f32; sl * dk];
+        for i in 0..sl {
+            for c in 0..dk {
+                let mut acc = 0.0f32;
+                for j in 0..sl {
+                    acc += p[i * sl + j] * v.data[j * dk + c];
+                }
+                out[i * dk + c] = (acc * 0.0625).sin();
+            }
+        }
+        out
+    }
+
+    /// Generic row-local op: row `r` of the output mixes row `r` of every
+    /// row-aligned input plus the global (weight/bias) inputs — gated on
+    /// the first operand's row being live, which is the builder's
+    /// activation-first convention.  Dead rows stay exactly zero.
+    fn generic(artifact: &str, inputs: &[&Tensor], out_shape: &[usize]) -> Vec<f32> {
+        let n = out_shape[0];
+        let cols: usize = out_shape[1..].iter().product::<usize>().max(1);
+        let h0 = artifact.bytes().fold(2166136261u32, |h, b| (h ^ b as u32).wrapping_mul(16777619));
+        let mut data = vec![0.0f32; n * cols];
+        for r in 0..n {
+            let gate = inputs
+                .first()
+                .map(|t| t.shape.len() < 2 || t.shape[0] != n || !dead(row(t, r)))
+                .unwrap_or(true);
+            if !gate {
+                continue;
+            }
+            let mut h = h0;
+            for (k, t) in inputs.iter().enumerate() {
+                let src: &[f32] =
+                    if t.shape.len() == 2 && t.shape[0] == n { row(t, r) } else { &t.data };
+                let len = src.len().max(1);
+                let w = ((h % 13) + k as u32 + 1) as f32 * 0.0625;
+                for c in 0..cols {
+                    data[r * cols + c] += src[(c + 7 * k) % len] * w;
+                }
+                h = h.wrapping_mul(16777619) ^ (k as u32 + 1);
+            }
+            for c in 0..cols {
+                data[r * cols + c] = (data[r * cols + c] * 0.25).sin();
+            }
+        }
+        data
+    }
+}
+
+impl FabricBackend for RowBackend {
+    type Buf = Tensor;
+
+    fn upload(&self, t: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(t.clone())
+    }
+
+    fn dispatch(
+        &self,
+        artifact: &str,
+        inputs: &[&Tensor],
+        out_shape: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        let data = match artifact {
+            "qk_scores" => {
+                let (q, k, mask, scale) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+                Self::qk(q, k, mask, scale.data[0])
+            }
+            "softmax" => inputs[0].data.iter().map(|x| pexp(*x)).collect(),
+            "sv" => Self::sv(&inputs[0].data, inputs[0].shape[0], inputs[1]),
+            "attn_fused" => {
+                let (q, k, v, mask, scale) =
+                    (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+                let s = Self::qk(q, k, mask, scale.data[0]);
+                let p: Vec<f32> = s.iter().map(|x| pexp(*x)).collect();
+                Self::sv(&p, mask.shape[0], v)
+            }
+            _ => Self::generic(artifact, inputs, out_shape),
+        };
+        Ok(Tensor::new(out_shape.to_vec(), data))
+    }
+
+    fn fetch(&self, b: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(b.clone())
+    }
+}
+
+/// Fabric-fixed panel shape per weight kind (same table as
+/// `integration_adaptive` / `integration_scheduler`).
+fn weight_shape(f: &FabricConstants, kind: WeightKind) -> Vec<usize> {
+    match kind {
+        WeightKind::Wq
+        | WeightKind::Wk
+        | WeightKind::Wv
+        | WeightKind::CWq
+        | WeightKind::CWk
+        | WeightKind::CWv => vec![f.ts_mha, f.dk],
+        WeightKind::QkvPacked => vec![f.ts_mha, 3 * f.dk],
+        WeightKind::Bq
+        | WeightKind::Bk
+        | WeightKind::Bv
+        | WeightKind::CBq
+        | WeightKind::CBk
+        | WeightKind::CBv => vec![f.dk],
+        WeightKind::BQkvPacked => vec![3 * f.dk],
+        WeightKind::Wo | WeightKind::CWo => vec![f.ts_ffn, f.ts_ffn],
+        WeightKind::Bo
+        | WeightKind::B2
+        | WeightKind::G1
+        | WeightKind::B1n
+        | WeightKind::G2
+        | WeightKind::B2n
+        | WeightKind::CBo
+        | WeightKind::CG
+        | WeightKind::CBn => vec![f.dmodel_max],
+        WeightKind::W1 => vec![f.ts_ffn, f.ffn_col],
+        WeightKind::B1 => vec![f.hidden_max],
+        WeightKind::W2 => vec![f.ffn_col, f.ts_ffn],
+        WeightKind::DWq | WeightKind::DWk | WeightKind::DWv | WeightKind::DCWq => {
+            vec![f.dmodel_max, f.dk]
+        }
+        WeightKind::DWo | WeightKind::DCWo => vec![f.dmodel_max, f.dmodel_max],
+        WeightKind::DW1 => vec![f.dmodel_max, f.hidden_max],
+        WeightKind::DW2 => vec![f.hidden_max, f.dmodel_max],
+    }
+}
+
+/// Deterministic weight stand-ins keyed by **parent-absolute**
+/// `WeightRef`.  Seeded from `(program, layer offset)` pairs — the dense
+/// program at offset 0, each shard's program at its layer-range start —
+/// so a shard's 0-based refs seed exactly the tensors the dense program
+/// resolves for the same parent layer (the seed is ref-intrinsic).
+struct RefWeights {
+    map: HashMap<WeightRef, Tensor>,
+}
+
+impl RefWeights {
+    fn for_offset_programs(progs: &[(&TileProgram, usize)], f: &FabricConstants) -> Self {
+        let mut map = HashMap::new();
+        for (prog, offset) in progs {
+            for step in &prog.steps {
+                let schedule::Step::Dispatch { args, .. } = step else { continue };
+                for arg in args {
+                    let schedule::Operand::Weight(r) = arg else { continue };
+                    let r = WeightRef { layer: r.layer + offset, ..*r };
+                    map.entry(r).or_insert_with(|| {
+                        let shape = weight_shape(f, r.kind);
+                        let seed = (r.layer * 7919 + r.row * 131 + r.col * 17) % 1000;
+                        let n: usize = shape.iter().product();
+                        let data =
+                            (0..n).map(|i| ((seed + i) as f32 * 0.137).sin()).collect();
+                        Tensor::new(shape, data)
+                    });
+                }
+            }
+        }
+        RefWeights { map }
+    }
+}
+
+impl WeightSource<Tensor> for RefWeights {
+    fn weight(&self, r: &WeightRef) -> anyhow::Result<&Tensor> {
+        self.map.get(r).ok_or_else(|| anyhow::anyhow!("unseeded weight ref {r:?}"))
+    }
+}
+
+/// Padded input with deterministic nonzero content in the first `live`
+/// rows and exact zeros everywhere else.
+fn live_input(f: &FabricConstants, d_model: usize, live: usize) -> Tensor {
+    let mut t = Tensor::zeros(vec![f.sl_max, f.dmodel_max]);
+    for r in 0..live {
+        for c in 0..d_model {
+            t.data[r * f.dmodel_max + c] = ((r * 31 + c) as f32 * 0.0917).sin();
+        }
+    }
+    t
+}
+
+/// Lower the monolithic single-fabric program for `cfg` — the oracle
+/// every chain is measured against.
+fn build_monolith(f: FabricConstants, cfg: TnnConfig, level: OptLevel) -> TileProgram {
+    let inv = ArtifactInventory::assume_all();
+    let b = ScheduleBuilder::new(f, cfg).unwrap();
+    let mut p = if cfg.dec_layers > 0 { b.build_prefill() } else { b.build() };
+    optimize(&mut p, level, &inv).unwrap();
+    p
+}
+
+/// The proof for one topology × K × opt level: the chain verifies clean,
+/// and for a full-length and a partial live prefix the chain's output
+/// AND its concatenated exports (a gpt chain's KV panels) match the
+/// monolith bit-for-bit — padding rows included.
+fn assert_chain_equivalence(cfg: TnnConfig, k: usize, level: OptLevel) {
+    let f = fc();
+    let inv = ArtifactInventory::assume_all();
+    let backend = RowBackend;
+
+    let plan = ShardPlan::partition_k(&cfg, &f, k).unwrap();
+    let chain = shard::lower_chain(&plan, &f, level, &inv).unwrap();
+    let report = shard::verify_chain(&chain);
+    assert!(
+        report.is_clean(),
+        "{cfg} {level:?} k={k}: chain contract failed: {:?}",
+        report.errors().collect::<Vec<_>>()
+    );
+
+    let dense = build_monolith(f, cfg, level);
+    let mut seeds: Vec<(&TileProgram, usize)> = vec![(&dense, 0)];
+    for (p, s) in chain.iter().zip(&plan.shards) {
+        seeds.push((p, s.offset()));
+    }
+    let weights = RefWeights::for_offset_programs(&seeds, &f);
+
+    let mut rt = schedule::build_runtime(&backend, &cfg, &f).unwrap();
+    schedule::upload_tier_masks(&backend, &mut rt, &cfg, &f, &dense.tier_mask_ids()).unwrap();
+    for live in [cfg.seq_len, cfg.seq_len / 2 + 1] {
+        let x = live_input(&f, cfg.d_model, live);
+        let (want, want_ex) = schedule::replay_full_adaptive(
+            &dense,
+            &backend,
+            &weights,
+            &rt,
+            vec![x.clone()],
+            &[],
+            None,
+            live,
+        )
+        .unwrap();
+        let (got, got_ex) =
+            shard::replay_chain(&chain, &plan, &backend, &weights, x, live).unwrap();
+        assert!(
+            want.data == got.data,
+            "{cfg} {level:?} k={k}: live={live} chain output diverged from the monolith"
+        );
+        assert_eq!(
+            want_ex.len(),
+            got_ex.len(),
+            "{cfg} {level:?} k={k}: live={live} export count diverged"
+        );
+        for (i, (a, b)) in want_ex.iter().zip(&got_ex).enumerate() {
+            assert!(
+                a.data == b.data,
+                "{cfg} {level:?} k={k}: live={live} KV export panel {i} diverged"
+            );
+        }
+    }
+}
+
+/// ≥ 3 topologies: a 3-layer encoder (uneven 3-way split has a 1-layer
+/// tail), a 4-layer encoder whose seq_len is not a power of two, and a
+/// 4-layer gpt-style decoder stack (prefill chain with KV exports).
+fn shard_sweep() -> Vec<TnnConfig> {
+    vec![
+        TnnConfig::encoder(64, 128, 2, 3),
+        TnnConfig::encoder(48, 256, 4, 4),
+        presets::gpt_small(64, 4),
+    ]
+}
+
+#[test]
+fn shard_chains_match_the_monolith_at_o0() {
+    for cfg in shard_sweep() {
+        for k in [2, 3] {
+            assert_chain_equivalence(cfg, k, OptLevel::O0);
+        }
+    }
+}
+
+#[test]
+fn shard_chains_match_the_monolith_at_o2() {
+    for cfg in shard_sweep() {
+        for k in [2, 3] {
+            assert_chain_equivalence(cfg, k, OptLevel::O2);
+        }
+    }
+}
+
+/// Envelope-driven plans run through the same replay path: a synthetic
+/// envelope holding ~1.5 layers forces a one-layer-per-shard chain (the
+/// deepest pipeline the partitioner ever emits) and it must still match
+/// the monolith exactly.
+#[test]
+fn envelope_forced_max_depth_chain_matches_the_monolith() {
+    let f = fc();
+    let cfg = TnnConfig::encoder(64, 128, 2, 3);
+    let per_layer = adaptor::coordinator::residency::weight_footprint_bytes(&cfg, &f)
+        / cfg.enc_layers as u64;
+    let plan = ShardPlan::partition_for_envelope(&cfg, &f, per_layer + per_layer / 2).unwrap();
+    assert_eq!(plan.shards.len(), cfg.enc_layers, "forced one layer per shard");
+    assert_chain_equivalence(cfg, plan.shards.len(), OptLevel::O1);
+}
+
+/// The cycle model's link economics: every sender pays its boundary at
+/// `LINK_BYTES_PER_CYCLE`, the tail (receive-only) pays nothing, and
+/// each stage's *compute* (cycles net of the link) prices strictly
+/// below the monolith it replaces — the per-stage latency win that
+/// pipelining converts into throughput once requests overlap.
+#[test]
+fn chain_stages_price_the_link_at_senders_and_undercut_the_monolith() {
+    let f = fc();
+    let inv = ArtifactInventory::assume_all();
+    let cfg = TnnConfig::encoder(64, 128, 2, 3);
+    let plan = ShardPlan::partition_k(&cfg, &f, 3).unwrap();
+    let chain = shard::lower_chain(&plan, &f, OptLevel::O1, &inv).unwrap();
+    let dense = build_monolith(f, cfg, OptLevel::O1);
+    let d = cycle::replay_program(&dense).unwrap();
+
+    let reports: Vec<cycle::CycleReport> =
+        chain.iter().map(|p| cycle::replay_program(p).unwrap()).collect();
+    // head and middle each send one full padded activation; the
+    // sender pays the wire time in whole
+    for r in &reports[..2] {
+        assert_eq!(r.activation_hops, 1);
+        assert_eq!(r.link_bytes, (f.sl_max * f.dmodel_max * 4) as u64);
+        assert_eq!(r.link_cycles, r.link_bytes.div_ceil(cycle::LINK_BYTES_PER_CYCLE));
+    }
+    assert_eq!(reports[2].activation_hops, 0, "a recv is free at the receiver");
+    assert_eq!(reports[2].link_bytes, 0);
+    for (i, r) in reports.iter().enumerate() {
+        let compute = r.total_cycles - r.link_cycles;
+        assert!(
+            compute < d.total_cycles,
+            "stage {i} computes {compute} cycles, not under the monolith's {}",
+            d.total_cycles
+        );
+    }
+    // the monolith itself never touches the link
+    assert_eq!(d.activation_hops, 0);
+    assert_eq!(d.link_bytes, 0);
+}
